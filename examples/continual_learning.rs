@@ -1,0 +1,133 @@
+//! Continual learning (paper §4.4): sequentially fine-tune through
+//! five commonsense-analogue tasks with Seq-LoRA vs Seq-LoSiA and
+//! report AP / FWT / BWT — the experiment behind Tables 5 and 13.
+//!
+//! ```bash
+//! cargo run --release --example continual_learning -- \
+//!     --config tiny --steps 80 --eval-n 100
+//! ```
+
+use losia::config::{Method, TrainConfig};
+use losia::coordinator::state::ModelState;
+use losia::coordinator::trainer::Trainer;
+use losia::data::commonsense::{suite, SUITE_NAMES};
+use losia::data::{gen_eval_set, gen_train_set, Batcher, Task};
+use losia::eval::{
+    average_performance, backward_transfer, forward_transfer,
+    ppl_accuracy,
+};
+use losia::runtime::Runtime;
+use losia::util::cli::Args;
+use losia::util::rng::Rng;
+use losia::util::table::Table;
+
+/// The 5-task sequence from the paper (HellaSwag, PIQA, BoolQ, SIQA,
+/// WinoGrande analogues = suite indices 2, 4, 7, 6, 3).
+const SEQ: [usize; 5] = [2, 4, 7, 6, 3];
+
+fn make_tc(method: Method, steps: usize) -> TrainConfig {
+    TrainConfig {
+        method,
+        steps,
+        lr: 1e-3,
+        time_slot: 10,
+        seed: 42,
+        ..TrainConfig::default()
+    }
+}
+
+struct SeqResult {
+    perf: Vec<Vec<f64>>,
+    single: Vec<f64>,
+}
+
+fn run_sequence(
+    rt: &Runtime,
+    method: Method,
+    steps: usize,
+    eval_n: usize,
+) -> anyhow::Result<SeqResult> {
+    let tasks = suite();
+    let seq_tasks: Vec<&dyn Task> =
+        SEQ.iter().map(|&i| tasks[i].as_ref()).collect();
+    let evals: Vec<_> = seq_tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| gen_eval_set(*t, eval_n, 100 + i as u64))
+        .collect();
+
+    // single-task baselines (FWT reference)
+    let mut single = Vec::new();
+    for (i, task) in seq_tasks.iter().enumerate() {
+        let mut rng = Rng::new(7);
+        let mut state = ModelState::init(&rt.cfg, &mut rng);
+        let train = gen_train_set(*task, 1500, 50 + i as u64);
+        let mut b =
+            Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+        let mut tr = Trainer::new(rt, make_tc(method, steps))?;
+        tr.train(&mut state, &mut b)?;
+        single.push(ppl_accuracy(rt, &state, &evals[i])?);
+    }
+
+    // sequential fine-tuning on one evolving model
+    let mut rng = Rng::new(7);
+    let mut state = ModelState::init(&rt.cfg, &mut rng);
+    let mut perf = Vec::new();
+    for (i, task) in seq_tasks.iter().enumerate() {
+        let train = gen_train_set(*task, 1500, 50 + i as u64);
+        let mut b =
+            Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+        let mut tr = Trainer::new(rt, make_tc(method, steps))?;
+        tr.train(&mut state, &mut b)?;
+        let row: Vec<f64> = evals
+            .iter()
+            .map(|e| ppl_accuracy(rt, &state, e).unwrap())
+            .collect();
+        perf.push(row);
+    }
+    Ok(SeqResult { perf, single })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&[]);
+    let rt = Runtime::from_config_name(&args.get_or("config", "tiny"))?;
+    let steps = args.get_usize("steps", 80);
+    let eval_n = args.get_usize("eval-n", 100);
+
+    let mut summary = Table::new(
+        "Continual learning (paper Table 5)",
+        &["Method", "AP(↑)", "FWT(↑)", "BWT(↑)"],
+    );
+    for method in [Method::Lora, Method::LosiaPro] {
+        let name = format!("Seq-{}", method.name());
+        eprintln!("running {name} …");
+        let res = run_sequence(&rt, method, steps, eval_n)?;
+        let mut detail = Table::new(
+            &format!("{name} accuracy after each stage (Table 13)"),
+            &["task", "#1", "#2", "#3", "#4", "#5", "ST"],
+        );
+        for (j, &ti) in SEQ.iter().enumerate() {
+            let mut row = vec![SUITE_NAMES[ti].to_string()];
+            for i in 0..SEQ.len() {
+                row.push(if i < res.perf.len() && j < res.perf[i].len()
+                {
+                    format!("{:.1}", res.perf[i][j])
+                } else {
+                    "-".into()
+                });
+            }
+            row.push(format!("{:.1}", res.single[j]));
+            detail.row(&row);
+        }
+        detail.print();
+        summary.row(&[
+            name,
+            format!("{:.2}", average_performance(&res.perf)),
+            format!("{:.2}", forward_transfer(&res.perf, &res.single)),
+            format!("{:.2}", backward_transfer(&res.perf)),
+        ]);
+    }
+    summary.print();
+    summary.write_csv("example_continual");
+    Ok(())
+}

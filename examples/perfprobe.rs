@@ -1,0 +1,74 @@
+//! Perf probe: per-artifact wall-clock on any config (the measurement
+//! tool behind EXPERIMENTS.md §Perf).
+//!
+//! ```bash
+//! cargo run --release --example perfprobe -- medium
+//! ```
+
+use losia::coordinator::state::ModelState;
+use losia::data::domain::ModMath;
+use losia::data::{gen_train_set, Batcher};
+use losia::methods::{assemble_inputs, base_values};
+use losia::runtime::{HostValue, Runtime};
+use losia::tensor::Tensor;
+use losia::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let cfgname = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "medium".into());
+    let rt = Runtime::from_config_name(&cfgname).unwrap();
+    let mut rng = Rng::new(7);
+    let state = ModelState::init(&rt.cfg, &mut rng);
+    let train = gen_train_set(&ModMath, 64, 1);
+    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+    let batch = b.next_batch();
+    let names: Vec<String> =
+        rt.cfg.artifacts.keys().cloned().collect();
+    for name in names {
+        let exe = rt.load(&name).unwrap();
+        let mut values = base_values(&state, &batch);
+        for i in &exe.spec().inputs {
+            if !values.contains_key(&i.name) {
+                match i.dtype {
+                    losia::config::Dtype::F32 => {
+                        values.insert(
+                            i.name.clone(),
+                            HostValue::F32(Tensor::zeros(&i.shape)),
+                        );
+                    }
+                    losia::config::Dtype::I32 => {
+                        let n: usize = i.shape.iter().product();
+                        let data: Vec<usize> =
+                            (0..n).map(|k| k % 4).collect();
+                        values.insert(
+                            i.name.clone(),
+                            HostValue::from_indices(&i.shape, &data),
+                        );
+                    }
+                }
+            }
+        }
+        // fwd_logits takes no targets/mask: drop extras
+        let want: Vec<String> = exe
+            .spec()
+            .inputs
+            .iter()
+            .map(|i| i.name.clone())
+            .collect();
+        values.retain(|k, _| want.contains(k));
+        let inputs = assemble_inputs(exe.spec(), values.clone());
+        let _ = exe.run(&inputs).unwrap(); // warm
+        let reps = 3;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let inputs = assemble_inputs(exe.spec(), values.clone());
+            let _ = exe.run(&inputs).unwrap();
+        }
+        println!(
+            "{name}: {:.1} ms/call (incl. host conversion)",
+            t0.elapsed().as_secs_f64() * 1000.0 / reps as f64
+        );
+    }
+}

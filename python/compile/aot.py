@@ -1,0 +1,339 @@
+"""AOT pipeline: lower every (config × artifact) to HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Run once via ``make artifacts``; Rust then never touches Python.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--configs tiny,small,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+# --------------------------------------------------------------------------
+# Config zoo
+# --------------------------------------------------------------------------
+
+CONFIGS = {
+    # tests + quickstart: compiles in seconds
+    "tiny": M.ModelConfig(
+        name="tiny", vocab=64, d_model=32, n_heads=2, d_ff=64,
+        n_layers=2, seq_len=32, batch=4, rank_factor=0.125,
+        out_factor=0.25, lora_rank=4,
+    ),
+    # bench workhorse (~1.8M params): every table/figure runs on this
+    "small": M.ModelConfig(
+        name="small", vocab=256, d_model=128, n_heads=4, d_ff=256,
+        n_layers=4, seq_len=64, batch=4, rank_factor=0.125,
+        out_factor=0.125, lora_rank=16,
+    ),
+    # e2e driver (~4.2M params): domain-task training runs
+    "medium": M.ModelConfig(
+        name="medium", vocab=512, d_model=256, n_heads=8, d_ff=512,
+        n_layers=6, seq_len=128, batch=4, rank_factor=0.125,
+        out_factor=0.125, lora_rank=32,
+    ),
+    # the "~100M-parameter transformer" end-to-end validation config
+    "gpt90m": M.ModelConfig(
+        name="gpt90m", vocab=4096, d_model=768, n_heads=12, d_ff=2048,
+        n_layers=12, seq_len=128, batch=4, rank_factor=0.125,
+        out_factor=0.0625, lora_rank=64,
+    ),
+}
+
+#: artifacts emitted for every config (name -> needs_remat_variant)
+FULL_SET = (
+    "fwd_logits", "fwd_loss",
+    "grads_full", "grads_losia", "grads_probe",
+    "grads_lora", "grads_dora",
+    "grads_full_remat", "grads_losia_remat",
+    "grads_lora_remat", "grads_dora_remat",
+)
+#: the big config only gets what the e2e driver needs (compile-time budget)
+BIG_SET = (
+    "fwd_logits", "fwd_loss", "grads_losia_remat", "grads_probe",
+    "grads_lora_remat",
+)
+
+
+# --------------------------------------------------------------------------
+# Lowering
+# --------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.int32 if dtype == "i32" else jnp.float32
+    )
+
+
+def _params_io(cfg):
+    return [(n, list(s), "f32") for n, s in M.param_specs(cfg)]
+
+
+def _batch_io(cfg):
+    b, s = cfg.batch, cfg.seq_len
+    return [
+        ("tokens", [b, s], "i32"),
+        ("targets", [b, s], "i32"),
+        ("mask", [b, s], "f32"),
+    ]
+
+
+def _losia_delta_io(cfg):
+    io = []
+    for kind in M.LINEAR_KINDS:
+        np_, mp_ = cfg.subnet_dims(kind)
+        io.append((f"dws_{kind}", [cfg.n_layers, np_, mp_], "f32"))
+    io.append(("dws_out", [cfg.d_model, cfg.vocab_sub], "f32"))
+    return io
+
+
+def _losia_index_io(cfg):
+    io = []
+    for kind in M.LINEAR_KINDS:
+        np_, mp_ = cfg.subnet_dims(kind)
+        io.append((f"rho_{kind}", [cfg.n_layers, np_], "i32"))
+        io.append((f"gamma_{kind}", [cfg.n_layers, mp_], "i32"))
+    io.append(("gamma_out", [cfg.vocab_sub], "i32"))
+    return io
+
+
+def _lora_io(cfg, dora=False):
+    io = []
+    for kind in M.LINEAR_KINDS:
+        n, m = cfg.kind_dims(kind)
+        io.append((f"la_{kind}", [cfg.n_layers, n, cfg.lora_rank], "f32"))
+        io.append((f"lb_{kind}", [cfg.n_layers, cfg.lora_rank, m], "f32"))
+        if dora:
+            io.append((f"mag_{kind}", [cfg.n_layers, m], "f32"))
+    return io
+
+
+def build_artifact(cfg: M.ModelConfig, name: str):
+    """Return (flat_fn, input_io, output_io) for one artifact."""
+    remat = name.endswith("_remat")
+    base = name[: -len("_remat")] if remat else name
+    pio = _params_io(cfg)
+    bio = _batch_io(cfg)
+    pnames = [n for n, _, _ in pio]
+
+    def unpack_params(args):
+        return dict(zip(pnames, args[: len(pnames)])), args[len(pnames):]
+
+    if base == "fwd_logits":
+        fn0 = M.fwd_logits_fn(cfg)
+
+        def flat(*args):
+            params, rest = unpack_params(args)
+            return (fn0(params, rest[0]),)
+
+        inputs = pio + [("tokens", [cfg.batch, cfg.seq_len], "i32")]
+        outputs = [("logits", [cfg.batch, cfg.seq_len, cfg.vocab], "f32")]
+
+    elif base == "fwd_loss":
+        fn0 = M.fwd_loss_fn(cfg)
+
+        def flat(*args):
+            params, rest = unpack_params(args)
+            nll, cnt = fn0(params, *rest)
+            return (nll, cnt)
+
+        inputs = pio + bio
+        outputs = [("nll", [cfg.batch], "f32"), ("cnt", [cfg.batch], "f32")]
+
+    elif base == "grads_full":
+        fn0 = M.grads_full_fn(cfg, remat=remat)
+
+        def flat(*args):
+            params, rest = unpack_params(args)
+            loss, grads = fn0(params, *rest)
+            return (loss, *[grads[n] for n in pnames])
+
+        inputs = pio + bio
+        outputs = [("loss", [], "f32")] + [
+            (f"g_{n}", s, "f32") for n, s, _ in pio
+        ]
+
+    elif base == "grads_losia":
+        fn0 = M.grads_losia_fn(cfg, use_kernel=True, remat=remat)
+        dio = _losia_delta_io(cfg)
+        iio = _losia_index_io(cfg)
+        dnames = [n for n, _, _ in dio]
+        inames = [n for n, _, _ in iio]
+
+        def flat(*args):
+            params, rest = unpack_params(args)
+            deltas = dict(zip(dnames, rest[: len(dnames)]))
+            rest = rest[len(dnames):]
+            indices = dict(zip(inames, rest[: len(inames)]))
+            rest = rest[len(inames):]
+            loss, dgrads, pgrads, lmg = fn0(
+                params, deltas, indices, *rest
+            )
+            return (
+                loss,
+                *[dgrads[n] for n in dnames],
+                *[pgrads[k] for k in M.LINEAR_KINDS],
+                lmg,
+            )
+
+        inputs = pio + dio + iio + [("probe", [], "i32")] + bio
+        outputs = (
+            [("loss", [], "f32")]
+            + [(f"g_{n}", s, "f32") for n, s, _ in dio]
+            + [
+                (f"probe_{k}", list(cfg.kind_dims(k)), "f32")
+                for k in M.LINEAR_KINDS
+            ]
+            + [("probe_lm_head", [cfg.d_model, cfg.vocab], "f32")]
+        )
+
+    elif base == "grads_probe":
+        fn0 = M.grads_probe_fn(cfg)
+
+        def flat(*args):
+            params, rest = unpack_params(args)
+            probe = rest[0]
+            loss, pg, lmg = fn0(params, probe, *rest[1:])
+            return (loss, *[pg[k] for k in M.LINEAR_KINDS], lmg)
+
+        inputs = pio + [("probe", [], "i32")] + bio
+        outputs = [("loss", [], "f32")] + [
+            (f"g_{k}", list(cfg.kind_dims(k)), "f32")
+            for k in M.LINEAR_KINDS
+        ] + [("g_lm_head", [cfg.d_model, cfg.vocab], "f32")]
+
+    elif base in ("grads_lora", "grads_dora"):
+        dora = base == "grads_dora"
+        fn0 = M.grads_lora_fn(cfg, dora=dora, remat=remat)
+        aio = _lora_io(cfg, dora=dora)
+        anames = [n for n, _, _ in aio]
+
+        def flat(*args):
+            params, rest = unpack_params(args)
+            adapters = dict(zip(anames, rest[: len(anames)]))
+            rest = rest[len(anames):]
+            loss, grads = fn0(params, adapters, *rest)
+            return (loss, *[grads[n] for n in anames])
+
+        inputs = pio + aio + bio
+        outputs = [("loss", [], "f32")] + [
+            (f"g_{n}", s, "f32") for n, s, _ in aio
+        ]
+
+    else:
+        raise ValueError(f"unknown artifact {name}")
+
+    return flat, inputs, outputs
+
+
+def lower_artifact(cfg, name):
+    flat, inputs, outputs = build_artifact(cfg, name)
+    specs = [_spec(s, d) for _, s, d in inputs]
+    lowered = jax.jit(flat).lower(*specs)
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def cfg_manifest(cfg: M.ModelConfig) -> dict:
+    kinds = {}
+    for kind in M.LINEAR_KINDS:
+        n, m = cfg.kind_dims(kind)
+        np_, mp_ = cfg.subnet_dims(kind)
+        kinds[kind] = {"n": n, "m": m, "np": np_, "mp": mp_}
+    return {
+        "name": cfg.name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "n_layers": cfg.n_layers,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "rank_factor": cfg.rank_factor,
+        "out_factor": cfg.out_factor,
+        "vocab_sub": cfg.vocab_sub,
+        "lora_rank": cfg.lora_rank,
+        "lora_alpha": cfg.lora_alpha,
+        "param_count": cfg.param_count(),
+        "linear_kinds": list(M.LINEAR_KINDS),
+        "kinds": kinds,
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in M.param_specs(cfg)
+        ],
+    }
+
+
+def emit_config(cfg: M.ModelConfig, names, out_dir: str) -> dict:
+    cdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cdir, exist_ok=True)
+    arts = {}
+    for name in names:
+        path = os.path.join(cdir, f"{name}.hlo.txt")
+        text, inputs, outputs = lower_artifact(cfg, name)
+        with open(path, "w") as f:
+            f.write(text)
+        arts[name] = {
+            "file": f"{cfg.name}/{name}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": s, "dtype": d} for n, s, d in inputs
+            ],
+            "outputs": [
+                {"name": n, "shape": s, "dtype": d} for n, s, d in outputs
+            ],
+        }
+        print(f"  {cfg.name}/{name}: {len(text) / 1e6:.2f} MB HLO")
+    entry = cfg_manifest(cfg)
+    entry["artifacts"] = arts
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,medium")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"configs": {}}
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    # incremental: merge into an existing manifest so configs can be added
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        names = BIG_SET if cname == "gpt90m" else FULL_SET
+        manifest["configs"][cname] = emit_config(cfg, names, args.out_dir)
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: sensitivity importance + EMA statistics (Eqs. 3-6).
+
+Elementwise over a weight matrix, tiled by rows so arbitrarily large
+matrices stream through VMEM:
+
+    I      = | w*g - 0.5 (w*g)^2 |                      (Eq. 3)
+    Ibar'  = b1 * Ibar + (1-b1) * I                     (Eq. 4)
+    Ubar'  = b2 * Ubar + (1-b2) * |I - Ibar'|           (Eq. 5)
+    score  = Ibar' * Ubar'                              (Eq. 6)
+
+The fused kernel avoids materialising I separately from the EMA state —
+one pass reads (w, g, Ibar, Ubar) and writes (Ibar', Ubar', score).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _importance_kernel(w_ref, g_ref, i_ref, u_ref, i_out, u_out, s_out, *, b1, b2):
+    wg = w_ref[...] * g_ref[...]
+    imp = jnp.abs(wg - 0.5 * wg * wg)
+    i_new = b1 * i_ref[...] + (1.0 - b1) * imp
+    u_new = b2 * u_ref[...] + (1.0 - b2) * jnp.abs(imp - i_new)
+    i_out[...] = i_new
+    u_out[...] = u_new
+    s_out[...] = i_new * u_new
+
+
+def _row_tile(n: int) -> int:
+    t = min(256, n)
+    while n % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "interpret"))
+def importance_update(w, g, i_bar, u_bar, beta1, beta2, interpret: bool = True):
+    """Fused importance + EMA update.
+
+    Args:
+      w, g, i_bar, u_bar: [n, m] f32.
+      beta1, beta2: python floats (baked into the kernel).
+    Returns:
+      (i_bar', u_bar', score) each [n, m] f32.
+    """
+    n, m = w.shape
+    tr = _row_tile(n)
+    grid = (n // tr,)
+    spec = pl.BlockSpec((tr, m), lambda i: (i, 0))
+    kernel = functools.partial(
+        _importance_kernel, b1=float(beta1), b2=float(beta2)
+    )
+    shp = jax.ShapeDtypeStruct((n, m), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shp, shp, shp],
+        interpret=interpret,
+    )(w, g, i_bar, u_bar)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *semantic definitions*; the Pallas kernels must match them
+(f32, CPU interpret mode) and pytest enforces it with hypothesis sweeps
+over shapes.  Equation numbers refer to the LoSiA paper (EMNLP 2025).
+"""
+
+import jax.numpy as jnp
+
+
+def subnet_grad_ref(x, dy, rho, gamma):
+    """Factorized subnet gradient, Eq. 9.
+
+    dW_S = (x^T[rho, :]) (dy[:, gamma]) = x[:, rho]^T @ dy[:, gamma]
+
+    Args:
+      x:     [BS, n]  input activations (batch*seq flattened).
+      dy:    [BS, m]  output cotangent.
+      rho:   [np]     int32 selected input neurons.
+      gamma: [mp]     int32 selected output neurons.
+    Returns:
+      [np, mp] subnet gradient.
+    """
+    return jnp.matmul(x[:, rho].T, dy[:, gamma], precision="highest")
+
+
+def importance_ref(w, g):
+    """Micro-batch sensitivity importance, Eq. 3 as used in Algorithm 2.
+
+    I = w * g            (first-order term)
+    I = | I - 0.5 I^2 |  (second-order Fisher correction)
+    """
+    i = w * g
+    return jnp.abs(i - 0.5 * i * i)
+
+
+def ema_update_ref(i_bar, u_bar, imp, beta1, beta2):
+    """Sensitivity smoothing + uncertainty quantification, Eqs. 4-6.
+
+    i_bar' = beta1 * i_bar + (1-beta1) * imp
+    u_bar' = beta2 * u_bar + (1-beta2) * |imp - i_bar'|
+    score  = i_bar' * u_bar'
+    """
+    i_new = beta1 * i_bar + (1.0 - beta1) * imp
+    u_new = beta2 * u_bar + (1.0 - beta2) * jnp.abs(imp - i_new)
+    return i_new, u_new, i_new * u_new
+
+
+def subnet_adam_ref(w, m, v, g, rho, gamma, lr, beta1, beta2, eps, step):
+    """Subnet Adam update (Algorithm 2 lines 18-24), applied in place on W.
+
+    The moments live in the compact [np, mp] subnet coordinate frame; the
+    update is scattered back into the full weight matrix at (rho, gamma).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**step)
+    v_hat = v_new / (1.0 - beta2**step)
+    upd = lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    w_new = w.at[rho[:, None], gamma[None, :]].add(-upd)
+    return w_new, m_new, v_new

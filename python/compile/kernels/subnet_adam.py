@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: subnet Adam update (Algorithm 2, lines 18-24).
+
+The Adam moments live in the compact [np, mp] subnet frame.  The kernel
+updates the moments in one elementwise pass and produces the dense
+update tile; the scatter back into the full W at (rho, gamma) is a plain
+XLA scatter outside the kernel (scatter with dynamic indices is not a
+Pallas-friendly access pattern, and XLA's scatter is already optimal).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adam_kernel(m_ref, v_ref, g_ref, mc_ref, vc_ref, m_out, v_out, u_out,
+                 *, b1, b2, eps, lr):
+    g = g_ref[...]
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    # mc/vc are the scalar bias-correction factors 1/(1-b^t), precomputed.
+    m_hat = m_new * mc_ref[0]
+    v_hat = v_new * vc_ref[0]
+    m_out[...] = m_new
+    v_out[...] = v_new
+    u_out[...] = lr * m_hat / (jnp.sqrt(v_hat) + eps)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("beta1", "beta2", "eps", "lr", "interpret")
+)
+def subnet_adam(w, m, v, g, rho, gamma, step,
+                lr=1e-4, beta1=0.9, beta2=0.999, eps=1e-8,
+                interpret: bool = True):
+    """Adam step on the subnet; scatter the update into W.
+
+    Args:
+      w:   [n, m] f32 full weight.
+      m,v: [np, mp] f32 subnet moments.
+      g:   [np, mp] f32 subnet gradient.
+      rho, gamma: int32 subnet indices.
+      step: i32 scalar (1-based) for bias correction.
+    Returns:
+      (w', m', v')
+    """
+    np_, mp_ = g.shape
+    tr = min(128, np_)
+    while np_ % tr != 0:
+        tr -= 1
+    mc = (1.0 / (1.0 - beta1 ** step.astype(jnp.float32))).reshape(1)
+    vc = (1.0 / (1.0 - beta2 ** step.astype(jnp.float32))).reshape(1)
+    spec = pl.BlockSpec((tr, mp_), lambda i: (i, 0))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    shp = jax.ShapeDtypeStruct((np_, mp_), jnp.float32)
+    kernel = functools.partial(
+        _adam_kernel, b1=float(beta1), b2=float(beta2),
+        eps=float(eps), lr=float(lr),
+    )
+    m_new, v_new, upd = pl.pallas_call(
+        kernel,
+        grid=(np_ // tr,),
+        in_specs=[spec, spec, spec, sspec, sspec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shp, shp, shp],
+        interpret=interpret,
+    )(m, v, g, mc, vc)
+    w_new = w.at[rho[:, None], gamma[None, :]].add(-upd)
+    return w_new, m_new, v_new

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: factorized subnet gradient (LoSiA-Pro, Eq. 9).
+
+    dW_S = x[:, rho]^T @ dy[:, gamma]        x: [BS, n], dy: [BS, m]
+
+This is the compute hot-spot of LoSiA-Pro: instead of materialising the
+full [n, m] weight gradient and slicing it, the kernel gathers only the
+selected input columns of ``x`` and output columns of ``dy`` and runs a
+skinny GEMM whose cost is p^2 of the full gradient.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+(np, mp) output; each program gathers a (TK × TN) slab of activations and
+a (TK × TM) slab of cotangents into VMEM and accumulates an f32
+(TN × TM) tile on the MXU, looping over the BS contraction dimension in
+TK chunks.  ``interpret=True`` is mandatory on CPU PJRT — real-TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot execute.
+
+VMEM footprint per program: (TK·TN + TK·TM + TN·TM) · 4B, kept ≤ 16 MiB
+by the tile-shape chooser in :func:`pick_tiles`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pick_tiles(np_: int, mp_: int, bs: int) -> tuple[int, int, int]:
+    """Choose (TN, TM, TK) tile shapes.
+
+    Targets: MXU-friendly multiples (8 lanes minimum, 128 preferred),
+    VMEM budget ≤ 16 MiB, and no tile larger than the problem.
+    """
+
+    def fit(want: int, dim: int) -> int:
+        t = min(want, dim)
+        # round down to a divisor of dim to avoid ragged masking
+        while dim % t != 0:
+            t -= 1
+        return max(t, 1)
+
+    tn = fit(128, np_)
+    tm = fit(128, mp_)
+    tk = fit(512, bs)
+    # shrink TK until VMEM fits (f32 accum + two slabs)
+    while (tk * tn + tk * tm + tn * tm) * 4 > 16 * 1024 * 1024 and tk > 8:
+        tk //= 2
+        tk = fit(tk, bs)
+    return tn, tm, tk
+
+
+def _subnet_grad_kernel(rho_ref, gamma_ref, x_ref, dy_ref, out_ref, *, tk: int, bs: int):
+    """One (TN, TM) output tile: accumulate over the BS contraction dim."""
+    tn = out_ref.shape[0]
+    tm = out_ref.shape[1]
+    rho = rho_ref[...]      # [TN] int32 — column ids into x
+    gamma = gamma_ref[...]  # [TM] int32 — column ids into dy
+
+    def body(k, acc):
+        k0 = k * tk
+        # Load a contraction slab, then gather the selected columns.
+        # (Gather-on-value: a fused take on the VMEM-resident slab; the
+        # ref-level mixed dslice+gather load is not expressible in HLO
+        # interpret mode.)
+        x_blk = pl.load(x_ref, (pl.dslice(k0, tk), slice(None)))[:, rho]
+        dy_blk = pl.load(dy_ref, (pl.dslice(k0, tk), slice(None)))[:, gamma]
+        return acc + jnp.dot(
+            x_blk.T, dy_blk, preferred_element_type=jnp.float32
+        )
+
+    acc0 = jnp.zeros((tn, tm), jnp.float32)
+    out_ref[...] = jax.lax.fori_loop(0, bs // tk, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def subnet_grad(x, dy, rho, gamma, interpret: bool = True):
+    """Compute ``x[:, rho]^T @ dy[:, gamma]`` with the Pallas kernel.
+
+    Args:
+      x:     [BS, n] f32 activations.
+      dy:    [BS, m] f32 output cotangent.
+      rho:   [np] int32.
+      gamma: [mp] int32.
+    Returns:
+      [np, mp] f32 subnet gradient.
+    """
+    bs, _n = x.shape
+    np_ = rho.shape[0]
+    mp_ = gamma.shape[0]
+    tn, tm, tk = pick_tiles(np_, mp_, bs)
+    grid = (_ceil_div(np_, tn), _ceil_div(mp_, tm))
+    kernel = functools.partial(_subnet_grad_kernel, tk=tk, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i, j: (i,)),        # rho tile
+            pl.BlockSpec((tm,), lambda i, j: (j,)),        # gamma tile
+            pl.BlockSpec(x.shape, lambda i, j: (0, 0)),    # x: full residency
+            pl.BlockSpec(dy.shape, lambda i, j: (0, 0)),   # dy: full residency
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp_), jnp.float32),
+        interpret=interpret,
+    )(rho, gamma, x, dy)

@@ -1,0 +1,475 @@
+"""L2: decoder-only transformer with method-specific train steps.
+
+The model is a standard pre-norm decoder (RMSNorm, RoPE attention,
+SwiGLU MLP, untied lm_head) whose layers are stacked and scanned so one
+HLO module covers any depth.  Every fine-tuning method in the paper is
+expressed as a *train-step builder* over the same forward:
+
+  * ``grads_full``   — cotangents for every parameter (FFT, GaLore, and
+                       the LoSiA importance probe).
+  * ``grads_losia``  — LoSiA / LoSiA-Pro: subnet deltas per linear with
+                       runtime (rho, gamma) indices; the backward pass
+                       routes through the L1 Pallas kernel
+                       (:mod:`kernels.subnet_grad`), computing only the
+                       [np, mp] factorized gradient (Eq. 9).
+  * ``grads_lora``   — LoRA/PiSSA low-rank adapters.
+  * ``grads_dora``   — DoRA magnitude/direction decomposition.
+  * ``grads_probe``  — full gradients of a single decoder layer selected
+                       at runtime (the asynchronous profiling slot of
+                       §3.3) plus the lm_head gradient.
+
+Python exists only at AOT time; all of these are lowered to HLO text by
+``aot.py`` and executed from Rust.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.subnet_grad import subnet_grad
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+#: the seven tunable linear-matrix kinds per decoder layer (paper Table 7).
+LINEAR_KINDS = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one artifact family."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    seq_len: int
+    batch: int
+    # LoSiA rank factor p and output-layer reduction factor p_o.
+    rank_factor: float = 0.125
+    out_factor: float = 0.125
+    # LoRA/DoRA rank.
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+
+    def kind_dims(self, kind: str) -> tuple[int, int]:
+        """(n, m) = (input, output) dims of a linear of this kind."""
+        d, f = self.d_model, self.d_ff
+        return {
+            "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "wgate": (d, f), "wup": (d, f), "wdown": (f, d),
+        }[kind]
+
+    def subnet_dims(self, kind: str) -> tuple[int, int]:
+        """(np, mp) = subnet dims of a linear of this kind."""
+        n, m = self.kind_dims(kind)
+        return (
+            max(1, int(n * self.rank_factor)),
+            max(1, int(m * self.rank_factor)),
+        )
+
+    @property
+    def vocab_sub(self) -> int:
+        """|Y_S| of the output layer under reduction factor p_o."""
+        return max(1, int(self.vocab * self.out_factor))
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + l * per_layer + d + d * v
+
+
+#: canonical parameter ordering for the artifact ABI (Rust relies on it).
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, f, v, l = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    return [
+        ("embed", (v, d)),
+        ("wq", (l, d, d)),
+        ("wk", (l, d, d)),
+        ("wv", (l, d, d)),
+        ("wo", (l, d, d)),
+        ("wgate", (l, d, f)),
+        ("wup", (l, d, f)),
+        ("wdown", (l, f, d)),
+        ("norm1", (l, d)),
+        ("norm2", (l, d)),
+        ("norm_f", (d,)),
+        ("lm_head", (d, v)),
+    ]
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    """Scaled-normal init (used for pytest and as the Rust init oracle)."""
+    params = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * scale
+            )
+    return params
+
+
+# --------------------------------------------------------------------------
+# Core ops
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps=1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, base=10000.0):
+    """Rotary position embedding over the last dim of [B, S, H, Dh]."""
+    _, s, _, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = t[:, None] * freqs[None, :]          # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def attention(q, k, v, cfg: ModelConfig):
+    b, s, d = q.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = rope(q.reshape(b, s, h, dh))
+    k = rope(k.reshape(b, s, h, dh))
+    v = v.reshape(b, s, h, dh)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    scores = jnp.where(mask[None, None], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _subnet_apply(m_out: int, use_kernel: bool, x2d, dws, rho, gamma):
+    """y = scatter_cols(x[:, rho] @ dws, gamma) with a custom VJP.
+
+    ``dws`` is the [np, mp] trainable subnet delta (zero at every call —
+    Rust folds updates into W between steps); its cotangent is the
+    factorized LoSiA-Pro gradient (Eq. 9) computed by the L1 Pallas
+    kernel, which is the whole point: the full [n, m] weight gradient is
+    never materialised.
+    """
+    y = jnp.matmul(x2d[:, rho], dws)
+    out = jnp.zeros((x2d.shape[0], m_out), jnp.float32)
+    return out.at[:, gamma].add(y)
+
+
+def _subnet_apply_fwd(m_out, use_kernel, x2d, dws, rho, gamma):
+    return (
+        _subnet_apply(m_out, use_kernel, x2d, dws, rho, gamma),
+        (x2d, dws, rho, gamma),
+    )
+
+
+def _subnet_apply_bwd(m_out, use_kernel, res, dy):
+    x2d, dws, rho, gamma = res
+    if use_kernel:
+        ddws = subnet_grad(x2d, dy, rho, gamma)
+    else:
+        ddws = jnp.matmul(x2d[:, rho].T, dy[:, gamma])
+    dx = jnp.zeros_like(x2d)
+    dx = dx.at[:, rho].add(jnp.matmul(dy[:, gamma], dws.T))
+    return dx, ddws, None, None
+
+
+_subnet_apply.defvjp(_subnet_apply_fwd, _subnet_apply_bwd)
+
+
+def _subnet_delta(x2d, dws, rho, gamma, m_out: int, use_kernel: bool):
+    return _subnet_apply(m_out, use_kernel, x2d, dws, rho, gamma)
+
+
+def linear(x, w, layer_extras, kind: str, cfg: ModelConfig, method: str,
+           use_kernel: bool = True):
+    """Method-dispatched linear layer over [B, S, n] -> [B, S, m]."""
+    b, s, n = x.shape
+    m = w.shape[-1]
+    x2d = x.reshape(b * s, n)
+
+    if method in ("full", "plain"):
+        y = jnp.matmul(x2d, w)
+    elif method == "losia":
+        y = jnp.matmul(x2d, w)
+        y = y + _subnet_delta(
+            x2d,
+            layer_extras[f"dws_{kind}"],
+            layer_extras[f"rho_{kind}"],
+            layer_extras[f"gamma_{kind}"],
+            m,
+            use_kernel,
+        )
+    elif method == "lora":
+        a = layer_extras[f"la_{kind}"]      # [n, r]
+        bb = layer_extras[f"lb_{kind}"]     # [r, m]
+        scale = cfg.lora_alpha / cfg.lora_rank
+        y = jnp.matmul(x2d, w) + scale * jnp.matmul(jnp.matmul(x2d, a), bb)
+    elif method == "dora":
+        a = layer_extras[f"la_{kind}"]
+        bb = layer_extras[f"lb_{kind}"]
+        mag = layer_extras[f"mag_{kind}"]   # [m]
+        scale = cfg.lora_alpha / cfg.lora_rank
+        wp = w + scale * jnp.matmul(a, bb)
+        col_norm = jnp.sqrt(jnp.sum(wp * wp, axis=0) + 1e-8)
+        y = jnp.matmul(x2d, wp * (mag / col_norm)[None, :])
+    else:  # pragma: no cover
+        raise ValueError(f"unknown method {method}")
+    return y.reshape(b, s, m)
+
+
+def decoder_block(x, layer, cfg: ModelConfig, method: str, use_kernel=True):
+    """One pre-norm decoder block; ``layer`` holds stacked-slice params."""
+    lin = functools.partial(
+        linear, cfg=cfg, method=method, use_kernel=use_kernel
+    )
+    h = rmsnorm(x, layer["norm1"])
+    q = lin(h, layer["wq"], layer, kind="wq")
+    k = lin(h, layer["wk"], layer, kind="wk")
+    v = lin(h, layer["wv"], layer, kind="wv")
+    att = attention(q, k, v, cfg)
+    x = x + lin(att, layer["wo"], layer, kind="wo")
+    h2 = rmsnorm(x, layer["norm2"])
+    gate = lin(h2, layer["wgate"], layer, kind="wgate")
+    up = lin(h2, layer["wup"], layer, kind="wup")
+    mlp = jax.nn.silu(gate) * up
+    x = x + lin(mlp, layer["wdown"], layer, kind="wdown")
+    return x
+
+
+def forward(cfg: ModelConfig, params, extras, tokens, method: str,
+            use_kernel: bool = True, remat: bool = False):
+    """Token ids [B, S] -> logits [B, S, V].
+
+    ``extras`` carries the method-specific per-layer tensors, each stacked
+    on a leading layer axis, plus (for LoSiA) ``dws_out``/``gamma_out``
+    for the output-layer subnet (§3.2 dimensionality reduction).
+    """
+    x = params["embed"][tokens]
+
+    layer_keys = [k for k in params if params[k].ndim >= 2 and k != "embed"
+                  and k != "lm_head"]
+    layer_keys += ["norm1", "norm2"]
+    stacked = {k: params[k] for k in LINEAR_KINDS}
+    stacked["norm1"] = params["norm1"]
+    stacked["norm2"] = params["norm2"]
+    for k, v in extras.items():
+        if k in ("dws_out", "gamma_out"):
+            continue
+        stacked[k] = v
+
+    def block(x, layer):
+        return decoder_block(x, layer, cfg, method, use_kernel), None
+
+    if remat:
+        block = jax.checkpoint(block)
+
+    x, _ = jax.lax.scan(block, x, stacked)
+    x = rmsnorm(x, params["norm_f"])
+    b, s, d = x.shape
+    x2d = x.reshape(b * s, d)
+    logits = jnp.matmul(x2d, params["lm_head"])
+    if method == "losia" and "dws_out" in extras:
+        # Output-layer subnet: all input neurons, |Y_S| = p_o * V columns.
+        gamma_out = extras["gamma_out"]
+        rho_all = jnp.arange(d, dtype=jnp.int32)
+        logits = logits + _subnet_delta(
+            x2d, extras["dws_out"], rho_all, gamma_out, cfg.vocab, use_kernel
+        )
+    return logits.reshape(b, s, cfg.vocab)
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def seq_nll(logits, targets, mask):
+    """Per-sequence summed NLL and token count. mask is f32 [B, S]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    nll = -(tok * mask).sum(axis=-1)
+    return nll, mask.sum(axis=-1)
+
+
+def mean_loss(logits, targets, mask):
+    nll, cnt = seq_nll(logits, targets, mask)
+    return nll.sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Train-step builders (lowered by aot.py)
+# --------------------------------------------------------------------------
+
+
+def make_losia_extras(cfg: ModelConfig, zeros=True):
+    """Shape skeleton of the LoSiA runtime inputs (deltas + indices)."""
+    ex = {}
+    l = cfg.n_layers
+    for kind in LINEAR_KINDS:
+        np_, mp_ = cfg.subnet_dims(kind)
+        ex[f"dws_{kind}"] = jnp.zeros((l, np_, mp_), jnp.float32)
+        ex[f"rho_{kind}"] = jnp.zeros((l, np_), jnp.int32)
+        ex[f"gamma_{kind}"] = jnp.zeros((l, mp_), jnp.int32)
+    ex["dws_out"] = jnp.zeros((cfg.d_model, cfg.vocab_sub), jnp.float32)
+    ex["gamma_out"] = jnp.zeros((cfg.vocab_sub,), jnp.int32)
+    return ex
+
+
+def make_lora_extras(cfg: ModelConfig, key=None, dora: bool = False):
+    ex = {}
+    l, r = cfg.n_layers, cfg.lora_rank
+    key = key if key is not None else jax.random.PRNGKey(0)
+    for kind in LINEAR_KINDS:
+        n, m = cfg.kind_dims(kind)
+        key, sub = jax.random.split(key)
+        ex[f"la_{kind}"] = (
+            jax.random.normal(sub, (l, n, r), jnp.float32) / jnp.sqrt(n)
+        )
+        ex[f"lb_{kind}"] = jnp.zeros((l, r, m), jnp.float32)
+        if dora:
+            ex[f"mag_{kind}"] = jnp.ones((l, m), jnp.float32)
+    return ex
+
+
+def fwd_logits_fn(cfg: ModelConfig):
+    def fn(params, tokens):
+        return forward(cfg, params, {}, tokens, "plain")
+    return fn
+
+
+def fwd_loss_fn(cfg: ModelConfig):
+    def fn(params, tokens, targets, mask):
+        logits = forward(cfg, params, {}, tokens, "plain")
+        nll, cnt = seq_nll(logits, targets, mask)
+        return nll, cnt
+    return fn
+
+
+def grads_full_fn(cfg: ModelConfig, remat: bool = False):
+    def loss_fn(params, tokens, targets, mask):
+        logits = forward(cfg, params, {}, tokens, "plain", remat=remat)
+        return mean_loss(logits, targets, mask)
+
+    def fn(params, tokens, targets, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, targets, mask
+        )
+        return loss, grads
+    return fn
+
+
+def grads_losia_fn(cfg: ModelConfig, use_kernel: bool = True,
+                   remat: bool = False):
+    """LoSiA-Pro step fused with the importance probe.
+
+    Returns cotangents for (a) every subnet delta — the factorized
+    Eq. 9 gradients via the Pallas kernel — and (b) the FULL gradients
+    of the single decoder layer selected by the runtime ``probe`` index
+    plus the output layer, which the coordinator's asynchronous
+    profiling slot (§3.3) consumes.  Fusing (b) into the same backward
+    costs one extra per-layer dW GEMM instead of a second full
+    forward+backward, which is exactly the paper's per-layer-update
+    accounting.
+    """
+    probe_keys = list(LINEAR_KINDS)
+
+    def loss_fn(deltas, probe_params, lm_head, indices, params, probe,
+                tokens, targets, mask):
+        merged = dict(params)
+        for k in probe_keys:
+            merged[k] = jax.lax.dynamic_update_index_in_dim(
+                params[k], probe_params[k], probe, 0
+            )
+        merged["lm_head"] = lm_head
+        extras = {**deltas, **indices}
+        logits = forward(
+            cfg, merged, extras, tokens, "losia",
+            use_kernel=use_kernel, remat=remat,
+        )
+        return mean_loss(logits, targets, mask)
+
+    def fn(params, deltas, indices, probe, tokens, targets, mask):
+        probe_params = {
+            k: jax.lax.dynamic_index_in_dim(params[k], probe, 0, False)
+            for k in probe_keys
+        }
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(
+            deltas, probe_params, params["lm_head"], indices, params,
+            probe, tokens, targets, mask,
+        )
+        return loss, grads[0], grads[1], grads[2]
+    return fn
+
+
+def grads_lora_fn(cfg: ModelConfig, dora: bool = False,
+                  remat: bool = False):
+    method = "dora" if dora else "lora"
+
+    def loss_fn(adapters, params, tokens, targets, mask):
+        logits = forward(cfg, params, adapters, tokens, method, remat=remat)
+        return mean_loss(logits, targets, mask)
+
+    def fn(params, adapters, tokens, targets, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            adapters, params, tokens, targets, mask
+        )
+        return loss, grads
+    return fn
+
+
+def grads_probe_fn(cfg: ModelConfig):
+    """Full gradients of decoder layer ``probe`` + lm_head (profiling slot).
+
+    Differentiates w.r.t. a single layer's parameter slice (re-inserted
+    with dynamic_update_slice) so XLA only materialises that layer's dW —
+    the per-layer-update trick of Lv et al. (2024) used by §3.2.
+    """
+    probe_keys = list(LINEAR_KINDS)
+
+    def loss_fn(probe_params, lm_head, params, probe, tokens, targets, mask):
+        merged = dict(params)
+        for k in probe_keys:
+            expanded = probe_params[k][None]
+            merged[k] = jax.lax.dynamic_update_index_in_dim(
+                params[k], probe_params[k], probe, 0
+            )
+        merged["lm_head"] = lm_head
+        logits = forward(cfg, merged, {}, tokens, "plain")
+        return mean_loss(logits, targets, mask)
+
+    def fn(params, probe, tokens, targets, mask):
+        probe_params = {
+            k: jax.lax.dynamic_index_in_dim(params[k], probe, 0, False)
+            for k in probe_keys
+        }
+        loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            probe_params, params["lm_head"], params, probe,
+            tokens, targets, mask,
+        )
+        return loss, grads[0], grads[1]
+    return fn

@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and index patterns; every kernel must match its
+``ref.py`` oracle to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.importance import importance_update
+from compile.kernels.subnet_adam import subnet_adam
+from compile.kernels.subnet_grad import pick_tiles, subnet_grad
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+@st.composite
+def subnet_problem(draw):
+    bs = draw(st.sampled_from([8, 16, 64, 96, 128]))
+    n = draw(st.integers(8, 96))
+    m = draw(st.integers(8, 96))
+    np_ = draw(st.integers(1, n))
+    mp_ = draw(st.integers(1, m))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return bs, n, m, np_, mp_, seed
+
+
+class TestSubnetGrad:
+    @given(subnet_problem())
+    def test_matches_ref(self, prob):
+        bs, n, m, np_, mp_, seed = prob
+        rng = _rng(seed)
+        x = jnp.array(rng.standard_normal((bs, n)), jnp.float32)
+        dy = jnp.array(rng.standard_normal((bs, m)), jnp.float32)
+        rho = jnp.array(rng.choice(n, np_, replace=False), jnp.int32)
+        gamma = jnp.array(rng.choice(m, mp_, replace=False), jnp.int32)
+        got = subnet_grad(x, dy, rho, gamma)
+        want = ref.subnet_grad_ref(x, dy, rho, gamma)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_duplicate_indices_allowed(self):
+        # localization never emits duplicates, but the kernel must not
+        # silently corrupt memory if they appear.
+        rng = _rng(0)
+        x = jnp.array(rng.standard_normal((16, 8)), jnp.float32)
+        dy = jnp.array(rng.standard_normal((16, 8)), jnp.float32)
+        rho = jnp.array([1, 1, 3], jnp.int32)
+        gamma = jnp.array([0, 2, 2], jnp.int32)
+        got = subnet_grad(x, dy, rho, gamma)
+        want = ref.subnet_grad_ref(x, dy, rho, gamma)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_identity_selection_recovers_full_grad(self):
+        rng = _rng(1)
+        x = jnp.array(rng.standard_normal((32, 12)), jnp.float32)
+        dy = jnp.array(rng.standard_normal((32, 10)), jnp.float32)
+        rho = jnp.arange(12, dtype=jnp.int32)
+        gamma = jnp.arange(10, dtype=jnp.int32)
+        got = subnet_grad(x, dy, rho, gamma)
+        want = x.T @ dy
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(1, 512), st.integers(1, 512),
+           st.sampled_from([8, 64, 512, 4096]))
+    def test_tile_chooser_vmem_budget(self, np_, mp_, bs):
+        tn, tm, tk = pick_tiles(np_, mp_, bs)
+        assert 1 <= tn <= np_ and np_ % tn == 0
+        assert 1 <= tm <= mp_ and mp_ % tm == 0
+        assert 1 <= tk <= bs and bs % tk == 0
+        vmem = (tk * tn + tk * tm + tn * tm) * 4
+        assert vmem <= 16 * 1024 * 1024
+
+
+class TestImportance:
+    @given(st.integers(2, 64), st.integers(2, 64),
+           st.integers(0, 2**31 - 1),
+           st.floats(0.1, 0.99), st.floats(0.1, 0.99))
+    def test_matches_ref(self, n, m, seed, b1, b2):
+        rng = _rng(seed)
+        w = jnp.array(rng.standard_normal((n, m)), jnp.float32)
+        g = jnp.array(rng.standard_normal((n, m)), jnp.float32)
+        ib = jnp.array(rng.random((n, m)), jnp.float32)
+        ub = jnp.array(rng.random((n, m)), jnp.float32)
+        i2, u2, s2 = importance_update(w, g, ib, ub, b1, b2)
+        imp = ref.importance_ref(w, g)
+        ir, ur, sr = ref.ema_update_ref(ib, ub, imp, b1, b2)
+        np.testing.assert_allclose(i2, ir, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(u2, ur, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(s2, sr, rtol=1e-5, atol=1e-6)
+
+    def test_importance_nonnegative(self):
+        rng = _rng(7)
+        w = jnp.array(rng.standard_normal((16, 16)) * 10, jnp.float32)
+        g = jnp.array(rng.standard_normal((16, 16)) * 10, jnp.float32)
+        assert float(ref.importance_ref(w, g).min()) >= 0.0
+
+    def test_zero_state_first_step(self):
+        # With Ibar = Ubar = 0 the first update must be (1-b)*I exactly.
+        rng = _rng(3)
+        w = jnp.array(rng.standard_normal((8, 8)), jnp.float32)
+        g = jnp.array(rng.standard_normal((8, 8)), jnp.float32)
+        z = jnp.zeros((8, 8), jnp.float32)
+        i2, u2, _ = importance_update(w, g, z, z, 0.85, 0.85)
+        imp = ref.importance_ref(w, g)
+        np.testing.assert_allclose(i2, 0.15 * imp, rtol=1e-5, atol=1e-7)
+
+
+class TestSubnetAdam:
+    @given(st.integers(4, 48), st.integers(4, 48),
+           st.integers(1, 100), st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, m, step, seed):
+        rng = _rng(seed)
+        np_, mp_ = max(1, n // 4), max(1, m // 4)
+        w = jnp.array(rng.standard_normal((n, m)), jnp.float32)
+        mm = jnp.array(rng.standard_normal((np_, mp_)) * 0.01, jnp.float32)
+        vv = jnp.array(rng.random((np_, mp_)) * 0.01, jnp.float32)
+        g = jnp.array(rng.standard_normal((np_, mp_)), jnp.float32)
+        rho = jnp.array(rng.choice(n, np_, replace=False), jnp.int32)
+        gamma = jnp.array(rng.choice(m, mp_, replace=False), jnp.int32)
+        st_ = jnp.int32(step)
+        w2, m2, v2 = subnet_adam(w, mm, vv, g, rho, gamma, st_, lr=1e-3)
+        wr, mr, vr = ref.subnet_adam_ref(
+            w, mm, vv, g, rho, gamma, 1e-3, 0.9, 0.999, 1e-8, step
+        )
+        np.testing.assert_allclose(w2, wr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m2, mr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-6)
+
+    def test_untouched_weights_unchanged(self):
+        rng = _rng(9)
+        w = jnp.array(rng.standard_normal((16, 16)), jnp.float32)
+        g = jnp.array(rng.standard_normal((4, 4)), jnp.float32)
+        z = jnp.zeros((4, 4), jnp.float32)
+        rho = jnp.array([0, 1, 2, 3], jnp.int32)
+        gamma = jnp.array([0, 1, 2, 3], jnp.int32)
+        w2, _, _ = subnet_adam(w, z, z, g, rho, gamma, jnp.int32(1))
+        np.testing.assert_array_equal(
+            np.array(w2)[4:, :], np.array(w)[4:, :]
+        )
+        np.testing.assert_array_equal(
+            np.array(w2)[:4, 4:], np.array(w)[:4, 4:]
+        )

@@ -1,0 +1,220 @@
+"""L2 model correctness: shapes, grad-path equivalences, remat identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(
+    name="t", vocab=64, d_model=32, n_heads=2, d_ff=64,
+    n_layers=2, seq_len=16, batch=2, rank_factor=0.25,
+    out_factor=0.25, lora_rank=4,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(CFG, key)
+    tokens = jax.random.randint(key, (2, 16), 0, CFG.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones((2, 16), jnp.float32)
+    return params, tokens, targets, mask
+
+
+def _indices(seed=1):
+    rng = np.random.default_rng(seed)
+    idx = {}
+    for kind in M.LINEAR_KINDS:
+        np_, mp_ = CFG.subnet_dims(kind)
+        n, m = CFG.kind_dims(kind)
+        idx[f"rho_{kind}"] = jnp.array(
+            [rng.choice(n, np_, False) for _ in range(CFG.n_layers)],
+            jnp.int32,
+        )
+        idx[f"gamma_{kind}"] = jnp.array(
+            [rng.choice(m, mp_, False) for _ in range(CFG.n_layers)],
+            jnp.int32,
+        )
+    idx["gamma_out"] = jnp.array(
+        rng.choice(CFG.vocab, CFG.vocab_sub, False), jnp.int32
+    )
+    return idx
+
+
+def _deltas():
+    return {
+        k: v for k, v in M.make_losia_extras(CFG).items()
+        if k.startswith("dws")
+    }
+
+
+class TestForward:
+    def test_logits_shape(self, setup):
+        params, tokens, *_ = setup
+        logits = M.fwd_logits_fn(CFG)(params, tokens)
+        assert logits.shape == (2, 16, CFG.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self, setup):
+        # Changing a future token must not change past logits.
+        params, tokens, *_ = setup
+        logits1 = M.fwd_logits_fn(CFG)(params, tokens)
+        tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+        logits2 = M.fwd_logits_fn(CFG)(params, tokens2)
+        np.testing.assert_allclose(
+            logits1[:, :-1], logits2[:, :-1], rtol=1e-5, atol=1e-5
+        )
+
+    def test_zero_deltas_do_not_change_forward(self, setup):
+        params, tokens, *_ = setup
+        base = M.fwd_logits_fn(CFG)(params, tokens)
+        extras = {**_deltas(), **_indices()}
+        losia = M.forward(CFG, params, extras, tokens, "losia")
+        np.testing.assert_allclose(base, losia, rtol=1e-5, atol=1e-5)
+
+    def test_nll_matches_mean_loss(self, setup):
+        params, tokens, targets, mask = setup
+        nll, cnt = M.fwd_loss_fn(CFG)(params, tokens, targets, mask)
+        logits = M.fwd_logits_fn(CFG)(params, tokens)
+        loss = M.mean_loss(logits, targets, mask)
+        np.testing.assert_allclose(
+            nll.sum() / cnt.sum(), loss, rtol=1e-6
+        )
+
+    def test_mask_zeroes_positions(self, setup):
+        params, tokens, targets, _ = setup
+        mask0 = jnp.zeros((2, 16), jnp.float32)
+        nll, cnt = M.fwd_loss_fn(CFG)(params, tokens, targets, mask0)
+        assert float(jnp.abs(nll).max()) == 0.0
+        assert float(cnt.sum()) == 0.0
+
+
+class TestGradEquivalences:
+    def test_losia_equals_gathered_full(self, setup):
+        params, tokens, targets, mask = setup
+        _, full = M.grads_full_fn(CFG)(params, tokens, targets, mask)
+        idx = _indices()
+        _, sg, _, _ = M.grads_losia_fn(CFG)(
+            params, _deltas(), idx, jnp.int32(0), tokens, targets, mask
+        )
+        for kind in M.LINEAR_KINDS:
+            for l in range(CFG.n_layers):
+                r = np.array(idx[f"rho_{kind}"][l])
+                g = np.array(idx[f"gamma_{kind}"][l])
+                want = np.array(full[kind][l])[np.ix_(r, g)]
+                got = np.array(sg[f"dws_{kind}"][l])
+                np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        go = np.array(idx["gamma_out"])
+        np.testing.assert_allclose(
+            np.array(sg["dws_out"]),
+            np.array(full["lm_head"])[:, go],
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_kernel_and_jnp_paths_agree(self, setup):
+        params, tokens, targets, mask = setup
+        idx = _indices()
+        _, g1, _, _ = M.grads_losia_fn(CFG, use_kernel=True)(
+            params, _deltas(), idx, jnp.int32(0), tokens, targets, mask
+        )
+        _, g2, _, _ = M.grads_losia_fn(CFG, use_kernel=False)(
+            params, _deltas(), idx, jnp.int32(0), tokens, targets, mask
+        )
+        for k in g1:
+            np.testing.assert_allclose(g1[k], g2[k], rtol=1e-5, atol=1e-6)
+
+    def test_remat_matches_plain(self, setup):
+        params, tokens, targets, mask = setup
+        l1, g1 = M.grads_full_fn(CFG)(params, tokens, targets, mask)
+        l2, g2 = M.grads_full_fn(CFG, remat=True)(
+            params, tokens, targets, mask
+        )
+        np.testing.assert_allclose(l1, l2, rtol=1e-6)
+        for k in g1:
+            np.testing.assert_allclose(g1[k], g2[k], rtol=1e-4, atol=1e-5)
+
+    def test_probe_matches_full(self, setup):
+        params, tokens, targets, mask = setup
+        _, full = M.grads_full_fn(CFG)(params, tokens, targets, mask)
+        fn = M.grads_probe_fn(CFG)
+        for l in range(CFG.n_layers):
+            _, pg, lmg = fn(params, jnp.int32(l), tokens, targets, mask)
+            for kind in M.LINEAR_KINDS:
+                np.testing.assert_allclose(
+                    pg[kind], full[kind][l], rtol=1e-4, atol=1e-5
+                )
+            np.testing.assert_allclose(
+                lmg, full["lm_head"], rtol=1e-4, atol=1e-5
+            )
+
+    def test_fused_probe_matches_full(self, setup):
+        # the probe outputs fused into grads_losia must equal the full
+        # per-layer gradients (and the full lm_head gradient)
+        params, tokens, targets, mask = setup
+        _, full = M.grads_full_fn(CFG)(params, tokens, targets, mask)
+        idx = _indices()
+        for l in range(CFG.n_layers):
+            _, _, pg, lmg = M.grads_losia_fn(CFG)(
+                params, _deltas(), idx, jnp.int32(l),
+                tokens, targets, mask,
+            )
+            for kind in M.LINEAR_KINDS:
+                np.testing.assert_allclose(
+                    pg[kind], full[kind][l], rtol=1e-4, atol=1e-5
+                )
+            np.testing.assert_allclose(
+                lmg, full["lm_head"], rtol=1e-4, atol=1e-5
+            )
+
+    def test_lora_zero_b_matches_plain_loss(self, setup):
+        params, tokens, targets, mask = setup
+        ad = M.make_lora_extras(CFG)
+        loss, grads = M.grads_lora_fn(CFG)(
+            params, ad, tokens, targets, mask
+        )
+        logits = M.fwd_logits_fn(CFG)(params, tokens)
+        want = M.mean_loss(logits, targets, mask)
+        np.testing.assert_allclose(loss, want, rtol=1e-6)
+        # B = 0 ⇒ dA = 0 but dB ≠ 0 (the standard LoRA init property)
+        assert float(jnp.abs(grads["la_wq"]).max()) < 1e-7
+        assert float(jnp.abs(grads["lb_wq"]).max()) > 0.0
+
+    def test_losia_grad_descends(self, setup):
+        """One manual subnet SGD step must reduce the training loss."""
+        params, tokens, targets, mask = setup
+        idx = _indices()
+        loss0, sg, _, _ = M.grads_losia_fn(CFG)(
+            params, _deltas(), idx, jnp.int32(0), tokens, targets, mask
+        )
+        upd = dict(params)
+        lr = 0.1
+        for kind in M.LINEAR_KINDS:
+            w = np.array(params[kind])
+            for l in range(CFG.n_layers):
+                r = np.array(idx[f"rho_{kind}"][l])
+                g = np.array(idx[f"gamma_{kind}"][l])
+                w[l][np.ix_(r, g)] -= lr * np.array(sg[f"dws_{kind}"][l])
+            upd[kind] = jnp.array(w)
+        loss1, _, _, _ = M.grads_losia_fn(CFG)(
+            upd, _deltas(), idx, jnp.int32(0), tokens, targets, mask
+        )
+        assert float(loss1) < float(loss0)
+
+
+class TestConfig:
+    def test_param_count_matches_shapes(self):
+        total = sum(
+            int(np.prod(s)) for _, s in M.param_specs(CFG)
+        )
+        assert total == CFG.param_count()
+
+    def test_subnet_dims_floor(self):
+        np_, mp_ = CFG.subnet_dims("wq")
+        assert np_ == int(CFG.d_model * CFG.rank_factor)
+        assert mp_ == int(CFG.d_model * CFG.rank_factor)
+
+    def test_vocab_sub(self):
+        assert CFG.vocab_sub == int(CFG.vocab * CFG.out_factor)

@@ -1,0 +1,161 @@
+//! Shared bench scaffolding: config/steps selection via env vars, a
+//! train-and-eval harness, and method lists.
+//!
+//! Defaults keep `cargo bench` tractable on CPU (tiny config, short
+//! runs). For paper-shaped fidelity re-run with:
+//!
+//! ```bash
+//! LOSIA_BENCH_CONFIG=small LOSIA_BENCH_STEPS=400 cargo bench
+//! ```
+
+#![allow(dead_code)]
+
+use losia::config::{Ablation, Method, TrainConfig};
+use losia::coordinator::state::ModelState;
+use losia::coordinator::trainer::Trainer;
+use losia::data::{gen_eval_set, gen_train_set, Batcher, EvalItem, Task};
+use losia::eval::ppl_accuracy;
+use losia::runtime::Runtime;
+use losia::util::rng::Rng;
+
+pub fn bench_config() -> String {
+    std::env::var("LOSIA_BENCH_CONFIG").unwrap_or_else(|_| "tiny".into())
+}
+
+pub fn bench_steps(default: usize) -> usize {
+    std::env::var("LOSIA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::from_config_name(&bench_config()).expect(
+        "artifacts missing — run `make artifacts` first",
+    )
+}
+
+/// Default train config for benches; LR tuned for the tiny/small
+/// scale (the paper's 6e-5 belongs to LLaMA-scale models).
+pub fn base_tc(rt: &Runtime, method: Method, steps: usize) -> TrainConfig {
+    TrainConfig {
+        method,
+        steps,
+        lr: 1e-3,
+        time_slot: (steps / 8).max(5),
+        seed: 42,
+        galore_rank: rt.cfg.d_model / 4,
+        ..TrainConfig::default()
+    }
+}
+
+pub struct RunResult {
+    pub state: ModelState,
+    pub first_loss: f64,
+    pub final_loss: f64,
+    pub us_per_token: f64,
+    pub trainable: usize,
+    pub loss_log: Vec<(usize, f64)>,
+    pub selection_log:
+        Vec<(usize, usize, String, Vec<usize>, Vec<usize>)>,
+}
+
+/// Train `method` on `task` from a fresh seed-42 model.
+pub fn train_method(
+    rt: &Runtime,
+    tc: TrainConfig,
+    task: &dyn Task,
+    train_n: usize,
+) -> RunResult {
+    let train = gen_train_set(task, train_n, tc.seed);
+    let mut batcher =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, tc.seed);
+    let mut rng = Rng::new(7);
+    let mut state = ModelState::init(&rt.cfg, &mut rng);
+    let mut trainer = Trainer::new(rt, tc).expect("trainer");
+    trainer.train(&mut state, &mut batcher).expect("train");
+    let selection_log = trainer.driver.selection_history();
+    RunResult {
+        first_loss: trainer.loss_log.first().map(|x| x.1).unwrap_or(0.0),
+        final_loss: trainer.tail_loss(10),
+        us_per_token: trainer.us_per_token(),
+        trainable: trainer.driver.trainable_params(),
+        loss_log: trainer.loss_log.clone(),
+        selection_log,
+        state,
+    }
+}
+
+pub fn eval_ppl(
+    rt: &Runtime,
+    state: &ModelState,
+    items: &[EvalItem],
+) -> f64 {
+    ppl_accuracy(rt, state, items).expect("eval")
+}
+
+pub fn eval_items(task: &dyn Task, n: usize, seed: u64) -> Vec<EvalItem> {
+    gen_eval_set(task, n, seed)
+}
+
+/// The Table-1 method roster.
+pub fn table1_methods() -> Vec<Method> {
+    vec![
+        Method::Fft,
+        Method::Lora,
+        Method::Pissa,
+        Method::Dora,
+        Method::Galore,
+        Method::Losia,
+        Method::LosiaPro,
+    ]
+}
+
+/// Analytic memory total in "GB-equivalent" (scaled for readability).
+pub fn memory_gb(rt: &Runtime, method: Method) -> f64 {
+    use losia::metrics::memory as mm;
+    let cfg = &rt.cfg;
+    let b = 4.0; // f32
+    let bytes = match method {
+        Method::Fft => mm::fft(cfg, b).total(),
+        Method::Lora | Method::Pissa | Method::Dora => {
+            mm::lora(cfg, cfg.lora_rank, b).total()
+        }
+        Method::Galore => mm::galore(cfg, cfg.d_model / 4, b).total(),
+        Method::Losia | Method::LosiaPro => mm::losia(
+            cfg,
+            cfg.rank_factor,
+            cfg.out_factor,
+            b,
+            false,
+        )
+        .total(),
+    };
+    bytes / 1e9
+}
+
+pub fn ablation(name: &str) -> Ablation {
+    match name {
+        "SL" => Ablation {
+            synchronous: true,
+            ..Ablation::default()
+        },
+        "GL" => Ablation {
+            gradient_importance: true,
+            ..Ablation::default()
+        },
+        "WDS" => Ablation {
+            no_rewarm: true,
+            ..Ablation::default()
+        },
+        "FFTO" => Ablation {
+            fft_output: true,
+            ..Ablation::default()
+        },
+        "ReLO" => Ablation {
+            no_relocalize: true,
+            ..Ablation::default()
+        },
+        _ => Ablation::default(),
+    }
+}

@@ -1,0 +1,99 @@
+//! Figures 2 + 9 — gradient-magnitude structure: do large gradients
+//! concentrate on a sparse set of rows (input neurons) and columns
+//! (output neurons)?
+//!
+//! For each layer/module we report the share of |grad| mass captured
+//! by the top-p fraction of rows and of columns, against the uniform
+//! baseline p. Expected shape vs the paper: shares ≫ p (pronounced
+//! skew), stronger for v/o/up/down than q/k, persisting across depth.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::data::domain::ModMath;
+use losia::data::{gen_train_set, Batcher};
+use losia::methods::{assemble_inputs, base_values};
+use losia::tensor::select::topk_indices_fast;
+use losia::util::table::{write_series_csv, Table};
+
+fn mass_share(sums: &[f32], frac: f64) -> f64 {
+    let k = ((sums.len() as f64 * frac) as usize).max(1);
+    let total: f64 = sums.iter().map(|&x| x.abs() as f64).sum();
+    let top = topk_indices_fast(sums, k);
+    let top_mass: f64 =
+        top.iter().map(|&i| sums[i].abs() as f64).sum();
+    100.0 * top_mass / total.max(1e-12)
+}
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(40);
+    let tc = base_tc(&rt, Method::Fft, steps);
+    let res = train_method(&rt, tc, &ModMath, 1000);
+
+    let exe = rt.load("grads_full").unwrap();
+    let train = gen_train_set(&ModMath, 64, 321);
+    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 2);
+    let batch = b.next_batch();
+    let values = base_values(&res.state, &batch);
+    let out = exe.run(&assemble_inputs(exe.spec(), values)).unwrap();
+
+    let p = rt.cfg.rank_factor;
+    let mut table = Table::new(
+        &format!(
+            "Fig 2/9 — |grad| mass share of top-{:.1}% rows/cols \
+             (uniform baseline = {:.1}%)",
+            100.0 * p,
+            100.0 * p
+        ),
+        &["Layer", "Module", "Row share %", "Col share %", "Skew ×"],
+    );
+    let mut profile_rows: Vec<Vec<f64>> = Vec::new();
+    for (spec, g) in exe.spec().outputs[1..].iter().zip(&out[1..]) {
+        let name = spec.name.strip_prefix("g_").unwrap();
+        if !rt.cfg.linear_kinds.iter().any(|k| k == name) {
+            continue;
+        }
+        for l in 0..rt.cfg.n_layers {
+            let gl = g.index_axis0(l);
+            let abs = losia::tensor::Tensor {
+                shape: gl.shape.clone(),
+                data: gl.data.iter().map(|x| x.abs()).collect(),
+            };
+            let rs = abs.row_sums();
+            let cs = abs.col_sums();
+            let row_share = mass_share(&rs, p);
+            let col_share = mass_share(&cs, p);
+            table.row(&[
+                l.to_string(),
+                name.to_string(),
+                format!("{row_share:.1}"),
+                format!("{col_share:.1}"),
+                format!("{:.2}", row_share / (100.0 * p)),
+            ]);
+            if name == "wv" {
+                // full sorted row/col profile for plotting (Fig 2)
+                let mut sorted_rows: Vec<f64> =
+                    rs.iter().map(|&x| x as f64).collect();
+                sorted_rows
+                    .sort_by(|a, b| b.partial_cmp(a).unwrap());
+                for (rank, v) in sorted_rows.iter().enumerate() {
+                    profile_rows.push(vec![
+                        l as f64,
+                        rank as f64,
+                        *v,
+                    ]);
+                }
+            }
+        }
+    }
+    table.print();
+    table.write_csv("fig2_gradstruct");
+    write_series_csv(
+        "fig2_wv_row_profile",
+        &["layer", "rank", "row_abs_grad_sum"],
+        &profile_rows,
+    );
+}

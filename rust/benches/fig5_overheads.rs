@@ -1,0 +1,67 @@
+//! Figures 5 / 11 / 12 — overhead scatter: measured training latency
+//! vs analytic memory (optimizer + activations), with and without
+//! gradient checkpointing.
+//!
+//! Expected shape vs the paper: LoSiA-Pro in the fast/low-memory
+//! corner; DoRA slow; FFT memory-heavy; activation storage of
+//! LoSiA-Pro ≈ p × LoRA's when GC is off.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::data::domain::ModMath;
+use losia::metrics::memory::activation_bytes;
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(10);
+
+    for remat in [true, false] {
+        let mut table = Table::new(
+            &format!(
+                "Fig 5/{} — latency vs memory ({} GC) on {}",
+                if remat { "11" } else { "12" },
+                if remat { "w/" } else { "w/o" },
+                rt.cfg.name
+            ),
+            &[
+                "Method",
+                "µs/token",
+                "State mem (B)",
+                "Activation (B)",
+                "Total (B)",
+            ],
+        );
+        for method in table1_methods() {
+            let mut tc = base_tc(&rt, method, steps);
+            tc.use_remat = remat;
+            let res = train_method(&rt, tc, &ModMath, 400);
+            let state_b = memory_gb(&rt, method) * 1e9;
+            // activations: GC keeps only block boundaries (≈ 1/K of
+            // inputs); w/o GC every linear input is stored — except
+            // LoSiA-Pro, which stores the p-fraction (Eq. 9).
+            let frac = match (method, remat) {
+                (_, true) => 1.0 / 7.0,
+                (losia::config::Method::LosiaPro, false) => {
+                    rt.cfg.rank_factor
+                }
+                (_, false) => 1.0,
+            };
+            let act = activation_bytes(&rt.cfg, frac, 4.0);
+            table.row(&[
+                method.name().to_string(),
+                format!("{:.1}", res.us_per_token),
+                format!("{state_b:.0}"),
+                format!("{act:.0}"),
+                format!("{:.0}", state_b + act),
+            ]);
+        }
+        table.print();
+        table.write_csv(&format!(
+            "fig5_overheads_{}",
+            if remat { "gc" } else { "nogc" }
+        ));
+    }
+}

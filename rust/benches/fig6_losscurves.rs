@@ -1,0 +1,71 @@
+//! Figure 6 — training loss curves of LoSiA variants vs baselines on
+//! the math and general-instruction analogues.
+//!
+//! Expected shape vs the paper: the SL variant shows fluctuation after
+//! reselections; w/o WDS (no rewarming) spikes; vanilla async LoSiA
+//! tracks the baselines smoothly.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::data::domain::{KvFacts, ModMath};
+use losia::data::Task;
+use losia::util::table::write_series_csv;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(160);
+    let kv = KvFacts::new(48, 4, 7);
+    let tasks: Vec<(&str, &dyn Task)> =
+        vec![("modmath", &ModMath), ("kvfacts", &kv)];
+
+    // (label, method, ablation)
+    let variants: Vec<(&str, Method, &str)> = vec![
+        ("LoRA", Method::Lora, ""),
+        ("GaLore", Method::Galore, ""),
+        ("LoSiA", Method::LosiaPro, ""),
+        ("LoSiA-SL", Method::Losia, "SL"),
+        ("LoSiA-WDS", Method::LosiaPro, "WDS"),
+        ("LoSiA-ReLO", Method::LosiaPro, "ReLO"),
+    ];
+
+    for (tname, task) in tasks {
+        let mut curves: Vec<(String, Vec<(usize, f64)>)> = Vec::new();
+        for (label, method, ab) in &variants {
+            eprintln!("== {tname}: {label} ==");
+            let mut tc = base_tc(&rt, *method, steps);
+            tc.ablation = ablation(ab);
+            tc.time_slot = (steps / 10).max(4);
+            let res = train_method(&rt, tc, task, 2000);
+            curves.push((label.to_string(), res.loss_log));
+        }
+        // wide CSV: step, <variant columns>
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for t in 0..steps {
+            let mut row = vec![t as f64];
+            for (_, log) in &curves {
+                row.push(
+                    log.get(t).map(|x| x.1).unwrap_or(f64::NAN),
+                );
+            }
+            rows.push(row);
+        }
+        let mut header: Vec<&str> = vec!["step"];
+        let labels: Vec<String> =
+            curves.iter().map(|(l, _)| l.clone()).collect();
+        header.extend(labels.iter().map(|s| s.as_str()));
+        write_series_csv(
+            &format!("fig6_loss_{tname}"),
+            &header,
+            &rows,
+        );
+        // console summary: smoothed start/mid/end per variant
+        println!("[{tname}] final-window losses:");
+        for (label, log) in &curves {
+            let tail: f64 = log.iter().rev().take(10).map(|x| x.1).sum::<f64>() / 10.0;
+            println!("  {label:<12} {tail:.4}");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Figures 3 + 7 — core-subnet selection dynamics: how often each
+//! neuron is selected during training, and how the distribution
+//! changes with the rank factor p.
+//!
+//! Expected shape vs the paper: a consistent head of frequently
+//! reselected neurons (smaller p sharpens the histogram) plus a long
+//! tail of transiently selected ones (the drift of Figure 3).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+
+use common::*;
+use losia::config::Method;
+use losia::data::domain::ModMath;
+use losia::util::table::{write_series_csv, Table};
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(200);
+    let ps = [0.25, 0.125];
+
+    let mut table = Table::new(
+        "Fig 7 — selection-frequency concentration by rank factor",
+        &[
+            "p",
+            "reselections",
+            "distinct neurons %",
+            "top-10% neuron share %",
+            "drift % (mean turnover)",
+        ],
+    );
+
+    for &p in &ps {
+        eprintln!("== p = {p} ==");
+        let mut tc = base_tc(&rt, Method::Losia, steps);
+        tc.rank_factor_override = Some(p);
+        tc.time_slot = (steps / 16).max(3);
+        let res = train_method(&rt, tc, &ModMath, 2000);
+        // focus on wv of layer 0 (the paper's proj_v)
+        let events: Vec<&(usize, usize, String, Vec<usize>, Vec<usize>)> =
+            res.selection_log
+                .iter()
+                .filter(|(_, l, k, _, _)| *l == 0 && k == "wv")
+                .collect();
+        let d = rt.cfg.d_model;
+        let mut freq: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut drift_sum = 0.0;
+        let mut prev: Option<&Vec<usize>> = None;
+        for (_, _, _, rho, _) in &events {
+            for &i in rho {
+                *freq.entry(i).or_default() += 1;
+            }
+            if let Some(pr) = prev {
+                let kept = rho.iter().filter(|i| pr.contains(i)).count();
+                drift_sum +=
+                    100.0 * (1.0 - kept as f64 / rho.len() as f64);
+            }
+            prev = Some(rho);
+        }
+        let reselections = events.len();
+        let distinct = freq.len();
+        let mut counts: Vec<usize> = freq.values().cloned().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = counts.iter().sum();
+        let top10 = counts
+            .iter()
+            .take((counts.len() / 10).max(1))
+            .sum::<usize>();
+        let drift = if reselections > 1 {
+            drift_sum / (reselections - 1) as f64
+        } else {
+            f64::NAN
+        };
+        table.row(&[
+            format!("{p}"),
+            reselections.to_string(),
+            format!("{:.1}", 100.0 * distinct as f64 / d as f64),
+            format!("{:.1}", 100.0 * top10 as f64 / total.max(1) as f64),
+            format!("{drift:.1}"),
+        ]);
+        // sorted frequency histogram (the black curve in Fig 7)
+        let rows: Vec<Vec<f64>> = counts
+            .iter()
+            .enumerate()
+            .map(|(rank, &c)| vec![rank as f64, c as f64])
+            .collect();
+        write_series_csv(
+            &format!("fig7_freq_p{}", (1.0 / p) as usize),
+            &["rank", "times_selected"],
+            &rows,
+        );
+    }
+    table.print();
+    table.write_csv("fig7_selection");
+}

@@ -1,0 +1,50 @@
+//! Table 11 (+ Table 15) — rank-factor robustness: accuracy and
+//! trainable-parameter counts across p ∈ {1/16, 1/8, 1/4, 1/2}.
+//!
+//! Uses the host-gather LoSiA path, whose subnet shapes are chosen at
+//! runtime (the Pro artifact bakes p at AOT time).
+//!
+//! Expected shape vs the paper: accuracy grows monotonically-ish with
+//! p; even p = 1/16 clears the untrained baseline.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::data::domain::ModMath;
+use losia::metrics::memory::losia_trainable_params;
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(150);
+    let ps = [1.0 / 16.0, 1.0 / 8.0, 1.0 / 4.0, 1.0 / 2.0];
+
+    let mut table = Table::new(
+        &format!(
+            "Table 11 — rank-factor robustness on {} ({} steps)",
+            rt.cfg.name, steps
+        ),
+        &["p", "#Trainable", "PPL-Acc%", "FinalLoss"],
+    );
+    for &p in &ps {
+        eprintln!("== p = {p} ==");
+        let mut tc = base_tc(&rt, Method::Losia, steps);
+        tc.rank_factor_override = Some(p);
+        let res = train_method(&rt, tc, &ModMath, 2000);
+        let acc =
+            eval_ppl(&rt, &res.state, &eval_items(&ModMath, 150, 9));
+        table.row(&[
+            format!("1/{}", (1.0 / p) as usize),
+            format!(
+                "{:.0}",
+                losia_trainable_params(&rt.cfg, p, rt.cfg.out_factor)
+            ),
+            format!("{acc:.2}"),
+            format!("{:.3}", res.final_loss),
+        ]);
+    }
+    table.print();
+    table.write_csv("table11_rankfactor");
+}

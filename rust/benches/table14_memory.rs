@@ -1,0 +1,136 @@
+//! Tables 14 + 15 — the analytic memory model, evaluated both on our
+//! bench config and on LLaMA-2 7B dimensions (d = 4096, ff = 11008,
+//! V = 32000, L = 32, bf16) so the numbers are directly comparable to
+//! the paper's.
+//!
+//! Expected shape: LoSiA's total sits near LoRA's and far below FFT;
+//! GaLore's auxiliary (projectors, 2LKRd·b) dominates its budget;
+//! LoSiA auxiliary is ONE layer's Ī/Ū (2Kd²b), eliminable under GL.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::collections::BTreeMap;
+
+use common::*;
+use losia::config::{KindDims, ModelCfg};
+use losia::metrics::memory as mm;
+use losia::util::table::Table;
+
+/// Construct a manifest-free ModelCfg with LLaMA-2 7B dimensions.
+fn llama7b() -> ModelCfg {
+    let (d, ff, v, l) = (4096usize, 11008usize, 32000usize, 32usize);
+    let kinds: BTreeMap<String, KindDims> = [
+        ("wq", (d, d)),
+        ("wk", (d, d)),
+        ("wv", (d, d)),
+        ("wo", (d, d)),
+        ("wgate", (d, ff)),
+        ("wup", (d, ff)),
+        ("wdown", (ff, d)),
+    ]
+    .into_iter()
+    .map(|(k, (n, m))| {
+        (
+            k.to_string(),
+            KindDims {
+                n,
+                m,
+                np: n / 8,
+                mp: m / 8,
+            },
+        )
+    })
+    .collect();
+    let per_layer = 4 * d * d + 3 * d * ff + 2 * d;
+    ModelCfg {
+        name: "llama2-7b".into(),
+        vocab: v,
+        d_model: d,
+        n_heads: 32,
+        d_ff: ff,
+        n_layers: l,
+        seq_len: 2048,
+        batch: 4,
+        rank_factor: 0.125,
+        out_factor: 0.125,
+        vocab_sub: v / 8,
+        lora_rank: 64,
+        lora_alpha: 128.0,
+        param_count: v * d + l * per_layer + d + d * v,
+        linear_kinds: [
+            "wq", "wk", "wv", "wo", "wgate", "wup", "wdown",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+        kinds,
+        params: Vec::new(),
+        artifacts: BTreeMap::new(),
+    }
+}
+
+fn gb(x: f64) -> String {
+    format!("{:.2}", x / 1e9)
+}
+
+fn main() {
+    let b = 2.0; // bf16, as in the paper's Table 14
+    let cfg = llama7b();
+
+    let rows: Vec<(&str, mm::MemoryBreakdown)> = vec![
+        ("LoRA r=64", mm::lora(&cfg, 64, b)),
+        ("GaLore R=512", mm::galore(&cfg, 512, b)),
+        ("LoSiA p=1/8", mm::losia(&cfg, 0.125, 0.125, b, false)),
+        ("LoSiA (GL)", mm::losia(&cfg, 0.125, 0.125, b, true)),
+        ("FFT", mm::fft(&cfg, b)),
+    ];
+    let mut table = Table::new(
+        "Table 14 — analytic memory (GB, LLaMA-2 7B dims, bf16)",
+        &["Method", "Trainable", "Optimizer", "Gradient", "Auxiliary", "Total"],
+    );
+    for (name, m) in &rows {
+        table.row(&[
+            name.to_string(),
+            gb(m.trainable),
+            gb(m.optimizer),
+            gb(m.gradient),
+            gb(m.auxiliary),
+            gb(m.total()),
+        ]);
+    }
+    table.print();
+    table.write_csv("table14_memory");
+
+    // Table 15 — LoSiA trainable params across (p, p_o) on LLaMA dims
+    let mut t15 = Table::new(
+        "Table 15 — LoSiA trainable parameters (M) on LLaMA-2 7B dims",
+        &["p_o \\ p", "1/16", "1/8", "1/4", "1/2"],
+    );
+    for (po_label, po) in [("1/8", 0.125), ("1", 1.0)] {
+        let mut row = vec![po_label.to_string()];
+        for p in [1.0 / 16.0, 0.125, 0.25, 0.5] {
+            let count = mm::losia_trainable_params(&cfg, p, po);
+            row.push(format!("{:.1}M", count / 1e6));
+        }
+        t15.row(&row);
+    }
+    t15.print();
+    t15.write_csv("table15_trainable");
+
+    // same model on the local bench config (sanity that formulas wire
+    // through the manifest-loaded config too)
+    let rt = runtime();
+    let mut local = Table::new(
+        &format!("Table 14 (local config {})", rt.cfg.name),
+        &["Method", "Total bytes"],
+    );
+    for m in table1_methods() {
+        local.row(&[
+            m.name().to_string(),
+            format!("{:.0}", memory_gb(&rt, m) * 1e9),
+        ]);
+    }
+    local.print();
+    local.write_csv("table14_local");
+}

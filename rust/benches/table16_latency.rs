@@ -1,0 +1,131 @@
+//! Table 16 — training-latency breakdown (µs/token): forward,
+//! backward, other, total — with and without gradient checkpointing
+//! (the remat artifact variants).
+//!
+//! Forward time is measured on `fwd_loss` (forward-only artifact);
+//! backward = grads-artifact time − forward time; "other" is the
+//! host-side coordinator cost (projector SVDs for GaLore, subnet
+//! gather/scatter + Adam for LoSiA, dense Adam for FFT).
+//!
+//! Expected shape vs the paper: LoSiA < LoRA < GaLore < DoRA in total;
+//! LoSiA-Pro's backward strictly below LoSiA's (p² gradient compute).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::coordinator::state::ModelState;
+use losia::coordinator::trainer::Trainer;
+use losia::data::domain::ModMath;
+use losia::data::{gen_train_set, Batcher};
+use losia::methods::{assemble_inputs, base_values};
+use losia::metrics::latency::time_fn;
+use losia::util::rng::Rng;
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let tokens = rt.cfg.tokens_per_step() as f64;
+    let reps = bench_steps(12);
+
+    let mut rng = Rng::new(7);
+    let state = ModelState::init(&rt.cfg, &mut rng);
+    let train = gen_train_set(&ModMath, 256, 1);
+    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+    let batch = b.next_batch();
+
+    // forward-only reference
+    let fwd_exe = rt.load("fwd_loss").unwrap();
+    let fwd = time_fn(2, reps, || {
+        let values = base_values(&state, &batch);
+        let _ = fwd_exe
+            .run(&assemble_inputs(fwd_exe.spec(), values))
+            .unwrap();
+    });
+    let fwd_us = fwd.mean_micros() / tokens;
+
+    for remat in [true, false] {
+        let mut table = Table::new(
+            &format!(
+                "Table 16 — latency µs/token ({} GC) on config {}",
+                if remat { "w/" } else { "w/o" },
+                rt.cfg.name
+            ),
+            &["Method", "Forward", "Backward", "Other", "Total"],
+        );
+        for method in table1_methods() {
+            // isolate per-method artifact stats (grads_full is shared)
+            for a in rt.cfg.artifacts.keys() {
+                if let Ok(e) = rt.load(a) {
+                    e.reset_stats();
+                }
+            }
+            // full end-to-end step through the real trainer
+            let mut tc = base_tc(&rt, method, reps);
+            tc.use_remat = remat;
+            tc.time_slot = 4; // include profiling + reselect cost
+            let mut rng = Rng::new(7);
+            let mut st = ModelState::init(&rt.cfg, &mut rng);
+            let train = gen_train_set(&ModMath, 256, 1);
+            let mut bt =
+                Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+            let mut tr = Trainer::new(&rt, tc).unwrap();
+            tr.train(&mut st, &mut bt).unwrap();
+            let total_us = tr.us_per_token();
+            // artifact-only time = grads executable mean
+            let grads_us = match method {
+                Method::LosiaPro => {
+                    let name = if remat {
+                        "grads_losia_remat"
+                    } else {
+                        "grads_losia"
+                    };
+                    rt.load(name).unwrap().mean_exec_secs() * 1e6
+                        / tokens
+                }
+                Method::Lora | Method::Pissa => {
+                    let name = if remat {
+                        "grads_lora_remat"
+                    } else {
+                        "grads_lora"
+                    };
+                    rt.load(name).unwrap().mean_exec_secs() * 1e6
+                        / tokens
+                }
+                Method::Dora => {
+                    let name = if remat {
+                        "grads_dora_remat"
+                    } else {
+                        "grads_dora"
+                    };
+                    rt.load(name).unwrap().mean_exec_secs() * 1e6
+                        / tokens
+                }
+                _ => {
+                    let name = if remat {
+                        "grads_full_remat"
+                    } else {
+                        "grads_full"
+                    };
+                    rt.load(name).unwrap().mean_exec_secs() * 1e6
+                        / tokens
+                }
+            };
+            let bwd_us = (grads_us - fwd_us).max(0.0);
+            let other_us = (total_us - grads_us).max(0.0);
+            table.row(&[
+                method.name().to_string(),
+                format!("{fwd_us:.2}"),
+                format!("{bwd_us:.2}"),
+                format!("{other_us:.2}"),
+                format!("{total_us:.2}"),
+            ]);
+        }
+        table.print();
+        table.write_csv(&format!(
+            "table16_latency_{}",
+            if remat { "gc" } else { "nogc" }
+        ));
+    }
+}

@@ -1,0 +1,57 @@
+//! Table 2 — PEFT comparison on the eight commonsense-analogue tasks
+//! (min-perplexity ACC, lm-eval-harness protocol).
+//!
+//! Expected shape vs the paper: LoSiA highest average; GaLore/LoRA
+//! trail; DoRA slowest wall-clock.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::data::commonsense::{suite, SUITE_NAMES};
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(120);
+    let tasks = suite();
+
+    let mut header: Vec<&str> =
+        vec!["Method", "Mem(GB)", "Time(s)"];
+    header.extend(SUITE_NAMES.iter());
+    header.push("Avg");
+    let mut table = Table::new(
+        &format!(
+            "Table 2 — commonsense tasks on config {} ({} steps each)",
+            rt.cfg.name, steps
+        ),
+        &header,
+    );
+
+    for method in table1_methods() {
+        eprintln!("== {} ==", method.name());
+        let mut cells = vec![
+            method.name().to_string(),
+            format!("{:.4}", memory_gb(&rt, method)),
+        ];
+        let t0 = std::time::Instant::now();
+        let mut accs = Vec::new();
+        for task in &tasks {
+            let tc = base_tc(&rt, method, steps);
+            let res = train_method(&rt, tc, task.as_ref(), 1500);
+            let items = eval_items(task.as_ref(), 120, 5);
+            accs.push(eval_ppl(&rt, &res.state, &items));
+        }
+        cells.push(format!("{:.1}", t0.elapsed().as_secs_f64()));
+        for a in &accs {
+            cells.push(format!("{a:.1}"));
+        }
+        cells.push(format!(
+            "{:.2}",
+            accs.iter().sum::<f64>() / accs.len() as f64
+        ));
+        table.row(&cells);
+    }
+    table.print();
+    table.write_csv("table2_commonsense");
+}

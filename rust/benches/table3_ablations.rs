@@ -1,0 +1,82 @@
+//! Table 3 (+ Table 12) — LoSiA ablations: synchronous localization
+//! (SL), gradient-based importance (GL), no rewarm-up (WDS), full
+//! fine-tuned output layer (FFTO), no re-localization (ReLO).
+//!
+//! Expected shape vs the paper: vanilla best on average; ReLO and WDS
+//! clearly worse; GL close with category skew (Table 12 breakdown).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::data::domain::{KvFacts, ModMath};
+use losia::eval::ppl_accuracy_by_category;
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(150);
+    let kv = KvFacts::new(48, 4, 7);
+
+    let variants =
+        ["Vanilla", "SL", "GL", "WDS", "FFTO", "ReLO"];
+    let mut table = Table::new(
+        &format!(
+            "Table 3 — LoSiA ablations on config {} ({steps} steps)",
+            rt.cfg.name
+        ),
+        &["Variant", "math", "knowledge", "Avg"],
+    );
+    let mut t12 = Table::new(
+        "Table 12 — knowledge category breakdown (Vanilla vs GL)",
+        &["Variant", "humanities", "stem", "social", "other", "Avg"],
+    );
+
+    for name in variants {
+        eprintln!("== {name} ==");
+        // SL + FFTO need full gradients → plain LoSiA; rest use Pro.
+        let method = if matches!(name, "SL" | "FFTO") {
+            Method::Losia
+        } else {
+            Method::LosiaPro
+        };
+        let mut tc = base_tc(&rt, method, steps);
+        tc.ablation = ablation(name);
+        let res_math = train_method(&rt, tc.clone(), &ModMath, 2000);
+        let math = eval_ppl(
+            &rt,
+            &res_math.state,
+            &eval_items(&ModMath, 150, 9),
+        );
+        let res_kv = train_method(&rt, tc, &kv, 2000);
+        let kv_items = eval_items(&kv, 150, 9);
+        let by = ppl_accuracy_by_category(&rt, &res_kv.state, &kv_items)
+            .unwrap();
+        let know = by["__all__"];
+        table.row(&[
+            name.to_string(),
+            format!("{math:.2}"),
+            format!("{know:.2}"),
+            format!("{:.2}", (math + know) / 2.0),
+        ]);
+        if matches!(name, "Vanilla" | "GL") {
+            let mut row = vec![name.to_string()];
+            let mut vals = Vec::new();
+            for cat in ["humanities", "stem", "social", "other"] {
+                let v = by.get(cat).copied().unwrap_or(f64::NAN);
+                vals.push(v);
+                row.push(format!("{v:.2}"));
+            }
+            row.push(format!(
+                "{:.2}",
+                vals.iter().sum::<f64>() / vals.len() as f64
+            ));
+            t12.row(&row);
+        }
+    }
+    table.print();
+    table.write_csv("table3_ablations");
+    t12.print();
+    t12.write_csv("table12_categories");
+}

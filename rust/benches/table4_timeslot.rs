@@ -1,0 +1,59 @@
+//! Table 4 — robustness of the time slot T across data scales.
+//!
+//! Trains LoSiA-Pro on modmath at three corpus sizes × a T sweep, with
+//! a LoRA reference row. Expected shape vs the paper: LoSiA beats LoRA
+//! across scales; the best T grows with the data scale; extreme T
+//! degrades.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::data::domain::ModMath;
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(160);
+    let scales = [600usize, 1200, 2400];
+    let slots = [5usize, 10, 20, 40, 80];
+
+    let mut table = Table::new(
+        &format!(
+            "Table 4 — time slot T vs data scale ({} steps, config {})",
+            steps, rt.cfg.name
+        ),
+        &["Method/T", "@600", "@1200", "@2400"],
+    );
+
+    // LoRA reference
+    let mut row = vec!["LoRA".to_string()];
+    for &n in &scales {
+        let tc = base_tc(&rt, Method::Lora, steps);
+        let res = train_method(&rt, tc, &ModMath, n);
+        let acc =
+            eval_ppl(&rt, &res.state, &eval_items(&ModMath, 150, 9));
+        row.push(format!("{acc:.2}"));
+    }
+    table.row(&row);
+
+    for &t_slot in &slots {
+        eprintln!("== T = {t_slot} ==");
+        let mut row = vec![format!("LoSiA T={t_slot}")];
+        for &n in &scales {
+            let mut tc = base_tc(&rt, Method::LosiaPro, steps);
+            tc.time_slot = t_slot;
+            let res = train_method(&rt, tc, &ModMath, n);
+            let acc = eval_ppl(
+                &rt,
+                &res.state,
+                &eval_items(&ModMath, 150, 9),
+            );
+            row.push(format!("{acc:.2}"));
+        }
+        table.row(&row);
+    }
+    table.print();
+    table.write_csv("table4_timeslot");
+}

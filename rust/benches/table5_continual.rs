@@ -1,0 +1,109 @@
+//! Table 5 (+ Table 13) — continual learning: Seq-LoRA vs Seq-LoSiA
+//! through five commonsense-analogue tasks, reporting AP / FWT / BWT.
+//!
+//! Expected shape vs the paper: Seq-LoSiA higher AP and much less
+//! negative BWT (less forgetting); FWT comparable.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::coordinator::state::ModelState;
+use losia::coordinator::trainer::Trainer;
+use losia::data::commonsense::{suite, SUITE_NAMES};
+use losia::data::{gen_train_set, Batcher, Task};
+use losia::eval::{
+    average_performance, backward_transfer, forward_transfer,
+};
+use losia::util::rng::Rng;
+use losia::util::table::Table;
+
+/// HellaSwag, PIQA, BoolQ, SIQA, WinoGrande analogues.
+const SEQ: [usize; 5] = [2, 4, 7, 6, 3];
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(100);
+    let tasks = suite();
+    let seq: Vec<&dyn Task> =
+        SEQ.iter().map(|&i| tasks[i].as_ref()).collect();
+    let evals: Vec<_> = (0..seq.len())
+        .map(|i| eval_items(seq[i], 120, 100 + i as u64))
+        .collect();
+
+    let mut summary = Table::new(
+        "Table 5 — continual learning",
+        &["Method", "AP(↑)", "FWT(↑)", "BWT(↑)"],
+    );
+
+    for method in [Method::Lora, Method::LosiaPro] {
+        eprintln!("== Seq-{} ==", method.name());
+        // single-task references
+        let mut single = Vec::new();
+        for (i, task) in seq.iter().enumerate() {
+            let tc = base_tc(&rt, method, steps);
+            let mut rng = Rng::new(7);
+            let mut state = ModelState::init(&rt.cfg, &mut rng);
+            let train = gen_train_set(*task, 1500, 50 + i as u64);
+            let mut b = Batcher::new(
+                train,
+                rt.cfg.batch,
+                rt.cfg.seq_len,
+                1,
+            );
+            let mut tr = Trainer::new(&rt, tc).unwrap();
+            tr.train(&mut state, &mut b).unwrap();
+            single.push(eval_ppl(&rt, &state, &evals[i]));
+        }
+        // sequential adaptation
+        let mut rng = Rng::new(7);
+        let mut state = ModelState::init(&rt.cfg, &mut rng);
+        let mut perf = Vec::new();
+        for (i, task) in seq.iter().enumerate() {
+            let tc = base_tc(&rt, method, steps);
+            let train = gen_train_set(*task, 1500, 50 + i as u64);
+            let mut b = Batcher::new(
+                train,
+                rt.cfg.batch,
+                rt.cfg.seq_len,
+                1,
+            );
+            let mut tr = Trainer::new(&rt, tc).unwrap();
+            tr.train(&mut state, &mut b).unwrap();
+            perf.push(
+                evals
+                    .iter()
+                    .map(|e| eval_ppl(&rt, &state, e))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        // Table 13 detail
+        let mut detail = Table::new(
+            &format!("Table 13 — Seq-{} stage detail", method.name()),
+            &["task", "#1", "#2", "#3", "#4", "#5", "ST"],
+        );
+        for (j, &ti) in SEQ.iter().enumerate() {
+            let mut row = vec![SUITE_NAMES[ti].to_string()];
+            for stage in &perf {
+                row.push(format!("{:.1}", stage[j]));
+            }
+            row.push(format!("{:.1}", single[j]));
+            detail.row(&row);
+        }
+        detail.print();
+        detail.write_csv(&format!(
+            "table13_seq_{}",
+            method.name().to_lowercase().replace('-', "")
+        ));
+
+        summary.row(&[
+            format!("Seq-{}", method.name()),
+            format!("{:.2}", average_performance(&perf)),
+            format!("{:.2}", forward_transfer(&perf, &single)),
+            format!("{:.2}", backward_transfer(&perf)),
+        ]);
+    }
+    summary.print();
+    summary.write_csv("table5_continual");
+}

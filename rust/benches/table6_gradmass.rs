@@ -1,0 +1,86 @@
+//! Table 6 — sum of absolute gradient values captured by each
+//! selection pattern (Random / core-Subnet / ideal Top-K) per module
+//! and layer depth.
+//!
+//! Expected shape vs the paper: Subnet ≫ Random and approaches the
+//! ideal (unstructured) Top-K bound; v/o/up/down carry more mass than
+//! q/k.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::*;
+use losia::config::Method;
+use losia::coordinator::localize::{localize, topk_mass, Selection};
+use losia::data::domain::ModMath;
+use losia::data::{gen_train_set, Batcher};
+use losia::methods::{assemble_inputs, base_values};
+use losia::tensor::Tensor;
+use losia::util::rng::Rng;
+use losia::util::table::Table;
+
+fn main() {
+    let rt = runtime();
+    let steps = bench_steps(40);
+
+    // briefly train with FFT so gradients reflect a mid-training model
+    let tc = base_tc(&rt, Method::Fft, steps);
+    let res = train_method(&rt, tc, &ModMath, 1000);
+    let state = res.state;
+
+    // one full-gradient evaluation
+    let exe = rt.load("grads_full").unwrap();
+    let train = gen_train_set(&ModMath, 64, 123);
+    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 3);
+    let batch = b.next_batch();
+    let values = base_values(&state, &batch);
+    let out = exe.run(&assemble_inputs(exe.spec(), values)).unwrap();
+    let mut grads = std::collections::BTreeMap::new();
+    for (spec, t) in exe.spec().outputs[1..].iter().zip(&out[1..]) {
+        grads.insert(
+            spec.name.strip_prefix("g_").unwrap().to_string(),
+            t.clone(),
+        );
+    }
+
+    let p = rt.cfg.rank_factor;
+    let mut table = Table::new(
+        &format!(
+            "Table 6 — |grad| mass by selection pattern (p = {p}, ×10³)"
+        ),
+        &["Layer", "Module", "Total", "Random", "Subnet", "Top-K"],
+    );
+    let mut rng = Rng::new(5);
+    let layers: Vec<usize> = if rt.cfg.n_layers >= 3 {
+        vec![0, rt.cfg.n_layers / 2, rt.cfg.n_layers - 1]
+    } else {
+        (0..rt.cfg.n_layers).collect()
+    };
+    for &l in &layers {
+        for kind in &rt.cfg.linear_kinds {
+            let kd = rt.cfg.kind(kind);
+            let g = grads[kind].index_axis0(l);
+            let abs = Tensor {
+                shape: g.shape.clone(),
+                data: g.data.iter().map(|x| x.abs()).collect(),
+            };
+            let total = abs.abs_sum();
+            let rand_sel = Selection::random(
+                kd.n, kd.m, kd.np, kd.mp, &mut rng,
+            );
+            let random = rand_sel.score(&abs);
+            let subnet = localize(&abs, kd.np, kd.mp).score(&abs);
+            let ideal = topk_mass(&abs, kd.np * kd.mp);
+            table.row(&[
+                l.to_string(),
+                kind.clone(),
+                format!("{:.2}", total * 1e3),
+                format!("{:.2}", random * 1e3),
+                format!("{:.2}", subnet * 1e3),
+                format!("{:.2}", ideal * 1e3),
+            ]);
+        }
+    }
+    table.print();
+    table.write_csv("table6_gradmass");
+}

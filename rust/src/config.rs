@@ -1,0 +1,360 @@
+//! Training configuration: model manifest (produced by `aot.py`) plus
+//! run hyperparameters (method, rank factor, time slot, LR schedule).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Per-kind linear-layer dimensions (n = in, m = out) and subnet dims.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KindDims {
+    pub n: usize,
+    pub m: usize,
+    pub np: usize,
+    pub mp: usize,
+}
+
+/// Tensor spec from the artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered artifact: HLO file + typed I/O signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Static model configuration mirrored from `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub rank_factor: f64,
+    pub out_factor: f64,
+    pub vocab_sub: usize,
+    pub lora_rank: usize,
+    pub lora_alpha: f64,
+    pub param_count: usize,
+    pub linear_kinds: Vec<String>,
+    pub kinds: BTreeMap<String, KindDims>,
+    /// canonical parameter ABI order: (name, shape)
+    pub params: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ModelCfg {
+    pub fn kind(&self, kind: &str) -> KindDims {
+        *self
+            .kinds
+            .get(kind)
+            .unwrap_or_else(|| panic!("unknown linear kind {kind:?}"))
+    }
+
+    pub fn artifact(&self, name: &str) -> &ArtifactSpec {
+        self.artifacts.get(name).unwrap_or_else(|| {
+            panic!(
+                "artifact {name:?} not in manifest for config {:?} \
+                 (have: {:?})",
+                self.name,
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn param_shape(&self, name: &str) -> &[usize] {
+        &self
+            .params
+            .iter()
+            .find(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown param {name:?}"))
+            .1
+    }
+
+    /// Tokens per training step (batch × seq), for µs/token metrics.
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq_len
+    }
+}
+
+/// Load the manifest and return the named model config.
+pub fn load_manifest(artifacts_dir: &Path, config: &str) -> Result<ModelCfg> {
+    let mpath = artifacts_dir.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("reading {}", mpath.display()))?;
+    let root = json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+    let cfgs = root.at("configs");
+    let Some(c) = cfgs.get(config) else {
+        bail!(
+            "config {config:?} not in manifest (have {:?}); \
+             run `make artifacts`",
+            cfgs.as_obj().keys().collect::<Vec<_>>()
+        );
+    };
+    parse_config(c, artifacts_dir)
+}
+
+fn parse_spec(j: &Json) -> TensorSpec {
+    TensorSpec {
+        name: j.at("name").as_str().to_string(),
+        shape: j.at("shape").as_arr().iter().map(|v| v.as_usize()).collect(),
+        dtype: match j.at("dtype").as_str() {
+            "i32" => Dtype::I32,
+            _ => Dtype::F32,
+        },
+    }
+}
+
+fn parse_config(c: &Json, artifacts_dir: &Path) -> Result<ModelCfg> {
+    let mut kinds = BTreeMap::new();
+    for (k, v) in c.at("kinds").as_obj() {
+        kinds.insert(
+            k.clone(),
+            KindDims {
+                n: v.at("n").as_usize(),
+                m: v.at("m").as_usize(),
+                np: v.at("np").as_usize(),
+                mp: v.at("mp").as_usize(),
+            },
+        );
+    }
+    let mut artifacts = BTreeMap::new();
+    for (k, v) in c.at("artifacts").as_obj() {
+        artifacts.insert(
+            k.clone(),
+            ArtifactSpec {
+                name: k.clone(),
+                file: artifacts_dir.join(v.at("file").as_str()),
+                inputs: v.at("inputs").as_arr().iter().map(parse_spec).collect(),
+                outputs: v
+                    .at("outputs")
+                    .as_arr()
+                    .iter()
+                    .map(parse_spec)
+                    .collect(),
+            },
+        );
+    }
+    Ok(ModelCfg {
+        name: c.at("name").as_str().to_string(),
+        vocab: c.at("vocab").as_usize(),
+        d_model: c.at("d_model").as_usize(),
+        n_heads: c.at("n_heads").as_usize(),
+        d_ff: c.at("d_ff").as_usize(),
+        n_layers: c.at("n_layers").as_usize(),
+        seq_len: c.at("seq_len").as_usize(),
+        batch: c.at("batch").as_usize(),
+        rank_factor: c.at("rank_factor").as_f64(),
+        out_factor: c.at("out_factor").as_f64(),
+        vocab_sub: c.at("vocab_sub").as_usize(),
+        lora_rank: c.at("lora_rank").as_usize(),
+        lora_alpha: c.at("lora_alpha").as_f64(),
+        param_count: c.at("param_count").as_usize(),
+        linear_kinds: c
+            .at("linear_kinds")
+            .as_arr()
+            .iter()
+            .map(|v| v.as_str().to_string())
+            .collect(),
+        kinds,
+        params: c
+            .at("params")
+            .as_arr()
+            .iter()
+            .map(|p| {
+                (
+                    p.at("name").as_str().to_string(),
+                    p.at("shape")
+                        .as_arr()
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect(),
+                )
+            })
+            .collect(),
+        artifacts,
+    })
+}
+
+/// Fine-tuning method selector (paper Table 1 row set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// full-parameter fine-tuning
+    Fft,
+    /// LoRA (Hu et al. 2022)
+    Lora,
+    /// PiSSA: LoRA with principal-singular-vector init
+    Pissa,
+    /// DoRA: magnitude/direction decomposition
+    Dora,
+    /// GaLore: low-rank gradient projection
+    Galore,
+    /// LoSiA: subnet localization, full-grad backward (gather on host)
+    Losia,
+    /// LoSiA-Pro: factorized subnet gradients via the Pallas kernel
+    LosiaPro,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fft" | "full" => Method::Fft,
+            "lora" => Method::Lora,
+            "pissa" => Method::Pissa,
+            "dora" => Method::Dora,
+            "galore" => Method::Galore,
+            "losia" => Method::Losia,
+            "losia-pro" | "losiapro" | "losia_pro" => Method::LosiaPro,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Fft => "FFT",
+            Method::Lora => "LoRA",
+            Method::Pissa => "PiSSA",
+            Method::Dora => "DoRA",
+            Method::Galore => "GaLore",
+            Method::Losia => "LoSiA",
+            Method::LosiaPro => "LoSiA-Pro",
+        }
+    }
+}
+
+/// Ablation switches from paper Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Ablation {
+    /// SL: synchronous localization — every layer reselects at the same
+    /// step instead of the staggered async timeline.
+    pub synchronous: bool,
+    /// GL: gradient-magnitude importance instead of sensitivity EMA.
+    pub gradient_importance: bool,
+    /// WDS: disable learning-rate rewarming after reselection.
+    pub no_rewarm: bool,
+    /// FFTO: fully fine-tune lm_head instead of the p_o subnet.
+    pub fft_output: bool,
+    /// ReLO: never re-localize (freeze the initial subnet).
+    pub no_relocalize: bool,
+}
+
+/// Full run configuration for the trainer.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub steps: usize,
+    pub lr: f64,
+    /// warmup fraction of total steps (paper: 0.1)
+    pub warmup_ratio: f64,
+    /// LoSiA time slot T (steps per layer-profiling window)
+    pub time_slot: usize,
+    /// EMA factors β1 = β2 for sensitivity importance (paper: 0.85)
+    pub ema_beta: f64,
+    /// Adam moment decay rates
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    /// GaLore projection rank R and projector refresh period
+    pub galore_rank: usize,
+    pub galore_period: usize,
+    pub ablation: Ablation,
+    pub seed: u64,
+    /// log loss every N steps (0 = never)
+    pub log_every: usize,
+    /// use the gradient-checkpointed (remat) artifact variants
+    pub use_remat: bool,
+    /// Override the manifest rank factor p (Table 11 sweep). Only the
+    /// host-gather LoSiA path supports this — the Pro artifact's
+    /// subnet shapes are baked at AOT time.
+    pub rank_factor_override: Option<f64>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            method: Method::LosiaPro,
+            steps: 100,
+            lr: 6e-5,
+            warmup_ratio: 0.1,
+            time_slot: 20,
+            ema_beta: 0.85,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            adam_eps: 1e-8,
+            galore_rank: 32,
+            galore_period: 40,
+            ablation: Ablation::default(),
+            seed: 42,
+            log_every: 0,
+            use_remat: false,
+            rank_factor_override: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [
+            Method::Fft,
+            Method::Lora,
+            Method::Pissa,
+            Method::Dora,
+            Method::Galore,
+            Method::Losia,
+            Method::LosiaPro,
+        ] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_loads_tiny() {
+        let dir = crate::runtime::artifacts_dir();
+        let cfg = load_manifest(&dir, "tiny").expect("tiny manifest");
+        assert_eq!(cfg.n_layers, 2);
+        assert_eq!(cfg.linear_kinds.len(), 7);
+        let kd = cfg.kind("wq");
+        assert_eq!(kd.n, cfg.d_model);
+        assert_eq!(kd.np, (cfg.d_model as f64 * cfg.rank_factor) as usize);
+        assert!(cfg.has_artifact("grads_losia"));
+        let a = cfg.artifact("fwd_logits");
+        assert_eq!(a.outputs[0].shape, vec![cfg.batch, cfg.seq_len, cfg.vocab]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Sensitivity-based parameter importance (paper §3.2, Eqs. 3–6).
+//!
+//! During a layer's profiling slot the trainer feeds each micro-batch
+//! gradient here; the accumulator maintains the smoothed sensitivity
+//! Ī and uncertainty Ū, whose product is the localization score
+//! (mirrors the L1 `importance.py` kernel — the host copy exists so
+//! importance state lives beside the optimizer without an extra PJRT
+//! round-trip per matrix).
+
+use crate::tensor::Tensor;
+
+/// Importance mode: sensitivity EMA (LoSiA) or raw gradient magnitude
+/// (the GL ablation from Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImportanceMode {
+    Sensitivity,
+    GradientMagnitude,
+}
+
+/// Per-matrix accumulator for one profiling window.
+#[derive(Debug, Clone)]
+pub struct ImportanceAccum {
+    pub mode: ImportanceMode,
+    pub beta1: f32,
+    pub beta2: f32,
+    /// Ī — smoothed sensitivity (Eq. 4)
+    pub i_bar: Tensor,
+    /// Ū — uncertainty (Eq. 5)
+    pub u_bar: Tensor,
+    pub updates: usize,
+}
+
+impl ImportanceAccum {
+    pub fn new(
+        shape: &[usize],
+        beta1: f32,
+        beta2: f32,
+        mode: ImportanceMode,
+    ) -> Self {
+        ImportanceAccum {
+            mode,
+            beta1,
+            beta2,
+            i_bar: Tensor::zeros(shape),
+            u_bar: Tensor::zeros(shape),
+            updates: 0,
+        }
+    }
+
+    /// Micro-batch importance I (Eq. 3 in Algorithm-2 form):
+    /// `I = |w·g − ½(w·g)²|`, or `|g|` in gradient mode.
+    fn micro_importance(&self, w: f32, g: f32) -> f32 {
+        match self.mode {
+            ImportanceMode::Sensitivity => {
+                let wg = w * g;
+                (wg - 0.5 * wg * wg).abs()
+            }
+            ImportanceMode::GradientMagnitude => g.abs(),
+        }
+    }
+
+    /// Fold one micro-batch gradient into the EMA state (Eqs. 4–5).
+    pub fn update(&mut self, w: &Tensor, g: &Tensor) {
+        assert_eq!(w.shape, g.shape, "importance: W/G shape mismatch");
+        assert_eq!(w.shape, self.i_bar.shape);
+        let (b1, b2) = (self.beta1, self.beta2);
+        for k in 0..w.data.len() {
+            let imp = self.micro_importance(w.data[k], g.data[k]);
+            let i_new = b1 * self.i_bar.data[k] + (1.0 - b1) * imp;
+            let u_new = b2 * self.u_bar.data[k]
+                + (1.0 - b2) * (imp - i_new).abs();
+            self.i_bar.data[k] = i_new;
+            self.u_bar.data[k] = u_new;
+        }
+        self.updates += 1;
+    }
+
+    /// Localization score s(W) = Ī · Ū (Eq. 6); gradient mode scores by
+    /// Ī alone (accumulated |g|).
+    pub fn score(&self) -> Tensor {
+        match self.mode {
+            ImportanceMode::Sensitivity => Tensor {
+                shape: self.i_bar.shape.clone(),
+                data: self
+                    .i_bar
+                    .data
+                    .iter()
+                    .zip(&self.u_bar.data)
+                    .map(|(i, u)| i * u)
+                    .collect(),
+            },
+            ImportanceMode::GradientMagnitude => self.i_bar.clone(),
+        }
+    }
+
+    /// Memory footprint in bytes (Table 14 §Auxiliary accounting).
+    pub fn bytes(&self) -> usize {
+        (self.i_bar.len() + self.u_bar.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn first_update_from_zero_state() {
+        // Ī₁ = (1-β₁)·I₁ and Ū₁ = (1-β₂)·|I₁ - Ī₁| = (1-β₂)β₁·I₁
+        let w = Tensor::from_vec(&[1, 2], vec![2.0, -1.0]);
+        let g = Tensor::from_vec(&[1, 2], vec![0.5, 0.25]);
+        let mut acc = ImportanceAccum::new(
+            &[1, 2],
+            0.85,
+            0.85,
+            ImportanceMode::Sensitivity,
+        );
+        acc.update(&w, &g);
+        let i1 = |w: f32, g: f32| {
+            let wg = w * g;
+            (wg - 0.5 * wg * wg).abs()
+        };
+        for k in 0..2 {
+            let imp = i1(w.data[k], g.data[k]);
+            assert!((acc.i_bar.data[k] - 0.15 * imp).abs() < 1e-6);
+            assert!(
+                (acc.u_bar.data[k] - 0.15 * (imp - 0.15 * imp).abs())
+                    .abs()
+                    < 1e-6
+            );
+        }
+    }
+
+    #[test]
+    fn scores_nonnegative_and_bounded() {
+        check("score >= 0, EMA bounded by max importance", 30, |g| {
+            let n = g.size(1, 16);
+            let m = g.size(1, 16);
+            let mut acc = ImportanceAccum::new(
+                &[n, m],
+                0.85,
+                0.85,
+                ImportanceMode::Sensitivity,
+            );
+            let steps = g.size(1, 10);
+            let mut max_imp = 0.0f32;
+            for _ in 0..steps {
+                let w =
+                    Tensor::from_vec(&[n, m], g.normal_vec(n * m, 1.0));
+                let gr =
+                    Tensor::from_vec(&[n, m], g.normal_vec(n * m, 1.0));
+                for k in 0..n * m {
+                    let wg = w.data[k] * gr.data[k];
+                    max_imp = max_imp.max((wg - 0.5 * wg * wg).abs());
+                }
+                acc.update(&w, &gr);
+            }
+            let s = acc.score();
+            for &v in &s.data {
+                assert!(v >= 0.0);
+            }
+            for &v in &acc.i_bar.data {
+                assert!(v <= max_imp + 1e-5, "EMA exceeded max: {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn gradient_mode_ignores_weights() {
+        let w1 = Tensor::from_vec(&[1, 1], vec![100.0]);
+        let w2 = Tensor::from_vec(&[1, 1], vec![0.0]);
+        let g = Tensor::from_vec(&[1, 1], vec![0.3]);
+        let mut a1 = ImportanceAccum::new(
+            &[1, 1],
+            0.85,
+            0.85,
+            ImportanceMode::GradientMagnitude,
+        );
+        let mut a2 = a1.clone();
+        a1.update(&w1, &g);
+        a2.update(&w2, &g);
+        assert_eq!(a1.score().data, a2.score().data);
+    }
+
+    #[test]
+    fn constant_importance_converges() {
+        // Feeding the same (w, g) repeatedly: Ī → I, Ū → |I - Ī| → 0.
+        let w = Tensor::from_vec(&[1, 1], vec![0.8]);
+        let g = Tensor::from_vec(&[1, 1], vec![0.4]);
+        let mut acc = ImportanceAccum::new(
+            &[1, 1],
+            0.85,
+            0.85,
+            ImportanceMode::Sensitivity,
+        );
+        for _ in 0..400 {
+            acc.update(&w, &g);
+        }
+        let wg = 0.8f32 * 0.4;
+        let imp = (wg - 0.5 * wg * wg).abs();
+        assert!((acc.i_bar.data[0] - imp).abs() < 1e-4);
+        assert!(acc.u_bar.data[0] < 1e-3);
+    }
+}

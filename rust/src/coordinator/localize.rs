@@ -1,0 +1,235 @@
+//! Core-subnet localization (paper §3.2, Algorithm 1, Appendix A.1.3).
+//!
+//! Given an importance matrix `s ∈ R^{n×m}` and rank factor `p`, find
+//! input/output neuron sets (ρ, γ) with |ρ| = ⌊np⌋, |γ| = ⌊mp⌋
+//! maximizing `s(S) = Σ_{i∈ρ} Σ_{j∈γ} s_ij` (Eq. 7). Exact optimization
+//! is NP-hard (reduction from Maximum Clique — Appendix A.1.3), so two
+//! greedy passes are run and the better one kept:
+//!
+//! * **Row2Column**: lock the ⌊np⌋ rows with the largest row sums, then
+//!   keep the ⌊mp⌋ columns with the largest residual mass in those rows.
+//! * **Column2Row**: the symmetric order.
+
+use crate::tensor::select::topk_indices_fast;
+use crate::tensor::Tensor;
+
+/// A localized subnet: selected input neurons ρ and output neurons γ.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Selection {
+    pub rho: Vec<usize>,
+    pub gamma: Vec<usize>,
+}
+
+impl Selection {
+    /// Random selection (used at step 0, Algorithm 2 line 3).
+    pub fn random(
+        n: usize,
+        m: usize,
+        np: usize,
+        mp: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Selection {
+        Selection {
+            rho: rng.choose_distinct(n, np),
+            gamma: rng.choose_distinct(m, mp),
+        }
+    }
+
+    /// Subnet importance s(S) — Eq. 7.
+    pub fn score(&self, s: &Tensor) -> f64 {
+        let (_, m) = s.dims2();
+        let mut total = 0.0f64;
+        for &i in &self.rho {
+            let row = &s.data[i * m..(i + 1) * m];
+            for &j in &self.gamma {
+                total += row[j] as f64;
+            }
+        }
+        total
+    }
+}
+
+/// Row-major greedy policy (Algorithm 1).
+pub fn row2column(s: &Tensor, np: usize, mp: usize) -> Selection {
+    let (_, m) = s.dims2();
+    let rho = topk_indices_fast(&s.row_sums(), np);
+    // residual mass per column restricted to the locked rows
+    let mut col_mass = vec![0.0f32; m];
+    for &i in &rho {
+        let row = &s.data[i * m..(i + 1) * m];
+        for j in 0..m {
+            col_mass[j] += row[j];
+        }
+    }
+    let gamma = topk_indices_fast(&col_mass, mp);
+    Selection { rho, gamma }
+}
+
+/// Column-major greedy policy (the symmetric variant).
+pub fn column2row(s: &Tensor, np: usize, mp: usize) -> Selection {
+    let (n, m) = s.dims2();
+    let gamma = topk_indices_fast(&s.col_sums(), mp);
+    let mut row_mass = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &s.data[i * m..(i + 1) * m];
+        for &j in &gamma {
+            row_mass[i] += row[j];
+        }
+    }
+    let rho = topk_indices_fast(&row_mass, np);
+    Selection { rho, gamma }
+}
+
+/// Run both greedy policies and keep the higher-scoring subnet
+/// (Algorithm 2 lines 27–31).
+pub fn localize(s: &Tensor, np: usize, mp: usize) -> Selection {
+    let a = row2column(s, np, mp);
+    let b = column2row(s, np, mp);
+    if a.score(s) >= b.score(s) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Output-layer localization (§3.2 "Dimensionality Reduction"): all
+/// input neurons, top-⌊p_o·V⌋ output columns by column importance.
+pub fn localize_columns(col_importance: &[f32], k: usize) -> Vec<usize> {
+    topk_indices_fast(col_importance, k)
+}
+
+/// Ideal (unstructured) Top-K mass — the upper bound from Table 6.
+pub fn topk_mass(s: &Tensor, k: usize) -> f64 {
+    let mut vals: Vec<f32> = s.data.clone();
+    vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    vals.iter().take(k).map(|&v| v as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn planted_matrix(
+        n: usize,
+        m: usize,
+        rho: &[usize],
+        gamma: &[usize],
+        rng: &mut Rng,
+    ) -> Tensor {
+        // background noise + strong block on (rho × gamma)
+        let mut s = Tensor::zeros(&[n, m]);
+        for v in s.data.iter_mut() {
+            *v = rng.uniform() * 0.1;
+        }
+        for &i in rho {
+            for &j in gamma {
+                s.data[i * m + j] = 10.0 + rng.uniform();
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn recovers_planted_subnet() {
+        check("planted block is found exactly", 50, |g| {
+            let n = g.size(8, 48);
+            let m = g.size(8, 48);
+            let np = g.size(1, n / 2);
+            let mp = g.size(1, m / 2);
+            let mut rng = g.rng();
+            let rho_true = rng.choose_distinct(n, np);
+            let gamma_true = rng.choose_distinct(m, mp);
+            let s = planted_matrix(n, m, &rho_true, &gamma_true, &mut rng);
+            let sel = localize(&s, np, mp);
+            let mut want_r = rho_true.clone();
+            let mut got_r = sel.rho.clone();
+            want_r.sort_unstable();
+            got_r.sort_unstable();
+            assert_eq!(got_r, want_r, "rows");
+            let mut want_c = gamma_true.clone();
+            let mut got_c = sel.gamma.clone();
+            want_c.sort_unstable();
+            got_c.sort_unstable();
+            assert_eq!(got_c, want_c, "cols");
+        });
+    }
+
+    #[test]
+    fn respects_cardinality_budget() {
+        check("|rho| = np, |gamma| = mp, all distinct", 50, |g| {
+            let n = g.size(2, 64);
+            let m = g.size(2, 64);
+            let np = g.size(1, n);
+            let mp = g.size(1, m);
+            let s = Tensor::from_vec(
+                &[n, m],
+                g.positive_vec(n * m),
+            );
+            let sel = localize(&s, np, mp);
+            assert_eq!(sel.rho.len(), np);
+            assert_eq!(sel.gamma.len(), mp);
+            let mut r = sel.rho.clone();
+            r.sort_unstable();
+            r.dedup();
+            assert_eq!(r.len(), np);
+            assert!(r.iter().all(|&i| i < n));
+            let mut c = sel.gamma.clone();
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), mp);
+            assert!(c.iter().all(|&j| j < m));
+        });
+    }
+
+    #[test]
+    fn beats_random_selection() {
+        check("greedy >= random score", 50, |g| {
+            let n = g.size(4, 64);
+            let m = g.size(4, 64);
+            let np = g.size(1, n);
+            let mp = g.size(1, m);
+            let s = Tensor::from_vec(&[n, m], g.positive_vec(n * m));
+            let sel = localize(&s, np, mp);
+            let mut rng = g.rng();
+            let rand = Selection::random(n, m, np, mp, &mut rng);
+            assert!(sel.score(&s) >= rand.score(&s) - 1e-6);
+        });
+    }
+
+    #[test]
+    fn bounded_by_ideal_topk() {
+        check("subnet mass <= ideal topk mass", 50, |g| {
+            let n = g.size(2, 32);
+            let m = g.size(2, 32);
+            let np = g.size(1, n);
+            let mp = g.size(1, m);
+            let s = Tensor::from_vec(&[n, m], g.positive_vec(n * m));
+            let sel = localize(&s, np, mp);
+            let ideal = topk_mass(&s, np * mp);
+            assert!(sel.score(&s) <= ideal + 1e-4);
+        });
+    }
+
+    #[test]
+    fn best_of_two_is_max() {
+        check("localize == max(row2col, col2row)", 50, |g| {
+            let n = g.size(2, 32);
+            let m = g.size(2, 32);
+            let np = g.size(1, n);
+            let mp = g.size(1, m);
+            let s = Tensor::from_vec(&[n, m], g.positive_vec(n * m));
+            let a = row2column(&s, np, mp).score(&s);
+            let b = column2row(&s, np, mp).score(&s);
+            let best = localize(&s, np, mp).score(&s);
+            assert!((best - a.max(b)).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn column_localization_picks_top_columns() {
+        let imp = vec![0.1, 5.0, 0.2, 4.0, 0.3];
+        assert_eq!(localize_columns(&imp, 2), vec![1, 3]);
+    }
+}

@@ -1,0 +1,17 @@
+//! The LoSiA coordinator: everything from §3 of the paper.
+//!
+//! * [`importance`] — sensitivity-based parameter importance (Eqs. 3–6)
+//! * [`localize`] — greedy core-subnet localization (Algorithm 1, Eq. 7)
+//! * [`schedule`] — asynchronous periodic re-localization timeline (§3.3)
+//! * [`rewarm`] — learning-rate rewarming (Eq. 8)
+//! * [`subnet`] — subnet state + compact Adam moments (Algorithm 2)
+//! * [`state`] — model parameter store (the ABI mirror of `aot.py`)
+//! * [`trainer`] — the training loop driving AOT artifacts
+
+pub mod importance;
+pub mod localize;
+pub mod rewarm;
+pub mod schedule;
+pub mod state;
+pub mod subnet;
+pub mod trainer;

@@ -1,0 +1,171 @@
+//! Learning-rate schedules + the LoSiA rewarming wrapper (Eq. 8).
+//!
+//! The base schedule is linear-warmup → cosine decay (the paper trains
+//! with warmup ratio 0.1). After a group re-localizes at step `t_r`,
+//! its effective LR ramps linearly from 0 back to the base schedule
+//! over the following time slot:
+//!
+//! `lr̄(t) = ((t − t_r) / T) · lr(t)`  while `t − t_r < T` and the
+//! global warmup already finished (Eq. 8's Cond).
+
+/// Base LR schedule: linear warmup then cosine decay to `floor`.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base_lr: f64,
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    pub floor: f64,
+}
+
+impl LrSchedule {
+    pub fn new(base_lr: f64, total_steps: usize, warmup_ratio: f64) -> Self {
+        LrSchedule {
+            base_lr,
+            total_steps: total_steps.max(1),
+            warmup_steps: ((total_steps as f64) * warmup_ratio) as usize,
+            floor: 0.0,
+        }
+    }
+
+    /// lr(t) — 0-based step.
+    pub fn lr(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return self.base_lr * (t + 1) as f64
+                / self.warmup_steps as f64;
+        }
+        let denom = (self.total_steps - self.warmup_steps).max(1) as f64;
+        let progress = ((t - self.warmup_steps) as f64 / denom).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.floor + (self.base_lr - self.floor) * cos
+    }
+}
+
+/// Rewarming state for one weight group (Eq. 8).
+#[derive(Debug, Clone, Copy)]
+pub struct Rewarmer {
+    /// time slot T (ramp length)
+    pub time_slot: usize,
+    /// disabled by the WDS ablation
+    pub enabled: bool,
+}
+
+impl Rewarmer {
+    /// Multiplier on the base LR for a group whose last re-localization
+    /// happened at `last_reloc` (None = never), evaluated at step `t`.
+    /// `warmup_steps` is the global warmup duration T_w: rewarmings
+    /// only trigger after the initial warmup has finished.
+    pub fn factor(
+        &self,
+        t: usize,
+        last_reloc: Option<usize>,
+        warmup_steps: usize,
+    ) -> f64 {
+        if !self.enabled {
+            return 1.0;
+        }
+        let Some(tr) = last_reloc else {
+            return 1.0;
+        };
+        if t <= warmup_steps {
+            return 1.0;
+        }
+        let since = t.saturating_sub(tr);
+        if since >= self.time_slot {
+            1.0
+        } else {
+            since as f64 / self.time_slot as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::new(1.0, 100, 0.1);
+        assert!((s.lr(0) - 0.1).abs() < 1e-9);
+        assert!((s.lr(4) - 0.5).abs() < 1e-9);
+        assert!((s.lr(9) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_decays_monotonically() {
+        let s = LrSchedule::new(1.0, 200, 0.1);
+        let mut prev = f64::INFINITY;
+        for t in s.warmup_steps..200 {
+            let lr = s.lr(t);
+            assert!(lr <= prev + 1e-12, "not monotone at {t}");
+            assert!(lr >= 0.0);
+            prev = lr;
+        }
+        assert!(s.lr(199) < 1e-3);
+    }
+
+    #[test]
+    fn lr_never_exceeds_base() {
+        check("0 <= lr(t) <= base", 30, |g| {
+            let base = g.f32(1e-6, 1.0) as f64;
+            let steps = g.size(2, 500);
+            let ratio = g.f32(0.0, 0.5) as f64;
+            let s = LrSchedule::new(base, steps, ratio);
+            for t in 0..steps {
+                let lr = s.lr(t);
+                assert!(lr >= 0.0 && lr <= base + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn rewarm_ramp_shape() {
+        let r = Rewarmer {
+            time_slot: 10,
+            enabled: true,
+        };
+        // just re-localized at t=49 (after warmup of 5)
+        assert_eq!(r.factor(49, Some(49), 5), 0.0);
+        assert!((r.factor(54, Some(49), 5) - 0.5).abs() < 1e-12);
+        assert_eq!(r.factor(59, Some(49), 5), 1.0);
+        assert_eq!(r.factor(200, Some(49), 5), 1.0);
+    }
+
+    #[test]
+    fn rewarm_suppressed_during_global_warmup() {
+        let r = Rewarmer {
+            time_slot: 10,
+            enabled: true,
+        };
+        // Cond requires t > T_w: before warmup completes, no rewarming
+        assert_eq!(r.factor(3, Some(2), 10), 1.0);
+    }
+
+    #[test]
+    fn disabled_rewarmer_is_identity() {
+        let r = Rewarmer {
+            time_slot: 10,
+            enabled: false,
+        };
+        assert_eq!(r.factor(50, Some(49), 0), 1.0);
+    }
+
+    #[test]
+    fn factor_in_unit_interval() {
+        check("0 <= factor <= 1", 50, |g| {
+            let r = Rewarmer {
+                time_slot: g.size(1, 50),
+                enabled: g.bool(),
+            };
+            let t = g.size(0, 1000);
+            let reloc = if g.bool() {
+                Some(g.size(0, t.max(1)))
+            } else {
+                None
+            };
+            let w = g.size(0, 100);
+            let f = r.factor(t, reloc, w);
+            assert!((0.0..=1.0).contains(&f));
+        });
+    }
+}

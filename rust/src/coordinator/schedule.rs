@@ -1,0 +1,181 @@
+//! Asynchronous periodic subnet re-localization timeline (paper §3.3).
+//!
+//! The timeline is chopped into slots of length `T`. With `G` weight
+//! groups (the L decoder layers, plus one group for the output layer),
+//! group `g`:
+//!
+//! * accumulates importance statistics during steps
+//!   `[(kG + g)T, (kG + g + 1)T)` for k = 0, 1, …
+//! * re-localizes at the *end* of that slot (just before the first step
+//!   of the next slot), and
+//! * rewarms its learning rate over the following slot (see
+//!   [`crate::coordinator::rewarm`]).
+//!
+//! At any moment exactly one group is profiling, so the Ī/Ū storage
+//! cost is one layer's worth rather than the whole model's. Every group
+//! refreshes exactly once per `G·T` steps.
+
+/// What the trainer must do for a given group at a given step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotAction {
+    /// this group should fold this step's gradients into Ī/Ū
+    pub profile: bool,
+    /// this group re-localizes *after* this step's update
+    pub relocalize: bool,
+}
+
+/// The asynchronous schedule (plus the SL-ablation synchronous mode).
+#[derive(Debug, Clone)]
+pub struct AsyncSchedule {
+    pub groups: usize,
+    pub time_slot: usize,
+    pub synchronous: bool,
+}
+
+impl AsyncSchedule {
+    pub fn new(groups: usize, time_slot: usize, synchronous: bool) -> Self {
+        assert!(groups > 0 && time_slot > 0);
+        AsyncSchedule {
+            groups,
+            time_slot,
+            synchronous,
+        }
+    }
+
+    /// Period between refreshes of the same group (T̄ = G·T).
+    pub fn full_period(&self) -> usize {
+        if self.synchronous {
+            self.time_slot
+        } else {
+            self.groups * self.time_slot
+        }
+    }
+
+    /// Which group is profiling at step `t` (async mode).
+    pub fn profiling_group(&self, t: usize) -> usize {
+        (t / self.time_slot) % self.groups
+    }
+
+    /// Action for group `g` at 0-based step `t`.
+    pub fn action(&self, t: usize, g: usize) -> SlotAction {
+        debug_assert!(g < self.groups);
+        if self.synchronous {
+            // SL ablation: every group profiles every step and all
+            // reselect together at slot boundaries.
+            let relocalize = (t + 1) % self.time_slot == 0;
+            return SlotAction {
+                profile: true,
+                relocalize,
+            };
+        }
+        let profile = self.profiling_group(t) == g;
+        // last step of g's slot → reselect after the update
+        let relocalize = profile && (t + 1) % self.time_slot == 0;
+        SlotAction {
+            profile,
+            relocalize,
+        }
+    }
+
+    /// Step at which group `g` last re-localized before or at step `t`
+    /// (None if it never has). Used by the rewarming schedule.
+    pub fn last_relocalize(&self, t: usize, g: usize) -> Option<usize> {
+        if self.synchronous {
+            let k = (t + 1) / self.time_slot;
+            return (k > 0).then(|| k * self.time_slot - 1);
+        }
+        // g reselects at steps (kG + g + 1)·T − 1 for k ≥ 0
+        let period = self.full_period();
+        let first = (g + 1) * self.time_slot - 1;
+        if t < first {
+            return None;
+        }
+        Some(first + ((t - first) / period) * period)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn exactly_one_group_profiles_async() {
+        check("async: one profiler per step", 50, |g| {
+            let groups = g.size(1, 8);
+            let t_slot = g.size(1, 20);
+            let s = AsyncSchedule::new(groups, t_slot, false);
+            let t = g.size(0, 500);
+            let profiling: Vec<usize> = (0..groups)
+                .filter(|&gr| s.action(t, gr).profile)
+                .collect();
+            assert_eq!(profiling.len(), 1);
+            assert_eq!(profiling[0], s.profiling_group(t));
+        });
+    }
+
+    #[test]
+    fn every_group_refreshes_once_per_full_period() {
+        check("async: refresh exactly once per G·T", 30, |g| {
+            let groups = g.size(1, 6);
+            let t_slot = g.size(1, 10);
+            let s = AsyncSchedule::new(groups, t_slot, false);
+            let period = s.full_period();
+            for gr in 0..groups {
+                let count = (0..period)
+                    .filter(|&t| s.action(t, gr).relocalize)
+                    .count();
+                assert_eq!(count, 1, "group {gr}");
+            }
+        });
+    }
+
+    #[test]
+    fn relocalize_follows_profiling_window() {
+        let s = AsyncSchedule::new(3, 10, false);
+        // group 0 profiles steps 0..10, reselects after step 9
+        assert!(s.action(9, 0).relocalize);
+        assert!(!s.action(9, 1).relocalize);
+        // group 1 profiles 10..20, reselects after 19
+        assert!(s.action(15, 1).profile);
+        assert!(s.action(19, 1).relocalize);
+        // wraps: group 0 profiles again at 30..40
+        assert!(s.action(31, 0).profile);
+        assert!(s.action(39, 0).relocalize);
+    }
+
+    #[test]
+    fn last_relocalize_is_consistent_with_actions() {
+        check("last_relocalize matches action log", 20, |g| {
+            let groups = g.size(1, 5);
+            let t_slot = g.size(1, 8);
+            let sync = g.bool();
+            let s = AsyncSchedule::new(groups, t_slot, sync);
+            let horizon = g.size(1, 200);
+            for gr in 0..groups {
+                let mut last: Option<usize> = None;
+                for t in 0..horizon {
+                    if s.action(t, gr).relocalize {
+                        last = Some(t);
+                    }
+                    assert_eq!(
+                        s.last_relocalize(t, gr),
+                        last,
+                        "group {gr} step {t} sync={sync}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn synchronous_mode_reselects_all_together() {
+        let s = AsyncSchedule::new(4, 5, true);
+        for gr in 0..4 {
+            assert!(s.action(4, gr).relocalize);
+            assert!(s.action(9, gr).relocalize);
+            assert!(!s.action(7, gr).relocalize);
+            assert!(s.action(0, gr).profile);
+        }
+    }
+}

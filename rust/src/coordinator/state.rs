@@ -1,0 +1,140 @@
+//! Model parameter store — the host-side mirror of the artifact ABI.
+//!
+//! Parameters are kept in the canonical order defined by
+//! `python/compile/model.py::param_specs`; [`ModelState::as_inputs`]
+//! produces the flat `HostValue` list every artifact starts with.
+
+use std::collections::BTreeMap;
+
+use crate::config::ModelCfg;
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Named parameter tensors in ABI order.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    /// ABI order (name, tensor)
+    pub params: Vec<(String, Tensor)>,
+    index: BTreeMap<String, usize>,
+}
+
+impl ModelState {
+    /// Scaled-normal init matching `model.init_params` semantics:
+    /// norms = 1, everything else ~ N(0, 1/fan_in).
+    pub fn init(cfg: &ModelCfg, rng: &mut Rng) -> Self {
+        let mut params = Vec::new();
+        let mut index = BTreeMap::new();
+        for (name, shape) in &cfg.params {
+            let t = if name.starts_with("norm") {
+                Tensor::ones(shape)
+            } else {
+                let fan_in = if shape.len() >= 2 {
+                    shape[shape.len() - 2]
+                } else {
+                    shape[shape.len() - 1]
+                };
+                Tensor::randn(
+                    shape,
+                    1.0 / (fan_in as f32).sqrt(),
+                    rng,
+                )
+            };
+            index.insert(name.clone(), params.len());
+            params.push((name.clone(), t));
+        }
+        ModelState { params, index }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.params[self.index[name]].1
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = self.index[name];
+        &mut self.params[i].1
+    }
+
+    /// Flat parameter inputs for an artifact call (cheap clones of the
+    /// backing Vec<f32>; see metrics for the copy-cost accounting).
+    pub fn as_inputs(&self) -> Vec<HostValue> {
+        self.params
+            .iter()
+            .map(|(_, t)| HostValue::F32(t.clone()))
+            .collect()
+    }
+
+    /// One layer of a stacked parameter ([L, ...] → [...]).
+    pub fn layer(&self, name: &str, l: usize) -> Tensor {
+        self.get(name).index_axis0(l)
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|(_, t)| t.len()).sum()
+    }
+
+    /// L2 distance to another state (continual-learning drift metric).
+    pub fn l2_distance(&self, other: &ModelState) -> f64 {
+        let mut acc = 0.0f64;
+        for ((_, a), (_, b)) in self.params.iter().zip(&other.params) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                acc += ((x - y) as f64).powi(2);
+            }
+        }
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::load_manifest;
+    use crate::runtime::artifacts_dir;
+
+    fn tiny() -> ModelCfg {
+        load_manifest(&artifacts_dir(), "tiny").unwrap()
+    }
+
+    #[test]
+    fn init_matches_manifest_shapes() {
+        let cfg = tiny();
+        let mut rng = Rng::new(0);
+        let st = ModelState::init(&cfg, &mut rng);
+        assert_eq!(st.params.len(), cfg.params.len());
+        for ((name, t), (mname, mshape)) in
+            st.params.iter().zip(&cfg.params)
+        {
+            assert_eq!(name, mname);
+            assert_eq!(&t.shape, mshape);
+        }
+        assert_eq!(st.total_params(), cfg.param_count);
+    }
+
+    #[test]
+    fn norms_are_ones() {
+        let cfg = tiny();
+        let mut rng = Rng::new(0);
+        let st = ModelState::init(&cfg, &mut rng);
+        assert!(st.get("norm_f").data.iter().all(|&x| x == 1.0));
+        assert!(st.get("norm1").data.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn layer_slicing() {
+        let cfg = tiny();
+        let mut rng = Rng::new(1);
+        let st = ModelState::init(&cfg, &mut rng);
+        let wq = st.get("wq");
+        let l0 = st.layer("wq", 0);
+        assert_eq!(l0.shape, vec![cfg.d_model, cfg.d_model]);
+        assert_eq!(l0.data[..8], wq.data[..8]);
+    }
+
+    #[test]
+    fn l2_distance_zero_to_self() {
+        let cfg = tiny();
+        let mut rng = Rng::new(2);
+        let st = ModelState::init(&cfg, &mut rng);
+        assert_eq!(st.l2_distance(&st), 0.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Subnet optimizer state (Algorithm 2): per-matrix (ρ, γ) selection
+//! plus compact Adam moments in the [np, mp] subnet frame, and the
+//! generic dense Adam used by the baselines.
+
+use crate::coordinator::localize::Selection;
+use crate::tensor::Tensor;
+
+/// Adam hyperparameters (β′₁, β′₂ in Algorithm 2).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+/// Dense Adam state over an arbitrary-shaped tensor.
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Tensor,
+    pub v: Tensor,
+    pub step: u32,
+    pub hp: AdamParams,
+}
+
+impl AdamState {
+    pub fn new(shape: &[usize], hp: AdamParams) -> Self {
+        AdamState {
+            m: Tensor::zeros(shape),
+            v: Tensor::zeros(shape),
+            step: 0,
+            hp,
+        }
+    }
+
+    /// Compute the Adam update `lr · m̂ / (√v̂ + ε)` for gradient `g`
+    /// and advance the moments. Returned tensor has `g`'s shape.
+    pub fn update(&mut self, g: &Tensor, lr: f32) -> Tensor {
+        assert_eq!(g.shape, self.m.shape, "adam: grad shape mismatch");
+        self.step += 1;
+        let (b1, b2) = (self.hp.beta1, self.hp.beta2);
+        let bc1 = 1.0 - b1.powi(self.step as i32);
+        let bc2 = 1.0 - b2.powi(self.step as i32);
+        let mut out = Tensor::zeros(&g.shape);
+        for k in 0..g.data.len() {
+            let m = b1 * self.m.data[k] + (1.0 - b1) * g.data[k];
+            let v = b2 * self.v.data[k]
+                + (1.0 - b2) * g.data[k] * g.data[k];
+            self.m.data[k] = m;
+            self.v.data[k] = v;
+            let m_hat = m / bc1;
+            let v_hat = v / bc2;
+            out.data[k] = lr * m_hat / (v_hat.sqrt() + self.hp.eps);
+        }
+        out
+    }
+
+    /// Reset moments (Algorithm 2 line 34 — after re-localization the
+    /// subnet coordinates change meaning, so stale moments are invalid).
+    pub fn reset(&mut self) {
+        self.m.data.iter_mut().for_each(|x| *x = 0.0);
+        self.v.data.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+}
+
+/// State of one matrix's core subnet: which neurons are selected and
+/// the Adam moments living in the compact subnet frame.
+#[derive(Debug, Clone)]
+pub struct SubnetState {
+    pub sel: Selection,
+    pub adam: AdamState,
+    /// full-matrix dims (n, m) for bounds checking
+    pub n: usize,
+    pub m: usize,
+}
+
+impl SubnetState {
+    pub fn new(
+        n: usize,
+        m: usize,
+        sel: Selection,
+        hp: AdamParams,
+    ) -> Self {
+        let shape = [sel.rho.len(), sel.gamma.len()];
+        SubnetState {
+            sel,
+            adam: AdamState::new(&shape, hp),
+            n,
+            m,
+        }
+    }
+
+    /// Apply one subnet Adam step: given the subnet gradient
+    /// `g ∈ R^{np×mp}`, update the moments and scatter
+    /// `−lr·m̂/(√v̂+ε)` into the full weight `w` (Algorithm 2
+    /// lines 18–24).
+    pub fn apply_update(&mut self, w: &mut Tensor, g: &Tensor, lr: f32) {
+        debug_assert_eq!(w.shape, vec![self.n, self.m]);
+        let mut upd = self.adam.update(g, lr);
+        upd.scale_assign(-1.0);
+        w.scatter_add2(&self.sel.rho, &self.sel.gamma, &upd);
+    }
+
+    /// Swap in a new selection after re-localization; moments reset.
+    pub fn relocalize(&mut self, sel: Selection) {
+        assert_eq!(sel.rho.len(), self.sel.rho.len());
+        assert_eq!(sel.gamma.len(), self.sel.gamma.len());
+        self.sel = sel;
+        self.adam.reset();
+    }
+
+    pub fn trainable_params(&self) -> usize {
+        self.sel.rho.len() * self.sel.gamma.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn sel(rho: Vec<usize>, gamma: Vec<usize>) -> Selection {
+        Selection { rho, gamma }
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // With bias correction, step 1 gives lr · g/(|g|+ε) ≈ lr·sign(g).
+        let mut a = AdamState::new(&[3], AdamParams::default());
+        let g = Tensor::from_vec(&[3], vec![0.5, -2.0, 0.0]);
+        let upd = a.update(&g, 0.01);
+        assert!((upd.data[0] - 0.01).abs() < 1e-4);
+        assert!((upd.data[1] + 0.01).abs() < 1e-4);
+        assert_eq!(upd.data[2], 0.0);
+    }
+
+    #[test]
+    fn adam_reset_clears_moments() {
+        let mut a = AdamState::new(&[2], AdamParams::default());
+        let g = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        a.update(&g, 0.1);
+        assert!(a.m.data[0] != 0.0);
+        a.reset();
+        assert_eq!(a.m.data, vec![0.0, 0.0]);
+        assert_eq!(a.step, 0);
+    }
+
+    #[test]
+    fn subnet_update_touches_only_subnet() {
+        check("off-subnet weights frozen", 30, |g| {
+            let n = g.size(2, 16);
+            let m = g.size(2, 16);
+            let np = g.size(1, n);
+            let mp = g.size(1, m);
+            let rho = g.distinct_indices(n, np);
+            let gamma = g.distinct_indices(m, mp);
+            let mut w =
+                Tensor::from_vec(&[n, m], g.normal_vec(n * m, 1.0));
+            let orig = w.clone();
+            let mut st = SubnetState::new(
+                n,
+                m,
+                sel(rho.clone(), gamma.clone()),
+                AdamParams::default(),
+            );
+            let grad =
+                Tensor::from_vec(&[np, mp], g.normal_vec(np * mp, 1.0));
+            st.apply_update(&mut w, &grad, 0.1);
+            for i in 0..n {
+                for j in 0..m {
+                    let inside = rho.contains(&i) && gamma.contains(&j);
+                    let changed =
+                        (w.at2(i, j) - orig.at2(i, j)).abs() > 0.0;
+                    if !inside {
+                        assert!(!changed, "off-subnet ({i},{j}) moved");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn subnet_update_descends_quadratic() {
+        // Minimize f(W) = ½‖W‖² over the subnet: grad = W_sub.
+        let n = 8;
+        let mut w = Tensor::ones(&[n, n]);
+        let rho = vec![0, 2, 4];
+        let gamma = vec![1, 3];
+        let mut st = SubnetState::new(
+            n,
+            n,
+            sel(rho.clone(), gamma.clone()),
+            AdamParams::default(),
+        );
+        for _ in 0..300 {
+            let g = w.gather2(&rho, &gamma);
+            st.apply_update(&mut w, &g, 0.05);
+        }
+        for &i in &rho {
+            for &j in &gamma {
+                assert!(w.at2(i, j).abs() < 0.05, "did not converge");
+            }
+        }
+        assert_eq!(w.at2(1, 1), 1.0); // frozen
+    }
+
+    #[test]
+    fn relocalize_resets_and_swaps() {
+        let mut st = SubnetState::new(
+            8,
+            8,
+            sel(vec![0, 1], vec![2, 3]),
+            AdamParams::default(),
+        );
+        let g = Tensor::ones(&[2, 2]);
+        let mut w = Tensor::zeros(&[8, 8]);
+        st.apply_update(&mut w, &g, 0.1);
+        assert!(st.adam.step == 1);
+        st.relocalize(sel(vec![4, 5], vec![6, 7]));
+        assert_eq!(st.adam.step, 0);
+        assert_eq!(st.sel.rho, vec![4, 5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn relocalize_rejects_budget_change() {
+        let mut st = SubnetState::new(
+            8,
+            8,
+            sel(vec![0, 1], vec![2, 3]),
+            AdamParams::default(),
+        );
+        st.relocalize(sel(vec![0], vec![1]));
+    }
+}

@@ -1,0 +1,91 @@
+//! The training loop: schedules, drives the method driver over
+//! batches, and records losses + per-step wall time.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::config::TrainConfig;
+use crate::coordinator::rewarm::LrSchedule;
+use crate::coordinator::state::ModelState;
+use crate::data::Batcher;
+use crate::methods::{build_driver, Driver};
+use crate::runtime::Runtime;
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub tc: TrainConfig,
+    pub schedule: LrSchedule,
+    pub driver: Box<dyn Driver>,
+    /// (step, loss)
+    pub loss_log: Vec<(usize, f64)>,
+    /// seconds per step
+    pub step_secs: Vec<f64>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, tc: TrainConfig) -> Result<Self> {
+        let schedule =
+            LrSchedule::new(tc.lr, tc.steps, tc.warmup_ratio);
+        let mut driver = build_driver(rt, &tc)?;
+        // LoSiA needs the global warmup horizon for Eq. 8's Cond;
+        // a no-op for every other driver.
+        driver.set_warmup(schedule.warmup_steps);
+        Ok(Trainer {
+            rt,
+            tc,
+            schedule,
+            driver,
+            loss_log: Vec::new(),
+            step_secs: Vec::new(),
+        })
+    }
+
+    /// Run `tc.steps` optimization steps over the batcher.
+    pub fn train(
+        &mut self,
+        state: &mut ModelState,
+        batcher: &mut Batcher,
+    ) -> Result<()> {
+        self.driver.prepare(state)?;
+        for t in 0..self.tc.steps {
+            let batch = batcher.next_batch();
+            let lr = self.schedule.lr(t);
+            let t0 = Instant::now();
+            let loss = self.driver.step(state, &batch, t, lr)?;
+            self.step_secs.push(t0.elapsed().as_secs_f64());
+            self.loss_log.push((t, loss));
+            if self.tc.log_every > 0 && t % self.tc.log_every == 0 {
+                eprintln!(
+                    "[train:{}] step {t:>5} loss {loss:.4} lr {lr:.2e}",
+                    self.driver.method().name(),
+                );
+            }
+        }
+        // merge external adapters into the backbone (paper protocol:
+        // LoRA modules are merged before evaluation / the next task)
+        self.driver.finalize(state)?;
+        Ok(())
+    }
+
+    /// Mean µs/token over steps (skipping the first, which pays
+    /// compile/warmup costs).
+    pub fn us_per_token(&self) -> f64 {
+        if self.step_secs.len() <= 1 {
+            return f64::NAN;
+        }
+        let secs: f64 = self.step_secs[1..].iter().sum();
+        let steps = (self.step_secs.len() - 1) as f64;
+        secs / steps * 1e6 / self.rt.cfg.tokens_per_step() as f64
+    }
+
+    /// Mean loss over the last `k` steps (convergence summary).
+    pub fn tail_loss(&self, k: usize) -> f64 {
+        let n = self.loss_log.len();
+        let k = k.min(n).max(1);
+        self.loss_log[n - k..]
+            .iter()
+            .map(|(_, l)| l)
+            .sum::<f64>()
+            / k as f64
+    }
+}

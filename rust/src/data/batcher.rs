@@ -1,0 +1,238 @@
+//! SFT sequence packing: `[BOS, prompt, answer, EOS, PAD…]` with the
+//! loss mask covering only answer+EOS predictions (standard
+//! instruction-tuning masking).
+
+use super::vocab::{BOS, EOS, PAD};
+use super::Example;
+use crate::runtime::HostValue;
+use crate::util::rng::Rng;
+
+/// One training batch in artifact ABI form.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    /// The three batch inputs every grads/loss artifact ends with.
+    pub fn as_inputs(&self) -> Vec<HostValue> {
+        let shape = [self.batch, self.seq];
+        vec![
+            HostValue::I32 {
+                shape: shape.to_vec(),
+                data: self.tokens.clone(),
+            },
+            HostValue::I32 {
+                shape: shape.to_vec(),
+                data: self.targets.clone(),
+            },
+            HostValue::F32(crate::tensor::Tensor::from_vec(
+                &shape,
+                self.mask.clone(),
+            )),
+        ]
+    }
+
+    /// Number of loss-bearing tokens.
+    pub fn mask_count(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+}
+
+/// Pack one example into (tokens, targets, mask) rows of length `seq`.
+///
+/// Position t predicts token t+1; mask is 1 exactly where the predicted
+/// token belongs to `answer ++ [EOS]`.
+pub fn pack_example(
+    ex: &Example,
+    seq: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+    let mut full: Vec<u32> = Vec::with_capacity(seq + 1);
+    full.push(BOS);
+    full.extend_from_slice(&ex.prompt);
+    let answer_start = full.len(); // first answer position in `full`
+    full.extend_from_slice(&ex.answer);
+    full.push(EOS);
+    assert!(
+        full.len() <= seq + 1,
+        "example length {} exceeds seq {}",
+        full.len(),
+        seq
+    );
+    let mut tokens = vec![PAD as i32; seq];
+    let mut targets = vec![PAD as i32; seq];
+    let mut mask = vec![0.0f32; seq];
+    for t in 0..seq {
+        if t < full.len() {
+            tokens[t] = full[t] as i32;
+        }
+        if t + 1 < full.len() {
+            targets[t] = full[t + 1] as i32;
+            // predicted token full[t+1] is loss-bearing iff it is part
+            // of the answer span (answer tokens + the closing EOS)
+            if t + 1 >= answer_start {
+                mask[t] = 1.0;
+            }
+        }
+    }
+    (tokens, targets, mask)
+}
+
+/// Batches examples into fixed-shape artifact inputs, cycling the
+/// dataset and reshuffling every epoch.
+pub struct Batcher {
+    examples: Vec<Example>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batcher {
+    pub fn new(
+        examples: Vec<Example>,
+        batch: usize,
+        seq: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(!examples.is_empty());
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..examples.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher {
+            examples,
+            order,
+            cursor: 0,
+            rng,
+            batch,
+            seq,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// Next batch (wraps around with a reshuffle at epoch boundaries).
+    pub fn next_batch(&mut self) -> Batch {
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut targets = Vec::with_capacity(self.batch * self.seq);
+        let mut mask = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.rng.shuffle(&mut self.order);
+            }
+            let ex = &self.examples[self.order[self.cursor]];
+            self.cursor += 1;
+            let (t, y, m) = pack_example(ex, self.seq);
+            tokens.extend(t);
+            targets.extend(y);
+            mask.extend(m);
+        }
+        Batch {
+            tokens,
+            targets,
+            mask,
+            batch: self.batch,
+            seq: self.seq,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::{digit, PLUS, SEP};
+
+    fn ex() -> Example {
+        Example {
+            prompt: vec![digit(3), PLUS, digit(4), SEP],
+            answer: vec![digit(7)],
+        }
+    }
+
+    #[test]
+    fn pack_shapes_and_mask() {
+        let (t, y, m) = pack_example(&ex(), 12);
+        assert_eq!(t.len(), 12);
+        assert_eq!(y.len(), 12);
+        assert_eq!(m.len(), 12);
+        // full = BOS 3 + 4 = 7 EOS  (7 tokens)
+        assert_eq!(t[0], BOS as i32);
+        assert_eq!(y[0], digit(3) as i32);
+        // answer "7" is predicted at position 4 (token SEP → 7)
+        assert_eq!(y[4], digit(7) as i32);
+        assert_eq!(m[4], 1.0);
+        // EOS predicted at position 5
+        assert_eq!(y[5], EOS as i32);
+        assert_eq!(m[5], 1.0);
+        // prompt predictions carry no loss
+        assert_eq!(m[0], 0.0);
+        assert_eq!(m[3], 0.0);
+        // padding carries no loss
+        assert_eq!(m[8], 0.0);
+        // exactly answer+EOS = 2 loss tokens
+        let total: f32 = m.iter().sum();
+        assert_eq!(total, 2.0);
+    }
+
+    #[test]
+    fn targets_are_shifted_tokens() {
+        let (t, y, _) = pack_example(&ex(), 12);
+        for i in 0..6 {
+            assert_eq!(y[i], t[i + 1], "shift mismatch at {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds seq")]
+    fn oversized_example_panics() {
+        let big = Example {
+            prompt: vec![digit(1); 30],
+            answer: vec![digit(2)],
+        };
+        pack_example(&big, 16);
+    }
+
+    #[test]
+    fn batcher_cycles_and_reshuffles() {
+        let exs: Vec<Example> = (0..5)
+            .map(|i| Example {
+                prompt: vec![digit(i as u32), SEP],
+                answer: vec![digit(i as u32)],
+            })
+            .collect();
+        let mut b = Batcher::new(exs, 2, 8, 0);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..10 {
+            let batch = b.next_batch();
+            assert_eq!(batch.tokens.len(), 16);
+            for row in 0..2 {
+                seen.insert(batch.tokens[row * 8 + 1]);
+            }
+        }
+        // all five examples appear across 20 draws
+        assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn batch_inputs_have_abi_shapes() {
+        let mut b = Batcher::new(vec![ex()], 3, 10, 1);
+        let batch = b.next_batch();
+        let inputs = batch.as_inputs();
+        assert_eq!(inputs.len(), 3);
+        assert_eq!(inputs[0].shape(), &[3, 10]);
+        assert_eq!(inputs[2].shape(), &[3, 10]);
+        assert!(batch.mask_count() > 0);
+    }
+}

@@ -1,0 +1,378 @@
+//! Eight commonsense-analogue tasks (Table 2 / Table 5 suites).
+//!
+//! Each mirrors one benchmark's *shape*: small discrete reasoning with
+//! min-PPL option scoring. Distributions are pairwise distinct so the
+//! continual-learning sequence (Table 5) has real task boundaries.
+
+use super::vocab::*;
+use super::{EvalItem, Example, Task};
+use crate::util::rng::Rng;
+
+/// Build the 8-task suite in paper order (ARC-C … BoolQ analogues).
+pub fn suite() -> Vec<Box<dyn Task>> {
+    vec![
+        Box::new(Parity { len: 5 }),      // ARC-C analogue (hard)
+        Box::new(Parity { len: 3 }),      // ARC-E analogue (easy)
+        Box::new(Copy { len: 6 }),        // HellaSwag (continuation)
+        Box::new(Compare),                // WinoGrande (binary choice)
+        Box::new(Majority { len: 5 }),    // PIQA
+        Box::new(Successor),              // OBQA
+        Box::new(Member { set_len: 4 }),  // SIQA
+        Box::new(BoolFact),               // BoolQ
+    ]
+}
+
+pub const SUITE_NAMES: [&str; 8] = [
+    "parity-5", "parity-3", "copy", "compare",
+    "majority", "succ", "member", "boolfact",
+];
+
+/// Parity of a bit string → even/odd.
+pub struct Parity {
+    pub len: usize,
+}
+
+impl Task for Parity {
+    fn name(&self) -> &'static str {
+        "parity"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        let bits: Vec<u32> =
+            (0..self.len).map(|_| rng.below(2) as u32).collect();
+        let ones: u32 = bits.iter().sum();
+        let prompt: Vec<u32> = bits
+            .iter()
+            .map(|&b| digit(b))
+            .chain([QRY])
+            .collect();
+        let answer = vec![if ones % 2 == 0 { EVEN } else { ODD }];
+        Example { prompt, answer }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let correct = usize::from(ex.answer[0] == ODD);
+        EvalItem {
+            prompt: ex.prompt,
+            options: vec![vec![EVEN], vec![ODD]],
+            correct,
+            category: "parity",
+        }
+    }
+}
+
+/// Which of two letters occurs more often.
+pub struct Majority {
+    pub len: usize,
+}
+
+impl Task for Majority {
+    fn name(&self) -> &'static str {
+        "majority"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        // odd length guarantees a strict majority of a vs b
+        let n = self.len | 1;
+        let seq: Vec<u32> =
+            (0..n).map(|_| rng.below(2) as u32).collect();
+        let count_a = seq.iter().filter(|&&x| x == 0).count();
+        let prompt: Vec<u32> = seq
+            .iter()
+            .map(|&x| letter(x))
+            .chain([QRY])
+            .collect();
+        let answer =
+            vec![letter(u32::from(count_a * 2 < n))];
+        Example { prompt, answer }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let correct = usize::from(ex.answer[0] == letter(1));
+        EvalItem {
+            prompt: ex.prompt,
+            options: vec![vec![letter(0)], vec![letter(1)]],
+            correct,
+            category: "majority",
+        }
+    }
+}
+
+/// Is `a > b` or `a < b` for distinct digits.
+pub struct Compare;
+
+impl Task for Compare {
+    fn name(&self) -> &'static str {
+        "compare"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        let a = rng.below(10) as u32;
+        let mut b = rng.below(10) as u32;
+        while b == a {
+            b = rng.below(10) as u32;
+        }
+        Example {
+            prompt: vec![digit(a), digit(b), QRY],
+            answer: vec![if a > b { GT } else { LT }],
+        }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let correct = usize::from(ex.answer[0] == LT);
+        EvalItem {
+            prompt: ex.prompt,
+            options: vec![vec![GT], vec![LT]],
+            correct,
+            category: "compare",
+        }
+    }
+}
+
+/// Recall the first token of a sequence (continuation-style memory).
+pub struct Copy {
+    pub len: usize,
+}
+
+impl Task for Copy {
+    fn name(&self) -> &'static str {
+        "copy"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        let first = rng.below(8) as u32;
+        let mut prompt = vec![letter(first)];
+        for _ in 1..self.len {
+            prompt.push(letter(rng.below(8) as u32));
+        }
+        prompt.push(QRY);
+        Example {
+            prompt,
+            answer: vec![letter(first)],
+        }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let truth = ex.answer[0];
+        let mut options = vec![truth];
+        let mut rr = rng.fork();
+        while options.len() < 4 {
+            let cand = letter(rr.below(8) as u32);
+            if !options.contains(&cand) {
+                options.push(cand);
+            }
+        }
+        let mut order: Vec<usize> = (0..4).collect();
+        rng.shuffle(&mut order);
+        let correct = order.iter().position(|&i| i == 0).unwrap();
+        EvalItem {
+            prompt: ex.prompt,
+            options: order.iter().map(|&i| vec![options[i]]).collect(),
+            correct,
+            category: "copy",
+        }
+    }
+}
+
+/// Successor of a digit mod 10.
+pub struct Successor;
+
+impl Task for Successor {
+    fn name(&self) -> &'static str {
+        "succ"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        let a = rng.below(10) as u32;
+        Example {
+            prompt: vec![digit(a), QRY],
+            answer: vec![digit((a + 1) % 10)],
+        }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let truth = ex.answer[0] - DIGIT0;
+        let wrong1 = (truth + 5) % 10;
+        let wrong2 = (truth + 8) % 10;
+        let opts = [truth, wrong1, wrong2];
+        let mut order: Vec<usize> = (0..3).collect();
+        rng.shuffle(&mut order);
+        let correct = order.iter().position(|&i| i == 0).unwrap();
+        EvalItem {
+            prompt: ex.prompt,
+            options: order.iter().map(|&i| vec![digit(opts[i])]).collect(),
+            correct,
+            category: "succ",
+        }
+    }
+}
+
+/// Set membership: is the queried letter in the shown set?
+pub struct Member {
+    pub set_len: usize,
+}
+
+impl Task for Member {
+    fn name(&self) -> &'static str {
+        "member"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        let set: Vec<u32> = rng
+            .choose_distinct(10, self.set_len)
+            .into_iter()
+            .map(|i| letter(i as u32))
+            .collect();
+        let inside = rng.below(2) == 0;
+        let probe = if inside {
+            set[rng.below(set.len())]
+        } else {
+            loop {
+                let cand = letter(rng.below(10) as u32);
+                if !set.contains(&cand) {
+                    break cand;
+                }
+            }
+        };
+        let mut prompt = set;
+        prompt.push(SEMI);
+        prompt.push(probe);
+        prompt.push(QRY);
+        Example {
+            prompt,
+            answer: vec![if inside { YES } else { NO }],
+        }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let correct = usize::from(ex.answer[0] == NO);
+        EvalItem {
+            prompt: ex.prompt,
+            options: vec![vec![YES], vec![NO]],
+            correct,
+            category: "member",
+        }
+    }
+}
+
+/// Two asserted facts, then a yes/no consistency question (BoolQ-ish):
+/// `x=v ; x=v' ?` — yes iff v == v'.
+pub struct BoolFact;
+
+impl Task for BoolFact {
+    fn name(&self) -> &'static str {
+        "boolfact"
+    }
+
+    fn gen_train(&self, rng: &mut Rng) -> Example {
+        let k = letter(rng.below(6) as u32);
+        let v1 = letter(6 + rng.below(6) as u32);
+        let same = rng.below(2) == 0;
+        let v2 = if same {
+            v1
+        } else {
+            loop {
+                let cand = letter(6 + rng.below(6) as u32);
+                if cand != v1 {
+                    break cand;
+                }
+            }
+        };
+        Example {
+            prompt: vec![k, SEP, v1, SEMI, k, SEP, v2, QRY],
+            answer: vec![if same { YES } else { NO }],
+        }
+    }
+
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem {
+        let ex = self.gen_train(rng);
+        let correct = usize::from(ex.answer[0] == NO);
+        EvalItem {
+            prompt: ex.prompt,
+            options: vec![vec![YES], vec![NO]],
+            correct,
+            category: "boolfact",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn suite_has_eight_distinct_tasks() {
+        let s = suite();
+        assert_eq!(s.len(), 8);
+        assert_eq!(SUITE_NAMES.len(), 8);
+    }
+
+    #[test]
+    fn all_tasks_produce_valid_items() {
+        check("eval items well-formed across suite", 20, |g| {
+            let mut rng = g.rng();
+            for task in suite() {
+                let ex = task.gen_train(&mut rng);
+                assert!(!ex.prompt.is_empty());
+                assert!(!ex.answer.is_empty());
+                assert!(ex
+                    .prompt
+                    .iter()
+                    .chain(&ex.answer)
+                    .all(|&t| t < VOCAB_USED));
+                let item = task.gen_eval(&mut rng);
+                assert!(item.correct < item.options.len());
+                assert!(item.options.len() >= 2);
+                // correct option must be unique among options
+                let c = &item.options[item.correct];
+                assert_eq!(
+                    item.options.iter().filter(|o| *o == c).count(),
+                    1
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn parity_ground_truth() {
+        check("parity answers", 50, |g| {
+            let mut rng = g.rng();
+            let ex = Parity { len: 5 }.gen_train(&mut rng);
+            let ones: u32 = ex.prompt[..5]
+                .iter()
+                .map(|&t| t - DIGIT0)
+                .sum();
+            let want = if ones % 2 == 0 { EVEN } else { ODD };
+            assert_eq!(ex.answer[0], want);
+        });
+    }
+
+    #[test]
+    fn compare_ground_truth() {
+        check("compare answers", 50, |g| {
+            let mut rng = g.rng();
+            let ex = Compare.gen_train(&mut rng);
+            let a = ex.prompt[0] - DIGIT0;
+            let b = ex.prompt[1] - DIGIT0;
+            assert_eq!(ex.answer[0], if a > b { GT } else { LT });
+        });
+    }
+
+    #[test]
+    fn member_ground_truth() {
+        check("member answers", 50, |g| {
+            let mut rng = g.rng();
+            let ex = Member { set_len: 4 }.gen_train(&mut rng);
+            let probe = ex.prompt[ex.prompt.len() - 2];
+            let inside = ex.prompt[..4].contains(&probe);
+            assert_eq!(ex.answer[0], if inside { YES } else { NO });
+        });
+    }
+}

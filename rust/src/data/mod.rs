@@ -1,0 +1,69 @@
+//! Synthetic workload substrate.
+//!
+//! The paper trains on MetaMathQA / Magicoder / Alpaca-GPT4 and
+//! evaluates on GSM8K / MBPP / MMLU plus eight commonsense suites.
+//! None of those corpora fit a from-scratch CPU reproduction, so this
+//! module provides generators with the same *task taxonomy* (see
+//! DESIGN.md §Substitutions):
+//!
+//! * [`domain`] — `modmath` (exact-answer arithmetic ≈ GSM8K),
+//!   `stack` (program evaluation ≈ MBPP), `kvfacts` (knowledge
+//!   recall with categories ≈ MMLU).
+//! * [`commonsense`] — eight small classification/completion tasks
+//!   scored by min-perplexity option choice (≈ lm-eval-harness ACC).
+//! * [`vocab`] — the shared symbolic token space (< 64 ids, so every
+//!   model config can host every task).
+//! * [`batcher`] — SFT packing: loss mask on answer tokens only.
+
+pub mod batcher;
+pub mod commonsense;
+pub mod domain;
+pub mod vocab;
+
+pub use batcher::{Batch, Batcher};
+
+use crate::util::rng::Rng;
+
+/// One supervised example: prompt tokens and answer tokens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Example {
+    pub prompt: Vec<u32>,
+    pub answer: Vec<u32>,
+}
+
+/// An evaluation item: either multiple-choice (PPL-scored) or
+/// exact-answer generation.
+#[derive(Debug, Clone)]
+pub struct EvalItem {
+    pub prompt: Vec<u32>,
+    /// candidate answers; `correct` indexes into this list
+    pub options: Vec<Vec<u32>>,
+    pub correct: usize,
+    /// category label (used by the MMLU-style breakdown)
+    pub category: &'static str,
+}
+
+/// A task that can generate training examples and eval items.
+pub trait Task {
+    fn name(&self) -> &'static str;
+    fn gen_train(&self, rng: &mut Rng) -> Example;
+    fn gen_eval(&self, rng: &mut Rng) -> EvalItem;
+}
+
+/// Deterministic train/eval split sizes used across benches.
+pub fn gen_train_set(
+    task: &dyn Task,
+    n: usize,
+    seed: u64,
+) -> Vec<Example> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| task.gen_train(&mut rng)).collect()
+}
+
+pub fn gen_eval_set(task: &dyn Task, n: usize, seed: u64) -> Vec<EvalItem> {
+    // disjoint stream from training by construction (different seed
+    // stream); collisions are possible but rare and harmless for the
+    // relative comparisons the benches make.
+    let mut rng = Rng::new(seed ^ 0xEEEE_7777_0000_1111);
+    (0..n).map(|_| task.gen_eval(&mut rng)).collect()
+}

@@ -1,0 +1,107 @@
+//! Shared symbolic token space (< 64 ids so the `tiny` config hosts
+//! every task). Layout is append-only: benches depend on stability.
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+/// prompt/answer separator ("=")
+pub const SEP: u32 = 3;
+/// query marker ("?")
+pub const QRY: u32 = 4;
+
+/// digits 0..=9 → tokens 5..=14
+pub const DIGIT0: u32 = 5;
+
+pub const PLUS: u32 = 15;
+pub const MINUS: u32 = 16;
+pub const TIMES: u32 = 17;
+
+/// letters a..=z → tokens 18..=43
+pub const LETTER_A: u32 = 18;
+
+pub const YES: u32 = 44;
+pub const NO: u32 = 45;
+pub const GT: u32 = 46;
+pub const LT: u32 = 47;
+pub const EVEN: u32 = 48;
+pub const ODD: u32 = 49;
+pub const OPEN: u32 = 50;
+pub const CLOSE: u32 = 51;
+pub const SEMI: u32 = 52;
+
+/// total ids in use — must stay ≤ the smallest model vocab (64)
+pub const VOCAB_USED: u32 = 53;
+
+pub fn digit(d: u32) -> u32 {
+    debug_assert!(d < 10);
+    DIGIT0 + d
+}
+
+pub fn letter(i: u32) -> u32 {
+    debug_assert!(i < 26);
+    LETTER_A + i
+}
+
+/// Render token ids for debugging / logs.
+pub fn detok(tokens: &[u32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| match t {
+            PAD => "·".to_string(),
+            BOS => "<s>".to_string(),
+            EOS => "</s>".to_string(),
+            SEP => "=".to_string(),
+            QRY => "?".to_string(),
+            PLUS => "+".to_string(),
+            MINUS => "-".to_string(),
+            TIMES => "*".to_string(),
+            YES => "yes".to_string(),
+            NO => "no".to_string(),
+            GT => ">".to_string(),
+            LT => "<".to_string(),
+            EVEN => "even".to_string(),
+            ODD => "odd".to_string(),
+            OPEN => "(".to_string(),
+            CLOSE => ")".to_string(),
+            SEMI => ";".to_string(),
+            t if (DIGIT0..DIGIT0 + 10).contains(&t) => {
+                (t - DIGIT0).to_string()
+            }
+            t if (LETTER_A..LETTER_A + 26).contains(&t) => {
+                char::from(b'a' + (t - LETTER_A) as u8).to_string()
+            }
+            t => format!("<{t}>"),
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_tiny_model() {
+        assert!(VOCAB_USED <= 64);
+    }
+
+    #[test]
+    fn no_token_collisions() {
+        let mut all = vec![PAD, BOS, EOS, SEP, QRY];
+        all.extend((0..10).map(digit));
+        all.extend([PLUS, MINUS, TIMES]);
+        all.extend((0..26).map(letter));
+        all.extend([YES, NO, GT, LT, EVEN, ODD, OPEN, CLOSE, SEMI]);
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "token ids collide");
+        assert!(*all.last().unwrap() < VOCAB_USED);
+    }
+
+    #[test]
+    fn detok_is_readable() {
+        let s = detok(&[BOS, digit(3), PLUS, digit(4), SEP, digit(7), EOS]);
+        assert_eq!(s, "<s> 3 + 4 = 7 </s>");
+    }
+}

@@ -1,0 +1,199 @@
+//! Generation-based evaluation: greedy decoding for exact-match
+//! accuracy (GSM8K-style) and temperature sampling for Pass@k
+//! (MBPP-style). Decoding re-runs the full forward per emitted token —
+//! fine at these sequence lengths and keeps one artifact for
+//! everything.
+
+use anyhow::Result;
+
+use crate::coordinator::state::ModelState;
+use crate::data::vocab::{BOS, EOS, PAD};
+use crate::data::EvalItem;
+use crate::methods::{assemble_inputs, base_values};
+use crate::runtime::Runtime;
+use crate::tensor::select::{argmax, softmax};
+use crate::util::rng::Rng;
+
+/// Decode up to `max_new` tokens after the prompt for a batch of
+/// prompts. temperature = 0 → greedy.
+pub struct Generator<'rt> {
+    rt: &'rt Runtime,
+    exe: &'static crate::runtime::Executable,
+}
+
+impl<'rt> Generator<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Result<Self> {
+        Ok(Generator {
+            rt,
+            exe: rt.load("fwd_logits")?,
+        })
+    }
+
+    /// Generate continuations for up to `batch` prompts at once.
+    pub fn generate(
+        &self,
+        state: &ModelState,
+        prompts: &[Vec<u32>],
+        max_new: usize,
+        temperature: f32,
+        rng: &mut Rng,
+    ) -> Result<Vec<Vec<u32>>> {
+        let b = self.rt.cfg.batch;
+        let s = self.rt.cfg.seq_len;
+        let v = self.rt.cfg.vocab;
+        assert!(prompts.len() <= b, "at most {b} prompts per call");
+        // rows: BOS + prompt, padded
+        let mut seqs: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| {
+                let mut row = vec![BOS];
+                row.extend_from_slice(p);
+                assert!(row.len() + max_new <= s, "prompt too long");
+                row
+            })
+            .collect();
+        let mut done = vec![false; prompts.len()];
+        let mut outs: Vec<Vec<u32>> =
+            vec![Vec::new(); prompts.len()];
+
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            // pack current sequences
+            let mut tokens = vec![PAD as i32; b * s];
+            for (i, seq) in seqs.iter().enumerate() {
+                for (t, &tok) in seq.iter().enumerate() {
+                    tokens[i * s + t] = tok as i32;
+                }
+            }
+            let mut values = base_values(
+                state,
+                &crate::data::Batch {
+                    tokens: tokens.clone(),
+                    targets: vec![0; b * s],
+                    mask: vec![0.0; b * s],
+                    batch: b,
+                    seq: s,
+                },
+            );
+            // fwd_logits wants only params + tokens
+            values.remove("targets");
+            values.remove("mask");
+            let inputs = assemble_inputs(self.exe.spec(), values);
+            let out = self.exe.run(&inputs)?;
+            let logits = &out[0]; // [B, S, V]
+            for i in 0..prompts.len() {
+                if done[i] {
+                    continue;
+                }
+                let pos = seqs[i].len() - 1;
+                let row =
+                    &logits.data[(i * s + pos) * v..(i * s + pos + 1) * v];
+                let next = if temperature <= 0.0 {
+                    argmax(row) as u32
+                } else {
+                    let scaled: Vec<f32> =
+                        row.iter().map(|x| x / temperature).collect();
+                    let probs = softmax(&scaled);
+                    sample(&probs, rng) as u32
+                };
+                if next == EOS {
+                    done[i] = true;
+                } else {
+                    outs[i].push(next);
+                    seqs[i].push(next);
+                    if seqs[i].len() >= s {
+                        done[i] = true;
+                    }
+                }
+            }
+        }
+        Ok(outs)
+    }
+}
+
+fn sample(probs: &[f32], rng: &mut Rng) -> usize {
+    let u = rng.uniform();
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Greedy exact-match accuracy over eval items (the correct option is
+/// the reference answer).
+pub fn generate_accuracy(
+    rt: &Runtime,
+    state: &ModelState,
+    items: &[EvalItem],
+) -> Result<f64> {
+    let gen = Generator::new(rt)?;
+    let mut rng = Rng::new(0);
+    let b = rt.cfg.batch;
+    let mut correct = 0usize;
+    for chunk in items.chunks(b) {
+        let prompts: Vec<Vec<u32>> =
+            chunk.iter().map(|i| i.prompt.clone()).collect();
+        let max_new = chunk
+            .iter()
+            .map(|i| i.options[i.correct].len())
+            .max()
+            .unwrap()
+            + 1;
+        let outs =
+            gen.generate(state, &prompts, max_new, 0.0, &mut rng)?;
+        for (item, out) in chunk.iter().zip(&outs) {
+            let want = &item.options[item.correct];
+            if out.len() >= want.len() && &out[..want.len()] == &want[..]
+            {
+                correct += 1;
+            }
+        }
+    }
+    Ok(100.0 * correct as f64 / items.len().max(1) as f64)
+}
+
+/// Pass@k via k temperature samples per item (MBPP protocol analogue).
+pub fn pass_at_k(
+    rt: &Runtime,
+    state: &ModelState,
+    items: &[EvalItem],
+    k: usize,
+    temperature: f32,
+    seed: u64,
+) -> Result<f64> {
+    let gen = Generator::new(rt)?;
+    let mut rng = Rng::new(seed);
+    let b = rt.cfg.batch;
+    let mut passed = 0usize;
+    for item in items {
+        let want = &item.options[item.correct];
+        let mut hit = false;
+        for _round in 0..k.div_ceil(b) {
+            let n = b.min(k);
+            let prompts = vec![item.prompt.clone(); n];
+            let outs = gen.generate(
+                state,
+                &prompts,
+                want.len() + 1,
+                temperature,
+                &mut rng,
+            )?;
+            if outs.iter().any(|o| {
+                o.len() >= want.len() && o[..want.len()] == want[..]
+            }) {
+                hit = true;
+                break;
+            }
+        }
+        if hit {
+            passed += 1;
+        }
+    }
+    Ok(100.0 * passed as f64 / items.len().max(1) as f64)
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness: min-perplexity option scoring (lm-eval-harness
+//! style), greedy/sampled generation, and continual-learning metrics.
+
+pub mod generate;
+pub mod ppl;
+pub mod transfer;
+
+pub use generate::{generate_accuracy, pass_at_k};
+pub use ppl::{ppl_accuracy, ppl_accuracy_by_category};
+pub use transfer::{backward_transfer, forward_transfer, average_performance};

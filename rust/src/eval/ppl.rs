@@ -1,0 +1,124 @@
+//! Min-perplexity option scoring: for each eval item, score every
+//! option's summed answer NLL through the `fwd_loss` artifact and pick
+//! the minimum (the protocol behind the paper's Table 2 / MMLU-PPL).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::state::ModelState;
+use crate::data::batcher::pack_example;
+use crate::data::{EvalItem, Example};
+use crate::methods::{assemble_inputs, base_values};
+use crate::runtime::Runtime;
+
+/// Scored candidate streams are packed batch-first; the artifact has a
+/// fixed batch size so candidates are chunked and padded.
+struct NllScorer<'rt> {
+    rt: &'rt Runtime,
+    exe: &'static crate::runtime::Executable,
+}
+
+impl<'rt> NllScorer<'rt> {
+    fn new(rt: &'rt Runtime) -> Result<Self> {
+        Ok(NllScorer {
+            rt,
+            exe: rt.load("fwd_loss")?,
+        })
+    }
+
+    /// Summed answer NLL for each (prompt, answer) pair.
+    fn score(
+        &self,
+        state: &ModelState,
+        pairs: &[Example],
+    ) -> Result<Vec<f64>> {
+        let b = self.rt.cfg.batch;
+        let s = self.rt.cfg.seq_len;
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(b) {
+            let mut tokens = Vec::with_capacity(b * s);
+            let mut targets = Vec::with_capacity(b * s);
+            let mut mask = Vec::with_capacity(b * s);
+            for i in 0..b {
+                let ex = chunk.get(i).unwrap_or(&chunk[0]);
+                let (t, y, m) = pack_example(ex, s);
+                tokens.extend(t);
+                targets.extend(y);
+                mask.extend(m);
+            }
+            let batch = crate::data::Batch {
+                tokens,
+                targets,
+                mask,
+                batch: b,
+                seq: s,
+            };
+            let values = base_values(state, &batch);
+            let inputs = assemble_inputs(self.exe.spec(), values);
+            let res = self.exe.run(&inputs)?;
+            let nll = &res[0]; // [B]
+            for i in 0..chunk.len() {
+                out.push(nll.data[i] as f64);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Accuracy of min-PPL option choice over eval items.
+pub fn ppl_accuracy(
+    rt: &Runtime,
+    state: &ModelState,
+    items: &[EvalItem],
+) -> Result<f64> {
+    Ok(ppl_accuracy_by_category(rt, state, items)?
+        .remove("__all__")
+        .unwrap_or(0.0))
+}
+
+/// Accuracy overall (key `"__all__"`) and per category (the MMLU-style
+/// breakdown of paper Table 12).
+pub fn ppl_accuracy_by_category(
+    rt: &Runtime,
+    state: &ModelState,
+    items: &[EvalItem],
+) -> Result<BTreeMap<String, f64>> {
+    let scorer = NllScorer::new(rt)?;
+    // flatten all (item, option) pairs into one scoring stream
+    let mut pairs = Vec::new();
+    for item in items {
+        for opt in &item.options {
+            pairs.push(Example {
+                prompt: item.prompt.clone(),
+                answer: opt.clone(),
+            });
+        }
+    }
+    let scores = scorer.score(state, &pairs)?;
+    let mut cursor = 0usize;
+    let mut hits: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for item in items {
+        let k = item.options.len();
+        let s = &scores[cursor..cursor + k];
+        cursor += k;
+        let best = s
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let correct = best == item.correct;
+        for key in ["__all__", item.category] {
+            let e = hits.entry(key.to_string()).or_insert((0, 0));
+            e.1 += 1;
+            if correct {
+                e.0 += 1;
+            }
+        }
+    }
+    Ok(hits
+        .into_iter()
+        .map(|(k, (c, n))| (k, 100.0 * c as f64 / n.max(1) as f64))
+        .collect())
+}

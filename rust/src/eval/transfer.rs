@@ -1,0 +1,74 @@
+//! Continual-learning metrics (paper §4.4, Table 5).
+//!
+//! With `perf[i][j]` = accuracy on task j after training through task
+//! i (1-based rows; row 0 = single-task reference `p0`):
+//!
+//! * AP  = mean_j perf[N][j]
+//! * FWT = mean_i (perf[i][i] − p0[i])
+//! * BWT = mean_{i<N} (perf[N][i] − perf[i][i])
+
+/// Average Performance after the full sequence.
+pub fn average_performance(perf: &[Vec<f64>]) -> f64 {
+    let last = perf.last().expect("empty matrix");
+    last.iter().sum::<f64>() / last.len() as f64
+}
+
+/// Forward Transfer against single-task baselines `p0`.
+pub fn forward_transfer(perf: &[Vec<f64>], p0: &[f64]) -> f64 {
+    let n = perf.len();
+    assert_eq!(p0.len(), n);
+    (0..n)
+        .map(|i| perf[i][i] - p0[i])
+        .sum::<f64>()
+        / n as f64
+}
+
+/// Backward Transfer (forgetting; more negative = worse).
+pub fn backward_transfer(perf: &[Vec<f64>]) -> f64 {
+    let n = perf.len();
+    assert!(n >= 2, "BWT needs at least two tasks");
+    (0..n - 1)
+        .map(|i| perf[n - 1][i] - perf[i][i])
+        .sum::<f64>()
+        / (n - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix() -> Vec<Vec<f64>> {
+        // 3 tasks; diagonal = just-trained accuracy
+        vec![
+            vec![80.0, 50.0, 50.0],
+            vec![70.0, 90.0, 55.0],
+            vec![60.0, 85.0, 95.0],
+        ]
+    }
+
+    #[test]
+    fn ap_is_last_row_mean() {
+        assert!((average_performance(&matrix()) - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fwt_against_single_task() {
+        let p0 = vec![75.0, 88.0, 97.0];
+        // (80-75)+(90-88)+(95-97) = 5  → /3
+        assert!(
+            (forward_transfer(&matrix(), &p0) - 5.0 / 3.0).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn bwt_measures_forgetting() {
+        // (60-80)+(85-90) = -25 → /2
+        assert!((backward_transfer(&matrix()) + 12.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_forgetting_gives_zero_bwt() {
+        let perf = vec![vec![80.0, 0.0], vec![80.0, 90.0]];
+        assert_eq!(backward_transfer(&perf), 0.0);
+    }
+}

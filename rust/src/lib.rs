@@ -1,0 +1,31 @@
+//! # LoSiA — Low-Resources Subnet Integration Adaptation
+//!
+//! Rust reproduction of *LoSiA: Efficient High-Rank Fine-Tuning via
+//! Subnet Localization and Optimization* (EMNLP 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! This crate is **Layer 3**: the training coordinator. It owns
+//!
+//! * sensitivity-importance accumulation (paper Eqs. 3–6),
+//! * greedy core-subnet localization (Algorithm 1),
+//! * the asynchronous periodic re-localization scheduler (§3.3),
+//! * learning-rate rewarming (Eq. 8),
+//! * the subnet Adam optimizer (Algorithm 2),
+//! * every baseline (FFT, LoRA, PiSSA, DoRA, GaLore),
+//! * and all substrates: tensor math + SVD, synthetic workloads,
+//!   evaluation harness, metrics, config/CLI.
+//!
+//! Compute (model forward/backward, the LoSiA-Pro factorized subnet
+//! gradient) happens inside AOT-compiled XLA artifacts produced once by
+//! `python/compile/aot.py` and executed via PJRT ([`runtime`]).
+//! Python is never on the training path.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod methods;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,115 @@
+//! `losia` CLI — train and evaluate with any method on any config.
+//!
+//! ```text
+//! losia train --config tiny --method losia-pro --task modmath \
+//!             --steps 200 --lr 1e-3 --time-slot 20
+//! losia info  --config small
+//! ```
+
+use anyhow::Result;
+
+use losia::config::{Method, TrainConfig};
+use losia::coordinator::state::ModelState;
+use losia::coordinator::trainer::Trainer;
+use losia::data::domain::{KvFacts, ModMath, StackEval};
+use losia::data::{gen_eval_set, gen_train_set, Batcher, Task};
+use losia::eval::{generate_accuracy, ppl_accuracy};
+use losia::runtime::Runtime;
+use losia::util::cli::Args;
+use losia::util::rng::Rng;
+
+fn task_by_name(name: &str) -> Box<dyn Task> {
+    match name {
+        "modmath" => Box::new(ModMath),
+        "stack" => Box::new(StackEval),
+        "kvfacts" => Box::new(KvFacts::new(64, 4, 7)),
+        other => panic!("unknown task {other:?} (modmath|stack|kvfacts)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg_name = args.get_or("config", "tiny");
+    let rt = Runtime::from_config_name(&cfg_name)?;
+    let mut tc = TrainConfig {
+        method: Method::parse(&args.get_or("method", "losia-pro"))?,
+        steps: args.get_usize("steps", 200),
+        lr: args.get_f64("lr", 1e-3),
+        time_slot: args.get_usize("time-slot", 20),
+        log_every: args.get_usize("log-every", 20),
+        seed: args.get_usize("seed", 42) as u64,
+        use_remat: args.has_flag("remat"),
+        ..TrainConfig::default()
+    };
+    tc.galore_rank = args.get_usize("galore-rank", rt.cfg.d_model / 4);
+
+    let task = task_by_name(&args.get_or("task", "modmath"));
+    let train = gen_train_set(task.as_ref(), args.get_usize("train-n", 2000), tc.seed);
+    let eval = gen_eval_set(task.as_ref(), args.get_usize("eval-n", 200), tc.seed);
+    let mut batcher =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, tc.seed);
+
+    let mut rng = Rng::new(tc.seed);
+    let mut state = ModelState::init(&rt.cfg, &mut rng);
+    let mut trainer = Trainer::new(&rt, tc)?;
+
+    let acc0 = ppl_accuracy(&rt, &state, &eval)?;
+    eprintln!("[eval] pre-train PPL-accuracy: {acc0:.2}%");
+    trainer.train(&mut state, &mut batcher)?;
+    let acc1 = ppl_accuracy(&rt, &state, &eval)?;
+    let gen1 = generate_accuracy(&rt, &state, &eval)?;
+    println!(
+        "method={} steps={} final_loss={:.4} ppl_acc={:.2}% gen_acc={:.2}% \
+         us_per_token={:.1} trainable={}",
+        trainer.driver.method().name(),
+        trainer.tc.steps,
+        trainer.tail_loss(10),
+        acc1,
+        gen1,
+        trainer.us_per_token(),
+        trainer.driver.trainable_params(),
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg_name = args.get_or("config", "tiny");
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::load_manifest(&dir, &cfg_name)?;
+    println!(
+        "config {} — vocab {} d_model {} heads {} ff {} layers {} \
+         seq {} batch {} params {}",
+        cfg.name,
+        cfg.vocab,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.n_layers,
+        cfg.seq_len,
+        cfg.batch,
+        cfg.param_count
+    );
+    for (name, a) in &cfg.artifacts {
+        println!(
+            "  artifact {name}: {} inputs, {} outputs ({})",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file.display()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&["remat"]);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: losia <train|info> [--config C] [--method M] \
+                 [--task T] [--steps N] [--lr F] [--time-slot N] [--remat]"
+            );
+            Ok(())
+        }
+    }
+}

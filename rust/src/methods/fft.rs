@@ -1,0 +1,70 @@
+//! Full-parameter fine-tuning (the FFT upper-bound baseline).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::data::Batch;
+use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
+use crate::runtime::{Executable, Runtime};
+
+pub struct FftDriver {
+    exe: &'static Executable,
+    adam: BTreeMap<String, AdamState>,
+    total: usize,
+}
+
+impl FftDriver {
+    pub fn new(rt: &Runtime, tc: &TrainConfig) -> Result<Self> {
+        let exe =
+            rt.load(&grads_artifact("grads_full", tc.use_remat, rt))?;
+        let hp = AdamParams {
+            beta1: tc.adam_beta1 as f32,
+            beta2: tc.adam_beta2 as f32,
+            eps: tc.adam_eps as f32,
+        };
+        let mut adam = BTreeMap::new();
+        let mut total = 0usize;
+        for (name, shape) in &rt.cfg.params {
+            adam.insert(name.clone(), AdamState::new(shape, hp));
+            total += shape.iter().product::<usize>();
+        }
+        Ok(FftDriver { exe, adam, total })
+    }
+}
+
+impl Driver for FftDriver {
+    fn method(&self) -> Method {
+        Method::Fft
+    }
+
+    fn trainable_params(&self) -> usize {
+        self.total
+    }
+
+    fn step(
+        &mut self,
+        state: &mut ModelState,
+        batch: &Batch,
+        _t: usize,
+        lr: f64,
+    ) -> Result<f64> {
+        let values = base_values(state, batch);
+        let inputs = assemble_inputs(self.exe.spec(), values);
+        let out = self.exe.run(&inputs)?;
+        let loss = out[0].data[0] as f64;
+        for (spec, g) in
+            self.exe.spec().outputs[1..].iter().zip(&out[1..])
+        {
+            let name = spec.name.strip_prefix("g_").unwrap();
+            let adam = self.adam.get_mut(name).unwrap();
+            let mut upd = adam.update(g, lr as f32);
+            upd.scale_assign(-1.0);
+            state.get_mut(name).add_assign(&upd);
+        }
+        Ok(loss)
+    }
+}

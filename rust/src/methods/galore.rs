@@ -1,0 +1,144 @@
+//! GaLore driver (Zhao et al. 2024): memory-efficient training by
+//! low-rank gradient projection.
+//!
+//! Per linear matrix, the gradient G ∈ R^{n×m} is projected to
+//! Pᵀ G ∈ R^{R×m} where P holds the top-R left singular vectors of a
+//! recent gradient; Adam runs in the projected space and the update is
+//! back-projected: W ← W − P·(adam step). The projector refreshes every
+//! `galore_period` steps ("Full Proj" strategy in the paper's setup).
+//! The output layer is fully fine-tuned (paper Appendix A.4.1).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::data::Batch;
+use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::svd::left_singular_topk;
+use crate::tensor::Tensor;
+
+pub struct GaloreDriver {
+    cfg: ModelCfg,
+    exe: &'static Executable,
+    rank: usize,
+    period: usize,
+    /// projector per (kind, layer)
+    projectors: BTreeMap<(String, usize), Tensor>,
+    /// projected-space Adam per (kind, layer)
+    adam: BTreeMap<(String, usize), AdamState>,
+    /// dense Adam over the output layer
+    lm_adam: AdamState,
+    hp: AdamParams,
+}
+
+impl GaloreDriver {
+    pub fn new(rt: &Runtime, tc: &TrainConfig) -> Result<Self> {
+        let cfg = rt.cfg.clone();
+        let exe =
+            rt.load(&grads_artifact("grads_full", tc.use_remat, rt))?;
+        let hp = AdamParams {
+            beta1: tc.adam_beta1 as f32,
+            beta2: tc.adam_beta2 as f32,
+            eps: tc.adam_eps as f32,
+        };
+        let lm_adam =
+            AdamState::new(&[cfg.d_model, cfg.vocab], hp);
+        Ok(GaloreDriver {
+            cfg,
+            exe,
+            rank: tc.galore_rank,
+            period: tc.galore_period.max(1),
+            projectors: BTreeMap::new(),
+            adam: BTreeMap::new(),
+            lm_adam,
+            hp,
+        })
+    }
+
+    fn effective_rank(&self, n: usize) -> usize {
+        self.rank.min(n)
+    }
+}
+
+impl Driver for GaloreDriver {
+    fn method(&self) -> Method {
+        Method::Galore
+    }
+
+    fn trainable_params(&self) -> usize {
+        // projected optimizer coordinates + full output layer
+        let proj: usize = self
+            .cfg
+            .linear_kinds
+            .iter()
+            .map(|kind| {
+                let kd = self.cfg.kind(kind);
+                self.cfg.n_layers * self.effective_rank(kd.n) * kd.m
+            })
+            .sum();
+        proj + self.cfg.d_model * self.cfg.vocab
+    }
+
+    fn step(
+        &mut self,
+        state: &mut ModelState,
+        batch: &Batch,
+        t: usize,
+        lr: f64,
+    ) -> Result<f64> {
+        let values = base_values(state, batch);
+        let inputs = assemble_inputs(self.exe.spec(), values);
+        let out = self.exe.run(&inputs)?;
+        let loss = out[0].data[0] as f64;
+        let mut grads = BTreeMap::new();
+        for (spec, g) in
+            self.exe.spec().outputs[1..].iter().zip(&out[1..])
+        {
+            grads.insert(
+                spec.name.strip_prefix("g_").unwrap().to_string(),
+                g.clone(),
+            );
+        }
+
+        for kind in self.cfg.linear_kinds.clone() {
+            let kd = self.cfg.kind(&kind);
+            let r = self.effective_rank(kd.n);
+            for l in 0..self.cfg.n_layers {
+                let g = grads[&kind].index_axis0(l);
+                let key = (kind.clone(), l);
+                // refresh the projector on schedule (and at t = 0)
+                if t % self.period == 0
+                    || !self.projectors.contains_key(&key)
+                {
+                    self.projectors
+                        .insert(key.clone(), left_singular_topk(&g, r));
+                    self.adam
+                        .entry(key.clone())
+                        .or_insert_with(|| {
+                            AdamState::new(&[r, kd.m], self.hp)
+                        })
+                        .reset();
+                }
+                let p = &self.projectors[&key];
+                let g_proj = p.transpose2().matmul(&g); // [R, m]
+                let adam = self.adam.get_mut(&key).unwrap();
+                let upd = adam.update(&g_proj, lr as f32); // [R, m]
+                let mut back = p.matmul(&upd); // [n, m]
+                back.scale_assign(-1.0);
+                let mut w = state.get_mut(&kind).index_axis0(l);
+                w.add_assign(&back);
+                state.get_mut(&kind).set_axis0(l, &w);
+            }
+        }
+
+        // full fine-tuning of the output layer
+        let mut upd = self.lm_adam.update(&grads["lm_head"], lr as f32);
+        upd.scale_assign(-1.0);
+        state.get_mut("lm_head").add_assign(&upd);
+        Ok(loss)
+    }
+}

@@ -1,0 +1,258 @@
+//! LoRA / PiSSA / DoRA drivers.
+//!
+//! LoRA (Hu et al. 2022): ΔW = (α/r)·A·B with A ~ N(0, 1/n), B = 0.
+//! PiSSA (Meng et al. 2024): same architecture, but (A, B) initialised
+//! from the top-r singular triplets of W, with the principal component
+//! subtracted from the frozen weight.
+//! DoRA (Liu et al. 2024): adds a per-column magnitude vector over the
+//! direction-normalised W + ΔW (its own artifact with the extra
+//! backward cost the paper's Table 16 measures).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::data::Batch;
+use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
+use crate::runtime::{Executable, HostValue, Runtime};
+use crate::tensor::svd::svd;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct LoraDriver {
+    dora: bool,
+    pissa: bool,
+    cfg: ModelCfg,
+    exe: &'static Executable,
+    /// adapter tensors by artifact input name (la_*, lb_*, mag_*)
+    adapters: BTreeMap<String, Tensor>,
+    adam: BTreeMap<String, AdamState>,
+}
+
+impl LoraDriver {
+    pub fn new(rt: &Runtime, tc: &TrainConfig, dora: bool) -> Result<Self> {
+        let cfg = rt.cfg.clone();
+        let base = if dora { "grads_dora" } else { "grads_lora" };
+        let exe = rt.load(&grads_artifact(base, tc.use_remat, rt))?;
+        let hp = AdamParams {
+            beta1: tc.adam_beta1 as f32,
+            beta2: tc.adam_beta2 as f32,
+            eps: tc.adam_eps as f32,
+        };
+        let mut rng = Rng::new(tc.seed ^ 0x70A);
+        let mut adapters = BTreeMap::new();
+        let mut adam = BTreeMap::new();
+        let (l, r) = (cfg.n_layers, cfg.lora_rank);
+        for kind in &cfg.linear_kinds {
+            let kd = cfg.kind(kind);
+            let la = Tensor::randn(
+                &[l, kd.n, r],
+                1.0 / (kd.n as f32).sqrt(),
+                &mut rng,
+            );
+            let lb = Tensor::zeros(&[l, r, kd.m]);
+            adam.insert(
+                format!("la_{kind}"),
+                AdamState::new(&la.shape, hp),
+            );
+            adam.insert(
+                format!("lb_{kind}"),
+                AdamState::new(&lb.shape, hp),
+            );
+            adapters.insert(format!("la_{kind}"), la);
+            adapters.insert(format!("lb_{kind}"), lb);
+            if dora {
+                let mag = Tensor::ones(&[l, kd.m]);
+                adam.insert(
+                    format!("mag_{kind}"),
+                    AdamState::new(&mag.shape, hp),
+                );
+                adapters.insert(format!("mag_{kind}"), mag);
+            }
+        }
+        Ok(LoraDriver {
+            dora,
+            pissa: tc.method == Method::Pissa,
+            cfg,
+            exe,
+            adapters,
+            adam,
+        })
+    }
+}
+
+impl Driver for LoraDriver {
+    fn method(&self) -> Method {
+        if self.dora {
+            Method::Dora
+        } else if self.pissa {
+            Method::Pissa
+        } else {
+            Method::Lora
+        }
+    }
+
+    fn trainable_params(&self) -> usize {
+        self.adapters.values().map(|t| t.len()).sum()
+    }
+
+    fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
+        if self.dora {
+            // DoRA init: magnitude = column norm of W (so W' = W at t=0)
+            for kind in self.cfg.linear_kinds.clone() {
+                let kd = self.cfg.kind(&kind);
+                let mag = self.adapters.get_mut(&format!("mag_{kind}")).unwrap();
+                for l in 0..self.cfg.n_layers {
+                    let w = state.layer(&kind, l);
+                    for j in 0..kd.m {
+                        let norm: f32 = (0..kd.n)
+                            .map(|i| w.at2(i, j) * w.at2(i, j))
+                            .sum::<f32>()
+                            .sqrt();
+                        mag.data[l * kd.m + j] = norm;
+                    }
+                }
+            }
+        }
+        if self.pissa {
+            // PiSSA init: A = U_r √S / √s, B = √S V_rᵀ / √s with
+            // s = α/r so the artifact's scale cancels; the principal
+            // component is subtracted from the frozen weight.
+            let scale =
+                (self.cfg.lora_alpha / self.cfg.lora_rank as f64) as f32;
+            let root = scale.sqrt();
+            for kind in self.cfg.linear_kinds.clone() {
+                let kd = self.cfg.kind(&kind);
+                let r = self.cfg.lora_rank.min(kd.n).min(kd.m);
+                for l in 0..self.cfg.n_layers {
+                    let w = state.layer(&kind, l);
+                    let dec = svd(&w);
+                    let mut la =
+                        Tensor::zeros(&[kd.n, self.cfg.lora_rank]);
+                    let mut lb =
+                        Tensor::zeros(&[self.cfg.lora_rank, kd.m]);
+                    let ucols = dec.u.shape[1];
+                    let vcols = dec.v.shape[1];
+                    for t in 0..r {
+                        let s_sqrt = dec.s[t].sqrt();
+                        for i in 0..kd.n {
+                            la.data[i * self.cfg.lora_rank + t] =
+                                dec.u.data[i * ucols + t] * s_sqrt
+                                    / root;
+                        }
+                        for j in 0..kd.m {
+                            lb.data[t * kd.m + j] =
+                                dec.v.data[j * vcols + t] * s_sqrt
+                                    / root;
+                        }
+                    }
+                    // W_res = W − scale·(A·B)  (== W − U_r S V_rᵀ)
+                    let mut principal = la.matmul(&lb);
+                    principal.scale_assign(-scale);
+                    let mut w_res = w.clone();
+                    w_res.add_assign(&principal);
+                    state.get_mut(&kind).set_axis0(l, &w_res);
+                    self.adapters
+                        .get_mut(&format!("la_{kind}"))
+                        .unwrap()
+                        .set_axis0(l, &la);
+                    self.adapters
+                        .get_mut(&format!("lb_{kind}"))
+                        .unwrap()
+                        .set_axis0(l, &lb);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize(&mut self, state: &mut ModelState) -> Result<()> {
+        // Merge adapters into the backbone: W ← W + scale·A·B (LoRA,
+        // PiSSA) or the full magnitude/direction recomposition (DoRA).
+        // Adapters are zeroed afterwards so finalize is idempotent.
+        let scale =
+            (self.cfg.lora_alpha / self.cfg.lora_rank as f64) as f32;
+        for kind in self.cfg.linear_kinds.clone() {
+            let kd = self.cfg.kind(&kind);
+            for l in 0..self.cfg.n_layers {
+                let la = self.adapters[&format!("la_{kind}")]
+                    .index_axis0(l);
+                let lb = self.adapters[&format!("lb_{kind}")]
+                    .index_axis0(l);
+                let mut delta = la.matmul(&lb);
+                delta.scale_assign(scale);
+                let mut w = state.layer(&kind, l);
+                w.add_assign(&delta);
+                if self.dora {
+                    let mag = self.adapters[&format!("mag_{kind}")]
+                        .index_axis0(l);
+                    for j in 0..kd.m {
+                        let norm: f32 = (0..kd.n)
+                            .map(|i| w.at2(i, j) * w.at2(i, j))
+                            .sum::<f32>()
+                            .sqrt()
+                            .max(1e-8);
+                        let s = mag.data[j] / norm;
+                        for i in 0..kd.n {
+                            let v = w.at2(i, j) * s;
+                            w.set2(i, j, v);
+                        }
+                    }
+                }
+                state.get_mut(&kind).set_axis0(l, &w);
+            }
+            // zero the merged adapters (keep A, zero B ⇒ ΔW = 0)
+            let lb =
+                self.adapters.get_mut(&format!("lb_{kind}")).unwrap();
+            lb.data.iter_mut().for_each(|x| *x = 0.0);
+            if self.dora {
+                // reset magnitudes to the merged column norms
+                let kdm = self.cfg.kind(&kind);
+                let mag = self
+                    .adapters
+                    .get_mut(&format!("mag_{kind}"))
+                    .unwrap();
+                for l in 0..self.cfg.n_layers {
+                    let w = state.layer(&kind, l);
+                    for j in 0..kdm.m {
+                        let norm: f32 = (0..kdm.n)
+                            .map(|i| w.at2(i, j) * w.at2(i, j))
+                            .sum::<f32>()
+                            .sqrt();
+                        mag.data[l * kdm.m + j] = norm;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        state: &mut ModelState,
+        batch: &Batch,
+        _t: usize,
+        lr: f64,
+    ) -> Result<f64> {
+        let mut values = base_values(state, batch);
+        for (name, t) in &self.adapters {
+            values.insert(name.clone(), HostValue::F32(t.clone()));
+        }
+        let inputs = assemble_inputs(self.exe.spec(), values);
+        let out = self.exe.run(&inputs)?;
+        let loss = out[0].data[0] as f64;
+        for (spec, g) in
+            self.exe.spec().outputs[1..].iter().zip(&out[1..])
+        {
+            let name = spec.name.strip_prefix("g_").unwrap();
+            let adam = self.adam.get_mut(name).unwrap();
+            let mut upd = adam.update(g, lr as f32);
+            upd.scale_assign(-1.0);
+            self.adapters.get_mut(name).unwrap().add_assign(&upd);
+        }
+        Ok(loss)
+    }
+}

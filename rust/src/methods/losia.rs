@@ -1,0 +1,707 @@
+//! LoSiA / LoSiA-Pro driver (paper Algorithm 2).
+//!
+//! * **LoSiA** executes the full-gradient artifact every step and
+//!   gathers the subnet slice on the host; importance profiling comes
+//!   free from the already-materialised full gradients.
+//! * **LoSiA-Pro** executes the factorized-subnet artifact (whose
+//!   backward runs the L1 Pallas gather-GEMM kernel, Eq. 9) and adds
+//!   one probe call per step *only* during the profiled layer's slot.
+//!
+//! Both share: asynchronous slot schedule, sensitivity importance EMA,
+//! greedy localization, LR rewarming, compact subnet Adam moments, and
+//! the p_o-reduced output-layer subnet.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::coordinator::importance::{ImportanceAccum, ImportanceMode};
+use crate::coordinator::localize::{localize, localize_columns, Selection};
+use crate::coordinator::rewarm::Rewarmer;
+use crate::coordinator::schedule::AsyncSchedule;
+use crate::coordinator::state::ModelState;
+use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
+use crate::data::Batch;
+use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
+use crate::runtime::{Executable, HostValue, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub struct LosiaDriver {
+    pro: bool,
+    cfg: ModelCfg,
+    tc: TrainConfig,
+    exe_step: &'static Executable,
+    /// per-layer, per-kind subnet state
+    subnets: Vec<BTreeMap<String, SubnetState>>,
+    /// output-layer selected columns γ_out (|γ| = p_o·V)
+    lm_sel: Vec<usize>,
+    /// Adam over the [d, |γ_out|] output subnet
+    lm_adam: AdamState,
+    /// FFTO ablation: dense Adam over the full lm_head
+    lm_full_adam: Option<AdamState>,
+    /// importance accumulators for the currently-profiled group
+    accums: Option<(usize, BTreeMap<String, ImportanceAccum>)>,
+    /// SL-ablation accumulators (all layers profile simultaneously)
+    sl_accums: Vec<BTreeMap<String, ImportanceAccum>>,
+    sched: AsyncSchedule,
+    rewarmer: Rewarmer,
+    warmup_steps: usize,
+    /// (step, layer, kind, selection) log for Figures 3/7
+    pub selection_log: Vec<(usize, usize, String, Selection)>,
+    /// cached zero-delta inputs (identical every step — perf: avoids
+    /// re-allocating ~p²·|W| floats per call)
+    zero_deltas: BTreeMap<String, HostValue>,
+}
+
+impl LosiaDriver {
+    pub fn new(rt: &Runtime, tc: &TrainConfig) -> Result<Self> {
+        let cfg = rt.cfg.clone();
+        let pro = tc.method == Method::LosiaPro;
+        anyhow::ensure!(
+            !(tc.ablation.synchronous && pro),
+            "SL ablation requires full gradients: use method=losia"
+        );
+        anyhow::ensure!(
+            !(tc.ablation.fft_output && pro),
+            "FFTO ablation uses full lm_head grads: use method=losia"
+        );
+        anyhow::ensure!(
+            !(tc.rank_factor_override.is_some() && pro),
+            "rank-factor override needs the host-gather path: \
+             use method=losia"
+        );
+        // Table-11 sweep: recompute subnet dims under an overridden p.
+        let mut cfg = cfg;
+        if let Some(p) = tc.rank_factor_override {
+            anyhow::ensure!(p > 0.0 && p <= 1.0, "bad rank factor {p}");
+            for kd in cfg.kinds.values_mut() {
+                kd.np = ((kd.n as f64 * p) as usize).max(1);
+                kd.mp = ((kd.m as f64 * p) as usize).max(1);
+            }
+        }
+        let step_name = if pro {
+            grads_artifact("grads_losia", tc.use_remat, rt)
+        } else {
+            grads_artifact("grads_full", tc.use_remat, rt)
+        };
+        let exe_step = rt.load(&step_name)?;
+
+        let hp = AdamParams {
+            beta1: tc.adam_beta1 as f32,
+            beta2: tc.adam_beta2 as f32,
+            eps: tc.adam_eps as f32,
+        };
+        let mut rng = Rng::new(tc.seed ^ 0x105A);
+        // Algorithm 2 line 3: random initial selection per matrix
+        let subnets: Vec<BTreeMap<String, SubnetState>> = (0..cfg
+            .n_layers)
+            .map(|_| {
+                cfg.linear_kinds
+                    .iter()
+                    .map(|kind| {
+                        let kd = cfg.kind(kind);
+                        let sel = Selection::random(
+                            kd.n, kd.m, kd.np, kd.mp, &mut rng,
+                        );
+                        (
+                            kind.clone(),
+                            SubnetState::new(kd.n, kd.m, sel, hp),
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let lm_sel = rng.choose_distinct(cfg.vocab, cfg.vocab_sub);
+        let lm_adam =
+            AdamState::new(&[cfg.d_model, cfg.vocab_sub], hp);
+        let lm_full_adam = tc.ablation.fft_output.then(|| {
+            AdamState::new(&[cfg.d_model, cfg.vocab], hp)
+        });
+        // groups = L decoder layers + 1 output-layer group
+        let sched = AsyncSchedule::new(
+            cfg.n_layers + 1,
+            tc.time_slot,
+            tc.ablation.synchronous,
+        );
+        let rewarmer = Rewarmer {
+            time_slot: tc.time_slot,
+            enabled: !tc.ablation.no_rewarm,
+        };
+        let mut zero_deltas = BTreeMap::new();
+        if pro {
+            for kind in &cfg.linear_kinds {
+                let kd = cfg.kind(kind);
+                zero_deltas.insert(
+                    format!("dws_{kind}"),
+                    HostValue::F32(Tensor::zeros(&[
+                        cfg.n_layers,
+                        kd.np,
+                        kd.mp,
+                    ])),
+                );
+            }
+            zero_deltas.insert(
+                "dws_out".into(),
+                HostValue::F32(Tensor::zeros(&[
+                    cfg.d_model,
+                    cfg.vocab_sub,
+                ])),
+            );
+        }
+        Ok(LosiaDriver {
+            pro,
+            cfg,
+            tc: tc.clone(),
+            exe_step,
+            subnets,
+            lm_sel,
+            lm_adam,
+            lm_full_adam,
+            accums: None,
+            sl_accums: Vec::new(),
+            sched,
+            rewarmer,
+            warmup_steps: 0, // set by the trainer via set_warmup
+            selection_log: Vec::new(),
+            zero_deltas,
+        })
+    }
+
+    /// The trainer passes the global warmup duration T_w (Eq. 8 Cond).
+    pub fn set_warmup(&mut self, warmup_steps: usize) {
+        self.warmup_steps = warmup_steps;
+    }
+
+    fn importance_mode(&self) -> ImportanceMode {
+        if self.tc.ablation.gradient_importance {
+            ImportanceMode::GradientMagnitude
+        } else {
+            ImportanceMode::Sensitivity
+        }
+    }
+
+    /// Index inputs (rho_*, gamma_*, gamma_out) in ABI shapes.
+    fn index_values(&self) -> BTreeMap<String, HostValue> {
+        let mut map = BTreeMap::new();
+        for kind in &self.cfg.linear_kinds {
+            let kd = self.cfg.kind(kind);
+            let mut rho = Vec::with_capacity(self.cfg.n_layers * kd.np);
+            let mut gamma =
+                Vec::with_capacity(self.cfg.n_layers * kd.mp);
+            for l in 0..self.cfg.n_layers {
+                let sel = &self.subnets[l][kind].sel;
+                rho.extend_from_slice(&sel.rho);
+                gamma.extend_from_slice(&sel.gamma);
+            }
+            map.insert(
+                format!("rho_{kind}"),
+                HostValue::from_indices(
+                    &[self.cfg.n_layers, kd.np],
+                    &rho,
+                ),
+            );
+            map.insert(
+                format!("gamma_{kind}"),
+                HostValue::from_indices(
+                    &[self.cfg.n_layers, kd.mp],
+                    &gamma,
+                ),
+            );
+        }
+        map.insert(
+            "gamma_out".into(),
+            HostValue::from_indices(&[self.cfg.vocab_sub], &self.lm_sel),
+        );
+        map
+    }
+
+    /// Ensure accumulators exist for group `g`.
+    fn ensure_accums(&mut self, g: usize) {
+        let stale = match &self.accums {
+            Some((cur, _)) => *cur != g,
+            None => true,
+        };
+        if !stale {
+            return;
+        }
+        let beta = self.tc.ema_beta as f32;
+        let mode = self.importance_mode();
+        let mut map = BTreeMap::new();
+        if g < self.cfg.n_layers {
+            for kind in &self.cfg.linear_kinds {
+                let kd = self.cfg.kind(kind);
+                map.insert(
+                    kind.clone(),
+                    ImportanceAccum::new(&[kd.n, kd.m], beta, beta, mode),
+                );
+            }
+        } else {
+            map.insert(
+                "lm_head".into(),
+                ImportanceAccum::new(
+                    &[self.cfg.d_model, self.cfg.vocab],
+                    beta,
+                    beta,
+                    mode,
+                ),
+            );
+        }
+        self.accums = Some((g, map));
+    }
+
+    /// Fold a profiled layer's full gradients into the accumulators.
+    fn accumulate(
+        &mut self,
+        g: usize,
+        state: &ModelState,
+        grads: &BTreeMap<String, Tensor>,
+    ) {
+        self.ensure_accums(g);
+        let Some((_, accums)) = &mut self.accums else {
+            unreachable!()
+        };
+        if g < self.cfg.n_layers {
+            for kind in &self.cfg.linear_kinds {
+                let w = state.layer(kind, g);
+                let grad = &grads[kind];
+                accums.get_mut(kind).unwrap().update(&w, grad);
+            }
+        } else {
+            accums
+                .get_mut("lm_head")
+                .unwrap()
+                .update(state.get("lm_head"), &grads["lm_head"]);
+        }
+    }
+
+    /// Re-localize every matrix of group `g` (Algorithm 2 lines 26–34).
+    fn relocalize(&mut self, g: usize, t: usize) {
+        let Some((cur, accums)) = self.accums.take() else {
+            return; // no stats accumulated (e.g. ReLO) — keep subnet
+        };
+        if cur != g {
+            self.accums = Some((cur, accums));
+            return;
+        }
+        if g < self.cfg.n_layers {
+            for kind in self.cfg.linear_kinds.clone() {
+                let kd = self.cfg.kind(&kind);
+                let score = accums[&kind].score();
+                let sel = localize(&score, kd.np, kd.mp);
+                self.selection_log.push((
+                    t,
+                    g,
+                    kind.clone(),
+                    sel.clone(),
+                ));
+                self.subnets[g].get_mut(&kind).unwrap().relocalize(sel);
+            }
+        } else {
+            let score = accums["lm_head"].score();
+            let col_imp = score.col_sums();
+            self.lm_sel =
+                localize_columns(&col_imp, self.cfg.vocab_sub);
+            self.lm_adam.reset();
+            self.selection_log.push((
+                t,
+                g,
+                "lm_head".into(),
+                Selection {
+                    rho: Vec::new(),
+                    gamma: self.lm_sel.clone(),
+                },
+            ));
+        }
+    }
+
+    /// Per-group effective LR = base · rewarm factor (Eq. 8).
+    fn group_lr(&self, t: usize, g: usize, base: f64) -> f32 {
+        let factor = self.rewarmer.factor(
+            t,
+            self.sched.last_relocalize(t.saturating_sub(1), g),
+            self.warmup_steps,
+        );
+        (base * factor) as f32
+    }
+
+    /// Run the fused Pro artifact: returns (loss, subnet grads in
+    /// delta-ABI order, probe-layer full grads by kind, lm full grad).
+    fn run_pro(
+        &self,
+        state: &ModelState,
+        batch: &Batch,
+        probe: usize,
+    ) -> Result<(f64, Vec<Tensor>, BTreeMap<String, Tensor>, Tensor)>
+    {
+        let mut values = base_values(state, batch);
+        values.extend(self.zero_deltas.clone());
+        values.extend(self.index_values());
+        values.insert(
+            "probe".into(),
+            HostValue::scalar_i32(probe as i32),
+        );
+        let inputs = assemble_inputs(self.exe_step.spec(), values);
+        let mut out = self.exe_step.run(&inputs)?;
+        let loss = out[0].data[0] as f64;
+        let lm_grad = out.pop().expect("probe_lm_head output");
+        let kinds = self.cfg.linear_kinds.len();
+        let probe_grads: BTreeMap<String, Tensor> = self
+            .cfg
+            .linear_kinds
+            .iter()
+            .cloned()
+            .zip(out.split_off(out.len() - kinds))
+            .collect();
+        out.remove(0); // loss
+        Ok((loss, out, probe_grads, lm_grad))
+    }
+
+    /// Run the full-grad artifact and return (loss, grads by name).
+    fn run_full(
+        &self,
+        state: &ModelState,
+        batch: &Batch,
+    ) -> Result<(f64, BTreeMap<String, Tensor>)> {
+        let values = base_values(state, batch);
+        let inputs = assemble_inputs(self.exe_step.spec(), values);
+        let out = self.exe_step.run(&inputs)?;
+        let loss = out[0].data[0] as f64;
+        let mut grads = BTreeMap::new();
+        for (spec, t) in
+            self.exe_step.spec().outputs[1..].iter().zip(&out[1..])
+        {
+            let name = spec.name.strip_prefix("g_").unwrap();
+            grads.insert(name.to_string(), t.clone());
+        }
+        Ok((loss, grads))
+    }
+
+    /// Apply the output-layer subnet update.
+    fn update_lm(
+        &mut self,
+        state: &mut ModelState,
+        g_out: &Tensor,
+        lr: f32,
+    ) {
+        let mut upd = self.lm_adam.update(g_out, lr);
+        upd.scale_assign(-1.0);
+        let rho_all: Vec<usize> = (0..self.cfg.d_model).collect();
+        state
+            .get_mut("lm_head")
+            .scatter_add2(&rho_all, &self.lm_sel, &upd);
+    }
+}
+
+impl Driver for LosiaDriver {
+    fn set_warmup(&mut self, warmup_steps: usize) {
+        self.warmup_steps = warmup_steps;
+    }
+
+    fn method(&self) -> Method {
+        if self.pro {
+            Method::LosiaPro
+        } else {
+            Method::Losia
+        }
+    }
+
+    fn selection_history(
+        &self,
+    ) -> Vec<(usize, usize, String, Vec<usize>, Vec<usize>)> {
+        self.selection_log
+            .iter()
+            .map(|(t, l, k, sel)| {
+                (*t, *l, k.clone(), sel.rho.clone(), sel.gamma.clone())
+            })
+            .collect()
+    }
+
+    fn trainable_params(&self) -> usize {
+        let subnet: usize = self
+            .subnets
+            .iter()
+            .flat_map(|l| l.values())
+            .map(|s| s.trainable_params())
+            .sum();
+        let lm = if self.tc.ablation.fft_output {
+            self.cfg.d_model * self.cfg.vocab
+        } else {
+            self.cfg.d_model * self.cfg.vocab_sub
+        };
+        subnet + lm
+    }
+
+    fn selection_snapshot(
+        &self,
+    ) -> Option<Vec<(usize, String, Vec<usize>, Vec<usize>)>> {
+        let mut out = Vec::new();
+        for (l, layer) in self.subnets.iter().enumerate() {
+            for (kind, st) in layer {
+                out.push((
+                    l,
+                    kind.clone(),
+                    st.sel.rho.clone(),
+                    st.sel.gamma.clone(),
+                ));
+            }
+        }
+        out.push((
+            self.cfg.n_layers,
+            "lm_head".into(),
+            Vec::new(),
+            self.lm_sel.clone(),
+        ));
+        Some(out)
+    }
+
+    fn step(
+        &mut self,
+        state: &mut ModelState,
+        batch: &Batch,
+        t: usize,
+        lr: f64,
+    ) -> Result<f64> {
+        let groups = self.sched.groups;
+        let profiling = !self.tc.ablation.no_relocalize;
+
+        // ---- gradients -------------------------------------------------
+        let (loss, subnet_grads, full_grads);
+        let mut probe_grads: Option<(BTreeMap<String, Tensor>, Tensor)> =
+            None;
+        if self.pro {
+            // probe the currently-profiled decoder layer (the lm_head
+            // group reuses slot 0's layer grads but only consumes the
+            // lm output)
+            let g = self.sched.profiling_group(t);
+            let probe_layer = g.min(self.cfg.n_layers - 1);
+            let (l, outs, pg, lmg) =
+                self.run_pro(state, batch, probe_layer)?;
+            loss = l;
+            subnet_grads = Some(outs);
+            probe_grads = Some((pg, lmg));
+            full_grads = None;
+        } else {
+            let (l, grads) = self.run_full(state, batch)?;
+            loss = l;
+            subnet_grads = None;
+            full_grads = Some(grads);
+        }
+
+        // ---- importance profiling --------------------------------------
+        if profiling {
+            if self.tc.ablation.synchronous {
+                // SL: every decoder layer profiles every step
+                let grads = full_grads.as_ref().expect("SL needs full");
+                for g in 0..self.cfg.n_layers {
+                    let per_layer: BTreeMap<String, Tensor> = self
+                        .cfg
+                        .linear_kinds
+                        .iter()
+                        .map(|k| {
+                            (k.clone(), grads[k].index_axis0(g))
+                        })
+                        .collect();
+                    // ensure_accums keyed per group won't work for SL's
+                    // simultaneous groups; SL keeps only layer stats in
+                    // a rolling map keyed by group index.
+                    self.ensure_accums_sync(g);
+                    self.accumulate_sync(g, state, &per_layer);
+                }
+            } else {
+                let g = self.sched.profiling_group(t);
+                let action = self.sched.action(t, g);
+                if action.profile {
+                    let per: BTreeMap<String, Tensor> = if g
+                        < self.cfg.n_layers
+                    {
+                        match (&full_grads, &probe_grads) {
+                            (Some(grads), _) => self
+                                .cfg
+                                .linear_kinds
+                                .iter()
+                                .map(|k| {
+                                    (k.clone(), grads[k].index_axis0(g))
+                                })
+                                .collect(),
+                            (_, Some((pg, _))) => pg.clone(),
+                            _ => unreachable!(),
+                        }
+                    } else {
+                        let lm = match (&full_grads, &probe_grads) {
+                            (Some(grads), _) => {
+                                grads["lm_head"].clone()
+                            }
+                            (_, Some((_, lmg))) => lmg.clone(),
+                            _ => unreachable!(),
+                        };
+                        let mut m = BTreeMap::new();
+                        m.insert("lm_head".to_string(), lm);
+                        m
+                    };
+                    self.accumulate(g, state, &per);
+                }
+            }
+        }
+
+        // ---- updates ---------------------------------------------------
+        match (&subnet_grads, &full_grads) {
+            (Some(outs), _) => {
+                // Pro: outputs follow delta ABI order: dws_<kind>
+                // stacked [L, np, mp], then dws_out.
+                for (ki, kind) in
+                    self.cfg.linear_kinds.clone().iter().enumerate()
+                {
+                    let stacked = &outs[ki];
+                    for l in 0..self.cfg.n_layers {
+                        let glr = self.group_lr(t, l, lr);
+                        let gsub = stacked.index_axis0(l);
+                        let mut w = state.get_mut(kind).index_axis0(l);
+                        self.subnets[l]
+                            .get_mut(kind)
+                            .unwrap()
+                            .apply_update(&mut w, &gsub, glr);
+                        state.get_mut(kind).set_axis0(l, &w);
+                    }
+                }
+                let g_out = &outs[self.cfg.linear_kinds.len()];
+                let glr = self.group_lr(t, self.cfg.n_layers, lr);
+                self.update_lm(state, g_out, glr);
+            }
+            (_, Some(grads)) => {
+                // LoSiA: gather subnet slices from full gradients
+                for kind in self.cfg.linear_kinds.clone() {
+                    for l in 0..self.cfg.n_layers {
+                        let glr = self.group_lr(t, l, lr);
+                        let st =
+                            self.subnets[l].get_mut(&kind).unwrap();
+                        let gl = grads[&kind].index_axis0(l);
+                        let gsub =
+                            gl.gather2(&st.sel.rho, &st.sel.gamma);
+                        let mut w = state.get_mut(&kind).index_axis0(l);
+                        st.apply_update(&mut w, &gsub, glr);
+                        state.get_mut(&kind).set_axis0(l, &w);
+                    }
+                }
+                let glr = self.group_lr(t, self.cfg.n_layers, lr);
+                if let Some(lm_full) = &mut self.lm_full_adam {
+                    // FFTO: dense update of the whole output layer
+                    let mut upd =
+                        lm_full.update(&grads["lm_head"], glr);
+                    upd.scale_assign(-1.0);
+                    state.get_mut("lm_head").add_assign(&upd);
+                } else {
+                    let rho_all: Vec<usize> =
+                        (0..self.cfg.d_model).collect();
+                    let gsub = grads["lm_head"]
+                        .gather2(&rho_all, &self.lm_sel);
+                    self.update_lm(state, &gsub, glr);
+                }
+            }
+            _ => unreachable!(),
+        }
+
+        // ---- re-localization -------------------------------------------
+        if profiling {
+            if self.tc.ablation.synchronous {
+                if (t + 1) % self.tc.time_slot == 0 {
+                    for g in 0..self.cfg.n_layers {
+                        self.relocalize_sync(g, t);
+                    }
+                }
+            } else {
+                for g in 0..groups {
+                    if self.sched.action(t, g).relocalize {
+                        self.relocalize(g, t);
+                    }
+                }
+            }
+        }
+        Ok(loss)
+    }
+}
+
+// ---- SL-ablation state (all layers profile simultaneously) -----------
+
+impl LosiaDriver {
+    fn sync_accums(
+        &mut self,
+    ) -> &mut Vec<BTreeMap<String, ImportanceAccum>> {
+        // lazily boxed in a side field via accums trick is messy; SL
+        // keeps its own vector.
+        if self.sl_accums.is_empty() {
+            let beta = self.tc.ema_beta as f32;
+            let mode = self.importance_mode();
+            self.sl_accums = (0..self.cfg.n_layers)
+                .map(|_| {
+                    self.cfg
+                        .linear_kinds
+                        .iter()
+                        .map(|kind| {
+                            let kd = self.cfg.kind(kind);
+                            (
+                                kind.clone(),
+                                ImportanceAccum::new(
+                                    &[kd.n, kd.m],
+                                    beta,
+                                    beta,
+                                    mode,
+                                ),
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+        }
+        &mut self.sl_accums
+    }
+
+    fn ensure_accums_sync(&mut self, _g: usize) {
+        let _ = self.sync_accums();
+    }
+
+    fn accumulate_sync(
+        &mut self,
+        g: usize,
+        state: &ModelState,
+        grads: &BTreeMap<String, Tensor>,
+    ) {
+        let kinds = self.cfg.linear_kinds.clone();
+        // split borrow: weights snapshot first
+        let weights: BTreeMap<String, Tensor> = kinds
+            .iter()
+            .map(|k| (k.clone(), state.layer(k, g)))
+            .collect();
+        let accums = self.sync_accums();
+        for kind in &kinds {
+            accums[g]
+                .get_mut(kind)
+                .unwrap()
+                .update(&weights[kind], &grads[kind]);
+        }
+    }
+
+    fn relocalize_sync(&mut self, g: usize, t: usize) {
+        if self.sl_accums.is_empty() {
+            return;
+        }
+        for kind in self.cfg.linear_kinds.clone() {
+            let kd = self.cfg.kind(&kind);
+            let score = self.sl_accums[g][&kind].score();
+            let sel = localize(&score, kd.np, kd.mp);
+            self.selection_log.push((t, g, kind.clone(), sel.clone()));
+            self.subnets[g].get_mut(&kind).unwrap().relocalize(sel);
+        }
+        // reset stats for the next window
+        let beta = self.tc.ema_beta as f32;
+        let mode = self.importance_mode();
+        for kind in self.cfg.linear_kinds.clone() {
+            let kd = self.cfg.kind(&kind);
+            self.sl_accums[g].insert(
+                kind.clone(),
+                ImportanceAccum::new(&[kd.n, kd.m], beta, beta, mode),
+            );
+        }
+    }
+}

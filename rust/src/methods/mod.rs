@@ -1,0 +1,145 @@
+//! Fine-tuning method drivers.
+//!
+//! Each driver owns its optimizer state and implements one training
+//! step against the AOT artifacts: LoSiA / LoSiA-Pro ([`losia`]), LoRA
+//! + PiSSA and DoRA ([`lora`]), GaLore ([`galore`]), and full
+//! fine-tuning ([`fft`]).
+
+pub mod fft;
+pub mod galore;
+pub mod lora;
+pub mod losia;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{ArtifactSpec, Method, TrainConfig};
+use crate::coordinator::state::ModelState;
+use crate::data::Batch;
+use crate::runtime::{HostValue, Runtime};
+
+/// A fine-tuning method: one optimization step over a batch.
+pub trait Driver {
+    /// Perform step `t` (0-based) at base learning rate `lr`; mutate
+    /// `state` in place and return the training loss.
+    fn step(
+        &mut self,
+        state: &mut ModelState,
+        batch: &Batch,
+        t: usize,
+        lr: f64,
+    ) -> Result<f64>;
+
+    fn method(&self) -> Method;
+
+    /// Trainable parameter count (paper Table 15).
+    fn trainable_params(&self) -> usize;
+
+    /// LoSiA selection snapshot `(layer, kind, rho, gamma)` for the
+    /// Figure 3/7 analyses; `None` for non-subnet methods.
+    fn selection_snapshot(
+        &self,
+    ) -> Option<Vec<(usize, String, Vec<usize>, Vec<usize>)>> {
+        None
+    }
+
+    /// One-time setup before training (e.g. PiSSA SVD init). Default
+    /// no-op.
+    fn prepare(&mut self, _state: &mut ModelState) -> Result<()> {
+        Ok(())
+    }
+
+    /// Receive the global warmup horizon T_w (LoSiA's Eq. 8 Cond);
+    /// default no-op for methods without rewarming.
+    fn set_warmup(&mut self, _warmup_steps: usize) {}
+
+    /// Fold any external trainable state into the backbone at the end
+    /// of training (LoRA-family adapter merge — the paper merges
+    /// modules into the backbone before evaluation and before each
+    /// subsequent continual-learning task). Default no-op: methods
+    /// that update W in place need nothing.
+    fn finalize(&mut self, _state: &mut ModelState) -> Result<()> {
+        Ok(())
+    }
+
+    /// Full re-localization history `(step, layer, kind, rho, gamma)`
+    /// (Figures 3/7); empty for non-subnet methods.
+    fn selection_history(
+        &self,
+    ) -> Vec<(usize, usize, String, Vec<usize>, Vec<usize>)> {
+        Vec::new()
+    }
+}
+
+/// Build the driver for `tc.method` against a runtime.
+pub fn build_driver(
+    rt: &Runtime,
+    tc: &TrainConfig,
+) -> Result<Box<dyn Driver>> {
+    Ok(match tc.method {
+        Method::Losia | Method::LosiaPro => {
+            Box::new(losia::LosiaDriver::new(rt, tc)?)
+        }
+        Method::Lora | Method::Pissa => {
+            Box::new(lora::LoraDriver::new(rt, tc, false)?)
+        }
+        Method::Dora => Box::new(lora::LoraDriver::new(rt, tc, true)?),
+        Method::Galore => Box::new(galore::GaloreDriver::new(rt, tc)?),
+        Method::Fft => Box::new(fft::FftDriver::new(rt, tc)?),
+    })
+}
+
+/// Assemble artifact inputs by manifest name from a value map; panics
+/// on any missing input so ABI drift fails loudly.
+pub fn assemble_inputs(
+    spec: &ArtifactSpec,
+    mut values: BTreeMap<String, HostValue>,
+) -> Vec<HostValue> {
+    let out: Vec<HostValue> = spec
+        .inputs
+        .iter()
+        .map(|i| {
+            values.remove(&i.name).unwrap_or_else(|| {
+                panic!(
+                    "artifact {:?}: missing input {:?}",
+                    spec.name, i.name
+                )
+            })
+        })
+        .collect();
+    assert!(
+        values.is_empty(),
+        "artifact {:?}: unused inputs {:?}",
+        spec.name,
+        values.keys().collect::<Vec<_>>()
+    );
+    out
+}
+
+/// Common helper: params + batch into the value map.
+pub fn base_values(
+    state: &ModelState,
+    batch: &Batch,
+) -> BTreeMap<String, HostValue> {
+    let mut map = BTreeMap::new();
+    for (name, t) in &state.params {
+        map.insert(name.clone(), HostValue::F32(t.clone()));
+    }
+    let b = batch.as_inputs();
+    map.insert("tokens".into(), b[0].clone());
+    map.insert("targets".into(), b[1].clone());
+    map.insert("mask".into(), b[2].clone());
+    map
+}
+
+/// Pick the plain or remat train-step artifact name.
+pub fn grads_artifact(base: &str, remat: bool, rt: &Runtime) -> String {
+    if remat {
+        let name = format!("{base}_remat");
+        if rt.cfg.has_artifact(&name) {
+            return name;
+        }
+    }
+    base.to_string()
+}

@@ -1,0 +1,62 @@
+//! Latency bookkeeping for the benches: warmup + trimmed-mean timing
+//! (criterion is unavailable offline, so this is the bench harness).
+
+use std::time::Instant;
+
+/// Timing summary over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub runs: usize,
+}
+
+impl Timing {
+    pub fn mean_micros(&self) -> f64 {
+        self.mean_secs * 1e6
+    }
+}
+
+/// Run `f` `warmup` + `runs` times; report a trimmed mean (drop the
+/// single slowest run when there are ≥ 3 samples — JIT/pagefault
+/// noise).
+pub fn time_fn<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let kept: &[f64] = if samples.len() >= 3 {
+        &samples[..samples.len() - 1]
+    } else {
+        &samples
+    };
+    Timing {
+        mean_secs: kept.iter().sum::<f64>() / kept.len() as f64,
+        min_secs: *samples.first().unwrap(),
+        max_secs: *samples.last().unwrap(),
+        runs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let t = time_fn(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.mean_secs >= 0.0);
+        assert!(t.min_secs <= t.mean_secs * 1.5 + 1e-9);
+        assert!(t.min_secs <= t.max_secs);
+        assert_eq!(t.runs, 5);
+    }
+}

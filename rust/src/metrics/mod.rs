@@ -1,0 +1,5 @@
+//! Metrics: the analytic GPU-memory model (paper Table 14/15) and
+//! latency bookkeeping helpers for the benches.
+
+pub mod latency;
+pub mod memory;

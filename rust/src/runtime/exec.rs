@@ -1,0 +1,141 @@
+//! Artifact execution: PJRT CPU client + compiled-executable cache.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ArtifactSpec, ModelCfg};
+use crate::runtime::host::HostValue;
+use crate::tensor::Tensor;
+
+/// A compiled artifact bound to its manifest signature.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative wall time spent in `execute` (perf accounting)
+    pub exec_nanos: std::cell::Cell<u128>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with shape/dtype-checked inputs; returns outputs in
+    /// manifest order.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {:?}: {} inputs given, manifest wants {}",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (hv, ispec) in inputs.iter().zip(&self.spec.inputs) {
+            hv.check(ispec).with_context(|| {
+                format!("artifact {:?}", self.spec.name)
+            })?;
+            literals.push(hv.to_literal()?);
+        }
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        self.exec_nanos
+            .set(self.exec_nanos.get() + t0.elapsed().as_nanos());
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {:?}: got {} outputs, manifest wants {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            out.push(HostValue::f32_from_literal(lit, &ospec.shape)?);
+        }
+        Ok(out)
+    }
+
+    /// Mean wall-clock seconds per call so far.
+    pub fn mean_exec_secs(&self) -> f64 {
+        let calls = self.exec_calls.get().max(1);
+        self.exec_nanos.get() as f64 / 1e9 / calls as f64
+    }
+
+    /// Clear the execution counters (latency benches isolate methods
+    /// sharing one artifact).
+    pub fn reset_stats(&self) {
+        self.exec_nanos.set(0);
+        self.exec_calls.set(0);
+    }
+}
+
+/// PJRT client + compile cache for one model config.
+pub struct Runtime {
+    pub cfg: ModelCfg,
+    client: xla::PjRtClient,
+    cache: Mutex<BTreeMap<String, &'static Executable>>,
+}
+
+impl Runtime {
+    pub fn new(cfg: ModelCfg) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            cfg,
+            client,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn from_config_name(name: &str) -> Result<Self> {
+        let dir = crate::runtime::artifacts_dir();
+        let cfg = crate::config::load_manifest(&dir, name)?;
+        Self::new(cfg)
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    ///
+    /// Executables are leaked intentionally: they live for the process
+    /// lifetime (one trainer = one process) and the `xla` crate's
+    /// executable type is not reference-counted.
+    pub fn load(&self, name: &str) -> Result<&'static Executable> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e);
+        }
+        let spec = self.cfg.artifact(name).clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().unwrap(),
+        )
+        .with_context(|| format!("loading {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        eprintln!(
+            "[runtime] compiled {}/{} in {:.2}s",
+            self.cfg.name,
+            name,
+            t0.elapsed().as_secs_f64()
+        );
+        let boxed: &'static Executable = Box::leak(Box::new(Executable {
+            spec,
+            exe,
+            exec_nanos: std::cell::Cell::new(0),
+            exec_calls: std::cell::Cell::new(0),
+        }));
+        cache.insert(name.to_string(), boxed);
+        Ok(boxed)
+    }
+}

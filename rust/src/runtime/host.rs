@@ -1,0 +1,152 @@
+//! Host-side values crossing the PJRT boundary.
+//!
+//! Artifacts take a flat list of tensors (f32 or i32) in manifest
+//! order; [`HostValue`] is the typed wrapper that converts to/from
+//! `xla::Literal` and validates shapes against the manifest spec.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Dtype, TensorSpec};
+use crate::tensor::Tensor;
+
+/// A host tensor: either f32 (weights/activations) or i32 (token ids,
+/// subnet indices, probe selectors).
+#[derive(Debug, Clone)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn scalar_i32(v: i32) -> Self {
+        HostValue::I32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn from_indices(shape: &[usize], idx: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), idx.len());
+        HostValue::I32 {
+            shape: shape.to_vec(),
+            data: idx.iter().map(|&i| i as i32).collect(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => &t.shape,
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32(_) => Dtype::F32,
+            HostValue::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &Tensor {
+        match self {
+            HostValue::F32(t) => t,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    pub fn into_f32(self) -> Tensor {
+        match self {
+            HostValue::F32(t) => t,
+            _ => panic!("expected f32 value"),
+        }
+    }
+
+    /// Validate against a manifest spec (shape + dtype).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input {:?}: shape {:?} != manifest {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input {:?}: dtype {:?} != manifest {:?}",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal (reshaped to the target rank).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32(t) => {
+                xla::Literal::vec1(&t.data).reshape(&dims)?
+            }
+            HostValue::I32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read an f32 literal back into a [`Tensor`] with the given shape.
+    pub fn f32_from_literal(
+        lit: &xla::Literal,
+        shape: &[usize],
+    ) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!(
+                "literal has {} elements, expected shape {:?}",
+                data.len(),
+                shape
+            );
+        }
+        Ok(Tensor::from_vec(shape, data))
+    }
+}
+
+impl From<Tensor> for HostValue {
+    fn from(t: Tensor) -> Self {
+        HostValue::F32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_check_catches_mismatch() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![2, 3],
+            dtype: Dtype::F32,
+        };
+        let good = HostValue::F32(Tensor::zeros(&[2, 3]));
+        assert!(good.check(&spec).is_ok());
+        let bad_shape = HostValue::F32(Tensor::zeros(&[3, 2]));
+        assert!(bad_shape.check(&spec).is_err());
+        let bad_dtype = HostValue::from_indices(&[2, 3], &[0; 6]);
+        assert!(bad_dtype.check(&spec).is_err());
+    }
+
+    #[test]
+    fn index_conversion() {
+        let hv = HostValue::from_indices(&[4], &[1, 2, 3, 4]);
+        match &hv {
+            HostValue::I32 { data, .. } => {
+                assert_eq!(data, &vec![1, 2, 3, 4])
+            }
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (see `python/compile/aot.py`);
+//! `xla::HloModuleProto::from_text_file` reassigns instruction ids so
+//! jax ≥ 0.5 modules round-trip into xla_extension 0.5.1 cleanly.
+
+pub mod exec;
+pub mod host;
+
+pub use exec::{Executable, Runtime};
+pub use host::HostValue;
+
+use std::path::PathBuf;
+
+/// Locate `artifacts/` relative to the crate root, overridable with
+/// `LOSIA_ARTIFACTS`. Tests, benches, and examples all resolve through
+/// this so they work from any working directory under the repo.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("LOSIA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.join("artifacts")
+}

@@ -1,0 +1,328 @@
+//! Row-major dense f32 tensor with the small set of ops the coordinator
+//! hot path needs. Deliberately simple: contiguous `Vec<f32>` + shape.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} != data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(n, scale),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.ndim(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, m) = self.dims2();
+        self.data[i * m + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let m = self.shape[1];
+        self.data[i * m + j] = v;
+    }
+
+    /// Slice out sub-tensor `idx` along axis 0 (e.g. one layer of a
+    /// stacked [L, ...] parameter).
+    pub fn index_axis0(&self, idx: usize) -> Tensor {
+        assert!(idx < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        let start = idx * inner;
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[start..start + inner].to_vec(),
+        }
+    }
+
+    /// Write `src` into position `idx` along axis 0.
+    pub fn set_axis0(&mut self, idx: usize, src: &Tensor) {
+        let inner: usize = self.shape[1..].iter().product();
+        assert_eq!(src.len(), inner);
+        let start = idx * inner;
+        self.data[start..start + inner].copy_from_slice(&src.data);
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let inner = parts[0].shape.clone();
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&inner);
+        let mut data = Vec::with_capacity(
+            parts.len() * parts[0].len(),
+        );
+        for p in parts {
+            assert_eq!(p.shape, inner, "stack: ragged shapes");
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+
+    /// C = A @ B for 2-D tensors (ikj loop order, no blocking — host
+    /// matmul is only used for SVD/projections on small matrices).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (n, k) = self.dims2();
+        let (k2, m) = other.dims2();
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (n, m) = self.dims2();
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            for j in 0..m {
+                out[j * n + i] = self.data[i * m + j];
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale_assign(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    /// Row sums of a 2-D tensor -> Vec of length n.
+    pub fn row_sums(&self) -> Vec<f32> {
+        let (n, m) = self.dims2();
+        (0..n)
+            .map(|i| self.data[i * m..(i + 1) * m].iter().sum())
+            .collect()
+    }
+
+    /// Column sums of a 2-D tensor -> Vec of length m.
+    pub fn col_sums(&self) -> Vec<f32> {
+        let (n, m) = self.dims2();
+        let mut out = vec![0.0f32; m];
+        for i in 0..n {
+            for j in 0..m {
+                out[j] += self.data[i * m + j];
+            }
+        }
+        out
+    }
+
+    /// Gather the (rows × cols) submatrix at (rho, gamma).
+    pub fn gather2(&self, rho: &[usize], gamma: &[usize]) -> Tensor {
+        let (_, m) = self.dims2();
+        let mut out = Vec::with_capacity(rho.len() * gamma.len());
+        for &i in rho {
+            let row = &self.data[i * m..(i + 1) * m];
+            for &j in gamma {
+                out.push(row[j]);
+            }
+        }
+        Tensor::from_vec(&[rho.len(), gamma.len()], out)
+    }
+
+    /// `self[rho, gamma] += delta` (subnet update scatter).
+    pub fn scatter_add2(
+        &mut self,
+        rho: &[usize],
+        gamma: &[usize],
+        delta: &Tensor,
+    ) {
+        let (dn, dm) = delta.dims2();
+        assert_eq!(dn, rho.len());
+        assert_eq!(dm, gamma.len());
+        let m = self.shape[1];
+        for (a, &i) in rho.iter().enumerate() {
+            let row = &mut self.data[i * m..(i + 1) * m];
+            let drow = &delta.data[a * dm..(a + 1) * dm];
+            for (b, &j) in gamma.iter().enumerate() {
+                row[j] += drow[b];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        check("A @ I == A", 30, |g| {
+            let n = g.size(1, 12);
+            let m = g.size(1, 12);
+            let a = Tensor::from_vec(
+                &[n, m],
+                g.normal_vec(n * m, 1.0),
+            );
+            let mut eye = Tensor::zeros(&[m, m]);
+            for i in 0..m {
+                eye.set2(i, i, 1.0);
+            }
+            let c = a.matmul(&eye);
+            for (x, y) in c.data.iter().zip(&a.data) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        check("transpose twice", 30, |g| {
+            let n = g.size(1, 10);
+            let m = g.size(1, 10);
+            let a = Tensor::from_vec(
+                &[n, m],
+                g.normal_vec(n * m, 1.0),
+            );
+            assert_eq!(a.transpose2().transpose2(), a);
+        });
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        check("scatter undoes gather delta", 30, |g| {
+            let n = g.size(2, 16);
+            let m = g.size(2, 16);
+            let k1 = g.size(1, n);
+            let k2 = g.size(1, m);
+            let rho = g.distinct_indices(n, k1);
+            let gamma = g.distinct_indices(m, k2);
+            let mut w = Tensor::from_vec(
+                &[n, m],
+                g.normal_vec(n * m, 1.0),
+            );
+            let orig = w.clone();
+            let delta = Tensor::from_vec(
+                &[k1, k2],
+                g.normal_vec(k1 * k2, 1.0),
+            );
+            w.scatter_add2(&rho, &gamma, &delta);
+            let got = w.gather2(&rho, &gamma);
+            let want = orig.gather2(&rho, &gamma);
+            for ((a, b), d) in
+                got.data.iter().zip(&want.data).zip(&delta.data)
+            {
+                assert!((a - b - d).abs() < 1e-5);
+            }
+            // untouched entries unchanged
+            let mut neg = delta.clone();
+            neg.scale_assign(-1.0);
+            w.scatter_add2(&rho, &gamma, &neg);
+            for (a, b) in w.data.iter().zip(&orig.data) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn row_col_sums() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.row_sums(), vec![6.0, 15.0]);
+        assert_eq!(a.col_sums(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn stack_and_index_axis0() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.index_axis0(0), a);
+        assert_eq!(s.index_axis0(1), b);
+    }
+}

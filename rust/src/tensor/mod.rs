@@ -1,0 +1,9 @@
+//! Dense f32 tensor substrate: storage, matmul, gather/scatter, top-k,
+//! SVD. Everything the coordinator needs host-side; heavy model math
+//! stays in the XLA artifacts.
+
+pub mod dense;
+pub mod select;
+pub mod svd;
+
+pub use dense::Tensor;

@@ -1,0 +1,119 @@
+//! Selection primitives: top-k indices, argmax, softmax — used by the
+//! localization algorithm, GaLore projector, and greedy decoding.
+
+/// Indices of the `k` largest values (descending). Stable on ties by
+/// preferring lower indices; O(n log n) via sort on (value, -index).
+pub fn topk_indices(values: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(values.len());
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    idx.sort_by(|&a, &b| {
+        values[b]
+            .partial_cmp(&values[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Partial-selection top-k: O(n + k log k) — used on the hot path where
+/// n is a hidden dimension and k = ⌊np⌋.
+pub fn topk_indices_fast(values: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(values.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..values.len()).collect();
+    let cmp = |a: &usize, b: &usize| {
+        values[*b]
+            .partial_cmp(&values[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    if k < idx.len() {
+        // O(n) partition so the k largest land in idx[..k]
+        idx.select_nth_unstable_by(k - 1, cmp);
+    }
+    let mut top = idx[..k].to_vec();
+    top.sort_by(cmp);
+    top
+}
+
+pub fn argmax(values: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in values.iter().enumerate() {
+        if v > values[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(values: &[f32]) -> Vec<f32> {
+    let max = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = values.iter().map(|v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|e| e / sum).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn topk_known() {
+        let v = vec![0.1, 5.0, 3.0, 4.0, 2.0];
+        assert_eq!(topk_indices(&v, 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn topk_fast_matches_slow() {
+        check("fast topk == sort topk (as sets + order)", 100, |g| {
+            let n = g.size(1, 200);
+            let k = g.size(1, n);
+            let v = g.normal_vec(n, 1.0);
+            let slow = topk_indices(&v, k);
+            let fast = topk_indices_fast(&v, k);
+            // both sorted descending by value; values must match exactly
+            let sv: Vec<f32> = slow.iter().map(|&i| v[i]).collect();
+            let fv: Vec<f32> = fast.iter().map(|&i| v[i]).collect();
+            assert_eq!(sv, fv, "value sequences differ");
+        });
+    }
+
+    #[test]
+    fn topk_k_exceeds_len() {
+        let v = vec![1.0, 2.0];
+        assert_eq!(topk_indices(&v, 10).len(), 2);
+        assert_eq!(topk_indices_fast(&v, 10).len(), 2);
+    }
+
+    #[test]
+    fn topk_sum_is_maximal() {
+        check("topk captures max mass", 50, |g| {
+            let n = g.size(2, 64);
+            let k = g.size(1, n);
+            let v = g.positive_vec(n);
+            let top = topk_indices_fast(&v, k);
+            let top_sum: f32 = top.iter().map(|&i| v[i]).sum();
+            let r = g.distinct_indices(n, k);
+            let rand_sum: f32 = r.iter().map(|&i| v[i]).sum();
+            assert!(top_sum >= rand_sum - 1e-5);
+        });
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

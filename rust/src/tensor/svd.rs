@@ -1,0 +1,263 @@
+//! One-sided Jacobi SVD (Hestenes) for small dense matrices.
+//!
+//! Used by the GaLore baseline (gradient projector), PiSSA
+//! initialisation, and the Figure-8 intruder-dimension analysis.
+//! Dimensions here are ≤ 1024, where Jacobi is accurate and fast
+//! enough; convergence is quadratic once sweeps start passing.
+
+use super::dense::Tensor;
+
+/// Result of `svd(A)`: `A ≈ U · diag(S) · Vᵀ` with singular values in
+/// descending order; U is n×r, V is m×r with r = min(n, m).
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+}
+
+/// One-sided Jacobi on the columns of A (n×m). For n < m we factor the
+/// transpose and swap U/V.
+pub fn svd(a: &Tensor) -> Svd {
+    let (n, m) = a.dims2();
+    if n < m {
+        let t = svd(&a.transpose2());
+        return Svd {
+            u: t.v,
+            s: t.s,
+            v: t.u,
+        };
+    }
+    // Work on columns of A: after rotations the columns become
+    // orthogonal; their norms are the singular values.
+    let mut u = a.clone(); // n×m, columns rotated in place
+    let mut v = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        v.set2(i, i, 1.0);
+    }
+
+    let eps = 1e-10f64;
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..m {
+            for q in (p + 1)..m {
+                // Gram entries over column pair (p, q)
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..n {
+                    let up = u.data[i * m + p] as f64;
+                    let uq = u.data[i * m + q] as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off += apq * apq;
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-30) {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p, q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let up = u.data[i * m + p] as f64;
+                    let uq = u.data[i * m + q] as f64;
+                    u.data[i * m + p] = (c * up - s * uq) as f32;
+                    u.data[i * m + q] = (s * up + c * uq) as f32;
+                }
+                for i in 0..m {
+                    let vp = v.data[i * m + p] as f64;
+                    let vq = v.data[i * m + q] as f64;
+                    v.data[i * m + p] = (c * vp - s * vq) as f32;
+                    v.data[i * m + q] = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+
+    // Column norms = singular values; normalise U columns.
+    let mut order: Vec<(f32, usize)> = (0..m)
+        .map(|j| {
+            let norm: f32 = (0..n)
+                .map(|i| u.data[i * m + j] * u.data[i * m + j])
+                .sum::<f32>()
+                .sqrt();
+            (norm, j)
+        })
+        .collect();
+    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u_out = Tensor::zeros(&[n, m]);
+    let mut v_out = Tensor::zeros(&[m, m]);
+    let mut s_out = Vec::with_capacity(m);
+    for (dst, &(norm, src)) in order.iter().enumerate() {
+        s_out.push(norm);
+        let inv = if norm > 1e-20 { 1.0 / norm } else { 0.0 };
+        for i in 0..n {
+            u_out.data[i * m + dst] = u.data[i * m + src] * inv;
+        }
+        for i in 0..m {
+            v_out.data[i * m + dst] = v.data[i * m + src];
+        }
+    }
+    Svd {
+        u: u_out,
+        s: s_out,
+        v: v_out,
+    }
+}
+
+/// First `k` left singular vectors as an n×k matrix (GaLore projector).
+pub fn left_singular_topk(a: &Tensor, k: usize) -> Tensor {
+    let (n, _) = a.dims2();
+    let d = svd(a);
+    let k = k.min(d.s.len());
+    let mut p = Tensor::zeros(&[n, k]);
+    let m = d.u.shape[1];
+    for i in 0..n {
+        for j in 0..k {
+            p.data[i * k + j] = d.u.data[i * m + j];
+        }
+    }
+    p
+}
+
+/// Cosine-similarity matrix between the top-k left singular vectors of
+/// two matrices (Figure 8 intruder-dimension analysis): returns, for
+/// each of the first `k` vectors of `a`, the maximum |cos| against any
+/// of the first `k` vectors of `b`.
+pub fn singular_vector_similarity(a: &Tensor, b: &Tensor, k: usize) -> Vec<f32> {
+    let da = svd(a);
+    let db = svd(b);
+    let (n, ma) = da.u.dims2();
+    let (_, mb) = db.u.dims2();
+    let k = k.min(ma).min(mb);
+    let mut out = Vec::with_capacity(k);
+    for j in 0..k {
+        let mut best = 0.0f32;
+        for j2 in 0..k {
+            let mut dot = 0.0f32;
+            for i in 0..n {
+                dot += da.u.data[i * ma + j] * db.u.data[i * mb + j2];
+            }
+            best = best.max(dot.abs());
+        }
+        out.push(best);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(d: &Svd) -> Tensor {
+        let (n, r) = d.u.dims2();
+        let (m, _) = d.v.dims2();
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..n {
+            for j in 0..m {
+                let mut acc = 0.0f32;
+                for t in 0..r {
+                    acc += d.u.data[i * r + t]
+                        * d.s[t]
+                        * d.v.data[j * r + t];
+                }
+                out.data[i * m + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        check("U S V^T == A", 10, |g| {
+            let n = g.size(2, 20);
+            let m = g.size(2, 20);
+            let a = Tensor::from_vec(&[n, m], g.normal_vec(n * m, 1.0));
+            let d = svd(&a);
+            let r = reconstruct(&d);
+            let num: f32 = a
+                .data
+                .iter()
+                .zip(&r.data)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt();
+            let den = a.frob_norm().max(1e-6);
+            assert!(num / den < 1e-3, "rel err {}", num / den);
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_nonneg() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[16, 12], 1.0, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Tensor::zeros(&[3, 3]);
+        a.set2(0, 0, 3.0);
+        a.set2(1, 1, 1.0);
+        a.set2(2, 2, 2.0);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+        assert!((d.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn u_columns_orthonormal() {
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[20, 8], 1.0, &mut rng);
+        let d = svd(&a);
+        let (n, r) = d.u.dims2();
+        for p in 0..r {
+            for q in 0..r {
+                let dot: f32 = (0..n)
+                    .map(|i| d.u.data[i * r + p] * d.u.data[i * r + q])
+                    .sum();
+                let want = if p == q { 1.0 } else { 0.0 };
+                assert!(
+                    (dot - want).abs() < 1e-3,
+                    "U^T U [{p},{q}] = {dot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn identical_matrices_have_similarity_one() {
+        let mut rng = Rng::new(11);
+        let a = Tensor::randn(&[12, 12], 1.0, &mut rng);
+        let sim = singular_vector_similarity(&a, &a, 6);
+        for s in sim {
+            assert!(s > 0.999, "self-similarity {s}");
+        }
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Rng::new(13);
+        let a = Tensor::randn(&[6, 18], 1.0, &mut rng);
+        let d = svd(&a);
+        let r = reconstruct(&d);
+        let err: f32 = a
+            .data
+            .iter()
+            .zip(&r.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 1e-3, "max err {err}");
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments, with typed getters and a usage printer.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — `flag_names` lists
+    /// options that take no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        iter: I,
+        flag_names: &[&str],
+    ) -> Self {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        args.flags.push(rest.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        args.opts.insert(rest.to_string(), v);
+                    }
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse(flag_names: &[&str]) -> Self {
+        Self::parse_from(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse_from(
+            s(&["train", "--steps", "100", "--lr=0.01", "--verbose"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.01);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = Args::parse_from(
+            s(&["--quiet", "--steps", "5"]),
+            &["quiet"],
+        );
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get_usize("steps", 0), 5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse_from(s(&["--maybe"]), &[]);
+        assert!(a.has_flag("maybe"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from(s(&[]), &[]);
+        assert_eq!(a.get_or("cfg", "tiny"), "tiny");
+        assert_eq!(a.get_usize("steps", 7), 7);
+    }
+}

@@ -1,0 +1,7 @@
+//! Support substrates: JSON, RNG, CLI parsing, tables, property testing.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;

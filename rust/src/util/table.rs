@@ -1,0 +1,151 @@
+//! ASCII table + CSV reporters for benches and examples.
+//!
+//! Every bench prints a paper-shaped table to stdout and mirrors it as
+//! CSV under `results/` so figures can be re-plotted.
+
+use std::fs;
+use std::path::Path;
+
+/// Column-aligned ASCII table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: build a row from display items.
+    pub fn rowv(&mut self, cells: Vec<String>) -> &mut Self {
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Write the table as CSV into `results/<name>.csv`.
+    pub fn write_csv(&self, name: &str) {
+        let dir = Path::new("results");
+        let _ = fs::create_dir_all(dir);
+        let mut csv = self.header.join(",");
+        csv.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            csv.push_str(&line.join(","));
+            csv.push('\n');
+        }
+        let path = dir.join(format!("{name}.csv"));
+        fs::write(&path, csv).expect("write csv");
+        println!("[csv] results/{name}.csv");
+    }
+}
+
+/// Format a float with fixed decimals, used across benches.
+pub fn f(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+/// Write a generic CSV series (e.g. loss curves) to results/.
+pub fn write_series_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) {
+    let dir = Path::new("results");
+    let _ = fs::create_dir_all(dir);
+    let mut csv = header.join(",");
+    csv.push('\n');
+    for row in rows {
+        csv.push_str(
+            &row.iter()
+                .map(|v| format!("{v}"))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        csv.push('\n');
+    }
+    fs::write(dir.join(format!("{name}.csv")), csv).expect("write csv");
+    println!("[csv] results/{name}.csv");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["method", "acc"]);
+        t.row(&["LoSiA".into(), "44.66".into()]);
+        t.row(&["LoRA".into(), "42.9".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("LoSiA"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + sep + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,108 @@
+//! Eval harness integration: PPL option scoring, generation, and the
+//! untrained-model chance-level sanity checks.
+
+use losia::coordinator::state::ModelState;
+use losia::data::commonsense::suite;
+use losia::data::domain::{KvFacts, ModMath};
+use losia::data::{gen_eval_set, Task};
+use losia::eval::generate::Generator;
+use losia::eval::{pass_at_k, ppl_accuracy, ppl_accuracy_by_category};
+use losia::runtime::Runtime;
+use losia::util::rng::Rng;
+
+fn fresh(rt: &Runtime, seed: u64) -> ModelState {
+    let mut rng = Rng::new(seed);
+    ModelState::init(&rt.cfg, &mut rng)
+}
+
+#[test]
+fn untrained_model_scores_near_chance_on_10way() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let state = fresh(&rt, 0);
+    let items = gen_eval_set(&ModMath, 120, 3);
+    let acc = ppl_accuracy(&rt, &state, &items).unwrap();
+    // 10 options → chance 10%; untrained should sit well below 40%
+    assert!(acc < 40.0, "suspiciously high untrained acc {acc}");
+    assert!(acc >= 0.0);
+}
+
+#[test]
+fn category_breakdown_sums_consistently() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let state = fresh(&rt, 1);
+    let kv = KvFacts::new(16, 4, 5);
+    let items = gen_eval_set(&kv, 80, 4);
+    let by_cat =
+        ppl_accuracy_by_category(&rt, &state, &items).unwrap();
+    assert!(by_cat.contains_key("__all__"));
+    // overall accuracy must lie within [min, max] of categories
+    let cats: Vec<f64> = by_cat
+        .iter()
+        .filter(|(k, _)| *k != "__all__")
+        .map(|(_, v)| *v)
+        .collect();
+    assert!(!cats.is_empty());
+    let lo = cats.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = cats.iter().cloned().fold(0.0f64, f64::max);
+    let all = by_cat["__all__"];
+    assert!(all >= lo - 1e-9 && all <= hi + 1e-9);
+}
+
+#[test]
+fn generator_emits_tokens_within_vocab() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let state = fresh(&rt, 2);
+    let gen = Generator::new(&rt).unwrap();
+    let mut rng = Rng::new(0);
+    let prompts = vec![vec![5u32, 15, 6, 3]; 2];
+    let outs = gen
+        .generate(&state, &prompts, 4, 0.0, &mut rng)
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    for o in &outs {
+        assert!(o.len() <= 4);
+        assert!(o.iter().all(|&t| (t as usize) < rt.cfg.vocab));
+    }
+    // greedy decoding is deterministic
+    let outs2 = gen
+        .generate(&state, &prompts, 4, 0.0, &mut rng)
+        .unwrap();
+    assert_eq!(outs, outs2);
+}
+
+#[test]
+fn sampling_respects_temperature_diversity() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let state = fresh(&rt, 3);
+    let gen = Generator::new(&rt).unwrap();
+    let mut rng = Rng::new(7);
+    let prompt = vec![vec![5u32, 15, 6, 3]; 4];
+    // high temperature across 4 parallel samples: expect ≥ 2 distinct
+    let outs = gen
+        .generate(&state, &prompt, 3, 2.0, &mut rng)
+        .unwrap();
+    let distinct: std::collections::BTreeSet<_> =
+        outs.iter().collect();
+    assert!(distinct.len() >= 2, "temperature produced no diversity");
+}
+
+#[test]
+fn pass_at_k_is_monotone_in_k() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let state = fresh(&rt, 4);
+    let items = gen_eval_set(&ModMath, 12, 9);
+    let p1 = pass_at_k(&rt, &state, &items, 1, 0.8, 5).unwrap();
+    let p4 = pass_at_k(&rt, &state, &items, 4, 0.8, 5).unwrap();
+    assert!(p4 >= p1 - 1e-9, "pass@4 {p4} < pass@1 {p1}");
+}
+
+#[test]
+fn commonsense_suite_is_scoreable() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let state = fresh(&rt, 5);
+    for task in suite().iter().take(3) {
+        let items = gen_eval_set(task.as_ref(), 24, 11);
+        let acc = ppl_accuracy(&rt, &state, &items).unwrap();
+        assert!((0.0..=100.0).contains(&acc), "{}", task.name());
+    }
+}

@@ -1,0 +1,58 @@
+//! Integration: load tiny artifacts, execute fwd/grads, check numerics.
+
+use losia::config::Dtype;
+use losia::runtime::{HostValue, Runtime};
+use losia::tensor::Tensor;
+use losia::util::rng::Rng;
+
+fn init_inputs(rt: &Runtime, name: &str, rng: &mut Rng) -> Vec<HostValue> {
+    let spec = rt.cfg.artifact(name).clone();
+    spec.inputs
+        .iter()
+        .map(|i| match i.dtype {
+            Dtype::F32 => {
+                if i.name == "mask" {
+                    HostValue::F32(Tensor::ones(&i.shape))
+                } else if i.name.starts_with("norm") {
+                    HostValue::F32(Tensor::ones(&i.shape))
+                } else {
+                    HostValue::F32(Tensor::randn(&i.shape, 0.05, rng))
+                }
+            }
+            Dtype::I32 => {
+                let n: usize = i.shape.iter().product();
+                let data: Vec<usize> =
+                    (0..n).map(|_| rng.below(4)).collect();
+                HostValue::from_indices(&i.shape, &data)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fwd_logits_shape_and_finiteness() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let exe = rt.load("fwd_logits").unwrap();
+    let mut rng = Rng::new(0);
+    let inputs = init_inputs(&rt, "fwd_logits", &mut rng);
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(
+        out[0].shape,
+        vec![rt.cfg.batch, rt.cfg.seq_len, rt.cfg.vocab]
+    );
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn grads_full_loss_positive() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let exe = rt.load("grads_full").unwrap();
+    let mut rng = Rng::new(1);
+    let inputs = init_inputs(&rt, "grads_full", &mut rng);
+    let out = exe.run(&inputs).unwrap();
+    let loss = out[0].data[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // gradient of embed should be non-zero
+    assert!(out[1].frob_norm() > 0.0);
+}
