@@ -1,0 +1,61 @@
+#!/usr/bin/env bash
+# Materialize rust/Cargo.toml when the checkout ships without one.
+# Run from the rust/ directory. The examples live at the repo root
+# (../examples) and every bench is a plain main() binary, so all
+# targets are declared explicitly.
+set -euo pipefail
+
+if [ -f Cargo.toml ]; then
+  echo "Cargo.toml already present; leaving it untouched"
+  exit 0
+fi
+
+cat > Cargo.toml <<'EOF'
+[package]
+name = "losia"
+version = "0.1.0"
+edition = "2021"
+
+[dependencies]
+anyhow = "1"
+xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+
+[lib]
+name = "losia"
+path = "src/lib.rs"
+
+[[bin]]
+name = "losia"
+path = "src/main.rs"
+
+[[example]]
+name = "quickstart"
+path = "../examples/quickstart.rs"
+
+[[example]]
+name = "method_compare"
+path = "../examples/method_compare.rs"
+
+[[example]]
+name = "train_domain"
+path = "../examples/train_domain.rs"
+
+[[example]]
+name = "continual_learning"
+path = "../examples/continual_learning.rs"
+
+[[example]]
+name = "perfprobe"
+path = "../examples/perfprobe.rs"
+EOF
+
+for b in fig2_gradstruct fig5_overheads fig6_losscurves fig7_selection \
+         fig8_intruder table11_rankfactor table14_memory table16_latency \
+         table1_domain table2_commonsense table3_ablations table4_timeslot \
+         table5_continual table6_gradmass; do
+  printf '\n[[bench]]\nname = "%s"\npath = "benches/%s.rs"\nharness = false\n' \
+    "$b" "$b" >> Cargo.toml
+done
+
+echo "materialized Cargo.toml:"
+cat Cargo.toml

@@ -1,91 +1,49 @@
 //! Continual learning (paper §4.4): sequentially fine-tune through
 //! five commonsense-analogue tasks with Seq-LoRA vs Seq-LoSiA and
-//! report AP / FWT / BWT — the experiment behind Tables 5 and 13.
+//! report AP / FWT / BWT — the experiment behind Tables 5 and 13 —
+//! driven by `Session::train_sequence` instead of a hand-rolled loop.
 //!
 //! ```bash
 //! cargo run --release --example continual_learning -- \
 //!     --config tiny --steps 80 --eval-n 100
 //! ```
 
-use losia::config::{Method, TrainConfig};
-use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::commonsense::{suite, SUITE_NAMES};
-use losia::data::{gen_eval_set, gen_train_set, Batcher, Task};
-use losia::eval::{
-    average_performance, backward_transfer, forward_transfer,
-    ppl_accuracy,
-};
+use losia::config::Method;
+use losia::data::commonsense::SUITE_NAMES;
+use losia::eval::forward_transfer;
 use losia::runtime::Runtime;
+use losia::session::{Session, TaskSpec};
 use losia::util::cli::Args;
-use losia::util::rng::Rng;
 use losia::util::table::Table;
 
 /// The 5-task sequence from the paper (HellaSwag, PIQA, BoolQ, SIQA,
 /// WinoGrande analogues = suite indices 2, 4, 7, 6, 3).
 const SEQ: [usize; 5] = [2, 4, 7, 6, 3];
 
-fn make_tc(method: Method, steps: usize) -> TrainConfig {
-    TrainConfig {
-        method,
-        steps,
-        lr: 1e-3,
-        time_slot: 10,
-        seed: 42,
-        ..TrainConfig::default()
-    }
-}
-
-struct SeqResult {
-    perf: Vec<Vec<f64>>,
-    single: Vec<f64>,
-}
-
-fn run_sequence(
-    rt: &Runtime,
-    method: Method,
-    steps: usize,
-    eval_n: usize,
-) -> anyhow::Result<SeqResult> {
-    let tasks = suite();
-    let seq_tasks: Vec<&dyn Task> =
-        SEQ.iter().map(|&i| tasks[i].as_ref()).collect();
-    let evals: Vec<_> = seq_tasks
-        .iter()
+fn specs(steps: usize, eval_n: usize) -> Vec<TaskSpec> {
+    SEQ.iter()
         .enumerate()
-        .map(|(i, t)| gen_eval_set(*t, eval_n, 100 + i as u64))
-        .collect();
+        .map(|(i, &ti)| {
+            TaskSpec::new(SUITE_NAMES[ti])
+                .steps(steps)
+                .train_n(1500)
+                .data_seed(50 + i as u64)
+                .batcher_seed(1)
+                .eval_n(eval_n)
+                .eval_seed(100 + i as u64)
+        })
+        .collect()
+}
 
-    // single-task baselines (FWT reference)
-    let mut single = Vec::new();
-    for (i, task) in seq_tasks.iter().enumerate() {
-        let mut rng = Rng::new(7);
-        let mut state = ModelState::init(&rt.cfg, &mut rng);
-        let train = gen_train_set(*task, 1500, 50 + i as u64);
-        let mut b =
-            Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
-        let mut tr = Trainer::new(rt, make_tc(method, steps))?;
-        tr.train(&mut state, &mut b)?;
-        single.push(ppl_accuracy(rt, &state, &evals[i])?);
-    }
-
-    // sequential fine-tuning on one evolving model
-    let mut rng = Rng::new(7);
-    let mut state = ModelState::init(&rt.cfg, &mut rng);
-    let mut perf = Vec::new();
-    for (i, task) in seq_tasks.iter().enumerate() {
-        let train = gen_train_set(*task, 1500, 50 + i as u64);
-        let mut b =
-            Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
-        let mut tr = Trainer::new(rt, make_tc(method, steps))?;
-        tr.train(&mut state, &mut b)?;
-        let row: Vec<f64> = evals
-            .iter()
-            .map(|e| ppl_accuracy(rt, &state, e).unwrap())
-            .collect();
-        perf.push(row);
-    }
-    Ok(SeqResult { perf, single })
+fn session(rt: &Runtime, method: Method) -> anyhow::Result<Session<'_>> {
+    Session::builder()
+        .runtime(rt)
+        .method(method)
+        .lr(1e-3)
+        .time_slot(10)
+        .seed(42)
+        .model_seed(7)
+        .build()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -93,6 +51,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::from_config_name(&args.get_or("config", "tiny"))?;
     let steps = args.get_usize("steps", 80);
     let eval_n = args.get_usize("eval-n", 100);
+    let specs = specs(steps, eval_n);
 
     let mut summary = Table::new(
         "Continual learning (paper Table 5)",
@@ -101,7 +60,19 @@ fn main() -> anyhow::Result<()> {
     for method in [Method::Lora, Method::LosiaPro] {
         let name = format!("Seq-{}", method.name());
         eprintln!("running {name} …");
-        let res = run_sequence(&rt, method, steps, eval_n)?;
+
+        // single-task baselines (FWT reference): fresh model per task
+        let mut single = Vec::new();
+        for spec in &specs {
+            let mut s = session(&rt, method)?;
+            let rep = s.train_sequence(std::slice::from_ref(spec))?;
+            single.push(rep.perf[0][0]);
+        }
+
+        // sequential fine-tuning on one evolving model
+        let mut s = session(&rt, method)?;
+        let seq = s.train_sequence(&specs)?;
+
         let mut detail = Table::new(
             &format!("{name} accuracy after each stage (Table 13)"),
             &["task", "#1", "#2", "#3", "#4", "#5", "ST"],
@@ -109,22 +80,29 @@ fn main() -> anyhow::Result<()> {
         for (j, &ti) in SEQ.iter().enumerate() {
             let mut row = vec![SUITE_NAMES[ti].to_string()];
             for i in 0..SEQ.len() {
-                row.push(if i < res.perf.len() && j < res.perf[i].len()
-                {
-                    format!("{:.1}", res.perf[i][j])
-                } else {
-                    "-".into()
-                });
+                row.push(
+                    if i < seq.perf.len() && j < seq.perf[i].len() {
+                        format!("{:.1}", seq.perf[i][j])
+                    } else {
+                        "-".into()
+                    },
+                );
             }
-            row.push(format!("{:.1}", res.single[j]));
+            row.push(format!("{:.1}", single[j]));
             detail.row(&row);
         }
         detail.print();
         summary.row(&[
             name,
-            format!("{:.2}", average_performance(&res.perf)),
-            format!("{:.2}", forward_transfer(&res.perf, &res.single)),
-            format!("{:.2}", backward_transfer(&res.perf)),
+            format!(
+                "{:.2}",
+                seq.average_performance().unwrap_or(f64::NAN)
+            ),
+            format!("{:.2}", forward_transfer(&seq.perf, &single)),
+            format!(
+                "{:.2}",
+                seq.backward_transfer().unwrap_or(f64::NAN)
+            ),
         ]);
     }
     summary.print();

@@ -1,20 +1,16 @@
 //! Quick method shoot-out on one task: loss, accuracy, latency, and
-//! trainable-parameter count for every implemented method.
+//! trainable-parameter count for every implemented method, each run
+//! built through the session layer on one shared runtime.
 //!
 //! ```bash
 //! cargo run --release --example method_compare -- \
 //!     --config tiny --task modmath --steps 150
 //! ```
 
-use losia::config::{Method, TrainConfig};
-use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::domain::{KvFacts, ModMath, StackEval};
-use losia::data::{gen_eval_set, gen_train_set, Batcher, Task};
-use losia::eval::ppl_accuracy;
+use losia::config::Method;
 use losia::runtime::Runtime;
+use losia::session::Session;
 use losia::util::cli::Args;
-use losia::util::rng::Rng;
 use losia::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -22,15 +18,6 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::from_config_name(&args.get_or("config", "tiny"))?;
     let steps = args.get_usize("steps", 150);
     let task_name = args.get_or("task", "modmath");
-    let task: Box<dyn Task> = match task_name.as_str() {
-        "modmath" => Box::new(ModMath),
-        "stack" => Box::new(StackEval),
-        "kvfacts" => Box::new(KvFacts::new(64, 4, 7)),
-        other => anyhow::bail!("unknown task {other}"),
-    };
-
-    let train = gen_train_set(task.as_ref(), 2000, 42);
-    let eval = gen_eval_set(task.as_ref(), 200, 42);
 
     let mut table = Table::new(
         &format!("Method comparison on {task_name} ({steps} steps)"),
@@ -46,32 +33,35 @@ fn main() -> anyhow::Result<()> {
         Method::LosiaPro,
     ] {
         eprintln!("training {} …", method.name());
-        let tc = TrainConfig {
-            method,
-            steps,
-            lr: 1e-3,
-            time_slot: 10,
-            seed: 42,
-            galore_rank: rt.cfg.d_model / 4,
-            ..TrainConfig::default()
-        };
-        let mut rng = Rng::new(7);
-        let mut state = ModelState::init(&rt.cfg, &mut rng);
-        let mut b = Batcher::new(
-            train.clone(),
-            rt.cfg.batch,
-            rt.cfg.seq_len,
-            1,
-        );
-        let mut tr = Trainer::new(&rt, tc)?;
-        tr.train(&mut state, &mut b)?;
-        let acc = ppl_accuracy(&rt, &state, &eval)?;
+        let mut session = Session::builder()
+            .runtime(&rt)
+            .method(method)
+            .task(&task_name)
+            .steps(steps)
+            .lr(1e-3)
+            .time_slot(10)
+            .seed(42)
+            .model_seed(7)
+            .batcher_seed(1)
+            .train_n(2000)
+            .eval_n(200)
+            .build()?;
+        let report = session.train()?;
         table.row(&[
-            method.name().to_string(),
-            tr.driver.trainable_params().to_string(),
-            format!("{:.3}", tr.tail_loss(10)),
-            format!("{acc:.1}"),
-            format!("{:.1}", tr.us_per_token()),
+            report.method.clone(),
+            report
+                .trainable_params
+                .map(|x| x.to_string())
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.3}", report.final_loss.unwrap_or(f64::NAN)),
+            format!(
+                "{:.1}",
+                report.ppl_acc_post.unwrap_or(f64::NAN)
+            ),
+            format!(
+                "{:.1}",
+                report.us_per_token.unwrap_or(f64::NAN)
+            ),
         ]);
     }
     table.print();

@@ -58,12 +58,14 @@ fn main() {
             .map(|i| i.name.clone())
             .collect();
         values.retain(|k, _| want.contains(k));
-        let inputs = assemble_inputs(exe.spec(), values.clone());
+        let inputs =
+            assemble_inputs(exe.spec(), values.clone()).unwrap();
         let _ = exe.run(&inputs).unwrap(); // warm
         let reps = 3;
         let t0 = Instant::now();
         for _ in 0..reps {
-            let inputs = assemble_inputs(exe.spec(), values.clone());
+            let inputs =
+                assemble_inputs(exe.spec(), values.clone()).unwrap();
             let _ = exe.run(&inputs).unwrap();
         }
         println!(

@@ -6,65 +6,70 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! What happens:
+//! The whole five-line quickstart:
+//!
+//! ```rust,no_run
+//! let mut session = losia::Session::builder()
+//!     .config("tiny").method(losia::config::Method::LosiaPro)
+//!     .task("modmath").steps(150).lr(2e-3).build()?;
+//! let report = session.train()?;
+//! println!("{}", report.to_json_string());
+//! ```
+//!
+//! What happens behind `build()` + `train()`:
 //! 1. the PJRT runtime loads `artifacts/tiny/*.hlo.txt`,
 //! 2. the LoSiA coordinator selects random core subnets (Algorithm 2
 //!    line 3), trains with the factorized-subnet artifact, profiles
 //!    layer importance on the async schedule, and re-localizes every
 //!    time slot,
-//! 3. pre/post accuracy on held-out modular arithmetic is printed.
+//! 3. telemetry streams through the stock observers and lands in a
+//!    serializable `RunReport` with pre/post accuracy.
 
-use losia::config::{Method, TrainConfig};
-use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::domain::ModMath;
-use losia::data::{gen_eval_set, gen_train_set, Batcher};
-use losia::eval::ppl_accuracy;
-use losia::runtime::Runtime;
-use losia::util::rng::Rng;
+use losia::config::Method;
+use losia::session::Session;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::from_config_name("tiny")?;
+    let mut session = Session::builder()
+        .config("tiny")
+        .method(Method::LosiaPro)
+        .task("modmath")
+        .steps(150)
+        .lr(2e-3)
+        .time_slot(10)
+        .log_every(25)
+        .train_n(2000)
+        .eval_n(200)
+        .build()?;
+
+    let cfg = session.model_cfg();
     println!(
         "model: {} params, {} layers, d_model {}",
-        rt.cfg.param_count, rt.cfg.n_layers, rt.cfg.d_model
+        cfg.param_count, cfg.n_layers, cfg.d_model
     );
 
-    let tc = TrainConfig {
-        method: Method::LosiaPro,
-        steps: 150,
-        lr: 2e-3,
-        time_slot: 10,
-        log_every: 25,
-        ..TrainConfig::default()
-    };
-
-    let train = gen_train_set(&ModMath, 2000, 42);
-    let eval = gen_eval_set(&ModMath, 200, 42);
-    let mut batcher = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 42);
-
-    let mut rng = Rng::new(42);
-    let mut state = ModelState::init(&rt.cfg, &mut rng);
-    let mut trainer = Trainer::new(&rt, tc)?;
+    let report = session.train()?;
     println!(
         "method: {} — {} trainable params ({:.2}% of model)",
-        trainer.driver.method().name(),
-        trainer.driver.trainable_params(),
-        100.0 * trainer.driver.trainable_params() as f64
-            / rt.cfg.param_count as f64
+        report.method,
+        report.trainable_params.unwrap_or(0),
+        100.0 * report.trainable_params.unwrap_or(0) as f64
+            / report.total_params as f64
     );
-
-    let acc0 = ppl_accuracy(&rt, &state, &eval)?;
-    trainer.train(&mut state, &mut batcher)?;
-    let acc1 = ppl_accuracy(&rt, &state, &eval)?;
-
     println!(
         "loss {:.3} → {:.3} | accuracy {:.1}% → {:.1}% | {:.1} µs/token",
-        trainer.loss_log[0].1,
-        trainer.tail_loss(10),
-        acc0,
-        acc1,
-        trainer.us_per_token()
+        report.first_loss.unwrap_or(f64::NAN),
+        report.final_loss.unwrap_or(f64::NAN),
+        report.ppl_acc_pre.unwrap_or(f64::NAN),
+        report.ppl_acc_post.unwrap_or(f64::NAN),
+        report.us_per_token.unwrap_or(f64::NAN)
+    );
+    println!(
+        "reselections: {} (mean turnover {})",
+        report.reselections,
+        report
+            .selection_drift
+            .map(|d| format!("{d:.1}%"))
+            .unwrap_or_else(|| "-".into())
     );
     Ok(())
 }

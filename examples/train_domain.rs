@@ -1,6 +1,7 @@
 //! End-to-end validation driver: train a multi-million-parameter
 //! transformer for a few hundred steps on a synthetic domain corpus
-//! with any method, log the loss curve, and evaluate.
+//! with any method, log the loss curve, and evaluate — all through
+//! one `Session`.
 //!
 //! ```bash
 //! cargo run --release --example train_domain -- \
@@ -13,106 +14,79 @@
 //! ```
 //!
 //! Writes `results/e2e_<config>_<method>_<task>.csv` with the loss
-//! curve; the runs recorded in EXPERIMENTS.md §End-to-End used this
-//! driver.
+//! curve and `results/e2e_<…>.json` with the full `RunReport`; the
+//! runs recorded in EXPERIMENTS.md §End-to-End used this driver.
 
-use losia::config::{Method, TrainConfig};
-use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::domain::{KvFacts, ModMath, StackEval};
-use losia::data::{gen_eval_set, gen_train_set, Batcher, Task};
-use losia::eval::{generate_accuracy, ppl_accuracy};
-use losia::runtime::Runtime;
+use losia::session::Session;
 use losia::util::cli::Args;
-use losia::util::rng::Rng;
 use losia::util::table::write_series_csv;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(&["remat"]);
-    let cfg_name = args.get_or("config", "medium");
-    let method = Method::parse(&args.get_or("method", "losia-pro"))?;
-    let task_name = args.get_or("task", "kvfacts");
-    let task: Box<dyn Task> = match task_name.as_str() {
-        "modmath" => Box::new(ModMath),
-        "stack" => Box::new(StackEval),
-        "kvfacts" => Box::new(KvFacts::new(128, 4, 7)),
-        other => anyhow::bail!("unknown task {other}"),
-    };
+    let mut session = Session::builder()
+        .config(&args.get_or("config", "medium"))
+        .method_str(&args.get_or("method", "losia-pro"))?
+        .task(&args.get_or("task", "kvfacts"))
+        .steps(args.get_usize("steps", 300))
+        .lr(args.get_f64("lr", 1e-3))
+        .time_slot(args.get_usize("time-slot", 20))
+        .log_every(args.get_usize("log-every", 25))
+        .seed(args.get_usize("seed", 42) as u64)
+        .use_remat(args.has_flag("remat"))
+        .train_n(args.get_usize("train-n", 4000))
+        .eval_n(args.get_usize("eval-n", 200))
+        .measure_gen(true)
+        .build()?;
 
-    let rt = Runtime::from_config_name(&cfg_name)?;
-    let tc = TrainConfig {
-        method,
-        steps: args.get_usize("steps", 300),
-        lr: args.get_f64("lr", 1e-3),
-        time_slot: args.get_usize("time-slot", 20),
-        log_every: args.get_usize("log-every", 25),
-        seed: args.get_usize("seed", 42) as u64,
-        use_remat: args.has_flag("remat"),
-        galore_rank: rt.cfg.d_model / 4,
-        ..TrainConfig::default()
-    };
+    let cfg = session.model_cfg();
     println!(
         "e2e: config={} ({} params) method={} task={} steps={}",
-        rt.cfg.name,
-        rt.cfg.param_count,
-        method.name(),
-        task_name,
-        tc.steps
+        cfg.name,
+        cfg.param_count,
+        session.train_cfg().method.name(),
+        args.get_or("task", "kvfacts"),
+        session.train_cfg().steps,
     );
 
-    let train = gen_train_set(
-        task.as_ref(),
-        args.get_usize("train-n", 4000),
-        tc.seed,
-    );
-    let eval = gen_eval_set(
-        task.as_ref(),
-        args.get_usize("eval-n", 200),
-        tc.seed,
-    );
-    let mut batcher =
-        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, tc.seed);
-    let mut rng = Rng::new(tc.seed);
-    let mut state = ModelState::init(&rt.cfg, &mut rng);
-    let mut trainer = Trainer::new(&rt, tc)?;
+    let report = session.train()?;
     println!(
         "trainable: {} params ({:.2}%)",
-        trainer.driver.trainable_params(),
-        100.0 * trainer.driver.trainable_params() as f64
-            / rt.cfg.param_count as f64
+        report.trainable_params.unwrap_or(0),
+        100.0 * report.trainable_params.unwrap_or(0) as f64
+            / report.total_params as f64
     );
 
-    let acc0 = ppl_accuracy(&rt, &state, &eval)?;
-    println!("pre-train  : ppl-acc {acc0:.2}%");
-    let t0 = std::time::Instant::now();
-    trainer.train(&mut state, &mut batcher)?;
-    let wall = t0.elapsed().as_secs_f64();
-    let acc1 = ppl_accuracy(&rt, &state, &eval)?;
-    let gen1 = generate_accuracy(&rt, &state, &eval)?;
-
-    let rows: Vec<Vec<f64>> = trainer
-        .loss_log
+    let rows: Vec<Vec<f64>> = report
+        .loss_curve
         .iter()
         .map(|(t, l)| vec![*t as f64, *l])
         .collect();
-    let csv = format!(
+    let stem = format!(
         "e2e_{}_{}_{}",
-        rt.cfg.name,
-        method.name().to_lowercase().replace('-', ""),
-        task_name
+        report.config,
+        report.method.to_lowercase().replace('-', ""),
+        report.task
     );
-    write_series_csv(&csv, &["step", "loss"], &rows);
+    write_series_csv(&stem, &["step", "loss"], &rows);
+    let json_path = report.save_results(&stem)?;
+    println!("[report] {}", json_path.display());
 
     println!(
-        "post-train : ppl-acc {acc1:.2}% | gen-acc {gen1:.2}% | \
-         loss {:.3} → {:.3}",
-        trainer.loss_log[0].1,
-        trainer.tail_loss(20)
+        "pre-train  : ppl-acc {:.2}%",
+        report.ppl_acc_pre.unwrap_or(f64::NAN)
     );
     println!(
-        "wall {wall:.1}s | {:.1} µs/token | {:.2} steps/s",
-        trainer.us_per_token(),
-        trainer.loss_log.len() as f64 / wall
+        "post-train : ppl-acc {:.2}% | gen-acc {:.2}% | loss {:.3} → {:.3}",
+        report.ppl_acc_post.unwrap_or(f64::NAN),
+        report.gen_acc.unwrap_or(f64::NAN),
+        report.first_loss.unwrap_or(f64::NAN),
+        report.final_loss.unwrap_or(f64::NAN),
+    );
+    println!(
+        "wall {:.1}s | {:.1} µs/token | {:.2} steps/s",
+        report.wall_secs,
+        report.us_per_token.unwrap_or(f64::NAN),
+        report.loss_curve.len() as f64 / report.wall_secs.max(1e-9)
     );
     Ok(())
 }

@@ -1,5 +1,10 @@
 //! Shared bench scaffolding: config/steps selection via env vars, a
-//! train-and-eval harness, and method lists.
+//! session-based train-and-eval harness, and method lists.
+//!
+//! Every bench constructs its runs through `losia::session::Session`
+//! (sharing one `Runtime` so compiled artifacts are reused) and reads
+//! telemetry from the run's `RunReport` + selection events instead of
+//! trainer internals.
 //!
 //! Defaults keep `cargo bench` tractable on CPU (tiny config, short
 //! runs). For paper-shaped fidelity re-run with:
@@ -12,11 +17,10 @@
 
 use losia::config::{Ablation, Method, TrainConfig};
 use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::{gen_eval_set, gen_train_set, Batcher, EvalItem, Task};
+use losia::data::{gen_eval_set, EvalItem, Task};
 use losia::eval::ppl_accuracy;
 use losia::runtime::Runtime;
-use losia::util::rng::Rng;
+use losia::session::{RunReport, SelectionEvent, Session};
 
 pub fn bench_config() -> String {
     std::env::var("LOSIA_BENCH_CONFIG").unwrap_or_else(|_| "tiny".into())
@@ -56,33 +60,36 @@ pub struct RunResult {
     pub us_per_token: f64,
     pub trainable: usize,
     pub loss_log: Vec<(usize, f64)>,
-    pub selection_log:
-        Vec<(usize, usize, String, Vec<usize>, Vec<usize>)>,
+    pub selection_log: Vec<SelectionEvent>,
+    pub report: RunReport,
 }
 
-/// Train `method` on `task` from a fresh seed-42 model.
+/// Train `method` on `task` from a fresh seed-7 model via the session
+/// layer.
 pub fn train_method(
     rt: &Runtime,
     tc: TrainConfig,
     task: &dyn Task,
     train_n: usize,
 ) -> RunResult {
-    let train = gen_train_set(task, train_n, tc.seed);
-    let mut batcher =
-        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, tc.seed);
-    let mut rng = Rng::new(7);
-    let mut state = ModelState::init(&rt.cfg, &mut rng);
-    let mut trainer = Trainer::new(rt, tc).expect("trainer");
-    trainer.train(&mut state, &mut batcher).expect("train");
-    let selection_log = trainer.driver.selection_history();
+    let mut session = Session::builder()
+        .runtime(rt)
+        .train_config(tc)
+        .task_ref(task)
+        .train_n(train_n)
+        .model_seed(7)
+        .build()
+        .expect("session");
+    let report = session.train().expect("train");
     RunResult {
-        first_loss: trainer.loss_log.first().map(|x| x.1).unwrap_or(0.0),
-        final_loss: trainer.tail_loss(10),
-        us_per_token: trainer.us_per_token(),
-        trainable: trainer.driver.trainable_params(),
-        loss_log: trainer.loss_log.clone(),
-        selection_log,
-        state,
+        first_loss: report.first_loss.unwrap_or(f64::NAN),
+        final_loss: report.final_loss.unwrap_or(f64::NAN),
+        us_per_token: report.us_per_token.unwrap_or(f64::NAN),
+        trainable: report.trainable_params.unwrap_or(0),
+        loss_log: report.loss_curve.clone(),
+        selection_log: session.selection_events().to_vec(),
+        state: session.into_state(),
+        report,
     }
 }
 
@@ -113,25 +120,10 @@ pub fn table1_methods() -> Vec<Method> {
 
 /// Analytic memory total in "GB-equivalent" (scaled for readability).
 pub fn memory_gb(rt: &Runtime, method: Method) -> f64 {
-    use losia::metrics::memory as mm;
-    let cfg = &rt.cfg;
-    let b = 4.0; // f32
-    let bytes = match method {
-        Method::Fft => mm::fft(cfg, b).total(),
-        Method::Lora | Method::Pissa | Method::Dora => {
-            mm::lora(cfg, cfg.lora_rank, b).total()
-        }
-        Method::Galore => mm::galore(cfg, cfg.d_model / 4, b).total(),
-        Method::Losia | Method::LosiaPro => mm::losia(
-            cfg,
-            cfg.rank_factor,
-            cfg.out_factor,
-            b,
-            false,
-        )
-        .total(),
-    };
-    bytes / 1e9
+    losia::metrics::memory::method_memory_gb(
+        &rt.cfg,
+        &base_tc(rt, method, 1),
+    )
 }
 
 pub fn ablation(name: &str) -> Ablation {

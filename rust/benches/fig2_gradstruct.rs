@@ -38,7 +38,8 @@ fn main() {
     let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 2);
     let batch = b.next_batch();
     let values = base_values(&res.state, &batch);
-    let out = exe.run(&assemble_inputs(exe.spec(), values)).unwrap();
+    let inputs = assemble_inputs(exe.spec(), values).unwrap();
+    let out = exe.run(&inputs).unwrap();
 
     let p = rt.cfg.rank_factor;
     let mut table = Table::new(

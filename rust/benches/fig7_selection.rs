@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 use common::*;
 use losia::config::Method;
 use losia::data::domain::ModMath;
+use losia::session::SelectionEvent;
 use losia::util::table::{write_series_csv, Table};
 
 fn main() {
@@ -38,26 +39,28 @@ fn main() {
         tc.rank_factor_override = Some(p);
         tc.time_slot = (steps / 16).max(3);
         let res = train_method(&rt, tc, &ModMath, 2000);
-        // focus on wv of layer 0 (the paper's proj_v)
-        let events: Vec<&(usize, usize, String, Vec<usize>, Vec<usize>)> =
-            res.selection_log
-                .iter()
-                .filter(|(_, l, k, _, _)| *l == 0 && k == "wv")
-                .collect();
+        // focus on wv of layer 0 (the paper's proj_v); initial random
+        // selections are not reselections
+        let events: Vec<&SelectionEvent> = res
+            .selection_log
+            .iter()
+            .filter(|e| e.group == 0 && e.kind == "wv" && !e.initial)
+            .collect();
         let d = rt.cfg.d_model;
         let mut freq: BTreeMap<usize, usize> = BTreeMap::new();
         let mut drift_sum = 0.0;
         let mut prev: Option<&Vec<usize>> = None;
-        for (_, _, _, rho, _) in &events {
-            for &i in rho {
+        for e in &events {
+            for &i in &e.rho {
                 *freq.entry(i).or_default() += 1;
             }
             if let Some(pr) = prev {
-                let kept = rho.iter().filter(|i| pr.contains(i)).count();
+                let kept =
+                    e.rho.iter().filter(|i| pr.contains(i)).count();
                 drift_sum +=
-                    100.0 * (1.0 - kept as f64 / rho.len() as f64);
+                    100.0 * (1.0 - kept as f64 / e.rho.len() as f64);
             }
-            prev = Some(rho);
+            prev = Some(&e.rho);
         }
         let reselections = events.len();
         let distinct = freq.len();

@@ -16,11 +16,11 @@ mod common;
 use common::*;
 use losia::config::Method;
 use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
 use losia::data::domain::ModMath;
 use losia::data::{gen_train_set, Batcher};
 use losia::methods::{assemble_inputs, base_values};
 use losia::metrics::latency::time_fn;
+use losia::session::Session;
 use losia::util::rng::Rng;
 use losia::util::table::Table;
 
@@ -39,9 +39,9 @@ fn main() {
     let fwd_exe = rt.load("fwd_loss").unwrap();
     let fwd = time_fn(2, reps, || {
         let values = base_values(&state, &batch);
-        let _ = fwd_exe
-            .run(&assemble_inputs(fwd_exe.spec(), values))
-            .unwrap();
+        let inputs =
+            assemble_inputs(fwd_exe.spec(), values).unwrap();
+        let _ = fwd_exe.run(&inputs).unwrap();
     });
     let fwd_us = fwd.mean_micros() / tokens;
 
@@ -61,18 +61,23 @@ fn main() {
                     e.reset_stats();
                 }
             }
-            // full end-to-end step through the real trainer
+            // full end-to-end run through the session layer; the
+            // stock LatencyObserver supplies µs/token
             let mut tc = base_tc(&rt, method, reps);
             tc.use_remat = remat;
             tc.time_slot = 4; // include profiling + reselect cost
-            let mut rng = Rng::new(7);
-            let mut st = ModelState::init(&rt.cfg, &mut rng);
-            let train = gen_train_set(&ModMath, 256, 1);
-            let mut bt =
-                Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
-            let mut tr = Trainer::new(&rt, tc).unwrap();
-            tr.train(&mut st, &mut bt).unwrap();
-            let total_us = tr.us_per_token();
+            let mut session = Session::builder()
+                .runtime(&rt)
+                .train_config(tc)
+                .task("modmath")
+                .train_n(256)
+                .data_seed(1)
+                .batcher_seed(1)
+                .model_seed(7)
+                .build()
+                .unwrap();
+            let report = session.train().unwrap();
+            let total_us = report.us_per_token.unwrap_or(f64::NAN);
             // artifact-only time = grads executable mean
             let grads_us = match method {
                 Method::LosiaPro => {

@@ -1,5 +1,6 @@
 //! Table 5 (+ Table 13) — continual learning: Seq-LoRA vs Seq-LoSiA
-//! through five commonsense-analogue tasks, reporting AP / FWT / BWT.
+//! through five commonsense-analogue tasks, reporting AP / FWT / BWT
+//! via `Session::train_sequence`.
 //!
 //! Expected shape vs the paper: Seq-LoSiA higher AP and much less
 //! negative BWT (less forgetting); FWT comparable.
@@ -9,28 +10,46 @@ mod common;
 
 use common::*;
 use losia::config::Method;
-use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::commonsense::{suite, SUITE_NAMES};
-use losia::data::{gen_train_set, Batcher, Task};
-use losia::eval::{
-    average_performance, backward_transfer, forward_transfer,
-};
-use losia::util::rng::Rng;
+use losia::data::commonsense::SUITE_NAMES;
+use losia::eval::forward_transfer;
+use losia::session::{Session, TaskSpec};
 use losia::util::table::Table;
 
 /// HellaSwag, PIQA, BoolQ, SIQA, WinoGrande analogues.
 const SEQ: [usize; 5] = [2, 4, 7, 6, 3];
 
+fn specs(steps: usize) -> Vec<TaskSpec> {
+    SEQ.iter()
+        .enumerate()
+        .map(|(i, &ti)| {
+            TaskSpec::new(SUITE_NAMES[ti])
+                .steps(steps)
+                .train_n(1500)
+                .data_seed(50 + i as u64)
+                .batcher_seed(1)
+                .eval_n(120)
+                .eval_seed(100 + i as u64)
+        })
+        .collect()
+}
+
+fn session(
+    rt: &losia::runtime::Runtime,
+    method: Method,
+    steps: usize,
+) -> Session<'_> {
+    Session::builder()
+        .runtime(rt)
+        .train_config(base_tc(rt, method, steps))
+        .model_seed(7)
+        .build()
+        .expect("session")
+}
+
 fn main() {
     let rt = runtime();
     let steps = bench_steps(100);
-    let tasks = suite();
-    let seq: Vec<&dyn Task> =
-        SEQ.iter().map(|&i| tasks[i].as_ref()).collect();
-    let evals: Vec<_> = (0..seq.len())
-        .map(|i| eval_items(seq[i], 120, 100 + i as u64))
-        .collect();
+    let specs = specs(steps);
 
     let mut summary = Table::new(
         "Table 5 — continual learning",
@@ -39,45 +58,19 @@ fn main() {
 
     for method in [Method::Lora, Method::LosiaPro] {
         eprintln!("== Seq-{} ==", method.name());
-        // single-task references
+        // single-task references (fresh model per task)
         let mut single = Vec::new();
-        for (i, task) in seq.iter().enumerate() {
-            let tc = base_tc(&rt, method, steps);
-            let mut rng = Rng::new(7);
-            let mut state = ModelState::init(&rt.cfg, &mut rng);
-            let train = gen_train_set(*task, 1500, 50 + i as u64);
-            let mut b = Batcher::new(
-                train,
-                rt.cfg.batch,
-                rt.cfg.seq_len,
-                1,
-            );
-            let mut tr = Trainer::new(&rt, tc).unwrap();
-            tr.train(&mut state, &mut b).unwrap();
-            single.push(eval_ppl(&rt, &state, &evals[i]));
+        for spec in &specs {
+            let mut s = session(&rt, method, steps);
+            let seq = s
+                .train_sequence(std::slice::from_ref(spec))
+                .expect("single-task run");
+            single.push(seq.perf[0][0]);
         }
-        // sequential adaptation
-        let mut rng = Rng::new(7);
-        let mut state = ModelState::init(&rt.cfg, &mut rng);
-        let mut perf = Vec::new();
-        for (i, task) in seq.iter().enumerate() {
-            let tc = base_tc(&rt, method, steps);
-            let train = gen_train_set(*task, 1500, 50 + i as u64);
-            let mut b = Batcher::new(
-                train,
-                rt.cfg.batch,
-                rt.cfg.seq_len,
-                1,
-            );
-            let mut tr = Trainer::new(&rt, tc).unwrap();
-            tr.train(&mut state, &mut b).unwrap();
-            perf.push(
-                evals
-                    .iter()
-                    .map(|e| eval_ppl(&rt, &state, e))
-                    .collect::<Vec<_>>(),
-            );
-        }
+        // sequential adaptation on one evolving model
+        let mut s = session(&rt, method, steps);
+        let seq = s.train_sequence(&specs).expect("sequence");
+
         // Table 13 detail
         let mut detail = Table::new(
             &format!("Table 13 — Seq-{} stage detail", method.name()),
@@ -85,7 +78,7 @@ fn main() {
         );
         for (j, &ti) in SEQ.iter().enumerate() {
             let mut row = vec![SUITE_NAMES[ti].to_string()];
-            for stage in &perf {
+            for stage in &seq.perf {
                 row.push(format!("{:.1}", stage[j]));
             }
             row.push(format!("{:.1}", single[j]));
@@ -99,9 +92,15 @@ fn main() {
 
         summary.row(&[
             format!("Seq-{}", method.name()),
-            format!("{:.2}", average_performance(&perf)),
-            format!("{:.2}", forward_transfer(&perf, &single)),
-            format!("{:.2}", backward_transfer(&perf)),
+            format!(
+                "{:.2}",
+                seq.average_performance().unwrap_or(f64::NAN)
+            ),
+            format!("{:.2}", forward_transfer(&seq.perf, &single)),
+            format!(
+                "{:.2}",
+                seq.backward_transfer().unwrap_or(f64::NAN)
+            ),
         ]);
     }
     summary.print();

@@ -34,7 +34,8 @@ fn main() {
     let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 3);
     let batch = b.next_batch();
     let values = base_values(&state, &batch);
-    let out = exe.run(&assemble_inputs(exe.spec(), values)).unwrap();
+    let inputs = assemble_inputs(exe.spec(), values).unwrap();
+    let out = exe.run(&inputs).unwrap();
     let mut grads = std::collections::BTreeMap::new();
     for (spec, t) in exe.spec().outputs[1..].iter().zip(&out[1..]) {
         grads.insert(

@@ -78,15 +78,24 @@ impl ModelCfg {
             .unwrap_or_else(|| panic!("unknown linear kind {kind:?}"))
     }
 
-    pub fn artifact(&self, name: &str) -> &ArtifactSpec {
-        self.artifacts.get(name).unwrap_or_else(|| {
-            panic!(
+    /// Typed artifact lookup: the error names the config and lists
+    /// every available artifact so a missing-artifact failure is
+    /// actionable (re-run `python -m compile.aot`).
+    pub fn try_artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
                 "artifact {name:?} not in manifest for config {:?} \
-                 (have: {:?})",
+                 (available: {:?}); re-run `make artifacts`",
                 self.name,
                 self.artifacts.keys().collect::<Vec<_>>()
             )
         })
+    }
+
+    /// Infallible lookup for contexts that already validated the
+    /// manifest; panics with the same actionable message otherwise.
+    pub fn artifact(&self, name: &str) -> &ArtifactSpec {
+        self.try_artifact(name).unwrap_or_else(|e| panic!("{e}"))
     }
 
     pub fn has_artifact(&self, name: &str) -> bool {

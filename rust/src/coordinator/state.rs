@@ -5,11 +5,29 @@
 //! produces the flat `HostValue` list every artifact starts with.
 
 use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 use crate::config::ModelCfg;
 use crate::runtime::HostValue;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+const STATE_MAGIC: &[u8; 8] = b"LOSIAST1";
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
 
 /// Named parameter tensors in ABI order.
 #[derive(Debug, Clone)]
@@ -73,6 +91,96 @@ impl ModelState {
         self.params.iter().map(|(_, t)| t.len()).sum()
     }
 
+    /// Serialize all parameters to a checkpoint file (little-endian
+    /// f32, ABI order) loadable via [`ModelState::load`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(STATE_MAGIC)?;
+        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.params {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // one bulk write per tensor (multi-million-element params)
+            let bytes: Vec<u8> = t
+                .data
+                .iter()
+                .flat_map(|x| x.to_le_bytes())
+                .collect();
+            w.write_all(&bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a checkpoint saved by [`ModelState::save`], validating
+    /// every parameter name and shape against `cfg`'s ABI.
+    pub fn load(path: &Path, cfg: &ModelCfg) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != STATE_MAGIC {
+            bail!(
+                "{} is not a LoSiA state file (bad magic)",
+                path.display()
+            );
+        }
+        let count = read_u32(&mut r)? as usize;
+        if count != cfg.params.len() {
+            bail!(
+                "state file has {count} params, config {:?} expects {}",
+                cfg.name,
+                cfg.params.len()
+            );
+        }
+        let mut params = Vec::with_capacity(count);
+        let mut index = BTreeMap::new();
+        for (ename, eshape) in &cfg.params {
+            let nlen = read_u32(&mut r)? as usize;
+            let mut nbuf = vec![0u8; nlen];
+            r.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf)
+                .context("state file: non-UTF8 parameter name")?;
+            if &name != ename {
+                bail!(
+                    "state file param {name:?} does not match config \
+                     ABI order (expected {ename:?})"
+                );
+            }
+            let ndim = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            if &shape != eshape {
+                bail!(
+                    "state file param {name:?} has shape {shape:?}, \
+                     config expects {eshape:?}"
+                );
+            }
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            index.insert(name.clone(), params.len());
+            params.push((name, Tensor::from_vec(&shape, data)));
+        }
+        Ok(ModelState { params, index })
+    }
+
     /// L2 distance to another state (continual-learning drift metric).
     pub fn l2_distance(&self, other: &ModelState) -> f64 {
         let mut acc = 0.0f64;
@@ -128,6 +236,35 @@ mod tests {
         let l0 = st.layer("wq", 0);
         assert_eq!(l0.shape, vec![cfg.d_model, cfg.d_model]);
         assert_eq!(l0.data[..8], wq.data[..8]);
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let cfg = tiny();
+        let mut rng = Rng::new(3);
+        let st = ModelState::init(&cfg, &mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("losia_state_{}.bin", std::process::id()));
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path, &cfg).unwrap();
+        let _ = std::fs::remove_file(&path);
+        for ((n0, t0), (n1, t1)) in st.params.iter().zip(&back.params)
+        {
+            assert_eq!(n0, n1);
+            assert_eq!(t0.shape, t1.shape);
+            assert_eq!(t0.data, t1.data);
+        }
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let cfg = tiny();
+        let path = std::env::temp_dir()
+            .join(format!("losia_garbage_{}.bin", std::process::id()));
+        std::fs::write(&path, b"definitely not a state file").unwrap();
+        let err = ModelState::load(&path, &cfg).unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        assert!(err.to_string().contains("bad magic"), "{err}");
     }
 
     #[test]

@@ -1,5 +1,12 @@
-//! The training loop: schedules, drives the method driver over
-//! batches, and records losses + per-step wall time.
+//! The training loop: schedules steps, drives the method driver over
+//! batches, and reports telemetry into an observer set.
+//!
+//! The trainer owns no telemetry of its own — loss curves, per-step
+//! wall time, and subnet-selection events all flow through
+//! [`crate::session::observer::ObserverSet`], so benches and the CLI
+//! compose metrics instead of forking the loop. Most callers should
+//! reach this through [`crate::session::Session`], which also owns
+//! runtime loading, task construction, and report assembly.
 
 use anyhow::Result;
 use std::time::Instant;
@@ -10,16 +17,13 @@ use crate::coordinator::state::ModelState;
 use crate::data::Batcher;
 use crate::methods::{build_driver, Driver};
 use crate::runtime::Runtime;
+use crate::session::observer::ObserverSet;
 
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
     pub tc: TrainConfig,
     pub schedule: LrSchedule,
     pub driver: Box<dyn Driver>,
-    /// (step, loss)
-    pub loss_log: Vec<(usize, f64)>,
-    /// seconds per step
-    pub step_secs: Vec<f64>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -35,25 +39,33 @@ impl<'rt> Trainer<'rt> {
             tc,
             schedule,
             driver,
-            loss_log: Vec::new(),
-            step_secs: Vec::new(),
         })
     }
 
-    /// Run `tc.steps` optimization steps over the batcher.
+    /// Run `tc.steps` optimization steps over the batcher, reporting
+    /// step / relocalize / finalize events into `obs`.
     pub fn train(
         &mut self,
         state: &mut ModelState,
         batcher: &mut Batcher,
+        obs: &mut ObserverSet,
     ) -> Result<()> {
+        let tokens = self.rt.cfg.tokens_per_step();
         self.driver.prepare(state)?;
+        // initial subnet selections installed at construction time
+        for ev in self.driver.drain_events() {
+            obs.emit_relocalize(&ev);
+        }
         for t in 0..self.tc.steps {
             let batch = batcher.next_batch();
             let lr = self.schedule.lr(t);
             let t0 = Instant::now();
             let loss = self.driver.step(state, &batch, t, lr)?;
-            self.step_secs.push(t0.elapsed().as_secs_f64());
-            self.loss_log.push((t, loss));
+            let secs = t0.elapsed().as_secs_f64();
+            for ev in self.driver.drain_events() {
+                obs.emit_relocalize(&ev);
+            }
+            obs.emit_step(t, loss, lr, secs, tokens);
             if self.tc.log_every > 0 && t % self.tc.log_every == 0 {
                 eprintln!(
                     "[train:{}] step {t:>5} loss {loss:.4} lr {lr:.2e}",
@@ -64,28 +76,7 @@ impl<'rt> Trainer<'rt> {
         // merge external adapters into the backbone (paper protocol:
         // LoRA modules are merged before evaluation / the next task)
         self.driver.finalize(state)?;
+        obs.emit_finalize(self.tc.steps);
         Ok(())
-    }
-
-    /// Mean µs/token over steps (skipping the first, which pays
-    /// compile/warmup costs).
-    pub fn us_per_token(&self) -> f64 {
-        if self.step_secs.len() <= 1 {
-            return f64::NAN;
-        }
-        let secs: f64 = self.step_secs[1..].iter().sum();
-        let steps = (self.step_secs.len() - 1) as f64;
-        secs / steps * 1e6 / self.rt.cfg.tokens_per_step() as f64
-    }
-
-    /// Mean loss over the last `k` steps (convergence summary).
-    pub fn tail_loss(&self, k: usize) -> f64 {
-        let n = self.loss_log.len();
-        let k = k.min(n).max(1);
-        self.loss_log[n - k..]
-            .iter()
-            .map(|(_, l)| l)
-            .sum::<f64>()
-            / k as f64
     }
 }

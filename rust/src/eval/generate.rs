@@ -80,7 +80,7 @@ impl<'rt> Generator<'rt> {
             // fwd_logits wants only params + tokens
             values.remove("targets");
             values.remove("mask");
-            let inputs = assemble_inputs(self.exe.spec(), values);
+            let inputs = assemble_inputs(self.exe.spec(), values)?;
             let out = self.exe.run(&inputs)?;
             let logits = &out[0]; // [B, S, V]
             for i in 0..prompts.len() {

@@ -55,7 +55,7 @@ impl<'rt> NllScorer<'rt> {
                 seq: s,
             };
             let values = base_values(state, &batch);
-            let inputs = assemble_inputs(self.exe.spec(), values);
+            let inputs = assemble_inputs(self.exe.spec(), values)?;
             let res = self.exe.run(&inputs)?;
             let nll = &res[0]; // [B]
             for i in 0..chunk.len() {

@@ -4,6 +4,39 @@
 //! Subnet Localization and Optimization* (EMNLP 2025) as a three-layer
 //! Rust + JAX + Pallas stack.
 //!
+//! ## The session layer
+//!
+//! Every run — CLI, bench, example, or test — goes through
+//! [`session`], the crate's public surface:
+//!
+//! ```no_run
+//! use losia::config::Method;
+//! use losia::session::Session;
+//!
+//! let mut session = Session::builder()
+//!     .config("tiny")
+//!     .method(Method::LosiaPro)
+//!     .task("modmath")
+//!     .steps(200)
+//!     .build()?;
+//! let report = session.train()?; // serializable RunReport
+//! # anyhow::Ok(())
+//! ```
+//!
+//! * [`session::SessionBuilder`] owns runtime loading, task
+//!   construction (via [`session::TaskRegistry`]), seeding, and driver
+//!   assembly, returning `anyhow` errors instead of panics.
+//! * Telemetry flows through the [`session::Observer`] event stream
+//!   (`on_step`, `on_relocalize`, `on_task_boundary`, `on_finalize`);
+//!   stock observers cover loss curves, µs/token latency, analytic
+//!   memory, and subnet-selection tracking.
+//! * Every run emits a [`session::RunReport`] that round-trips through
+//!   JSON; multi-task continual learning (paper §4.4) is
+//!   [`session::Session::train_sequence`] over
+//!   [`session::TaskSpec`]s.
+//!
+//! ## The coordinator underneath
+//!
 //! This crate is **Layer 3**: the training coordinator. It owns
 //!
 //! * sensitivity-importance accumulation (paper Eqs. 3–6),
@@ -27,5 +60,8 @@ pub mod eval;
 pub mod methods;
 pub mod metrics;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod util;
+
+pub use session::{Session, SessionBuilder};

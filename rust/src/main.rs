@@ -1,74 +1,130 @@
-//! `losia` CLI — train and evaluate with any method on any config.
+//! `losia` CLI — train and evaluate with any method on any config,
+//! built entirely on the [`losia::session`] layer.
 //!
 //! ```text
 //! losia train --config tiny --method losia-pro --task modmath \
-//!             --steps 200 --lr 1e-3 --time-slot 20
+//!             --steps 200 --lr 1e-3 --time-slot 20 \
+//!             [--save-state model.bin] [--report out.json] [--json]
+//! losia eval  --config tiny --task modmath [--state model.bin] [--no-gen]
 //! losia info  --config small
 //! ```
+//!
+//! `train` and `eval` both emit a structured `RunReport`; `train`
+//! writes it to `results/` (or `--report PATH`) and `--json` prints
+//! the JSON to stdout.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use losia::config::{Method, TrainConfig};
-use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::domain::{KvFacts, ModMath, StackEval};
-use losia::data::{gen_eval_set, gen_train_set, Batcher, Task};
-use losia::eval::{generate_accuracy, ppl_accuracy};
-use losia::runtime::Runtime;
+use losia::config::Dtype;
+use losia::session::Session;
 use losia::util::cli::Args;
-use losia::util::rng::Rng;
 
-fn task_by_name(name: &str) -> Box<dyn Task> {
-    match name {
-        "modmath" => Box::new(ModMath),
-        "stack" => Box::new(StackEval),
-        "kvfacts" => Box::new(KvFacts::new(64, 4, 7)),
-        other => panic!("unknown task {other:?} (modmath|stack|kvfacts)"),
+/// Shared builder assembly for `train` and `eval`.
+fn session_from_args(args: &Args) -> Result<losia::SessionBuilder<'static>> {
+    let mut b = Session::builder()
+        .config(&args.get_or("config", "tiny"))
+        .method_str(&args.get_or("method", "losia-pro"))?
+        .task(&args.get_or("task", "modmath"))
+        .steps(args.get_usize("steps", 200))
+        .lr(args.get_f64("lr", 1e-3))
+        .time_slot(args.get_usize("time-slot", 20))
+        .log_every(args.get_usize("log-every", 20))
+        .seed(args.get_usize("seed", 42) as u64)
+        .use_remat(args.has_flag("remat"))
+        .train_n(args.get_usize("train-n", 2000))
+        .eval_n(args.get_usize("eval-n", 200));
+    if let Some(r) = args.get("galore-rank") {
+        b = b.galore_rank(
+            r.parse().context("--galore-rank expects an integer")?,
+        );
     }
+    if let Some(path) = args.get("state") {
+        b = b.initial_state(path);
+    }
+    Ok(b)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg_name = args.get_or("config", "tiny");
-    let rt = Runtime::from_config_name(&cfg_name)?;
-    let mut tc = TrainConfig {
-        method: Method::parse(&args.get_or("method", "losia-pro"))?,
-        steps: args.get_usize("steps", 200),
-        lr: args.get_f64("lr", 1e-3),
-        time_slot: args.get_usize("time-slot", 20),
-        log_every: args.get_usize("log-every", 20),
-        seed: args.get_usize("seed", 42) as u64,
-        use_remat: args.has_flag("remat"),
-        ..TrainConfig::default()
+    let mut session = session_from_args(args)?
+        .measure_gen(true)
+        .build()?;
+    let report = session.train()?;
+    if let Some(pre) = report.ppl_acc_pre {
+        eprintln!("[eval] pre-train PPL-accuracy: {pre:.2}%");
+    }
+    println!("{}", report.summary_line());
+    if args.has_flag("json") {
+        println!("{}", report.to_json_string());
+    }
+    let path = match args.get("report") {
+        Some(p) => {
+            let p = std::path::PathBuf::from(p);
+            report.save(&p)?;
+            p
+        }
+        None => report.save_results(&format!(
+            "run_{}_{}_{}",
+            report.config,
+            report.method.to_lowercase().replace('-', ""),
+            report.task
+        ))?,
     };
-    tc.galore_rank = args.get_usize("galore-rank", rt.cfg.d_model / 4);
-
-    let task = task_by_name(&args.get_or("task", "modmath"));
-    let train = gen_train_set(task.as_ref(), args.get_usize("train-n", 2000), tc.seed);
-    let eval = gen_eval_set(task.as_ref(), args.get_usize("eval-n", 200), tc.seed);
-    let mut batcher =
-        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, tc.seed);
-
-    let mut rng = Rng::new(tc.seed);
-    let mut state = ModelState::init(&rt.cfg, &mut rng);
-    let mut trainer = Trainer::new(&rt, tc)?;
-
-    let acc0 = ppl_accuracy(&rt, &state, &eval)?;
-    eprintln!("[eval] pre-train PPL-accuracy: {acc0:.2}%");
-    trainer.train(&mut state, &mut batcher)?;
-    let acc1 = ppl_accuracy(&rt, &state, &eval)?;
-    let gen1 = generate_accuracy(&rt, &state, &eval)?;
-    println!(
-        "method={} steps={} final_loss={:.4} ppl_acc={:.2}% gen_acc={:.2}% \
-         us_per_token={:.1} trainable={}",
-        trainer.driver.method().name(),
-        trainer.tc.steps,
-        trainer.tail_loss(10),
-        acc1,
-        gen1,
-        trainer.us_per_token(),
-        trainer.driver.trainable_params(),
-    );
+    eprintln!("[report] {}", path.display());
+    if let Some(out) = args.get("save-state") {
+        session.save_state(out)?;
+        eprintln!("[state] saved to {out}");
+    }
     Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut session = session_from_args(args)?
+        .measure_gen(!args.has_flag("no-gen"))
+        .build()?;
+    let report = session.evaluate()?;
+    println!(
+        "config={} task={} ppl_acc={:.2}% gen_acc={} ({} items, {})",
+        report.config,
+        report.task,
+        report.ppl_acc_post.unwrap_or(f64::NAN),
+        report
+            .gen_acc
+            .map(|g| format!("{g:.2}%"))
+            .unwrap_or_else(|| "-".into()),
+        args.get_usize("eval-n", 200),
+        if args.get("state").is_some() {
+            "saved state"
+        } else {
+            "fresh state"
+        },
+    );
+    if args.has_flag("json") {
+        println!("{}", report.to_json_string());
+    }
+    Ok(())
+}
+
+fn fmt_specs(specs: &[losia::config::TensorSpec]) -> String {
+    specs
+        .iter()
+        .map(|s| {
+            let dt = match s.dtype {
+                Dtype::F32 => "f32",
+                Dtype::I32 => "i32",
+            };
+            format!(
+                "{}: {}[{}]",
+                s.name,
+                dt,
+                s.shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -89,25 +145,25 @@ fn cmd_info(args: &Args) -> Result<()> {
         cfg.param_count
     );
     for (name, a) in &cfg.artifacts {
-        println!(
-            "  artifact {name}: {} inputs, {} outputs ({})",
-            a.inputs.len(),
-            a.outputs.len(),
-            a.file.display()
-        );
+        println!("  artifact {name} ({})", a.file.display());
+        println!("    inputs : {}", fmt_specs(&a.inputs));
+        println!("    outputs: {}", fmt_specs(&a.outputs));
     }
     Ok(())
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["remat"]);
+    let args = Args::parse(&["remat", "json", "no-gen"]);
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: losia <train|info> [--config C] [--method M] \
-                 [--task T] [--steps N] [--lr F] [--time-slot N] [--remat]"
+                "usage: losia <train|eval|info> [--config C] \
+                 [--method M] [--task T] [--steps N] [--lr F] \
+                 [--time-slot N] [--remat] [--state PATH] \
+                 [--save-state PATH] [--report PATH] [--json]"
             );
             Ok(())
         }

@@ -53,7 +53,7 @@ impl Driver for FftDriver {
         lr: f64,
     ) -> Result<f64> {
         let values = base_values(state, batch);
-        let inputs = assemble_inputs(self.exe.spec(), values);
+        let inputs = assemble_inputs(self.exe.spec(), values)?;
         let out = self.exe.run(&inputs)?;
         let loss = out[0].data[0] as f64;
         for (spec, g) in

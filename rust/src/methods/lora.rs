@@ -241,7 +241,7 @@ impl Driver for LoraDriver {
         for (name, t) in &self.adapters {
             values.insert(name.clone(), HostValue::F32(t.clone()));
         }
-        let inputs = assemble_inputs(self.exe.spec(), values);
+        let inputs = assemble_inputs(self.exe.spec(), values)?;
         let out = self.exe.run(&inputs)?;
         let loss = out[0].data[0] as f64;
         for (spec, g) in

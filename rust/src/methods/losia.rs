@@ -23,7 +23,9 @@ use crate::coordinator::schedule::AsyncSchedule;
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
 use crate::data::Batch;
-use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
+use crate::methods::{
+    assemble_inputs, base_values, grads_artifact, Driver, SelectionEvent,
+};
 use crate::runtime::{Executable, HostValue, Runtime};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -48,8 +50,9 @@ pub struct LosiaDriver {
     sched: AsyncSchedule,
     rewarmer: Rewarmer,
     warmup_steps: usize,
-    /// (step, layer, kind, selection) log for Figures 3/7
-    pub selection_log: Vec<(usize, usize, String, Selection)>,
+    /// selection events queued for the trainer's observer stream
+    /// (drained via `Driver::drain_events`)
+    events: Vec<SelectionEvent>,
     /// cached zero-delta inputs (identical every step — perf: avoids
     /// re-allocating ~p²·|W| floats per call)
     zero_deltas: BTreeMap<String, HostValue>,
@@ -114,6 +117,30 @@ impl LosiaDriver {
             })
             .collect();
         let lm_sel = rng.choose_distinct(cfg.vocab, cfg.vocab_sub);
+        // report the initial random selections (Algorithm 2 line 3)
+        // so observers can reconstruct the current subnet even when
+        // re-localization never fires (ReLO ablation)
+        let mut events = Vec::new();
+        for (l, layer) in subnets.iter().enumerate() {
+            for (kind, st) in layer {
+                events.push(SelectionEvent {
+                    step: 0,
+                    group: l,
+                    kind: kind.clone(),
+                    rho: st.sel.rho.clone(),
+                    gamma: st.sel.gamma.clone(),
+                    initial: true,
+                });
+            }
+        }
+        events.push(SelectionEvent {
+            step: 0,
+            group: cfg.n_layers,
+            kind: "lm_head".into(),
+            rho: Vec::new(),
+            gamma: lm_sel.clone(),
+            initial: true,
+        });
         let lm_adam =
             AdamState::new(&[cfg.d_model, cfg.vocab_sub], hp);
         let lm_full_adam = tc.ablation.fft_output.then(|| {
@@ -164,7 +191,7 @@ impl LosiaDriver {
             sched,
             rewarmer,
             warmup_steps: 0, // set by the trainer via set_warmup
-            selection_log: Vec::new(),
+            events,
             zero_deltas,
         })
     }
@@ -290,12 +317,14 @@ impl LosiaDriver {
                 let kd = self.cfg.kind(&kind);
                 let score = accums[&kind].score();
                 let sel = localize(&score, kd.np, kd.mp);
-                self.selection_log.push((
-                    t,
-                    g,
-                    kind.clone(),
-                    sel.clone(),
-                ));
+                self.events.push(SelectionEvent {
+                    step: t,
+                    group: g,
+                    kind: kind.clone(),
+                    rho: sel.rho.clone(),
+                    gamma: sel.gamma.clone(),
+                    initial: false,
+                });
                 self.subnets[g].get_mut(&kind).unwrap().relocalize(sel);
             }
         } else {
@@ -304,15 +333,14 @@ impl LosiaDriver {
             self.lm_sel =
                 localize_columns(&col_imp, self.cfg.vocab_sub);
             self.lm_adam.reset();
-            self.selection_log.push((
-                t,
-                g,
-                "lm_head".into(),
-                Selection {
-                    rho: Vec::new(),
-                    gamma: self.lm_sel.clone(),
-                },
-            ));
+            self.events.push(SelectionEvent {
+                step: t,
+                group: g,
+                kind: "lm_head".into(),
+                rho: Vec::new(),
+                gamma: self.lm_sel.clone(),
+                initial: false,
+            });
         }
     }
 
@@ -342,7 +370,7 @@ impl LosiaDriver {
             "probe".into(),
             HostValue::scalar_i32(probe as i32),
         );
-        let inputs = assemble_inputs(self.exe_step.spec(), values);
+        let inputs = assemble_inputs(self.exe_step.spec(), values)?;
         let mut out = self.exe_step.run(&inputs)?;
         let loss = out[0].data[0] as f64;
         let lm_grad = out.pop().expect("probe_lm_head output");
@@ -365,7 +393,7 @@ impl LosiaDriver {
         batch: &Batch,
     ) -> Result<(f64, BTreeMap<String, Tensor>)> {
         let values = base_values(state, batch);
-        let inputs = assemble_inputs(self.exe_step.spec(), values);
+        let inputs = assemble_inputs(self.exe_step.spec(), values)?;
         let out = self.exe_step.run(&inputs)?;
         let loss = out[0].data[0] as f64;
         let mut grads = BTreeMap::new();
@@ -407,15 +435,8 @@ impl Driver for LosiaDriver {
         }
     }
 
-    fn selection_history(
-        &self,
-    ) -> Vec<(usize, usize, String, Vec<usize>, Vec<usize>)> {
-        self.selection_log
-            .iter()
-            .map(|(t, l, k, sel)| {
-                (*t, *l, k.clone(), sel.rho.clone(), sel.gamma.clone())
-            })
-            .collect()
+    fn drain_events(&mut self) -> Vec<SelectionEvent> {
+        std::mem::take(&mut self.events)
     }
 
     fn trainable_params(&self) -> usize {
@@ -431,29 +452,6 @@ impl Driver for LosiaDriver {
             self.cfg.d_model * self.cfg.vocab_sub
         };
         subnet + lm
-    }
-
-    fn selection_snapshot(
-        &self,
-    ) -> Option<Vec<(usize, String, Vec<usize>, Vec<usize>)>> {
-        let mut out = Vec::new();
-        for (l, layer) in self.subnets.iter().enumerate() {
-            for (kind, st) in layer {
-                out.push((
-                    l,
-                    kind.clone(),
-                    st.sel.rho.clone(),
-                    st.sel.gamma.clone(),
-                ));
-            }
-        }
-        out.push((
-            self.cfg.n_layers,
-            "lm_head".into(),
-            Vec::new(),
-            self.lm_sel.clone(),
-        ));
-        Some(out)
     }
 
     fn step(
@@ -690,7 +688,14 @@ impl LosiaDriver {
             let kd = self.cfg.kind(&kind);
             let score = self.sl_accums[g][&kind].score();
             let sel = localize(&score, kd.np, kd.mp);
-            self.selection_log.push((t, g, kind.clone(), sel.clone()));
+            self.events.push(SelectionEvent {
+                step: t,
+                group: g,
+                kind: kind.clone(),
+                rho: sel.rho.clone(),
+                gamma: sel.gamma.clone(),
+                initial: false,
+            });
             self.subnets[g].get_mut(&kind).unwrap().relocalize(sel);
         }
         // reset stats for the next window

@@ -19,6 +19,25 @@ use crate::coordinator::state::ModelState;
 use crate::data::Batch;
 use crate::runtime::{HostValue, Runtime};
 
+/// A subnet selection installed by a driver — the event behind the
+/// Figure 3/7 selection analyses. Drivers queue these and the trainer
+/// drains them into the observer stream after every step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SelectionEvent {
+    /// 0-based step at which the selection was installed
+    pub step: usize,
+    /// schedule group: decoder layer index, or `n_layers` for lm_head
+    pub group: usize,
+    /// linear kind (`wq` … `w2`, or `lm_head`)
+    pub kind: String,
+    /// selected input neurons ρ (empty for the output-layer group)
+    pub rho: Vec<usize>,
+    /// selected output neurons γ
+    pub gamma: Vec<usize>,
+    /// true for the random selection installed before step 0
+    pub initial: bool,
+}
+
 /// A fine-tuning method: one optimization step over a batch.
 pub trait Driver {
     /// Perform step `t` (0-based) at base learning rate `lr`; mutate
@@ -35,14 +54,6 @@ pub trait Driver {
 
     /// Trainable parameter count (paper Table 15).
     fn trainable_params(&self) -> usize;
-
-    /// LoSiA selection snapshot `(layer, kind, rho, gamma)` for the
-    /// Figure 3/7 analyses; `None` for non-subnet methods.
-    fn selection_snapshot(
-        &self,
-    ) -> Option<Vec<(usize, String, Vec<usize>, Vec<usize>)>> {
-        None
-    }
 
     /// One-time setup before training (e.g. PiSSA SVD init). Default
     /// no-op.
@@ -63,11 +74,10 @@ pub trait Driver {
         Ok(())
     }
 
-    /// Full re-localization history `(step, layer, kind, rho, gamma)`
-    /// (Figures 3/7); empty for non-subnet methods.
-    fn selection_history(
-        &self,
-    ) -> Vec<(usize, usize, String, Vec<usize>, Vec<usize>)> {
+    /// Drain selection events queued since the last call. The trainer
+    /// forwards them to `Observer::on_relocalize`; empty for
+    /// non-subnet methods.
+    fn drain_events(&mut self) -> Vec<SelectionEvent> {
         Vec::new()
     }
 }
@@ -90,31 +100,37 @@ pub fn build_driver(
     })
 }
 
-/// Assemble artifact inputs by manifest name from a value map; panics
-/// on any missing input so ABI drift fails loudly.
+/// Assemble artifact inputs by manifest name from a value map. ABI
+/// drift (missing or unused inputs) is a typed error that names the
+/// artifact and lists its manifest signature, so it surfaces through
+/// the session builder instead of panicking mid-step.
 pub fn assemble_inputs(
     spec: &ArtifactSpec,
     mut values: BTreeMap<String, HostValue>,
-) -> Vec<HostValue> {
-    let out: Vec<HostValue> = spec
-        .inputs
-        .iter()
-        .map(|i| {
-            values.remove(&i.name).unwrap_or_else(|| {
-                panic!(
-                    "artifact {:?}: missing input {:?}",
-                    spec.name, i.name
-                )
-            })
-        })
-        .collect();
-    assert!(
+) -> Result<Vec<HostValue>> {
+    let mut out = Vec::with_capacity(spec.inputs.len());
+    for i in &spec.inputs {
+        let v = values.remove(&i.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {:?}: missing input {:?} (manifest inputs: \
+                 {:?})",
+                spec.name,
+                i.name,
+                spec.inputs
+                    .iter()
+                    .map(|s| s.name.as_str())
+                    .collect::<Vec<_>>()
+            )
+        })?;
+        out.push(v);
+    }
+    anyhow::ensure!(
         values.is_empty(),
         "artifact {:?}: unused inputs {:?}",
         spec.name,
         values.keys().collect::<Vec<_>>()
     );
-    out
+    Ok(out)
 }
 
 /// Common helper: params + batch into the value map.

@@ -7,7 +7,7 @@
 //! actual (n, m) per matrix kind so our configs and LLaMA-2 7B both
 //! evaluate exactly.
 
-use crate::config::ModelCfg;
+use crate::config::{Method, ModelCfg, TrainConfig};
 
 /// Byte counts for one method (paper Table 14 rows).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -131,6 +131,28 @@ pub fn fft(cfg: &ModelCfg, b: f64) -> MemoryBreakdown {
         gradient: total * b,
         auxiliary: 0.0,
     }
+}
+
+/// Analytic total for a configured run, in GB-equivalent (f32
+/// precision) — the estimate the session's `MemoryObserver` reports.
+pub fn method_memory_gb(cfg: &ModelCfg, tc: &TrainConfig) -> f64 {
+    let b = 4.0; // f32
+    let bytes = match tc.method {
+        Method::Fft => fft(cfg, b).total(),
+        Method::Lora | Method::Pissa | Method::Dora => {
+            lora(cfg, cfg.lora_rank, b).total()
+        }
+        Method::Galore => galore(cfg, tc.galore_rank, b).total(),
+        Method::Losia | Method::LosiaPro => losia(
+            cfg,
+            tc.rank_factor_override.unwrap_or(cfg.rank_factor),
+            cfg.out_factor,
+            b,
+            tc.ablation.gradient_importance,
+        )
+        .total(),
+    };
+    bytes / 1e9
 }
 
 /// Trainable-parameter counts for Table 15 (LoSiA across p, p_o).

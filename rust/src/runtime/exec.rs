@@ -112,7 +112,7 @@ impl Runtime {
         if let Some(e) = cache.get(name) {
             return Ok(e);
         }
-        let spec = self.cfg.artifact(name).clone();
+        let spec = self.cfg.try_artifact(name)?.clone();
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
             spec.file.to_str().unwrap(),

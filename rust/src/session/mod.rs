@@ -1,0 +1,770 @@
+//! The session layer: one typed entry point for every run.
+//!
+//! Historically each entrypoint (CLI, 16 benches, 4 examples, the
+//! integration tests) hand-wired `Runtime` + `TrainConfig` + `Batcher`
+//! + `Trainer` with copy-pasted glue. [`SessionBuilder`] owns that
+//! assembly — runtime loading, task construction via the
+//! [`registry::TaskRegistry`], seeding, driver assembly — and returns
+//! `anyhow` errors instead of scattered panics:
+//!
+//! ```no_run
+//! use losia::config::Method;
+//! use losia::session::Session;
+//!
+//! let mut session = Session::builder()
+//!     .config("tiny")
+//!     .method(Method::LosiaPro)
+//!     .task("modmath")
+//!     .steps(200)
+//!     .lr(1e-3)
+//!     .build()?;
+//! let report = session.train()?;
+//! println!("{}", report.to_json_string());
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Telemetry (loss curves, µs/token, memory, subnet selection) flows
+//! through the [`observer::Observer`] event stream rather than trainer
+//! fields, every run is summarised as a serializable
+//! [`report::RunReport`], and multi-task continual learning is a
+//! first-class [`Session::train_sequence`] over [`TaskSpec`]s instead
+//! of ad-hoc loops.
+
+pub mod observer;
+pub mod registry;
+pub mod report;
+
+pub use observer::{Observer, ObserverSet, SelectionEvent};
+pub use registry::TaskRegistry;
+pub use report::{RunReport, SequenceReport};
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{Ablation, Method, ModelCfg, TrainConfig};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::trainer::Trainer;
+use crate::data::{gen_eval_set, gen_train_set, Batcher, EvalItem, Example, Task};
+use crate::eval::{generate_accuracy, ppl_accuracy};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use observer::{RunStartEvent, TaskBoundaryEvent};
+
+/// Runtime ownership: sessions either load their own runtime (CLI,
+/// examples) or borrow one so repeated sessions share the compiled
+/// artifact cache (benches).
+enum RuntimeRef<'a> {
+    Owned(Box<Runtime>),
+    Shared(&'a Runtime),
+}
+
+impl<'a> RuntimeRef<'a> {
+    fn get(&self) -> &Runtime {
+        match self {
+            RuntimeRef::Owned(rt) => rt,
+            RuntimeRef::Shared(rt) => rt,
+        }
+    }
+}
+
+/// Task ownership inside a built session.
+enum SessionTask<'a> {
+    Owned(Box<dyn Task>),
+    Shared(&'a dyn Task),
+}
+
+impl<'a> SessionTask<'a> {
+    fn as_dyn(&self) -> &dyn Task {
+        match self {
+            SessionTask::Owned(t) => t.as_ref(),
+            SessionTask::Shared(t) => *t,
+        }
+    }
+}
+
+/// One stage of a continual-learning sequence. Unset fields inherit
+/// the session defaults.
+#[derive(Debug, Clone, Default)]
+pub struct TaskSpec {
+    pub task: String,
+    pub steps: Option<usize>,
+    pub train_n: Option<usize>,
+    pub data_seed: Option<u64>,
+    pub batcher_seed: Option<u64>,
+    pub eval_n: Option<usize>,
+    pub eval_seed: Option<u64>,
+}
+
+impl TaskSpec {
+    pub fn new(task: &str) -> Self {
+        TaskSpec {
+            task: task.to_string(),
+            ..Self::default()
+        }
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    pub fn train_n(mut self, n: usize) -> Self {
+        self.train_n = Some(n);
+        self
+    }
+
+    pub fn data_seed(mut self, seed: u64) -> Self {
+        self.data_seed = Some(seed);
+        self
+    }
+
+    pub fn batcher_seed(mut self, seed: u64) -> Self {
+        self.batcher_seed = Some(seed);
+        self
+    }
+
+    pub fn eval_n(mut self, n: usize) -> Self {
+        self.eval_n = Some(n);
+        self
+    }
+
+    pub fn eval_seed(mut self, seed: u64) -> Self {
+        self.eval_seed = Some(seed);
+        self
+    }
+}
+
+enum TaskChoice<'a> {
+    None,
+    Named(String),
+    Borrowed(&'a dyn Task),
+}
+
+/// Fluent, typed configuration for a [`Session`]. See the module docs
+/// for the canonical five-line usage.
+pub struct SessionBuilder<'a> {
+    config_name: String,
+    runtime: Option<&'a Runtime>,
+    base_tc: Option<TrainConfig>,
+    method: Option<Method>,
+    steps: Option<usize>,
+    lr: Option<f64>,
+    time_slot: Option<usize>,
+    log_every: Option<usize>,
+    seed: Option<u64>,
+    use_remat: Option<bool>,
+    galore_rank: Option<usize>,
+    ablation: Option<Ablation>,
+    rank_factor_override: Option<f64>,
+    task: TaskChoice<'a>,
+    registry: TaskRegistry,
+    model_seed: Option<u64>,
+    data_seed: Option<u64>,
+    batcher_seed: Option<u64>,
+    train_n: usize,
+    eval_n: usize,
+    eval_seed: Option<u64>,
+    measure_gen: bool,
+    initial_state: Option<PathBuf>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl<'a> SessionBuilder<'a> {
+    pub fn new() -> Self {
+        SessionBuilder {
+            config_name: "tiny".to_string(),
+            runtime: None,
+            base_tc: None,
+            method: None,
+            steps: None,
+            lr: None,
+            time_slot: None,
+            log_every: None,
+            seed: None,
+            use_remat: None,
+            galore_rank: None,
+            ablation: None,
+            rank_factor_override: None,
+            task: TaskChoice::None,
+            registry: TaskRegistry::with_builtins(),
+            model_seed: None,
+            data_seed: None,
+            batcher_seed: None,
+            train_n: 2000,
+            eval_n: 0,
+            eval_seed: None,
+            measure_gen: false,
+            initial_state: None,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Model config name from the artifact manifest (default `tiny`).
+    /// Ignored when [`Self::runtime`] supplies a loaded runtime.
+    pub fn config(mut self, name: &str) -> Self {
+        self.config_name = name.to_string();
+        self
+    }
+
+    /// Reuse an already-loaded runtime (shares the compiled-artifact
+    /// cache across sessions — the bench pattern).
+    pub fn runtime(mut self, rt: &'a Runtime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Start from a fully-specified [`TrainConfig`] instead of the
+    /// defaults; the individual setters below still override it.
+    pub fn train_config(mut self, tc: TrainConfig) -> Self {
+        self.base_tc = Some(tc);
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = Some(method);
+        self
+    }
+
+    /// Parse a method name (`losia-pro`, `lora`, …) with a typed
+    /// error instead of panicking at the call site.
+    pub fn method_str(self, name: &str) -> Result<Self> {
+        let m = Method::parse(name)
+            .with_context(|| format!("session method {name:?}"))?;
+        Ok(self.method(m))
+    }
+
+    /// Select the workload by registry name (`modmath`, `stack`,
+    /// `kvfacts`, or any commonsense-suite name).
+    pub fn task(mut self, name: &str) -> Self {
+        self.task = TaskChoice::Named(name.to_string());
+        self
+    }
+
+    /// Use a caller-constructed task instance (e.g. a `KvFacts` with
+    /// swept parameters); datasets are generated from it at run time.
+    pub fn task_ref(mut self, task: &'a dyn Task) -> Self {
+        self.task = TaskChoice::Borrowed(task);
+        self
+    }
+
+    /// Replace the task registry (after registering custom tasks).
+    pub fn registry(mut self, registry: TaskRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn time_slot(mut self, t: usize) -> Self {
+        self.time_slot = Some(t);
+        self
+    }
+
+    pub fn log_every(mut self, n: usize) -> Self {
+        self.log_every = Some(n);
+        self
+    }
+
+    /// Base seed: defaults the model/data/batcher seeds unless those
+    /// are set individually.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn model_seed(mut self, seed: u64) -> Self {
+        self.model_seed = Some(seed);
+        self
+    }
+
+    pub fn data_seed(mut self, seed: u64) -> Self {
+        self.data_seed = Some(seed);
+        self
+    }
+
+    pub fn batcher_seed(mut self, seed: u64) -> Self {
+        self.batcher_seed = Some(seed);
+        self
+    }
+
+    pub fn use_remat(mut self, remat: bool) -> Self {
+        self.use_remat = Some(remat);
+        self
+    }
+
+    pub fn galore_rank(mut self, rank: usize) -> Self {
+        self.galore_rank = Some(rank);
+        self
+    }
+
+    pub fn ablation(mut self, ablation: Ablation) -> Self {
+        self.ablation = Some(ablation);
+        self
+    }
+
+    pub fn rank_factor_override(mut self, p: f64) -> Self {
+        self.rank_factor_override = Some(p);
+        self
+    }
+
+    /// Training examples to generate per stage (default 2000).
+    pub fn train_n(mut self, n: usize) -> Self {
+        self.train_n = n;
+        self
+    }
+
+    /// Held-out eval items per stage; 0 (the default) disables the
+    /// pre/post PPL evaluation.
+    pub fn eval_n(mut self, n: usize) -> Self {
+        self.eval_n = n;
+        self
+    }
+
+    pub fn eval_seed(mut self, seed: u64) -> Self {
+        self.eval_seed = Some(seed);
+        self
+    }
+
+    /// Also measure exact-answer generation accuracy after training.
+    pub fn measure_gen(mut self, on: bool) -> Self {
+        self.measure_gen = on;
+        self
+    }
+
+    /// Load initial parameters from a state file saved with
+    /// [`Session::save_state`] instead of random initialization.
+    pub fn initial_state(mut self, path: impl Into<PathBuf>) -> Self {
+        self.initial_state = Some(path.into());
+        self
+    }
+
+    /// Attach a user observer to the event stream.
+    pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Validate the configuration, load the runtime, resolve the
+    /// task, and initialize model state.
+    pub fn build(self) -> Result<Session<'a>> {
+        let mut tc = self.base_tc.clone().unwrap_or_default();
+        let had_base = self.base_tc.is_some();
+        if let Some(m) = self.method {
+            tc.method = m;
+        }
+        if let Some(s) = self.steps {
+            tc.steps = s;
+        }
+        if let Some(lr) = self.lr {
+            tc.lr = lr;
+        }
+        if let Some(t) = self.time_slot {
+            tc.time_slot = t;
+        }
+        if let Some(n) = self.log_every {
+            tc.log_every = n;
+        }
+        if let Some(s) = self.seed {
+            tc.seed = s;
+        }
+        if let Some(r) = self.use_remat {
+            tc.use_remat = r;
+        }
+        if let Some(a) = self.ablation {
+            tc.ablation = a;
+        }
+        if let Some(p) = self.rank_factor_override {
+            tc.rank_factor_override = Some(p);
+        }
+        ensure!(
+            tc.steps >= 1,
+            "session misuse: steps must be ≥ 1 (got {})",
+            tc.steps
+        );
+        ensure!(
+            self.train_n >= 1,
+            "session misuse: train_n must be ≥ 1"
+        );
+
+        // Resolve the task before touching the runtime so misuse
+        // errors (unknown task, zero steps) don't require artifacts.
+        let (task, task_name) = match self.task {
+            TaskChoice::None => (None, String::new()),
+            TaskChoice::Named(name) => {
+                let t = self
+                    .registry
+                    .create(&name)
+                    .context("building session")?;
+                (Some(SessionTask::Owned(t)), name)
+            }
+            TaskChoice::Borrowed(t) => {
+                let name = t.name().to_string();
+                (Some(SessionTask::Shared(t)), name)
+            }
+        };
+
+        let rt = match self.runtime {
+            Some(rt) => RuntimeRef::Shared(rt),
+            None => RuntimeRef::Owned(Box::new(
+                Runtime::from_config_name(&self.config_name)
+                    .context("building session runtime")?,
+            )),
+        };
+
+        if let Some(r) = self.galore_rank {
+            tc.galore_rank = r;
+        } else if !had_base {
+            // sensible scale-aware default (the manifest default of 32
+            // fits no config in particular)
+            tc.galore_rank = (rt.get().cfg.d_model / 4).max(1);
+        }
+
+        let model_seed = self.model_seed.unwrap_or(tc.seed);
+        let state = match &self.initial_state {
+            Some(path) => ModelState::load(path, &rt.get().cfg)
+                .with_context(|| {
+                    format!("loading initial state {}", path.display())
+                })?,
+            None => {
+                let mut rng = Rng::new(model_seed);
+                ModelState::init(&rt.get().cfg, &mut rng)
+            }
+        };
+
+        Ok(Session {
+            rt,
+            tc: tc.clone(),
+            state,
+            obs: ObserverSet::with_extra(self.observers),
+            registry: self.registry,
+            task,
+            task_name,
+            data_seed: self.data_seed.unwrap_or(tc.seed),
+            batcher_seed: self.batcher_seed.unwrap_or(tc.seed),
+            train_n: self.train_n,
+            eval_n: self.eval_n,
+            eval_seed: self.eval_seed.unwrap_or(tc.seed),
+            measure_gen: self.measure_gen,
+        })
+    }
+}
+
+impl<'a> Default for SessionBuilder<'a> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A configured run: runtime + model state + observers. Create via
+/// [`Session::builder`]; drive with [`Session::train`],
+/// [`Session::train_sequence`], or [`Session::evaluate`].
+pub struct Session<'a> {
+    rt: RuntimeRef<'a>,
+    tc: TrainConfig,
+    state: ModelState,
+    obs: ObserverSet,
+    registry: TaskRegistry,
+    task: Option<SessionTask<'a>>,
+    task_name: String,
+    data_seed: u64,
+    batcher_seed: u64,
+    train_n: usize,
+    eval_n: usize,
+    eval_seed: u64,
+    measure_gen: bool,
+}
+
+impl<'a> Session<'a> {
+    pub fn builder() -> SessionBuilder<'a> {
+        SessionBuilder::new()
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt.get()
+    }
+
+    pub fn model_cfg(&self) -> &ModelCfg {
+        &self.rt.get().cfg
+    }
+
+    pub fn train_cfg(&self) -> &TrainConfig {
+        &self.tc
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    pub fn state_mut(&mut self) -> &mut ModelState {
+        &mut self.state
+    }
+
+    pub fn into_state(self) -> ModelState {
+        self.state
+    }
+
+    /// Subnet selection events recorded during the most recent stage.
+    pub fn selection_events(&self) -> &[SelectionEvent] {
+        &self.obs.selection.history
+    }
+
+    /// Current subnet snapshot `(group, kind, rho, gamma)`.
+    pub fn selection_snapshot(
+        &self,
+    ) -> Vec<(usize, String, Vec<usize>, Vec<usize>)> {
+        self.obs.selection.snapshot()
+    }
+
+    /// Save the model parameters (reloadable via
+    /// `SessionBuilder::initial_state`).
+    pub fn save_state(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.state.save(path.as_ref())
+    }
+
+    /// Train the configured task once and report.
+    pub fn train(&mut self) -> Result<RunReport> {
+        let task = match self.task.take() {
+            Some(t) => t,
+            None => bail!(
+                "session misuse: no task configured — call \
+                 SessionBuilder::task(...) or use train_sequence"
+            ),
+        };
+        let train_set =
+            gen_train_set(task.as_dyn(), self.train_n, self.data_seed);
+        let eval = if self.eval_n > 0 {
+            gen_eval_set(task.as_dyn(), self.eval_n, self.eval_seed)
+        } else {
+            Vec::new()
+        };
+        let name = self.task_name.clone();
+        let result = self.run_stage(
+            0,
+            &name,
+            train_set,
+            &eval,
+            self.tc.steps,
+            self.batcher_seed,
+        );
+        self.task = Some(task);
+        result
+    }
+
+    /// Sequentially fine-tune through `specs` on the evolving model
+    /// (paper §4.4). Fires `on_task_boundary` between stages. When
+    /// every spec carries an eval set, the report includes the full
+    /// stage × task accuracy matrix (Tables 5/13).
+    pub fn train_sequence(
+        &mut self,
+        specs: &[TaskSpec],
+    ) -> Result<SequenceReport> {
+        ensure!(
+            !specs.is_empty(),
+            "session misuse: train_sequence needs ≥ 1 task"
+        );
+        // Resolve everything up front so a typo or zero-step spec
+        // fails before stage 0 burns any compute.
+        for (i, s) in specs.iter().enumerate() {
+            ensure!(
+                s.steps.unwrap_or(self.tc.steps) >= 1,
+                "session misuse: stage {i} ({:?}) has 0 steps",
+                s.task
+            );
+        }
+        let tasks: Vec<Box<dyn Task>> = specs
+            .iter()
+            .map(|s| {
+                self.registry
+                    .create(&s.task)
+                    .context("building task sequence")
+            })
+            .collect::<Result<_>>()?;
+        let evals: Vec<Vec<EvalItem>> = specs
+            .iter()
+            .zip(&tasks)
+            .enumerate()
+            .map(|(i, (s, t))| {
+                let n = s.eval_n.unwrap_or(self.eval_n);
+                if n > 0 {
+                    gen_eval_set(
+                        t.as_ref(),
+                        n,
+                        s.eval_seed.unwrap_or(self.eval_seed + i as u64),
+                    )
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        let all_eval = evals.iter().all(|e| !e.is_empty());
+
+        let mut out = SequenceReport::default();
+        for (i, (spec, task)) in specs.iter().zip(&tasks).enumerate() {
+            if i > 0 {
+                let ev = TaskBoundaryEvent {
+                    from_index: i - 1,
+                    from_task: specs[i - 1].task.clone(),
+                    to_index: i,
+                    to_task: spec.task.clone(),
+                };
+                self.obs.emit_task_boundary(&ev);
+            }
+            let train_set = gen_train_set(
+                task.as_ref(),
+                spec.train_n.unwrap_or(self.train_n),
+                spec.data_seed.unwrap_or(self.data_seed + i as u64),
+            );
+            // When the full perf matrix is being collected, the
+            // post-stage row already scores this stage's eval set —
+            // skip the per-stage pre/post evals instead of running
+            // them a second time inside run_stage.
+            let stage_eval: &[EvalItem] =
+                if all_eval { &[] } else { &evals[i] };
+            let mut report = self.run_stage(
+                i,
+                &spec.task,
+                train_set,
+                stage_eval,
+                spec.steps.unwrap_or(self.tc.steps),
+                spec.batcher_seed.unwrap_or(self.batcher_seed),
+            )?;
+            if all_eval {
+                let rt = self.rt.get();
+                let row: Vec<f64> = evals
+                    .iter()
+                    .map(|e| ppl_accuracy(rt, &self.state, e))
+                    .collect::<Result<_>>()?;
+                report.ppl_acc_post = Some(row[i]);
+                out.perf.push(row);
+            }
+            out.stages.push(report);
+        }
+        Ok(out)
+    }
+
+    /// Evaluate the current state on the configured task without
+    /// training (the `losia eval` path). Uses the session eval set
+    /// size (defaulting to 200 when unset).
+    pub fn evaluate(&mut self) -> Result<RunReport> {
+        let task = match self.task.take() {
+            Some(t) => t,
+            None => bail!(
+                "session misuse: no task configured for evaluation"
+            ),
+        };
+        let n = if self.eval_n > 0 { self.eval_n } else { 200 };
+        let eval = gen_eval_set(task.as_dyn(), n, self.eval_seed);
+        let name = self.task_name.clone();
+        self.task = Some(task);
+
+        let rt = self.rt.get();
+        let t0 = Instant::now();
+        let ppl = ppl_accuracy(rt, &self.state, &eval)?;
+        let gen = if self.measure_gen {
+            Some(generate_accuracy(rt, &self.state, &eval)?)
+        } else {
+            None
+        };
+        Ok(RunReport {
+            config: rt.cfg.name.clone(),
+            method: self.tc.method.name().to_string(),
+            task: name,
+            steps: 0,
+            seed: self.tc.seed,
+            ppl_acc_post: Some(ppl),
+            gen_acc: gen,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            total_params: self.state.total_params(),
+            ..RunReport::default()
+        })
+    }
+
+    /// Run one training stage on the session state.
+    fn run_stage(
+        &mut self,
+        index: usize,
+        task_label: &str,
+        train_set: Vec<Example>,
+        eval: &[EvalItem],
+        steps: usize,
+        batcher_seed: u64,
+    ) -> Result<RunReport> {
+        ensure!(
+            steps >= 1,
+            "session misuse: stage {index} ({task_label:?}) has 0 steps"
+        );
+        let rt = self.rt.get();
+        let mut tc = self.tc.clone();
+        tc.steps = steps;
+        let mut batcher = Batcher::new(
+            train_set,
+            rt.cfg.batch,
+            rt.cfg.seq_len,
+            batcher_seed,
+        );
+        let mut trainer = Trainer::new(rt, tc.clone())
+            .with_context(|| {
+                format!("assembling {} driver", tc.method.name())
+            })?;
+        let trainable = trainer.driver.trainable_params();
+        self.obs.begin_task(&RunStartEvent {
+            task_index: index,
+            task: task_label,
+            method: tc.method,
+            cfg: &rt.cfg,
+            tc: &tc,
+            trainable_params: trainable,
+        });
+
+        let pre = if eval.is_empty() {
+            None
+        } else {
+            Some(ppl_accuracy(rt, &self.state, eval)?)
+        };
+        let t0 = Instant::now();
+        trainer.train(&mut self.state, &mut batcher, &mut self.obs)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let post = if eval.is_empty() {
+            None
+        } else {
+            Some(ppl_accuracy(rt, &self.state, eval)?)
+        };
+        let gen = if self.measure_gen && !eval.is_empty() {
+            Some(generate_accuracy(rt, &self.state, eval)?)
+        } else {
+            None
+        };
+
+        Ok(RunReport {
+            config: rt.cfg.name.clone(),
+            method: tc.method.name().to_string(),
+            task: task_label.to_string(),
+            steps,
+            seed: tc.seed,
+            first_loss: self.obs.loss.first(),
+            final_loss: self.obs.loss.tail_mean(10),
+            loss_curve: self.obs.loss.log.clone(),
+            ppl_acc_pre: pre,
+            ppl_acc_post: post,
+            gen_acc: gen,
+            us_per_token: self.obs.latency.us_per_token(),
+            wall_secs: wall,
+            trainable_params: Some(trainable),
+            total_params: self.state.total_params(),
+            memory_gb: self.obs.memory.gb,
+            reselections: self.obs.selection.reselections(),
+            selection_drift: self.obs.selection.mean_turnover(),
+        })
+    }
+}

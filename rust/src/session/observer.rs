@@ -1,0 +1,446 @@
+//! Telemetry observers for training sessions.
+//!
+//! The trainer emits a typed event stream instead of accumulating
+//! telemetry in its own fields: one [`StepEvent`] per optimization
+//! step, a [`SelectionEvent`] (re-exported from [`crate::methods`])
+//! whenever a driver installs a subnet selection, a
+//! [`TaskBoundaryEvent`] between stages of a continual-learning
+//! sequence, and a [`FinalizeEvent`] when a stage's adapters have been
+//! merged. Anything that wants loss curves, µs/token latency, memory
+//! estimates, or selection dynamics implements [`Observer`] and
+//! composes — benches no longer fork the training loop to add a
+//! metric.
+//!
+//! The stock observers ([`LossObserver`], [`LatencyObserver`],
+//! [`MemoryObserver`], [`SelectionObserver`]) are always installed by
+//! a [`crate::session::Session`] and feed its
+//! [`crate::session::RunReport`]; user observers registered through
+//! `SessionBuilder::observer` see the same stream.
+
+pub use crate::methods::SelectionEvent;
+
+use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::metrics::memory::method_memory_gb;
+
+/// One optimization step, after the driver applied its update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepEvent {
+    /// stage index within a task sequence (0 for single-task runs)
+    pub task_index: usize,
+    /// 0-based step within the stage
+    pub step: usize,
+    pub loss: f64,
+    /// effective base learning rate at this step
+    pub lr: f64,
+    /// wall-clock seconds spent in `Driver::step`
+    pub secs: f64,
+    /// tokens processed this step (batch × seq_len)
+    pub tokens: usize,
+}
+
+/// Fired once per stage before the first step.
+#[derive(Debug)]
+pub struct RunStartEvent<'a> {
+    pub task_index: usize,
+    pub task: &'a str,
+    pub method: Method,
+    pub cfg: &'a ModelCfg,
+    pub tc: &'a TrainConfig,
+    pub trainable_params: usize,
+}
+
+/// Fired between two stages of `Session::train_sequence`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskBoundaryEvent {
+    pub from_index: usize,
+    pub from_task: String,
+    pub to_index: usize,
+    pub to_task: String,
+}
+
+/// Fired after `Driver::finalize` (adapter merge) ends a stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FinalizeEvent {
+    pub task_index: usize,
+    /// steps actually executed in this stage
+    pub steps: usize,
+}
+
+/// A training-telemetry sink. All hooks default to no-ops so an
+/// observer implements only what it cares about.
+pub trait Observer {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {}
+    fn on_step(&mut self, _ev: &StepEvent) {}
+    fn on_relocalize(&mut self, _ev: &SelectionEvent) {}
+    fn on_task_boundary(&mut self, _ev: &TaskBoundaryEvent) {}
+    fn on_finalize(&mut self, _ev: &FinalizeEvent) {}
+}
+
+// ---------------------------------------------------------------- stock
+
+/// Records the (step, loss) curve of the current stage.
+#[derive(Debug, Default, Clone)]
+pub struct LossObserver {
+    pub log: Vec<(usize, f64)>,
+}
+
+impl LossObserver {
+    pub fn first(&self) -> Option<f64> {
+        self.log.first().map(|x| x.1)
+    }
+
+    /// Mean loss over the last `k` recorded steps. `None` when the log
+    /// is empty or `k == 0` (the old `Trainer::tail_loss` sliced past
+    /// the start of an empty log).
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.log.is_empty() || k == 0 {
+            return None;
+        }
+        let k = k.min(self.log.len());
+        let sum: f64 =
+            self.log[self.log.len() - k..].iter().map(|(_, l)| l).sum();
+        Some(sum / k as f64)
+    }
+}
+
+impl Observer for LossObserver {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {
+        self.log.clear();
+    }
+
+    fn on_step(&mut self, ev: &StepEvent) {
+        self.log.push((ev.step, ev.loss));
+    }
+}
+
+/// Records per-step wall time and reports mean µs/token.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyObserver {
+    pub step_secs: Vec<f64>,
+    tokens_per_step: usize,
+}
+
+impl LatencyObserver {
+    /// Mean µs/token, skipping the first step (compile/warmup cost)
+    /// when at least two samples exist. `None` with no samples; a
+    /// single sample is reported as-is (the old `Trainer::us_per_token`
+    /// returned NaN for both).
+    pub fn us_per_token(&self) -> Option<f64> {
+        if self.tokens_per_step == 0 || self.step_secs.is_empty() {
+            return None;
+        }
+        let kept: &[f64] = if self.step_secs.len() > 1 {
+            &self.step_secs[1..]
+        } else {
+            &self.step_secs
+        };
+        let mean = kept.iter().sum::<f64>() / kept.len() as f64;
+        Some(mean * 1e6 / self.tokens_per_step as f64)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.step_secs.iter().sum()
+    }
+}
+
+impl Observer for LatencyObserver {
+    fn on_run_start(&mut self, ev: &RunStartEvent<'_>) {
+        self.step_secs.clear();
+        self.tokens_per_step = ev.cfg.tokens_per_step();
+    }
+
+    fn on_step(&mut self, ev: &StepEvent) {
+        self.step_secs.push(ev.secs);
+    }
+}
+
+/// Analytic memory estimate (paper Table 14) for the running method.
+#[derive(Debug, Default, Clone)]
+pub struct MemoryObserver {
+    pub gb: f64,
+}
+
+impl Observer for MemoryObserver {
+    fn on_run_start(&mut self, ev: &RunStartEvent<'_>) {
+        self.gb = method_memory_gb(ev.cfg, ev.tc);
+    }
+}
+
+/// Tracks subnet selections: full history plus the current snapshot.
+#[derive(Debug, Default, Clone)]
+pub struct SelectionObserver {
+    pub history: Vec<SelectionEvent>,
+}
+
+impl SelectionObserver {
+    /// Number of genuine re-localizations (initial random selections
+    /// excluded).
+    pub fn reselections(&self) -> usize {
+        self.history.iter().filter(|e| !e.initial).count()
+    }
+
+    /// Latest `(group, kind, rho, gamma)` per matrix — the current
+    /// subnet, in (group, kind) order.
+    pub fn snapshot(
+        &self,
+    ) -> Vec<(usize, String, Vec<usize>, Vec<usize>)> {
+        let mut last: std::collections::BTreeMap<
+            (usize, String),
+            (Vec<usize>, Vec<usize>),
+        > = std::collections::BTreeMap::new();
+        for e in &self.history {
+            last.insert(
+                (e.group, e.kind.clone()),
+                (e.rho.clone(), e.gamma.clone()),
+            );
+        }
+        last.into_iter()
+            .map(|((g, k), (r, c))| (g, k, r, c))
+            .collect()
+    }
+
+    /// Mean % of indices replaced between consecutive selections of
+    /// the same matrix (`None` until a matrix reselects once).
+    pub fn mean_turnover(&self) -> Option<f64> {
+        let mut prev: std::collections::BTreeMap<
+            (usize, String),
+            &SelectionEvent,
+        > = std::collections::BTreeMap::new();
+        let mut total = 0.0;
+        let mut n = 0usize;
+        for e in &self.history {
+            let key = (e.group, e.kind.clone());
+            if let Some(p) = prev.get(&key) {
+                let (new, old) = if e.rho.is_empty() {
+                    (&e.gamma, &p.gamma)
+                } else {
+                    (&e.rho, &p.rho)
+                };
+                if !new.is_empty() {
+                    let kept =
+                        new.iter().filter(|i| old.contains(i)).count();
+                    total +=
+                        100.0 * (1.0 - kept as f64 / new.len() as f64);
+                    n += 1;
+                }
+            }
+            prev.insert(key, e);
+        }
+        (n > 0).then(|| total / n as f64)
+    }
+}
+
+impl Observer for SelectionObserver {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {
+        self.history.clear();
+    }
+
+    fn on_relocalize(&mut self, ev: &SelectionEvent) {
+        self.history.push(ev.clone());
+    }
+}
+
+// ------------------------------------------------------------ dispatch
+
+/// The observer bundle a trainer reports into: the four stock
+/// observers (read back by `Session` to build its `RunReport`) plus
+/// any user observers.
+#[derive(Default)]
+pub struct ObserverSet {
+    pub task_index: usize,
+    pub loss: LossObserver,
+    pub latency: LatencyObserver,
+    pub memory: MemoryObserver,
+    pub selection: SelectionObserver,
+    pub extra: Vec<Box<dyn Observer>>,
+}
+
+impl ObserverSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_extra(extra: Vec<Box<dyn Observer>>) -> Self {
+        ObserverSet {
+            extra,
+            ..Self::default()
+        }
+    }
+
+    /// Start a stage: stock observers reset, everyone sees
+    /// `on_run_start`.
+    pub fn begin_task(&mut self, ev: &RunStartEvent<'_>) {
+        self.task_index = ev.task_index;
+        self.loss.on_run_start(ev);
+        self.latency.on_run_start(ev);
+        self.memory.on_run_start(ev);
+        self.selection.on_run_start(ev);
+        for o in &mut self.extra {
+            o.on_run_start(ev);
+        }
+    }
+
+    pub fn emit_step(
+        &mut self,
+        step: usize,
+        loss: f64,
+        lr: f64,
+        secs: f64,
+        tokens: usize,
+    ) {
+        let ev = StepEvent {
+            task_index: self.task_index,
+            step,
+            loss,
+            lr,
+            secs,
+            tokens,
+        };
+        self.loss.on_step(&ev);
+        self.latency.on_step(&ev);
+        self.memory.on_step(&ev);
+        self.selection.on_step(&ev);
+        for o in &mut self.extra {
+            o.on_step(&ev);
+        }
+    }
+
+    pub fn emit_relocalize(&mut self, ev: &SelectionEvent) {
+        self.loss.on_relocalize(ev);
+        self.latency.on_relocalize(ev);
+        self.memory.on_relocalize(ev);
+        self.selection.on_relocalize(ev);
+        for o in &mut self.extra {
+            o.on_relocalize(ev);
+        }
+    }
+
+    pub fn emit_task_boundary(&mut self, ev: &TaskBoundaryEvent) {
+        self.loss.on_task_boundary(ev);
+        self.latency.on_task_boundary(ev);
+        self.memory.on_task_boundary(ev);
+        self.selection.on_task_boundary(ev);
+        for o in &mut self.extra {
+            o.on_task_boundary(ev);
+        }
+    }
+
+    pub fn emit_finalize(&mut self, steps: usize) {
+        let ev = FinalizeEvent {
+            task_index: self.task_index,
+            steps,
+        };
+        self.loss.on_finalize(&ev);
+        self.latency.on_finalize(&ev);
+        self.memory.on_finalize(&ev);
+        self.selection.on_finalize(&ev);
+        for o in &mut self.extra {
+            o.on_finalize(&ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sev(
+        step: usize,
+        group: usize,
+        kind: &str,
+        rho: Vec<usize>,
+        initial: bool,
+    ) -> SelectionEvent {
+        SelectionEvent {
+            step,
+            group,
+            kind: kind.to_string(),
+            rho,
+            gamma: vec![0, 1],
+            initial,
+        }
+    }
+
+    #[test]
+    fn loss_observer_handles_empty_and_single_logs() {
+        let mut o = LossObserver::default();
+        // empty: the old Trainer::tail_loss panicked here
+        assert_eq!(o.first(), None);
+        assert_eq!(o.tail_mean(10), None);
+        o.log.push((0, 2.0));
+        assert_eq!(o.first(), Some(2.0));
+        assert_eq!(o.tail_mean(10), Some(2.0));
+        assert_eq!(o.tail_mean(0), None);
+        o.log.push((1, 4.0));
+        assert_eq!(o.tail_mean(1), Some(4.0));
+        assert_eq!(o.tail_mean(2), Some(3.0));
+    }
+
+    #[test]
+    fn latency_observer_handles_empty_and_single_logs() {
+        let mut o = LatencyObserver::default();
+        // no samples: the old Trainer::us_per_token returned NaN
+        assert_eq!(o.us_per_token(), None);
+        o.tokens_per_step = 100;
+        o.step_secs.push(1e-3);
+        // one sample: report it instead of NaN
+        let one = o.us_per_token().unwrap();
+        assert!((one - 10.0).abs() < 1e-9, "{one}");
+        // ≥ 2 samples: skip the first (warmup)
+        o.step_secs.push(3e-3);
+        o.step_secs.push(5e-3);
+        let us = o.us_per_token().unwrap();
+        assert!((us - 40.0).abs() < 1e-9, "{us}");
+    }
+
+    #[test]
+    fn latency_observer_without_token_count_is_none() {
+        let mut o = LatencyObserver::default();
+        o.step_secs.push(1.0);
+        assert_eq!(o.us_per_token(), None);
+    }
+
+    #[test]
+    fn selection_observer_snapshot_keeps_latest() {
+        let mut o = SelectionObserver::default();
+        o.on_relocalize(&sev(0, 0, "wq", vec![1, 2], true));
+        o.on_relocalize(&sev(0, 1, "wq", vec![5, 6], true));
+        o.on_relocalize(&sev(8, 0, "wq", vec![2, 3], false));
+        assert_eq!(o.reselections(), 1);
+        let snap = o.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0], (0, "wq".into(), vec![2, 3], vec![0, 1]));
+        assert_eq!(snap[1], (1, "wq".into(), vec![5, 6], vec![0, 1]));
+    }
+
+    #[test]
+    fn selection_turnover_measures_replacement() {
+        let mut o = SelectionObserver::default();
+        assert_eq!(o.mean_turnover(), None);
+        o.on_relocalize(&sev(0, 0, "wq", vec![1, 2], true));
+        assert_eq!(o.mean_turnover(), None);
+        // one of two indices kept → 50% turnover
+        o.on_relocalize(&sev(8, 0, "wq", vec![2, 3], false));
+        assert!((o.mean_turnover().unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn observer_set_dispatches_to_extras() {
+        #[derive(Default)]
+        struct Counter(std::rc::Rc<std::cell::Cell<usize>>);
+        impl Observer for Counter {
+            fn on_step(&mut self, _ev: &StepEvent) {
+                self.0.set(self.0.get() + 1);
+            }
+        }
+        let n = std::rc::Rc::new(std::cell::Cell::new(0));
+        let mut obs = ObserverSet::with_extra(vec![Box::new(Counter(
+            n.clone(),
+        ))]);
+        obs.emit_step(0, 1.0, 1e-3, 0.1, 64);
+        obs.emit_step(1, 0.9, 1e-3, 0.1, 64);
+        assert_eq!(n.get(), 2);
+        assert_eq!(obs.loss.log.len(), 2);
+        assert_eq!(obs.latency.step_secs.len(), 2);
+    }
+}

@@ -1,0 +1,120 @@
+//! Task registry: named constructors for every built-in workload.
+//!
+//! Replaces the `task_by_name` panic that used to live in `main.rs`
+//! (and its three copy-pasted siblings in the examples) with a typed
+//! lookup whose error lists the known tasks. Examples, benches, and
+//! the CLI all resolve tasks through one registry, and callers can
+//! [`TaskRegistry::register`] their own constructors — e.g. a
+//! parameter-swept `KvFacts` — without forking the session layer.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::commonsense::{suite, SUITE_NAMES};
+use crate::data::domain::{KvFacts, ModMath, StackEval};
+use crate::data::Task;
+
+type TaskCtor = Box<dyn Fn() -> Box<dyn Task>>;
+
+/// Named task constructors.
+pub struct TaskRegistry {
+    ctors: BTreeMap<String, TaskCtor>,
+}
+
+impl TaskRegistry {
+    /// An empty registry (no built-ins).
+    pub fn new() -> Self {
+        TaskRegistry {
+            ctors: BTreeMap::new(),
+        }
+    }
+
+    /// The standard roster: the three domain tasks (`modmath`,
+    /// `stack`, `kvfacts`) plus the eight commonsense-suite tasks
+    /// under their `SUITE_NAMES` (`parity-5`, `copy`, `boolfact`, …).
+    pub fn with_builtins() -> Self {
+        let mut r = Self::new();
+        r.register("modmath", || Box::new(ModMath));
+        r.register("stack", || Box::new(StackEval));
+        r.register("kvfacts", || Box::new(KvFacts::new(64, 4, 7)));
+        for (i, name) in SUITE_NAMES.iter().enumerate() {
+            r.register(name, move || {
+                suite().into_iter().nth(i).expect("suite index")
+            });
+        }
+        r
+    }
+
+    /// Register (or replace) a constructor under `name`.
+    pub fn register<F>(&mut self, name: &str, ctor: F)
+    where
+        F: Fn() -> Box<dyn Task> + 'static,
+    {
+        self.ctors.insert(name.to_string(), Box::new(ctor));
+    }
+
+    /// Instantiate the task registered under `name`.
+    pub fn create(&self, name: &str) -> Result<Box<dyn Task>> {
+        self.ctors.get(name).map(|c| c()).ok_or_else(|| {
+            anyhow!(
+                "unknown task {name:?} (known tasks: {})",
+                self.known().join(", ")
+            )
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.ctors.contains_key(name)
+    }
+
+    /// Sorted registered names.
+    pub fn known(&self) -> Vec<&str> {
+        self.ctors.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+impl Default for TaskRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn builtins_cover_domain_and_commonsense() {
+        let r = TaskRegistry::with_builtins();
+        assert_eq!(r.known().len(), 3 + SUITE_NAMES.len());
+        for name in ["modmath", "stack", "kvfacts", "copy", "boolfact"]
+        {
+            assert!(r.contains(name), "missing {name}");
+            let task = r.create(name).unwrap();
+            let mut rng = Rng::new(1);
+            let ex = task.gen_train(&mut rng);
+            assert!(!ex.prompt.is_empty());
+            assert!(!ex.answer.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_task_error_lists_known_names() {
+        let r = TaskRegistry::with_builtins();
+        let err = r.create("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown task"), "{err}");
+        assert!(err.contains("known tasks"), "{err}");
+        assert!(err.contains("modmath"), "{err}");
+    }
+
+    #[test]
+    fn custom_registration_overrides() {
+        let mut r = TaskRegistry::with_builtins();
+        r.register("kvfacts", || Box::new(KvFacts::new(8, 2, 3)));
+        let t = r.create("kvfacts").unwrap();
+        let mut rng = Rng::new(2);
+        let _ = t.gen_eval(&mut rng);
+    }
+}

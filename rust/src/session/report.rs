@@ -1,0 +1,407 @@
+//! Structured run reports.
+//!
+//! Every session — the `losia` CLI, the benches, and multi-task
+//! continual-learning sequences — summarises a run in the same
+//! [`RunReport`] shape: method, losses, accuracies, latency,
+//! trainable-parameter count, and subnet-selection stats. Reports
+//! serialize to JSON through [`crate::util::json`] and round-trip
+//! losslessly, so downstream tooling can diff runs without scraping
+//! stdout tables.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Summary of one training (or evaluation-only) stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunReport {
+    pub config: String,
+    pub method: String,
+    pub task: String,
+    /// steps executed (0 for evaluation-only reports)
+    pub steps: usize,
+    pub seed: u64,
+    pub first_loss: Option<f64>,
+    /// mean loss over the last 10 steps
+    pub final_loss: Option<f64>,
+    /// full (step, loss) curve
+    pub loss_curve: Vec<(usize, f64)>,
+    pub ppl_acc_pre: Option<f64>,
+    pub ppl_acc_post: Option<f64>,
+    pub gen_acc: Option<f64>,
+    pub us_per_token: Option<f64>,
+    pub wall_secs: f64,
+    pub trainable_params: Option<usize>,
+    pub total_params: usize,
+    /// analytic memory estimate (paper Table 14), GB-equivalent
+    pub memory_gb: f64,
+    /// subnet re-localizations performed (0 for non-subnet methods)
+    pub reselections: usize,
+    /// mean % selection turnover between consecutive reselections
+    pub selection_drift: Option<f64>,
+}
+
+impl Default for RunReport {
+    fn default() -> Self {
+        RunReport {
+            config: String::new(),
+            method: String::new(),
+            task: String::new(),
+            steps: 0,
+            seed: 0,
+            first_loss: None,
+            final_loss: None,
+            loss_curve: Vec::new(),
+            ppl_acc_pre: None,
+            ppl_acc_post: None,
+            gen_acc: None,
+            us_per_token: None,
+            wall_secs: 0.0,
+            trainable_params: None,
+            total_params: 0,
+            memory_gb: 0.0,
+            reselections: 0,
+            selection_drift: None,
+        }
+    }
+}
+
+fn opt_num(x: Option<f64>) -> Json {
+    match x {
+        Some(v) if v.is_finite() => Json::Num(v),
+        _ => Json::Null,
+    }
+}
+
+fn get_opt_num(j: &Json, key: &str) -> Option<f64> {
+    match j.get(key) {
+        Some(Json::Num(n)) => Some(*n),
+        _ => None,
+    }
+}
+
+fn get_num(j: &Json, key: &str) -> Result<f64> {
+    match j.get(key) {
+        Some(Json::Num(n)) => Ok(*n),
+        other => bail!("report field {key:?}: expected number, got {other:?}"),
+    }
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    match j.get(key) {
+        Some(Json::Str(s)) => Ok(s.clone()),
+        other => bail!("report field {key:?}: expected string, got {other:?}"),
+    }
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("config".into(), Json::Str(self.config.clone()));
+        m.insert("method".into(), Json::Str(self.method.clone()));
+        m.insert("task".into(), Json::Str(self.task.clone()));
+        m.insert("steps".into(), Json::Num(self.steps as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("first_loss".into(), opt_num(self.first_loss));
+        m.insert("final_loss".into(), opt_num(self.final_loss));
+        m.insert(
+            "loss_curve".into(),
+            Json::Arr(
+                self.loss_curve
+                    .iter()
+                    .map(|(t, l)| {
+                        Json::Arr(vec![
+                            Json::Num(*t as f64),
+                            Json::Num(*l),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("ppl_acc_pre".into(), opt_num(self.ppl_acc_pre));
+        m.insert("ppl_acc_post".into(), opt_num(self.ppl_acc_post));
+        m.insert("gen_acc".into(), opt_num(self.gen_acc));
+        m.insert("us_per_token".into(), opt_num(self.us_per_token));
+        m.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        m.insert(
+            "trainable_params".into(),
+            opt_num(self.trainable_params.map(|x| x as f64)),
+        );
+        m.insert(
+            "total_params".into(),
+            Json::Num(self.total_params as f64),
+        );
+        m.insert("memory_gb".into(), Json::Num(self.memory_gb));
+        m.insert(
+            "reselections".into(),
+            Json::Num(self.reselections as f64),
+        );
+        m.insert(
+            "selection_drift".into(),
+            opt_num(self.selection_drift),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut curve = Vec::new();
+        if let Some(Json::Arr(rows)) = j.get("loss_curve") {
+            for row in rows {
+                let Json::Arr(pair) = row else {
+                    bail!("loss_curve rows must be [step, loss] pairs");
+                };
+                let [Json::Num(t), Json::Num(l)] = pair.as_slice()
+                else {
+                    bail!("loss_curve rows must be [step, loss] pairs");
+                };
+                curve.push((*t as usize, *l));
+            }
+        }
+        Ok(RunReport {
+            config: get_str(j, "config")?,
+            method: get_str(j, "method")?,
+            task: get_str(j, "task")?,
+            steps: get_num(j, "steps")? as usize,
+            seed: get_num(j, "seed")? as u64,
+            first_loss: get_opt_num(j, "first_loss"),
+            final_loss: get_opt_num(j, "final_loss"),
+            loss_curve: curve,
+            ppl_acc_pre: get_opt_num(j, "ppl_acc_pre"),
+            ppl_acc_post: get_opt_num(j, "ppl_acc_post"),
+            gen_acc: get_opt_num(j, "gen_acc"),
+            us_per_token: get_opt_num(j, "us_per_token"),
+            wall_secs: get_num(j, "wall_secs")?,
+            trainable_params: get_opt_num(j, "trainable_params")
+                .map(|x| x as usize),
+            total_params: get_num(j, "total_params")? as usize,
+            memory_gb: get_num(j, "memory_gb")?,
+            reselections: get_num(j, "reselections")? as usize,
+            selection_drift: get_opt_num(j, "selection_drift"),
+        })
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json_str(s: &str) -> Result<Self> {
+        let j = json::parse(s)
+            .map_err(|e| anyhow::anyhow!("report parse error: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Write the report to an explicit path.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        std::fs::write(path, self.to_json_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Write to `results/<stem>.json` (the bench convention) and
+    /// return the path.
+    pub fn save_results(&self, stem: &str) -> Result<PathBuf> {
+        let path = Path::new("results").join(format!("{stem}.json"));
+        self.save(&path)?;
+        Ok(path)
+    }
+
+    /// One-line human summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        let fmt = |x: Option<f64>| match x {
+            Some(v) => format!("{v:.3}"),
+            None => "-".to_string(),
+        };
+        format!(
+            "method={} task={} steps={} final_loss={} ppl_acc={}% \
+             gen_acc={}% us_per_token={} trainable={} reselections={}",
+            self.method,
+            self.task,
+            self.steps,
+            fmt(self.final_loss),
+            fmt(self.ppl_acc_post),
+            fmt(self.gen_acc),
+            fmt(self.us_per_token),
+            self.trainable_params
+                .map(|x| x.to_string())
+                .unwrap_or_else(|| "-".into()),
+            self.reselections,
+        )
+    }
+}
+
+/// Report for a multi-task sequence (`Session::train_sequence`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SequenceReport {
+    /// one per stage, in training order
+    pub stages: Vec<RunReport>,
+    /// `perf[i][j]` = PPL accuracy on task j's eval set after stage i
+    /// (empty when the sequence ran without eval sets)
+    pub perf: Vec<Vec<f64>>,
+}
+
+impl SequenceReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "stages".into(),
+            Json::Arr(self.stages.iter().map(|s| s.to_json()).collect()),
+        );
+        m.insert(
+            "perf".into(),
+            Json::Arr(
+                self.perf
+                    .iter()
+                    .map(|row| {
+                        Json::Arr(
+                            row.iter().map(|&v| Json::Num(v)).collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut stages = Vec::new();
+        if let Some(Json::Arr(ss)) = j.get("stages") {
+            for s in ss {
+                stages.push(RunReport::from_json(s)?);
+            }
+        }
+        let mut perf = Vec::new();
+        if let Some(Json::Arr(rows)) = j.get("perf") {
+            for row in rows {
+                let Json::Arr(cells) = row else {
+                    bail!("perf rows must be arrays of numbers");
+                };
+                let mut out_row = Vec::with_capacity(cells.len());
+                for v in cells {
+                    let Json::Num(n) = v else {
+                        bail!("perf rows must be arrays of numbers");
+                    };
+                    out_row.push(*n);
+                }
+                perf.push(out_row);
+            }
+        }
+        Ok(SequenceReport { stages, perf })
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Average performance over the final stage's row (paper AP),
+    /// `None` without eval data.
+    pub fn average_performance(&self) -> Option<f64> {
+        (!self.perf.is_empty())
+            .then(|| crate::eval::average_performance(&self.perf))
+    }
+
+    /// Backward transfer (paper BWT), `None` below two stages.
+    pub fn backward_transfer(&self) -> Option<f64> {
+        (self.perf.len() >= 2)
+            .then(|| crate::eval::backward_transfer(&self.perf))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        RunReport {
+            config: "tiny".into(),
+            method: "LoSiA-Pro".into(),
+            task: "modmath".into(),
+            steps: 3,
+            seed: 42,
+            first_loss: Some(4.5),
+            final_loss: Some(2.25),
+            loss_curve: vec![(0, 4.5), (1, 3.0), (2, 2.25)],
+            ppl_acc_pre: Some(9.5),
+            ppl_acc_post: Some(61.0),
+            gen_acc: None,
+            us_per_token: Some(123.75),
+            wall_secs: 1.5,
+            trainable_params: Some(4096),
+            total_params: 120_000,
+            memory_gb: 0.0015,
+            reselections: 7,
+            selection_drift: Some(37.5),
+        }
+    }
+
+    #[test]
+    fn run_report_json_round_trips() {
+        let r = sample();
+        let s = r.to_json_string();
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(r, back);
+        // and the serialized form itself is stable valid JSON
+        let back2 =
+            RunReport::from_json_str(&back.to_json_string()).unwrap();
+        assert_eq!(back, back2);
+    }
+
+    #[test]
+    fn missing_optionals_round_trip_as_null() {
+        let mut r = sample();
+        r.gen_acc = None;
+        r.us_per_token = None;
+        r.trainable_params = None;
+        r.selection_drift = None;
+        let s = r.to_json_string();
+        assert!(s.contains("\"gen_acc\":null"), "{s}");
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn non_finite_values_serialize_as_null() {
+        let mut r = sample();
+        r.us_per_token = Some(f64::NAN);
+        let s = r.to_json_string();
+        assert!(s.contains("\"us_per_token\":null"), "{s}");
+        // still parseable; NaN collapses to None
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(back.us_per_token, None);
+    }
+
+    #[test]
+    fn malformed_report_is_a_typed_error() {
+        let err = RunReport::from_json_str("{\"config\":1}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("config"), "{err}");
+        assert!(RunReport::from_json_str("not json").is_err());
+        // malformed nested structures error instead of panicking
+        let mut bad = sample().to_json_string();
+        bad = bad.replace("[0,4.5]", "[\"x\",4.5]");
+        let err = RunReport::from_json_str(&bad).unwrap_err();
+        assert!(err.to_string().contains("loss_curve"), "{err}");
+        let bad_perf = r#"{"stages":[],"perf":[[1,"y"]]}"#;
+        let j = crate::util::json::parse(bad_perf).unwrap();
+        assert!(SequenceReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn sequence_report_round_trips() {
+        let seq = SequenceReport {
+            stages: vec![sample(), sample()],
+            perf: vec![vec![80.0, 50.0], vec![70.0, 90.0]],
+        };
+        let j = seq.to_json();
+        let back = SequenceReport::from_json(&j).unwrap();
+        assert_eq!(seq, back);
+        assert!(
+            (back.average_performance().unwrap() - 80.0).abs() < 1e-9
+        );
+        assert!((back.backward_transfer().unwrap() + 10.0).abs() < 1e-9);
+    }
+}

@@ -1,12 +1,11 @@
-//! Per-method integration: every baseline trains, respects its
-//! freezing contract, and LoSiA ≡ LoSiA-Pro numerically at step level.
+//! Per-method integration through the session layer: every baseline
+//! trains, respects its freezing contract, and LoSiA ≡ LoSiA-Pro
+//! numerically at step level.
 
 use losia::config::{Method, TrainConfig};
 use losia::coordinator::state::ModelState;
-use losia::coordinator::trainer::Trainer;
-use losia::data::domain::ModMath;
-use losia::data::{gen_train_set, Batcher};
 use losia::runtime::Runtime;
+use losia::session::{RunReport, Session};
 use losia::util::rng::Rng;
 
 fn tc(method: Method, steps: usize) -> TrainConfig {
@@ -20,21 +19,28 @@ fn tc(method: Method, steps: usize) -> TrainConfig {
     }
 }
 
+/// Train `method` for `steps` with everything seeded from `seed`;
+/// returns (init state, trained state, report).
 fn run(
     rt: &Runtime,
     method: Method,
     steps: usize,
     seed: u64,
-) -> (ModelState, ModelState, Trainer<'_>) {
+) -> (ModelState, ModelState, RunReport) {
     let mut rng = Rng::new(seed);
     let state0 = ModelState::init(&rt.cfg, &mut rng);
-    let mut state = state0.clone();
-    let train = gen_train_set(&ModMath, 500, seed);
-    let mut batcher =
-        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, seed);
-    let mut trainer = Trainer::new(rt, tc(method, steps)).unwrap();
-    trainer.train(&mut state, &mut batcher).unwrap();
-    (state0, state, trainer)
+    let mut s = Session::builder()
+        .runtime(rt)
+        .train_config(tc(method, steps))
+        .task("modmath")
+        .train_n(500)
+        .model_seed(seed)
+        .data_seed(seed)
+        .batcher_seed(seed)
+        .build()
+        .unwrap();
+    let report = s.train().unwrap();
+    (state0, s.into_state(), report)
 }
 
 #[test]
@@ -49,15 +55,15 @@ fn every_method_descends() {
         Method::Losia,
         Method::LosiaPro,
     ] {
-        let (_, _, trainer) = run(&rt, method, 30, 21);
-        let first = trainer.loss_log[0].1;
-        let tail = trainer.tail_loss(5);
+        let (_, _, report) = run(&rt, method, 30, 21);
+        let first = report.first_loss.unwrap();
+        let tail = report.final_loss.unwrap();
         assert!(
             tail < first,
             "{}: first {first:.3} tail {tail:.3}",
             method.name()
         );
-        assert!(trainer.driver.trainable_params() > 0);
+        assert!(report.trainable_params.unwrap() > 0);
     }
 }
 
@@ -101,10 +107,10 @@ fn pissa_reconstruction_preserves_forward() {
     // so the step-0 loss of PiSSA ≈ step-0 loss of LoRA (both = base
     // model loss).
     let rt = Runtime::from_config_name("tiny").unwrap();
-    let (_, _, t_lora) = run(&rt, Method::Lora, 2, 41);
-    let (_, _, t_pissa) = run(&rt, Method::Pissa, 2, 41);
-    let l0_lora = t_lora.loss_log[0].1;
-    let l0_pissa = t_pissa.loss_log[0].1;
+    let (_, _, r_lora) = run(&rt, Method::Lora, 2, 41);
+    let (_, _, r_pissa) = run(&rt, Method::Pissa, 2, 41);
+    let l0_lora = r_lora.first_loss.unwrap();
+    let l0_pissa = r_pissa.first_loss.unwrap();
     assert!(
         (l0_lora - l0_pissa).abs() < 0.02,
         "PiSSA init changed the function: {l0_lora} vs {l0_pissa}"
@@ -123,21 +129,24 @@ fn losia_and_pro_step_identically_with_fixed_selection() {
         c.seed = 77;
         c
     };
-    let mut rng = Rng::new(99);
-    let state0 = ModelState::init(&rt.cfg, &mut rng);
-    let train = gen_train_set(&ModMath, 200, 99);
+    let run_fixed = |method| {
+        let mut s = Session::builder()
+            .runtime(&rt)
+            .train_config(mk(method))
+            .task("modmath")
+            .train_n(200)
+            .model_seed(99)
+            .data_seed(99)
+            .batcher_seed(5)
+            .build()
+            .unwrap();
+        let report = s.train().unwrap();
+        (s.into_state(), report)
+    };
+    let (s_a, r_a) = run_fixed(Method::Losia);
+    let (s_b, r_b) = run_fixed(Method::LosiaPro);
 
-    let mut s_a = state0.clone();
-    let mut b_a = Batcher::new(train.clone(), rt.cfg.batch, rt.cfg.seq_len, 5);
-    let mut t_a = Trainer::new(&rt, mk(Method::Losia)).unwrap();
-    t_a.train(&mut s_a, &mut b_a).unwrap();
-
-    let mut s_b = state0.clone();
-    let mut b_b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 5);
-    let mut t_b = Trainer::new(&rt, mk(Method::LosiaPro)).unwrap();
-    t_b.train(&mut s_b, &mut b_b).unwrap();
-
-    for (la, lb) in t_a.loss_log.iter().zip(&t_b.loss_log) {
+    for (la, lb) in r_a.loss_curve.iter().zip(&r_b.loss_curve) {
         assert!(
             (la.1 - lb.1).abs() < 5e-3,
             "loss diverged: {} vs {}",
@@ -160,9 +169,8 @@ fn trainable_param_ordering_matches_paper() {
     // FFT > GaLore-coords > LoRA-class > LoSiA subnets (tiny config)
     let rt = Runtime::from_config_name("tiny").unwrap();
     let count = |m| {
-        let mut c = tc(m, 1);
-        c.steps = 1;
-        Trainer::new(&rt, c).unwrap().driver.trainable_params()
+        let (_, _, report) = run(&rt, m, 1, 51);
+        report.trainable_params.unwrap()
     };
     let fft = count(Method::Fft);
     let lora = count(Method::Lora);

@@ -1,0 +1,237 @@
+//! Session-API integration: builder misuse, observer event ordering
+//! (including task boundaries in a two-task sequence), and report
+//! emission through the real training loop.
+//!
+//! The misuse tests run without artifacts (the builder validates
+//! steps and task names before touching the runtime); the rest need
+//! the tiny artifacts like every other integration test.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use losia::config::Method;
+use losia::runtime::Runtime;
+use losia::session::observer::{
+    FinalizeEvent, Observer, RunStartEvent, StepEvent,
+    TaskBoundaryEvent,
+};
+use losia::session::{
+    RunReport, SelectionEvent, Session, TaskRegistry, TaskSpec,
+};
+
+// ------------------------------------------------------ builder misuse
+
+#[test]
+fn unknown_task_fails_at_build_listing_known_tasks() {
+    let err = Session::builder()
+        .task("not-a-task")
+        .steps(10)
+        .build()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown task"), "{msg}");
+    assert!(msg.contains("known tasks"), "{msg}");
+    assert!(msg.contains("modmath"), "{msg}");
+}
+
+#[test]
+fn zero_steps_fails_at_build() {
+    let err = Session::builder()
+        .task("modmath")
+        .steps(0)
+        .build()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("steps must be ≥ 1"),
+        "{err}"
+    );
+}
+
+#[test]
+fn unknown_config_fails_with_manifest_error() {
+    let err = Session::builder()
+        .config("no-such-config")
+        .task("modmath")
+        .steps(5)
+        .build()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no-such-config"), "{msg}");
+}
+
+#[test]
+fn custom_registry_extends_the_builder() {
+    let mut reg = TaskRegistry::with_builtins();
+    reg.register("tiny-kv", || {
+        Box::new(losia::data::domain::KvFacts::new(8, 2, 3))
+    });
+    // resolves at build; no runtime needed to prove the lookup works
+    // (unknown names fail before the runtime loads)
+    let err = Session::builder()
+        .registry(reg)
+        .task("still-unknown")
+        .steps(5)
+        .build()
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("tiny-kv"), "{err:#}");
+}
+
+// ------------------------------------------------- event stream order
+
+/// Records a flat tag stream of every observer hook invocation.
+#[derive(Clone, Default)]
+struct Recorder {
+    tags: Rc<RefCell<Vec<String>>>,
+}
+
+impl Observer for Recorder {
+    fn on_run_start(&mut self, ev: &RunStartEvent<'_>) {
+        self.tags
+            .borrow_mut()
+            .push(format!("start:{}:{}", ev.task_index, ev.task));
+    }
+
+    fn on_step(&mut self, ev: &StepEvent) {
+        self.tags
+            .borrow_mut()
+            .push(format!("step:{}:{}", ev.task_index, ev.step));
+    }
+
+    fn on_relocalize(&mut self, ev: &SelectionEvent) {
+        self.tags.borrow_mut().push(format!(
+            "reloc:{}:{}",
+            ev.group,
+            if ev.initial { "init" } else { "re" }
+        ));
+    }
+
+    fn on_task_boundary(&mut self, ev: &TaskBoundaryEvent) {
+        self.tags.borrow_mut().push(format!(
+            "boundary:{}->{}",
+            ev.from_task, ev.to_task
+        ));
+    }
+
+    fn on_finalize(&mut self, ev: &FinalizeEvent) {
+        self.tags
+            .borrow_mut()
+            .push(format!("finalize:{}", ev.task_index));
+    }
+}
+
+#[test]
+fn two_task_sequence_orders_events_correctly() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let rec = Recorder::default();
+    let tags = rec.tags.clone();
+    let mut s = Session::builder()
+        .runtime(&rt)
+        .method(Method::Lora)
+        .lr(1e-3)
+        .observer(Box::new(rec))
+        .build()
+        .unwrap();
+    let specs = vec![
+        TaskSpec::new("parity-3").steps(3).train_n(64),
+        TaskSpec::new("compare").steps(2).train_n(64),
+    ];
+    let seq = s.train_sequence(&specs).unwrap();
+    assert_eq!(seq.stages.len(), 2);
+    assert_eq!(seq.stages[0].steps, 3);
+    assert_eq!(seq.stages[1].steps, 2);
+    assert_eq!(seq.stages[0].task, "parity-3");
+    assert_eq!(seq.stages[1].task, "compare");
+
+    let tags = tags.borrow();
+    let expected = [
+        "start:0:parity-3",
+        "step:0:0",
+        "step:0:1",
+        "step:0:2",
+        "finalize:0",
+        "boundary:parity-3->compare",
+        "start:1:compare",
+        "step:1:0",
+        "step:1:1",
+        "finalize:1",
+    ];
+    // LoRA emits no relocalize events, so the stream is exactly this
+    assert_eq!(tags.as_slice(), expected.as_slice(), "{tags:?}");
+}
+
+#[test]
+fn losia_emits_initial_selections_before_the_first_step() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let rec = Recorder::default();
+    let tags = rec.tags.clone();
+    let mut s = Session::builder()
+        .runtime(&rt)
+        .method(Method::LosiaPro)
+        .task("modmath")
+        .steps(2)
+        .train_n(64)
+        .lr(1e-3)
+        .observer(Box::new(rec))
+        .build()
+        .unwrap();
+    s.train().unwrap();
+    let tags = tags.borrow();
+    let first_step =
+        tags.iter().position(|t| t.starts_with("step:")).unwrap();
+    let init_count = tags[..first_step]
+        .iter()
+        .filter(|t| t.starts_with("reloc:") && t.ends_with(":init"))
+        .count();
+    // 7 kinds × L layers + lm_head, all before step 0
+    assert_eq!(init_count, rt.cfg.n_layers * 7 + 1, "{tags:?}");
+}
+
+// --------------------------------------------------------- reporting
+
+#[test]
+fn trained_report_round_trips_through_json() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let mut s = Session::builder()
+        .runtime(&rt)
+        .method(Method::LosiaPro)
+        .task("modmath")
+        .steps(6)
+        .train_n(128)
+        .eval_n(40)
+        .lr(1e-3)
+        .build()
+        .unwrap();
+    let report = s.train().unwrap();
+    assert_eq!(report.loss_curve.len(), 6);
+    assert!(report.first_loss.is_some());
+    assert!(report.us_per_token.is_some());
+    assert!(report.ppl_acc_pre.is_some());
+    assert!(report.ppl_acc_post.is_some());
+    assert!(report.trainable_params.unwrap() > 0);
+    assert!(report.memory_gb > 0.0);
+
+    let json = report.to_json_string();
+    let back = RunReport::from_json_str(&json).unwrap();
+    assert_eq!(report, back);
+}
+
+#[test]
+fn evaluate_without_training_reports_accuracy_only() {
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let mut s = Session::builder()
+        .runtime(&rt)
+        .task("modmath")
+        .eval_n(40)
+        .build()
+        .unwrap();
+    let report = s.evaluate().unwrap();
+    assert_eq!(report.steps, 0);
+    assert!(report.first_loss.is_none());
+    assert!(report.loss_curve.is_empty());
+    let acc = report.ppl_acc_post.unwrap();
+    assert!((0.0..=100.0).contains(&acc));
+    // and the eval-only report still round-trips
+    let back =
+        RunReport::from_json_str(&report.to_json_string()).unwrap();
+    assert_eq!(report, back);
+}
