@@ -20,6 +20,11 @@ edition = "2021"
 anyhow = "1"
 xla = { git = "https://github.com/LaurentMazare/xla-rs" }
 
+# The pure-Rust reference backend does real tensor math inside
+# `cargo test`; opt-level 0 makes the suite needlessly slow.
+[profile.dev]
+opt-level = 2
+
 [lib]
 name = "losia"
 path = "src/lib.rs"

@@ -1,6 +1,11 @@
 //! Perf probe: per-artifact wall-clock on any config (the measurement
 //! tool behind EXPERIMENTS.md §Perf).
 //!
+//! Parameters are bound once per artifact (static); each timed call
+//! re-binds only the batch-shaped inputs, so the number reflects the
+//! steady-state executor cost, not host conversion of frozen weights.
+//! The executor's own upload/call counters are printed afterwards.
+//!
 //! ```bash
 //! cargo run --release --example perfprobe -- medium
 //! ```
@@ -8,9 +13,7 @@
 use losia::coordinator::state::ModelState;
 use losia::data::domain::ModMath;
 use losia::data::{gen_train_set, Batcher};
-use losia::methods::{assemble_inputs, base_values};
-use losia::runtime::{HostValue, Runtime};
-use losia::tensor::Tensor;
+use losia::runtime::{ExecPlan, HostRef, Runtime};
 use losia::util::rng::Rng;
 use std::time::Instant;
 
@@ -19,6 +22,7 @@ fn main() {
         .nth(1)
         .unwrap_or_else(|| "medium".into());
     let rt = Runtime::from_config_name(&cfgname).unwrap();
+    eprintln!("[perfprobe] backend: {}", rt.backend_name());
     let mut rng = Rng::new(7);
     let state = ModelState::init(&rt.cfg, &mut rng);
     let train = gen_train_set(&ModMath, 64, 1);
@@ -28,49 +32,72 @@ fn main() {
         rt.cfg.artifacts.keys().cloned().collect();
     for name in names {
         let exe = rt.load(&name).unwrap();
-        let mut values = base_values(&state, &batch);
-        for i in &exe.spec().inputs {
-            if !values.contains_key(&i.name) {
-                match i.dtype {
-                    losia::config::Dtype::F32 => {
-                        values.insert(
-                            i.name.clone(),
-                            HostValue::F32(Tensor::zeros(&i.shape)),
-                        );
-                    }
-                    losia::config::Dtype::I32 => {
-                        let n: usize = i.shape.iter().product();
-                        let data: Vec<usize> =
-                            (0..n).map(|k| k % 4).collect();
-                        values.insert(
-                            i.name.clone(),
-                            HostValue::from_indices(&i.shape, &data),
-                        );
-                    }
-                }
-            }
-        }
-        // fwd_logits takes no targets/mask: drop extras
-        let want: Vec<String> = exe
+        // everything except the batch is static for probing purposes
+        let static_names: Vec<String> = exe
             .spec()
             .inputs
             .iter()
+            .filter(|i| {
+                !["tokens", "targets", "mask"]
+                    .contains(&i.name.as_str())
+            })
             .map(|i| i.name.clone())
             .collect();
-        values.retain(|k, _| want.contains(k));
-        let inputs =
-            assemble_inputs(exe.spec(), values.clone()).unwrap();
-        let _ = exe.run(&inputs).unwrap(); // warm
+        let refs: Vec<&str> =
+            static_names.iter().map(|s| s.as_str()).collect();
+        let mut plan = ExecPlan::new(exe.clone(), &refs).unwrap();
+        plan.bind_params(&state).unwrap();
+        // fill the method-specific extras (dws/indices/adapters/probe)
+        // with zeros-or-small defaults, bound statically too
+        let fill: Vec<losia::config::TensorSpec> = plan
+            .spec()
+            .inputs
+            .iter()
+            .filter(|i| {
+                !plan.is_bound(&i.name)
+                    && !["tokens", "targets", "mask"]
+                        .contains(&i.name.as_str())
+            })
+            .cloned()
+            .collect();
+        for i in &fill {
+            match i.dtype {
+                losia::config::Dtype::F32 => {
+                    let zeros =
+                        losia::tensor::Tensor::zeros(&i.shape);
+                    plan.bind_f32(&i.name, &zeros).unwrap();
+                }
+                losia::config::Dtype::I32 => {
+                    let n: usize = i.shape.iter().product();
+                    let data: Vec<i32> =
+                        (0..n).map(|k| (k % 4) as i32).collect();
+                    plan.bind(
+                        &i.name,
+                        HostRef::I32 {
+                            shape: &i.shape,
+                            data: &data,
+                        },
+                    )
+                    .unwrap();
+                }
+            }
+        }
+        plan.bind_batch(&batch).unwrap();
+        let _ = plan.run().unwrap(); // warm (compile + upload)
         let reps = 3;
         let t0 = Instant::now();
         for _ in 0..reps {
-            let inputs =
-                assemble_inputs(exe.spec(), values.clone()).unwrap();
-            let _ = exe.run(&inputs).unwrap();
+            plan.bind_batch(&batch).unwrap();
+            let _ = plan.run().unwrap();
         }
+        let stats = exe.stats();
         println!(
-            "{name}: {:.1} ms/call (incl. host conversion)",
-            t0.elapsed().as_secs_f64() * 1000.0 / reps as f64
+            "{name}: {:.1} ms/call (steady state; {} static / {} \
+             per-step uploads over {} calls)",
+            t0.elapsed().as_secs_f64() * 1000.0 / reps as f64,
+            stats.static_uploads,
+            stats.step_uploads,
+            stats.calls,
         );
     }
 }

@@ -14,7 +14,7 @@ use common::*;
 use losia::config::Method;
 use losia::data::domain::ModMath;
 use losia::data::{gen_train_set, Batcher};
-use losia::methods::{assemble_inputs, base_values};
+use losia::runtime::ExecPlan;
 use losia::tensor::select::topk_indices_fast;
 use losia::util::table::{write_series_csv, Table};
 
@@ -37,9 +37,10 @@ fn main() {
     let train = gen_train_set(&ModMath, 64, 321);
     let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 2);
     let batch = b.next_batch();
-    let values = base_values(&res.state, &batch);
-    let inputs = assemble_inputs(exe.spec(), values).unwrap();
-    let out = exe.run(&inputs).unwrap();
+    let mut plan = ExecPlan::new(exe.clone(), &[]).unwrap();
+    plan.bind_params(&res.state).unwrap();
+    plan.bind_batch(&batch).unwrap();
+    let out = plan.run().unwrap();
 
     let p = rt.cfg.rank_factor;
     let mut table = Table::new(

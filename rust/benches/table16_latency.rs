@@ -1,6 +1,7 @@
 //! Table 16 — training-latency breakdown (µs/token): forward,
 //! backward, other, total — with and without gradient checkpointing
-//! (the remat artifact variants).
+//! (the remat artifact variants) — plus the host→device upload split
+//! from the executor profile (static re-binds vs per-step traffic).
 //!
 //! Forward time is measured on `fwd_loss` (forward-only artifact);
 //! backward = grads-artifact time − forward time; "other" is the
@@ -9,6 +10,12 @@
 //!
 //! Expected shape vs the paper: LoSiA < LoRA < GaLore < DoRA in total;
 //! LoSiA-Pro's backward strictly below LoSiA's (p² gradient compute).
+//! The `S-upl` column is the new executor-stat evidence for the
+//! LoSiA-Pro device-residency claim: static parameter re-uploads
+//! happen only at prepare/relocalize/finalize — 0 between
+//! relocalizations — while per-step traffic is the tiny dws frame +
+//! batch. LoRA shows the same shape (frozen backbone), FFT/GaLore
+//! re-upload their mutated weights every step.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -18,8 +25,8 @@ use losia::config::Method;
 use losia::coordinator::state::ModelState;
 use losia::data::domain::ModMath;
 use losia::data::{gen_train_set, Batcher};
-use losia::methods::{assemble_inputs, base_values};
 use losia::metrics::latency::time_fn;
+use losia::runtime::ExecPlan;
 use losia::session::Session;
 use losia::util::rng::Rng;
 use losia::util::table::Table;
@@ -35,13 +42,17 @@ fn main() {
     let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
     let batch = b.next_batch();
 
-    // forward-only reference
+    // forward-only reference through a plan: parameters upload once,
+    // each rep re-binds only the batch
     let fwd_exe = rt.load("fwd_loss").unwrap();
+    let param_names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut fwd_plan =
+        ExecPlan::new(fwd_exe, &param_names).unwrap();
+    fwd_plan.bind_params(&state).unwrap();
     let fwd = time_fn(2, reps, || {
-        let values = base_values(&state, &batch);
-        let inputs =
-            assemble_inputs(fwd_exe.spec(), values).unwrap();
-        let _ = fwd_exe.run(&inputs).unwrap();
+        fwd_plan.bind_batch(&batch).unwrap();
+        let _ = fwd_plan.run().unwrap();
     });
     let fwd_us = fwd.mean_micros() / tokens;
 
@@ -52,17 +63,15 @@ fn main() {
                 if remat { "w/" } else { "w/o" },
                 rt.cfg.name
             ),
-            &["Method", "Forward", "Backward", "Other", "Total"],
+            &[
+                "Method", "Forward", "Backward", "Other", "Total",
+                "S-upl", "P-upl",
+            ],
         );
         for method in table1_methods() {
-            // isolate per-method artifact stats (grads_full is shared)
-            for a in rt.cfg.artifacts.keys() {
-                if let Ok(e) = rt.load(a) {
-                    e.reset_stats();
-                }
-            }
             // full end-to-end run through the session layer; the
-            // stock LatencyObserver supplies µs/token
+            // stock LatencyObserver supplies µs/token and the
+            // ExecProfileObserver isolates per-stage artifact stats
             let mut tc = base_tc(&rt, method, reps);
             tc.use_remat = remat;
             tc.time_slot = 4; // include profiling + reselect cost
@@ -78,45 +87,29 @@ fn main() {
                 .unwrap();
             let report = session.train().unwrap();
             let total_us = report.us_per_token.unwrap_or(f64::NAN);
-            // artifact-only time = grads executable mean
-            let grads_us = match method {
-                Method::LosiaPro => {
-                    let name = if remat {
-                        "grads_losia_remat"
-                    } else {
-                        "grads_losia"
-                    };
-                    rt.load(name).unwrap().mean_exec_secs() * 1e6
-                        / tokens
-                }
-                Method::Lora | Method::Pissa => {
-                    let name = if remat {
-                        "grads_lora_remat"
-                    } else {
-                        "grads_lora"
-                    };
-                    rt.load(name).unwrap().mean_exec_secs() * 1e6
-                        / tokens
-                }
-                Method::Dora => {
-                    let name = if remat {
-                        "grads_dora_remat"
-                    } else {
-                        "grads_dora"
-                    };
-                    rt.load(name).unwrap().mean_exec_secs() * 1e6
-                        / tokens
-                }
-                _ => {
-                    let name = if remat {
-                        "grads_full_remat"
-                    } else {
-                        "grads_full"
-                    };
-                    rt.load(name).unwrap().mean_exec_secs() * 1e6
-                        / tokens
+            // artifact-only time = grads executable mean, from the
+            // stage-scoped executor profile (no global reset needed)
+            let grads_name = {
+                let base = match method {
+                    Method::LosiaPro => "grads_losia",
+                    Method::Lora | Method::Pissa => "grads_lora",
+                    Method::Dora => "grads_dora",
+                    _ => "grads_full",
+                };
+                if remat {
+                    format!("{base}_remat")
+                } else {
+                    base.to_string()
                 }
             };
+            let profile = report
+                .exec_profile(&grads_name)
+                .or_else(|| report.exec_profile(
+                    grads_name.trim_end_matches("_remat"),
+                ))
+                .cloned()
+                .unwrap_or_default();
+            let grads_us = profile.mean_secs * 1e6 / tokens;
             let bwd_us = (grads_us - fwd_us).max(0.0);
             let other_us = (total_us - grads_us).max(0.0);
             table.row(&[
@@ -125,7 +118,10 @@ fn main() {
                 format!("{bwd_us:.2}"),
                 format!("{other_us:.2}"),
                 format!("{total_us:.2}"),
+                format!("{}", profile.static_uploads),
+                format!("{}", profile.step_uploads),
             ]);
+            eprintln!("[exec] {}", profile.summary_line());
         }
         table.print();
         table.write_csv(&format!(

@@ -14,7 +14,7 @@ use losia::config::Method;
 use losia::coordinator::localize::{localize, topk_mass, Selection};
 use losia::data::domain::ModMath;
 use losia::data::{gen_train_set, Batcher};
-use losia::methods::{assemble_inputs, base_values};
+use losia::runtime::ExecPlan;
 use losia::tensor::Tensor;
 use losia::util::rng::Rng;
 use losia::util::table::Table;
@@ -33,9 +33,10 @@ fn main() {
     let train = gen_train_set(&ModMath, 64, 123);
     let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 3);
     let batch = b.next_batch();
-    let values = base_values(&state, &batch);
-    let inputs = assemble_inputs(exe.spec(), values).unwrap();
-    let out = exe.run(&inputs).unwrap();
+    let mut plan = ExecPlan::new(exe.clone(), &[]).unwrap();
+    plan.bind_params(&state).unwrap();
+    plan.bind_batch(&batch).unwrap();
+    let out = plan.run().unwrap();
     let mut grads = std::collections::BTreeMap::new();
     for (spec, t) in exe.spec().outputs[1..].iter().zip(&out[1..]) {
         grads.insert(

@@ -46,6 +46,40 @@ pub struct ArtifactSpec {
     pub outputs: Vec<TensorSpec>,
 }
 
+/// Render a tensor-spec list as `name: dtype[d0,d1], …` (shared by
+/// [`ArtifactSpec::signature`] and `losia info`).
+pub fn fmt_specs(specs: &[TensorSpec]) -> String {
+    specs
+        .iter()
+        .map(|s| {
+            let dt = match s.dtype {
+                Dtype::F32 => "f32",
+                Dtype::I32 => "i32",
+            };
+            let dims = s
+                .shape
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            format!("{}: {dt}[{dims}]", s.name)
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+impl ArtifactSpec {
+    /// Human-readable manifest signature for error messages, e.g.
+    /// `inputs: [embed: f32[64,32], …] -> outputs: [loss: f32[]]`.
+    pub fn signature(&self) -> String {
+        format!(
+            "inputs: [{}] -> outputs: [{}]",
+            fmt_specs(&self.inputs),
+            fmt_specs(&self.outputs)
+        )
+    }
+}
+
 /// Static model configuration mirrored from `python/compile/aot.py`.
 #[derive(Debug, Clone)]
 pub struct ModelCfg {
@@ -217,6 +251,276 @@ fn parse_config(c: &Json, artifacts_dir: &Path) -> Result<ModelCfg> {
     })
 }
 
+/// Resolve a config: from `manifest.json` when the artifacts have been
+/// lowered, else from the [`builtin_config`] zoo (identical shapes) so
+/// the reference backend runs from a bare checkout.
+pub fn resolve_config(
+    artifacts_dir: &Path,
+    name: &str,
+) -> Result<ModelCfg> {
+    if artifacts_dir.join("manifest.json").exists() {
+        load_manifest(artifacts_dir, name)
+    } else {
+        builtin_config(name, artifacts_dir)
+    }
+}
+
+// ----------------------------------------------------- builtin configs
+
+const LINEAR_KINDS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+
+/// Mirror of the config zoo in `python/compile/aot.py::CONFIGS`,
+/// including per-artifact I/O signatures, so the reference backend
+/// needs no generated manifest. Must stay bit-identical to the Python
+/// side — `config::tests::builtin_matches_manifest` pins that whenever
+/// a lowered manifest is present.
+#[allow(clippy::type_complexity)]
+pub fn builtin_config(name: &str, artifacts_dir: &Path) -> Result<ModelCfg> {
+    // (vocab, d_model, n_heads, d_ff, n_layers, seq, batch, p, p_o, r)
+    let (vocab, d_model, n_heads, d_ff, n_layers, seq_len, batch,
+         rank_factor, out_factor, lora_rank): (
+        usize, usize, usize, usize, usize, usize, usize, f64, f64, usize,
+    ) = match name {
+        "tiny" => (64, 32, 2, 64, 2, 32, 4, 0.125, 0.25, 4),
+        "small" => (256, 128, 4, 256, 4, 64, 4, 0.125, 0.125, 16),
+        "medium" => (512, 256, 8, 512, 6, 128, 4, 0.125, 0.125, 32),
+        "gpt90m" => {
+            (4096, 768, 12, 2048, 12, 128, 4, 0.125, 0.0625, 64)
+        }
+        other => bail!(
+            "config {other:?} is neither in a lowered manifest nor a \
+             builtin (builtins: tiny, small, medium, gpt90m); run \
+             `make artifacts` for manifest-defined configs"
+        ),
+    };
+    let lora_alpha = 16.0;
+    let sub = |n: usize, p: f64| ((n as f64 * p) as usize).max(1);
+    let vocab_sub = sub(vocab, out_factor);
+
+    let mut kinds = BTreeMap::new();
+    for kind in LINEAR_KINDS {
+        let (n, m) = match kind {
+            "wgate" | "wup" => (d_model, d_ff),
+            "wdown" => (d_ff, d_model),
+            _ => (d_model, d_model),
+        };
+        kinds.insert(
+            kind.to_string(),
+            KindDims {
+                n,
+                m,
+                np: sub(n, rank_factor),
+                mp: sub(m, rank_factor),
+            },
+        );
+    }
+
+    // canonical parameter ABI order (model.py::param_specs)
+    let (d, f, v, l) = (d_model, d_ff, vocab, n_layers);
+    let params: Vec<(String, Vec<usize>)> = vec![
+        ("embed".into(), vec![v, d]),
+        ("wq".into(), vec![l, d, d]),
+        ("wk".into(), vec![l, d, d]),
+        ("wv".into(), vec![l, d, d]),
+        ("wo".into(), vec![l, d, d]),
+        ("wgate".into(), vec![l, d, f]),
+        ("wup".into(), vec![l, d, f]),
+        ("wdown".into(), vec![l, f, d]),
+        ("norm1".into(), vec![l, d]),
+        ("norm2".into(), vec![l, d]),
+        ("norm_f".into(), vec![d]),
+        ("lm_head".into(), vec![d, v]),
+    ];
+    let param_count = v * d
+        + l * (4 * d * d + 3 * d * f + 2 * d)
+        + d
+        + d * v;
+
+    let f32s = |n: &str, s: &[usize]| TensorSpec {
+        name: n.to_string(),
+        shape: s.to_vec(),
+        dtype: Dtype::F32,
+    };
+    let i32s = |n: &str, s: &[usize]| TensorSpec {
+        name: n.to_string(),
+        shape: s.to_vec(),
+        dtype: Dtype::I32,
+    };
+    let pio: Vec<TensorSpec> =
+        params.iter().map(|(n, s)| f32s(n, s)).collect();
+    let bio = vec![
+        i32s("tokens", &[batch, seq_len]),
+        i32s("targets", &[batch, seq_len]),
+        f32s("mask", &[batch, seq_len]),
+    ];
+    let mut dio = Vec::new();
+    let mut iio = Vec::new();
+    for kind in LINEAR_KINDS {
+        let kd = kinds[kind];
+        dio.push(f32s(&format!("dws_{kind}"), &[l, kd.np, kd.mp]));
+        iio.push(i32s(&format!("rho_{kind}"), &[l, kd.np]));
+        iio.push(i32s(&format!("gamma_{kind}"), &[l, kd.mp]));
+    }
+    dio.push(f32s("dws_out", &[d, vocab_sub]));
+    iio.push(i32s("gamma_out", &[vocab_sub]));
+    let lora_io = |dora: bool| {
+        let mut io = Vec::new();
+        for kind in LINEAR_KINDS {
+            let kd = kinds[kind];
+            io.push(f32s(&format!("la_{kind}"), &[l, kd.n, lora_rank]));
+            io.push(f32s(&format!("lb_{kind}"), &[l, lora_rank, kd.m]));
+            if dora {
+                io.push(f32s(&format!("mag_{kind}"), &[l, kd.m]));
+            }
+        }
+        io
+    };
+
+    let mut artifacts = BTreeMap::new();
+    let full_set = [
+        "fwd_logits",
+        "fwd_loss",
+        "grads_full",
+        "grads_losia",
+        "grads_probe",
+        "grads_lora",
+        "grads_dora",
+        "grads_full_remat",
+        "grads_losia_remat",
+        "grads_lora_remat",
+        "grads_dora_remat",
+    ];
+    let big_set = [
+        "fwd_logits",
+        "fwd_loss",
+        "grads_losia_remat",
+        "grads_probe",
+        "grads_lora_remat",
+    ];
+    let set: &[&str] =
+        if name == "gpt90m" { &big_set } else { &full_set };
+    for art in set {
+        let base = art.strip_suffix("_remat").unwrap_or(art);
+        let (inputs, outputs): (Vec<TensorSpec>, Vec<TensorSpec>) =
+            match base {
+                "fwd_logits" => (
+                    pio.iter()
+                        .cloned()
+                        .chain([i32s("tokens", &[batch, seq_len])])
+                        .collect(),
+                    vec![f32s("logits", &[batch, seq_len, v])],
+                ),
+                "fwd_loss" => (
+                    pio.iter().cloned().chain(bio.clone()).collect(),
+                    vec![f32s("nll", &[batch]), f32s("cnt", &[batch])],
+                ),
+                "grads_full" => (
+                    pio.iter().cloned().chain(bio.clone()).collect(),
+                    [f32s("loss", &[])]
+                        .into_iter()
+                        .chain(params.iter().map(|(n, s)| {
+                            f32s(&format!("g_{n}"), s)
+                        }))
+                        .collect(),
+                ),
+                "grads_losia" => (
+                    pio.iter()
+                        .cloned()
+                        .chain(dio.clone())
+                        .chain(iio.clone())
+                        .chain([i32s("probe", &[])])
+                        .chain(bio.clone())
+                        .collect(),
+                    [f32s("loss", &[])]
+                        .into_iter()
+                        .chain(dio.iter().map(|s| {
+                            f32s(&format!("g_{}", s.name), &s.shape)
+                        }))
+                        .chain(LINEAR_KINDS.iter().map(|k| {
+                            let kd = kinds[*k];
+                            f32s(
+                                &format!("probe_{k}"),
+                                &[kd.n, kd.m],
+                            )
+                        }))
+                        .chain([f32s("probe_lm_head", &[d, v])])
+                        .collect(),
+                ),
+                "grads_probe" => (
+                    pio.iter()
+                        .cloned()
+                        .chain([i32s("probe", &[])])
+                        .chain(bio.clone())
+                        .collect(),
+                    [f32s("loss", &[])]
+                        .into_iter()
+                        .chain(LINEAR_KINDS.iter().map(|k| {
+                            let kd = kinds[*k];
+                            f32s(&format!("g_{k}"), &[kd.n, kd.m])
+                        }))
+                        .chain([f32s("g_lm_head", &[d, v])])
+                        .collect(),
+                ),
+                "grads_lora" | "grads_dora" => {
+                    let aio = lora_io(base == "grads_dora");
+                    (
+                        pio.iter()
+                            .cloned()
+                            .chain(aio.clone())
+                            .chain(bio.clone())
+                            .collect(),
+                        [f32s("loss", &[])]
+                            .into_iter()
+                            .chain(aio.iter().map(|s| {
+                                f32s(
+                                    &format!("g_{}", s.name),
+                                    &s.shape,
+                                )
+                            }))
+                            .collect(),
+                    )
+                }
+                _ => unreachable!(),
+            };
+        artifacts.insert(
+            art.to_string(),
+            ArtifactSpec {
+                name: art.to_string(),
+                file: artifacts_dir
+                    .join(name)
+                    .join(format!("{art}.hlo.txt")),
+                inputs,
+                outputs,
+            },
+        );
+    }
+
+    Ok(ModelCfg {
+        name: name.to_string(),
+        vocab,
+        d_model,
+        n_heads,
+        d_ff,
+        n_layers,
+        seq_len,
+        batch,
+        rank_factor,
+        out_factor,
+        vocab_sub,
+        lora_rank,
+        lora_alpha,
+        param_count,
+        linear_kinds: LINEAR_KINDS
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        kinds,
+        params,
+        artifacts,
+    })
+}
+
 /// Fine-tuning method selector (paper Table 1 row set).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
@@ -354,9 +658,10 @@ mod tests {
     }
 
     #[test]
-    fn manifest_loads_tiny() {
+    fn tiny_config_resolves() {
+        // via manifest.json when lowered, else the builtin zoo
         let dir = crate::runtime::artifacts_dir();
-        let cfg = load_manifest(&dir, "tiny").expect("tiny manifest");
+        let cfg = resolve_config(&dir, "tiny").expect("tiny config");
         assert_eq!(cfg.n_layers, 2);
         assert_eq!(cfg.linear_kinds.len(), 7);
         let kd = cfg.kind("wq");
@@ -365,5 +670,78 @@ mod tests {
         assert!(cfg.has_artifact("grads_losia"));
         let a = cfg.artifact("fwd_logits");
         assert_eq!(a.outputs[0].shape, vec![cfg.batch, cfg.seq_len, cfg.vocab]);
+    }
+
+    #[test]
+    fn builtin_matches_manifest() {
+        // Whenever lowered artifacts exist, the builtin zoo must agree
+        // with them signature-for-signature — that equivalence is what
+        // lets the reference backend stand in for the XLA path.
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // nothing to compare against
+        }
+        for name in ["tiny", "small", "medium", "gpt90m"] {
+            let Ok(m) = load_manifest(&dir, name) else {
+                continue; // config not lowered in this checkout
+            };
+            let b = builtin_config(name, &dir).unwrap();
+            assert_eq!(m.vocab, b.vocab, "{name}: vocab");
+            assert_eq!(m.d_model, b.d_model, "{name}: d_model");
+            assert_eq!(m.n_heads, b.n_heads, "{name}: n_heads");
+            assert_eq!(m.d_ff, b.d_ff, "{name}: d_ff");
+            assert_eq!(m.n_layers, b.n_layers, "{name}: n_layers");
+            assert_eq!(m.seq_len, b.seq_len, "{name}: seq_len");
+            assert_eq!(m.batch, b.batch, "{name}: batch");
+            assert_eq!(m.vocab_sub, b.vocab_sub, "{name}: vocab_sub");
+            assert_eq!(m.lora_rank, b.lora_rank, "{name}: lora_rank");
+            assert_eq!(
+                m.param_count, b.param_count,
+                "{name}: param_count"
+            );
+            assert_eq!(m.kinds, b.kinds, "{name}: kind dims");
+            assert_eq!(m.params, b.params, "{name}: param ABI");
+            assert_eq!(
+                m.linear_kinds, b.linear_kinds,
+                "{name}: kinds order"
+            );
+            for (art, ms) in &m.artifacts {
+                let bs = b
+                    .artifacts
+                    .get(art)
+                    .unwrap_or_else(|| {
+                        panic!("{name}: builtin lacks artifact {art}")
+                    });
+                assert_eq!(
+                    ms.inputs, bs.inputs,
+                    "{name}/{art}: inputs"
+                );
+                assert_eq!(
+                    ms.outputs, bs.outputs,
+                    "{name}/{art}: outputs"
+                );
+            }
+            assert_eq!(
+                m.artifacts.len(),
+                b.artifacts.len(),
+                "{name}: artifact set"
+            );
+        }
+    }
+
+    #[test]
+    fn builtin_unknown_config_is_typed_error() {
+        let dir = std::path::PathBuf::from("/nonexistent");
+        let err = builtin_config("nope", &dir).unwrap_err();
+        assert!(err.to_string().contains("tiny"), "{err}");
+    }
+
+    #[test]
+    fn signature_lists_inputs_and_outputs() {
+        let dir = std::path::PathBuf::from("/nonexistent");
+        let cfg = builtin_config("tiny", &dir).unwrap();
+        let sig = cfg.artifact("fwd_loss").signature();
+        assert!(sig.contains("tokens: i32[4,32]"), "{sig}");
+        assert!(sig.contains("nll: f32[4]"), "{sig}");
     }
 }

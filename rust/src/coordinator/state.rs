@@ -1,8 +1,8 @@
 //! Model parameter store — the host-side mirror of the artifact ABI.
 //!
 //! Parameters are kept in the canonical order defined by
-//! `python/compile/model.py::param_specs`; [`ModelState::as_inputs`]
-//! produces the flat `HostValue` list every artifact starts with.
+//! `python/compile/model.py::param_specs`;
+//! `ExecPlan::bind_params` uploads them by name.
 
 use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -11,7 +11,6 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelCfg;
-use crate::runtime::HostValue;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -71,15 +70,6 @@ impl ModelState {
     pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
         let i = self.index[name];
         &mut self.params[i].1
-    }
-
-    /// Flat parameter inputs for an artifact call (cheap clones of the
-    /// backing Vec<f32>; see metrics for the copy-cost accounting).
-    pub fn as_inputs(&self) -> Vec<HostValue> {
-        self.params
-            .iter()
-            .map(|(_, t)| HostValue::F32(t.clone()))
-            .collect()
     }
 
     /// One layer of a stacked parameter ([L, ...] → [...]).
@@ -196,11 +186,11 @@ impl ModelState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::load_manifest;
+    use crate::config::resolve_config;
     use crate::runtime::artifacts_dir;
 
     fn tiny() -> ModelCfg {
-        load_manifest(&artifacts_dir(), "tiny").unwrap()
+        resolve_config(&artifacts_dir(), "tiny").unwrap()
     }
 
     #[test]

@@ -104,14 +104,23 @@ impl SubnetState {
         }
     }
 
+    /// One subnet Adam step in the compact [np, mp] frame: advance the
+    /// moments and return `−lr·m̂/(√v̂+ε)` — the delta to *add*. The
+    /// LoSiA-Pro driver accumulates these in the device-side `dws`
+    /// frame; the host-gather path scatters them into W directly.
+    pub fn delta_update(&mut self, g: &Tensor, lr: f32) -> Tensor {
+        let mut upd = self.adam.update(g, lr);
+        upd.scale_assign(-1.0);
+        upd
+    }
+
     /// Apply one subnet Adam step: given the subnet gradient
     /// `g ∈ R^{np×mp}`, update the moments and scatter
     /// `−lr·m̂/(√v̂+ε)` into the full weight `w` (Algorithm 2
     /// lines 18–24).
     pub fn apply_update(&mut self, w: &mut Tensor, g: &Tensor, lr: f32) {
         debug_assert_eq!(w.shape, vec![self.n, self.m]);
-        let mut upd = self.adam.update(g, lr);
-        upd.scale_assign(-1.0);
+        let upd = self.delta_update(g, lr);
         w.scatter_add2(&self.sel.rho, &self.sel.gamma, &upd);
     }
 

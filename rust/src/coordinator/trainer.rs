@@ -2,28 +2,70 @@
 //! batches, and reports telemetry into an observer set.
 //!
 //! The trainer owns no telemetry of its own — loss curves, per-step
-//! wall time, and subnet-selection events all flow through
+//! wall time, subnet-selection events, and per-artifact executor
+//! stats all flow through
 //! [`crate::session::observer::ObserverSet`], so benches and the CLI
-//! compose metrics instead of forking the loop. Most callers should
-//! reach this through [`crate::session::Session`], which also owns
-//! runtime loading, task construction, and report assembly.
+//! compose metrics instead of forking the loop. Executor profiling
+//! works by snapshotting the runtime's per-artifact counters around
+//! each step and emitting the deltas as
+//! [`crate::session::observer::ExecEvent`]s — including the upload
+//! split that distinguishes static (weights) from per-step (batch)
+//! host→device traffic. Most callers should reach this through
+//! [`crate::session::Session`], which also owns runtime loading, task
+//! construction, and report assembly.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
 
 use anyhow::Result;
-use std::time::Instant;
 
 use crate::config::TrainConfig;
 use crate::coordinator::rewarm::LrSchedule;
 use crate::coordinator::state::ModelState;
 use crate::data::Batcher;
 use crate::methods::{build_driver, Driver};
-use crate::runtime::Runtime;
-use crate::session::observer::ObserverSet;
+use crate::runtime::{ExecSnapshot, Runtime};
+use crate::session::observer::{ExecEvent, ObserverSet};
 
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
     pub tc: TrainConfig,
     pub schedule: LrSchedule,
     pub driver: Box<dyn Driver>,
+}
+
+/// Tracks runtime exec counters between emissions and turns the
+/// movement into `ExecEvent`s.
+struct ExecTracker {
+    prev: BTreeMap<String, ExecSnapshot>,
+}
+
+impl ExecTracker {
+    fn new(rt: &Runtime) -> Self {
+        ExecTracker {
+            prev: rt.exec_snapshots().into_iter().collect(),
+        }
+    }
+
+    fn emit(&mut self, rt: &Runtime, step: usize, obs: &mut ObserverSet) {
+        for (artifact, snap) in rt.exec_snapshots() {
+            let base =
+                self.prev.get(&artifact).copied().unwrap_or_default();
+            let d = snap.delta_since(&base);
+            if d.calls > 0 || d.static_uploads > 0 || d.step_uploads > 0
+            {
+                obs.emit_exec(&ExecEvent {
+                    step,
+                    artifact: artifact.clone(),
+                    calls: d.calls,
+                    secs: d.total_secs(),
+                    static_uploads: d.static_uploads,
+                    step_uploads: d.step_uploads,
+                });
+            }
+            self.prev.insert(artifact, snap);
+        }
+    }
 }
 
 impl<'rt> Trainer<'rt> {
@@ -43,7 +85,7 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Run `tc.steps` optimization steps over the batcher, reporting
-    /// step / relocalize / finalize events into `obs`.
+    /// step / relocalize / exec / finalize events into `obs`.
     pub fn train(
         &mut self,
         state: &mut ModelState,
@@ -51,11 +93,15 @@ impl<'rt> Trainer<'rt> {
         obs: &mut ObserverSet,
     ) -> Result<()> {
         let tokens = self.rt.cfg.tokens_per_step();
+        let mut exec = ExecTracker::new(self.rt);
         self.driver.prepare(state)?;
         // initial subnet selections installed at construction time
         for ev in self.driver.drain_events() {
             obs.emit_relocalize(&ev);
         }
+        // prepare-time uploads (LoRA/LoSiA-Pro bind their static
+        // parameter set here) are attributed to step 0
+        exec.emit(self.rt, 0, obs);
         for t in 0..self.tc.steps {
             let batch = batcher.next_batch();
             let lr = self.schedule.lr(t);
@@ -65,6 +111,7 @@ impl<'rt> Trainer<'rt> {
             for ev in self.driver.drain_events() {
                 obs.emit_relocalize(&ev);
             }
+            exec.emit(self.rt, t, obs);
             obs.emit_step(t, loss, lr, secs, tokens);
             if self.tc.log_every > 0 && t % self.tc.log_every == 0 {
                 eprintln!(
@@ -76,6 +123,7 @@ impl<'rt> Trainer<'rt> {
         // merge external adapters into the backbone (paper protocol:
         // LoRA modules are merged before evaluation / the next task)
         self.driver.finalize(state)?;
+        exec.emit(self.rt, self.tc.steps, obs);
         obs.emit_finalize(self.tc.steps);
         Ok(())
     }

@@ -4,10 +4,10 @@
 
 use super::vocab::{BOS, EOS, PAD};
 use super::Example;
-use crate::runtime::HostValue;
 use crate::util::rng::Rng;
 
-/// One training batch in artifact ABI form.
+/// One training batch in artifact ABI form; uploaded by name through
+/// `ExecPlan::bind_batch`.
 #[derive(Debug, Clone)]
 pub struct Batch {
     pub tokens: Vec<i32>,
@@ -18,25 +18,6 @@ pub struct Batch {
 }
 
 impl Batch {
-    /// The three batch inputs every grads/loss artifact ends with.
-    pub fn as_inputs(&self) -> Vec<HostValue> {
-        let shape = [self.batch, self.seq];
-        vec![
-            HostValue::I32 {
-                shape: shape.to_vec(),
-                data: self.tokens.clone(),
-            },
-            HostValue::I32 {
-                shape: shape.to_vec(),
-                data: self.targets.clone(),
-            },
-            HostValue::F32(crate::tensor::Tensor::from_vec(
-                &shape,
-                self.mask.clone(),
-            )),
-        ]
-    }
-
     /// Number of loss-bearing tokens.
     pub fn mask_count(&self) -> usize {
         self.mask.iter().filter(|&&m| m > 0.0).count()
@@ -226,13 +207,12 @@ mod tests {
     }
 
     #[test]
-    fn batch_inputs_have_abi_shapes() {
+    fn batch_tensors_have_abi_shapes() {
         let mut b = Batcher::new(vec![ex()], 3, 10, 1);
         let batch = b.next_batch();
-        let inputs = batch.as_inputs();
-        assert_eq!(inputs.len(), 3);
-        assert_eq!(inputs[0].shape(), &[3, 10]);
-        assert_eq!(inputs[2].shape(), &[3, 10]);
+        assert_eq!(batch.tokens.len(), batch.batch * batch.seq);
+        assert_eq!(batch.targets.len(), batch.batch * batch.seq);
+        assert_eq!(batch.mask.len(), batch.batch * batch.seq);
         assert!(batch.mask_count() > 0);
     }
 }

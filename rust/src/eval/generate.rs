@@ -9,16 +9,17 @@ use anyhow::Result;
 use crate::coordinator::state::ModelState;
 use crate::data::vocab::{BOS, EOS, PAD};
 use crate::data::EvalItem;
-use crate::methods::{assemble_inputs, base_values};
-use crate::runtime::Runtime;
+use crate::runtime::{ExecPlan, Runtime};
 use crate::tensor::select::{argmax, softmax};
 use crate::util::rng::Rng;
 
 /// Decode up to `max_new` tokens after the prompt for a batch of
-/// prompts. temperature = 0 → greedy.
+/// prompts. temperature = 0 → greedy. Parameters are bound statically
+/// per `generate` call; only the token grid re-uploads per emitted
+/// token.
 pub struct Generator<'rt> {
     rt: &'rt Runtime,
-    exe: &'static crate::runtime::Executable,
+    exe: std::sync::Arc<crate::runtime::Executable>,
 }
 
 impl<'rt> Generator<'rt> {
@@ -56,6 +57,20 @@ impl<'rt> Generator<'rt> {
         let mut outs: Vec<Vec<u32>> =
             vec![Vec::new(); prompts.len()];
 
+        // fwd_logits wants only params + tokens; params upload once
+        let param_names: Vec<&str> = self
+            .rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan = ExecPlan::new(
+            std::sync::Arc::clone(&self.exe),
+            &param_names,
+        )?;
+        plan.bind_params(state)?;
+
         for _ in 0..max_new {
             if done.iter().all(|&d| d) {
                 break;
@@ -67,21 +82,8 @@ impl<'rt> Generator<'rt> {
                     tokens[i * s + t] = tok as i32;
                 }
             }
-            let mut values = base_values(
-                state,
-                &crate::data::Batch {
-                    tokens: tokens.clone(),
-                    targets: vec![0; b * s],
-                    mask: vec![0.0; b * s],
-                    batch: b,
-                    seq: s,
-                },
-            );
-            // fwd_logits wants only params + tokens
-            values.remove("targets");
-            values.remove("mask");
-            let inputs = assemble_inputs(self.exe.spec(), values)?;
-            let out = self.exe.run(&inputs)?;
+            plan.bind_i32("tokens", &[b, s], &tokens)?;
+            let out = plan.run()?;
             let logits = &out[0]; // [B, S, V]
             for i in 0..prompts.len() {
                 if done[i] {

@@ -9,14 +9,15 @@ use anyhow::Result;
 use crate::coordinator::state::ModelState;
 use crate::data::batcher::pack_example;
 use crate::data::{EvalItem, Example};
-use crate::methods::{assemble_inputs, base_values};
-use crate::runtime::Runtime;
+use crate::runtime::{ExecPlan, Runtime};
 
 /// Scored candidate streams are packed batch-first; the artifact has a
-/// fixed batch size so candidates are chunked and padded.
+/// fixed batch size so candidates are chunked and padded. Parameters
+/// are bound statically (uploaded once per scoring pass); only the
+/// packed batch crosses the host boundary per chunk.
 struct NllScorer<'rt> {
     rt: &'rt Runtime,
-    exe: &'static crate::runtime::Executable,
+    exe: std::sync::Arc<crate::runtime::Executable>,
 }
 
 impl<'rt> NllScorer<'rt> {
@@ -35,6 +36,18 @@ impl<'rt> NllScorer<'rt> {
     ) -> Result<Vec<f64>> {
         let b = self.rt.cfg.batch;
         let s = self.rt.cfg.seq_len;
+        let param_names: Vec<&str> = self
+            .rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan = ExecPlan::new(
+            std::sync::Arc::clone(&self.exe),
+            &param_names,
+        )?;
+        plan.bind_params(state)?;
         let mut out = Vec::with_capacity(pairs.len());
         for chunk in pairs.chunks(b) {
             let mut tokens = Vec::with_capacity(b * s);
@@ -54,9 +67,8 @@ impl<'rt> NllScorer<'rt> {
                 batch: b,
                 seq: s,
             };
-            let values = base_values(state, &batch);
-            let inputs = assemble_inputs(self.exe.spec(), values)?;
-            let res = self.exe.run(&inputs)?;
+            plan.bind_batch(&batch)?;
+            let res = plan.run()?;
             let nll = &res[0]; // [B]
             for i in 0..chunk.len() {
                 out.push(nll.data[i] as f64);

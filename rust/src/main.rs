@@ -15,12 +15,16 @@
 
 use anyhow::{Context, Result};
 
-use losia::config::Dtype;
+use losia::config::fmt_specs;
 use losia::session::Session;
 use losia::util::cli::Args;
 
 /// Shared builder assembly for `train` and `eval`.
 fn session_from_args(args: &Args) -> Result<losia::SessionBuilder<'static>> {
+    if let Some(backend) = args.get("backend") {
+        // the runtime reads LOSIA_BACKEND at build time
+        std::env::set_var("LOSIA_BACKEND", backend);
+    }
     let mut b = Session::builder()
         .config(&args.get_or("config", "tiny"))
         .method_str(&args.get_or("method", "losia-pro"))?
@@ -53,6 +57,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         eprintln!("[eval] pre-train PPL-accuracy: {pre:.2}%");
     }
     println!("{}", report.summary_line());
+    for p in &report.exec {
+        eprintln!("[exec] {}", p.summary_line());
+    }
     if args.has_flag("json") {
         println!("{}", report.to_json_string());
     }
@@ -104,33 +111,26 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn fmt_specs(specs: &[losia::config::TensorSpec]) -> String {
-    specs
-        .iter()
-        .map(|s| {
-            let dt = match s.dtype {
-                Dtype::F32 => "f32",
-                Dtype::I32 => "i32",
-            };
-            format!(
-                "{}: {}[{}]",
-                s.name,
-                dt,
-                s.shape
-                    .iter()
-                    .map(|d| d.to_string())
-                    .collect::<Vec<_>>()
-                    .join(",")
-            )
-        })
-        .collect::<Vec<_>>()
-        .join(", ")
-}
-
 fn cmd_info(args: &Args) -> Result<()> {
+    // `losia info --report run.json` summarises a saved RunReport,
+    // including the per-artifact executor stats
+    if let Some(path) = args.get("report") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading report {path}"))?;
+        let report =
+            losia::session::RunReport::from_json_str(&text)?;
+        println!("{}", report.summary_line());
+        if report.exec.is_empty() {
+            println!("  (no executor stats recorded)");
+        }
+        for p in &report.exec {
+            println!("  exec {}", p.summary_line());
+        }
+        return Ok(());
+    }
     let cfg_name = args.get_or("config", "tiny");
     let dir = losia::runtime::artifacts_dir();
-    let cfg = losia::config::load_manifest(&dir, &cfg_name)?;
+    let cfg = losia::config::resolve_config(&dir, &cfg_name)?;
     println!(
         "config {} — vocab {} d_model {} heads {} ff {} layers {} \
          seq {} batch {} params {}",
@@ -163,7 +163,8 @@ fn main() -> Result<()> {
                 "usage: losia <train|eval|info> [--config C] \
                  [--method M] [--task T] [--steps N] [--lr F] \
                  [--time-slot N] [--remat] [--state PATH] \
-                 [--save-state PATH] [--report PATH] [--json]"
+                 [--save-state PATH] [--report PATH] [--json] \
+                 [--backend ref|pjrt|auto]"
             );
             Ok(())
         }

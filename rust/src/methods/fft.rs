@@ -1,4 +1,8 @@
 //! Full-parameter fine-tuning (the FFT upper-bound baseline).
+//!
+//! Every parameter is mutated every step, so the execution plan holds
+//! no static bindings — the whole state re-uploads per step (that IS
+//! the method's traffic cost; Table 16's "Other" column shows it).
 
 use std::collections::BTreeMap;
 
@@ -8,11 +12,11 @@ use crate::config::{Method, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
-use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
-use crate::runtime::{Executable, Runtime};
+use crate::methods::{grads_artifact, Driver};
+use crate::runtime::{ExecPlan, Runtime};
 
 pub struct FftDriver {
-    exe: &'static Executable,
+    plan: ExecPlan,
     adam: BTreeMap<String, AdamState>,
     total: usize,
 }
@@ -21,6 +25,7 @@ impl FftDriver {
     pub fn new(rt: &Runtime, tc: &TrainConfig) -> Result<Self> {
         let exe =
             rt.load(&grads_artifact("grads_full", tc.use_remat, rt))?;
+        let plan = ExecPlan::new(exe, &[])?;
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
             beta2: tc.adam_beta2 as f32,
@@ -32,7 +37,7 @@ impl FftDriver {
             adam.insert(name.clone(), AdamState::new(shape, hp));
             total += shape.iter().product::<usize>();
         }
-        Ok(FftDriver { exe, adam, total })
+        Ok(FftDriver { plan, adam, total })
     }
 }
 
@@ -52,12 +57,12 @@ impl Driver for FftDriver {
         _t: usize,
         lr: f64,
     ) -> Result<f64> {
-        let values = base_values(state, batch);
-        let inputs = assemble_inputs(self.exe.spec(), values)?;
-        let out = self.exe.run(&inputs)?;
+        self.plan.bind_params(state)?;
+        self.plan.bind_batch(batch)?;
+        let out = self.plan.run()?;
         let loss = out[0].data[0] as f64;
         for (spec, g) in
-            self.exe.spec().outputs[1..].iter().zip(&out[1..])
+            self.plan.spec().outputs[1..].iter().zip(&out[1..])
         {
             let name = spec.name.strip_prefix("g_").unwrap();
             let adam = self.adam.get_mut(name).unwrap();

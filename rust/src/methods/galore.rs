@@ -16,14 +16,19 @@ use crate::config::{Method, ModelCfg, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
-use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
-use crate::runtime::{Executable, Runtime};
+use crate::methods::{grads_artifact, Driver};
+use crate::runtime::{ExecPlan, Runtime};
 use crate::tensor::svd::left_singular_topk;
 use crate::tensor::Tensor;
 
+/// Parameters GaLore never touches — bound statically; everything
+/// else (the projected linears and the fully-tuned lm_head) re-uploads
+/// each step.
+const FROZEN: [&str; 4] = ["embed", "norm1", "norm2", "norm_f"];
+
 pub struct GaloreDriver {
     cfg: ModelCfg,
-    exe: &'static Executable,
+    plan: ExecPlan,
     rank: usize,
     period: usize,
     /// projector per (kind, layer)
@@ -40,6 +45,7 @@ impl GaloreDriver {
         let cfg = rt.cfg.clone();
         let exe =
             rt.load(&grads_artifact("grads_full", tc.use_remat, rt))?;
+        let plan = ExecPlan::new(exe, &FROZEN)?;
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
             beta2: tc.adam_beta2 as f32,
@@ -49,7 +55,7 @@ impl GaloreDriver {
             AdamState::new(&[cfg.d_model, cfg.vocab], hp);
         Ok(GaloreDriver {
             cfg,
-            exe,
+            plan,
             rank: tc.galore_rank,
             period: tc.galore_period.max(1),
             projectors: BTreeMap::new(),
@@ -83,6 +89,14 @@ impl Driver for GaloreDriver {
         proj + self.cfg.d_model * self.cfg.vocab
     }
 
+    fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
+        // frozen parameters upload once and stay device-resident
+        for name in FROZEN {
+            self.plan.bind_f32(name, state.get(name))?;
+        }
+        Ok(())
+    }
+
     fn step(
         &mut self,
         state: &mut ModelState,
@@ -90,13 +104,16 @@ impl Driver for GaloreDriver {
         t: usize,
         lr: f64,
     ) -> Result<f64> {
-        let values = base_values(state, batch);
-        let inputs = assemble_inputs(self.exe.spec(), values)?;
-        let out = self.exe.run(&inputs)?;
+        for kind in self.cfg.linear_kinds.clone() {
+            self.plan.bind_f32(&kind, state.get(&kind))?;
+        }
+        self.plan.bind_f32("lm_head", state.get("lm_head"))?;
+        self.plan.bind_batch(batch)?;
+        let out = self.plan.run()?;
         let loss = out[0].data[0] as f64;
         let mut grads = BTreeMap::new();
         for (spec, g) in
-            self.exe.spec().outputs[1..].iter().zip(&out[1..])
+            self.plan.spec().outputs[1..].iter().zip(&out[1..])
         {
             grads.insert(
                 spec.name.strip_prefix("g_").unwrap().to_string(),

@@ -16,8 +16,8 @@ use crate::config::{Method, ModelCfg, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
-use crate::methods::{assemble_inputs, base_values, grads_artifact, Driver};
-use crate::runtime::{Executable, HostValue, Runtime};
+use crate::methods::{grads_artifact, Driver};
+use crate::runtime::{ExecPlan, Runtime};
 use crate::tensor::svd::svd;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -26,7 +26,11 @@ pub struct LoraDriver {
     dora: bool,
     pissa: bool,
     cfg: ModelCfg,
-    exe: &'static Executable,
+    /// The whole backbone is frozen during a stage, so every model
+    /// parameter is a static binding — per-step traffic is adapters +
+    /// batch only. (The end-of-stage merge mutates host state after
+    /// the last artifact call, so no re-upload is ever needed.)
+    plan: ExecPlan,
     /// adapter tensors by artifact input name (la_*, lb_*, mag_*)
     adapters: BTreeMap<String, Tensor>,
     adam: BTreeMap<String, AdamState>,
@@ -37,6 +41,9 @@ impl LoraDriver {
         let cfg = rt.cfg.clone();
         let base = if dora { "grads_dora" } else { "grads_lora" };
         let exe = rt.load(&grads_artifact(base, tc.use_remat, rt))?;
+        let param_names: Vec<&str> =
+            cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+        let plan = ExecPlan::new(exe, &param_names)?;
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
             beta2: tc.adam_beta2 as f32,
@@ -77,7 +84,7 @@ impl LoraDriver {
             dora,
             pissa: tc.method == Method::Pissa,
             cfg,
-            exe,
+            plan,
             adapters,
             adam,
         })
@@ -166,6 +173,9 @@ impl Driver for LoraDriver {
                 }
             }
         }
+        // upload the (now final) frozen backbone once; steps bind
+        // only adapters + batch from here on
+        self.plan.bind_params(state)?;
         Ok(())
     }
 
@@ -232,20 +242,19 @@ impl Driver for LoraDriver {
 
     fn step(
         &mut self,
-        state: &mut ModelState,
+        _state: &mut ModelState,
         batch: &Batch,
         _t: usize,
         lr: f64,
     ) -> Result<f64> {
-        let mut values = base_values(state, batch);
         for (name, t) in &self.adapters {
-            values.insert(name.clone(), HostValue::F32(t.clone()));
+            self.plan.bind_f32(name, t)?;
         }
-        let inputs = assemble_inputs(self.exe.spec(), values)?;
-        let out = self.exe.run(&inputs)?;
+        self.plan.bind_batch(batch)?;
+        let out = self.plan.run()?;
         let loss = out[0].data[0] as f64;
         for (spec, g) in
-            self.exe.spec().outputs[1..].iter().zip(&out[1..])
+            self.plan.spec().outputs[1..].iter().zip(&out[1..])
         {
             let name = spec.name.strip_prefix("g_").unwrap();
             let adam = self.adam.get_mut(name).unwrap();

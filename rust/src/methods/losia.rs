@@ -2,10 +2,15 @@
 //!
 //! * **LoSiA** executes the full-gradient artifact every step and
 //!   gathers the subnet slice on the host; importance profiling comes
-//!   free from the already-materialised full gradients.
+//!   free from the already-materialised full gradients. Weights fold
+//!   in place, so every parameter re-uploads per step.
 //! * **LoSiA-Pro** executes the factorized-subnet artifact (whose
-//!   backward runs the L1 Pallas gather-GEMM kernel, Eq. 9) and adds
-//!   one probe call per step *only* during the profiled layer's slot.
+//!   backward runs the L1 Pallas gather-GEMM kernel, Eq. 9). The
+//!   frozen backbone and the (ρ, γ) indices are **static** bindings:
+//!   subnet updates accumulate host-side in the tiny `dws` frame
+//!   (bound per-step) and fold into W only at re-localization — so
+//!   between relocalizations the static re-upload count is exactly 0,
+//!   which is the latency story of the paper's Table 16.
 //!
 //! Both share: asynchronous slot schedule, sensitivity importance EMA,
 //! greedy localization, LR rewarming, compact subnet Adam moments, and
@@ -23,10 +28,8 @@ use crate::coordinator::schedule::AsyncSchedule;
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
 use crate::data::Batch;
-use crate::methods::{
-    assemble_inputs, base_values, grads_artifact, Driver, SelectionEvent,
-};
-use crate::runtime::{Executable, HostValue, Runtime};
+use crate::methods::{grads_artifact, Driver, SelectionEvent};
+use crate::runtime::{ExecPlan, Runtime};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -34,9 +37,14 @@ pub struct LosiaDriver {
     pro: bool,
     cfg: ModelCfg,
     tc: TrainConfig,
-    exe_step: &'static Executable,
+    plan: ExecPlan,
     /// per-layer, per-kind subnet state
     subnets: Vec<BTreeMap<String, SubnetState>>,
+    /// Pro: pending subnet updates in the stacked [L, np, mp] dws
+    /// frame per kind (empty map for the host-gather path)
+    deltas: BTreeMap<String, Tensor>,
+    /// Pro: pending output-layer update in the [d, |γ_out|] frame
+    delta_out: Tensor,
     /// output-layer selected columns γ_out (|γ| = p_o·V)
     lm_sel: Vec<usize>,
     /// Adam over the [d, |γ_out|] output subnet
@@ -53,9 +61,6 @@ pub struct LosiaDriver {
     /// selection events queued for the trainer's observer stream
     /// (drained via `Driver::drain_events`)
     events: Vec<SelectionEvent>,
-    /// cached zero-delta inputs (identical every step — perf: avoids
-    /// re-allocating ~p²·|W| floats per call)
-    zero_deltas: BTreeMap<String, HostValue>,
 }
 
 impl LosiaDriver {
@@ -89,7 +94,26 @@ impl LosiaDriver {
         } else {
             grads_artifact("grads_full", tc.use_remat, rt)
         };
-        let exe_step = rt.load(&step_name)?;
+        let exe = rt.load(&step_name)?;
+        let plan = if pro {
+            // frozen backbone + selection indices live device-side;
+            // dws deltas, probe, and the batch re-bind per step
+            let mut statics: Vec<String> = cfg
+                .params
+                .iter()
+                .map(|(n, _)| n.clone())
+                .collect();
+            for kind in &cfg.linear_kinds {
+                statics.push(format!("rho_{kind}"));
+                statics.push(format!("gamma_{kind}"));
+            }
+            statics.push("gamma_out".into());
+            let refs: Vec<&str> =
+                statics.iter().map(|s| s.as_str()).collect();
+            ExecPlan::new(exe, &refs)?
+        } else {
+            ExecPlan::new(exe, &[])?
+        };
 
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
@@ -156,33 +180,27 @@ impl LosiaDriver {
             time_slot: tc.time_slot,
             enabled: !tc.ablation.no_rewarm,
         };
-        let mut zero_deltas = BTreeMap::new();
+        let mut deltas = BTreeMap::new();
+        let mut delta_out = Tensor::zeros(&[0]);
         if pro {
             for kind in &cfg.linear_kinds {
                 let kd = cfg.kind(kind);
-                zero_deltas.insert(
-                    format!("dws_{kind}"),
-                    HostValue::F32(Tensor::zeros(&[
-                        cfg.n_layers,
-                        kd.np,
-                        kd.mp,
-                    ])),
+                deltas.insert(
+                    kind.clone(),
+                    Tensor::zeros(&[cfg.n_layers, kd.np, kd.mp]),
                 );
             }
-            zero_deltas.insert(
-                "dws_out".into(),
-                HostValue::F32(Tensor::zeros(&[
-                    cfg.d_model,
-                    cfg.vocab_sub,
-                ])),
-            );
+            delta_out =
+                Tensor::zeros(&[cfg.d_model, cfg.vocab_sub]);
         }
         Ok(LosiaDriver {
             pro,
             cfg,
             tc: tc.clone(),
-            exe_step,
+            plan,
             subnets,
+            deltas,
+            delta_out,
             lm_sel,
             lm_adam,
             lm_full_adam,
@@ -192,7 +210,6 @@ impl LosiaDriver {
             rewarmer,
             warmup_steps: 0, // set by the trainer via set_warmup
             events,
-            zero_deltas,
         })
     }
 
@@ -209,39 +226,103 @@ impl LosiaDriver {
         }
     }
 
-    /// Index inputs (rho_*, gamma_*, gamma_out) in ABI shapes.
-    fn index_values(&self) -> BTreeMap<String, HostValue> {
-        let mut map = BTreeMap::new();
-        for kind in &self.cfg.linear_kinds {
-            let kd = self.cfg.kind(kind);
-            let mut rho = Vec::with_capacity(self.cfg.n_layers * kd.np);
+    /// Upload the full stacked (ρ, γ) index set + γ_out (static).
+    fn bind_indices(&mut self) -> Result<()> {
+        for kind in self.cfg.linear_kinds.clone() {
+            let kd = self.cfg.kind(&kind);
+            let mut rho =
+                Vec::with_capacity(self.cfg.n_layers * kd.np);
             let mut gamma =
                 Vec::with_capacity(self.cfg.n_layers * kd.mp);
             for l in 0..self.cfg.n_layers {
-                let sel = &self.subnets[l][kind].sel;
+                let sel = &self.subnets[l][&kind].sel;
                 rho.extend_from_slice(&sel.rho);
                 gamma.extend_from_slice(&sel.gamma);
             }
-            map.insert(
-                format!("rho_{kind}"),
-                HostValue::from_indices(
-                    &[self.cfg.n_layers, kd.np],
-                    &rho,
-                ),
-            );
-            map.insert(
-                format!("gamma_{kind}"),
-                HostValue::from_indices(
-                    &[self.cfg.n_layers, kd.mp],
-                    &gamma,
-                ),
-            );
+            self.plan.bind_indices(
+                &format!("rho_{kind}"),
+                &[self.cfg.n_layers, kd.np],
+                &rho,
+            )?;
+            self.plan.bind_indices(
+                &format!("gamma_{kind}"),
+                &[self.cfg.n_layers, kd.mp],
+                &gamma,
+            )?;
         }
-        map.insert(
-            "gamma_out".into(),
-            HostValue::from_indices(&[self.cfg.vocab_sub], &self.lm_sel),
+        self.plan.bind_indices(
+            "gamma_out",
+            &[self.cfg.vocab_sub],
+            &self.lm_sel,
+        )?;
+        Ok(())
+    }
+
+    /// Current effective weight of one linear: host W plus the pending
+    /// device-frame delta (Pro defers folding until re-localization).
+    fn effective_layer(
+        &self,
+        state: &ModelState,
+        kind: &str,
+        l: usize,
+    ) -> Tensor {
+        let mut w = state.layer(kind, l);
+        if self.pro {
+            let kd = self.cfg.kind(kind);
+            let per = kd.np * kd.mp;
+            let slice = Tensor::from_vec(
+                &[kd.np, kd.mp],
+                self.deltas[kind].data[l * per..(l + 1) * per]
+                    .to_vec(),
+            );
+            let st = &self.subnets[l][kind];
+            w.scatter_add2(&st.sel.rho, &st.sel.gamma, &slice);
+        }
+        w
+    }
+
+    fn effective_lm_head(&self, state: &ModelState) -> Tensor {
+        let mut w = state.get("lm_head").clone();
+        if self.pro {
+            let rho_all: Vec<usize> =
+                (0..self.cfg.d_model).collect();
+            w.scatter_add2(&rho_all, &self.lm_sel, &self.delta_out);
+        }
+        w
+    }
+
+    /// Fold a decoder group's pending deltas into host W (old ρ/γ
+    /// frame) and clear them.
+    fn fold_group(&mut self, state: &mut ModelState, g: usize) {
+        for kind in self.cfg.linear_kinds.clone() {
+            let kd = self.cfg.kind(&kind);
+            let per = kd.np * kd.mp;
+            let (rho, gamma) = {
+                let st = &self.subnets[g][&kind];
+                (st.sel.rho.clone(), st.sel.gamma.clone())
+            };
+            let delta = self.deltas.get_mut(&kind).unwrap();
+            let slice = Tensor::from_vec(
+                &[kd.np, kd.mp],
+                delta.data[g * per..(g + 1) * per].to_vec(),
+            );
+            delta.data[g * per..(g + 1) * per]
+                .iter_mut()
+                .for_each(|x| *x = 0.0);
+            let mut w = state.get_mut(&kind).index_axis0(g);
+            w.scatter_add2(&rho, &gamma, &slice);
+            state.get_mut(&kind).set_axis0(g, &w);
+        }
+    }
+
+    fn fold_out(&mut self, state: &mut ModelState) {
+        let rho_all: Vec<usize> = (0..self.cfg.d_model).collect();
+        state.get_mut("lm_head").scatter_add2(
+            &rho_all,
+            &self.lm_sel,
+            &self.delta_out,
         );
-        map
+        self.delta_out.data.iter_mut().for_each(|x| *x = 0.0);
     }
 
     /// Ensure accumulators exist for group `g`.
@@ -279,6 +360,8 @@ impl LosiaDriver {
     }
 
     /// Fold a profiled layer's full gradients into the accumulators.
+    /// Sensitivity uses the *effective* weights (host W ⊕ pending
+    /// device delta) so Pro's deferred folding cannot skew Eq. 3.
     fn accumulate(
         &mut self,
         g: usize,
@@ -286,33 +369,53 @@ impl LosiaDriver {
         grads: &BTreeMap<String, Tensor>,
     ) {
         self.ensure_accums(g);
+        let weights: BTreeMap<String, Tensor> =
+            if g < self.cfg.n_layers {
+                self.cfg
+                    .linear_kinds
+                    .clone()
+                    .iter()
+                    .map(|k| {
+                        (k.clone(), self.effective_layer(state, k, g))
+                    })
+                    .collect()
+            } else {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "lm_head".to_string(),
+                    self.effective_lm_head(state),
+                );
+                m
+            };
         let Some((_, accums)) = &mut self.accums else {
             unreachable!()
         };
-        if g < self.cfg.n_layers {
-            for kind in &self.cfg.linear_kinds {
-                let w = state.layer(kind, g);
-                let grad = &grads[kind];
-                accums.get_mut(kind).unwrap().update(&w, grad);
-            }
-        } else {
-            accums
-                .get_mut("lm_head")
-                .unwrap()
-                .update(state.get("lm_head"), &grads["lm_head"]);
+        for (kind, w) in &weights {
+            accums.get_mut(kind).unwrap().update(w, &grads[kind]);
         }
     }
 
-    /// Re-localize every matrix of group `g` (Algorithm 2 lines 26–34).
-    fn relocalize(&mut self, g: usize, t: usize) {
+    /// Re-localize every matrix of group `g` (Algorithm 2 lines
+    /// 26–34). Pro folds the pending deltas under the *old* selection
+    /// first, then re-uploads the mutated statics — the only moment
+    /// parameter traffic happens between warmup and finalize.
+    fn relocalize(
+        &mut self,
+        g: usize,
+        t: usize,
+        state: &mut ModelState,
+    ) -> Result<()> {
         let Some((cur, accums)) = self.accums.take() else {
-            return; // no stats accumulated (e.g. ReLO) — keep subnet
+            return Ok(()); // no stats accumulated (e.g. ReLO)
         };
         if cur != g {
             self.accums = Some((cur, accums));
-            return;
+            return Ok(());
         }
         if g < self.cfg.n_layers {
+            if self.pro {
+                self.fold_group(state, g);
+            }
             for kind in self.cfg.linear_kinds.clone() {
                 let kd = self.cfg.kind(&kind);
                 let score = accums[&kind].score();
@@ -327,9 +430,18 @@ impl LosiaDriver {
                 });
                 self.subnets[g].get_mut(&kind).unwrap().relocalize(sel);
             }
+            if self.pro {
+                for kind in self.cfg.linear_kinds.clone() {
+                    self.plan.bind_f32(&kind, state.get(&kind))?;
+                }
+                self.bind_indices()?;
+            }
         } else {
             let score = accums["lm_head"].score();
             let col_imp = score.col_sums();
+            if self.pro {
+                self.fold_out(state);
+            }
             self.lm_sel =
                 localize_columns(&col_imp, self.cfg.vocab_sub);
             self.lm_adam.reset();
@@ -341,7 +453,17 @@ impl LosiaDriver {
                 gamma: self.lm_sel.clone(),
                 initial: false,
             });
+            if self.pro {
+                self.plan
+                    .bind_f32("lm_head", state.get("lm_head"))?;
+                self.plan.bind_indices(
+                    "gamma_out",
+                    &[self.cfg.vocab_sub],
+                    &self.lm_sel,
+                )?;
+            }
         }
+        Ok(())
     }
 
     /// Per-group effective LR = base · rewarm factor (Eq. 8).
@@ -356,22 +478,24 @@ impl LosiaDriver {
 
     /// Run the fused Pro artifact: returns (loss, subnet grads in
     /// delta-ABI order, probe-layer full grads by kind, lm full grad).
+    /// Per-step bindings are the tiny dws frames, the probe index, and
+    /// the batch — the backbone stays device-resident.
     fn run_pro(
-        &self,
-        state: &ModelState,
+        &mut self,
         batch: &Batch,
         probe: usize,
     ) -> Result<(f64, Vec<Tensor>, BTreeMap<String, Tensor>, Tensor)>
     {
-        let mut values = base_values(state, batch);
-        values.extend(self.zero_deltas.clone());
-        values.extend(self.index_values());
-        values.insert(
-            "probe".into(),
-            HostValue::scalar_i32(probe as i32),
-        );
-        let inputs = assemble_inputs(self.exe_step.spec(), values)?;
-        let mut out = self.exe_step.run(&inputs)?;
+        for kind in self.cfg.linear_kinds.clone() {
+            self.plan.bind_f32(
+                &format!("dws_{kind}"),
+                &self.deltas[&kind],
+            )?;
+        }
+        self.plan.bind_f32("dws_out", &self.delta_out)?;
+        self.plan.bind_scalar_i32("probe", probe as i32)?;
+        self.plan.bind_batch(batch)?;
+        let mut out = self.plan.run()?;
         let loss = out[0].data[0] as f64;
         let lm_grad = out.pop().expect("probe_lm_head output");
         let kinds = self.cfg.linear_kinds.len();
@@ -388,17 +512,17 @@ impl LosiaDriver {
 
     /// Run the full-grad artifact and return (loss, grads by name).
     fn run_full(
-        &self,
+        &mut self,
         state: &ModelState,
         batch: &Batch,
     ) -> Result<(f64, BTreeMap<String, Tensor>)> {
-        let values = base_values(state, batch);
-        let inputs = assemble_inputs(self.exe_step.spec(), values)?;
-        let out = self.exe_step.run(&inputs)?;
+        self.plan.bind_params(state)?;
+        self.plan.bind_batch(batch)?;
+        let out = self.plan.run()?;
         let loss = out[0].data[0] as f64;
         let mut grads = BTreeMap::new();
         for (spec, t) in
-            self.exe_step.spec().outputs[1..].iter().zip(&out[1..])
+            self.plan.spec().outputs[1..].iter().zip(&out[1..])
         {
             let name = spec.name.strip_prefix("g_").unwrap();
             grads.insert(name.to_string(), t.clone());
@@ -406,15 +530,23 @@ impl LosiaDriver {
         Ok((loss, grads))
     }
 
-    /// Apply the output-layer subnet update.
+    /// Output-layer Adam step in the [d, |γ_out|] frame: advance the
+    /// moments, return the (negated) delta to add — shared by the Pro
+    /// dws accumulation and the host-gather scatter.
+    fn lm_delta(&mut self, g_out: &Tensor, lr: f32) -> Tensor {
+        let mut upd = self.lm_adam.update(g_out, lr);
+        upd.scale_assign(-1.0);
+        upd
+    }
+
+    /// Apply the output-layer subnet update (host-gather path).
     fn update_lm(
         &mut self,
         state: &mut ModelState,
         g_out: &Tensor,
         lr: f32,
     ) {
-        let mut upd = self.lm_adam.update(g_out, lr);
-        upd.scale_assign(-1.0);
+        let upd = self.lm_delta(g_out, lr);
         let rho_all: Vec<usize> = (0..self.cfg.d_model).collect();
         state
             .get_mut("lm_head")
@@ -437,6 +569,30 @@ impl Driver for LosiaDriver {
 
     fn drain_events(&mut self) -> Vec<SelectionEvent> {
         std::mem::take(&mut self.events)
+    }
+
+    fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
+        if self.pro {
+            // one-time upload of the frozen backbone + indices
+            self.plan.bind_params(state)?;
+            self.bind_indices()?;
+        }
+        Ok(())
+    }
+
+    fn finalize(&mut self, state: &mut ModelState) -> Result<()> {
+        if self.pro {
+            // fold every pending subnet delta into the backbone (the
+            // paper merges before evaluation / the next task), then
+            // refresh the device copy so a reused driver stays
+            // coherent
+            for g in 0..self.cfg.n_layers {
+                self.fold_group(state, g);
+            }
+            self.fold_out(state);
+            self.plan.bind_params(state)?;
+        }
+        Ok(())
     }
 
     fn trainable_params(&self) -> usize {
@@ -475,7 +631,7 @@ impl Driver for LosiaDriver {
             let g = self.sched.profiling_group(t);
             let probe_layer = g.min(self.cfg.n_layers - 1);
             let (l, outs, pg, lmg) =
-                self.run_pro(state, batch, probe_layer)?;
+                self.run_pro(batch, probe_layer)?;
             loss = l;
             subnet_grads = Some(outs);
             probe_grads = Some((pg, lmg));
@@ -547,25 +703,32 @@ impl Driver for LosiaDriver {
         match (&subnet_grads, &full_grads) {
             (Some(outs), _) => {
                 // Pro: outputs follow delta ABI order: dws_<kind>
-                // stacked [L, np, mp], then dws_out.
+                // stacked [L, np, mp], then dws_out. Updates stay in
+                // the dws frame — W is not touched until relocalize.
                 for (ki, kind) in
                     self.cfg.linear_kinds.clone().iter().enumerate()
                 {
                     let stacked = &outs[ki];
+                    let kd = self.cfg.kind(kind);
+                    let per = kd.np * kd.mp;
                     for l in 0..self.cfg.n_layers {
                         let glr = self.group_lr(t, l, lr);
                         let gsub = stacked.index_axis0(l);
-                        let mut w = state.get_mut(kind).index_axis0(l);
-                        self.subnets[l]
+                        let upd = self.subnets[l]
                             .get_mut(kind)
                             .unwrap()
-                            .apply_update(&mut w, &gsub, glr);
-                        state.get_mut(kind).set_axis0(l, &w);
+                            .delta_update(&gsub, glr);
+                        let delta =
+                            self.deltas.get_mut(kind).unwrap();
+                        for (i, v) in upd.data.iter().enumerate() {
+                            delta.data[l * per + i] += v;
+                        }
                     }
                 }
                 let g_out = &outs[self.cfg.linear_kinds.len()];
                 let glr = self.group_lr(t, self.cfg.n_layers, lr);
-                self.update_lm(state, g_out, glr);
+                let upd = self.lm_delta(g_out, glr);
+                self.delta_out.add_assign(&upd);
             }
             (_, Some(grads)) => {
                 // LoSiA: gather subnet slices from full gradients
@@ -611,7 +774,7 @@ impl Driver for LosiaDriver {
             } else {
                 for g in 0..groups {
                     if self.sched.action(t, g).relocalize {
-                        self.relocalize(g, t);
+                        self.relocalize(g, t, state)?;
                     }
                 }
             }

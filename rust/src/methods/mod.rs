@@ -10,14 +10,12 @@ pub mod galore;
 pub mod lora;
 pub mod losia;
 
-use std::collections::BTreeMap;
-
 use anyhow::Result;
 
-use crate::config::{ArtifactSpec, Method, TrainConfig};
+use crate::config::{Method, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::data::Batch;
-use crate::runtime::{HostValue, Runtime};
+use crate::runtime::Runtime;
 
 /// A subnet selection installed by a driver — the event behind the
 /// Figure 3/7 selection analyses. Drivers queue these and the trainer
@@ -98,55 +96,6 @@ pub fn build_driver(
         Method::Galore => Box::new(galore::GaloreDriver::new(rt, tc)?),
         Method::Fft => Box::new(fft::FftDriver::new(rt, tc)?),
     })
-}
-
-/// Assemble artifact inputs by manifest name from a value map. ABI
-/// drift (missing or unused inputs) is a typed error that names the
-/// artifact and lists its manifest signature, so it surfaces through
-/// the session builder instead of panicking mid-step.
-pub fn assemble_inputs(
-    spec: &ArtifactSpec,
-    mut values: BTreeMap<String, HostValue>,
-) -> Result<Vec<HostValue>> {
-    let mut out = Vec::with_capacity(spec.inputs.len());
-    for i in &spec.inputs {
-        let v = values.remove(&i.name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "artifact {:?}: missing input {:?} (manifest inputs: \
-                 {:?})",
-                spec.name,
-                i.name,
-                spec.inputs
-                    .iter()
-                    .map(|s| s.name.as_str())
-                    .collect::<Vec<_>>()
-            )
-        })?;
-        out.push(v);
-    }
-    anyhow::ensure!(
-        values.is_empty(),
-        "artifact {:?}: unused inputs {:?}",
-        spec.name,
-        values.keys().collect::<Vec<_>>()
-    );
-    Ok(out)
-}
-
-/// Common helper: params + batch into the value map.
-pub fn base_values(
-    state: &ModelState,
-    batch: &Batch,
-) -> BTreeMap<String, HostValue> {
-    let mut map = BTreeMap::new();
-    for (name, t) in &state.params {
-        map.insert(name.clone(), HostValue::F32(t.clone()));
-    }
-    let b = batch.as_inputs();
-    map.insert("tokens".into(), b[0].clone());
-    map.insert("targets".into(), b[1].clone());
-    map.insert("mask".into(), b[2].clone());
-    map
 }
 
 /// Pick the plain or remat train-step artifact name.

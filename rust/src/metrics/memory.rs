@@ -184,11 +184,11 @@ pub fn activation_bytes(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::load_manifest;
+    use crate::config::resolve_config;
     use crate::runtime::artifacts_dir;
 
     fn cfg() -> ModelCfg {
-        load_manifest(&artifacts_dir(), "tiny").unwrap()
+        resolve_config(&artifacts_dir(), "tiny").unwrap()
     }
 
     #[test]

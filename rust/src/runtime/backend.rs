@@ -1,0 +1,824 @@
+//! Backend-abstracted execution: the [`Backend`] trait, device-resident
+//! input buffers, typed [`ExecPlan`]s, and the [`Runtime`] cache.
+//!
+//! The old execution model cloned every parameter tensor into a
+//! `BTreeMap<String, HostValue>` each step, re-converted each entry to
+//! a backend literal on every call, and copied every output back to
+//! host — even for frozen backbone weights that never change between
+//! relocalizations. The redesigned model splits that into:
+//!
+//! * [`Backend`] — compiles/interprets one artifact ([`Executor`]) and
+//!   allocates its input storage ([`DeviceBuffers`]). Two backends
+//!   exist: the PJRT/XLA path ([`crate::runtime::PjrtBackend`]) and a
+//!   pure-Rust interpreter ([`crate::runtime::RefBackend`]) that needs
+//!   no lowered artifacts.
+//! * [`ExecPlan`] — a typed plan over one executable. Inputs are
+//!   resolved by manifest name at bind time and marked **static**
+//!   (uploaded once, re-uploaded only when the caller mutates them —
+//!   e.g. on LoSiA relocalization or a LoRA merge) or **per-step**
+//!   (batch tensors, subnet deltas). Static buffers persist across
+//!   `run()` calls; per-step bindings are cleared after every run so a
+//!   stale batch is an error instead of silent training on old data.
+//! * [`ExecStats`] — atomic per-artifact counters (calls, wall time,
+//!   static/per-step upload counts) surfaced through the observer
+//!   event stream ([`crate::session::observer::ExecEvent`]).
+//!
+//! ## The static-binding invalidation contract
+//!
+//! A static binding reflects the host value **at bind time**. Mutating
+//! the host tensor afterwards does NOT propagate: callers must re-bind
+//! the input, and `ExecStats::static_uploads` counts exactly those
+//! re-binds. Drivers rely on this to make the per-step hot path
+//! upload-free for frozen parameters; the unit tests in this module
+//! pin the contract (a stale static binding keeps executing the old
+//! value — the "silently train on old weights" bug is caught by
+//! asserting upload counts, not by guesswork).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ArtifactSpec, Dtype, ModelCfg, TensorSpec};
+use crate::coordinator::state::ModelState;
+use crate::data::Batch;
+use crate::runtime::host::HostValue;
+use crate::tensor::Tensor;
+
+// ------------------------------------------------------------- bindings
+
+/// Who re-binds an input slot: `Static` survives across `run()` calls,
+/// `PerStep` must be re-bound before every call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BindingKind {
+    Static,
+    PerStep,
+}
+
+/// A borrowed host tensor crossing into a backend — the upload-side
+/// twin of [`HostValue`], without the allocation.
+#[derive(Debug, Clone, Copy)]
+pub enum HostRef<'a> {
+    F32 { shape: &'a [usize], data: &'a [f32] },
+    I32 { shape: &'a [usize], data: &'a [i32] },
+}
+
+impl<'a> HostRef<'a> {
+    pub fn tensor(t: &'a Tensor) -> Self {
+        HostRef::F32 {
+            shape: &t.shape,
+            data: &t.data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostRef::F32 { shape, .. } => shape,
+            HostRef::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostRef::F32 { .. } => Dtype::F32,
+            HostRef::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    /// Validate against a manifest input spec (shape + dtype).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        anyhow::ensure!(
+            self.shape() == spec.shape.as_slice(),
+            "input {:?}: shape {:?} != manifest {:?}",
+            spec.name,
+            self.shape(),
+            spec.shape
+        );
+        anyhow::ensure!(
+            self.dtype() == spec.dtype,
+            "input {:?}: dtype {:?} != manifest {:?}",
+            spec.name,
+            self.dtype(),
+            spec.dtype
+        );
+        Ok(())
+    }
+
+    /// Owned copy (the reference backend's "device" representation).
+    pub fn to_host_value(&self) -> HostValue {
+        match self {
+            HostRef::F32 { shape, data } => HostValue::F32(
+                Tensor::from_vec(shape, data.to_vec()),
+            ),
+            HostRef::I32 { shape, data } => HostValue::I32 {
+                shape: shape.to_vec(),
+                data: data.to_vec(),
+            },
+        }
+    }
+}
+
+impl<'a> From<&'a HostValue> for HostRef<'a> {
+    fn from(v: &'a HostValue) -> Self {
+        match v {
+            HostValue::F32(t) => HostRef::tensor(t),
+            HostValue::I32 { shape, data } => HostRef::I32 {
+                shape,
+                data,
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------- stats
+
+/// Cumulative per-artifact execution counters. Atomics (not `Cell`) so
+/// executables can be shared via `Arc` across plans and observers.
+#[derive(Debug, Default)]
+pub struct ExecStats {
+    calls: AtomicU64,
+    nanos: AtomicU64,
+    static_uploads: AtomicU64,
+    step_uploads: AtomicU64,
+}
+
+impl ExecStats {
+    pub fn snapshot(&self) -> ExecSnapshot {
+        ExecSnapshot {
+            calls: self.calls.load(Ordering::Relaxed),
+            nanos: self.nanos.load(Ordering::Relaxed),
+            static_uploads: self.static_uploads.load(Ordering::Relaxed),
+            step_uploads: self.step_uploads.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+        self.nanos.store(0, Ordering::Relaxed);
+        self.static_uploads.store(0, Ordering::Relaxed);
+        self.step_uploads.store(0, Ordering::Relaxed);
+    }
+
+    fn record_exec(&self, nanos: u64) {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    fn record_upload(&self, kind: BindingKind) {
+        match kind {
+            BindingKind::Static => {
+                self.static_uploads.fetch_add(1, Ordering::Relaxed)
+            }
+            BindingKind::PerStep => {
+                self.step_uploads.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+    }
+}
+
+/// A point-in-time copy of [`ExecStats`], also used for deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecSnapshot {
+    pub calls: u64,
+    pub nanos: u64,
+    pub static_uploads: u64,
+    pub step_uploads: u64,
+}
+
+impl ExecSnapshot {
+    /// Counter movement since `prev` (saturating, so a reset between
+    /// snapshots reads as zero instead of wrapping).
+    pub fn delta_since(&self, prev: &ExecSnapshot) -> ExecSnapshot {
+        ExecSnapshot {
+            calls: self.calls.saturating_sub(prev.calls),
+            nanos: self.nanos.saturating_sub(prev.nanos),
+            static_uploads: self
+                .static_uploads
+                .saturating_sub(prev.static_uploads),
+            step_uploads: self
+                .step_uploads
+                .saturating_sub(prev.step_uploads),
+        }
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.nanos as f64 / 1e9
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.total_secs() / self.calls.max(1) as f64
+    }
+}
+
+// --------------------------------------------------------------- traits
+
+/// Backend-owned input storage for one executable — the "device
+/// buffers". Slot indices follow the artifact manifest input order.
+pub trait DeviceBuffers {
+    /// Copy one host value into input slot `slot`.
+    fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()>;
+
+    /// Execute over the uploaded inputs; outputs in manifest order.
+    fn execute(&mut self) -> Result<Vec<Tensor>>;
+}
+
+/// One compiled (PJRT) or interpreted (reference) artifact.
+pub trait Executor {
+    fn alloc_buffers(&self) -> Box<dyn DeviceBuffers>;
+}
+
+/// A family of executors sharing one device/client.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Compile or otherwise prepare one artifact for execution.
+    fn prepare(
+        &self,
+        cfg: &ModelCfg,
+        spec: &ArtifactSpec,
+    ) -> Result<Box<dyn Executor>>;
+}
+
+// ----------------------------------------------------------- executable
+
+/// An artifact bound to its manifest signature, shareable via `Arc`
+/// (droppable — no more `Box::leak` — and stats are atomic).
+pub struct Executable {
+    spec: ArtifactSpec,
+    backend: &'static str,
+    exec: Box<dyn Executor>,
+    stats: ExecStats,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn backend(&self) -> &'static str {
+        self.backend
+    }
+
+    /// Cumulative counters. For per-stage isolation diff snapshots
+    /// (`ExecSnapshot::delta_since`) instead of resetting — the
+    /// trainer's exec tracker is continuously diffing these.
+    pub fn stats(&self) -> ExecSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// One-shot execution with positional, shape/dtype-checked inputs
+    /// in manifest order. Allocates fresh buffers per call — use an
+    /// [`ExecPlan`] on hot paths.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact {:?}: {} inputs given, manifest wants {} ({})",
+            self.spec.name,
+            inputs.len(),
+            self.spec.inputs.len(),
+            self.spec.signature()
+        );
+        let mut bufs = self.exec.alloc_buffers();
+        for (i, (hv, ispec)) in
+            inputs.iter().zip(&self.spec.inputs).enumerate()
+        {
+            let r = HostRef::from(hv);
+            r.check(ispec).with_context(|| {
+                format!(
+                    "artifact {:?} ({})",
+                    self.spec.name,
+                    self.spec.signature()
+                )
+            })?;
+            bufs.upload(i, r)?;
+            self.stats.record_upload(BindingKind::PerStep);
+        }
+        let t0 = Instant::now();
+        let out = bufs.execute()?;
+        self.stats.record_exec(t0.elapsed().as_nanos() as u64);
+        self.check_outputs(&out)?;
+        Ok(out)
+    }
+
+    fn check_outputs(&self, out: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == self.spec.outputs.len(),
+            "artifact {:?}: got {} outputs, manifest wants {}",
+            self.spec.name,
+            out.len(),
+            self.spec.outputs.len()
+        );
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ exec plan
+
+/// A typed execution plan: named bindings against one executable's
+/// manifest, with static inputs held device-side across steps.
+pub struct ExecPlan {
+    exe: Arc<Executable>,
+    bufs: Box<dyn DeviceBuffers>,
+    index: BTreeMap<String, usize>,
+    kinds: Vec<BindingKind>,
+    bound: Vec<bool>,
+}
+
+impl ExecPlan {
+    /// Build a plan, declaring which manifest inputs are static. Every
+    /// name must exist in the manifest — ABI drift fails at plan-build
+    /// time with the full signature, not mid-step.
+    pub fn new(
+        exe: Arc<Executable>,
+        static_inputs: &[&str],
+    ) -> Result<ExecPlan> {
+        let spec = exe.spec();
+        let index: BTreeMap<String, usize> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.clone(), i))
+            .collect();
+        let mut kinds = vec![BindingKind::PerStep; spec.inputs.len()];
+        for name in static_inputs {
+            let i = *index.get(*name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {:?}: static binding {:?} is not a \
+                     manifest input ({})",
+                    spec.name,
+                    name,
+                    spec.signature()
+                )
+            })?;
+            kinds[i] = BindingKind::Static;
+        }
+        let bound = vec![false; spec.inputs.len()];
+        let bufs = exe.exec.alloc_buffers();
+        Ok(ExecPlan {
+            exe,
+            bufs,
+            index,
+            kinds,
+            bound,
+        })
+    }
+
+    pub fn executable(&self) -> &Arc<Executable> {
+        &self.exe
+    }
+
+    pub fn spec(&self) -> &ArtifactSpec {
+        self.exe.spec()
+    }
+
+    pub fn has_input(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn is_static(&self, name: &str) -> bool {
+        self.index
+            .get(name)
+            .map(|&i| self.kinds[i] == BindingKind::Static)
+            .unwrap_or(false)
+    }
+
+    pub fn is_bound(&self, name: &str) -> bool {
+        self.index
+            .get(name)
+            .map(|&i| self.bound[i])
+            .unwrap_or(false)
+    }
+
+    /// Upload one named input. Static slots persist until re-bound;
+    /// per-step slots are consumed by the next [`ExecPlan::run`].
+    pub fn bind(&mut self, name: &str, value: HostRef<'_>) -> Result<()> {
+        let spec = self.exe.spec();
+        let i = *self.index.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {:?}: no input named {:?} ({})",
+                spec.name,
+                name,
+                spec.signature()
+            )
+        })?;
+        value.check(&spec.inputs[i]).with_context(|| {
+            format!(
+                "artifact {:?} ({})",
+                spec.name,
+                spec.signature()
+            )
+        })?;
+        self.bufs.upload(i, value)?;
+        self.exe.stats.record_upload(self.kinds[i]);
+        self.bound[i] = true;
+        Ok(())
+    }
+
+    pub fn bind_f32(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        self.bind(name, HostRef::tensor(t))
+    }
+
+    pub fn bind_i32(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        data: &[i32],
+    ) -> Result<()> {
+        self.bind(name, HostRef::I32 { shape, data })
+    }
+
+    pub fn bind_scalar_i32(&mut self, name: &str, v: i32) -> Result<()> {
+        let data = [v];
+        self.bind(
+            name,
+            HostRef::I32 {
+                shape: &[],
+                data: &data,
+            },
+        )
+    }
+
+    /// Index-vector upload (ρ/γ selections) in ABI i32 form.
+    pub fn bind_indices(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        idx: &[usize],
+    ) -> Result<()> {
+        let data: Vec<i32> = idx.iter().map(|&i| i as i32).collect();
+        self.bind_i32(name, shape, &data)
+    }
+
+    /// Bind every model parameter the manifest declares, by name.
+    pub fn bind_params(&mut self, state: &ModelState) -> Result<()> {
+        for (name, t) in &state.params {
+            if self.has_input(name) {
+                self.bind_f32(name, t)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bind the batch inputs the manifest declares (`tokens`, and
+    /// `targets`/`mask` where present — `fwd_logits` takes neither).
+    pub fn bind_batch(&mut self, batch: &Batch) -> Result<()> {
+        let shape = [batch.batch, batch.seq];
+        self.bind_i32("tokens", &shape, &batch.tokens)?;
+        if self.has_input("targets") {
+            self.bind_i32("targets", &shape, &batch.targets)?;
+        }
+        if self.has_input("mask") {
+            self.bind(
+                "mask",
+                HostRef::F32 {
+                    shape: &shape,
+                    data: &batch.mask,
+                },
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Execute. Every input must be bound; per-step bindings are
+    /// cleared afterwards so the next run demands fresh ones.
+    pub fn run(&mut self) -> Result<Vec<Tensor>> {
+        let spec = self.exe.spec();
+        let unbound: Vec<&str> = spec
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.bound[*i])
+            .map(|(_, s)| s.name.as_str())
+            .collect();
+        anyhow::ensure!(
+            unbound.is_empty(),
+            "artifact {:?}: unbound inputs {:?} ({})",
+            spec.name,
+            unbound,
+            spec.signature()
+        );
+        let t0 = Instant::now();
+        let out = self.bufs.execute()?;
+        self.exe
+            .stats
+            .record_exec(t0.elapsed().as_nanos() as u64);
+        for (i, kind) in self.kinds.iter().enumerate() {
+            if *kind == BindingKind::PerStep {
+                self.bound[i] = false;
+            }
+        }
+        self.exe.check_outputs(&out)?;
+        Ok(out)
+    }
+}
+
+// -------------------------------------------------------------- runtime
+
+/// Which backend `Runtime::from_config_name` should build, from the
+/// `LOSIA_BACKEND` env var (`ref`, `pjrt`, or `auto`/unset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    Auto,
+    Reference,
+    Pjrt,
+}
+
+pub fn backend_choice() -> BackendChoice {
+    match std::env::var("LOSIA_BACKEND")
+        .unwrap_or_default()
+        .to_ascii_lowercase()
+        .as_str()
+    {
+        "" | "auto" => BackendChoice::Auto,
+        "ref" | "reference" => BackendChoice::Reference,
+        "pjrt" | "xla" => BackendChoice::Pjrt,
+        other => {
+            eprintln!(
+                "[runtime] unknown LOSIA_BACKEND={other:?} \
+                 (expected ref|pjrt|auto); using auto"
+            );
+            BackendChoice::Auto
+        }
+    }
+}
+
+/// Backend handle + per-config compiled-executable cache.
+pub struct Runtime {
+    pub cfg: ModelCfg,
+    backend: Box<dyn Backend>,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// PJRT runtime over an already-loaded config (back-compat entry).
+    pub fn new(cfg: ModelCfg) -> Result<Self> {
+        Ok(Self::with_backend(
+            cfg,
+            Box::new(crate::runtime::PjrtBackend::new()?),
+        ))
+    }
+
+    pub fn with_backend(
+        cfg: ModelCfg,
+        backend: Box<dyn Backend>,
+    ) -> Self {
+        Runtime {
+            cfg,
+            backend,
+            cache: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Load from the default artifacts directory, honouring
+    /// `LOSIA_BACKEND`. In `auto` mode the PJRT/XLA path is used when
+    /// lowered artifacts exist and the pure-Rust reference backend
+    /// (with built-in config shapes) otherwise, so tests and CI run
+    /// without `make artifacts`.
+    pub fn from_config_name(name: &str) -> Result<Self> {
+        let dir = crate::runtime::artifacts_dir();
+        Self::from_config_dir(&dir, name)
+    }
+
+    pub fn from_config_dir(dir: &Path, name: &str) -> Result<Self> {
+        match backend_choice() {
+            BackendChoice::Reference => {
+                let cfg = crate::config::resolve_config(dir, name)?;
+                Ok(Self::with_backend(
+                    cfg,
+                    Box::new(crate::runtime::RefBackend),
+                ))
+            }
+            BackendChoice::Pjrt => {
+                let cfg = crate::config::load_manifest(dir, name)?;
+                Self::new(cfg)
+            }
+            BackendChoice::Auto => {
+                if dir.join("manifest.json").exists() {
+                    let cfg = crate::config::load_manifest(dir, name)?;
+                    Self::new(cfg)
+                } else {
+                    eprintln!(
+                        "[runtime] no artifact manifest under {}; \
+                         using the pure-Rust reference backend \
+                         (run `make artifacts` + LOSIA_BACKEND=pjrt \
+                         for the XLA path)",
+                        dir.display()
+                    );
+                    let cfg =
+                        crate::config::builtin_config(name, dir)?;
+                    Ok(Self::with_backend(
+                        cfg,
+                        Box::new(crate::runtime::RefBackend),
+                    ))
+                }
+            }
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Prepare (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.cfg.try_artifact(name)?.clone();
+        let exec = self.backend.prepare(&self.cfg, &spec)?;
+        let exe = Arc::new(Executable {
+            spec,
+            backend: self.backend.name(),
+            exec,
+            stats: ExecStats::default(),
+        });
+        cache.insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Cumulative exec stats for every artifact touched so far.
+    pub fn exec_snapshots(&self) -> Vec<(String, ExecSnapshot)> {
+        self.cache
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (k.clone(), e.stats.snapshot()))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RefBackend;
+    use crate::util::rng::Rng;
+
+    fn ref_runtime() -> Runtime {
+        let dir = crate::runtime::artifacts_dir();
+        let cfg = crate::config::resolve_config(&dir, "tiny")
+            .expect("tiny config");
+        Runtime::with_backend(cfg, Box::new(RefBackend))
+    }
+
+    fn bind_all(
+        plan: &mut ExecPlan,
+        state: &ModelState,
+        batch: &Batch,
+    ) {
+        plan.bind_params(state).unwrap();
+        plan.bind_batch(batch).unwrap();
+    }
+
+    fn tiny_batch(rt: &Runtime) -> Batch {
+        let (b, s) = (rt.cfg.batch, rt.cfg.seq_len);
+        Batch {
+            tokens: (0..b * s).map(|i| (i % 7) as i32).collect(),
+            targets: (0..b * s).map(|i| (i % 5) as i32).collect(),
+            mask: vec![1.0; b * s],
+            batch: b,
+            seq: s,
+        }
+    }
+
+    #[test]
+    fn unknown_static_name_fails_with_signature() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let err = ExecPlan::new(exe, &["not-an-input"]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("not-an-input"), "{msg}");
+        assert!(msg.contains("tokens"), "{msg}");
+    }
+
+    #[test]
+    fn run_requires_every_binding_and_lists_missing() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut plan = ExecPlan::new(exe, &[]).unwrap();
+        let mut rng = Rng::new(0);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        plan.bind_params(&state).unwrap();
+        let err = plan.run().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unbound"), "{msg}");
+        assert!(msg.contains("tokens"), "{msg}");
+    }
+
+    #[test]
+    fn per_step_bindings_are_consumed_by_run() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan = ExecPlan::new(exe, &param_names).unwrap();
+        let mut rng = Rng::new(1);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        bind_all(&mut plan, &state, &batch);
+        plan.run().unwrap();
+        // statics persist, the batch does not
+        assert!(plan.is_bound("embed"));
+        assert!(!plan.is_bound("tokens"));
+        let err = plan.run().unwrap_err();
+        assert!(format!("{err:#}").contains("tokens"));
+        plan.bind_batch(&batch).unwrap();
+        plan.run().unwrap();
+    }
+
+    #[test]
+    fn stale_static_binding_keeps_old_value_until_rebound() {
+        // The invalidation contract: mutating host state does NOT
+        // reach the device until the caller re-binds. A driver that
+        // forgot to re-bind would silently train on old weights —
+        // this test pins the semantics the drivers build on.
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan =
+            ExecPlan::new(Arc::clone(&exe), &param_names).unwrap();
+        let mut rng = Rng::new(2);
+        let mut state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        bind_all(&mut plan, &state, &batch);
+        let before = plan.run().unwrap();
+
+        // mutate the host lm_head; device copy must be unaffected
+        state.get_mut("lm_head").scale_assign(0.0);
+        plan.bind_batch(&batch).unwrap();
+        let stale = plan.run().unwrap();
+        assert_eq!(before[0].data, stale[0].data, "static was re-read");
+
+        let s0 = exe.stats();
+        plan.bind_f32("lm_head", state.get("lm_head")).unwrap();
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.static_uploads, 1);
+        assert_eq!(d.step_uploads, 0);
+        plan.bind_batch(&batch).unwrap();
+        let fresh = plan.run().unwrap();
+        assert_ne!(
+            before[0].data, fresh[0].data,
+            "re-bound static had no effect"
+        );
+    }
+
+    #[test]
+    fn upload_counters_split_static_and_per_step() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut plan =
+            ExecPlan::new(Arc::clone(&exe), &["embed"]).unwrap();
+        let mut rng = Rng::new(3);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        let s0 = exe.stats();
+        bind_all(&mut plan, &state, &batch);
+        plan.run().unwrap();
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.calls, 1);
+        assert_eq!(d.static_uploads, 1, "embed only");
+        // 11 remaining params + tokens/targets/mask
+        assert_eq!(d.step_uploads, 14, "{d:?}");
+
+        // steady state: rebind only the per-step inputs — zero static
+        // traffic
+        let s1 = exe.stats();
+        for (n, t) in &state.params {
+            if n != "embed" {
+                plan.bind_f32(n, t).unwrap();
+            }
+        }
+        plan.bind_batch(&batch).unwrap();
+        plan.run().unwrap();
+        let d = exe.stats().delta_since(&s1);
+        assert_eq!(d.static_uploads, 0);
+        assert_eq!(d.step_uploads, 14);
+    }
+
+    #[test]
+    fn shape_mismatch_names_artifact_and_signature() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut plan = ExecPlan::new(exe, &[]).unwrap();
+        let bad = Tensor::zeros(&[3, 3]);
+        let err = plan.bind_f32("embed", &bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fwd_loss"), "{msg}");
+        assert!(msg.contains("shape"), "{msg}");
+        assert!(msg.contains("inputs:"), "{msg}");
+    }
+}

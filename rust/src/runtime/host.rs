@@ -47,54 +47,44 @@ impl HostValue {
         }
     }
 
-    pub fn as_f32(&self) -> &Tensor {
+    /// Borrow the f32 tensor; dtype mismatch is a typed error naming
+    /// the actual shape/dtype instead of a panic mid-step.
+    pub fn as_f32(&self) -> Result<&Tensor> {
         match self {
-            HostValue::F32(t) => t,
-            _ => panic!("expected f32 value"),
+            HostValue::F32(t) => Ok(t),
+            HostValue::I32 { shape, .. } => bail!(
+                "expected an f32 value, got i32 with shape {shape:?}"
+            ),
         }
     }
 
-    pub fn into_f32(self) -> Tensor {
+    /// Take the f32 tensor by value (same contract as [`Self::as_f32`]).
+    pub fn into_f32(self) -> Result<Tensor> {
         match self {
-            HostValue::F32(t) => t,
-            _ => panic!("expected f32 value"),
+            HostValue::F32(t) => Ok(t),
+            HostValue::I32 { shape, .. } => bail!(
+                "expected an f32 value, got i32 with shape {shape:?}"
+            ),
         }
     }
 
-    /// Validate against a manifest spec (shape + dtype).
+    /// Borrow the i32 payload; dtype mismatch is a typed error.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            HostValue::F32(t) => bail!(
+                "expected an i32 value, got f32 with shape {:?}",
+                t.shape
+            ),
+        }
+    }
+
+    /// Validate against a manifest spec (shape + dtype). One
+    /// implementation shared with the borrowed upload path
+    /// ([`crate::runtime::HostRef::check`]); plan-level binds wrap the
+    /// error with the artifact's full manifest signature.
     pub fn check(&self, spec: &TensorSpec) -> Result<()> {
-        if self.shape() != spec.shape.as_slice() {
-            bail!(
-                "input {:?}: shape {:?} != manifest {:?}",
-                spec.name,
-                self.shape(),
-                spec.shape
-            );
-        }
-        if self.dtype() != spec.dtype {
-            bail!(
-                "input {:?}: dtype {:?} != manifest {:?}",
-                spec.name,
-                self.dtype(),
-                spec.dtype
-            );
-        }
-        Ok(())
-    }
-
-    /// Convert to an XLA literal (reshaped to the target rank).
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> =
-            self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            HostValue::F32(t) => {
-                xla::Literal::vec1(&t.data).reshape(&dims)?
-            }
-            HostValue::I32 { data, .. } => {
-                xla::Literal::vec1(data).reshape(&dims)?
-            }
-        };
-        Ok(lit)
+        crate::runtime::HostRef::from(self).check(spec)
     }
 
     /// Read an f32 literal back into a [`Tensor`] with the given shape.
@@ -137,6 +127,18 @@ mod tests {
         assert!(bad_shape.check(&spec).is_err());
         let bad_dtype = HostValue::from_indices(&[2, 3], &[0; 6]);
         assert!(bad_dtype.check(&spec).is_err());
+    }
+
+    #[test]
+    fn typed_accessors_return_errors_not_panics() {
+        let f = HostValue::F32(Tensor::zeros(&[2]));
+        assert!(f.as_f32().is_ok());
+        assert!(f.as_i32().is_err());
+        let i = HostValue::scalar_i32(3);
+        assert!(i.as_i32().is_ok());
+        let err = i.as_f32().unwrap_err().to_string();
+        assert!(err.contains("i32"), "{err}");
+        assert!(i.into_f32().is_err());
     }
 
     #[test]

@@ -1,14 +1,32 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Backend-abstracted runtime: load artifacts and execute them through
+//! a pluggable [`Backend`].
 //!
-//! The interchange format is HLO *text* (see `python/compile/aot.py`);
-//! `xla::HloModuleProto::from_text_file` reassigns instruction ids so
-//! jax ≥ 0.5 modules round-trip into xla_extension 0.5.1 cleanly.
+//! Two backends ship in-tree (see `src/runtime/README.md` for the
+//! architecture notes):
+//!
+//! * [`PjrtBackend`] — the PJRT/XLA path over AOT-compiled HLO-text
+//!   artifacts (see `python/compile/aot.py`);
+//!   `xla::HloModuleProto::from_text_file` reassigns instruction ids
+//!   so jax ≥ 0.5 modules round-trip into xla_extension 0.5.1 cleanly.
+//! * [`RefBackend`] — a pure-Rust interpreter over the dense tensor
+//!   ops, used by tests/CI (no lowered artifacts required) and as the
+//!   automatic fallback when no manifest is present.
+//!
+//! Selection: `LOSIA_BACKEND=ref|pjrt|auto` (default `auto`).
 
-pub mod exec;
+pub mod backend;
 pub mod host;
+pub mod pjrt;
+pub mod reference;
 
-pub use exec::{Executable, Runtime};
+pub use backend::{
+    backend_choice, Backend, BackendChoice, BindingKind, DeviceBuffers,
+    ExecPlan, ExecSnapshot, ExecStats, Executable, Executor, HostRef,
+    Runtime,
+};
 pub use host::HostValue;
+pub use pjrt::PjrtBackend;
+pub use reference::RefBackend;
 
 use std::path::PathBuf;
 

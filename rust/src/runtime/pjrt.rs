@@ -1,0 +1,143 @@
+//! PJRT/XLA backend: compiles AOT-lowered HLO-text artifacts with a
+//! PJRT CPU client and executes them.
+//!
+//! Input slots hold `xla::Literal`s — the host→device conversion
+//! happens once per [`crate::runtime::ExecPlan::bind`], so static
+//! bindings (frozen parameters) cost nothing on the per-step path.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ArtifactSpec, ModelCfg};
+use crate::runtime::backend::{
+    Backend, DeviceBuffers, Executor, HostRef,
+};
+use crate::runtime::host::HostValue;
+use crate::tensor::Tensor;
+
+/// The PJRT CPU client shared by every executor it prepares.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(
+        &self,
+        cfg: &ModelCfg,
+        spec: &ArtifactSpec,
+    ) -> Result<Box<dyn Executor>> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().unwrap(),
+        )
+        .with_context(|| format!("loading {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {:?}", spec.name))?;
+        eprintln!(
+            "[runtime] compiled {}/{} in {:.2}s",
+            cfg.name,
+            spec.name,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Box::new(PjrtExecutor {
+            exe: Arc::new(exe),
+            spec: Arc::new(spec.clone()),
+        }))
+    }
+}
+
+struct PjrtExecutor {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    spec: Arc<ArtifactSpec>,
+}
+
+impl Executor for PjrtExecutor {
+    fn alloc_buffers(&self) -> Box<dyn DeviceBuffers> {
+        let slots =
+            (0..self.spec.inputs.len()).map(|_| None).collect();
+        Box::new(PjrtBuffers {
+            exe: Arc::clone(&self.exe),
+            spec: Arc::clone(&self.spec),
+            slots,
+        })
+    }
+}
+
+struct PjrtBuffers {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    spec: Arc<ArtifactSpec>,
+    slots: Vec<Option<xla::Literal>>,
+}
+
+fn to_literal(value: HostRef<'_>) -> Result<xla::Literal> {
+    let dims: Vec<i64> =
+        value.shape().iter().map(|&d| d as i64).collect();
+    let lit = match value {
+        HostRef::F32 { data, .. } => {
+            xla::Literal::vec1(data).reshape(&dims)?
+        }
+        HostRef::I32 { data, .. } => {
+            xla::Literal::vec1(data).reshape(&dims)?
+        }
+    };
+    Ok(lit)
+}
+
+impl DeviceBuffers for PjrtBuffers {
+    fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()> {
+        self.slots[slot] = Some(to_literal(value)?);
+        Ok(())
+    }
+
+    fn execute(&mut self) -> Result<Vec<Tensor>> {
+        let mut literals = Vec::with_capacity(self.slots.len());
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            literals.push(slot.take().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {:?}: input slot {i} ({:?}) was never \
+                     uploaded",
+                    self.spec.name,
+                    self.spec.inputs[i].name
+                )
+            })?);
+        }
+        let run = self.exe.execute::<xla::Literal>(&literals);
+        // return the literals to their slots before error handling so
+        // static bindings survive a failed execute
+        for (slot, lit) in self.slots.iter_mut().zip(literals) {
+            *slot = Some(lit);
+        }
+        let result = run?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact {:?}: got {} outputs, manifest wants {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
+            out.push(HostValue::f32_from_literal(lit, &ospec.shape)?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,1528 @@
+//! `RefBackend`: a pure-Rust interpreter for every artifact in the
+//! manifest — forward, loss, and hand-derived backward passes over the
+//! dense tensor substrate.
+//!
+//! This is the CI/test backend: it needs no lowered HLO files and no
+//! PJRT client, so the full suite (and the `auto` runtime fallback)
+//! runs from a bare checkout. Numerics mirror
+//! `python/compile/model.py` — RMSNorm/RoPE/SwiGLU constants, masking
+//! with `-1e30`, softmax max-subtraction, and the `max(cnt, 1)` loss
+//! denominator — and the backward formulas were validated against
+//! `jax.grad` of that model (see `tests/backend_parity.rs` for the
+//! in-tree tolerance check against the PJRT path).
+//!
+//! The interpreter dispatches on the artifact base name; `_remat`
+//! variants are numerically identical (checkpointing only changes the
+//! memory schedule) and share the plain implementation.
+
+// index-heavy kernels: explicit loops ARE the clearest form here
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactSpec, ModelCfg};
+use crate::runtime::backend::{
+    Backend, DeviceBuffers, Executor, HostRef,
+};
+use crate::runtime::host::HostValue;
+use crate::tensor::Tensor;
+
+const NORM_EPS: f32 = 1e-6;
+const MASK_NEG: f32 = -1e30;
+const ROPE_BASE: f32 = 10000.0;
+
+/// The pure-Rust interpreter backend.
+pub struct RefBackend;
+
+impl Backend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn prepare(
+        &self,
+        cfg: &ModelCfg,
+        spec: &ArtifactSpec,
+    ) -> Result<Box<dyn Executor>> {
+        // validate the artifact name up front so unknown artifacts
+        // fail at load time, like a missing HLO file would
+        base_name(&spec.name)?;
+        Ok(Box::new(RefExecutor {
+            cfg: std::sync::Arc::new(cfg.clone()),
+            spec: std::sync::Arc::new(spec.clone()),
+        }))
+    }
+}
+
+fn base_name(name: &str) -> Result<&str> {
+    let base = name.strip_suffix("_remat").unwrap_or(name);
+    match base {
+        "fwd_logits" | "fwd_loss" | "grads_full" | "grads_probe"
+        | "grads_losia" | "grads_lora" | "grads_dora" => Ok(base),
+        other => bail!(
+            "reference backend: unknown artifact {other:?} \
+             (knows fwd_logits, fwd_loss, grads_full, grads_probe, \
+             grads_losia, grads_lora, grads_dora and _remat variants)"
+        ),
+    }
+}
+
+struct RefExecutor {
+    cfg: std::sync::Arc<ModelCfg>,
+    spec: std::sync::Arc<ArtifactSpec>,
+}
+
+impl Executor for RefExecutor {
+    fn alloc_buffers(&self) -> Box<dyn DeviceBuffers> {
+        let slots = (0..self.spec.inputs.len()).map(|_| None).collect();
+        Box::new(RefBuffers {
+            cfg: std::sync::Arc::clone(&self.cfg),
+            spec: std::sync::Arc::clone(&self.spec),
+            slots,
+        })
+    }
+}
+
+struct RefBuffers {
+    cfg: std::sync::Arc<ModelCfg>,
+    spec: std::sync::Arc<ArtifactSpec>,
+    slots: Vec<Option<HostValue>>,
+}
+
+impl DeviceBuffers for RefBuffers {
+    fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()> {
+        self.slots[slot] = Some(value.to_host_value());
+        Ok(())
+    }
+
+    fn execute(&mut self) -> Result<Vec<Tensor>> {
+        let mut inputs: BTreeMap<&str, &HostValue> = BTreeMap::new();
+        for (i, spec) in self.spec.inputs.iter().enumerate() {
+            let v = self.slots[i].as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {:?}: input slot {i} ({:?}) was never \
+                     uploaded",
+                    self.spec.name,
+                    spec.name
+                )
+            })?;
+            inputs.insert(spec.name.as_str(), v);
+        }
+        run_artifact(&self.cfg, &self.spec, &inputs)
+    }
+}
+
+// ------------------------------------------------------------ dispatch
+
+fn run_artifact(
+    cfg: &ModelCfg,
+    spec: &ArtifactSpec,
+    inputs: &BTreeMap<&str, &HostValue>,
+) -> Result<Vec<Tensor>> {
+    let base = base_name(&spec.name)?;
+    let model = Model::new(cfg, inputs, base)?;
+    let mut out: BTreeMap<String, Tensor> = BTreeMap::new();
+
+    match base {
+        "fwd_logits" => {
+            let fwd = model.forward()?;
+            let dm = &model.dm;
+            out.insert(
+                "logits".into(),
+                Tensor::from_vec(&[dm.b, dm.s, dm.v], fwd.logits),
+            );
+        }
+        "fwd_loss" => {
+            let fwd = model.forward()?;
+            let (nll, cnt) = model.seq_nll(&fwd.logits)?;
+            let b = model.dm.b;
+            out.insert("nll".into(), Tensor::from_vec(&[b], nll));
+            out.insert("cnt".into(), Tensor::from_vec(&[b], cnt));
+        }
+        "grads_full" => {
+            let fwd = model.forward()?;
+            let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
+            let sinks = model.backward(&fwd, dlogits, true)?;
+            out.insert("loss".into(), scalar(loss));
+            for (name, g) in sinks.params.unwrap() {
+                out.insert(format!("g_{name}"), g);
+            }
+        }
+        "grads_probe" => {
+            let probe = model.probe()?;
+            let fwd = model.forward()?;
+            let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
+            let sinks = model.backward(&fwd, dlogits, true)?;
+            let params = sinks.params.unwrap();
+            out.insert("loss".into(), scalar(loss));
+            for kind in &cfg.linear_kinds {
+                out.insert(
+                    format!("g_{kind}"),
+                    params[kind].index_axis0(probe),
+                );
+            }
+            out.insert("g_lm_head".into(), params["lm_head"].clone());
+        }
+        "grads_losia" => {
+            let probe = model.probe()?;
+            let fwd = model.forward()?;
+            let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
+            let sinks = model.backward(&fwd, dlogits, true)?;
+            let params = sinks.params.unwrap();
+            out.insert("loss".into(), scalar(loss));
+            for (name, g) in sinks.extras {
+                out.insert(format!("g_{name}"), g);
+            }
+            for kind in &cfg.linear_kinds {
+                out.insert(
+                    format!("probe_{kind}"),
+                    params[kind].index_axis0(probe),
+                );
+            }
+            out.insert(
+                "probe_lm_head".into(),
+                params["lm_head"].clone(),
+            );
+        }
+        "grads_lora" | "grads_dora" => {
+            let fwd = model.forward()?;
+            let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
+            let sinks = model.backward(&fwd, dlogits, false)?;
+            out.insert("loss".into(), scalar(loss));
+            for (name, g) in sinks.extras {
+                out.insert(format!("g_{name}"), g);
+            }
+        }
+        _ => unreachable!("base_name validated"),
+    }
+
+    spec.outputs
+        .iter()
+        .map(|o| {
+            let t = out.remove(&o.name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "reference backend: artifact {:?} did not produce \
+                     output {:?}",
+                    spec.name,
+                    o.name
+                )
+            })?;
+            anyhow::ensure!(
+                t.shape == o.shape,
+                "reference backend: output {:?} has shape {:?}, \
+                 manifest wants {:?}",
+                o.name,
+                t.shape,
+                o.shape
+            );
+            Ok(t)
+        })
+        .collect()
+}
+
+fn scalar(v: f32) -> Tensor {
+    Tensor::from_vec(&[], vec![v])
+}
+
+// ------------------------------------------------------ linear algebra
+
+/// C[n,m] = A[n,k] @ B[k,m]
+fn mm(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// C[n,m] = A[k,n]ᵀ @ B[k,m]  (contraction over rows)
+fn mm_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..k {
+        let arow = &a[r * n..(r + 1) * n];
+        let brow = &b[r * m..(r + 1) * m];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * m..(i + 1) * m];
+            for j in 0..m {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// C[n,m] = A[n,k] @ B[m,k]ᵀ  (contraction over columns of both)
+fn mm_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), m * k);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            *o += acc;
+        }
+    }
+    out
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Gather columns: out[r, j] = x[r, cols[j]]
+fn gather_cols(
+    x: &[f32],
+    rows: usize,
+    width: usize,
+    cols: &[usize],
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * cols.len());
+    for r in 0..rows {
+        let row = &x[r * width..(r + 1) * width];
+        for &c in cols {
+            out.push(row[c]);
+        }
+    }
+    out
+}
+
+/// Scatter-add columns: x[r, cols[j]] += v[r, j]
+fn scatter_cols(
+    x: &mut [f32],
+    rows: usize,
+    width: usize,
+    cols: &[usize],
+    v: &[f32],
+) {
+    for r in 0..rows {
+        let row = &mut x[r * width..(r + 1) * width];
+        let vrow = &v[r * cols.len()..(r + 1) * cols.len()];
+        for (j, &c) in cols.iter().enumerate() {
+            row[c] += vrow[j];
+        }
+    }
+}
+
+fn rmsnorm_fwd(
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mean: f32 =
+            xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let iv = 1.0 / (mean + NORM_EPS).sqrt();
+        inv[r] = iv;
+        let yr = &mut y[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = xr[i] * iv * w[i];
+        }
+    }
+    (y, inv)
+}
+
+/// dx_i = inv·w_i·dy_i − inv³/d · x_i · Σ_j dy_j·w_j·x_j ; dw_i = Σ_r dy·x·inv
+fn rmsnorm_bwd(
+    x: &[f32],
+    w: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dw = vec![0.0f32; d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let iv = inv[r];
+        let mut s = 0.0f32;
+        for i in 0..d {
+            s += dyr[i] * w[i] * xr[i];
+        }
+        let c = iv * iv * iv / d as f32 * s;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for i in 0..d {
+            dxr[i] = iv * w[i] * dyr[i] - c * xr[i];
+            dw[i] += dyr[i] * xr[i] * iv;
+        }
+    }
+    (dx, dw)
+}
+
+fn rope_tables(s: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = dh / 2;
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    for pos in 0..s {
+        for e in 0..half {
+            let freq =
+                ROPE_BASE.powf(-(e as f32) / half as f32);
+            let ang = pos as f32 * freq;
+            cos[pos * half + e] = ang.cos();
+            sin[pos * half + e] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place over [B, S, H, Dh] (flat [BS·D]). `inverse`
+/// applies the transposed rotation (the backward pass).
+fn rope_apply(
+    x: &mut [f32],
+    dm: &Dims,
+    cos: &[f32],
+    sin: &[f32],
+    inverse: bool,
+) {
+    let half = dm.dh / 2;
+    for b in 0..dm.b {
+        for pos in 0..dm.s {
+            for h in 0..dm.h {
+                let base = ((b * dm.s + pos) * dm.h + h) * dm.dh;
+                for e in 0..half {
+                    let c = cos[pos * half + e];
+                    let s = sin[pos * half + e];
+                    let x1 = x[base + e];
+                    let x2 = x[base + half + e];
+                    let (n1, n2) = if inverse {
+                        (x1 * c + x2 * s, -x1 * s + x2 * c)
+                    } else {
+                        (x1 * c - x2 * s, x1 * s + x2 * c)
+                    };
+                    x[base + e] = n1;
+                    x[base + half + e] = n2;
+                }
+            }
+        }
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn dsilu(x: f32) -> f32 {
+    let sg = 1.0 / (1.0 + (-x).exp());
+    sg * (1.0 + x * (1.0 - sg))
+}
+
+// ----------------------------------------------------------- the model
+
+#[derive(Debug, Clone, Copy)]
+struct Dims {
+    b: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    dh: usize,
+    l: usize,
+    v: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Variant {
+    Plain,
+    Losia,
+    Lora { dora: bool },
+}
+
+struct LayerCache {
+    x_in: Vec<f32>,
+    h: Vec<f32>,
+    inv1: Vec<f32>,
+    qr: Vec<f32>,
+    kr: Vec<f32>,
+    v4: Vec<f32>,
+    probs: Vec<f32>,
+    att: Vec<f32>,
+    x_mid: Vec<f32>,
+    h2: Vec<f32>,
+    inv2: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    mlp: Vec<f32>,
+}
+
+struct FwdCache {
+    layers: Vec<LayerCache>,
+    /// RoPE tables, built once per execution (depend only on S, Dh)
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    xf: Vec<f32>,
+    invf: Vec<f32>,
+    xnorm: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+struct Sinks {
+    params: Option<BTreeMap<String, Tensor>>,
+    extras: BTreeMap<String, Tensor>,
+}
+
+struct Model<'a> {
+    cfg: &'a ModelCfg,
+    dm: Dims,
+    inp: &'a BTreeMap<&'a str, &'a HostValue>,
+    variant: Variant,
+}
+
+impl<'a> Model<'a> {
+    fn new(
+        cfg: &'a ModelCfg,
+        inp: &'a BTreeMap<&'a str, &'a HostValue>,
+        base: &str,
+    ) -> Result<Model<'a>> {
+        let variant = match base {
+            "grads_losia" => Variant::Losia,
+            "grads_lora" => Variant::Lora { dora: false },
+            "grads_dora" => Variant::Lora { dora: true },
+            _ => Variant::Plain,
+        };
+        let dm = Dims {
+            b: cfg.batch,
+            s: cfg.seq_len,
+            d: cfg.d_model,
+            h: cfg.n_heads,
+            dh: cfg.d_model / cfg.n_heads,
+            l: cfg.n_layers,
+            v: cfg.vocab,
+        };
+        Ok(Model {
+            cfg,
+            dm,
+            inp,
+            variant,
+        })
+    }
+
+    fn f32_in(&self, name: &str) -> Result<&Tensor> {
+        self.inp
+            .get(name)
+            .ok_or_else(|| {
+                anyhow::anyhow!("reference backend: missing input {name:?}")
+            })?
+            .as_f32()
+            .with_context(|| format!("input {name:?}"))
+    }
+
+    fn i32_in(&self, name: &str) -> Result<&[i32]> {
+        match self.inp.get(name) {
+            Some(HostValue::I32 { data, .. }) => Ok(data.as_slice()),
+            Some(_) => bail!(
+                "reference backend: input {name:?} should be i32"
+            ),
+            None => bail!(
+                "reference backend: missing input {name:?}"
+            ),
+        }
+    }
+
+    /// Layer slice of a stacked [L, n, m] parameter.
+    fn layer_w(&self, kind: &str, l: usize) -> Result<&[f32]> {
+        let kd = self.cfg.kind(kind);
+        let t = self.f32_in(kind)?;
+        Ok(&t.data[l * kd.n * kd.m..(l + 1) * kd.n * kd.m])
+    }
+
+    fn probe(&self) -> Result<usize> {
+        let p = self.i32_in("probe")?[0].max(0) as usize;
+        Ok(p.min(self.dm.l - 1))
+    }
+
+    fn indices(
+        &self,
+        name: &str,
+        l: usize,
+        per_layer: usize,
+        limit: usize,
+    ) -> Result<Vec<usize>> {
+        let data = self.i32_in(name)?;
+        Ok(data[l * per_layer..(l + 1) * per_layer]
+            .iter()
+            .map(|&i| (i.max(0) as usize).min(limit - 1))
+            .collect())
+    }
+
+    // ------------------------------------------------------- forward
+
+    fn forward(&self) -> Result<FwdCache> {
+        let dm = self.dm;
+        let rows = dm.b * dm.s;
+        let tokens = self.i32_in("tokens")?;
+        let embed = self.f32_in("embed")?;
+
+        let mut x = vec![0.0f32; rows * dm.d];
+        for r in 0..rows {
+            let t = (tokens[r].max(0) as usize).min(dm.v - 1);
+            x[r * dm.d..(r + 1) * dm.d]
+                .copy_from_slice(&embed.data[t * dm.d..(t + 1) * dm.d]);
+        }
+
+        let norm1 = self.f32_in("norm1")?;
+        let norm2 = self.f32_in("norm2")?;
+        let (cos, sin) = rope_tables(dm.s, dm.dh);
+        let mut layers = Vec::with_capacity(dm.l);
+        for l in 0..dm.l {
+            let (c, x_new) = self.block_fwd(
+                l,
+                x,
+                &norm1.data[l * dm.d..(l + 1) * dm.d],
+                &norm2.data[l * dm.d..(l + 1) * dm.d],
+                (&cos, &sin),
+            )?;
+            layers.push(c);
+            x = x_new;
+        }
+
+        let norm_f = self.f32_in("norm_f")?;
+        let (xnorm, invf) = rmsnorm_fwd(&x, &norm_f.data, rows, dm.d);
+        let lm_head = self.f32_in("lm_head")?;
+        let mut logits = mm(&xnorm, &lm_head.data, rows, dm.d, dm.v);
+        if self.variant == Variant::Losia {
+            let vs = self.cfg.vocab_sub;
+            let gamma =
+                self.indices("gamma_out", 0, vs, dm.v)?;
+            let dws = self.f32_in("dws_out")?;
+            let y = mm(&xnorm, &dws.data, rows, dm.d, vs);
+            scatter_cols(&mut logits, rows, dm.v, &gamma, &y);
+        }
+        Ok(FwdCache {
+            layers,
+            cos,
+            sin,
+            xf: x,
+            invf,
+            xnorm,
+            logits,
+        })
+    }
+
+    fn block_fwd(
+        &self,
+        l: usize,
+        x: Vec<f32>,
+        norm1: &[f32],
+        norm2: &[f32],
+        rope: (&[f32], &[f32]),
+    ) -> Result<(LayerCache, Vec<f32>)> {
+        let dm = self.dm;
+        let rows = dm.b * dm.s;
+        let (h, inv1) = rmsnorm_fwd(&x, norm1, rows, dm.d);
+        let q = self.lin_fwd(l, "wq", &h, rows)?;
+        let k = self.lin_fwd(l, "wk", &h, rows)?;
+        let v4 = self.lin_fwd(l, "wv", &h, rows)?;
+
+        let (cos, sin) = rope;
+        let mut qr = q;
+        let mut kr = k;
+        rope_apply(&mut qr, &dm, cos, sin, false);
+        rope_apply(&mut kr, &dm, cos, sin, false);
+
+        let (att, probs) = self.attention_fwd(&qr, &kr, &v4);
+        let wo_out = self.lin_fwd(l, "wo", &att, rows)?;
+        let mut x_mid = x.clone();
+        add_into(&mut x_mid, &wo_out);
+
+        let (h2, inv2) = rmsnorm_fwd(&x_mid, norm2, rows, dm.d);
+        let gate = self.lin_fwd(l, "wgate", &h2, rows)?;
+        let up = self.lin_fwd(l, "wup", &h2, rows)?;
+        let mut mlp = vec![0.0f32; rows * self.cfg.d_ff];
+        for i in 0..mlp.len() {
+            mlp[i] = silu(gate[i]) * up[i];
+        }
+        let down = self.lin_fwd(l, "wdown", &mlp, rows)?;
+        let mut x_new = x_mid.clone();
+        add_into(&mut x_new, &down);
+
+        Ok((
+            LayerCache {
+                x_in: x,
+                h,
+                inv1,
+                qr,
+                kr,
+                v4,
+                probs,
+                att,
+                x_mid,
+                h2,
+                inv2,
+                gate,
+                up,
+                mlp,
+            },
+            x_new,
+        ))
+    }
+
+    fn attention_fwd(
+        &self,
+        qr: &[f32],
+        kr: &[f32],
+        v4: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let dm = self.dm;
+        let scale = 1.0 / (dm.dh as f32).sqrt();
+        let mut probs = vec![0.0f32; dm.b * dm.h * dm.s * dm.s];
+        let mut att = vec![0.0f32; dm.b * dm.s * dm.d];
+        let at = |b: usize, pos: usize, h: usize| {
+            ((b * dm.s + pos) * dm.h + h) * dm.dh
+        };
+        for b in 0..dm.b {
+            for h in 0..dm.h {
+                for i in 0..dm.s {
+                    let prow_off = ((b * dm.h + h) * dm.s + i) * dm.s;
+                    let mut scores = vec![MASK_NEG; dm.s];
+                    let qrow = &qr[at(b, i, h)..at(b, i, h) + dm.dh];
+                    for (j, sc) in
+                        scores.iter_mut().enumerate().take(i + 1)
+                    {
+                        let krow =
+                            &kr[at(b, j, h)..at(b, j, h) + dm.dh];
+                        let mut acc = 0.0f32;
+                        for e in 0..dm.dh {
+                            acc += qrow[e] * krow[e];
+                        }
+                        *sc = acc * scale;
+                    }
+                    let mx = scores
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        z += *sc;
+                    }
+                    let prow =
+                        &mut probs[prow_off..prow_off + dm.s];
+                    for (j, &e) in scores.iter().enumerate() {
+                        prow[j] = e / z;
+                    }
+                    let arow = at(b, i, h);
+                    for (j, &p) in
+                        prow.iter().enumerate().take(i + 1)
+                    {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow =
+                            &v4[at(b, j, h)..at(b, j, h) + dm.dh];
+                        for e in 0..dm.dh {
+                            att[arow + e] += p * vrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        (att, probs)
+    }
+
+    fn attention_bwd(
+        &self,
+        datt: &[f32],
+        c: &LayerCache,
+        rope: (&[f32], &[f32]),
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let dm = self.dm;
+        let scale = 1.0 / (dm.dh as f32).sqrt();
+        let mut dq = vec![0.0f32; dm.b * dm.s * dm.d];
+        let mut dk = vec![0.0f32; dm.b * dm.s * dm.d];
+        let mut dv = vec![0.0f32; dm.b * dm.s * dm.d];
+        let at = |b: usize, pos: usize, h: usize| {
+            ((b * dm.s + pos) * dm.h + h) * dm.dh
+        };
+        for b in 0..dm.b {
+            for h in 0..dm.h {
+                for i in 0..dm.s {
+                    let prow_off = ((b * dm.h + h) * dm.s + i) * dm.s;
+                    let prow = &c.probs[prow_off..prow_off + dm.s];
+                    let darow = &datt[at(b, i, h)..at(b, i, h) + dm.dh];
+                    // dprobs_j = Σ_e datt·v ; dv_j += p·datt
+                    let mut dprobs = vec![0.0f32; dm.s];
+                    for j in 0..=i {
+                        let voff = at(b, j, h);
+                        let vrow = &c.v4[voff..voff + dm.dh];
+                        let mut acc = 0.0f32;
+                        for e in 0..dm.dh {
+                            acc += darow[e] * vrow[e];
+                        }
+                        dprobs[j] = acc;
+                        let p = prow[j];
+                        if p != 0.0 {
+                            let dvrow = &mut dv[voff..voff + dm.dh];
+                            for e in 0..dm.dh {
+                                dvrow[e] += p * darow[e];
+                            }
+                        }
+                    }
+                    // softmax backward (masked entries have p = 0)
+                    let mut inner = 0.0f32;
+                    for j in 0..=i {
+                        inner += prow[j] * dprobs[j];
+                    }
+                    let dqrow = &mut dq[at(b, i, h)..at(b, i, h) + dm.dh];
+                    for j in 0..=i {
+                        let ds = prow[j] * (dprobs[j] - inner) * scale;
+                        if ds == 0.0 {
+                            continue;
+                        }
+                        let koff = at(b, j, h);
+                        let krow = &c.kr[koff..koff + dm.dh];
+                        let qoff = at(b, i, h);
+                        let qrow = &c.qr[qoff..qoff + dm.dh];
+                        let dkrow = &mut dk[koff..koff + dm.dh];
+                        for e in 0..dm.dh {
+                            dqrow[e] += ds * krow[e];
+                            dkrow[e] += ds * qrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        let (cos, sin) = rope;
+        rope_apply(&mut dq, &dm, cos, sin, true);
+        rope_apply(&mut dk, &dm, cos, sin, true);
+        (dq, dk, dv)
+    }
+
+    // ------------------------------------------------------- linears
+
+    fn lin_fwd(
+        &self,
+        l: usize,
+        kind: &str,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let kd = self.cfg.kind(kind);
+        let w = self.layer_w(kind, l)?;
+        match self.variant {
+            Variant::Plain => Ok(mm(x, w, rows, kd.n, kd.m)),
+            Variant::Losia => {
+                let mut y = mm(x, w, rows, kd.n, kd.m);
+                let rho = self.indices(
+                    &format!("rho_{kind}"),
+                    l,
+                    kd.np,
+                    kd.n,
+                )?;
+                let gamma = self.indices(
+                    &format!("gamma_{kind}"),
+                    l,
+                    kd.mp,
+                    kd.m,
+                )?;
+                let dws_t = self.f32_in(&format!("dws_{kind}"))?;
+                let dws = &dws_t.data
+                    [l * kd.np * kd.mp..(l + 1) * kd.np * kd.mp];
+                let xs = gather_cols(x, rows, kd.n, &rho);
+                let ys = mm(&xs, dws, rows, kd.np, kd.mp);
+                scatter_cols(&mut y, rows, kd.m, &gamma, &ys);
+                Ok(y)
+            }
+            Variant::Lora { dora } => {
+                let r = self.cfg.lora_rank;
+                let scale = (self.cfg.lora_alpha
+                    / self.cfg.lora_rank as f64)
+                    as f32;
+                let la_t = self.f32_in(&format!("la_{kind}"))?;
+                let lb_t = self.f32_in(&format!("lb_{kind}"))?;
+                let la =
+                    &la_t.data[l * kd.n * r..(l + 1) * kd.n * r];
+                let lb =
+                    &lb_t.data[l * r * kd.m..(l + 1) * r * kd.m];
+                if !dora {
+                    let mut y = mm(x, w, rows, kd.n, kd.m);
+                    let xa = mm(x, la, rows, kd.n, r);
+                    let mut yl = mm(&xa, lb, rows, r, kd.m);
+                    for v in yl.iter_mut() {
+                        *v *= scale;
+                    }
+                    add_into(&mut y, &yl);
+                    Ok(y)
+                } else {
+                    let (_, _, weff) =
+                        self.dora_frames(l, kind, w, la, lb, scale)?;
+                    Ok(mm(x, &weff, rows, kd.n, kd.m))
+                }
+            }
+        }
+    }
+
+    /// DoRA frames shared by forward and backward: `wp = W + s·A·B`,
+    /// per-column norms `cn = √(Σ wp² + 1e-8)`, and the effective
+    /// weight `weff = wp · mag/cn`.
+    #[allow(clippy::type_complexity)]
+    fn dora_frames(
+        &self,
+        l: usize,
+        kind: &str,
+        w: &[f32],
+        la: &[f32],
+        lb: &[f32],
+        scale: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let kd = self.cfg.kind(kind);
+        let r = self.cfg.lora_rank;
+        let mag_t = self.f32_in(&format!("mag_{kind}"))?;
+        let mag = &mag_t.data[l * kd.m..(l + 1) * kd.m];
+        let mut wp = mm(la, lb, kd.n, r, kd.m);
+        for (i, v) in wp.iter_mut().enumerate() {
+            *v = w[i] + scale * *v;
+        }
+        let mut cn = vec![0.0f32; kd.m];
+        for i in 0..kd.n {
+            for j in 0..kd.m {
+                let v = wp[i * kd.m + j];
+                cn[j] += v * v;
+            }
+        }
+        for c in cn.iter_mut() {
+            *c = (*c + 1e-8).sqrt();
+        }
+        let mut weff = wp.clone();
+        for i in 0..kd.n {
+            for j in 0..kd.m {
+                weff[i * kd.m + j] *= mag[j] / cn[j];
+            }
+        }
+        Ok((wp, cn, weff))
+    }
+
+    /// Backward through one linear: returns dx, accumulates gradients.
+    #[allow(clippy::too_many_arguments)]
+    fn lin_bwd(
+        &self,
+        l: usize,
+        kind: &str,
+        x: &[f32],
+        rows: usize,
+        dy: &[f32],
+        sinks: &mut Sinks,
+    ) -> Result<Vec<f32>> {
+        let kd = self.cfg.kind(kind);
+        let w = self.layer_w(kind, l)?;
+        if let Some(params) = &mut sinks.params {
+            let g = mm_tn(x, dy, rows, kd.n, kd.m);
+            let dst = params.get_mut(kind).unwrap();
+            add_into(
+                &mut dst.data
+                    [l * kd.n * kd.m..(l + 1) * kd.n * kd.m],
+                &g,
+            );
+        }
+        match self.variant {
+            Variant::Plain => Ok(mm_nt(dy, w, rows, kd.m, kd.n)),
+            Variant::Losia => {
+                let rho = self.indices(
+                    &format!("rho_{kind}"),
+                    l,
+                    kd.np,
+                    kd.n,
+                )?;
+                let gamma = self.indices(
+                    &format!("gamma_{kind}"),
+                    l,
+                    kd.mp,
+                    kd.m,
+                )?;
+                let dws_t = self.f32_in(&format!("dws_{kind}"))?;
+                let dws = &dws_t.data
+                    [l * kd.np * kd.mp..(l + 1) * kd.np * kd.mp];
+                let xs = gather_cols(x, rows, kd.n, &rho);
+                let dys = gather_cols(dy, rows, kd.m, &gamma);
+                // Eq. 9: the factorized subnet gradient
+                let gsub = mm_tn(&xs, &dys, rows, kd.np, kd.mp);
+                let dst = sinks
+                    .extras
+                    .get_mut(&format!("dws_{kind}"))
+                    .unwrap();
+                add_into(
+                    &mut dst.data
+                        [l * kd.np * kd.mp..(l + 1) * kd.np * kd.mp],
+                    &gsub,
+                );
+                let mut dx = mm_nt(dy, w, rows, kd.m, kd.n);
+                let dxs = mm_nt(&dys, dws, rows, kd.mp, kd.np);
+                scatter_cols(&mut dx, rows, kd.n, &rho, &dxs);
+                Ok(dx)
+            }
+            Variant::Lora { dora } => {
+                let r = self.cfg.lora_rank;
+                let scale = (self.cfg.lora_alpha
+                    / self.cfg.lora_rank as f64)
+                    as f32;
+                let la_t = self.f32_in(&format!("la_{kind}"))?;
+                let lb_t = self.f32_in(&format!("lb_{kind}"))?;
+                let la =
+                    &la_t.data[l * kd.n * r..(l + 1) * kd.n * r];
+                let lb =
+                    &lb_t.data[l * r * kd.m..(l + 1) * r * kd.m];
+                if !dora {
+                    let dyb = mm_nt(dy, lb, rows, kd.m, r);
+                    let mut gla = mm_tn(x, &dyb, rows, kd.n, r);
+                    for v in gla.iter_mut() {
+                        *v *= scale;
+                    }
+                    let xa = mm(x, la, rows, kd.n, r);
+                    let mut glb = mm_tn(&xa, dy, rows, r, kd.m);
+                    for v in glb.iter_mut() {
+                        *v *= scale;
+                    }
+                    self.sink_adapter(sinks, "la", kind, l, &gla);
+                    self.sink_adapter(sinks, "lb", kind, l, &glb);
+                    let mut dx = mm_nt(dy, w, rows, kd.m, kd.n);
+                    let mut dxl =
+                        mm_nt(&dyb, la, rows, r, kd.n);
+                    for v in dxl.iter_mut() {
+                        *v *= scale;
+                    }
+                    add_into(&mut dx, &dxl);
+                    Ok(dx)
+                } else {
+                    let mag_t =
+                        self.f32_in(&format!("mag_{kind}"))?;
+                    let mag = &mag_t.data[l * kd.m..(l + 1) * kd.m];
+                    let (wp, cn, weff) =
+                        self.dora_frames(l, kind, w, la, lb, scale)?;
+                    let dweff = mm_tn(x, dy, rows, kd.n, kd.m);
+                    // col_j = Σ_i dweff·wp ; dmag_j = col_j / cn_j
+                    let mut col = vec![0.0f32; kd.m];
+                    for i in 0..kd.n {
+                        for j in 0..kd.m {
+                            col[j] += dweff[i * kd.m + j]
+                                * wp[i * kd.m + j];
+                        }
+                    }
+                    let gmag: Vec<f32> = (0..kd.m)
+                        .map(|j| col[j] / cn[j])
+                        .collect();
+                    // dwp = dweff·(mag/cn) − wp·col·mag/cn³
+                    let mut dwp = vec![0.0f32; kd.n * kd.m];
+                    for j in 0..kd.m {
+                        let sden = mag[j] / cn[j];
+                        let corr =
+                            col[j] * mag[j] / (cn[j] * cn[j] * cn[j]);
+                        for i in 0..kd.n {
+                            dwp[i * kd.m + j] = dweff[i * kd.m + j]
+                                * sden
+                                - wp[i * kd.m + j] * corr;
+                        }
+                    }
+                    let mut gla = mm_nt(&dwp, lb, kd.n, kd.m, r);
+                    for v in gla.iter_mut() {
+                        *v *= scale;
+                    }
+                    let mut glb = mm_tn(la, &dwp, kd.n, r, kd.m);
+                    for v in glb.iter_mut() {
+                        *v *= scale;
+                    }
+                    self.sink_adapter(sinks, "la", kind, l, &gla);
+                    self.sink_adapter(sinks, "lb", kind, l, &glb);
+                    self.sink_adapter(sinks, "mag", kind, l, &gmag);
+                    Ok(mm_nt(dy, &weff, rows, kd.m, kd.n))
+                }
+            }
+        }
+    }
+
+    fn sink_adapter(
+        &self,
+        sinks: &mut Sinks,
+        group: &str,
+        kind: &str,
+        l: usize,
+        g: &[f32],
+    ) {
+        let dst = sinks
+            .extras
+            .get_mut(&format!("{group}_{kind}"))
+            .unwrap();
+        let per = g.len();
+        add_into(&mut dst.data[l * per..(l + 1) * per], g);
+    }
+
+    // -------------------------------------------------------- losses
+
+    /// Per-sequence (summed NLL, token count) — the `fwd_loss` ABI.
+    fn seq_nll(
+        &self,
+        logits: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let dm = self.dm;
+        let targets = self.i32_in("targets")?;
+        let mask = self.f32_in("mask")?;
+        let mut nll = vec![0.0f32; dm.b];
+        let mut cnt = vec![0.0f32; dm.b];
+        for b in 0..dm.b {
+            for s in 0..dm.s {
+                let r = b * dm.s + s;
+                let row = &logits[r * dm.v..(r + 1) * dm.v];
+                let m = mask.data[r];
+                cnt[b] += m;
+                if m == 0.0 {
+                    continue;
+                }
+                let t =
+                    (targets[r].max(0) as usize).min(dm.v - 1);
+                nll[b] -= log_softmax_at(row, t) * m;
+            }
+        }
+        Ok((nll, cnt))
+    }
+
+    /// Mean masked loss and its logits cotangent.
+    fn loss_and_dlogits(
+        &self,
+        logits: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let dm = self.dm;
+        let rows = dm.b * dm.s;
+        let targets = self.i32_in("targets")?;
+        let mask = self.f32_in("mask")?;
+        let total: f32 = mask.data.iter().sum();
+        let c = total.max(1.0);
+        let mut loss = 0.0f32;
+        let mut dl = vec![0.0f32; rows * dm.v];
+        for r in 0..rows {
+            let m = mask.data[r];
+            let row = &logits[r * dm.v..(r + 1) * dm.v];
+            let t = (targets[r].max(0) as usize).min(dm.v - 1);
+            if m == 0.0 {
+                continue;
+            }
+            let mx =
+                row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &v in row {
+                z += (v - mx).exp();
+            }
+            loss -= (row[t] - mx - z.ln()) * m / c;
+            let drow = &mut dl[r * dm.v..(r + 1) * dm.v];
+            for (j, &v) in row.iter().enumerate() {
+                drow[j] = (v - mx).exp() / z * m / c;
+            }
+            drow[t] -= m / c;
+        }
+        Ok((loss, dl))
+    }
+
+    // ------------------------------------------------------ backward
+
+    fn backward(
+        &self,
+        fwd: &FwdCache,
+        dlogits: Vec<f32>,
+        want_params: bool,
+    ) -> Result<Sinks> {
+        let dm = self.dm;
+        let rows = dm.b * dm.s;
+        let mut sinks = Sinks {
+            params: want_params.then(|| {
+                self.cfg
+                    .params
+                    .iter()
+                    .map(|(n, s)| (n.clone(), Tensor::zeros(s)))
+                    .collect()
+            }),
+            extras: BTreeMap::new(),
+        };
+        match self.variant {
+            Variant::Losia => {
+                for kind in &self.cfg.linear_kinds {
+                    let kd = self.cfg.kind(kind);
+                    sinks.extras.insert(
+                        format!("dws_{kind}"),
+                        Tensor::zeros(&[dm.l, kd.np, kd.mp]),
+                    );
+                }
+                sinks.extras.insert(
+                    "dws_out".into(),
+                    Tensor::zeros(&[dm.d, self.cfg.vocab_sub]),
+                );
+            }
+            Variant::Lora { dora } => {
+                let r = self.cfg.lora_rank;
+                for kind in &self.cfg.linear_kinds {
+                    let kd = self.cfg.kind(kind);
+                    sinks.extras.insert(
+                        format!("la_{kind}"),
+                        Tensor::zeros(&[dm.l, kd.n, r]),
+                    );
+                    sinks.extras.insert(
+                        format!("lb_{kind}"),
+                        Tensor::zeros(&[dm.l, r, kd.m]),
+                    );
+                    if dora {
+                        sinks.extras.insert(
+                            format!("mag_{kind}"),
+                            Tensor::zeros(&[dm.l, kd.m]),
+                        );
+                    }
+                }
+            }
+            Variant::Plain => {}
+        }
+
+        // lm_head (+ output-layer subnet delta)
+        let lm_head = self.f32_in("lm_head")?;
+        if let Some(params) = &mut sinks.params {
+            let g = mm_tn(&fwd.xnorm, &dlogits, rows, dm.d, dm.v);
+            add_into(&mut params.get_mut("lm_head").unwrap().data, &g);
+        }
+        let mut dxnorm =
+            mm_nt(&dlogits, &lm_head.data, rows, dm.v, dm.d);
+        if self.variant == Variant::Losia {
+            let vs = self.cfg.vocab_sub;
+            let gamma = self.indices("gamma_out", 0, vs, dm.v)?;
+            let dls = gather_cols(&dlogits, rows, dm.v, &gamma);
+            let g = mm_tn(&fwd.xnorm, &dls, rows, dm.d, vs);
+            add_into(
+                &mut sinks.extras.get_mut("dws_out").unwrap().data,
+                &g,
+            );
+            let dws = self.f32_in("dws_out")?;
+            let dxd = mm_nt(&dls, &dws.data, rows, vs, dm.d);
+            add_into(&mut dxnorm, &dxd);
+        }
+
+        let norm_f = self.f32_in("norm_f")?;
+        let (mut dx, dnf) = rmsnorm_bwd(
+            &fwd.xf,
+            &norm_f.data,
+            &fwd.invf,
+            &dxnorm,
+            rows,
+            dm.d,
+        );
+        if let Some(params) = &mut sinks.params {
+            add_into(&mut params.get_mut("norm_f").unwrap().data, &dnf);
+        }
+
+        let norm1 = self.f32_in("norm1")?;
+        let norm2 = self.f32_in("norm2")?;
+        for l in (0..dm.l).rev() {
+            let c = &fwd.layers[l];
+            // x = x_mid + down(mlp)
+            let dmlp =
+                self.lin_bwd(l, "wdown", &c.mlp, rows, &dx, &mut sinks)?;
+            let mut dx_mid = dx;
+            let ff = self.cfg.d_ff;
+            let mut dgate = vec![0.0f32; rows * ff];
+            let mut dup = vec![0.0f32; rows * ff];
+            for i in 0..rows * ff {
+                dgate[i] = dmlp[i] * c.up[i] * dsilu(c.gate[i]);
+                dup[i] = dmlp[i] * silu(c.gate[i]);
+            }
+            let mut dh2 =
+                self.lin_bwd(l, "wup", &c.h2, rows, &dup, &mut sinks)?;
+            let dh2b = self
+                .lin_bwd(l, "wgate", &c.h2, rows, &dgate, &mut sinks)?;
+            add_into(&mut dh2, &dh2b);
+            let (dxm, dn2) = rmsnorm_bwd(
+                &c.x_mid,
+                &norm2.data[l * dm.d..(l + 1) * dm.d],
+                &c.inv2,
+                &dh2,
+                rows,
+                dm.d,
+            );
+            add_into(&mut dx_mid, &dxm);
+            if let Some(params) = &mut sinks.params {
+                add_into(
+                    &mut params.get_mut("norm2").unwrap().data
+                        [l * dm.d..(l + 1) * dm.d],
+                    &dn2,
+                );
+            }
+            // x_mid = x_in + wo(att)
+            let datt = self
+                .lin_bwd(l, "wo", &c.att, rows, &dx_mid, &mut sinks)?;
+            let mut dx_in = dx_mid;
+            let (dq, dk, dv) =
+                self.attention_bwd(&datt, c, (&fwd.cos, &fwd.sin));
+            let mut dhp =
+                self.lin_bwd(l, "wq", &c.h, rows, &dq, &mut sinks)?;
+            let dhk =
+                self.lin_bwd(l, "wk", &c.h, rows, &dk, &mut sinks)?;
+            add_into(&mut dhp, &dhk);
+            let dhv =
+                self.lin_bwd(l, "wv", &c.h, rows, &dv, &mut sinks)?;
+            add_into(&mut dhp, &dhv);
+            let (dxi, dn1) = rmsnorm_bwd(
+                &c.x_in,
+                &norm1.data[l * dm.d..(l + 1) * dm.d],
+                &c.inv1,
+                &dhp,
+                rows,
+                dm.d,
+            );
+            add_into(&mut dx_in, &dxi);
+            if let Some(params) = &mut sinks.params {
+                add_into(
+                    &mut params.get_mut("norm1").unwrap().data
+                        [l * dm.d..(l + 1) * dm.d],
+                    &dn1,
+                );
+            }
+            dx = dx_in;
+        }
+
+        if let Some(params) = &mut sinks.params {
+            let tokens = self.i32_in("tokens")?;
+            let de = params.get_mut("embed").unwrap();
+            for r in 0..rows {
+                let t = (tokens[r].max(0) as usize).min(dm.v - 1);
+                add_into(
+                    &mut de.data[t * dm.d..(t + 1) * dm.d],
+                    &dx[r * dm.d..(r + 1) * dm.d],
+                );
+            }
+        }
+        Ok(sinks)
+    }
+}
+
+fn log_softmax_at(row: &[f32], t: usize) -> f32 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for &v in row {
+        z += (v - mx).exp();
+    }
+    row[t] - mx - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn rt() -> Runtime {
+        let dir = crate::runtime::artifacts_dir();
+        let cfg = crate::config::resolve_config(&dir, "tiny").unwrap();
+        Runtime::with_backend(cfg, Box::new(RefBackend))
+    }
+
+    fn inputs_for(
+        rt: &Runtime,
+        name: &str,
+        seed: u64,
+    ) -> Vec<HostValue> {
+        let spec = rt.cfg.artifact(name).clone();
+        let mut rng = Rng::new(seed);
+        spec.inputs
+            .iter()
+            .map(|i| match i.dtype {
+                crate::config::Dtype::F32 => {
+                    if i.name == "mask" || i.name.starts_with("norm") {
+                        HostValue::F32(Tensor::ones(&i.shape))
+                    } else {
+                        HostValue::F32(Tensor::randn(
+                            &i.shape, 0.05, &mut rng,
+                        ))
+                    }
+                }
+                crate::config::Dtype::I32 => {
+                    let n: usize = i.shape.iter().product();
+                    let data: Vec<usize> =
+                        (0..n).map(|_| rng.below(4)).collect();
+                    HostValue::from_indices(&i.shape, &data)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fwd_logits_shape_and_finiteness() {
+        let rt = rt();
+        let exe = rt.load("fwd_logits").unwrap();
+        let out = exe.run(&inputs_for(&rt, "fwd_logits", 0)).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].shape,
+            vec![rt.cfg.batch, rt.cfg.seq_len, rt.cfg.vocab]
+        );
+        assert!(out[0].data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn grads_full_loss_positive_and_grads_nonzero() {
+        let rt = rt();
+        let exe = rt.load("grads_full").unwrap();
+        let out = exe.run(&inputs_for(&rt, "grads_full", 1)).unwrap();
+        let loss = out[0].data[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        assert!(out[1].frob_norm() > 0.0, "embed grad is zero");
+    }
+
+    #[test]
+    fn zero_mask_gives_zero_loss_and_grads() {
+        let rt = rt();
+        let exe = rt.load("grads_full").unwrap();
+        let mut inputs = inputs_for(&rt, "grads_full", 2);
+        let mask_idx = exe
+            .spec()
+            .inputs
+            .iter()
+            .position(|i| i.name == "mask")
+            .unwrap();
+        inputs[mask_idx] = HostValue::F32(Tensor::zeros(&[
+            rt.cfg.batch,
+            rt.cfg.seq_len,
+        ]));
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out[0].data[0], 0.0);
+        for g in &out[1..] {
+            assert!(g.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn remat_variant_matches_plain() {
+        let rt = rt();
+        let a = rt.load("grads_full").unwrap();
+        let b = rt.load("grads_full_remat").unwrap();
+        let inputs = inputs_for(&rt, "grads_full", 3);
+        let oa = a.run(&inputs).unwrap();
+        let ob = b.run(&inputs).unwrap();
+        assert_eq!(oa[0].data, ob[0].data);
+    }
+
+    #[test]
+    fn losia_grads_respect_the_selection() {
+        // g_dws must equal the (rho, gamma) slice of the full probe
+        // gradient for the probed layer (Eq. 9 consistency).
+        let rt = rt();
+        let exe = rt.load("grads_losia").unwrap();
+        let spec = exe.spec().clone();
+        let mut rng = Rng::new(4);
+        let mut inputs = Vec::new();
+        for i in &spec.inputs {
+            inputs.push(match i.dtype {
+                crate::config::Dtype::F32 => {
+                    if i.name == "mask" || i.name.starts_with("norm") {
+                        HostValue::F32(Tensor::ones(&i.shape))
+                    } else if i.name.starts_with("dws") {
+                        HostValue::F32(Tensor::zeros(&i.shape))
+                    } else {
+                        HostValue::F32(Tensor::randn(
+                            &i.shape, 0.05, &mut rng,
+                        ))
+                    }
+                }
+                crate::config::Dtype::I32 => {
+                    if i.name == "probe" {
+                        HostValue::scalar_i32(0)
+                    } else if i.name == "tokens" || i.name == "targets"
+                    {
+                        let n: usize = i.shape.iter().product();
+                        let data: Vec<usize> =
+                            (0..n).map(|_| rng.below(4)).collect();
+                        HostValue::from_indices(&i.shape, &data)
+                    } else {
+                        // distinct selection indices per layer row
+                        let per = *i.shape.last().unwrap();
+                        let rows: usize =
+                            i.shape.iter().product::<usize>() / per;
+                        let limit = if i.name == "gamma_out" {
+                            rt.cfg.vocab
+                        } else {
+                            let kind = i
+                                .name
+                                .splitn(2, '_')
+                                .nth(1)
+                                .unwrap();
+                            let kd = rt.cfg.kind(kind);
+                            if i.name.starts_with("rho") {
+                                kd.n
+                            } else {
+                                kd.m
+                            }
+                        };
+                        let mut data = Vec::new();
+                        for _ in 0..rows {
+                            data.extend(
+                                rng.choose_distinct(limit, per),
+                            );
+                        }
+                        HostValue::from_indices(&i.shape, &data)
+                    }
+                }
+            });
+        }
+        let out = exe.run(&inputs).unwrap();
+        let by_name: BTreeMap<&str, &Tensor> = spec
+            .outputs
+            .iter()
+            .zip(&out)
+            .map(|(s, t)| (s.name.as_str(), t))
+            .collect();
+        let rho_wq = match &inputs[spec
+            .inputs
+            .iter()
+            .position(|i| i.name == "rho_wq")
+            .unwrap()]
+        {
+            HostValue::I32 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        let gamma_wq = match &inputs[spec
+            .inputs
+            .iter()
+            .position(|i| i.name == "gamma_wq")
+            .unwrap()]
+        {
+            HostValue::I32 { data, .. } => data.clone(),
+            _ => unreachable!(),
+        };
+        let kd = rt.cfg.kind("wq");
+        let rho: Vec<usize> =
+            rho_wq[..kd.np].iter().map(|&i| i as usize).collect();
+        let gamma: Vec<usize> =
+            gamma_wq[..kd.mp].iter().map(|&i| i as usize).collect();
+        let probe_full = by_name["probe_wq"];
+        let want = probe_full.gather2(&rho, &gamma);
+        let got = by_name["g_dws_wq"].index_axis0(0);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!(
+                (a - b).abs() <= 1e-5 * b.abs().max(1.0),
+                "factorized grad diverges from gathered: {a} vs {b}"
+            );
+        }
+    }
+}

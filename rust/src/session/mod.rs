@@ -34,9 +34,9 @@ pub mod observer;
 pub mod registry;
 pub mod report;
 
-pub use observer::{Observer, ObserverSet, SelectionEvent};
+pub use observer::{ExecEvent, Observer, ObserverSet, SelectionEvent};
 pub use registry::TaskRegistry;
-pub use report::{RunReport, SequenceReport};
+pub use report::{ExecProfile, RunReport, SequenceReport};
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -765,6 +765,7 @@ impl<'a> Session<'a> {
             memory_gb: self.obs.memory.gb,
             reselections: self.obs.selection.reselections(),
             selection_drift: self.obs.selection.mean_turnover(),
+            exec: self.obs.exec.profiles(),
         })
     }
 }

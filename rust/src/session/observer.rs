@@ -49,6 +49,27 @@ pub struct RunStartEvent<'a> {
     pub trainable_params: usize,
 }
 
+/// Executor activity attributed to one step: per-artifact deltas of
+/// call count, wall time, and host→device upload counts (split into
+/// static re-binds vs per-step traffic). Emitted by the trainer from
+/// runtime counter snapshots; prepare/finalize activity is attributed
+/// to the boundary steps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecEvent {
+    /// step the delta is attributed to
+    pub step: usize,
+    /// artifact manifest name (e.g. `grads_losia`)
+    pub artifact: String,
+    /// executions during this step
+    pub calls: u64,
+    /// wall-clock seconds spent inside the executor
+    pub secs: f64,
+    /// re-uploads of static bindings (0 on a healthy hot path)
+    pub static_uploads: u64,
+    /// per-step uploads (batch tensors, subnet deltas, …)
+    pub step_uploads: u64,
+}
+
 /// Fired between two stages of `Session::train_sequence`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TaskBoundaryEvent {
@@ -72,6 +93,7 @@ pub trait Observer {
     fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {}
     fn on_step(&mut self, _ev: &StepEvent) {}
     fn on_relocalize(&mut self, _ev: &SelectionEvent) {}
+    fn on_exec(&mut self, _ev: &ExecEvent) {}
     fn on_task_boundary(&mut self, _ev: &TaskBoundaryEvent) {}
     fn on_finalize(&mut self, _ev: &FinalizeEvent) {}
 }
@@ -240,6 +262,43 @@ impl Observer for SelectionObserver {
     }
 }
 
+/// Accumulates per-artifact executor stats for the current stage and
+/// feeds `RunReport::exec` — the PR-over-PR view of executor overhead
+/// (calls, mean/total secs, and the static/per-step upload split).
+#[derive(Debug, Default, Clone)]
+pub struct ExecProfileObserver {
+    pub by_artifact:
+        std::collections::BTreeMap<String, crate::session::report::ExecProfile>,
+}
+
+impl ExecProfileObserver {
+    /// Per-artifact profiles in name order.
+    pub fn profiles(&self) -> Vec<crate::session::report::ExecProfile> {
+        self.by_artifact.values().cloned().collect()
+    }
+}
+
+impl Observer for ExecProfileObserver {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {
+        self.by_artifact.clear();
+    }
+
+    fn on_exec(&mut self, ev: &ExecEvent) {
+        let p = self
+            .by_artifact
+            .entry(ev.artifact.clone())
+            .or_insert_with(|| crate::session::report::ExecProfile {
+                artifact: ev.artifact.clone(),
+                ..Default::default()
+            });
+        p.calls += ev.calls;
+        p.total_secs += ev.secs;
+        p.static_uploads += ev.static_uploads;
+        p.step_uploads += ev.step_uploads;
+        p.mean_secs = p.total_secs / p.calls.max(1) as f64;
+    }
+}
+
 // ------------------------------------------------------------ dispatch
 
 /// The observer bundle a trainer reports into: the four stock
@@ -252,6 +311,7 @@ pub struct ObserverSet {
     pub latency: LatencyObserver,
     pub memory: MemoryObserver,
     pub selection: SelectionObserver,
+    pub exec: ExecProfileObserver,
     pub extra: Vec<Box<dyn Observer>>,
 }
 
@@ -275,8 +335,20 @@ impl ObserverSet {
         self.latency.on_run_start(ev);
         self.memory.on_run_start(ev);
         self.selection.on_run_start(ev);
+        self.exec.on_run_start(ev);
         for o in &mut self.extra {
             o.on_run_start(ev);
+        }
+    }
+
+    pub fn emit_exec(&mut self, ev: &ExecEvent) {
+        self.loss.on_exec(ev);
+        self.latency.on_exec(ev);
+        self.memory.on_exec(ev);
+        self.selection.on_exec(ev);
+        self.exec.on_exec(ev);
+        for o in &mut self.extra {
+            o.on_exec(ev);
         }
     }
 
@@ -300,6 +372,7 @@ impl ObserverSet {
         self.latency.on_step(&ev);
         self.memory.on_step(&ev);
         self.selection.on_step(&ev);
+        self.exec.on_step(&ev);
         for o in &mut self.extra {
             o.on_step(&ev);
         }
@@ -310,6 +383,7 @@ impl ObserverSet {
         self.latency.on_relocalize(ev);
         self.memory.on_relocalize(ev);
         self.selection.on_relocalize(ev);
+        self.exec.on_relocalize(ev);
         for o in &mut self.extra {
             o.on_relocalize(ev);
         }
@@ -320,6 +394,7 @@ impl ObserverSet {
         self.latency.on_task_boundary(ev);
         self.memory.on_task_boundary(ev);
         self.selection.on_task_boundary(ev);
+        self.exec.on_task_boundary(ev);
         for o in &mut self.extra {
             o.on_task_boundary(ev);
         }
@@ -334,6 +409,7 @@ impl ObserverSet {
         self.latency.on_finalize(&ev);
         self.memory.on_finalize(&ev);
         self.selection.on_finalize(&ev);
+        self.exec.on_finalize(&ev);
         for o in &mut self.extra {
             o.on_finalize(&ev);
         }

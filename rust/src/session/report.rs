@@ -14,6 +14,68 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::{self, Json};
 
+/// Per-artifact executor stats for one stage: how often an artifact
+/// ran, how long it took, and how much host→device parameter traffic
+/// it generated (static re-binds vs per-step uploads). Fed by the
+/// stock [`crate::session::observer::ExecProfileObserver`]; the BENCH
+/// trajectory tracks executor overhead PR-over-PR through these.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExecProfile {
+    pub artifact: String,
+    pub calls: u64,
+    pub total_secs: f64,
+    pub mean_secs: f64,
+    /// re-uploads of static bindings (frozen params/indices); 0
+    /// between LoSiA relocalizations by design
+    pub static_uploads: u64,
+    /// per-step uploads (batch tensors, subnet deltas, …)
+    pub step_uploads: u64,
+}
+
+impl ExecProfile {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("artifact".into(), Json::Str(self.artifact.clone()));
+        m.insert("calls".into(), Json::Num(self.calls as f64));
+        m.insert("total_secs".into(), Json::Num(self.total_secs));
+        m.insert("mean_secs".into(), Json::Num(self.mean_secs));
+        m.insert(
+            "static_uploads".into(),
+            Json::Num(self.static_uploads as f64),
+        );
+        m.insert(
+            "step_uploads".into(),
+            Json::Num(self.step_uploads as f64),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExecProfile {
+            artifact: get_str(j, "artifact")?,
+            calls: get_num(j, "calls")? as u64,
+            total_secs: get_num(j, "total_secs")?,
+            mean_secs: get_num(j, "mean_secs")?,
+            static_uploads: get_num(j, "static_uploads")? as u64,
+            step_uploads: get_num(j, "step_uploads")? as u64,
+        })
+    }
+
+    /// One-line human summary (`losia info --report` / table16).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{}: {} calls, {:.3} ms/call ({:.3}s total), uploads \
+             static {} / per-step {}",
+            self.artifact,
+            self.calls,
+            self.mean_secs * 1e3,
+            self.total_secs,
+            self.static_uploads,
+            self.step_uploads,
+        )
+    }
+}
+
 /// Summary of one training (or evaluation-only) stage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
@@ -41,6 +103,8 @@ pub struct RunReport {
     pub reselections: usize,
     /// mean % selection turnover between consecutive reselections
     pub selection_drift: Option<f64>,
+    /// per-artifact executor stats (empty for evaluation-only runs)
+    pub exec: Vec<ExecProfile>,
 }
 
 impl Default for RunReport {
@@ -64,6 +128,7 @@ impl Default for RunReport {
             memory_gb: 0.0,
             reselections: 0,
             selection_drift: None,
+            exec: Vec::new(),
         }
     }
 }
@@ -142,6 +207,10 @@ impl RunReport {
             "selection_drift".into(),
             opt_num(self.selection_drift),
         );
+        m.insert(
+            "exec".into(),
+            Json::Arr(self.exec.iter().map(|p| p.to_json()).collect()),
+        );
         Json::Obj(m)
     }
 
@@ -179,6 +248,14 @@ impl RunReport {
             memory_gb: get_num(j, "memory_gb")?,
             reselections: get_num(j, "reselections")? as usize,
             selection_drift: get_opt_num(j, "selection_drift"),
+            exec: match j.get("exec") {
+                Some(Json::Arr(rows)) => rows
+                    .iter()
+                    .map(ExecProfile::from_json)
+                    .collect::<Result<_>>()?,
+                // older reports predate executor profiling
+                _ => Vec::new(),
+            },
         })
     }
 
@@ -207,6 +284,11 @@ impl RunReport {
         let path = Path::new("results").join(format!("{stem}.json"));
         self.save(&path)?;
         Ok(path)
+    }
+
+    /// Executor stats for one artifact, if it ran this stage.
+    pub fn exec_profile(&self, artifact: &str) -> Option<&ExecProfile> {
+        self.exec.iter().find(|p| p.artifact == artifact)
     }
 
     /// One-line human summary for CLI output.
@@ -334,6 +416,14 @@ mod tests {
             memory_gb: 0.0015,
             reselections: 7,
             selection_drift: Some(37.5),
+            exec: vec![ExecProfile {
+                artifact: "grads_losia".into(),
+                calls: 3,
+                total_secs: 0.75,
+                mean_secs: 0.25,
+                static_uploads: 27,
+                step_uploads: 36,
+            }],
         }
     }
 
@@ -388,6 +478,28 @@ mod tests {
         let bad_perf = r#"{"stages":[],"perf":[[1,"y"]]}"#;
         let j = crate::util::json::parse(bad_perf).unwrap();
         assert!(SequenceReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn exec_profiles_round_trip_and_tolerate_old_reports() {
+        let r = sample();
+        let s = r.to_json_string();
+        assert!(s.contains("\"static_uploads\":27"), "{s}");
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(back.exec, r.exec);
+        assert_eq!(
+            back.exec_profile("grads_losia").unwrap().calls,
+            3
+        );
+        assert!(back.exec_profile("missing").is_none());
+        // reports written before executor profiling lack the key
+        let mut j = r.to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("exec");
+        }
+        let old =
+            RunReport::from_json_str(&j.to_string()).unwrap();
+        assert!(old.exec.is_empty());
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Backend parity: the pure-Rust `RefBackend` must reproduce the
+//! PJRT/XLA path within f32 tolerance — per-artifact outputs and
+//! end-to-end training steps for every method.
+//!
+//! These tests self-skip when no lowered artifacts are present (the
+//! RefBackend-only CI lane); the XLA lane runs them for real.
+
+use losia::config::{Method, TrainConfig};
+use losia::coordinator::state::ModelState;
+use losia::runtime::{
+    artifacts_dir, HostValue, PjrtBackend, RefBackend, Runtime,
+};
+use losia::session::Session;
+use losia::tensor::Tensor;
+use losia::util::rng::Rng;
+
+/// Both runtimes over the SAME manifest config, or None when the XLA
+/// side is unavailable in this checkout.
+fn runtimes() -> Option<(Runtime, Runtime)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("[parity] no artifacts — skipping");
+        return None;
+    }
+    let cfg = losia::config::load_manifest(&dir, "tiny").ok()?;
+    let pjrt = match PjrtBackend::new() {
+        Ok(b) => Runtime::with_backend(cfg.clone(), Box::new(b)),
+        Err(e) => {
+            eprintln!("[parity] no PJRT client ({e}) — skipping");
+            return None;
+        }
+    };
+    let reff = Runtime::with_backend(cfg, Box::new(RefBackend));
+    Some((pjrt, reff))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+fn artifact_inputs(rt: &Runtime, name: &str, seed: u64) -> Vec<HostValue> {
+    let spec = rt.cfg.artifact(name).clone();
+    let mut rng = Rng::new(seed);
+    spec.inputs
+        .iter()
+        .map(|i| match i.dtype {
+            losia::config::Dtype::F32 => {
+                if i.name == "mask" || i.name.starts_with("norm") {
+                    HostValue::F32(Tensor::ones(&i.shape))
+                } else {
+                    HostValue::F32(Tensor::randn(&i.shape, 0.05, &mut rng))
+                }
+            }
+            losia::config::Dtype::I32 => {
+                let n: usize = i.shape.iter().product();
+                let data: Vec<usize> =
+                    (0..n).map(|_| rng.below(4)).collect();
+                HostValue::from_indices(&i.shape, &data)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn artifact_outputs_match_across_backends() {
+    let Some((pjrt, reff)) = runtimes() else { return };
+    for name in
+        ["fwd_logits", "fwd_loss", "grads_full", "grads_probe"]
+    {
+        let inputs = artifact_inputs(&pjrt, name, 11);
+        let a = pjrt.load(name).unwrap().run(&inputs).unwrap();
+        let b = reff.load(name).unwrap().run(&inputs).unwrap();
+        assert_eq!(a.len(), b.len(), "{name}: output arity");
+        for (i, (ta, tb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ta.shape, tb.shape, "{name}[{i}]: shape");
+            let scale = ta
+                .data
+                .iter()
+                .map(|v| v.abs())
+                .fold(0.0f32, f32::max)
+                .max(1.0);
+            let diff = max_abs_diff(&ta.data, &tb.data);
+            assert!(
+                diff <= 2e-3 * scale,
+                "{name} output {i} ({:?}): max diff {diff} vs \
+                 scale {scale}",
+                pjrt.cfg.artifact(name).outputs[i].name
+            );
+        }
+    }
+}
+
+fn train_on(
+    rt: &Runtime,
+    method: Method,
+    steps: usize,
+) -> (ModelState, Vec<(usize, f64)>) {
+    let tc = TrainConfig {
+        method,
+        steps,
+        lr: 2e-3,
+        time_slot: 2, // force a relocalization inside 6 steps
+        seed: 13,
+        ..TrainConfig::default()
+    };
+    let mut s = Session::builder()
+        .runtime(rt)
+        .train_config(tc)
+        .task("modmath")
+        .train_n(128)
+        .model_seed(13)
+        .data_seed(13)
+        .batcher_seed(13)
+        .build()
+        .unwrap();
+    let report = s.train().unwrap();
+    (s.into_state(), report.loss_curve)
+}
+
+#[test]
+fn every_method_trains_identically_on_both_backends() {
+    let Some((pjrt, reff)) = runtimes() else { return };
+    for method in [
+        Method::Fft,
+        Method::Lora,
+        Method::Pissa,
+        Method::Dora,
+        Method::Galore,
+        Method::Losia,
+        Method::LosiaPro,
+    ] {
+        let steps = 6;
+        let (sa, la) = train_on(&pjrt, method, steps);
+        let (sb, lb) = train_on(&reff, method, steps);
+        assert_eq!(la.len(), lb.len(), "{}", method.name());
+        for ((_, a), (_, b)) in la.iter().zip(&lb) {
+            assert!(
+                (a - b).abs() < 5e-3,
+                "{}: loss diverged {a} vs {b}",
+                method.name()
+            );
+        }
+        let mut worst = 0.0f32;
+        for ((_, ta), (_, tb)) in sa.params.iter().zip(&sb.params) {
+            worst = worst.max(max_abs_diff(&ta.data, &tb.data));
+        }
+        assert!(
+            worst < 5e-3,
+            "{}: weights diverged by {worst}",
+            method.name()
+        );
+    }
+}

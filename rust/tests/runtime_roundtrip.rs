@@ -1,4 +1,6 @@
-//! Integration: load tiny artifacts, execute fwd/grads, check numerics.
+//! Integration: load the tiny config on whichever backend the
+//! environment selects (PJRT with artifacts, the reference
+//! interpreter without), execute fwd/grads, check numerics.
 
 use losia::config::Dtype;
 use losia::runtime::{HostValue, Runtime};
@@ -42,6 +44,22 @@ fn fwd_logits_shape_and_finiteness() {
         vec![rt.cfg.batch, rt.cfg.seq_len, rt.cfg.vocab]
     );
     assert!(out[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn executables_outlive_the_runtime() {
+    // `Runtime::load` hands out `Arc<Executable>` (no more leaked
+    // statics): an executable keeps working after its runtime drops.
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let exe = rt.load("fwd_logits").unwrap();
+    let mut rng = Rng::new(7);
+    let inputs = init_inputs(&rt, "fwd_logits", &mut rng);
+    drop(rt);
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    let stats = exe.stats();
+    assert_eq!(stats.calls, 1);
+    assert!(stats.step_uploads > 0);
 }
 
 #[test]
