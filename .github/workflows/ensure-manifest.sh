@@ -19,6 +19,36 @@ edition = "2021"
 [dependencies]
 anyhow = "1"
 xla = { git = "https://github.com/LaurentMazare/xla-rs" }
+EOF
+
+# Opt-in rayon scheduler for the reference backend's row-parallel
+# kernels (build with `--features rayon`). The default build spawns
+# scoped std::thread workers, so it needs no extra crates — and the
+# dependency is only written into the manifest on request, keeping the
+# default manifest resolvable from offline/vendored build caches that
+# ship exactly the seed's dependency set. Results are bitwise
+# identical either way: chunking, not scheduling, fixes the numerics.
+if [ "${LOSIA_WITH_RAYON:-0}" = "1" ]; then
+  cat >> Cargo.toml <<'EOF'
+rayon = { version = "1", optional = true }
+
+[features]
+rayon = ["dep:rayon"]
+EOF
+else
+  # Declare the feature name even without the dependency so the
+  # `cfg(feature = "rayon")` gates in runtime/kernels.rs stay known to
+  # check-cfg (no unexpected_cfgs warning under -D warnings). Enabling
+  # it without LOSIA_WITH_RAYON=1 fails to resolve the crate, which is
+  # the documented opt-in path.
+  cat >> Cargo.toml <<'EOF'
+
+[features]
+rayon = []
+EOF
+fi
+
+cat >> Cargo.toml <<'EOF'
 
 # The pure-Rust reference backend does real tensor math inside
 # `cargo test`; opt-level 0 makes the suite needlessly slow.
@@ -55,9 +85,10 @@ path = "../examples/perfprobe.rs"
 EOF
 
 for b in fig2_gradstruct fig5_overheads fig6_losscurves fig7_selection \
-         fig8_intruder table11_rankfactor table14_memory table16_latency \
-         table1_domain table2_commonsense table3_ablations table4_timeslot \
-         table5_continual table6_gradmass; do
+         fig8_intruder kernels_micro table11_rankfactor table14_memory \
+         table16_latency table1_domain table2_commonsense \
+         table3_ablations table4_timeslot table5_continual \
+         table6_gradmass; do
   printf '\n[[bench]]\nname = "%s"\npath = "benches/%s.rs"\nharness = false\n' \
     "$b" "$b" >> Cargo.toml
 done

@@ -98,7 +98,11 @@ fn main() -> anyhow::Result<()> {
                 "{:.2}",
                 seq.average_performance().unwrap_or(f64::NAN)
             ),
-            format!("{:.2}", forward_transfer(&seq.perf, &single)),
+            format!(
+                "{:.2}",
+                forward_transfer(&seq.perf, &single)
+                    .unwrap_or(f64::NAN)
+            ),
             format!(
                 "{:.2}",
                 seq.backward_transfer().unwrap_or(f64::NAN)

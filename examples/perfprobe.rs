@@ -26,7 +26,8 @@ fn main() {
     let mut rng = Rng::new(7);
     let state = ModelState::init(&rt.cfg, &mut rng);
     let train = gen_train_set(&ModMath, 64, 1);
-    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+    let mut b =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1).unwrap();
     let batch = b.next_batch();
     let names: Vec<String> =
         rt.cfg.artifacts.keys().cloned().collect();

@@ -35,7 +35,8 @@ fn main() {
 
     let exe = rt.load("grads_full").unwrap();
     let train = gen_train_set(&ModMath, 64, 321);
-    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 2);
+    let mut b =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 2).unwrap();
     let batch = b.next_batch();
     let mut plan = ExecPlan::new(exe.clone(), &[]).unwrap();
     plan.bind_params(&res.state).unwrap();
@@ -79,8 +80,7 @@ fn main() {
                 // full sorted row/col profile for plotting (Fig 2)
                 let mut sorted_rows: Vec<f64> =
                     rs.iter().map(|&x| x as f64).collect();
-                sorted_rows
-                    .sort_by(|a, b| b.partial_cmp(a).unwrap());
+                sorted_rows.sort_by(|a, b| b.total_cmp(a));
                 for (rank, v) in sorted_rows.iter().enumerate() {
                     profile_rows.push(vec![
                         l as f64,

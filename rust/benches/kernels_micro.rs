@@ -1,0 +1,256 @@
+//! Kernel microbench: the blocked/row-parallel reference-backend
+//! kernels against the historical naive interpreter loops, plus real
+//! end-to-end RefBackend per-step wall time on the `small` builtin
+//! config.
+//!
+//! Not a paper artifact — this is the evidence harness for the
+//! "RefBackend perf" roadmap item (and the `table16_latency` story on
+//! machines without lowered artifacts). Three numbers matter:
+//!
+//! * `naive GEMM/step` — the exact multiply sequence one `grads_full`
+//!   step performs, run through verbatim copies of the old loops;
+//! * `blocked GEMM/step` (serial and parallel) — the same sequence
+//!   through `runtime::kernels`;
+//! * `RefBackend step` — a real `ExecPlan::run` per-step time with
+//!   statically bound parameters (includes attention, norms, softmax).
+//!
+//! `LOSIA_BENCH_STEPS` overrides the rep count (default 5).
+
+use losia::config::{builtin_config, ModelCfg};
+use losia::coordinator::state::ModelState;
+use losia::data::domain::ModMath;
+use losia::data::{gen_train_set, Batcher};
+use losia::metrics::latency::time_fn;
+use losia::runtime::{kernels, ExecPlan, RefBackend, Runtime};
+use losia::util::rng::Rng;
+use losia::util::table::Table;
+
+fn reps() -> usize {
+    std::env::var("LOSIA_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+}
+
+// ------------------------------------------------- the historical loops
+
+fn naive_mm(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn naive_mm_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for r in 0..k {
+        let arow = &a[r * n..(r + 1) * n];
+        let brow = &b[r * m..(r + 1) * m];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * m..(i + 1) * m];
+            for j in 0..m {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+fn naive_mm_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            *o += acc;
+        }
+    }
+    out
+}
+
+// --------------------------------------------------- the GEMM sequence
+
+#[derive(Clone, Copy)]
+enum Op {
+    Nn,
+    Tn,
+    Nt,
+}
+
+/// Every matmul one `grads_full` step performs (forward linears +
+/// lm_head, then per-linear weight-grad and input-grad). Each tuple
+/// holds the three size arguments **in that op's own parameter
+/// order**: `Nn`/`Nt` carry `(n, k, m)`, `Tn` carries `(k, n, m)`.
+/// Attention/norm/softmax cost is identical on both sides and
+/// excluded.
+fn gemm_step_shapes(cfg: &ModelCfg) -> Vec<(Op, usize, usize, usize)> {
+    let rows = cfg.batch * cfg.seq_len;
+    let mut shapes = Vec::new();
+    for _l in 0..cfg.n_layers {
+        for kind in &cfg.linear_kinds {
+            let kd = cfg.kind(kind);
+            // forward: y[rows,m] = x[rows,n] @ W[n,m]
+            shapes.push((Op::Nn, rows, kd.n, kd.m));
+            // weight grad: gW[n,m] = x[rows,n]ᵀ @ dy[rows,m]
+            shapes.push((Op::Tn, rows, kd.n, kd.m));
+            // input grad: dx[rows,n] = dy[rows,m] @ W[n,m]ᵀ
+            shapes.push((Op::Nt, rows, kd.m, kd.n));
+        }
+    }
+    // lm_head
+    shapes.push((Op::Nn, rows, cfg.d_model, cfg.vocab));
+    shapes.push((Op::Tn, rows, cfg.d_model, cfg.vocab));
+    shapes.push((Op::Nt, rows, cfg.vocab, cfg.d_model));
+    shapes
+}
+
+/// Operand/output lengths for a shape tuple, per op signature.
+fn operand_lens(op: Op, p1: usize, p2: usize, p3: usize) -> (usize, usize, usize) {
+    match op {
+        // mm(a[n,k], b[k,m]) -> out[n,m]
+        Op::Nn => (p1 * p2, p2 * p3, p1 * p3),
+        // mm_tn(a[k,n], b[k,m]) -> out[n,m]
+        Op::Tn => (p1 * p2, p1 * p3, p2 * p3),
+        // mm_nt(a[n,k], b[m,k]) -> out[n,m]
+        Op::Nt => (p1 * p2, p3 * p2, p1 * p3),
+    }
+}
+
+fn main() {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = builtin_config("small", &dir).expect("small config");
+    let reps = reps();
+    let threads = kernels::kernel_threads();
+    println!(
+        "kernels_micro: config {} ({} reps, {} kernel threads)",
+        cfg.name, reps, threads
+    );
+
+    // pre-build operand pairs for every shape in the step sequence
+    let shapes = gemm_step_shapes(&cfg);
+    let mut rng = Rng::new(42);
+    let data: Vec<(Vec<f32>, Vec<f32>, usize)> = shapes
+        .iter()
+        .map(|&(op, p1, p2, p3)| {
+            let (alen, blen, olen) = operand_lens(op, p1, p2, p3);
+            (
+                rng.normal_vec(alen, 0.1),
+                rng.normal_vec(blen, 0.1),
+                olen,
+            )
+        })
+        .collect();
+
+    let run_naive = || {
+        for (&(op, p1, p2, p3), (a, b, _)) in shapes.iter().zip(&data)
+        {
+            let out = match op {
+                Op::Nn => naive_mm(a, b, p1, p2, p3),
+                Op::Tn => naive_mm_tn(a, b, p1, p2, p3),
+                Op::Nt => naive_mm_nt(a, b, p1, p2, p3),
+            };
+            std::hint::black_box(&out);
+        }
+    };
+    let run_kernels = |t: usize| {
+        for (&(op, p1, p2, p3), (a, b, olen)) in
+            shapes.iter().zip(&data)
+        {
+            let mut out = vec![0.0f32; *olen];
+            match op {
+                Op::Nn => kernels::mm_into_threads(
+                    t, &mut out, a, b, p1, p2, p3,
+                ),
+                Op::Tn => kernels::mm_tn_into_threads(
+                    t, &mut out, a, b, p1, p2, p3,
+                ),
+                Op::Nt => kernels::mm_nt_into_threads(
+                    t, &mut out, a, b, p1, p2, p3,
+                ),
+            }
+            std::hint::black_box(&out);
+        }
+    };
+
+    let t_naive = time_fn(1, reps, run_naive);
+    let t_serial = time_fn(1, reps, || run_kernels(1));
+    let t_par = time_fn(1, reps, || run_kernels(threads));
+
+    // real end-to-end step: grads_full through a plan, params static
+    let rt = Runtime::with_backend(cfg, Box::new(RefBackend));
+    let mut rng = Rng::new(7);
+    let state = ModelState::init(&rt.cfg, &mut rng);
+    let train = gen_train_set(&ModMath, 128, 1);
+    let mut batcher =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1).unwrap();
+    let batch = batcher.next_batch();
+    let exe = rt.load("grads_full").unwrap();
+    let param_names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut plan =
+        ExecPlan::new(std::sync::Arc::clone(&exe), &param_names)
+            .unwrap();
+    plan.bind_params(&state).unwrap();
+    let t_step = time_fn(1, reps, || {
+        plan.bind_batch(&batch).unwrap();
+        let out = plan.run().unwrap();
+        std::hint::black_box(&out);
+    });
+    let stats = exe.stats();
+
+    let ms = |s: f64| format!("{:.2}", s * 1e3);
+    let speedup = |base: f64, t: f64| format!("{:.2}×", base / t);
+    let mut table = Table::new(
+        "Kernel microbench — grads_full GEMM sequence (small config)",
+        &["Path", "ms/step", "vs naive"],
+    );
+    table.row(&[
+        "naive loops (historical)".into(),
+        ms(t_naive.mean_secs),
+        "1.00×".into(),
+    ]);
+    table.row(&[
+        "blocked kernels, serial".into(),
+        ms(t_serial.mean_secs),
+        speedup(t_naive.mean_secs, t_serial.mean_secs),
+    ]);
+    table.row(&[
+        format!("blocked kernels, {threads} threads"),
+        ms(t_par.mean_secs),
+        speedup(t_naive.mean_secs, t_par.mean_secs),
+    ]);
+    table.row(&[
+        "RefBackend full step (plan)".into(),
+        ms(t_step.mean_secs),
+        speedup(t_naive.mean_secs, t_step.mean_secs),
+    ]);
+    table.print();
+    println!(
+        "grads_full exec stats: {} calls, mean {:.2} ms, \
+         static uploads {}, per-step uploads {}",
+        stats.calls,
+        stats.mean_secs() * 1e3,
+        stats.static_uploads,
+        stats.step_uploads,
+    );
+    table.write_csv("kernels_micro");
+}

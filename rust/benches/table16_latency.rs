@@ -39,7 +39,8 @@ fn main() {
     let mut rng = Rng::new(7);
     let state = ModelState::init(&rt.cfg, &mut rng);
     let train = gen_train_set(&ModMath, 256, 1);
-    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1);
+    let mut b =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 1).unwrap();
     let batch = b.next_batch();
 
     // forward-only reference through a plan: parameters upload once,

@@ -31,7 +31,8 @@ fn main() {
     // one full-gradient evaluation
     let exe = rt.load("grads_full").unwrap();
     let train = gen_train_set(&ModMath, 64, 123);
-    let mut b = Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 3);
+    let mut b =
+        Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 3).unwrap();
     let batch = b.next_batch();
     let mut plan = ExecPlan::new(exe.clone(), &[]).unwrap();
     plan.bind_params(&state).unwrap();

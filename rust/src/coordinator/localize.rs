@@ -101,7 +101,7 @@ pub fn localize_columns(col_importance: &[f32], k: usize) -> Vec<usize> {
 /// Ideal (unstructured) Top-K mass — the upper bound from Table 6.
 pub fn topk_mass(s: &Tensor, k: usize) -> f64 {
     let mut vals: Vec<f32> = s.data.clone();
-    vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    vals.sort_by(|a, b| b.total_cmp(a));
     vals.iter().take(k).map(|&v| v as f64).sum()
 }
 

@@ -2,6 +2,8 @@
 //! loss mask covering only answer+EOS predictions (standard
 //! instruction-tuning masking).
 
+use anyhow::{ensure, Result};
+
 use super::vocab::{BOS, EOS, PAD};
 use super::Example;
 use crate::util::rng::Rng;
@@ -24,10 +26,23 @@ impl Batch {
     }
 }
 
+/// Packed length of an example: `BOS + prompt + answer + EOS`.
+pub fn packed_len(ex: &Example) -> usize {
+    2 + ex.prompt.len() + ex.answer.len()
+}
+
+/// Whether an example fits a row of length `seq` (the last packed
+/// token is only ever predicted, never fed, so `seq + 1` is the cap).
+pub fn fits(ex: &Example, seq: usize) -> bool {
+    packed_len(ex) <= seq + 1
+}
+
 /// Pack one example into (tokens, targets, mask) rows of length `seq`.
 ///
 /// Position t predicts token t+1; mask is 1 exactly where the predicted
-/// token belongs to `answer ++ [EOS]`.
+/// token belongs to `answer ++ [EOS]`. Callers must pre-validate sizes
+/// ([`fits`] / [`Batcher::new`]); an oversized example here is a
+/// programming error and asserts.
 pub fn pack_example(
     ex: &Example,
     seq: usize,
@@ -75,24 +90,43 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Validate and shuffle a training set. Every example must fit a
+    /// `seq`-length row — a bad example is a typed error **here, at
+    /// construction**, not an assert at step N deep inside
+    /// [`Batcher::next_batch`].
     pub fn new(
         examples: Vec<Example>,
         batch: usize,
         seq: usize,
         seed: u64,
-    ) -> Self {
-        assert!(!examples.is_empty());
+    ) -> Result<Self> {
+        ensure!(batch >= 1, "batcher: batch size must be ≥ 1");
+        ensure!(
+            !examples.is_empty(),
+            "batcher: empty training set (nothing to batch)"
+        );
+        for (i, ex) in examples.iter().enumerate() {
+            ensure!(
+                fits(ex, seq),
+                "batcher: example {i} packs to {} tokens \
+                 (BOS + {} prompt + {} answer + EOS), which exceeds \
+                 the model's seq_len {seq}",
+                packed_len(ex),
+                ex.prompt.len(),
+                ex.answer.len()
+            );
+        }
         let mut rng = Rng::new(seed);
         let mut order: Vec<usize> = (0..examples.len()).collect();
         rng.shuffle(&mut order);
-        Batcher {
+        Ok(Batcher {
             examples,
             order,
             cursor: 0,
             rng,
             batch,
             seq,
-        }
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -186,6 +220,42 @@ mod tests {
     }
 
     #[test]
+    fn oversized_example_rejected_at_construction() {
+        // bad data must fail when the batcher is built, not at step N
+        let good = ex();
+        let big = Example {
+            prompt: vec![digit(1); 30],
+            answer: vec![digit(2)],
+        };
+        let err =
+            Batcher::new(vec![good, big], 2, 16, 0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("example 1"), "{msg}");
+        assert!(msg.contains("seq_len 16"), "{msg}");
+        assert!(msg.contains("30 prompt"), "{msg}");
+    }
+
+    #[test]
+    fn empty_set_rejected_at_construction() {
+        assert!(Batcher::new(vec![], 2, 8, 0).is_err());
+    }
+
+    #[test]
+    fn fits_matches_pack_boundary() {
+        // exactly seq+1 packed tokens is the largest packable example
+        let ex = Example {
+            prompt: vec![digit(1); 6],
+            answer: vec![digit(2)],
+        };
+        assert_eq!(packed_len(&ex), 9); // BOS + 6 + 1 + EOS
+        assert!(fits(&ex, 8));
+        assert!(!fits(&ex, 7));
+        let (t, _, m) = pack_example(&ex, 8);
+        assert_eq!(t.len(), 8);
+        assert!(m.iter().sum::<f32>() > 0.0);
+    }
+
+    #[test]
     fn batcher_cycles_and_reshuffles() {
         let exs: Vec<Example> = (0..5)
             .map(|i| Example {
@@ -193,7 +263,7 @@ mod tests {
                 answer: vec![digit(i as u32)],
             })
             .collect();
-        let mut b = Batcher::new(exs, 2, 8, 0);
+        let mut b = Batcher::new(exs, 2, 8, 0).unwrap();
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..10 {
             let batch = b.next_batch();
@@ -208,7 +278,7 @@ mod tests {
 
     #[test]
     fn batch_tensors_have_abi_shapes() {
-        let mut b = Batcher::new(vec![ex()], 3, 10, 1);
+        let mut b = Batcher::new(vec![ex()], 3, 10, 1).unwrap();
         let batch = b.next_batch();
         assert_eq!(batch.tokens.len(), batch.batch * batch.seq);
         assert_eq!(batch.targets.len(), batch.batch * batch.seq);

@@ -10,16 +10,24 @@ use crate::util::rng::Rng;
 
 /// Build the 8-task suite in paper order (ARC-C … BoolQ analogues).
 pub fn suite() -> Vec<Box<dyn Task>> {
-    vec![
-        Box::new(Parity { len: 5 }),      // ARC-C analogue (hard)
-        Box::new(Parity { len: 3 }),      // ARC-E analogue (easy)
-        Box::new(Copy { len: 6 }),        // HellaSwag (continuation)
-        Box::new(Compare),                // WinoGrande (binary choice)
-        Box::new(Majority { len: 5 }),    // PIQA
-        Box::new(Successor),              // OBQA
-        Box::new(Member { set_len: 4 }),  // SIQA
-        Box::new(BoolFact),               // BoolQ
-    ]
+    (0..SUITE_NAMES.len()).filter_map(suite_task).collect()
+}
+
+/// Construct suite task `i` (paper order, named by `SUITE_NAMES[i]`)
+/// without building the rest of the suite; `None` when `i` is out of
+/// range.
+pub fn suite_task(i: usize) -> Option<Box<dyn Task>> {
+    Some(match i {
+        0 => Box::new(Parity { len: 5 }) as Box<dyn Task>, // ARC-C (hard)
+        1 => Box::new(Parity { len: 3 }),     // ARC-E analogue (easy)
+        2 => Box::new(Copy { len: 6 }),       // HellaSwag (continuation)
+        3 => Box::new(Compare),               // WinoGrande (binary choice)
+        4 => Box::new(Majority { len: 5 }),   // PIQA
+        5 => Box::new(Successor),             // OBQA
+        6 => Box::new(Member { set_len: 4 }), // SIQA
+        7 => Box::new(BoolFact),              // BoolQ
+        _ => return None,
+    })
 }
 
 pub const SUITE_NAMES: [&str; 8] = [
@@ -312,6 +320,14 @@ mod tests {
         let s = suite();
         assert_eq!(s.len(), 8);
         assert_eq!(SUITE_NAMES.len(), 8);
+    }
+
+    #[test]
+    fn suite_task_covers_exactly_the_suite_range() {
+        for i in 0..SUITE_NAMES.len() {
+            assert!(suite_task(i).is_some(), "index {i}");
+        }
+        assert!(suite_task(SUITE_NAMES.len()).is_none());
     }
 
     #[test]

@@ -114,13 +114,7 @@ pub fn ppl_accuracy_by_category(
         let k = item.options.len();
         let s = &scores[cursor..cursor + k];
         cursor += k;
-        let best = s
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        let correct = best == item.correct;
+        let correct = best_option(s) == Some(item.correct);
         for key in ["__all__", item.category] {
             let e = hits.entry(key.to_string()).or_insert((0, 0));
             e.1 += 1;
@@ -133,4 +127,49 @@ pub fn ppl_accuracy_by_category(
         .into_iter()
         .map(|(k, (c, n))| (k, 100.0 * c as f64 / n.max(1) as f64))
         .collect())
+}
+
+/// Index of the minimum-NLL option, ignoring NaN scores.
+///
+/// A divergent run can turn an option's NLL into NaN; a
+/// `partial_cmp().unwrap()` there used to panic the whole eval pass.
+/// NaN options simply cannot win, and an all-NaN (or empty) option
+/// set returns `None` so the item scores as incorrect instead of
+/// crashing.
+fn best_option(scores: &[f64]) -> Option<usize> {
+    scores
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.is_nan())
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_option_picks_min() {
+        assert_eq!(best_option(&[3.0, 1.0, 2.0]), Some(1));
+    }
+
+    #[test]
+    fn best_option_ignores_nan_scores() {
+        assert_eq!(
+            best_option(&[f64::NAN, 2.0, 1.0, f64::NAN]),
+            Some(2)
+        );
+        // -inf is still an orderable value, NaN is not
+        assert_eq!(
+            best_option(&[f64::NAN, f64::NEG_INFINITY]),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn all_nan_options_score_as_incorrect_not_panic() {
+        assert_eq!(best_option(&[f64::NAN, f64::NAN]), None);
+        assert_eq!(best_option(&[]), None);
+    }
 }

@@ -1,36 +1,62 @@
 //! Continual-learning metrics (paper §4.4, Table 5).
 //!
-//! With `perf[i][j]` = accuracy on task j after training through task
-//! i (1-based rows; row 0 = single-task reference `p0`):
+//! `perf` is the N×N accuracy matrix of an N-task sequence, 0-based:
+//! `perf[i][j]` = accuracy on task j after training through task i
+//! (so `perf[i][i]` is the just-trained accuracy and `perf[N-1]` the
+//! final row). Single-task reference accuracies `p0` are passed
+//! separately to [`forward_transfer`] — there is no reference row
+//! inside the matrix.
 //!
-//! * AP  = mean_j perf[N][j]
+//! * AP  = mean_j perf[N−1][j]
 //! * FWT = mean_i (perf[i][i] − p0[i])
-//! * BWT = mean_{i<N} (perf[N][i] − perf[i][i])
+//! * BWT = mean_{i<N−1} (perf[N−1][i] − perf[i][i])
+//!
+//! Every metric validates the matrix shape and returns a typed error
+//! on ragged or empty input instead of panicking mid-report.
 
-/// Average Performance after the full sequence.
-pub fn average_performance(perf: &[Vec<f64>]) -> f64 {
-    let last = perf.last().expect("empty matrix");
-    last.iter().sum::<f64>() / last.len() as f64
+use anyhow::{ensure, Result};
+
+/// Check `perf` is a non-empty N×N matrix; returns N.
+fn validate_matrix(perf: &[Vec<f64>]) -> Result<usize> {
+    let n = perf.len();
+    ensure!(n > 0, "continual metrics: empty performance matrix");
+    for (i, row) in perf.iter().enumerate() {
+        ensure!(
+            row.len() == n,
+            "continual metrics: ragged performance matrix — row {i} \
+             has {} entries, expected {n} (one per task)",
+            row.len()
+        );
+    }
+    Ok(n)
 }
 
-/// Forward Transfer against single-task baselines `p0`.
-pub fn forward_transfer(perf: &[Vec<f64>], p0: &[f64]) -> f64 {
-    let n = perf.len();
-    assert_eq!(p0.len(), n);
-    (0..n)
-        .map(|i| perf[i][i] - p0[i])
-        .sum::<f64>()
-        / n as f64
+/// Average Performance over the final stage's row.
+pub fn average_performance(perf: &[Vec<f64>]) -> Result<f64> {
+    let n = validate_matrix(perf)?;
+    let last = &perf[n - 1];
+    Ok(last.iter().sum::<f64>() / n as f64)
+}
+
+/// Forward Transfer against single-task baselines `p0` (one per task).
+pub fn forward_transfer(perf: &[Vec<f64>], p0: &[f64]) -> Result<f64> {
+    let n = validate_matrix(perf)?;
+    ensure!(
+        p0.len() == n,
+        "continual metrics: {} single-task baselines for {n} tasks",
+        p0.len()
+    );
+    Ok((0..n).map(|i| perf[i][i] - p0[i]).sum::<f64>() / n as f64)
 }
 
 /// Backward Transfer (forgetting; more negative = worse).
-pub fn backward_transfer(perf: &[Vec<f64>]) -> f64 {
-    let n = perf.len();
-    assert!(n >= 2, "BWT needs at least two tasks");
-    (0..n - 1)
+pub fn backward_transfer(perf: &[Vec<f64>]) -> Result<f64> {
+    let n = validate_matrix(perf)?;
+    ensure!(n >= 2, "continual metrics: BWT needs at least two tasks");
+    Ok((0..n - 1)
         .map(|i| perf[n - 1][i] - perf[i][i])
         .sum::<f64>()
-        / (n - 1) as f64
+        / (n - 1) as f64)
 }
 
 #[cfg(test)]
@@ -48,7 +74,10 @@ mod tests {
 
     #[test]
     fn ap_is_last_row_mean() {
-        assert!((average_performance(&matrix()) - 80.0).abs() < 1e-9);
+        assert!(
+            (average_performance(&matrix()).unwrap() - 80.0).abs()
+                < 1e-9
+        );
     }
 
     #[test]
@@ -56,19 +85,48 @@ mod tests {
         let p0 = vec![75.0, 88.0, 97.0];
         // (80-75)+(90-88)+(95-97) = 5  → /3
         assert!(
-            (forward_transfer(&matrix(), &p0) - 5.0 / 3.0).abs() < 1e-9
+            (forward_transfer(&matrix(), &p0).unwrap() - 5.0 / 3.0)
+                .abs()
+                < 1e-9
         );
     }
 
     #[test]
     fn bwt_measures_forgetting() {
         // (60-80)+(85-90) = -25 → /2
-        assert!((backward_transfer(&matrix()) + 12.5).abs() < 1e-9);
+        assert!(
+            (backward_transfer(&matrix()).unwrap() + 12.5).abs() < 1e-9
+        );
     }
 
     #[test]
     fn no_forgetting_gives_zero_bwt() {
         let perf = vec![vec![80.0, 0.0], vec![80.0, 90.0]];
-        assert_eq!(backward_transfer(&perf), 0.0);
+        assert_eq!(backward_transfer(&perf).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn ragged_matrix_is_a_typed_error_not_a_panic() {
+        // row 1 is short — indexing perf[i][i] used to go out of
+        // bounds here
+        let ragged = vec![vec![80.0, 50.0], vec![70.0]];
+        for err in [
+            average_performance(&ragged).unwrap_err(),
+            forward_transfer(&ragged, &[75.0, 88.0]).unwrap_err(),
+            backward_transfer(&ragged).unwrap_err(),
+        ] {
+            let msg = err.to_string();
+            assert!(msg.contains("ragged"), "{msg}");
+            assert!(msg.contains("row 1"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn empty_and_undersized_inputs_are_typed_errors() {
+        assert!(average_performance(&[]).is_err());
+        let one = vec![vec![50.0]];
+        assert!(backward_transfer(&one).is_err());
+        // baseline length mismatch
+        assert!(forward_transfer(&matrix(), &[1.0]).is_err());
     }
 }

@@ -31,7 +31,9 @@ pub fn time_fn<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a NaN sample (clock misbehaviour) must not panic the
+    // whole bench run
+    samples.sort_by(f64::total_cmp);
     let kept: &[f64] = if samples.len() >= 3 {
         &samples[..samples.len() - 1]
     } else {

@@ -1,0 +1,636 @@
+//! Shared compute kernels for the reference backend: cache-blocked,
+//! row-parallel matrix multiplies plus a scratch-buffer pool.
+//!
+//! ## Determinism contract
+//!
+//! Every kernel accumulates each output element in ascending-`k`
+//! order, exactly like the historical naive interpreter loops, and
+//! parallelism only partitions **output rows** across threads — chunk
+//! boundaries never change the per-element accumulation order. Parallel
+//! output is therefore bitwise identical to serial output (pinned by
+//! `serial_and_parallel_agree_bitwise` below), which is what lets
+//! `tests/backend_parity.rs` keep its tolerances while the thread count
+//! varies between machines.
+//!
+//! One deliberate divergence from the old loops: they skipped
+//! `a == 0.0` terms, these kernels always multiply. For finite
+//! operands that can only flip the sign of an exactly-zero result
+//! (`±0`, invisible to `==` and to tolerance checks); a zero weight
+//! against a non-finite activation now propagates NaN where the skip
+//! hid it — which is the honest IEEE answer.
+//!
+//! ## Threading
+//!
+//! The worker count defaults to `std::thread::available_parallelism`
+//! and can be overridden with `LOSIA_KERNEL_THREADS` (`1` forces
+//! serial). Small products (< [`PAR_MIN_MACS`] multiply-accumulates)
+//! always run serial so the tiny-config test suite is not taxed with
+//! spawn overhead. Workers are scoped `std::thread` spawns by default;
+//! with the optional `rayon` cargo feature the same row chunks are
+//! dispatched onto the rayon global pool instead (identical results —
+//! chunking, not scheduling, determines the numerics).
+//!
+//! ## Scratch reuse
+//!
+//! [`Pool`] recycles the interpreter's large `f32` temporaries across
+//! `execute()` calls: each `RefBackend` buffer set owns one pool, so a
+//! training step re-uses the previous step's activation/gradient
+//! buffers instead of re-allocating them (see
+//! `runtime/README.md` § kernels).
+
+// index-heavy kernels: explicit loops ARE the clearest form here
+#![allow(clippy::needless_range_loop)]
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Minimum multiply-accumulate count before a kernel fans out to
+/// threads; below this, spawn overhead dominates the work.
+pub const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Row-tile height: output rows computed together so one loaded `b`
+/// row feeds several accumulator rows.
+const RT: usize = 4;
+
+/// Column-tile width: per-tile accumulators live in registers/L1
+/// across the whole `k` loop instead of re-reading the output row.
+const JT: usize = 16;
+
+/// Worker-thread count for the row-parallel kernels: the
+/// `LOSIA_KERNEL_THREADS` env var when set (minimum 1), else
+/// `available_parallelism`. Cached for the process lifetime.
+pub fn kernel_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("LOSIA_KERNEL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .map(|n| n.max(1))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+fn effective_threads(requested: usize, rows: usize, macs: usize) -> usize {
+    if requested <= 1 || macs < PAR_MIN_MACS {
+        return 1;
+    }
+    requested.min(rows).max(1)
+}
+
+/// Split `out` into contiguous row chunks and run `body(row0, chunk)`
+/// on each, across `threads` workers. `body` must compute a row from
+/// `(row index, inputs)` alone, so the chunking is invisible in the
+/// output.
+fn for_row_chunks<F>(
+    threads: usize,
+    out: &mut [f32],
+    rows: usize,
+    row_len: usize,
+    body: &F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len);
+    if threads <= 1 || rows <= 1 {
+        body(0, out);
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    #[cfg(feature = "rayon")]
+    rayon::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
+            s.spawn(move |_| body(ci * per, chunk));
+        }
+    });
+    #[cfg(not(feature = "rayon"))]
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
+            s.spawn(move || body(ci * per, chunk));
+        }
+    });
+}
+
+// ------------------------------------------------------------- kernels
+
+/// `out[n,m] += A[n,k] @ B[k,m]` with the configured thread count.
+pub fn mm_into(out: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usize, m: usize) {
+    mm_into_threads(kernel_threads(), out, a, b, n, k, m);
+}
+
+/// Allocating convenience wrapper over [`mm_into`].
+pub fn mm(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    mm_into(&mut out, a, b, n, k, m);
+    out
+}
+
+/// [`mm_into`] with an explicit worker count (`1` = serial); the
+/// determinism tests and the kernel microbench drive this directly.
+pub fn mm_into_threads(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    if n == 0 || m == 0 {
+        return; // empty output; avoid the rows = len/m division
+    }
+    let t = effective_threads(threads, n, n * k * m);
+    for_row_chunks(t, out, n, m, &|row0, chunk| {
+        let rows = chunk.len() / m;
+        mm_chunk(chunk, &a[row0 * k..(row0 + rows) * k], b, k, m);
+    });
+}
+
+/// `out[n,m] += A[k,n]ᵀ @ B[k,m]` (contraction over rows of both).
+pub fn mm_tn_into(out: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize, m: usize) {
+    mm_tn_into_threads(kernel_threads(), out, a, b, k, n, m);
+}
+
+/// Allocating convenience wrapper over [`mm_tn_into`].
+pub fn mm_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    mm_tn_into(&mut out, a, b, k, n, m);
+    out
+}
+
+/// [`mm_tn_into`] with an explicit worker count.
+pub fn mm_tn_into_threads(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    m: usize,
+) {
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    if n == 0 || m == 0 {
+        return; // empty output; avoid the rows = len/m division
+    }
+    let t = effective_threads(threads, n, n * k * m);
+    for_row_chunks(t, out, n, m, &|row0, chunk| {
+        mm_tn_chunk(chunk, row0, a, b, n, k, m);
+    });
+}
+
+/// `out[n,m] += A[n,k] @ B[m,k]ᵀ` (contraction over columns of both).
+pub fn mm_nt_into(out: &mut [f32], a: &[f32], b: &[f32], n: usize, k: usize, m: usize) {
+    mm_nt_into_threads(kernel_threads(), out, a, b, n, k, m);
+}
+
+/// Allocating convenience wrapper over [`mm_nt_into`].
+pub fn mm_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    mm_nt_into(&mut out, a, b, n, k, m);
+    out
+}
+
+/// [`mm_nt_into`] with an explicit worker count. `B` is transposed
+/// once up front (O(km), amortized against O(nkm) compute) so the
+/// inner loops stream both operands contiguously and vectorize.
+pub fn mm_nt_into_threads(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    mm_nt_impl(threads, out, a, b, n, k, m, None);
+}
+
+/// [`mm_nt_into`] drawing the transpose scratch from `pool` (and
+/// returning it) instead of allocating per call — the interpreter's
+/// hot backward path calls this once per linear per step.
+pub fn mm_nt_into_pooled(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    pool: &Pool,
+) {
+    mm_nt_impl(kernel_threads(), out, a, b, n, k, m, Some(pool));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mm_nt_impl(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    pool: Option<&Pool>,
+) {
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), m * k);
+    if n == 0 || m == 0 {
+        return; // empty output; avoid the rows = len/m division
+    }
+    let mut bt = match pool {
+        Some(p) => p.zeroed(b.len()),
+        None => vec![0.0f32; b.len()],
+    };
+    transpose_into(&mut bt, b, m, k);
+    let t = effective_threads(threads, n, n * k * m);
+    for_row_chunks(t, out, n, m, &|row0, chunk| {
+        let rows = chunk.len() / m;
+        mm_chunk(chunk, &a[row0 * k..(row0 + rows) * k], &bt, k, m);
+    });
+    if let Some(p) = pool {
+        p.recycle(bt);
+    }
+}
+
+/// `out[cols,rows] = xᵀ` for row-major `x[rows,cols]`.
+fn transpose_into(out: &mut [f32], x: &[f32], rows: usize, cols: usize) {
+    debug_assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        let xrow = &x[i * cols..(i + 1) * cols];
+        for (j, &v) in xrow.iter().enumerate() {
+            out[j * rows + i] = v;
+        }
+    }
+}
+
+/// Register-tiled `chunk[rows,m] += A[rows,k] @ B[k,m]` where `a` is
+/// already offset to the chunk's first row. Per output element the
+/// accumulation runs `k` ascending — identical to a naive axpy loop.
+fn mm_chunk(out: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize) {
+    let rows = out.len() / m;
+    debug_assert_eq!(a.len(), rows * k);
+    let mut i0 = 0usize;
+    while i0 < rows {
+        let il = RT.min(rows - i0);
+        let mut j0 = 0usize;
+        while j0 < m {
+            let jl = JT.min(m - j0);
+            let mut acc = [[0.0f32; JT]; RT];
+            for kk in 0..k {
+                let brow = &b[kk * m + j0..kk * m + j0 + jl];
+                for r in 0..il {
+                    let av = a[(i0 + r) * k + kk];
+                    for (x, &bv) in acc[r].iter_mut().zip(brow) {
+                        *x += av * bv;
+                    }
+                }
+            }
+            for r in 0..il {
+                let off = (i0 + r) * m + j0;
+                let orow = &mut out[off..off + jl];
+                for (o, &x) in orow.iter_mut().zip(&acc[r][..jl]) {
+                    *o += x;
+                }
+            }
+            j0 += jl;
+        }
+        i0 += il;
+    }
+}
+
+/// Tiled transposed-A chunk: `out` rows are columns `row0..` of
+/// `a[k,n]`. Accumulation per element runs `k` ascending, matching the
+/// historical `mm_tn` loop nest.
+fn mm_tn_chunk(
+    out: &mut [f32],
+    row0: usize,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    let rows = out.len() / m;
+    let mut i0 = 0usize;
+    while i0 < rows {
+        let il = RT.min(rows - i0);
+        let mut j0 = 0usize;
+        while j0 < m {
+            let jl = JT.min(m - j0);
+            let mut acc = [[0.0f32; JT]; RT];
+            for kk in 0..k {
+                let brow = &b[kk * m + j0..kk * m + j0 + jl];
+                let arow = &a[kk * n..(kk + 1) * n];
+                for r in 0..il {
+                    let av = arow[row0 + i0 + r];
+                    for (x, &bv) in acc[r].iter_mut().zip(brow) {
+                        *x += av * bv;
+                    }
+                }
+            }
+            for r in 0..il {
+                let off = (i0 + r) * m + j0;
+                let orow = &mut out[off..off + jl];
+                for (o, &x) in orow.iter_mut().zip(&acc[r][..jl]) {
+                    *o += x;
+                }
+            }
+            j0 += jl;
+        }
+        i0 += il;
+    }
+}
+
+// ---------------------------------------------------------------- pool
+
+/// Retain at most this many free buffers; beyond it, returned buffers
+/// are simply dropped (bounds memory held by an idle plan). One
+/// `grads_*` execute recycles ~100 backward temporaries *before* the
+/// forward cache (~60 buffers, including the only attention-probs-
+/// sized allocations) comes back at the end of the dispatch — the cap
+/// must exceed their sum or the largest buffers are the ones dropped
+/// every step.
+const POOL_MAX_BUFS: usize = 256;
+
+/// Scratch-buffer pool: recycles large `f32` temporaries across
+/// interpreter `execute()` calls. `RefBackend` device buffers own one
+/// pool per plan, so step N+1's forward pass reuses step N's
+/// activation and gradient allocations.
+///
+/// Interior mutability (`RefCell`) lets the interpreter draw scratch
+/// while its inputs are immutably borrowed from the same buffer set;
+/// the pool is intentionally `!Sync` — worker threads only ever see
+/// `&[f32]` / `&mut [f32]` slices of buffers the caller drew.
+#[derive(Default)]
+pub struct Pool {
+    free: RefCell<Vec<Vec<f32>>>,
+}
+
+impl Pool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A zeroed buffer of exactly `len` elements, reusing the
+    /// best-fitting retained allocation when one is large enough.
+    pub fn zeroed(&self, len: usize) -> Vec<f32> {
+        let mut v = self.cleared(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// An **empty** buffer (len 0) with capacity ≥ `capacity`, reusing
+    /// a retained allocation without paying [`Pool::zeroed`]'s fill —
+    /// for targets that are fully overwritten via
+    /// `extend_from_slice`/`push`.
+    pub fn cleared(&self, capacity: usize) -> Vec<f32> {
+        let mut free = self.free.borrow_mut();
+        let mut best: Option<(usize, usize)> = None;
+        for (i, b) in free.iter().enumerate() {
+            let c = b.capacity();
+            let better = match best {
+                Some((_, bc)) => c < bc,
+                None => true,
+            };
+            if c >= capacity && better {
+                best = Some((i, c));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut v = free.swap_remove(i);
+                v.clear();
+                v
+            }
+            None => Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Return a buffer for later reuse (no-op for empty allocations or
+    /// once [`POOL_MAX_BUFS`] buffers are already retained).
+    pub fn recycle(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.borrow_mut();
+        if free.len() < POOL_MAX_BUFS {
+            free.push(v);
+        }
+    }
+
+    /// Number of currently retained free buffers (test hook).
+    pub fn retained(&self) -> usize {
+        self.free.borrow().len()
+    }
+}
+
+// ---------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The historical interpreter loops, kept verbatim (including the
+    /// `av == 0.0` skip) as the numeric reference. The blocked kernels
+    /// drop that skip — for finite operands the only possible
+    /// divergence is the sign of an exactly-zero result (`±0`), which
+    /// `to_bits` equality on zero-free random data cannot hit; with
+    /// non-finite operands (`0 × ∞`) results can genuinely differ,
+    /// and that corner is documented, not pinned.
+    fn naive_mm(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    fn naive_mm_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for r in 0..k {
+            let arow = &a[r * n..(r + 1) * n];
+            let brow = &b[r * m..(r + 1) * m];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * m..(i + 1) * m];
+                for j in 0..m {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    fn naive_mm_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += arow[kk] * brow[kk];
+                }
+                *o += acc;
+            }
+        }
+        out
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        rng.normal_vec(n, 1.0)
+    }
+
+    fn assert_bitwise_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: element {i} differs ({x} vs {y})"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_kernels_match_naive_loops_bitwise() {
+        // ragged shapes exercise every RT/JT tail path
+        for &(n, k, m) in
+            &[(1, 1, 1), (5, 7, 9), (33, 17, 40), (64, 32, 64)]
+        {
+            let a = randv(n * k, 1);
+            let b = randv(k * m, 2);
+            let bt = randv(m * k, 3);
+            let at = randv(k * n, 4);
+
+            let mut got = vec![0.0f32; n * m];
+            mm_into_threads(1, &mut got, &a, &b, n, k, m);
+            assert_bitwise_eq(&got, &naive_mm(&a, &b, n, k, m), "mm");
+
+            let mut got = vec![0.0f32; n * m];
+            mm_tn_into_threads(1, &mut got, &at, &b, k, n, m);
+            assert_bitwise_eq(
+                &got,
+                &naive_mm_tn(&at, &b, k, n, m),
+                "mm_tn",
+            );
+
+            let mut got = vec![0.0f32; n * m];
+            mm_nt_into_threads(1, &mut got, &a, &bt, n, k, m);
+            assert_bitwise_eq(
+                &got,
+                &naive_mm_nt(&a, &bt, n, k, m),
+                "mm_nt",
+            );
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_bitwise() {
+        // n*k*m must clear PAR_MIN_MACS so the threaded path engages;
+        // ragged dims keep the tile tails honest under chunking.
+        let (n, k, m) = (97, 64, 49);
+        assert!(n * k * m >= PAR_MIN_MACS);
+        let a = randv(n * k, 10);
+        let b = randv(k * m, 11);
+        let at = randv(k * n, 12);
+        let bt = randv(m * k, 13);
+        for threads in [2, 3, 8] {
+            let mut serial = vec![0.0f32; n * m];
+            mm_into_threads(1, &mut serial, &a, &b, n, k, m);
+            let mut par = vec![0.0f32; n * m];
+            mm_into_threads(threads, &mut par, &a, &b, n, k, m);
+            assert_bitwise_eq(&serial, &par, "mm par");
+
+            let mut serial = vec![0.0f32; n * m];
+            mm_tn_into_threads(1, &mut serial, &at, &b, k, n, m);
+            let mut par = vec![0.0f32; n * m];
+            mm_tn_into_threads(threads, &mut par, &at, &b, k, n, m);
+            assert_bitwise_eq(&serial, &par, "mm_tn par");
+
+            let mut serial = vec![0.0f32; n * m];
+            mm_nt_into_threads(1, &mut serial, &a, &bt, n, k, m);
+            let mut par = vec![0.0f32; n * m];
+            mm_nt_into_threads(threads, &mut par, &a, &bt, n, k, m);
+            assert_bitwise_eq(&serial, &par, "mm_nt par");
+        }
+    }
+
+    #[test]
+    fn mm_matches_tensor_matmul() {
+        use crate::tensor::Tensor;
+        let (n, k, m) = (6, 5, 4);
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, m], 1.0, &mut rng);
+        let want = a.matmul(&b);
+        let got = mm(&a.data, &b.data, n, k, m);
+        for (x, y) in got.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn into_variants_accumulate() {
+        // `+=` semantics: pre-seeded output keeps its contribution
+        let (n, k, m) = (3, 2, 3);
+        let a = randv(n * k, 20);
+        let b = randv(k * m, 21);
+        let base = randv(n * m, 22);
+        let mut out = base.clone();
+        mm_into_threads(1, &mut out, &a, &b, n, k, m);
+        let plain = naive_mm(&a, &b, n, k, m);
+        for i in 0..n * m {
+            assert_eq!(
+                out[i].to_bits(),
+                (base[i] + plain[i]).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn pool_recycles_and_zeroes() {
+        let pool = Pool::new();
+        let mut v = pool.zeroed(64);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        pool.recycle(v);
+        assert_eq!(pool.retained(), 1);
+        let v2 = pool.zeroed(32);
+        assert!(v2.iter().all(|&x| x == 0.0), "reused buffer not zeroed");
+        assert!(v2.capacity() >= 64, "did not reuse the retained buffer");
+        assert_eq!(pool.retained(), 0);
+        // too-small buffers are left retained, fresh alloc happens
+        pool.recycle(v2);
+        let big = pool.zeroed(1024);
+        assert_eq!(big.len(), 1024);
+        assert_eq!(pool.retained(), 1);
+    }
+
+    #[test]
+    fn kernel_threads_is_at_least_one() {
+        assert!(kernel_threads() >= 1);
+    }
+}

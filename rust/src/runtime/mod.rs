@@ -13,9 +13,14 @@
 //!   automatic fallback when no manifest is present.
 //!
 //! Selection: `LOSIA_BACKEND=ref|pjrt|auto` (default `auto`).
+//!
+//! The reference interpreter's matrix multiplies live in [`kernels`]:
+//! cache-blocked, row-parallel (`LOSIA_KERNEL_THREADS`), and bitwise
+//! deterministic regardless of thread count.
 
 pub mod backend;
 pub mod host;
+pub mod kernels;
 pub mod pjrt;
 pub mod reference;
 

@@ -19,6 +19,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -27,6 +28,7 @@ use crate::runtime::backend::{
     Backend, DeviceBuffers, Executor, HostRef,
 };
 use crate::runtime::host::HostValue;
+use crate::runtime::kernels::{self, Pool};
 use crate::tensor::Tensor;
 
 const NORM_EPS: f32 = 1e-6;
@@ -50,8 +52,8 @@ impl Backend for RefBackend {
         // fail at load time, like a missing HLO file would
         base_name(&spec.name)?;
         Ok(Box::new(RefExecutor {
-            cfg: std::sync::Arc::new(cfg.clone()),
-            spec: std::sync::Arc::new(spec.clone()),
+            cfg: Arc::new(cfg.clone()),
+            spec: Arc::new(spec.clone()),
         }))
     }
 }
@@ -70,30 +72,72 @@ fn base_name(name: &str) -> Result<&str> {
 }
 
 struct RefExecutor {
-    cfg: std::sync::Arc<ModelCfg>,
-    spec: std::sync::Arc<ArtifactSpec>,
+    cfg: Arc<ModelCfg>,
+    spec: Arc<ArtifactSpec>,
 }
 
 impl Executor for RefExecutor {
     fn alloc_buffers(&self) -> Box<dyn DeviceBuffers> {
         let slots = (0..self.spec.inputs.len()).map(|_| None).collect();
         Box::new(RefBuffers {
-            cfg: std::sync::Arc::clone(&self.cfg),
-            spec: std::sync::Arc::clone(&self.spec),
+            cfg: Arc::clone(&self.cfg),
+            spec: Arc::clone(&self.spec),
             slots,
+            pool: Pool::new(),
         })
     }
 }
 
+/// The interpreter's "device": `Arc`'d host-value snapshots per input
+/// slot plus a scratch pool reused across `execute()` calls.
+///
+/// Uploads snapshot the host value at bind time (the static-binding
+/// invalidation contract), but a re-upload into a slot of the same
+/// shape/dtype overwrites the existing allocation in place instead of
+/// reallocating — a static binding therefore costs exactly one
+/// allocation for the plan's lifetime, and zero copies per step
+/// between mutations.
 struct RefBuffers {
-    cfg: std::sync::Arc<ModelCfg>,
-    spec: std::sync::Arc<ArtifactSpec>,
-    slots: Vec<Option<HostValue>>,
+    cfg: Arc<ModelCfg>,
+    spec: Arc<ArtifactSpec>,
+    slots: Vec<Option<Arc<HostValue>>>,
+    pool: Pool,
+}
+
+/// Overwrite `slot` in place when the incoming value matches its
+/// shape/dtype and the slot is not shared; `false` means the caller
+/// must allocate a fresh snapshot.
+fn try_reuse_slot(slot: &mut Arc<HostValue>, value: HostRef<'_>) -> bool {
+    let Some(hv) = Arc::get_mut(slot) else {
+        return false;
+    };
+    match (hv, value) {
+        (HostValue::F32(t), HostRef::F32 { shape, data })
+            if t.shape.as_slice() == shape =>
+        {
+            t.data.copy_from_slice(data);
+            true
+        }
+        (
+            HostValue::I32 { shape: s0, data: d0 },
+            HostRef::I32 { shape, data },
+        ) if s0.as_slice() == shape => {
+            d0.copy_from_slice(data);
+            true
+        }
+        _ => false,
+    }
 }
 
 impl DeviceBuffers for RefBuffers {
     fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()> {
-        self.slots[slot] = Some(value.to_host_value());
+        let reused = match &mut self.slots[slot] {
+            Some(arc) => try_reuse_slot(arc, value),
+            None => false,
+        };
+        if !reused {
+            self.slots[slot] = Some(Arc::new(value.to_host_value()));
+        }
         Ok(())
     }
 
@@ -108,9 +152,9 @@ impl DeviceBuffers for RefBuffers {
                     spec.name
                 )
             })?;
-            inputs.insert(spec.name.as_str(), v);
+            inputs.insert(spec.name.as_str(), v.as_ref());
         }
-        run_artifact(&self.cfg, &self.spec, &inputs)
+        run_artifact(&self.cfg, &self.spec, &inputs, &self.pool)
     }
 }
 
@@ -120,23 +164,27 @@ fn run_artifact(
     cfg: &ModelCfg,
     spec: &ArtifactSpec,
     inputs: &BTreeMap<&str, &HostValue>,
+    pool: &Pool,
 ) -> Result<Vec<Tensor>> {
     let base = base_name(&spec.name)?;
-    let model = Model::new(cfg, inputs, base)?;
+    let model = Model::new(cfg, inputs, base, pool)?;
     let mut out: BTreeMap<String, Tensor> = BTreeMap::new();
 
     match base {
         "fwd_logits" => {
-            let fwd = model.forward()?;
-            let dm = &model.dm;
+            let mut fwd = model.forward()?;
+            let dm = model.dm;
+            let logits = std::mem::take(&mut fwd.logits);
+            fwd.recycle(pool);
             out.insert(
                 "logits".into(),
-                Tensor::from_vec(&[dm.b, dm.s, dm.v], fwd.logits),
+                Tensor::from_vec(&[dm.b, dm.s, dm.v], logits),
             );
         }
         "fwd_loss" => {
             let fwd = model.forward()?;
             let (nll, cnt) = model.seq_nll(&fwd.logits)?;
+            fwd.recycle(pool);
             let b = model.dm.b;
             out.insert("nll".into(), Tensor::from_vec(&[b], nll));
             out.insert("cnt".into(), Tensor::from_vec(&[b], cnt));
@@ -145,6 +193,7 @@ fn run_artifact(
             let fwd = model.forward()?;
             let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
             let sinks = model.backward(&fwd, dlogits, true)?;
+            fwd.recycle(pool);
             out.insert("loss".into(), scalar(loss));
             for (name, g) in sinks.params.unwrap() {
                 out.insert(format!("g_{name}"), g);
@@ -155,6 +204,7 @@ fn run_artifact(
             let fwd = model.forward()?;
             let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
             let sinks = model.backward(&fwd, dlogits, true)?;
+            fwd.recycle(pool);
             let params = sinks.params.unwrap();
             out.insert("loss".into(), scalar(loss));
             for kind in &cfg.linear_kinds {
@@ -170,6 +220,7 @@ fn run_artifact(
             let fwd = model.forward()?;
             let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
             let sinks = model.backward(&fwd, dlogits, true)?;
+            fwd.recycle(pool);
             let params = sinks.params.unwrap();
             out.insert("loss".into(), scalar(loss));
             for (name, g) in sinks.extras {
@@ -190,6 +241,7 @@ fn run_artifact(
             let fwd = model.forward()?;
             let (loss, dlogits) = model.loss_and_dlogits(&fwd.logits)?;
             let sinks = model.backward(&fwd, dlogits, false)?;
+            fwd.recycle(pool);
             out.insert("loss".into(), scalar(loss));
             for (name, g) in sinks.extras {
                 out.insert(format!("g_{name}"), g);
@@ -227,68 +279,10 @@ fn scalar(v: f32) -> Tensor {
 }
 
 // ------------------------------------------------------ linear algebra
-
-/// C[n,m] = A[n,k] @ B[k,m]
-fn mm(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), k * m);
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * m..(kk + 1) * m];
-            for j in 0..m {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// C[n,m] = A[k,n]ᵀ @ B[k,m]  (contraction over rows)
-fn mm_tn(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * n);
-    debug_assert_eq!(b.len(), k * m);
-    let mut out = vec![0.0f32; n * m];
-    for r in 0..k {
-        let arow = &a[r * n..(r + 1) * n];
-        let brow = &b[r * m..(r + 1) * m];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * m..(i + 1) * m];
-            for j in 0..m {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// C[n,m] = A[n,k] @ B[m,k]ᵀ  (contraction over columns of both)
-fn mm_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), m * k);
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * m..(i + 1) * m];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            *o += acc;
-        }
-    }
-    out
-}
+//
+// The matmuls live in `runtime::kernels` (cache-blocked, row-parallel,
+// bitwise-deterministic across thread counts); only the small
+// index/norm/rotation helpers stay local.
 
 fn add_into(dst: &mut [f32], src: &[f32]) {
     debug_assert_eq!(dst.len(), src.len());
@@ -336,9 +330,10 @@ fn rmsnorm_fwd(
     w: &[f32],
     rows: usize,
     d: usize,
+    pool: &Pool,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut y = vec![0.0f32; rows * d];
-    let mut inv = vec![0.0f32; rows];
+    let mut y = pool.zeroed(rows * d);
+    let mut inv = pool.zeroed(rows);
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let mean: f32 =
@@ -361,8 +356,9 @@ fn rmsnorm_bwd(
     dy: &[f32],
     rows: usize,
     d: usize,
+    pool: &Pool,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut dx = vec![0.0f32; rows * d];
+    let mut dx = pool.zeroed(rows * d);
     let mut dw = vec![0.0f32; d];
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
@@ -382,17 +378,17 @@ fn rmsnorm_bwd(
     (dx, dw)
 }
 
-fn rope_tables(s: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+fn rope_tables(s: usize, dh: usize, pool: &Pool) -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
-    let mut cos = vec![0.0f32; s * half];
-    let mut sin = vec![0.0f32; s * half];
+    let mut cos = pool.cleared(s * half);
+    let mut sin = pool.cleared(s * half);
     for pos in 0..s {
         for e in 0..half {
             let freq =
                 ROPE_BASE.powf(-(e as f32) / half as f32);
             let ang = pos as f32 * freq;
-            cos[pos * half + e] = ang.cos();
-            sin[pos * half + e] = ang.sin();
+            cos.push(ang.cos());
+            sin.push(ang.sin());
         }
     }
     (cos, sin)
@@ -487,6 +483,34 @@ struct FwdCache {
     logits: Vec<f32>,
 }
 
+impl LayerCache {
+    fn recycle(self, pool: &Pool) {
+        for v in [
+            self.x_in, self.h, self.inv1, self.qr, self.kr, self.v4,
+            self.probs, self.att, self.x_mid, self.h2, self.inv2,
+            self.gate, self.up, self.mlp,
+        ] {
+            pool.recycle(v);
+        }
+    }
+}
+
+impl FwdCache {
+    /// Return every cached activation to the scratch pool so the next
+    /// `execute()` on this plan re-uses the allocations.
+    fn recycle(self, pool: &Pool) {
+        for c in self.layers {
+            c.recycle(pool);
+        }
+        for v in [
+            self.cos, self.sin, self.xf, self.invf, self.xnorm,
+            self.logits,
+        ] {
+            pool.recycle(v);
+        }
+    }
+}
+
 struct Sinks {
     params: Option<BTreeMap<String, Tensor>>,
     extras: BTreeMap<String, Tensor>,
@@ -497,6 +521,7 @@ struct Model<'a> {
     dm: Dims,
     inp: &'a BTreeMap<&'a str, &'a HostValue>,
     variant: Variant,
+    pool: &'a Pool,
 }
 
 impl<'a> Model<'a> {
@@ -504,6 +529,7 @@ impl<'a> Model<'a> {
         cfg: &'a ModelCfg,
         inp: &'a BTreeMap<&'a str, &'a HostValue>,
         base: &str,
+        pool: &'a Pool,
     ) -> Result<Model<'a>> {
         let variant = match base {
             "grads_losia" => Variant::Losia,
@@ -525,7 +551,33 @@ impl<'a> Model<'a> {
             dm,
             inp,
             variant,
+            pool,
         })
+    }
+
+    // Pool-backed kernel wrappers: outputs come from (and largely
+    // return to) the per-plan scratch pool.
+
+    /// `A[n,k] @ B[k,m]` into a pooled buffer.
+    fn mm_p(&self, a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = self.pool.zeroed(n * m);
+        kernels::mm_into(&mut out, a, b, n, k, m);
+        out
+    }
+
+    /// `A[k,n]ᵀ @ B[k,m]` into a pooled buffer.
+    fn mm_tn_p(&self, a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+        let mut out = self.pool.zeroed(n * m);
+        kernels::mm_tn_into(&mut out, a, b, k, n, m);
+        out
+    }
+
+    /// `A[n,k] @ B[m,k]ᵀ` into a pooled buffer (transpose scratch
+    /// pooled too).
+    fn mm_nt_p(&self, a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = self.pool.zeroed(n * m);
+        kernels::mm_nt_into_pooled(&mut out, a, b, n, k, m, self.pool);
+        out
     }
 
     fn f32_in(&self, name: &str) -> Result<&Tensor> {
@@ -584,7 +636,7 @@ impl<'a> Model<'a> {
         let tokens = self.i32_in("tokens")?;
         let embed = self.f32_in("embed")?;
 
-        let mut x = vec![0.0f32; rows * dm.d];
+        let mut x = self.pool.zeroed(rows * dm.d);
         for r in 0..rows {
             let t = (tokens[r].max(0) as usize).min(dm.v - 1);
             x[r * dm.d..(r + 1) * dm.d]
@@ -593,7 +645,7 @@ impl<'a> Model<'a> {
 
         let norm1 = self.f32_in("norm1")?;
         let norm2 = self.f32_in("norm2")?;
-        let (cos, sin) = rope_tables(dm.s, dm.dh);
+        let (cos, sin) = rope_tables(dm.s, dm.dh, self.pool);
         let mut layers = Vec::with_capacity(dm.l);
         for l in 0..dm.l {
             let (c, x_new) = self.block_fwd(
@@ -608,16 +660,19 @@ impl<'a> Model<'a> {
         }
 
         let norm_f = self.f32_in("norm_f")?;
-        let (xnorm, invf) = rmsnorm_fwd(&x, &norm_f.data, rows, dm.d);
+        let (xnorm, invf) =
+            rmsnorm_fwd(&x, &norm_f.data, rows, dm.d, self.pool);
         let lm_head = self.f32_in("lm_head")?;
-        let mut logits = mm(&xnorm, &lm_head.data, rows, dm.d, dm.v);
+        let mut logits =
+            self.mm_p(&xnorm, &lm_head.data, rows, dm.d, dm.v);
         if self.variant == Variant::Losia {
             let vs = self.cfg.vocab_sub;
             let gamma =
                 self.indices("gamma_out", 0, vs, dm.v)?;
             let dws = self.f32_in("dws_out")?;
-            let y = mm(&xnorm, &dws.data, rows, dm.d, vs);
+            let y = self.mm_p(&xnorm, &dws.data, rows, dm.d, vs);
             scatter_cols(&mut logits, rows, dm.v, &gamma, &y);
+            self.pool.recycle(y);
         }
         Ok(FwdCache {
             layers,
@@ -640,7 +695,7 @@ impl<'a> Model<'a> {
     ) -> Result<(LayerCache, Vec<f32>)> {
         let dm = self.dm;
         let rows = dm.b * dm.s;
-        let (h, inv1) = rmsnorm_fwd(&x, norm1, rows, dm.d);
+        let (h, inv1) = rmsnorm_fwd(&x, norm1, rows, dm.d, self.pool);
         let q = self.lin_fwd(l, "wq", &h, rows)?;
         let k = self.lin_fwd(l, "wk", &h, rows)?;
         let v4 = self.lin_fwd(l, "wv", &h, rows)?;
@@ -653,19 +708,24 @@ impl<'a> Model<'a> {
 
         let (att, probs) = self.attention_fwd(&qr, &kr, &v4);
         let wo_out = self.lin_fwd(l, "wo", &att, rows)?;
-        let mut x_mid = x.clone();
+        let mut x_mid = self.pool.cleared(rows * dm.d);
+        x_mid.extend_from_slice(&x);
         add_into(&mut x_mid, &wo_out);
+        self.pool.recycle(wo_out);
 
-        let (h2, inv2) = rmsnorm_fwd(&x_mid, norm2, rows, dm.d);
+        let (h2, inv2) =
+            rmsnorm_fwd(&x_mid, norm2, rows, dm.d, self.pool);
         let gate = self.lin_fwd(l, "wgate", &h2, rows)?;
         let up = self.lin_fwd(l, "wup", &h2, rows)?;
-        let mut mlp = vec![0.0f32; rows * self.cfg.d_ff];
+        let mut mlp = self.pool.zeroed(rows * self.cfg.d_ff);
         for i in 0..mlp.len() {
             mlp[i] = silu(gate[i]) * up[i];
         }
         let down = self.lin_fwd(l, "wdown", &mlp, rows)?;
-        let mut x_new = x_mid.clone();
+        let mut x_new = self.pool.cleared(rows * dm.d);
+        x_new.extend_from_slice(&x_mid);
         add_into(&mut x_new, &down);
+        self.pool.recycle(down);
 
         Ok((
             LayerCache {
@@ -696,8 +756,9 @@ impl<'a> Model<'a> {
     ) -> (Vec<f32>, Vec<f32>) {
         let dm = self.dm;
         let scale = 1.0 / (dm.dh as f32).sqrt();
-        let mut probs = vec![0.0f32; dm.b * dm.h * dm.s * dm.s];
-        let mut att = vec![0.0f32; dm.b * dm.s * dm.d];
+        let mut probs = self.pool.zeroed(dm.b * dm.h * dm.s * dm.s);
+        let mut att = self.pool.zeroed(dm.b * dm.s * dm.d);
+        let mut scores = self.pool.zeroed(dm.s);
         let at = |b: usize, pos: usize, h: usize| {
             ((b * dm.s + pos) * dm.h + h) * dm.dh
         };
@@ -705,7 +766,7 @@ impl<'a> Model<'a> {
             for h in 0..dm.h {
                 for i in 0..dm.s {
                     let prow_off = ((b * dm.h + h) * dm.s + i) * dm.s;
-                    let mut scores = vec![MASK_NEG; dm.s];
+                    scores.fill(MASK_NEG);
                     let qrow = &qr[at(b, i, h)..at(b, i, h) + dm.dh];
                     for (j, sc) in
                         scores.iter_mut().enumerate().take(i + 1)
@@ -748,6 +809,7 @@ impl<'a> Model<'a> {
                 }
             }
         }
+        self.pool.recycle(scores);
         (att, probs)
     }
 
@@ -759,9 +821,10 @@ impl<'a> Model<'a> {
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let dm = self.dm;
         let scale = 1.0 / (dm.dh as f32).sqrt();
-        let mut dq = vec![0.0f32; dm.b * dm.s * dm.d];
-        let mut dk = vec![0.0f32; dm.b * dm.s * dm.d];
-        let mut dv = vec![0.0f32; dm.b * dm.s * dm.d];
+        let mut dq = self.pool.zeroed(dm.b * dm.s * dm.d);
+        let mut dk = self.pool.zeroed(dm.b * dm.s * dm.d);
+        let mut dv = self.pool.zeroed(dm.b * dm.s * dm.d);
+        let mut dprobs = self.pool.zeroed(dm.s);
         let at = |b: usize, pos: usize, h: usize| {
             ((b * dm.s + pos) * dm.h + h) * dm.dh
         };
@@ -772,7 +835,7 @@ impl<'a> Model<'a> {
                     let prow = &c.probs[prow_off..prow_off + dm.s];
                     let darow = &datt[at(b, i, h)..at(b, i, h) + dm.dh];
                     // dprobs_j = Σ_e datt·v ; dv_j += p·datt
-                    let mut dprobs = vec![0.0f32; dm.s];
+                    dprobs.fill(0.0);
                     for j in 0..=i {
                         let voff = at(b, j, h);
                         let vrow = &c.v4[voff..voff + dm.dh];
@@ -813,6 +876,7 @@ impl<'a> Model<'a> {
                 }
             }
         }
+        self.pool.recycle(dprobs);
         let (cos, sin) = rope;
         rope_apply(&mut dq, &dm, cos, sin, true);
         rope_apply(&mut dk, &dm, cos, sin, true);
@@ -831,9 +895,9 @@ impl<'a> Model<'a> {
         let kd = self.cfg.kind(kind);
         let w = self.layer_w(kind, l)?;
         match self.variant {
-            Variant::Plain => Ok(mm(x, w, rows, kd.n, kd.m)),
+            Variant::Plain => Ok(self.mm_p(x, w, rows, kd.n, kd.m)),
             Variant::Losia => {
-                let mut y = mm(x, w, rows, kd.n, kd.m);
+                let mut y = self.mm_p(x, w, rows, kd.n, kd.m);
                 let rho = self.indices(
                     &format!("rho_{kind}"),
                     l,
@@ -850,8 +914,9 @@ impl<'a> Model<'a> {
                 let dws = &dws_t.data
                     [l * kd.np * kd.mp..(l + 1) * kd.np * kd.mp];
                 let xs = gather_cols(x, rows, kd.n, &rho);
-                let ys = mm(&xs, dws, rows, kd.np, kd.mp);
+                let ys = self.mm_p(&xs, dws, rows, kd.np, kd.mp);
                 scatter_cols(&mut y, rows, kd.m, &gamma, &ys);
+                self.pool.recycle(ys);
                 Ok(y)
             }
             Variant::Lora { dora } => {
@@ -866,18 +931,24 @@ impl<'a> Model<'a> {
                 let lb =
                     &lb_t.data[l * r * kd.m..(l + 1) * r * kd.m];
                 if !dora {
-                    let mut y = mm(x, w, rows, kd.n, kd.m);
-                    let xa = mm(x, la, rows, kd.n, r);
-                    let mut yl = mm(&xa, lb, rows, r, kd.m);
+                    let mut y = self.mm_p(x, w, rows, kd.n, kd.m);
+                    let xa = self.mm_p(x, la, rows, kd.n, r);
+                    let mut yl = self.mm_p(&xa, lb, rows, r, kd.m);
                     for v in yl.iter_mut() {
                         *v *= scale;
                     }
                     add_into(&mut y, &yl);
+                    self.pool.recycle(xa);
+                    self.pool.recycle(yl);
                     Ok(y)
                 } else {
-                    let (_, _, weff) =
+                    let (wp, cn, weff) =
                         self.dora_frames(l, kind, w, la, lb, scale)?;
-                    Ok(mm(x, &weff, rows, kd.n, kd.m))
+                    let y = self.mm_p(x, &weff, rows, kd.n, kd.m);
+                    self.pool.recycle(wp);
+                    self.pool.recycle(cn);
+                    self.pool.recycle(weff);
+                    Ok(y)
                 }
             }
         }
@@ -900,11 +971,11 @@ impl<'a> Model<'a> {
         let r = self.cfg.lora_rank;
         let mag_t = self.f32_in(&format!("mag_{kind}"))?;
         let mag = &mag_t.data[l * kd.m..(l + 1) * kd.m];
-        let mut wp = mm(la, lb, kd.n, r, kd.m);
+        let mut wp = self.mm_p(la, lb, kd.n, r, kd.m);
         for (i, v) in wp.iter_mut().enumerate() {
             *v = w[i] + scale * *v;
         }
-        let mut cn = vec![0.0f32; kd.m];
+        let mut cn = self.pool.zeroed(kd.m);
         for i in 0..kd.n {
             for j in 0..kd.m {
                 let v = wp[i * kd.m + j];
@@ -914,7 +985,8 @@ impl<'a> Model<'a> {
         for c in cn.iter_mut() {
             *c = (*c + 1e-8).sqrt();
         }
-        let mut weff = wp.clone();
+        let mut weff = self.pool.cleared(kd.n * kd.m);
+        weff.extend_from_slice(&wp);
         for i in 0..kd.n {
             for j in 0..kd.m {
                 weff[i * kd.m + j] *= mag[j] / cn[j];
@@ -937,16 +1009,19 @@ impl<'a> Model<'a> {
         let kd = self.cfg.kind(kind);
         let w = self.layer_w(kind, l)?;
         if let Some(params) = &mut sinks.params {
-            let g = mm_tn(x, dy, rows, kd.n, kd.m);
+            let g = self.mm_tn_p(x, dy, rows, kd.n, kd.m);
             let dst = params.get_mut(kind).unwrap();
             add_into(
                 &mut dst.data
                     [l * kd.n * kd.m..(l + 1) * kd.n * kd.m],
                 &g,
             );
+            self.pool.recycle(g);
         }
         match self.variant {
-            Variant::Plain => Ok(mm_nt(dy, w, rows, kd.m, kd.n)),
+            Variant::Plain => {
+                Ok(self.mm_nt_p(dy, w, rows, kd.m, kd.n))
+            }
             Variant::Losia => {
                 let rho = self.indices(
                     &format!("rho_{kind}"),
@@ -966,7 +1041,8 @@ impl<'a> Model<'a> {
                 let xs = gather_cols(x, rows, kd.n, &rho);
                 let dys = gather_cols(dy, rows, kd.m, &gamma);
                 // Eq. 9: the factorized subnet gradient
-                let gsub = mm_tn(&xs, &dys, rows, kd.np, kd.mp);
+                let gsub =
+                    self.mm_tn_p(&xs, &dys, rows, kd.np, kd.mp);
                 let dst = sinks
                     .extras
                     .get_mut(&format!("dws_{kind}"))
@@ -976,9 +1052,12 @@ impl<'a> Model<'a> {
                         [l * kd.np * kd.mp..(l + 1) * kd.np * kd.mp],
                     &gsub,
                 );
-                let mut dx = mm_nt(dy, w, rows, kd.m, kd.n);
-                let dxs = mm_nt(&dys, dws, rows, kd.mp, kd.np);
+                self.pool.recycle(gsub);
+                let mut dx = self.mm_nt_p(dy, w, rows, kd.m, kd.n);
+                let dxs =
+                    self.mm_nt_p(&dys, dws, rows, kd.mp, kd.np);
                 scatter_cols(&mut dx, rows, kd.n, &rho, &dxs);
+                self.pool.recycle(dxs);
                 Ok(dx)
             }
             Variant::Lora { dora } => {
@@ -993,25 +1072,31 @@ impl<'a> Model<'a> {
                 let lb =
                     &lb_t.data[l * r * kd.m..(l + 1) * r * kd.m];
                 if !dora {
-                    let dyb = mm_nt(dy, lb, rows, kd.m, r);
-                    let mut gla = mm_tn(x, &dyb, rows, kd.n, r);
+                    let dyb = self.mm_nt_p(dy, lb, rows, kd.m, r);
+                    let mut gla =
+                        self.mm_tn_p(x, &dyb, rows, kd.n, r);
                     for v in gla.iter_mut() {
                         *v *= scale;
                     }
-                    let xa = mm(x, la, rows, kd.n, r);
-                    let mut glb = mm_tn(&xa, dy, rows, r, kd.m);
+                    let xa = self.mm_p(x, la, rows, kd.n, r);
+                    let mut glb =
+                        self.mm_tn_p(&xa, dy, rows, r, kd.m);
                     for v in glb.iter_mut() {
                         *v *= scale;
                     }
                     self.sink_adapter(sinks, "la", kind, l, &gla);
                     self.sink_adapter(sinks, "lb", kind, l, &glb);
-                    let mut dx = mm_nt(dy, w, rows, kd.m, kd.n);
+                    let mut dx =
+                        self.mm_nt_p(dy, w, rows, kd.m, kd.n);
                     let mut dxl =
-                        mm_nt(&dyb, la, rows, r, kd.n);
+                        self.mm_nt_p(&dyb, la, rows, r, kd.n);
                     for v in dxl.iter_mut() {
                         *v *= scale;
                     }
                     add_into(&mut dx, &dxl);
+                    for v in [dyb, gla, xa, glb, dxl] {
+                        self.pool.recycle(v);
+                    }
                     Ok(dx)
                 } else {
                     let mag_t =
@@ -1019,7 +1104,8 @@ impl<'a> Model<'a> {
                     let mag = &mag_t.data[l * kd.m..(l + 1) * kd.m];
                     let (wp, cn, weff) =
                         self.dora_frames(l, kind, w, la, lb, scale)?;
-                    let dweff = mm_tn(x, dy, rows, kd.n, kd.m);
+                    let dweff =
+                        self.mm_tn_p(x, dy, rows, kd.n, kd.m);
                     // col_j = Σ_i dweff·wp ; dmag_j = col_j / cn_j
                     let mut col = vec![0.0f32; kd.m];
                     for i in 0..kd.n {
@@ -1032,7 +1118,7 @@ impl<'a> Model<'a> {
                         .map(|j| col[j] / cn[j])
                         .collect();
                     // dwp = dweff·(mag/cn) − wp·col·mag/cn³
-                    let mut dwp = vec![0.0f32; kd.n * kd.m];
+                    let mut dwp = self.pool.zeroed(kd.n * kd.m);
                     for j in 0..kd.m {
                         let sden = mag[j] / cn[j];
                         let corr =
@@ -1043,18 +1129,25 @@ impl<'a> Model<'a> {
                                 - wp[i * kd.m + j] * corr;
                         }
                     }
-                    let mut gla = mm_nt(&dwp, lb, kd.n, kd.m, r);
+                    let mut gla =
+                        self.mm_nt_p(&dwp, lb, kd.n, kd.m, r);
                     for v in gla.iter_mut() {
                         *v *= scale;
                     }
-                    let mut glb = mm_tn(la, &dwp, kd.n, r, kd.m);
+                    let mut glb =
+                        self.mm_tn_p(la, &dwp, kd.n, r, kd.m);
                     for v in glb.iter_mut() {
                         *v *= scale;
                     }
                     self.sink_adapter(sinks, "la", kind, l, &gla);
                     self.sink_adapter(sinks, "lb", kind, l, &glb);
                     self.sink_adapter(sinks, "mag", kind, l, &gmag);
-                    Ok(mm_nt(dy, &weff, rows, kd.m, kd.n))
+                    let dx =
+                        self.mm_nt_p(dy, &weff, rows, kd.m, kd.n);
+                    for v in [wp, cn, weff, dweff, dwp, gla, glb] {
+                        self.pool.recycle(v);
+                    }
+                    Ok(dx)
                 }
             }
         }
@@ -1117,7 +1210,7 @@ impl<'a> Model<'a> {
         let total: f32 = mask.data.iter().sum();
         let c = total.max(1.0);
         let mut loss = 0.0f32;
-        let mut dl = vec![0.0f32; rows * dm.v];
+        let mut dl = self.pool.zeroed(rows * dm.v);
         for r in 0..rows {
             let m = mask.data[r];
             let row = &logits[r * dm.v..(r + 1) * dm.v];
@@ -1201,24 +1294,29 @@ impl<'a> Model<'a> {
         // lm_head (+ output-layer subnet delta)
         let lm_head = self.f32_in("lm_head")?;
         if let Some(params) = &mut sinks.params {
-            let g = mm_tn(&fwd.xnorm, &dlogits, rows, dm.d, dm.v);
+            let g =
+                self.mm_tn_p(&fwd.xnorm, &dlogits, rows, dm.d, dm.v);
             add_into(&mut params.get_mut("lm_head").unwrap().data, &g);
+            self.pool.recycle(g);
         }
         let mut dxnorm =
-            mm_nt(&dlogits, &lm_head.data, rows, dm.v, dm.d);
+            self.mm_nt_p(&dlogits, &lm_head.data, rows, dm.v, dm.d);
         if self.variant == Variant::Losia {
             let vs = self.cfg.vocab_sub;
             let gamma = self.indices("gamma_out", 0, vs, dm.v)?;
             let dls = gather_cols(&dlogits, rows, dm.v, &gamma);
-            let g = mm_tn(&fwd.xnorm, &dls, rows, dm.d, vs);
+            let g = self.mm_tn_p(&fwd.xnorm, &dls, rows, dm.d, vs);
             add_into(
                 &mut sinks.extras.get_mut("dws_out").unwrap().data,
                 &g,
             );
+            self.pool.recycle(g);
             let dws = self.f32_in("dws_out")?;
-            let dxd = mm_nt(&dls, &dws.data, rows, vs, dm.d);
+            let dxd = self.mm_nt_p(&dls, &dws.data, rows, vs, dm.d);
             add_into(&mut dxnorm, &dxd);
+            self.pool.recycle(dxd);
         }
+        self.pool.recycle(dlogits);
 
         let norm_f = self.f32_in("norm_f")?;
         let (mut dx, dnf) = rmsnorm_bwd(
@@ -1228,7 +1326,9 @@ impl<'a> Model<'a> {
             &dxnorm,
             rows,
             dm.d,
+            self.pool,
         );
+        self.pool.recycle(dxnorm);
         if let Some(params) = &mut sinks.params {
             add_into(&mut params.get_mut("norm_f").unwrap().data, &dnf);
         }
@@ -1242,17 +1342,21 @@ impl<'a> Model<'a> {
                 self.lin_bwd(l, "wdown", &c.mlp, rows, &dx, &mut sinks)?;
             let mut dx_mid = dx;
             let ff = self.cfg.d_ff;
-            let mut dgate = vec![0.0f32; rows * ff];
-            let mut dup = vec![0.0f32; rows * ff];
+            let mut dgate = self.pool.zeroed(rows * ff);
+            let mut dup = self.pool.zeroed(rows * ff);
             for i in 0..rows * ff {
                 dgate[i] = dmlp[i] * c.up[i] * dsilu(c.gate[i]);
                 dup[i] = dmlp[i] * silu(c.gate[i]);
             }
+            self.pool.recycle(dmlp);
             let mut dh2 =
                 self.lin_bwd(l, "wup", &c.h2, rows, &dup, &mut sinks)?;
             let dh2b = self
                 .lin_bwd(l, "wgate", &c.h2, rows, &dgate, &mut sinks)?;
             add_into(&mut dh2, &dh2b);
+            self.pool.recycle(dh2b);
+            self.pool.recycle(dgate);
+            self.pool.recycle(dup);
             let (dxm, dn2) = rmsnorm_bwd(
                 &c.x_mid,
                 &norm2.data[l * dm.d..(l + 1) * dm.d],
@@ -1260,8 +1364,11 @@ impl<'a> Model<'a> {
                 &dh2,
                 rows,
                 dm.d,
+                self.pool,
             );
+            self.pool.recycle(dh2);
             add_into(&mut dx_mid, &dxm);
+            self.pool.recycle(dxm);
             if let Some(params) = &mut sinks.params {
                 add_into(
                     &mut params.get_mut("norm2").unwrap().data
@@ -1275,6 +1382,7 @@ impl<'a> Model<'a> {
             let mut dx_in = dx_mid;
             let (dq, dk, dv) =
                 self.attention_bwd(&datt, c, (&fwd.cos, &fwd.sin));
+            self.pool.recycle(datt);
             let mut dhp =
                 self.lin_bwd(l, "wq", &c.h, rows, &dq, &mut sinks)?;
             let dhk =
@@ -1283,6 +1391,9 @@ impl<'a> Model<'a> {
             let dhv =
                 self.lin_bwd(l, "wv", &c.h, rows, &dv, &mut sinks)?;
             add_into(&mut dhp, &dhv);
+            for v in [dq, dk, dv, dhk, dhv] {
+                self.pool.recycle(v);
+            }
             let (dxi, dn1) = rmsnorm_bwd(
                 &c.x_in,
                 &norm1.data[l * dm.d..(l + 1) * dm.d],
@@ -1290,8 +1401,11 @@ impl<'a> Model<'a> {
                 &dhp,
                 rows,
                 dm.d,
+                self.pool,
             );
+            self.pool.recycle(dhp);
             add_into(&mut dx_in, &dxi);
+            self.pool.recycle(dxi);
             if let Some(params) = &mut sinks.params {
                 add_into(
                     &mut params.get_mut("norm1").unwrap().data
@@ -1313,6 +1427,7 @@ impl<'a> Model<'a> {
                 );
             }
         }
+        self.pool.recycle(dx);
         Ok(sinks)
     }
 }
@@ -1409,6 +1524,84 @@ mod tests {
         assert_eq!(out[0].data[0], 0.0);
         for g in &out[1..] {
             assert!(g.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn static_bindings_cost_zero_per_step_copies() {
+        // The device-residency contract: with every parameter bound
+        // statically, N training-shaped steps move only the batch —
+        // zero static re-uploads (and so zero parameter deep copies)
+        // between mutations. Also pins that pooled scratch reuse
+        // cannot contaminate results: every step must reproduce the
+        // first step's outputs bitwise.
+        use crate::coordinator::state::ModelState;
+        use crate::data::Batch;
+        use crate::runtime::ExecPlan;
+
+        let rt = rt();
+        let exe = rt.load("fwd_loss").unwrap();
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan =
+            ExecPlan::new(std::sync::Arc::clone(&exe), &param_names)
+                .unwrap();
+        let mut rng = Rng::new(9);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let (b, s) = (rt.cfg.batch, rt.cfg.seq_len);
+        let batch = Batch {
+            tokens: (0..b * s).map(|i| (i % 7) as i32).collect(),
+            targets: (0..b * s).map(|i| (i % 5) as i32).collect(),
+            mask: vec![1.0; b * s],
+            batch: b,
+            seq: s,
+        };
+        plan.bind_params(&state).unwrap();
+        plan.bind_batch(&batch).unwrap();
+        let first = plan.run().unwrap();
+
+        let s0 = exe.stats();
+        for _ in 0..4 {
+            plan.bind_batch(&batch).unwrap();
+            let out = plan.run().unwrap();
+            for (a, b) in first.iter().zip(&out) {
+                assert_eq!(
+                    a.data, b.data,
+                    "pooled scratch contaminated a later step"
+                );
+            }
+        }
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.calls, 4);
+        assert_eq!(d.static_uploads, 0, "static params were re-copied");
+        assert_eq!(d.step_uploads, 3 * 4, "tokens/targets/mask only");
+    }
+
+    #[test]
+    fn long_lived_plan_matches_one_shot_run() {
+        // Scratch-pool reuse (ExecPlan) vs fresh buffers every call
+        // (Executable::run) must agree bitwise on the same inputs.
+        let rt = rt();
+        let exe = rt.load("grads_full").unwrap();
+        let inputs = inputs_for(&rt, "grads_full", 11);
+        let one_shot = exe.run(&inputs).unwrap();
+
+        let mut plan =
+            crate::runtime::ExecPlan::new(exe, &[]).unwrap();
+        let specs = plan.spec().inputs.clone();
+        for _ in 0..2 {
+            for (spec, hv) in specs.iter().zip(&inputs) {
+                plan.bind(&spec.name, hv.into()).unwrap();
+            }
+            let out = plan.run().unwrap();
+            for (a, b) in one_shot.iter().zip(&out) {
+                assert_eq!(a.shape, b.shape);
+                assert_eq!(a.data, b.data, "plan diverged from run()");
+            }
         }
     }
 

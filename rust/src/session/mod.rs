@@ -712,7 +712,13 @@ impl<'a> Session<'a> {
             rt.cfg.batch,
             rt.cfg.seq_len,
             batcher_seed,
-        );
+        )
+        .with_context(|| {
+            format!(
+                "stage {index} ({task_label:?}): batching the \
+                 training set"
+            )
+        })?;
         let mut trainer = Trainer::new(rt, tc.clone())
             .with_context(|| {
                 format!("assembling {} driver", tc.method.name())

@@ -11,11 +11,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::data::commonsense::{suite, SUITE_NAMES};
+use crate::data::commonsense::{suite_task, SUITE_NAMES};
 use crate::data::domain::{KvFacts, ModMath, StackEval};
 use crate::data::Task;
 
-type TaskCtor = Box<dyn Fn() -> Box<dyn Task>>;
+/// Constructors may fail (the registry's typed error surfaces instead
+/// of a panic); [`TaskRegistry::register`] wraps infallible closures.
+type TaskCtor = Box<dyn Fn() -> Result<Box<dyn Task>>>;
 
 /// Named task constructors.
 pub struct TaskRegistry {
@@ -33,35 +35,49 @@ impl TaskRegistry {
     /// The standard roster: the three domain tasks (`modmath`,
     /// `stack`, `kvfacts`) plus the eight commonsense-suite tasks
     /// under their `SUITE_NAMES` (`parity-5`, `copy`, `boolfact`, …).
+    /// Suite tasks construct directly by index (`suite_task`) — no
+    /// per-lookup rebuild of the whole suite, and an out-of-range
+    /// index is the registry's typed error rather than a panic.
     pub fn with_builtins() -> Self {
         let mut r = Self::new();
         r.register("modmath", || Box::new(ModMath));
         r.register("stack", || Box::new(StackEval));
         r.register("kvfacts", || Box::new(KvFacts::new(64, 4, 7)));
         for (i, name) in SUITE_NAMES.iter().enumerate() {
-            r.register(name, move || {
-                suite().into_iter().nth(i).expect("suite index")
-            });
+            r.ctors.insert(
+                name.to_string(),
+                Box::new(move || {
+                    suite_task(i).ok_or_else(|| {
+                        anyhow!(
+                            "suite task index {i} out of range \
+                             ({} suite tasks)",
+                            SUITE_NAMES.len()
+                        )
+                    })
+                }),
+            );
         }
         r
     }
 
-    /// Register (or replace) a constructor under `name`.
+    /// Register (or replace) an infallible constructor under `name`.
     pub fn register<F>(&mut self, name: &str, ctor: F)
     where
         F: Fn() -> Box<dyn Task> + 'static,
     {
-        self.ctors.insert(name.to_string(), Box::new(ctor));
+        self.ctors
+            .insert(name.to_string(), Box::new(move || Ok(ctor())));
     }
 
     /// Instantiate the task registered under `name`.
     pub fn create(&self, name: &str) -> Result<Box<dyn Task>> {
-        self.ctors.get(name).map(|c| c()).ok_or_else(|| {
-            anyhow!(
+        match self.ctors.get(name) {
+            Some(c) => c(),
+            None => Err(anyhow!(
                 "unknown task {name:?} (known tasks: {})",
                 self.known().join(", ")
-            )
-        })
+            )),
+        }
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -97,6 +113,19 @@ mod tests {
             let ex = task.gen_train(&mut rng);
             assert!(!ex.prompt.is_empty());
             assert!(!ex.answer.is_empty());
+        }
+    }
+
+    #[test]
+    fn every_suite_name_constructs_without_panicking() {
+        // regression: the suite ctors used to `.expect("suite index")`
+        // and rebuild the full suite per lookup
+        let r = TaskRegistry::with_builtins();
+        for name in SUITE_NAMES {
+            let task = r.create(name).unwrap();
+            let mut rng = Rng::new(3);
+            let ex = task.gen_train(&mut rng);
+            assert!(!ex.prompt.is_empty(), "{name}");
         }
     }
 

@@ -379,16 +379,32 @@ impl SequenceReport {
     }
 
     /// Average performance over the final stage's row (paper AP),
-    /// `None` without eval data.
+    /// `None` without eval data. A *malformed* (ragged) matrix is
+    /// also `None`, but warns — silently printing NaN is the failure
+    /// mode the typed validation exists to kill.
     pub fn average_performance(&self) -> Option<f64> {
-        (!self.perf.is_empty())
-            .then(|| crate::eval::average_performance(&self.perf))
+        self.metric(crate::eval::average_performance(&self.perf))
     }
 
-    /// Backward transfer (paper BWT), `None` below two stages.
+    /// Backward transfer (paper BWT), `None` below two stages (the
+    /// expected case, not warned) or on a malformed matrix (warned).
     pub fn backward_transfer(&self) -> Option<f64> {
-        (self.perf.len() >= 2)
-            .then(|| crate::eval::backward_transfer(&self.perf))
+        if self.perf.len() < 2 {
+            return None;
+        }
+        self.metric(crate::eval::backward_transfer(&self.perf))
+    }
+
+    fn metric(&self, r: anyhow::Result<f64>) -> Option<f64> {
+        match r {
+            Ok(v) => Some(v),
+            Err(e) => {
+                if !self.perf.is_empty() {
+                    eprintln!("[report] continual metric skipped: {e}");
+                }
+                None
+            }
+        }
     }
 }
 

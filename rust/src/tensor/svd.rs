@@ -87,7 +87,7 @@ pub fn svd(a: &Tensor) -> Svd {
             (norm, j)
         })
         .collect();
-    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    order.sort_by(|a, b| b.0.total_cmp(&a.0));
 
     let mut u_out = Tensor::zeros(&[n, m]);
     let mut v_out = Tensor::zeros(&[m, m]);

@@ -49,6 +49,23 @@ fn category_breakdown_sums_consistently() {
 }
 
 #[test]
+fn nan_nll_scores_as_incorrect_instead_of_panicking() {
+    // Regression: a divergent run (NaN weights → NaN NLL for every
+    // option) used to panic the whole eval pass inside a
+    // `partial_cmp().unwrap()` min-by. It must now complete and score
+    // every item as incorrect.
+    let rt = Runtime::from_config_name("tiny").unwrap();
+    let mut state = fresh(&rt, 6);
+    state.get_mut("lm_head").data.fill(f32::NAN);
+    let items = gen_eval_set(&ModMath, 16, 5);
+    let acc = ppl_accuracy(&rt, &state, &items).unwrap();
+    assert_eq!(acc, 0.0, "all-NaN options cannot be correct");
+    let by_cat =
+        ppl_accuracy_by_category(&rt, &state, &items).unwrap();
+    assert_eq!(by_cat["__all__"], 0.0);
+}
+
+#[test]
 fn generator_emits_tokens_within_vocab() {
     let rt = Runtime::from_config_name("tiny").unwrap();
     let state = fresh(&rt, 2);

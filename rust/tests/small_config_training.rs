@@ -1,0 +1,65 @@
+//! Training integration on the `small` builtin config through the
+//! pure-Rust reference backend.
+//!
+//! The naive single-threaded interpreter could only afford `tiny`
+//! here; the blocked/row-parallel kernel layer
+//! (`runtime::kernels`) makes `small` cheap enough for the
+//! no-artifact CI lane. The runtime is built from the builtin config
+//! zoo directly, so these tests behave identically whether or not
+//! lowered artifacts are present.
+
+use losia::config::Method;
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::Session;
+
+fn small_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::builtin_config("small", &dir)
+        .expect("small builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+#[test]
+fn losia_pro_trains_on_small_config() {
+    let rt = small_ref_runtime();
+    assert_eq!(rt.cfg.d_model, 128, "small config shape");
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(Method::LosiaPro)
+        .task("modmath")
+        .steps(6)
+        .time_slot(3)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(0)
+        .build()
+        .unwrap();
+    let report = session.train().unwrap();
+    let first = report.first_loss.expect("first loss");
+    let last = report.final_loss.expect("final loss");
+    assert!(first.is_finite() && first > 0.0, "first loss {first}");
+    assert!(last.is_finite() && last > 0.0, "final loss {last}");
+    assert!(
+        last < first * 1.5,
+        "loss exploded on small config: {first} → {last}"
+    );
+}
+
+#[test]
+fn lora_trains_and_evals_on_small_config() {
+    let rt = small_ref_runtime();
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(Method::Lora)
+        .task("modmath")
+        .steps(4)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(8)
+        .build()
+        .unwrap();
+    let report = session.train().unwrap();
+    assert!(report.final_loss.expect("final loss").is_finite());
+    let acc = report.ppl_acc_post.expect("post-train ppl accuracy");
+    assert!((0.0..=100.0).contains(&acc), "acc {acc}");
+}
