@@ -84,20 +84,24 @@ fn main() {
             }
         }
         plan.bind_batch(&batch).unwrap();
-        let _ = plan.run().unwrap(); // warm (compile + upload)
+        let _ = plan.run_host().unwrap(); // warm (compile + upload)
         let reps = 3;
         let t0 = Instant::now();
         for _ in 0..reps {
             plan.bind_batch(&batch).unwrap();
-            let _ = plan.run().unwrap();
+            // download everything: the probe measures the worst-case
+            // host round-trip, not the lazy-handle fast path
+            let _ = plan.run_host().unwrap();
         }
         let stats = exe.stats();
         println!(
             "{name}: {:.1} ms/call (steady state; {} static / {} \
-             per-step uploads over {} calls)",
+             per-step uploads, {} downloads / {:.1} KB over {} calls)",
             t0.elapsed().as_secs_f64() * 1000.0 / reps as f64,
             stats.static_uploads,
             stats.step_uploads,
+            stats.downloads,
+            stats.download_bytes as f64 / 1024.0,
             stats.calls,
         );
     }

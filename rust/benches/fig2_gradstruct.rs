@@ -33,12 +33,20 @@ fn main() {
     let tc = base_tc(&rt, Method::Fft, steps);
     let res = train_method(&rt, tc, &ModMath, 1000);
 
+    // one-shot full-grad plan: statics donated (see table6), and only
+    // the linear-kind gradients are downloaded below — loss, embed,
+    // norm and lm_head grads never cross back to the host
     let exe = rt.load("grads_full").unwrap();
     let train = gen_train_set(&ModMath, 64, 321);
     let mut b =
         Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 2).unwrap();
     let batch = b.next_batch();
-    let mut plan = ExecPlan::new(exe.clone(), &[]).unwrap();
+    let param_names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut plan = ExecPlan::new(exe.clone(), &param_names).unwrap();
+    for name in &param_names {
+        plan.donate(name).unwrap();
+    }
     plan.bind_params(&res.state).unwrap();
     plan.bind_batch(&batch).unwrap();
     let out = plan.run().unwrap();
@@ -54,11 +62,17 @@ fn main() {
         &["Layer", "Module", "Row share %", "Col share %", "Skew ×"],
     );
     let mut profile_rows: Vec<Vec<f64>> = Vec::new();
-    for (spec, g) in exe.spec().outputs[1..].iter().zip(&out[1..]) {
-        let name = spec.name.strip_prefix("g_").unwrap();
+    for mut h in out.into_iter().skip(1) {
+        let name = h
+            .name()
+            .strip_prefix("g_")
+            .expect("grad output name")
+            .to_string();
+        let name = name.as_str();
         if !rt.cfg.linear_kinds.iter().any(|k| k == name) {
             continue;
         }
+        let g = h.host().unwrap();
         for l in 0..rt.cfg.n_layers {
             let gl = g.index_axis0(l);
             let abs = losia::tensor::Tensor {

@@ -12,9 +12,13 @@
 //! * `blocked GEMM/step` (serial and parallel) — the same sequence
 //!   through `runtime::kernels`;
 //! * `RefBackend step` — a real `ExecPlan::run` per-step time with
-//!   statically bound parameters (includes attention, norms, softmax).
+//!   statically bound parameters (includes attention, norms, softmax),
+//!   timed both with every output downloaded and with only the scalar
+//!   loss crossing back (the `OutputHandle` lazy-download path).
 //!
-//! `LOSIA_BENCH_STEPS` overrides the rep count (default 5).
+//! `LOSIA_BENCH_STEPS` overrides the rep count (default 5);
+//! `LOSIA_BENCH_CONFIG` picks the builtin config (default `small`,
+//! `medium` in the release CI lane).
 
 use losia::config::{builtin_config, ModelCfg};
 use losia::coordinator::state::ModelState;
@@ -137,7 +141,11 @@ fn operand_lens(op: Op, p1: usize, p2: usize, p3: usize) -> (usize, usize, usize
 
 fn main() {
     let dir = losia::runtime::artifacts_dir();
-    let cfg = builtin_config("small", &dir).expect("small config");
+    // the ref CI lanes run this on `small` and (release-only) `medium`
+    let cfg_name = std::env::var("LOSIA_BENCH_CONFIG")
+        .unwrap_or_else(|_| "small".into());
+    let cfg =
+        builtin_config(&cfg_name, &dir).expect("builtin bench config");
     let reps = reps();
     let threads = kernels::kernel_threads();
     println!(
@@ -212,15 +220,26 @@ fn main() {
     plan.bind_params(&state).unwrap();
     let t_step = time_fn(1, reps, || {
         plan.bind_batch(&batch).unwrap();
-        let out = plan.run().unwrap();
+        let out = plan.run_host().unwrap();
         std::hint::black_box(&out);
+    });
+    // same step, but only the scalar loss crosses back to the host —
+    // the download-on-demand side of the OutputHandle contract
+    let t_lazy = time_fn(1, reps, || {
+        plan.bind_batch(&batch).unwrap();
+        let mut out = plan.run().unwrap();
+        let loss = out.remove(0).into_host().unwrap();
+        std::hint::black_box(&loss);
     });
     let stats = exe.stats();
 
     let ms = |s: f64| format!("{:.2}", s * 1e3);
     let speedup = |base: f64, t: f64| format!("{:.2}×", base / t);
     let mut table = Table::new(
-        "Kernel microbench — grads_full GEMM sequence (small config)",
+        &format!(
+            "Kernel microbench — grads_full GEMM sequence ({} config)",
+            rt.cfg.name
+        ),
         &["Path", "ms/step", "vs naive"],
     );
     table.row(&[
@@ -243,14 +262,22 @@ fn main() {
         ms(t_step.mean_secs),
         speedup(t_naive.mean_secs, t_step.mean_secs),
     ]);
+    table.row(&[
+        "RefBackend step, loss-only download".into(),
+        ms(t_lazy.mean_secs),
+        speedup(t_naive.mean_secs, t_lazy.mean_secs),
+    ]);
     table.print();
     println!(
         "grads_full exec stats: {} calls, mean {:.2} ms, \
-         static uploads {}, per-step uploads {}",
+         static uploads {}, per-step uploads {}, downloads {} \
+         ({:.1} KB)",
         stats.calls,
         stats.mean_secs() * 1e3,
         stats.static_uploads,
         stats.step_uploads,
+        stats.downloads,
+        stats.download_bytes as f64 / 1024.0,
     );
     table.write_csv("kernels_micro");
 }

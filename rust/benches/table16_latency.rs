@@ -1,7 +1,10 @@
 //! Table 16 — training-latency breakdown (µs/token): forward,
 //! backward, other, total — with and without gradient checkpointing
 //! (the remat artifact variants) — plus the host→device upload split
-//! from the executor profile (static re-binds vs per-step traffic).
+//! (static re-binds vs per-step traffic) and the device→host download
+//! split (`Dl` handles / `Dl-KB` bytes) from the executor profile.
+//! LoSiA-Pro's download column stays subnet-delta-sized; FFT/GaLore
+//! pull their full gradient sets back every step.
 //!
 //! Forward time is measured on `fwd_loss` (forward-only artifact);
 //! backward = grads-artifact time − forward time; "other" is the
@@ -53,7 +56,9 @@ fn main() {
     fwd_plan.bind_params(&state).unwrap();
     let fwd = time_fn(2, reps, || {
         fwd_plan.bind_batch(&batch).unwrap();
-        let _ = fwd_plan.run().unwrap();
+        for h in fwd_plan.run().unwrap() {
+            let _ = h.into_host().unwrap();
+        }
     });
     let fwd_us = fwd.mean_micros() / tokens;
 
@@ -66,7 +71,7 @@ fn main() {
             ),
             &[
                 "Method", "Forward", "Backward", "Other", "Total",
-                "S-upl", "P-upl",
+                "S-upl", "P-upl", "Dl", "Dl-KB",
             ],
         );
         for method in table1_methods() {
@@ -121,6 +126,11 @@ fn main() {
                 format!("{total_us:.2}"),
                 format!("{}", profile.static_uploads),
                 format!("{}", profile.step_uploads),
+                format!("{}", profile.downloads),
+                format!(
+                    "{:.1}",
+                    profile.download_bytes as f64 / 1024.0
+                ),
             ]);
             eprintln!("[exec] {}", profile.summary_line());
         }

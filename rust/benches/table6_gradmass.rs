@@ -28,22 +28,31 @@ fn main() {
     let res = train_method(&rt, tc, &ModMath, 1000);
     let state = res.state;
 
-    // one full-gradient evaluation
+    // One full-gradient evaluation. The plan is one-shot, so every
+    // parameter is bound static AND donated: after run() the backend
+    // reclaims the parameter copies instead of keeping a dead second
+    // set of weights alive next to the gradients.
     let exe = rt.load("grads_full").unwrap();
     let train = gen_train_set(&ModMath, 64, 123);
     let mut b =
         Batcher::new(train, rt.cfg.batch, rt.cfg.seq_len, 3).unwrap();
     let batch = b.next_batch();
-    let mut plan = ExecPlan::new(exe.clone(), &[]).unwrap();
+    let param_names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut plan = ExecPlan::new(exe.clone(), &param_names).unwrap();
+    for name in &param_names {
+        plan.donate(name).unwrap();
+    }
     plan.bind_params(&state).unwrap();
     plan.bind_batch(&batch).unwrap();
-    let out = plan.run().unwrap();
     let mut grads = std::collections::BTreeMap::new();
-    for (spec, t) in exe.spec().outputs[1..].iter().zip(&out[1..]) {
-        grads.insert(
-            spec.name.strip_prefix("g_").unwrap().to_string(),
-            t.clone(),
-        );
+    for h in plan.run().unwrap().into_iter().skip(1) {
+        let name = h
+            .name()
+            .strip_prefix("g_")
+            .expect("grad output name")
+            .to_string();
+        grads.insert(name, h.into_host().unwrap());
     }
 
     let p = rt.cfg.rank_factor;

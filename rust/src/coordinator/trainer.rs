@@ -52,7 +52,10 @@ impl ExecTracker {
             let base =
                 self.prev.get(&artifact).copied().unwrap_or_default();
             let d = snap.delta_since(&base);
-            if d.calls > 0 || d.static_uploads > 0 || d.step_uploads > 0
+            if d.calls > 0
+                || d.static_uploads > 0
+                || d.step_uploads > 0
+                || d.downloads > 0
             {
                 obs.emit_exec(&ExecEvent {
                     step,
@@ -61,6 +64,8 @@ impl ExecTracker {
                     secs: d.total_secs(),
                     static_uploads: d.static_uploads,
                     step_uploads: d.step_uploads,
+                    downloads: d.downloads,
+                    download_bytes: d.download_bytes,
                 });
             }
             self.prev.insert(artifact, snap);

@@ -14,26 +14,36 @@ use crate::tensor::select::{argmax, softmax};
 use crate::util::rng::Rng;
 
 /// Decode up to `max_new` tokens after the prompt for a batch of
-/// prompts. temperature = 0 → greedy. Parameters are bound statically
-/// per `generate` call; only the token grid re-uploads per emitted
-/// token.
+/// prompts. temperature = 0 → greedy. A `Generator` is one decoding
+/// pass over one model state: parameters are bound (and uploaded)
+/// once at construction, so across every `generate` call of the pass
+/// only the token grid re-uploads per emitted token.
 pub struct Generator<'rt> {
     rt: &'rt Runtime,
-    exe: std::sync::Arc<crate::runtime::Executable>,
+    plan: ExecPlan,
 }
 
 impl<'rt> Generator<'rt> {
-    pub fn new(rt: &'rt Runtime) -> Result<Self> {
-        Ok(Generator {
-            rt,
-            exe: rt.load("fwd_logits")?,
-        })
+    pub fn new(rt: &'rt Runtime, state: &ModelState) -> Result<Self> {
+        let exe = rt.load("fwd_logits")?;
+        // fwd_logits wants only params + tokens; params upload once
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan = ExecPlan::new(exe, &param_names)?;
+        plan.bind_params(state)?;
+        Ok(Generator { rt, plan })
     }
 
     /// Generate continuations for up to `batch` prompts at once.
+    /// Errors are typed (`Result`), never panics: a malformed request
+    /// fails this call only, so callers can keep scoring their other
+    /// prompts.
     pub fn generate(
-        &self,
-        state: &ModelState,
+        &mut self,
         prompts: &[Vec<u32>],
         max_new: usize,
         temperature: f32,
@@ -42,34 +52,31 @@ impl<'rt> Generator<'rt> {
         let b = self.rt.cfg.batch;
         let s = self.rt.cfg.seq_len;
         let v = self.rt.cfg.vocab;
-        assert!(prompts.len() <= b, "at most {b} prompts per call");
-        // rows: BOS + prompt, padded
-        let mut seqs: Vec<Vec<u32>> = prompts
+        anyhow::ensure!(
+            prompts.len() <= b,
+            "{} prompts in one call, artifact batch is {b}",
+            prompts.len()
+        );
+        // rows: BOS + prompt, padded. Rows must fit the token grid;
+        // generation length is additionally capped by seq_len below,
+        // so an ambitious max_new truncates instead of erroring.
+        let mut seqs = Vec::with_capacity(prompts.len());
+        for p in prompts {
+            let mut row = vec![BOS];
+            row.extend_from_slice(p);
+            anyhow::ensure!(
+                row.len() <= s,
+                "prompt of {} tokens (with BOS) exceeds seq_len {s}",
+                row.len()
+            );
+            seqs.push(row);
+        }
+        let mut done: Vec<bool> = seqs
             .iter()
-            .map(|p| {
-                let mut row = vec![BOS];
-                row.extend_from_slice(p);
-                assert!(row.len() + max_new <= s, "prompt too long");
-                row
-            })
+            .map(|row| row.len() >= s) // no room to emit anything
             .collect();
-        let mut done = vec![false; prompts.len()];
         let mut outs: Vec<Vec<u32>> =
             vec![Vec::new(); prompts.len()];
-
-        // fwd_logits wants only params + tokens; params upload once
-        let param_names: Vec<&str> = self
-            .rt
-            .cfg
-            .params
-            .iter()
-            .map(|(n, _)| n.as_str())
-            .collect();
-        let mut plan = ExecPlan::new(
-            std::sync::Arc::clone(&self.exe),
-            &param_names,
-        )?;
-        plan.bind_params(state)?;
 
         for _ in 0..max_new {
             if done.iter().all(|&d| d) {
@@ -82,9 +89,16 @@ impl<'rt> Generator<'rt> {
                     tokens[i * s + t] = tok as i32;
                 }
             }
-            plan.bind_i32("tokens", &[b, s], &tokens)?;
-            let out = plan.run()?;
-            let logits = &out[0]; // [B, S, V]
+            self.plan.bind_i32("tokens", &[b, s], &tokens)?;
+            let logits = self
+                .plan
+                .run()?
+                .into_iter()
+                .next()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("fwd_logits emitted no outputs")
+                })?
+                .into_host()?; // [B, S, V]
             for i in 0..prompts.len() {
                 if done[i] {
                     continue;
@@ -127,31 +141,62 @@ fn sample(probs: &[f32], rng: &mut Rng) -> usize {
     probs.len() - 1
 }
 
+/// The reference answer of an eval item, as a typed error instead of
+/// the `item.options[item.correct]` index panic: a single malformed
+/// item used to take down a whole eval pass (the crash family PR 3
+/// fixed in `ppl.rs`).
+fn reference_option(item: &EvalItem) -> Result<&Vec<u32>> {
+    item.options.get(item.correct).ok_or_else(|| {
+        anyhow::anyhow!(
+            "eval item: correct-option index {} out of range \
+             ({} options)",
+            item.correct,
+            item.options.len()
+        )
+    })
+}
+
 /// Greedy exact-match accuracy over eval items (the correct option is
-/// the reference answer).
+/// the reference answer). Malformed items — a correct index past the
+/// option list, or a prompt that cannot fit the token grid — score as
+/// incorrect (with a warning) while every other prompt keeps scoring.
 pub fn generate_accuracy(
     rt: &Runtime,
     state: &ModelState,
     items: &[EvalItem],
 ) -> Result<f64> {
-    let gen = Generator::new(rt)?;
+    let mut gen = Generator::new(rt, state)?;
     let mut rng = Rng::new(0);
     let b = rt.cfg.batch;
+    let s = rt.cfg.seq_len;
+    let mut scorable: Vec<(&EvalItem, &Vec<u32>)> = Vec::new();
+    for item in items {
+        match reference_option(item) {
+            // BOS + prompt + at least one generated token must fit
+            Ok(_) if 1 + item.prompt.len() >= s => eprintln!(
+                "[eval] prompt of {} tokens cannot fit seq_len {s}; \
+                 scored incorrect",
+                item.prompt.len()
+            ),
+            Ok(want) => scorable.push((item, want)),
+            Err(e) => {
+                eprintln!("[eval] skipping item (scored incorrect): {e}")
+            }
+        }
+    }
     let mut correct = 0usize;
-    for chunk in items.chunks(b) {
+    for chunk in scorable.chunks(b) {
         let prompts: Vec<Vec<u32>> =
-            chunk.iter().map(|i| i.prompt.clone()).collect();
+            chunk.iter().map(|(i, _)| i.prompt.clone()).collect();
         let max_new = chunk
             .iter()
-            .map(|i| i.options[i.correct].len())
+            .map(|(_, w)| w.len())
             .max()
-            .unwrap()
+            .unwrap_or(0)
             + 1;
-        let outs =
-            gen.generate(state, &prompts, max_new, 0.0, &mut rng)?;
-        for (item, out) in chunk.iter().zip(&outs) {
-            let want = &item.options[item.correct];
-            if out.len() >= want.len() && &out[..want.len()] == &want[..]
+        let outs = gen.generate(&prompts, max_new, 0.0, &mut rng)?;
+        for ((_, want), out) in chunk.iter().zip(&outs) {
+            if out.len() >= want.len() && out[..want.len()] == want[..]
             {
                 correct += 1;
             }
@@ -161,6 +206,7 @@ pub fn generate_accuracy(
 }
 
 /// Pass@k via k temperature samples per item (MBPP protocol analogue).
+/// Malformed items score as failed instead of panicking the pass.
 pub fn pass_at_k(
     rt: &Runtime,
     state: &ModelState,
@@ -169,18 +215,32 @@ pub fn pass_at_k(
     temperature: f32,
     seed: u64,
 ) -> Result<f64> {
-    let gen = Generator::new(rt)?;
+    let mut gen = Generator::new(rt, state)?;
     let mut rng = Rng::new(seed);
     let b = rt.cfg.batch;
+    let s = rt.cfg.seq_len;
     let mut passed = 0usize;
     for item in items {
-        let want = &item.options[item.correct];
+        let want = match reference_option(item) {
+            Ok(w) if 1 + item.prompt.len() < s => w,
+            Ok(_) => {
+                eprintln!(
+                    "[eval] prompt of {} tokens cannot fit seq_len \
+                     {s}; scored failed",
+                    item.prompt.len()
+                );
+                continue;
+            }
+            Err(e) => {
+                eprintln!("[eval] skipping item (scored failed): {e}");
+                continue;
+            }
+        };
         let mut hit = false;
         for _round in 0..k.div_ceil(b) {
             let n = b.min(k);
             let prompts = vec![item.prompt.clone(); n];
             let outs = gen.generate(
-                state,
                 &prompts,
                 want.len() + 1,
                 temperature,
@@ -198,4 +258,60 @@ pub fn pass_at_k(
         }
     }
     Ok(100.0 * passed as f64 / items.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_option_is_a_typed_error_not_a_panic() {
+        let bad = EvalItem {
+            prompt: vec![1, 2],
+            options: vec![vec![3], vec![4]],
+            correct: 7,
+            category: "t",
+        };
+        let err = reference_option(&bad).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains('7'), "{msg}");
+        assert!(msg.contains("2 options"), "{msg}");
+        let ok = EvalItem { correct: 1, ..bad };
+        assert_eq!(reference_option(&ok).unwrap(), &vec![4]);
+    }
+
+    #[test]
+    fn malformed_items_score_incorrect_without_killing_the_pass() {
+        let rt = crate::runtime::Runtime::with_backend(
+            crate::config::resolve_config(
+                &crate::runtime::artifacts_dir(),
+                "tiny",
+            )
+            .unwrap(),
+            Box::new(crate::runtime::RefBackend),
+        );
+        let mut rng = crate::util::rng::Rng::new(3);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let sane = EvalItem {
+            prompt: vec![1, 2],
+            options: vec![vec![3], vec![4]],
+            correct: 0,
+            category: "t",
+        };
+        let bad_index = EvalItem {
+            correct: 9,
+            ..sane.clone()
+        };
+        let long_prompt = EvalItem {
+            prompt: vec![1; rt.cfg.seq_len + 4],
+            ..sane.clone()
+        };
+        let items = vec![sane, bad_index, long_prompt];
+        // previously: index-out-of-bounds / assert panic. Now: the
+        // pass completes, malformed items count against accuracy.
+        let acc = generate_accuracy(&rt, &state, &items).unwrap();
+        assert!((0.0..=34.0).contains(&acc), "acc {acc}");
+        let p = pass_at_k(&rt, &state, &items, 1, 0.5, 1).unwrap();
+        assert!((0.0..=34.0).contains(&p), "pass@1 {p}");
+    }
 }

@@ -68,8 +68,16 @@ impl<'rt> NllScorer<'rt> {
                 seq: s,
             };
             plan.bind_batch(&batch)?;
-            let res = plan.run()?;
-            let nll = &res[0]; // [B]
+            // fwd_loss emits (nll, cnt); scoring only reads nll, so
+            // the cnt handle is dropped device-side undownloaded
+            let mut res = plan.run()?;
+            let nll_idx = res
+                .iter()
+                .position(|h| h.name() == "nll")
+                .ok_or_else(|| {
+                    anyhow::anyhow!("fwd_loss emitted no nll output")
+                })?;
+            let nll = res.swap_remove(nll_idx).into_host()?; // [B]
             for i in 0..chunk.len() {
                 out.push(nll.data[i] as f64);
             }

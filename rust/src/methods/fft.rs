@@ -59,16 +59,25 @@ impl Driver for FftDriver {
     ) -> Result<f64> {
         self.plan.bind_params(state)?;
         self.plan.bind_batch(batch)?;
-        let out = self.plan.run()?;
-        let loss = out[0].data[0] as f64;
-        for (spec, g) in
-            self.plan.spec().outputs[1..].iter().zip(&out[1..])
-        {
-            let name = spec.name.strip_prefix("g_").unwrap();
-            let adam = self.adam.get_mut(name).unwrap();
-            let mut upd = adam.update(g, lr as f32);
+        // full fine-tuning consumes every gradient, so every handle
+        // downloads — Table 16's "Other" column shows this traffic
+        let mut out = self.plan.run()?.into_iter();
+        let loss = out
+            .next()
+            .expect("loss output")
+            .into_host()?
+            .data[0] as f64;
+        for h in out {
+            let name = h
+                .name()
+                .strip_prefix("g_")
+                .expect("grad output name")
+                .to_string();
+            let g = h.into_host()?;
+            let adam = self.adam.get_mut(&name).unwrap();
+            let mut upd = adam.update(&g, lr as f32);
             upd.scale_assign(-1.0);
-            state.get_mut(name).add_assign(&upd);
+            state.get_mut(&name).add_assign(&upd);
         }
         Ok(loss)
     }

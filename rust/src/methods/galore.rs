@@ -109,16 +109,22 @@ impl Driver for GaloreDriver {
         }
         self.plan.bind_f32("lm_head", state.get("lm_head"))?;
         self.plan.bind_batch(batch)?;
-        let out = self.plan.run()?;
-        let loss = out[0].data[0] as f64;
+        // GaLore projects every gradient host-side, so the full
+        // output set downloads — that IS the method's traffic cost
+        let mut out = self.plan.run()?.into_iter();
+        let loss = out
+            .next()
+            .expect("loss output")
+            .into_host()?
+            .data[0] as f64;
         let mut grads = BTreeMap::new();
-        for (spec, g) in
-            self.plan.spec().outputs[1..].iter().zip(&out[1..])
-        {
-            grads.insert(
-                spec.name.strip_prefix("g_").unwrap().to_string(),
-                g.clone(),
-            );
+        for h in out {
+            let name = h
+                .name()
+                .strip_prefix("g_")
+                .expect("grad output name")
+                .to_string();
+            grads.insert(name, h.into_host()?);
         }
 
         for kind in self.cfg.linear_kinds.clone() {

@@ -251,16 +251,25 @@ impl Driver for LoraDriver {
             self.plan.bind_f32(name, t)?;
         }
         self.plan.bind_batch(batch)?;
-        let out = self.plan.run()?;
-        let loss = out[0].data[0] as f64;
-        for (spec, g) in
-            self.plan.spec().outputs[1..].iter().zip(&out[1..])
-        {
-            let name = spec.name.strip_prefix("g_").unwrap();
-            let adam = self.adam.get_mut(name).unwrap();
-            let mut upd = adam.update(g, lr as f32);
+        // every output is consumed (scalar loss + adapter-sized
+        // grads), so each handle downloads exactly once
+        let mut out = self.plan.run()?.into_iter();
+        let loss = out
+            .next()
+            .expect("loss output")
+            .into_host()?
+            .data[0] as f64;
+        for h in out {
+            let name = h
+                .name()
+                .strip_prefix("g_")
+                .expect("grad output name")
+                .to_string();
+            let g = h.into_host()?;
+            let adam = self.adam.get_mut(&name).unwrap();
+            let mut upd = adam.update(&g, lr as f32);
             upd.scale_assign(-1.0);
-            self.adapters.get_mut(name).unwrap().add_assign(&upd);
+            self.adapters.get_mut(&name).unwrap().add_assign(&upd);
         }
         Ok(loss)
     }

@@ -29,7 +29,7 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
 use crate::data::Batch;
 use crate::methods::{grads_artifact, Driver, SelectionEvent};
-use crate::runtime::{ExecPlan, Runtime};
+use crate::runtime::{ExecPlan, OutputHandle, Runtime};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -477,14 +477,20 @@ impl LosiaDriver {
     }
 
     /// Run the fused Pro artifact: returns (loss, subnet grads in
-    /// delta-ABI order, probe-layer full grads by kind, lm full grad).
-    /// Per-step bindings are the tiny dws frames, the probe index, and
-    /// the batch — the backbone stays device-resident.
+    /// delta-ABI order, probe-layer grad handles by kind order, lm
+    /// grad handle). Per-step bindings are the tiny dws frames, the
+    /// probe index, and the batch — the backbone stays
+    /// device-resident. Only the scalar loss and the subnet-delta
+    /// frames are downloaded here; the probe-layer full grads stay
+    /// device-side as [`OutputHandle`]s until (unless) the importance
+    /// profiler reads them, so the per-step device→host traffic is
+    /// subnet-delta-sized — the `downloads_bytes ≪ full-grad bytes`
+    /// invariant `tests/output_handles.rs` pins.
     fn run_pro(
         &mut self,
         batch: &Batch,
         probe: usize,
-    ) -> Result<(f64, Vec<Tensor>, BTreeMap<String, Tensor>, Tensor)>
+    ) -> Result<(f64, Vec<Tensor>, Vec<OutputHandle>, OutputHandle)>
     {
         for kind in self.cfg.linear_kinds.clone() {
             self.plan.bind_f32(
@@ -496,21 +502,20 @@ impl LosiaDriver {
         self.plan.bind_scalar_i32("probe", probe as i32)?;
         self.plan.bind_batch(batch)?;
         let mut out = self.plan.run()?;
-        let loss = out[0].data[0] as f64;
         let lm_grad = out.pop().expect("probe_lm_head output");
         let kinds = self.cfg.linear_kinds.len();
-        let probe_grads: BTreeMap<String, Tensor> = self
-            .cfg
-            .linear_kinds
-            .iter()
-            .cloned()
-            .zip(out.split_off(out.len() - kinds))
-            .collect();
-        out.remove(0); // loss
-        Ok((loss, out, probe_grads, lm_grad))
+        let probe_grads = out.split_off(out.len() - kinds);
+        let loss = out.remove(0).into_host()?.data[0] as f64;
+        let mut deltas = Vec::with_capacity(out.len());
+        for h in out {
+            deltas.push(h.into_host()?);
+        }
+        Ok((loss, deltas, probe_grads, lm_grad))
     }
 
     /// Run the full-grad artifact and return (loss, grads by name).
+    /// The host-gather path consumes every gradient, so everything
+    /// downloads.
     fn run_full(
         &mut self,
         state: &ModelState,
@@ -518,14 +523,20 @@ impl LosiaDriver {
     ) -> Result<(f64, BTreeMap<String, Tensor>)> {
         self.plan.bind_params(state)?;
         self.plan.bind_batch(batch)?;
-        let out = self.plan.run()?;
-        let loss = out[0].data[0] as f64;
+        let mut out = self.plan.run()?.into_iter();
+        let loss = out
+            .next()
+            .expect("loss output")
+            .into_host()?
+            .data[0] as f64;
         let mut grads = BTreeMap::new();
-        for (spec, t) in
-            self.plan.spec().outputs[1..].iter().zip(&out[1..])
-        {
-            let name = spec.name.strip_prefix("g_").unwrap();
-            grads.insert(name.to_string(), t.clone());
+        for h in out {
+            let name = h
+                .name()
+                .strip_prefix("g_")
+                .expect("grad output name")
+                .to_string();
+            grads.insert(name, h.into_host()?);
         }
         Ok((loss, grads))
     }
@@ -622,19 +633,20 @@ impl Driver for LosiaDriver {
 
         // ---- gradients -------------------------------------------------
         let (loss, subnet_grads, full_grads);
-        let mut probe_grads: Option<(BTreeMap<String, Tensor>, Tensor)> =
+        let mut probe_handles: Option<(Vec<OutputHandle>, OutputHandle)> =
             None;
         if self.pro {
             // probe the currently-profiled decoder layer (the lm_head
             // group reuses slot 0's layer grads but only consumes the
-            // lm output)
+            // lm output). The probe grads come back as device handles
+            // and download below only if the profiler reads them.
             let g = self.sched.profiling_group(t);
             let probe_layer = g.min(self.cfg.n_layers - 1);
             let (l, outs, pg, lmg) =
                 self.run_pro(batch, probe_layer)?;
             loss = l;
             subnet_grads = Some(outs);
-            probe_grads = Some((pg, lmg));
+            probe_handles = Some((pg, lmg));
             full_grads = None;
         } else {
             let (l, grads) = self.run_full(state, batch)?;
@@ -670,25 +682,41 @@ impl Driver for LosiaDriver {
                     let per: BTreeMap<String, Tensor> = if g
                         < self.cfg.n_layers
                     {
-                        match (&full_grads, &probe_grads) {
-                            (Some(grads), _) => self
-                                .cfg
+                        if let Some(grads) = &full_grads {
+                            self.cfg
                                 .linear_kinds
                                 .iter()
                                 .map(|k| {
                                     (k.clone(), grads[k].index_axis0(g))
                                 })
-                                .collect(),
-                            (_, Some((pg, _))) => pg.clone(),
-                            _ => unreachable!(),
+                                .collect()
+                        } else if let Some((pg, _)) =
+                            probe_handles.take()
+                        {
+                            // the one place Pro moves layer-sized
+                            // grads to the host: the probed layer's
+                            // slices, in linear-kind ABI order
+                            self.cfg
+                                .linear_kinds
+                                .iter()
+                                .cloned()
+                                .zip(pg)
+                                .map(|(k, h)| Ok((k, h.into_host()?)))
+                                .collect::<Result<
+                                    BTreeMap<String, Tensor>,
+                                >>()?
+                        } else {
+                            unreachable!()
                         }
                     } else {
-                        let lm = match (&full_grads, &probe_grads) {
-                            (Some(grads), _) => {
-                                grads["lm_head"].clone()
-                            }
-                            (_, Some((_, lmg))) => lmg.clone(),
-                            _ => unreachable!(),
+                        let lm = if let Some(grads) = &full_grads {
+                            grads["lm_head"].clone()
+                        } else if let Some((_, lmg)) =
+                            probe_handles.take()
+                        {
+                            lmg.into_host()?
+                        } else {
+                            unreachable!()
                         };
                         let mut m = BTreeMap::new();
                         m.insert("lm_head".to_string(), lm);

@@ -19,9 +19,16 @@
 //!   (batch tensors, subnet deltas). Static buffers persist across
 //!   `run()` calls; per-step bindings are cleared after every run so a
 //!   stale batch is an error instead of silent training on old data.
+//! * [`OutputHandle`] — a device-resident output of one `run()`.
+//!   Nothing crosses back to the host until the caller asks
+//!   ([`OutputHandle::host`] / [`OutputHandle::into_host`]), so a
+//!   driver that only consumes the subnet-delta outputs never pays
+//!   for full-size gradients it would immediately discard.
 //! * [`ExecStats`] — atomic per-artifact counters (calls, wall time,
-//!   static/per-step upload counts) surfaced through the observer
-//!   event stream ([`crate::session::observer::ExecEvent`]).
+//!   static/per-step upload counts, and the download split: how many
+//!   outputs were materialised host-side and how many bytes moved)
+//!   surfaced through the observer event stream
+//!   ([`crate::session::observer::ExecEvent`]).
 //!
 //! ## The static-binding invalidation contract
 //!
@@ -33,6 +40,19 @@
 //! pin the contract (a stale static binding keeps executing the old
 //! value — the "silently train on old weights" bug is caught by
 //! asserting upload counts, not by guesswork).
+//!
+//! ## Buffer donation
+//!
+//! [`ExecPlan::donate`] marks a static input as *donated* (classic XLA
+//! input/output aliasing): the backend may reclaim or alias the
+//! buffer's storage while producing a same-shape output, so e.g. a
+//! relocalization's folded-`W` re-upload reuses the old backbone slot
+//! instead of allocating next to it. Donation is advisory on the
+//! backend side (a backend that cannot alias simply drops the buffer)
+//! but binding semantics are uniform: a donated slot is **consumed by
+//! `run()`** like a per-step binding, so executing again without
+//! re-binding it is a loud error rather than silent reuse of
+//! reclaimed storage.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -143,6 +163,8 @@ pub struct ExecStats {
     nanos: AtomicU64,
     static_uploads: AtomicU64,
     step_uploads: AtomicU64,
+    downloads: AtomicU64,
+    download_bytes: AtomicU64,
 }
 
 impl ExecStats {
@@ -152,6 +174,10 @@ impl ExecStats {
             nanos: self.nanos.load(Ordering::Relaxed),
             static_uploads: self.static_uploads.load(Ordering::Relaxed),
             step_uploads: self.step_uploads.load(Ordering::Relaxed),
+            downloads: self.downloads.load(Ordering::Relaxed),
+            download_bytes: self
+                .download_bytes
+                .load(Ordering::Relaxed),
         }
     }
 
@@ -160,11 +186,18 @@ impl ExecStats {
         self.nanos.store(0, Ordering::Relaxed);
         self.static_uploads.store(0, Ordering::Relaxed);
         self.step_uploads.store(0, Ordering::Relaxed);
+        self.downloads.store(0, Ordering::Relaxed);
+        self.download_bytes.store(0, Ordering::Relaxed);
     }
 
     fn record_exec(&self, nanos: u64) {
         self.calls.fetch_add(1, Ordering::Relaxed);
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    fn record_download(&self, bytes: u64) {
+        self.downloads.fetch_add(1, Ordering::Relaxed);
+        self.download_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     fn record_upload(&self, kind: BindingKind) {
@@ -186,6 +219,10 @@ pub struct ExecSnapshot {
     pub nanos: u64,
     pub static_uploads: u64,
     pub step_uploads: u64,
+    /// outputs materialised host-side (lazy `OutputHandle` downloads)
+    pub downloads: u64,
+    /// device→host bytes those downloads moved
+    pub download_bytes: u64,
 }
 
 impl ExecSnapshot {
@@ -201,6 +238,10 @@ impl ExecSnapshot {
             step_uploads: self
                 .step_uploads
                 .saturating_sub(prev.step_uploads),
+            downloads: self.downloads.saturating_sub(prev.downloads),
+            download_bytes: self
+                .download_bytes
+                .saturating_sub(prev.download_bytes),
         }
     }
 
@@ -215,14 +256,31 @@ impl ExecSnapshot {
 
 // --------------------------------------------------------------- traits
 
+/// One device-resident output value. Downloading consumes it — the
+/// single device→host copy happens here (or never, if the caller
+/// drops the handle without asking).
+pub trait DeviceValue {
+    fn download(self: Box<Self>) -> Result<Tensor>;
+}
+
 /// Backend-owned input storage for one executable — the "device
 /// buffers". Slot indices follow the artifact manifest input order.
 pub trait DeviceBuffers {
     /// Copy one host value into input slot `slot`.
     fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()>;
 
-    /// Execute over the uploaded inputs; outputs in manifest order.
-    fn execute(&mut self) -> Result<Vec<Tensor>>;
+    /// Mark input slot `slot` as donated: `execute` may reclaim or
+    /// alias its storage for an output. Advisory — the default no-op
+    /// keeps copy semantics — but the slot is invalidated by the plan
+    /// after every `run()` either way, so callers observe identical
+    /// binding behaviour on every backend.
+    fn donate(&mut self, _slot: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// Execute over the uploaded inputs; device-resident outputs in
+    /// manifest order.
+    fn execute(&mut self) -> Result<Vec<Box<dyn DeviceValue>>>;
 }
 
 /// One compiled (PJRT) or interpreted (reference) artifact.
@@ -270,8 +328,10 @@ impl Executable {
     }
 
     /// One-shot execution with positional, shape/dtype-checked inputs
-    /// in manifest order. Allocates fresh buffers per call — use an
-    /// [`ExecPlan`] on hot paths.
+    /// in manifest order. Allocates fresh buffers per call and
+    /// downloads every output eagerly — use an [`ExecPlan`] on hot
+    /// paths, where [`OutputHandle`]s keep untouched outputs
+    /// device-side.
     pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<Tensor>> {
         anyhow::ensure!(
             inputs.len() == self.spec.inputs.len(),
@@ -299,19 +359,115 @@ impl Executable {
         let t0 = Instant::now();
         let out = bufs.execute()?;
         self.stats.record_exec(t0.elapsed().as_nanos() as u64);
-        self.check_outputs(&out)?;
-        Ok(out)
+        self.check_output_count(out.len())?;
+        out.into_iter()
+            .enumerate()
+            .map(|(i, v)| self.download_output(i, v))
+            .collect()
     }
 
-    fn check_outputs(&self, out: &[Tensor]) -> Result<()> {
+    fn check_output_count(&self, got: usize) -> Result<()> {
         anyhow::ensure!(
-            out.len() == self.spec.outputs.len(),
+            got == self.spec.outputs.len(),
             "artifact {:?}: got {} outputs, manifest wants {}",
             self.spec.name,
-            out.len(),
+            got,
             self.spec.outputs.len()
         );
         Ok(())
+    }
+
+    /// Materialise output `index` host-side, validating its manifest
+    /// shape and recording the download split.
+    fn download_output(
+        &self,
+        index: usize,
+        value: Box<dyn DeviceValue>,
+    ) -> Result<Tensor> {
+        let ospec = &self.spec.outputs[index];
+        let t = value.download().with_context(|| {
+            format!(
+                "artifact {:?}: downloading output {:?}",
+                self.spec.name, ospec.name
+            )
+        })?;
+        anyhow::ensure!(
+            t.shape == ospec.shape,
+            "artifact {:?}: output {:?} has shape {:?}, manifest \
+             wants {:?}",
+            self.spec.name,
+            ospec.name,
+            t.shape,
+            ospec.shape
+        );
+        self.stats
+            .record_download(t.data.len() as u64 * 4);
+        Ok(t)
+    }
+}
+
+// -------------------------------------------------------- output handle
+
+/// A device-resident output of one [`ExecPlan::run`]. The tensor stays
+/// backend-side until [`OutputHandle::host`] / [`OutputHandle::into_host`]
+/// downloads it (once — later calls reuse the cached copy); dropping an
+/// undownloaded handle moves zero bytes. `ExecStats`' download
+/// counters record exactly the handles that crossed back, which is
+/// what makes "the LoSiA-Pro hot path downloads only subnet-delta-sized
+/// outputs" an assertable invariant rather than a hope.
+pub struct OutputHandle {
+    exe: Arc<Executable>,
+    index: usize,
+    value: Option<Box<dyn DeviceValue>>,
+    host: Option<Tensor>,
+}
+
+impl OutputHandle {
+    /// Manifest output name.
+    pub fn name(&self) -> &str {
+        &self.exe.spec().outputs[self.index].name
+    }
+
+    /// Manifest output shape (known without downloading).
+    pub fn shape(&self) -> &[usize] {
+        &self.exe.spec().outputs[self.index].shape
+    }
+
+    /// Size of the host copy this handle would download.
+    pub fn byte_len(&self) -> u64 {
+        self.shape().iter().product::<usize>() as u64 * 4
+    }
+
+    pub fn is_downloaded(&self) -> bool {
+        self.host.is_some()
+    }
+
+    fn download(&mut self) -> Result<()> {
+        if self.host.is_some() {
+            return Ok(());
+        }
+        let value = self.value.take().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {:?}: output {:?} was already consumed",
+                self.exe.spec().name,
+                self.exe.spec().outputs[self.index].name,
+            )
+        })?;
+        let t = self.exe.download_output(self.index, value)?;
+        self.host = Some(t);
+        Ok(())
+    }
+
+    /// Borrow the host copy, downloading it on first access.
+    pub fn host(&mut self) -> Result<&Tensor> {
+        self.download()?;
+        Ok(self.host.as_ref().expect("downloaded above"))
+    }
+
+    /// Take the host copy, downloading it if it never crossed yet.
+    pub fn into_host(mut self) -> Result<Tensor> {
+        self.download()?;
+        Ok(self.host.take().expect("downloaded above"))
     }
 }
 
@@ -325,6 +481,7 @@ pub struct ExecPlan {
     index: BTreeMap<String, usize>,
     kinds: Vec<BindingKind>,
     bound: Vec<bool>,
+    donated: Vec<bool>,
 }
 
 impl ExecPlan {
@@ -356,6 +513,7 @@ impl ExecPlan {
             kinds[i] = BindingKind::Static;
         }
         let bound = vec![false; spec.inputs.len()];
+        let donated = vec![false; spec.inputs.len()];
         let bufs = exe.exec.alloc_buffers();
         Ok(ExecPlan {
             exe,
@@ -363,6 +521,7 @@ impl ExecPlan {
             index,
             kinds,
             bound,
+            donated,
         })
     }
 
@@ -390,6 +549,57 @@ impl ExecPlan {
             .get(name)
             .map(|&i| self.bound[i])
             .unwrap_or(false)
+    }
+
+    pub fn is_donated(&self, name: &str) -> bool {
+        self.index
+            .get(name)
+            .map(|&i| self.donated[i])
+            .unwrap_or(false)
+    }
+
+    /// Donate a static input's buffer to the backend: every `run()`
+    /// may reclaim or alias its storage into a same-shape output, and
+    /// consumes the binding (the caller must re-bind before the next
+    /// run — reclaimed storage is never silently re-read). The input
+    /// must be a static f32 binding with at least one same-shape
+    /// output to alias into; both are checked at donate time against
+    /// the manifest, not mid-step.
+    pub fn donate(&mut self, name: &str) -> Result<()> {
+        let spec = self.exe.spec();
+        let i = *self.index.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {:?}: no input named {:?} to donate ({})",
+                spec.name,
+                name,
+                spec.signature()
+            )
+        })?;
+        anyhow::ensure!(
+            self.kinds[i] == BindingKind::Static,
+            "artifact {:?}: input {:?} is per-step — only static \
+             buffers can be donated ({})",
+            spec.name,
+            name,
+            spec.signature()
+        );
+        let ispec = &spec.inputs[i];
+        anyhow::ensure!(
+            ispec.dtype == Dtype::F32
+                && spec
+                    .outputs
+                    .iter()
+                    .any(|o| o.shape == ispec.shape),
+            "artifact {:?}: input {:?} ({:?} {:?}) matches no output \
+             buffer to alias into ({})",
+            spec.name,
+            name,
+            ispec.dtype,
+            ispec.shape,
+            spec.signature()
+        );
+        self.donated[i] = true;
+        self.bufs.donate(i)
     }
 
     /// Upload one named input. Static slots persist until re-bound;
@@ -482,9 +692,12 @@ impl ExecPlan {
         Ok(())
     }
 
-    /// Execute. Every input must be bound; per-step bindings are
-    /// cleared afterwards so the next run demands fresh ones.
-    pub fn run(&mut self) -> Result<Vec<Tensor>> {
+    /// Execute. Every input must be bound; per-step bindings (and
+    /// donated statics, whose storage the backend may have reclaimed)
+    /// are cleared afterwards so the next run demands fresh ones.
+    /// Outputs come back as device-resident [`OutputHandle`]s — only
+    /// what the caller downloads crosses to the host.
+    pub fn run(&mut self) -> Result<Vec<OutputHandle>> {
         let spec = self.exe.spec();
         let unbound: Vec<&str> = spec
             .inputs
@@ -506,12 +719,31 @@ impl ExecPlan {
             .stats
             .record_exec(t0.elapsed().as_nanos() as u64);
         for (i, kind) in self.kinds.iter().enumerate() {
-            if *kind == BindingKind::PerStep {
+            if *kind == BindingKind::PerStep || self.donated[i] {
                 self.bound[i] = false;
             }
         }
-        self.exe.check_outputs(&out)?;
-        Ok(out)
+        self.exe.check_output_count(out.len())?;
+        Ok(out
+            .into_iter()
+            .enumerate()
+            .map(|(index, value)| OutputHandle {
+                exe: Arc::clone(&self.exe),
+                index,
+                value: Some(value),
+                host: None,
+            })
+            .collect())
+    }
+
+    /// Execute and download every output — the convenience path for
+    /// callers that genuinely consume the full output set (full-grad
+    /// drivers, the gradient-structure benches).
+    pub fn run_host(&mut self) -> Result<Vec<Tensor>> {
+        self.run()?
+            .into_iter()
+            .map(OutputHandle::into_host)
+            .collect()
     }
 }
 
@@ -755,12 +987,12 @@ mod tests {
         let mut state = ModelState::init(&rt.cfg, &mut rng);
         let batch = tiny_batch(&rt);
         bind_all(&mut plan, &state, &batch);
-        let before = plan.run().unwrap();
+        let before = plan.run_host().unwrap();
 
         // mutate the host lm_head; device copy must be unaffected
         state.get_mut("lm_head").scale_assign(0.0);
         plan.bind_batch(&batch).unwrap();
-        let stale = plan.run().unwrap();
+        let stale = plan.run_host().unwrap();
         assert_eq!(before[0].data, stale[0].data, "static was re-read");
 
         let s0 = exe.stats();
@@ -769,7 +1001,7 @@ mod tests {
         assert_eq!(d.static_uploads, 1);
         assert_eq!(d.step_uploads, 0);
         plan.bind_batch(&batch).unwrap();
-        let fresh = plan.run().unwrap();
+        let fresh = plan.run_host().unwrap();
         assert_ne!(
             before[0].data, fresh[0].data,
             "re-bound static had no effect"
@@ -820,5 +1052,139 @@ mod tests {
         assert!(msg.contains("fwd_loss"), "{msg}");
         assert!(msg.contains("shape"), "{msg}");
         assert!(msg.contains("inputs:"), "{msg}");
+    }
+
+    #[test]
+    fn undownloaded_outputs_move_zero_bytes() {
+        // The download-on-demand contract: run() itself records no
+        // download traffic; each handle pays exactly once on first
+        // host access, cached afterwards.
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut plan = ExecPlan::new(Arc::clone(&exe), &[]).unwrap();
+        let mut rng = Rng::new(5);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        bind_all(&mut plan, &state, &batch);
+
+        let s0 = exe.stats();
+        let mut out = plan.run().unwrap();
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.calls, 1);
+        assert_eq!(d.downloads, 0, "run() downloaded eagerly");
+        assert_eq!(d.download_bytes, 0);
+
+        // fwd_loss outputs: nll [B], cnt [B] — download only nll
+        assert_eq!(out[0].name(), "nll");
+        assert!(!out[0].is_downloaded());
+        let nll_bytes = out[0].byte_len();
+        out[0].host().unwrap();
+        out[0].host().unwrap(); // cached: no second download
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.downloads, 1);
+        assert_eq!(d.download_bytes, nll_bytes);
+
+        // dropping the never-touched cnt handle moves nothing
+        drop(out);
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.downloads, 1);
+    }
+
+    #[test]
+    fn one_shot_run_downloads_everything() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut rng = Rng::new(6);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        let inputs: Vec<HostValue> = exe
+            .spec()
+            .inputs
+            .iter()
+            .map(|i| match i.name.as_str() {
+                "tokens" => HostValue::I32 {
+                    shape: i.shape.clone(),
+                    data: batch.tokens.clone(),
+                },
+                "targets" => HostValue::I32 {
+                    shape: i.shape.clone(),
+                    data: batch.targets.clone(),
+                },
+                "mask" => HostValue::F32(Tensor::from_vec(
+                    &i.shape,
+                    batch.mask.clone(),
+                )),
+                name => {
+                    HostValue::F32(state.get(name).clone())
+                }
+            })
+            .collect();
+        let s0 = exe.stats();
+        let out = exe.run(&inputs).unwrap();
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.downloads, out.len() as u64);
+        let bytes: u64 =
+            out.iter().map(|t| t.data.len() as u64 * 4).sum();
+        assert_eq!(d.download_bytes, bytes);
+    }
+
+    #[test]
+    fn donation_rejects_per_step_unknown_and_unaliasable_inputs() {
+        let rt = ref_runtime();
+        let exe = rt.load("grads_full").unwrap();
+        let mut plan =
+            ExecPlan::new(Arc::clone(&exe), &["embed"]).unwrap();
+
+        let err = plan.donate("nope").unwrap_err();
+        assert!(format!("{err:#}").contains("nope"));
+
+        // tokens is per-step (and i32 — no output to alias into)
+        let err = plan.donate("tokens").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("per-step") || msg.contains("static"), "{msg}");
+
+        // lm_head was not declared static on this plan
+        let err = plan.donate("lm_head").unwrap_err();
+        assert!(format!("{err:#}").contains("static"));
+
+        // embed is static and grads_full emits g_embed of equal shape
+        plan.donate("embed").unwrap();
+        assert!(plan.is_donated("embed"));
+        assert!(!plan.is_donated("lm_head"));
+    }
+
+    #[test]
+    fn donated_static_is_consumed_by_run() {
+        let rt = ref_runtime();
+        let exe = rt.load("grads_full").unwrap();
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan =
+            ExecPlan::new(Arc::clone(&exe), &param_names).unwrap();
+        plan.donate("embed").unwrap();
+        let mut rng = Rng::new(7);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        bind_all(&mut plan, &state, &batch);
+        plan.run().unwrap();
+        assert!(
+            !plan.is_bound("embed"),
+            "donated static survived run()"
+        );
+        plan.bind_batch(&batch).unwrap();
+        let err = plan.run().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("embed"),
+            "stale donated slot did not error by name"
+        );
+        // re-binding re-arms the donation for the next run
+        plan.bind_f32("embed", state.get("embed")).unwrap();
+        plan.bind_batch(&batch).unwrap();
+        plan.run().unwrap();
+        assert!(!plan.is_bound("embed"));
     }
 }

@@ -26,8 +26,8 @@ pub mod reference;
 
 pub use backend::{
     backend_choice, Backend, BackendChoice, BindingKind, DeviceBuffers,
-    ExecPlan, ExecSnapshot, ExecStats, Executable, Executor, HostRef,
-    Runtime,
+    DeviceValue, ExecPlan, ExecSnapshot, ExecStats, Executable,
+    Executor, HostRef, OutputHandle, Runtime,
 };
 pub use host::HostValue;
 pub use pjrt::PjrtBackend;

@@ -4,6 +4,17 @@
 //! Input slots hold `xla::Literal`s — the host→device conversion
 //! happens once per [`crate::runtime::ExecPlan::bind`], so static
 //! bindings (frozen parameters) cost nothing on the per-step path.
+//! Outputs stay as literals until an
+//! [`crate::runtime::OutputHandle`] downloads them: the
+//! literal→`Tensor` element copy is the device→host transfer this
+//! backend defers, so an untouched output (a full-size gradient the
+//! driver discards) never materialises host-side.
+//!
+//! Donation: PJRT input aliasing is fixed at compile time by the HLO
+//! module, which `aot.py` does not emit — so `donate` here only drops
+//! the donated literal after a successful execute (reclaiming its
+//! memory) instead of aliasing. Binding semantics match the reference
+//! backend exactly: a donated slot is consumed by every run.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -12,7 +23,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{ArtifactSpec, ModelCfg};
 use crate::runtime::backend::{
-    Backend, DeviceBuffers, Executor, HostRef,
+    Backend, DeviceBuffers, DeviceValue, Executor, HostRef,
 };
 use crate::runtime::host::HostValue;
 use crate::tensor::Tensor;
@@ -41,10 +52,16 @@ impl Backend for PjrtBackend {
         spec: &ArtifactSpec,
     ) -> Result<Box<dyn Executor>> {
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file.to_str().unwrap(),
-        )
-        .with_context(|| format!("loading {}", spec.file.display()))?;
+        let path = spec.file.to_str().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {:?}: non-UTF-8 artifact path {:?} ({})",
+                spec.name,
+                spec.file,
+                spec.signature()
+            )
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("loading {}", spec.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
@@ -76,6 +93,7 @@ impl Executor for PjrtExecutor {
             exe: Arc::clone(&self.exe),
             spec: Arc::clone(&self.spec),
             slots,
+            donated: vec![false; self.spec.inputs.len()],
         })
     }
 }
@@ -84,6 +102,19 @@ struct PjrtBuffers {
     exe: Arc<xla::PjRtLoadedExecutable>,
     spec: Arc<ArtifactSpec>,
     slots: Vec<Option<xla::Literal>>,
+    donated: Vec<bool>,
+}
+
+/// One output literal, converted to a host `Tensor` only on download.
+struct PjrtValue {
+    lit: xla::Literal,
+    shape: Vec<usize>,
+}
+
+impl DeviceValue for PjrtValue {
+    fn download(self: Box<Self>) -> Result<Tensor> {
+        HostValue::f32_from_literal(&self.lit, &self.shape)
+    }
 }
 
 fn to_literal(value: HostRef<'_>) -> Result<xla::Literal> {
@@ -106,7 +137,12 @@ impl DeviceBuffers for PjrtBuffers {
         Ok(())
     }
 
-    fn execute(&mut self) -> Result<Vec<Tensor>> {
+    fn donate(&mut self, slot: usize) -> Result<()> {
+        self.donated[slot] = true;
+        Ok(())
+    }
+
+    fn execute(&mut self) -> Result<Vec<Box<dyn DeviceValue>>> {
         let mut literals = Vec::with_capacity(self.slots.len());
         for (i, slot) in self.slots.iter_mut().enumerate() {
             literals.push(slot.take().ok_or_else(|| {
@@ -119,10 +155,20 @@ impl DeviceBuffers for PjrtBuffers {
             })?);
         }
         let run = self.exe.execute::<xla::Literal>(&literals);
-        // return the literals to their slots before error handling so
-        // static bindings survive a failed execute
-        for (slot, lit) in self.slots.iter_mut().zip(literals) {
-            *slot = Some(lit);
+        // Return the literals to their slots before error handling so
+        // static bindings survive a failed execute. Donated slots are
+        // consumed on success — their literals drop here, reclaiming
+        // the storage the caller promised not to re-read.
+        let ok = run.is_ok();
+        for ((slot, donated), lit) in self
+            .slots
+            .iter_mut()
+            .zip(&self.donated)
+            .zip(literals)
+        {
+            if !(ok && *donated) {
+                *slot = Some(lit);
+            }
         }
         let result = run?[0][0].to_literal_sync()?;
         // aot.py lowers with return_tuple=True: always a tuple.
@@ -134,10 +180,15 @@ impl DeviceBuffers for PjrtBuffers {
             parts.len(),
             self.spec.outputs.len()
         );
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, ospec) in parts.iter().zip(&self.spec.outputs) {
-            out.push(HostValue::f32_from_literal(lit, &ospec.shape)?);
-        }
-        Ok(out)
+        Ok(parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, ospec)| {
+                Box::new(PjrtValue {
+                    lit,
+                    shape: ospec.shape.clone(),
+                }) as Box<dyn DeviceValue>
+            })
+            .collect())
     }
 }

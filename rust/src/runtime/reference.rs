@@ -25,7 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{ArtifactSpec, ModelCfg};
 use crate::runtime::backend::{
-    Backend, DeviceBuffers, Executor, HostRef,
+    Backend, DeviceBuffers, DeviceValue, Executor, HostRef,
 };
 use crate::runtime::host::HostValue;
 use crate::runtime::kernels::{self, Pool};
@@ -83,8 +83,21 @@ impl Executor for RefExecutor {
             cfg: Arc::clone(&self.cfg),
             spec: Arc::clone(&self.spec),
             slots,
+            donated: vec![false; self.spec.inputs.len()],
             pool: Pool::new(),
         })
+    }
+}
+
+/// The interpreter's device-resident output: the computed tensor held
+/// backend-side until the handle downloads it (a move, not a copy —
+/// the "device" IS host memory here, so laziness costs nothing and
+/// the download counters still model the contract traffic).
+struct RefValue(Tensor);
+
+impl DeviceValue for RefValue {
+    fn download(self: Box<Self>) -> Result<Tensor> {
+        Ok(self.0)
     }
 }
 
@@ -97,10 +110,19 @@ impl Executor for RefExecutor {
 /// reallocating — a static binding therefore costs exactly one
 /// allocation for the plan's lifetime, and zero copies per step
 /// between mutations.
+///
+/// Donation (`DeviceBuffers::donate`) marks a slot whose buffer may be
+/// reclaimed: after each `execute()` the slot is taken and, when the
+/// `Arc` is uniquely held, its f32 storage is recycled into the
+/// scratch pool — the next same-shape allocation (typically the
+/// matching output, or the re-bound input itself) reuses it instead of
+/// growing the heap. Numerics are untouched, so donated and
+/// non-donated runs stay bitwise identical.
 struct RefBuffers {
     cfg: Arc<ModelCfg>,
     spec: Arc<ArtifactSpec>,
     slots: Vec<Option<Arc<HostValue>>>,
+    donated: Vec<bool>,
     pool: Pool,
 }
 
@@ -141,20 +163,43 @@ impl DeviceBuffers for RefBuffers {
         Ok(())
     }
 
-    fn execute(&mut self) -> Result<Vec<Tensor>> {
-        let mut inputs: BTreeMap<&str, &HostValue> = BTreeMap::new();
-        for (i, spec) in self.spec.inputs.iter().enumerate() {
-            let v = self.slots[i].as_ref().ok_or_else(|| {
-                anyhow::anyhow!(
-                    "artifact {:?}: input slot {i} ({:?}) was never \
-                     uploaded",
-                    self.spec.name,
-                    spec.name
-                )
-            })?;
-            inputs.insert(spec.name.as_str(), v.as_ref());
+    fn donate(&mut self, slot: usize) -> Result<()> {
+        self.donated[slot] = true;
+        Ok(())
+    }
+
+    fn execute(&mut self) -> Result<Vec<Box<dyn DeviceValue>>> {
+        let out = {
+            let mut inputs: BTreeMap<&str, &HostValue> =
+                BTreeMap::new();
+            for (i, spec) in self.spec.inputs.iter().enumerate() {
+                let v = self.slots[i].as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "artifact {:?}: input slot {i} ({:?}) was \
+                         never uploaded",
+                        self.spec.name,
+                        spec.name
+                    )
+                })?;
+                inputs.insert(spec.name.as_str(), v.as_ref());
+            }
+            run_artifact(&self.cfg, &self.spec, &inputs, &self.pool)?
+        };
+        // reclaim donated buffers now that the compute borrow ended
+        for (i, donated) in self.donated.iter().enumerate() {
+            if !*donated {
+                continue;
+            }
+            if let Some(arc) = self.slots[i].take() {
+                if let Ok(HostValue::F32(t)) = Arc::try_unwrap(arc) {
+                    self.pool.recycle(t.data);
+                }
+            }
         }
-        run_artifact(&self.cfg, &self.spec, &inputs, &self.pool)
+        Ok(out
+            .into_iter()
+            .map(|t| Box::new(RefValue(t)) as Box<dyn DeviceValue>)
+            .collect())
     }
 }
 
@@ -1562,12 +1607,12 @@ mod tests {
         };
         plan.bind_params(&state).unwrap();
         plan.bind_batch(&batch).unwrap();
-        let first = plan.run().unwrap();
+        let first = plan.run_host().unwrap();
 
         let s0 = exe.stats();
         for _ in 0..4 {
             plan.bind_batch(&batch).unwrap();
-            let out = plan.run().unwrap();
+            let out = plan.run_host().unwrap();
             for (a, b) in first.iter().zip(&out) {
                 assert_eq!(
                     a.data, b.data,
@@ -1597,12 +1642,77 @@ mod tests {
             for (spec, hv) in specs.iter().zip(&inputs) {
                 plan.bind(&spec.name, hv.into()).unwrap();
             }
-            let out = plan.run().unwrap();
+            let out = plan.run_host().unwrap();
             for (a, b) in one_shot.iter().zip(&out) {
                 assert_eq!(a.shape, b.shape);
                 assert_eq!(a.data, b.data, "plan diverged from run()");
             }
         }
+    }
+
+    #[test]
+    fn donated_plan_matches_undonated_bitwise() {
+        // Donation only changes where allocations come from — every
+        // output must stay bit-identical to an undonated plan, and
+        // the donated slot must invalidate after each run.
+        let rt = rt();
+        let exe = rt.load("grads_full").unwrap();
+        let inputs = inputs_for(&rt, "grads_full", 21);
+        let specs = exe.spec().inputs.clone();
+        let statics: Vec<&str> = specs
+            .iter()
+            .filter(|s| s.dtype == crate::config::Dtype::F32)
+            .map(|s| s.name.as_str())
+            .collect();
+
+        let mut plain =
+            crate::runtime::ExecPlan::new(Arc::clone(&exe), &statics)
+                .unwrap();
+        let mut donor =
+            crate::runtime::ExecPlan::new(Arc::clone(&exe), &statics)
+                .unwrap();
+        // donate every f32 parameter that has a same-shape gradient
+        // output (mask has none and is rejected — skip it)
+        let mut donated = 0;
+        for s in &statics {
+            if donor.donate(s).is_ok() {
+                donated += 1;
+            }
+        }
+        assert!(donated >= 2, "donated only {donated} inputs");
+
+        for round in 0..2 {
+            for (spec, hv) in specs.iter().zip(&inputs) {
+                plain.bind(&spec.name, hv.into()).unwrap();
+                donor.bind(&spec.name, hv.into()).unwrap();
+            }
+            let a = plain.run_host().unwrap();
+            let b = donor.run_host().unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.shape, y.shape);
+                let same = x
+                    .data
+                    .iter()
+                    .zip(&y.data)
+                    .all(|(p, q)| p.to_bits() == q.to_bits());
+                assert!(same, "round {round}: donation changed bits");
+            }
+        }
+
+        // stale re-run: donated statics were consumed, plain's not.
+        // Re-bind only the per-step inputs (tokens/targets) on both.
+        for (spec, hv) in specs.iter().zip(&inputs) {
+            if spec.dtype != crate::config::Dtype::F32 {
+                plain.bind(&spec.name, hv.into()).unwrap();
+                donor.bind(&spec.name, hv.into()).unwrap();
+            }
+        }
+        plain.run().unwrap();
+        let err = donor.run().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("embed"),
+            "stale donated slot should list unbound inputs: {err:#}"
+        );
     }
 
     #[test]

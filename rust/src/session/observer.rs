@@ -68,6 +68,11 @@ pub struct ExecEvent {
     pub static_uploads: u64,
     /// per-step uploads (batch tensors, subnet deltas, …)
     pub step_uploads: u64,
+    /// outputs materialised host-side (lazy handle downloads)
+    pub downloads: u64,
+    /// device→host bytes those downloads moved — subnet-delta-sized
+    /// for the LoSiA-Pro hot path, full-gradient-sized for FFT/GaLore
+    pub download_bytes: u64,
 }
 
 /// Fired between two stages of `Session::train_sequence`.
@@ -295,6 +300,8 @@ impl Observer for ExecProfileObserver {
         p.total_secs += ev.secs;
         p.static_uploads += ev.static_uploads;
         p.step_uploads += ev.step_uploads;
+        p.downloads += ev.downloads;
+        p.download_bytes += ev.download_bytes;
         p.mean_secs = p.total_secs / p.calls.max(1) as f64;
     }
 }

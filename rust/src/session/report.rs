@@ -30,6 +30,10 @@ pub struct ExecProfile {
     pub static_uploads: u64,
     /// per-step uploads (batch tensors, subnet deltas, …)
     pub step_uploads: u64,
+    /// outputs materialised host-side (lazy `OutputHandle` downloads)
+    pub downloads: u64,
+    /// device→host bytes those downloads moved
+    pub download_bytes: u64,
 }
 
 impl ExecProfile {
@@ -47,17 +51,25 @@ impl ExecProfile {
             "step_uploads".into(),
             Json::Num(self.step_uploads as f64),
         );
+        m.insert("downloads".into(), Json::Num(self.downloads as f64));
+        m.insert(
+            "download_bytes".into(),
+            Json::Num(self.download_bytes as f64),
+        );
         Json::Obj(m)
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(ExecProfile {
             artifact: get_str(j, "artifact")?,
-            calls: get_num(j, "calls")? as u64,
+            calls: get_u64(j, "calls")?,
             total_secs: get_num(j, "total_secs")?,
             mean_secs: get_num(j, "mean_secs")?,
-            static_uploads: get_num(j, "static_uploads")? as u64,
-            step_uploads: get_num(j, "step_uploads")? as u64,
+            static_uploads: get_u64(j, "static_uploads")?,
+            step_uploads: get_u64(j, "step_uploads")?,
+            // reports written before the download split lack the keys
+            downloads: get_u64_or_zero(j, "downloads")?,
+            download_bytes: get_u64_or_zero(j, "download_bytes")?,
         })
     }
 
@@ -65,13 +77,15 @@ impl ExecProfile {
     pub fn summary_line(&self) -> String {
         format!(
             "{}: {} calls, {:.3} ms/call ({:.3}s total), uploads \
-             static {} / per-step {}",
+             static {} / per-step {}, downloads {} ({:.1} KB)",
             self.artifact,
             self.calls,
             self.mean_secs * 1e3,
             self.total_secs,
             self.static_uploads,
             self.step_uploads,
+            self.downloads,
+            self.download_bytes as f64 / 1024.0,
         )
     }
 }
@@ -154,6 +168,52 @@ fn get_num(j: &Json, key: &str) -> Result<f64> {
     }
 }
 
+/// A JSON number destined for a count field. A bare `as usize` cast
+/// silently wraps negative or non-finite values into huge counts on
+/// round-trip; this errors on anything that is not a non-negative
+/// finite number instead.
+fn count_value(key: &str, v: f64) -> Result<f64> {
+    anyhow::ensure!(
+        v.is_finite() && v >= 0.0,
+        "report field {key:?}: expected a non-negative count, got {v}"
+    );
+    Ok(v)
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    Ok(count_value(key, get_num(j, key)?)? as usize)
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(count_value(key, get_num(j, key)?)? as u64)
+}
+
+/// Like [`get_u64`] but a missing/null key reads as 0 (fields newer
+/// than the report being parsed). A *present* malformed value still
+/// errors.
+fn get_u64_or_zero(j: &Json, key: &str) -> Result<u64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(0),
+        Some(_) => get_u64(j, key),
+    }
+}
+
+/// Optional count: absent/null → `None`; present but malformed
+/// (wrong type, negative, or non-finite) → a typed error, not a
+/// silent `None` or a wrapped huge value.
+fn get_opt_usize(j: &Json, key: &str) -> Result<Option<usize>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(n)) => {
+            Ok(Some(count_value(key, *n)? as usize))
+        }
+        Some(other) => bail!(
+            "report field {key:?}: expected number or null, got \
+             {other:?}"
+        ),
+    }
+}
+
 fn get_str(j: &Json, key: &str) -> Result<String> {
     match j.get(key) {
         Some(Json::Str(s)) => Ok(s.clone()),
@@ -225,15 +285,18 @@ impl RunReport {
                 else {
                     bail!("loss_curve rows must be [step, loss] pairs");
                 };
-                curve.push((*t as usize, *l));
+                curve.push((
+                    count_value("loss_curve step", *t)? as usize,
+                    *l,
+                ));
             }
         }
         Ok(RunReport {
             config: get_str(j, "config")?,
             method: get_str(j, "method")?,
             task: get_str(j, "task")?,
-            steps: get_num(j, "steps")? as usize,
-            seed: get_num(j, "seed")? as u64,
+            steps: get_usize(j, "steps")?,
+            seed: get_u64(j, "seed")?,
             first_loss: get_opt_num(j, "first_loss"),
             final_loss: get_opt_num(j, "final_loss"),
             loss_curve: curve,
@@ -242,11 +305,10 @@ impl RunReport {
             gen_acc: get_opt_num(j, "gen_acc"),
             us_per_token: get_opt_num(j, "us_per_token"),
             wall_secs: get_num(j, "wall_secs")?,
-            trainable_params: get_opt_num(j, "trainable_params")
-                .map(|x| x as usize),
-            total_params: get_num(j, "total_params")? as usize,
+            trainable_params: get_opt_usize(j, "trainable_params")?,
+            total_params: get_usize(j, "total_params")?,
             memory_gb: get_num(j, "memory_gb")?,
-            reselections: get_num(j, "reselections")? as usize,
+            reselections: get_usize(j, "reselections")?,
             selection_drift: get_opt_num(j, "selection_drift"),
             exec: match j.get("exec") {
                 Some(Json::Arr(rows)) => rows
@@ -439,6 +501,8 @@ mod tests {
                 mean_secs: 0.25,
                 static_uploads: 27,
                 step_uploads: 36,
+                downloads: 21,
+                download_bytes: 5376,
             }],
         }
     }
@@ -501,6 +565,7 @@ mod tests {
         let r = sample();
         let s = r.to_json_string();
         assert!(s.contains("\"static_uploads\":27"), "{s}");
+        assert!(s.contains("\"download_bytes\":5376"), "{s}");
         let back = RunReport::from_json_str(&s).unwrap();
         assert_eq!(back.exec, r.exec);
         assert_eq!(
@@ -516,6 +581,68 @@ mod tests {
         let old =
             RunReport::from_json_str(&j.to_string()).unwrap();
         assert!(old.exec.is_empty());
+        // reports written before the download split lack those keys:
+        // they parse with zero downloads, not an error
+        let s = r.to_json_string()
+            .replace(",\"downloads\":21", "")
+            .replace(",\"download_bytes\":5376", "");
+        let old = RunReport::from_json_str(&s).unwrap();
+        let p = old.exec_profile("grads_losia").unwrap();
+        assert_eq!(p.downloads, 0);
+        assert_eq!(p.download_bytes, 0);
+    }
+
+    #[test]
+    fn negative_counts_error_instead_of_wrapping() {
+        // `steps: -3` used to cast through `as usize` into ~2^64
+        let s = sample().to_json_string().replace(
+            "\"steps\":3",
+            "\"steps\":-3",
+        );
+        let err = RunReport::from_json_str(&s).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("steps"), "{msg}");
+        assert!(msg.contains("non-negative"), "{msg}");
+
+        // the same guard covers every count field, nested ones too
+        let s = sample().to_json_string().replace(
+            "\"calls\":3",
+            "\"calls\":-1",
+        );
+        let err = RunReport::from_json_str(&s).unwrap_err();
+        assert!(err.to_string().contains("calls"), "{}", err);
+
+        // a negative loss_curve step is a malformed row
+        let s = sample()
+            .to_json_string()
+            .replace("[1,3]", "[-1,3]");
+        assert!(RunReport::from_json_str(&s).is_err());
+
+        // present-but-negative optional counts error rather than
+        // silently becoming huge
+        let s = sample().to_json_string().replace(
+            "\"trainable_params\":4096",
+            "\"trainable_params\":-4096",
+        );
+        let err = RunReport::from_json_str(&s).unwrap_err();
+        assert!(
+            err.to_string().contains("trainable_params"),
+            "{}",
+            err
+        );
+
+        // present-but-wrong-type optional counts are an error too,
+        // not a silent None
+        let s = sample().to_json_string().replace(
+            "\"trainable_params\":4096",
+            "\"trainable_params\":\"4096\"",
+        );
+        let err = RunReport::from_json_str(&s).unwrap_err();
+        assert!(
+            err.to_string().contains("trainable_params"),
+            "{}",
+            err
+        );
     }
 
     #[test]

@@ -69,21 +69,17 @@ fn nan_nll_scores_as_incorrect_instead_of_panicking() {
 fn generator_emits_tokens_within_vocab() {
     let rt = Runtime::from_config_name("tiny").unwrap();
     let state = fresh(&rt, 2);
-    let gen = Generator::new(&rt).unwrap();
+    let mut gen = Generator::new(&rt, &state).unwrap();
     let mut rng = Rng::new(0);
     let prompts = vec![vec![5u32, 15, 6, 3]; 2];
-    let outs = gen
-        .generate(&state, &prompts, 4, 0.0, &mut rng)
-        .unwrap();
+    let outs = gen.generate(&prompts, 4, 0.0, &mut rng).unwrap();
     assert_eq!(outs.len(), 2);
     for o in &outs {
         assert!(o.len() <= 4);
         assert!(o.iter().all(|&t| (t as usize) < rt.cfg.vocab));
     }
     // greedy decoding is deterministic
-    let outs2 = gen
-        .generate(&state, &prompts, 4, 0.0, &mut rng)
-        .unwrap();
+    let outs2 = gen.generate(&prompts, 4, 0.0, &mut rng).unwrap();
     assert_eq!(outs, outs2);
 }
 
@@ -91,13 +87,11 @@ fn generator_emits_tokens_within_vocab() {
 fn sampling_respects_temperature_diversity() {
     let rt = Runtime::from_config_name("tiny").unwrap();
     let state = fresh(&rt, 3);
-    let gen = Generator::new(&rt).unwrap();
+    let mut gen = Generator::new(&rt, &state).unwrap();
     let mut rng = Rng::new(7);
     let prompt = vec![vec![5u32, 15, 6, 3]; 4];
     // high temperature across 4 parallel samples: expect ≥ 2 distinct
-    let outs = gen
-        .generate(&state, &prompt, 3, 2.0, &mut rng)
-        .unwrap();
+    let outs = gen.generate(&prompt, 3, 2.0, &mut rng).unwrap();
     let distinct: std::collections::BTreeSet<_> =
         outs.iter().collect();
     assert!(distinct.len() >= 2, "temperature produced no diversity");

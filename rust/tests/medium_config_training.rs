@@ -1,0 +1,85 @@
+//! Training integration on the `medium` builtin config through the
+//! pure-Rust reference backend — the release-mode CI lane PR 3 left
+//! open (ROADMAP "medium-config lane").
+//!
+//! `medium` (d_model 256, 6 layers, vocab 512) is affordable with the
+//! blocked/parallel kernels in release builds but would dominate the
+//! debug-mode suite, so every test here is `#[ignore]`d by default;
+//! the `ref-bench-medium` CI job runs them with
+//! `cargo test --release --test medium_config_training -- --ignored`.
+
+use losia::config::Method;
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::Session;
+
+fn medium_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::builtin_config("medium", &dir)
+        .expect("medium builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+#[test]
+#[ignore = "release-lane: run with --release -- --ignored"]
+fn losia_pro_trains_on_medium_config() {
+    let rt = medium_ref_runtime();
+    assert_eq!(rt.cfg.d_model, 256, "medium config shape");
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(Method::LosiaPro)
+        .task("modmath")
+        .steps(4)
+        .time_slot(2)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(0)
+        .build()
+        .unwrap();
+    let report = session.train().unwrap();
+    let first = report.first_loss.expect("first loss");
+    let last = report.final_loss.expect("final loss");
+    assert!(first.is_finite() && first > 0.0, "first loss {first}");
+    assert!(last.is_finite() && last > 0.0, "final loss {last}");
+    assert!(
+        last < first * 1.5,
+        "loss exploded on medium config: {first} → {last}"
+    );
+    // the download contract holds at scale too: the Pro driver never
+    // pulls a full-gradient set back per step
+    let p = report
+        .exec_profile("grads_losia")
+        .expect("grads_losia profile");
+    let full_bytes: u64 = rt
+        .cfg
+        .artifact("grads_full")
+        .outputs
+        .iter()
+        .map(|o| o.shape.iter().product::<usize>() as u64 * 4)
+        .sum();
+    assert!(
+        p.download_bytes < p.calls * full_bytes / 2,
+        "medium-config Pro step downloads {} bytes/step, full grads \
+         are {full_bytes}",
+        p.download_bytes / p.calls.max(1)
+    );
+}
+
+#[test]
+#[ignore = "release-lane: run with --release -- --ignored"]
+fn lora_trains_and_evals_on_medium_config() {
+    let rt = medium_ref_runtime();
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(Method::Lora)
+        .task("modmath")
+        .steps(3)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(8)
+        .build()
+        .unwrap();
+    let report = session.train().unwrap();
+    assert!(report.final_loss.expect("final loss").is_finite());
+    let acc = report.ppl_acc_post.expect("post-train ppl accuracy");
+    assert!((0.0..=100.0).contains(&acc), "acc {acc}");
+}

@@ -1,0 +1,144 @@
+//! Integration tests for the device-resident output contract: the
+//! LoSiA-Pro hot path must move only subnet-delta-sized bytes to the
+//! host between relocalizations (zero full-backbone-gradient copies),
+//! and the executor download counters must make that assertable from
+//! a run report. The backend-level donation/laziness semantics are
+//! pinned by unit tests in `runtime::backend` / `runtime::reference`;
+//! this file checks the claim end-to-end through a real training
+//! session.
+
+use losia::config::{Ablation, Method, TrainConfig};
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::Session;
+
+fn tiny_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::resolve_config(&dir, "tiny")
+        .expect("tiny config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+/// Bytes of the named artifact's outputs, filtered by a predicate.
+fn output_bytes(
+    rt: &Runtime,
+    artifact: &str,
+    keep: impl Fn(&str) -> bool,
+) -> u64 {
+    rt.cfg
+        .artifact(artifact)
+        .outputs
+        .iter()
+        .filter(|o| keep(&o.name))
+        .map(|o| o.shape.iter().product::<usize>() as u64 * 4)
+        .sum()
+}
+
+fn pro_tc(steps: usize, no_relocalize: bool) -> TrainConfig {
+    TrainConfig {
+        method: Method::LosiaPro,
+        steps,
+        lr: 1e-3,
+        time_slot: 2,
+        ablation: Ablation {
+            no_relocalize,
+            ..Ablation::default()
+        },
+        ..TrainConfig::default()
+    }
+}
+
+fn train_report(
+    rt: &Runtime,
+    tc: TrainConfig,
+) -> losia::session::RunReport {
+    let mut session = Session::builder()
+        .runtime(rt)
+        .train_config(tc)
+        .task("modmath")
+        .train_n(64)
+        .eval_n(0)
+        .data_seed(1)
+        .batcher_seed(1)
+        .model_seed(7)
+        .build()
+        .unwrap();
+    session.train().unwrap()
+}
+
+#[test]
+fn losia_pro_steady_state_downloads_only_subnet_deltas() {
+    // With relocalization disabled the profiler never reads the
+    // probe handles, so every step's device→host traffic is exactly
+    // the scalar loss + the dws frames: zero full-gradient bytes.
+    let rt = tiny_ref_runtime();
+    let steps = 6;
+    let report = train_report(&rt, pro_tc(steps, true));
+    let p = report
+        .exec_profile("grads_losia")
+        .expect("grads_losia profile");
+    assert_eq!(p.calls, steps as u64);
+
+    let delta_bytes = output_bytes(&rt, "grads_losia", |n| {
+        n == "loss" || n.starts_with("g_dws")
+    });
+    let probe_bytes = output_bytes(&rt, "grads_losia", |n| {
+        n.starts_with("probe_")
+    });
+    assert!(delta_bytes > 0 && probe_bytes > 0, "spec drifted");
+    assert_eq!(
+        p.download_bytes,
+        p.calls * delta_bytes,
+        "steady-state step moved more than the subnet deltas \
+         (probe bytes would add {probe_bytes}/step)"
+    );
+    // handle count: loss + one dws frame per linear kind + dws_out
+    let per_step = 2 + rt.cfg.linear_kinds.len() as u64;
+    assert_eq!(p.downloads, p.calls * per_step);
+}
+
+#[test]
+fn losia_pro_profiling_downloads_stay_far_below_full_grads() {
+    // With profiling on, each step additionally downloads the probed
+    // layer's slices — still far below what the full-gradient
+    // artifact would round-trip every step (the old behaviour).
+    let rt = tiny_ref_runtime();
+    let steps = 8;
+    let report = train_report(&rt, pro_tc(steps, false));
+    let p = report
+        .exec_profile("grads_losia")
+        .expect("grads_losia profile");
+    assert_eq!(p.calls, steps as u64);
+
+    let full_grad_bytes = output_bytes(&rt, "grads_full", |_| true);
+    assert!(
+        p.download_bytes < p.calls * full_grad_bytes / 2,
+        "per-step downloads {} are not ≪ full-grad bytes {}",
+        p.download_bytes / p.calls,
+        full_grad_bytes
+    );
+    // and no step ever downloads the whole output set: probe slices
+    // for at most one group cross per step
+    let all_outputs = output_bytes(&rt, "grads_losia", |_| true);
+    assert!(p.download_bytes < p.calls * all_outputs);
+}
+
+#[test]
+fn full_grad_methods_still_download_their_whole_output_set() {
+    // FFT consumes every gradient — the download counters must show
+    // the full round-trip (this is the contrast the Table 16 columns
+    // rely on).
+    let rt = tiny_ref_runtime();
+    let steps = 3;
+    let tc = TrainConfig {
+        method: Method::Fft,
+        steps,
+        lr: 1e-3,
+        ..TrainConfig::default()
+    };
+    let report = train_report(&rt, tc);
+    let p = report
+        .exec_profile("grads_full")
+        .expect("grads_full profile");
+    let full_bytes = output_bytes(&rt, "grads_full", |_| true);
+    assert_eq!(p.download_bytes, p.calls * full_bytes);
+}
