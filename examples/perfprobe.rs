@@ -96,13 +96,17 @@ fn main() {
         let stats = exe.stats();
         println!(
             "{name}: {:.1} ms/call (steady state; {} static / {} \
-             per-step uploads, {} downloads / {:.1} KB over {} calls)",
+             per-step uploads, {} downloads / {:.1} KB over {} calls; \
+             phases {:.1}/{:.1}/{:.1} ms upl/exec/dl)",
             t0.elapsed().as_secs_f64() * 1000.0 / reps as f64,
             stats.static_uploads,
             stats.step_uploads,
             stats.downloads,
             stats.download_bytes as f64 / 1024.0,
             stats.calls,
+            stats.upload_secs() * 1e3,
+            stats.total_secs() * 1e3,
+            stats.download_secs() * 1e3,
         );
     }
 }

@@ -5,29 +5,42 @@
 //!
 //! Not a paper artifact — this is the evidence harness for the
 //! "RefBackend perf" roadmap item (and the `table16_latency` story on
-//! machines without lowered artifacts). Three numbers matter:
+//! machines without lowered artifacts). The sections:
 //!
 //! * `naive GEMM/step` — the exact multiply sequence one `grads_full`
 //!   step performs, run through verbatim copies of the old loops;
 //! * `blocked GEMM/step` (serial and parallel) — the same sequence
 //!   through `runtime::kernels`;
+//! * `attention fwd+bwd` — the historical serial per-row loops vs the
+//!   fused head-parallel kernel family (pack + fwd + bwd + unpack),
+//!   serial and parallel — the "everything between the GEMMs" half;
 //! * `RefBackend step` — a real `ExecPlan::run` per-step time with
-//!   statically bound parameters (includes attention, norms, softmax),
-//!   timed both with every output downloaded and with only the scalar
-//!   loss crossing back (the `OutputHandle` lazy-download path).
+//!   statically bound parameters, at 1 kernel thread and at the full
+//!   budget (`kernels::set_kernel_threads` drives one plan at both),
+//!   plus the loss-only lazy-download variant;
+//! * the executor's upload/execute/download **phase split** from
+//!   `ExecStats`, so transfer time can't masquerade as compute win.
+//!
+//! Results land three ways: the stdout table, `results/*.csv`, and a
+//! machine-readable `BENCH_kernels_micro.json` at the repo root (the
+//! perf-trajectory artifact CI uploads per run).
 //!
 //! `LOSIA_BENCH_STEPS` overrides the rep count (default 5);
 //! `LOSIA_BENCH_CONFIG` picks the builtin config (default `small`,
 //! `medium` in the release CI lane).
+
+use std::collections::BTreeMap;
 
 use losia::config::{builtin_config, ModelCfg};
 use losia::coordinator::state::ModelState;
 use losia::data::domain::ModMath;
 use losia::data::{gen_train_set, Batcher};
 use losia::metrics::latency::time_fn;
-use losia::runtime::{kernels, ExecPlan, RefBackend, Runtime};
+use losia::runtime::kernels::{self, AttnShape};
+use losia::runtime::{ExecPlan, RefBackend, Runtime};
+use losia::util::json::Json;
 use losia::util::rng::Rng;
-use losia::util::table::Table;
+use losia::util::table::{write_bench_json, Table};
 
 fn reps() -> usize {
     std::env::var("LOSIA_BENCH_STEPS")
@@ -91,6 +104,133 @@ fn naive_mm_nt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
     out
 }
 
+/// The historical serial attention forward (full-row mask fill and
+/// exp) over head-interleaved `[B, S, H, Dh]` operands — verbatim the
+/// pre-PR-5 interpreter loop. A frozen fossil, not shared code: its
+/// twin in `runtime::kernels::tests` pins bitwise equivalence; keep
+/// both byte-identical and never "improve" either.
+fn naive_attention_fwd(
+    qr: &[f32],
+    kr: &[f32],
+    v4: &[f32],
+    sh: AttnShape,
+) -> (Vec<f32>, Vec<f32>) {
+    let (b, s, h, dh) = (sh.b, sh.s, sh.h, sh.dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; b * h * s * s];
+    let mut att = vec![0.0f32; b * s * h * dh];
+    let mut scores = vec![0.0f32; s];
+    let at = |bb: usize, pos: usize, hh: usize| ((bb * s + pos) * h + hh) * dh;
+    for bb in 0..b {
+        for hh in 0..h {
+            for i in 0..s {
+                let prow_off = ((bb * h + hh) * s + i) * s;
+                scores.fill(-1e30);
+                let qrow = &qr[at(bb, i, hh)..at(bb, i, hh) + dh];
+                for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                    let krow = &kr[at(bb, j, hh)..at(bb, j, hh) + dh];
+                    let mut acc = 0.0f32;
+                    for e in 0..dh {
+                        acc += qrow[e] * krow[e];
+                    }
+                    *sc = acc * scale;
+                }
+                let mx = scores
+                    .iter()
+                    .cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - mx).exp();
+                    z += *sc;
+                }
+                let prow = &mut probs[prow_off..prow_off + s];
+                for (j, &e) in scores.iter().enumerate() {
+                    prow[j] = e / z;
+                }
+                let arow = at(bb, i, hh);
+                for (j, &p) in prow.iter().enumerate().take(i + 1) {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v4[at(bb, j, hh)..at(bb, j, hh) + dh];
+                    for e in 0..dh {
+                        att[arow + e] += p * vrow[e];
+                    }
+                }
+            }
+        }
+    }
+    (att, probs)
+}
+
+/// The historical serial attention backward over interleaved layout.
+fn naive_attention_bwd(
+    datt: &[f32],
+    probs: &[f32],
+    qr: &[f32],
+    kr: &[f32],
+    v4: &[f32],
+    sh: AttnShape,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b, s, h, dh) = (sh.b, sh.s, sh.h, sh.dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let n = b * s * h * dh;
+    let mut dq = vec![0.0f32; n];
+    let mut dk = vec![0.0f32; n];
+    let mut dv = vec![0.0f32; n];
+    let mut dprobs = vec![0.0f32; s];
+    let at = |bb: usize, pos: usize, hh: usize| ((bb * s + pos) * h + hh) * dh;
+    for bb in 0..b {
+        for hh in 0..h {
+            for i in 0..s {
+                let prow_off = ((bb * h + hh) * s + i) * s;
+                let prow = &probs[prow_off..prow_off + s];
+                let darow = &datt[at(bb, i, hh)..at(bb, i, hh) + dh];
+                dprobs.fill(0.0);
+                for j in 0..=i {
+                    let voff = at(bb, j, hh);
+                    let vrow = &v4[voff..voff + dh];
+                    let mut acc = 0.0f32;
+                    for e in 0..dh {
+                        acc += darow[e] * vrow[e];
+                    }
+                    dprobs[j] = acc;
+                    let p = prow[j];
+                    if p != 0.0 {
+                        let dvrow = &mut dv[voff..voff + dh];
+                        for e in 0..dh {
+                            dvrow[e] += p * darow[e];
+                        }
+                    }
+                }
+                let mut inner = 0.0f32;
+                for j in 0..=i {
+                    inner += prow[j] * dprobs[j];
+                }
+                let dqrow =
+                    &mut dq[at(bb, i, hh)..at(bb, i, hh) + dh];
+                for j in 0..=i {
+                    let ds = prow[j] * (dprobs[j] - inner) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let koff = at(bb, j, hh);
+                    let krow = &kr[koff..koff + dh];
+                    let qoff = at(bb, i, hh);
+                    let qrow = &qr[qoff..qoff + dh];
+                    let dkrow = &mut dk[koff..koff + dh];
+                    for e in 0..dh {
+                        dqrow[e] += ds * krow[e];
+                        dkrow[e] += ds * qrow[e];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
 // --------------------------------------------------- the GEMM sequence
 
 #[derive(Clone, Copy)]
@@ -104,8 +244,7 @@ enum Op {
 /// lm_head, then per-linear weight-grad and input-grad). Each tuple
 /// holds the three size arguments **in that op's own parameter
 /// order**: `Nn`/`Nt` carry `(n, k, m)`, `Tn` carries `(k, n, m)`.
-/// Attention/norm/softmax cost is identical on both sides and
-/// excluded.
+/// Attention/norm/softmax cost is measured separately below.
 fn gemm_step_shapes(cfg: &ModelCfg) -> Vec<(Op, usize, usize, usize)> {
     let rows = cfg.batch * cfg.seq_len;
     let mut shapes = Vec::new();
@@ -203,7 +342,65 @@ fn main() {
     let t_serial = time_fn(1, reps, || run_kernels(1));
     let t_par = time_fn(1, reps, || run_kernels(threads));
 
-    // real end-to-end step: grads_full through a plan, params static
+    // ---------------- attention: naive serial vs fused head-parallel
+    let sh = AttnShape {
+        b: cfg.batch,
+        s: cfg.seq_len,
+        h: cfg.n_heads,
+        dh: cfg.d_model / cfg.n_heads,
+    };
+    let n_attn = sh.b * sh.s * sh.h * sh.dh;
+    let qr = rng.normal_vec(n_attn, 0.1);
+    let kr = rng.normal_vec(n_attn, 0.1);
+    let v4 = rng.normal_vec(n_attn, 0.1);
+    let datt = rng.normal_vec(n_attn, 0.1);
+    let layers = cfg.n_layers;
+    let run_attn_naive = || {
+        for _ in 0..layers {
+            let (att, probs) = naive_attention_fwd(&qr, &kr, &v4, sh);
+            let grads =
+                naive_attention_bwd(&datt, &probs, &qr, &kr, &v4, sh);
+            std::hint::black_box((&att, &grads));
+        }
+    };
+    let attn_pool = kernels::Pool::new();
+    let run_attn_fused = |t: usize| {
+        for _ in 0..layers {
+            let mut qh = attn_pool.zeroed(n_attn);
+            let mut kh = attn_pool.zeroed(n_attn);
+            let mut vh = attn_pool.zeroed(n_attn);
+            kernels::pack_heads_threads(t, &mut qh, &qr, sh);
+            kernels::pack_heads_threads(t, &mut kh, &kr, sh);
+            kernels::pack_heads_threads(t, &mut vh, &v4, sh);
+            let mut att = attn_pool.zeroed(n_attn);
+            let mut probs =
+                attn_pool.zeroed(sh.b * sh.h * sh.s * sh.s);
+            kernels::attention_fwd_threads(
+                t, &mut att, &mut probs, &qh, &kh, &vh, sh,
+                &attn_pool,
+            );
+            let mut dq = attn_pool.zeroed(n_attn);
+            let mut dk = attn_pool.zeroed(n_attn);
+            let mut dv = attn_pool.zeroed(n_attn);
+            kernels::attention_bwd_threads(
+                t, &mut dq, &mut dk, &mut dv, &datt, &probs, &qh,
+                &kh, &vh, sh, &attn_pool,
+            );
+            std::hint::black_box((&att, &dq, &dk, &dv));
+            for v in [qh, kh, vh, att, probs, dq, dk, dv] {
+                attn_pool.recycle(v);
+            }
+        }
+    };
+    let t_attn_naive = time_fn(1, reps, run_attn_naive);
+    let t_attn_serial = time_fn(1, reps, || run_attn_fused(1));
+    let t_attn_par = time_fn(1, reps, || run_attn_fused(threads));
+
+    // ------------- real end-to-end step, serial vs full thread budget
+    // grads_full through one plan with static params; the
+    // set_kernel_threads override drives the same interpreter at 1
+    // thread and at the full budget (bitwise-identical outputs — the
+    // kernel determinism contract — so the comparison is pure perf)
     let rt = Runtime::with_backend(cfg, Box::new(RefBackend));
     let mut rng = Rng::new(7);
     let state = ModelState::init(&rt.cfg, &mut rng);
@@ -218,66 +415,180 @@ fn main() {
         ExecPlan::new(std::sync::Arc::clone(&exe), &param_names)
             .unwrap();
     plan.bind_params(&state).unwrap();
+    kernels::set_kernel_threads(1);
+    let t_step1 = time_fn(1, reps, || {
+        plan.bind_batch(&batch).unwrap();
+        let out = plan.run_host().unwrap();
+        std::hint::black_box(&out);
+    });
+    kernels::set_kernel_threads(threads);
+    // phase stats are snapshot-diffed around exactly this section so
+    // the trajectory record describes one configuration (N threads,
+    // full download) rather than a blend of every section above/below
+    let s_before = exe.stats();
     let t_step = time_fn(1, reps, || {
         plan.bind_batch(&batch).unwrap();
         let out = plan.run_host().unwrap();
         std::hint::black_box(&out);
     });
+    let stats = exe.stats().delta_since(&s_before);
     // same step, but only the scalar loss crosses back to the host —
     // the download-on-demand side of the OutputHandle contract
+    let s_before_lazy = exe.stats();
     let t_lazy = time_fn(1, reps, || {
         plan.bind_batch(&batch).unwrap();
         let mut out = plan.run().unwrap();
         let loss = out.remove(0).into_host().unwrap();
         std::hint::black_box(&loss);
     });
-    let stats = exe.stats();
+    let stats_lazy = exe.stats().delta_since(&s_before_lazy);
+    kernels::set_kernel_threads(0);
 
     let ms = |s: f64| format!("{:.2}", s * 1e3);
     let speedup = |base: f64, t: f64| format!("{:.2}×", base / t);
     let mut table = Table::new(
         &format!(
-            "Kernel microbench — grads_full GEMM sequence ({} config)",
+            "Kernel microbench — grads_full sections ({} config)",
             rt.cfg.name
         ),
         &["Path", "ms/step", "vs naive"],
     );
     table.row(&[
-        "naive loops (historical)".into(),
+        "GEMMs: naive loops (historical)".into(),
         ms(t_naive.mean_secs),
         "1.00×".into(),
     ]);
     table.row(&[
-        "blocked kernels, serial".into(),
+        "GEMMs: blocked kernels, serial".into(),
         ms(t_serial.mean_secs),
         speedup(t_naive.mean_secs, t_serial.mean_secs),
     ]);
     table.row(&[
-        format!("blocked kernels, {threads} threads"),
+        format!("GEMMs: blocked kernels, {threads} threads"),
         ms(t_par.mean_secs),
         speedup(t_naive.mean_secs, t_par.mean_secs),
     ]);
     table.row(&[
-        "RefBackend full step (plan)".into(),
+        "attention fwd+bwd: naive serial (historical)".into(),
+        ms(t_attn_naive.mean_secs),
+        "1.00×".into(),
+    ]);
+    table.row(&[
+        "attention fwd+bwd: fused, serial".into(),
+        ms(t_attn_serial.mean_secs),
+        speedup(t_attn_naive.mean_secs, t_attn_serial.mean_secs),
+    ]);
+    table.row(&[
+        format!("attention fwd+bwd: fused, {threads} threads"),
+        ms(t_attn_par.mean_secs),
+        speedup(t_attn_naive.mean_secs, t_attn_par.mean_secs),
+    ]);
+    table.row(&[
+        "RefBackend full step (plan), 1 thread".into(),
+        ms(t_step1.mean_secs),
+        "1.00×".into(),
+    ]);
+    table.row(&[
+        format!("RefBackend full step (plan), {threads} threads"),
         ms(t_step.mean_secs),
-        speedup(t_naive.mean_secs, t_step.mean_secs),
+        speedup(t_step1.mean_secs, t_step.mean_secs),
     ]);
     table.row(&[
         "RefBackend step, loss-only download".into(),
         ms(t_lazy.mean_secs),
-        speedup(t_naive.mean_secs, t_lazy.mean_secs),
+        speedup(t_step1.mean_secs, t_lazy.mean_secs),
     ]);
     table.print();
+    let calls = stats.calls.max(1) as f64;
+    let lazy_calls = stats_lazy.calls.max(1) as f64;
     println!(
-        "grads_full exec stats: {} calls, mean {:.2} ms, \
-         static uploads {}, per-step uploads {}, downloads {} \
-         ({:.1} KB)",
+        "grads_full exec stats ({threads}-thread full-download \
+         section): {} calls, mean {:.2} ms, per-call phases upload \
+         {:.0} µs / execute {:.0} µs / download {:.0} µs, per-step \
+         uploads {}, downloads {} ({:.1} KB); loss-only section \
+         downloads {:.1} KB/call",
         stats.calls,
         stats.mean_secs() * 1e3,
-        stats.static_uploads,
+        stats.upload_secs() * 1e6 / calls,
+        stats.total_secs() * 1e6 / calls,
+        stats.download_secs() * 1e6 / calls,
         stats.step_uploads,
         stats.downloads,
         stats.download_bytes as f64 / 1024.0,
+        stats_lazy.download_bytes as f64 / lazy_calls / 1024.0,
     );
     table.write_csv("kernels_micro");
+
+    // machine-readable trajectory record (uploaded by CI)
+    let num = Json::Num;
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(rt.cfg.name.clone()));
+    j.insert("threads".into(), num(threads as f64));
+    j.insert("reps".into(), num(reps as f64));
+    let mut gemm = BTreeMap::new();
+    gemm.insert("naive_ms".into(), num(t_naive.mean_secs * 1e3));
+    gemm.insert(
+        "blocked_serial_ms".into(),
+        num(t_serial.mean_secs * 1e3),
+    );
+    gemm.insert("blocked_par_ms".into(), num(t_par.mean_secs * 1e3));
+    j.insert("gemm".into(), Json::Obj(gemm));
+    let mut attn = BTreeMap::new();
+    attn.insert(
+        "naive_ms".into(),
+        num(t_attn_naive.mean_secs * 1e3),
+    );
+    attn.insert(
+        "fused_serial_ms".into(),
+        num(t_attn_serial.mean_secs * 1e3),
+    );
+    attn.insert(
+        "fused_par_ms".into(),
+        num(t_attn_par.mean_secs * 1e3),
+    );
+    j.insert("attention".into(), Json::Obj(attn));
+    let mut step = BTreeMap::new();
+    step.insert("serial_ms".into(), num(t_step1.mean_secs * 1e3));
+    step.insert("parallel_ms".into(), num(t_step.mean_secs * 1e3));
+    step.insert(
+        "parallel_lazy_ms".into(),
+        num(t_lazy.mean_secs * 1e3),
+    );
+    step.insert(
+        "speedup_parallel_vs_serial".into(),
+        num(t_step1.mean_secs / t_step.mean_secs),
+    );
+    j.insert("step".into(), Json::Obj(step));
+    // per-call phase split of the N-thread full-download section only
+    // (snapshot-diffed above), so the record is rep-count independent
+    // and describes exactly one configuration
+    let mut phases = BTreeMap::new();
+    phases.insert(
+        "upload_us_per_call".into(),
+        num(stats.upload_secs() * 1e6 / calls),
+    );
+    phases.insert(
+        "execute_us_per_call".into(),
+        num(stats.total_secs() * 1e6 / calls),
+    );
+    phases.insert(
+        "download_us_per_call".into(),
+        num(stats.download_secs() * 1e6 / calls),
+    );
+    j.insert("phases".into(), Json::Obj(phases));
+    let mut bytes = BTreeMap::new();
+    bytes.insert(
+        "download_bytes_per_call".into(),
+        num(stats.download_bytes as f64 / calls),
+    );
+    bytes.insert(
+        "lazy_download_bytes_per_call".into(),
+        num(stats_lazy.download_bytes as f64 / lazy_calls),
+    );
+    bytes.insert(
+        "step_uploads_per_call".into(),
+        num(stats.step_uploads as f64 / calls),
+    );
+    j.insert("traffic".into(), Json::Obj(bytes));
+    write_bench_json("kernels_micro", &Json::Obj(j));
 }

@@ -9,7 +9,12 @@
 //! Forward time is measured on `fwd_loss` (forward-only artifact);
 //! backward = grads-artifact time − forward time; "other" is the
 //! host-side coordinator cost (projector SVDs for GaLore, subnet
-//! gather/scatter + Adam for LoSiA, dense Adam for FFT).
+//! gather/scatter + Adam for LoSiA, dense Adam for FFT). The `Up-ms`/
+//! `Dl-ms` columns are the executor's wall-time **phase split**
+//! (host→device binds / device→host downloads, whole stage) — compute
+//! wins and transfer wins stay distinguishable. Each table is also
+//! mirrored into a machine-readable `BENCH_table16_latency.json` at
+//! the repo root for the CI perf trajectory.
 //!
 //! Expected shape vs the paper: LoSiA < LoRA < GaLore < DoRA in total;
 //! LoSiA-Pro's backward strictly below LoSiA's (p² gradient compute).
@@ -23,6 +28,8 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use std::collections::BTreeMap;
+
 use common::*;
 use losia::config::Method;
 use losia::coordinator::state::ModelState;
@@ -31,10 +38,12 @@ use losia::data::{gen_train_set, Batcher};
 use losia::metrics::latency::time_fn;
 use losia::runtime::ExecPlan;
 use losia::session::Session;
+use losia::util::json::Json;
 use losia::util::rng::Rng;
-use losia::util::table::Table;
+use losia::util::table::{write_bench_json, Table};
 
 fn main() {
+    let mut bench_rows: Vec<Json> = Vec::new();
     let rt = runtime();
     let tokens = rt.cfg.tokens_per_step() as f64;
     let reps = bench_steps(12);
@@ -71,7 +80,7 @@ fn main() {
             ),
             &[
                 "Method", "Forward", "Backward", "Other", "Total",
-                "S-upl", "P-upl", "Dl", "Dl-KB",
+                "S-upl", "P-upl", "Dl", "Dl-KB", "Up-ms", "Dl-ms",
             ],
         );
         for method in table1_methods() {
@@ -131,8 +140,47 @@ fn main() {
                     "{:.1}",
                     profile.download_bytes as f64 / 1024.0
                 ),
+                format!("{:.2}", profile.upload_secs * 1e3),
+                format!("{:.2}", profile.download_secs * 1e3),
             ]);
             eprintln!("[exec] {}", profile.summary_line());
+            let mut row = BTreeMap::new();
+            row.insert(
+                "method".into(),
+                Json::Str(method.name().to_string()),
+            );
+            row.insert("remat".into(), Json::Bool(remat));
+            row.insert("fwd_us_per_token".into(), Json::Num(fwd_us));
+            row.insert("bwd_us_per_token".into(), Json::Num(bwd_us));
+            row.insert(
+                "total_us_per_token".into(),
+                Json::Num(total_us),
+            );
+            row.insert(
+                "static_uploads".into(),
+                Json::Num(profile.static_uploads as f64),
+            );
+            row.insert(
+                "step_uploads".into(),
+                Json::Num(profile.step_uploads as f64),
+            );
+            row.insert(
+                "download_bytes".into(),
+                Json::Num(profile.download_bytes as f64),
+            );
+            row.insert(
+                "upload_ms".into(),
+                Json::Num(profile.upload_secs * 1e3),
+            );
+            row.insert(
+                "download_ms".into(),
+                Json::Num(profile.download_secs * 1e3),
+            );
+            row.insert(
+                "exec_ms".into(),
+                Json::Num(profile.total_secs * 1e3),
+            );
+            bench_rows.push(Json::Obj(row));
         }
         table.print();
         table.write_csv(&format!(
@@ -140,4 +188,10 @@ fn main() {
             if remat { "gc" } else { "nogc" }
         ));
     }
+
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(rt.cfg.name.clone()));
+    j.insert("reps".into(), Json::Num(reps as f64));
+    j.insert("rows".into(), Json::Arr(bench_rows));
+    write_bench_json("table16_latency", &Json::Obj(j));
 }

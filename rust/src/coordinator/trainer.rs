@@ -62,6 +62,8 @@ impl ExecTracker {
                     artifact: artifact.clone(),
                     calls: d.calls,
                     secs: d.total_secs(),
+                    upload_secs: d.upload_secs(),
+                    download_secs: d.download_secs(),
                     static_uploads: d.static_uploads,
                     step_uploads: d.step_uploads,
                     downloads: d.downloads,

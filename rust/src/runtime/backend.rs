@@ -157,10 +157,16 @@ impl<'a> From<&'a HostValue> for HostRef<'a> {
 
 /// Cumulative per-artifact execution counters. Atomics (not `Cell`) so
 /// executables can be shared via `Arc` across plans and observers.
+/// Wall time is split by phase — `upload_nanos` (host→device binds),
+/// `nanos` (execute), `download_nanos` (device→host materialisation) —
+/// so "the win is in the execute phase, not hidden in transfers" is a
+/// measurable statement.
 #[derive(Debug, Default)]
 pub struct ExecStats {
     calls: AtomicU64,
     nanos: AtomicU64,
+    upload_nanos: AtomicU64,
+    download_nanos: AtomicU64,
     static_uploads: AtomicU64,
     step_uploads: AtomicU64,
     downloads: AtomicU64,
@@ -172,6 +178,10 @@ impl ExecStats {
         ExecSnapshot {
             calls: self.calls.load(Ordering::Relaxed),
             nanos: self.nanos.load(Ordering::Relaxed),
+            upload_nanos: self.upload_nanos.load(Ordering::Relaxed),
+            download_nanos: self
+                .download_nanos
+                .load(Ordering::Relaxed),
             static_uploads: self.static_uploads.load(Ordering::Relaxed),
             step_uploads: self.step_uploads.load(Ordering::Relaxed),
             downloads: self.downloads.load(Ordering::Relaxed),
@@ -184,6 +194,8 @@ impl ExecStats {
     pub fn reset(&self) {
         self.calls.store(0, Ordering::Relaxed);
         self.nanos.store(0, Ordering::Relaxed);
+        self.upload_nanos.store(0, Ordering::Relaxed);
+        self.download_nanos.store(0, Ordering::Relaxed);
         self.static_uploads.store(0, Ordering::Relaxed);
         self.step_uploads.store(0, Ordering::Relaxed);
         self.downloads.store(0, Ordering::Relaxed);
@@ -195,12 +207,14 @@ impl ExecStats {
         self.nanos.fetch_add(nanos, Ordering::Relaxed);
     }
 
-    fn record_download(&self, bytes: u64) {
+    fn record_download(&self, bytes: u64, nanos: u64) {
         self.downloads.fetch_add(1, Ordering::Relaxed);
         self.download_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.download_nanos.fetch_add(nanos, Ordering::Relaxed);
     }
 
-    fn record_upload(&self, kind: BindingKind) {
+    fn record_upload(&self, kind: BindingKind, nanos: u64) {
+        self.upload_nanos.fetch_add(nanos, Ordering::Relaxed);
         match kind {
             BindingKind::Static => {
                 self.static_uploads.fetch_add(1, Ordering::Relaxed)
@@ -216,7 +230,12 @@ impl ExecStats {
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ExecSnapshot {
     pub calls: u64,
+    /// wall time inside `execute()` (the compute phase)
     pub nanos: u64,
+    /// wall time inside `upload()` (host→device binds, both kinds)
+    pub upload_nanos: u64,
+    /// wall time materialising outputs host-side
+    pub download_nanos: u64,
     pub static_uploads: u64,
     pub step_uploads: u64,
     /// outputs materialised host-side (lazy `OutputHandle` downloads)
@@ -232,6 +251,12 @@ impl ExecSnapshot {
         ExecSnapshot {
             calls: self.calls.saturating_sub(prev.calls),
             nanos: self.nanos.saturating_sub(prev.nanos),
+            upload_nanos: self
+                .upload_nanos
+                .saturating_sub(prev.upload_nanos),
+            download_nanos: self
+                .download_nanos
+                .saturating_sub(prev.download_nanos),
             static_uploads: self
                 .static_uploads
                 .saturating_sub(prev.static_uploads),
@@ -245,12 +270,24 @@ impl ExecSnapshot {
         }
     }
 
+    /// Execute-phase wall time (the historical meaning — transfer
+    /// phases are reported separately).
     pub fn total_secs(&self) -> f64 {
         self.nanos as f64 / 1e9
     }
 
     pub fn mean_secs(&self) -> f64 {
         self.total_secs() / self.calls.max(1) as f64
+    }
+
+    /// Host→device bind-phase wall time.
+    pub fn upload_secs(&self) -> f64 {
+        self.upload_nanos as f64 / 1e9
+    }
+
+    /// Device→host download-phase wall time.
+    pub fn download_secs(&self) -> f64 {
+        self.download_nanos as f64 / 1e9
     }
 }
 
@@ -353,8 +390,12 @@ impl Executable {
                     self.spec.signature()
                 )
             })?;
+            let t0 = Instant::now();
             bufs.upload(i, r)?;
-            self.stats.record_upload(BindingKind::PerStep);
+            self.stats.record_upload(
+                BindingKind::PerStep,
+                t0.elapsed().as_nanos() as u64,
+            );
         }
         let t0 = Instant::now();
         let out = bufs.execute()?;
@@ -385,12 +426,14 @@ impl Executable {
         value: Box<dyn DeviceValue>,
     ) -> Result<Tensor> {
         let ospec = &self.spec.outputs[index];
+        let t0 = Instant::now();
         let t = value.download().with_context(|| {
             format!(
                 "artifact {:?}: downloading output {:?}",
                 self.spec.name, ospec.name
             )
         })?;
+        let nanos = t0.elapsed().as_nanos() as u64;
         anyhow::ensure!(
             t.shape == ospec.shape,
             "artifact {:?}: output {:?} has shape {:?}, manifest \
@@ -401,7 +444,7 @@ impl Executable {
             ospec.shape
         );
         self.stats
-            .record_download(t.data.len() as u64 * 4);
+            .record_download(t.data.len() as u64 * 4, nanos);
         Ok(t)
     }
 }
@@ -621,8 +664,12 @@ impl ExecPlan {
                 spec.signature()
             )
         })?;
+        let t0 = Instant::now();
         self.bufs.upload(i, value)?;
-        self.exe.stats.record_upload(self.kinds[i]);
+        self.exe.stats.record_upload(
+            self.kinds[i],
+            t0.elapsed().as_nanos() as u64,
+        );
         self.bound[i] = true;
         Ok(())
     }

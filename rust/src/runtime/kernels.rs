@@ -1,52 +1,82 @@
 //! Shared compute kernels for the reference backend: cache-blocked,
-//! row-parallel matrix multiplies plus a scratch-buffer pool.
+//! row-parallel matrix multiplies, a fused head-parallel attention
+//! family, parallel elementwise/reduction helpers, and a
+//! scratch-buffer pool.
 //!
 //! ## Determinism contract
 //!
-//! Every kernel accumulates each output element in ascending-`k`
-//! order, exactly like the historical naive interpreter loops, and
-//! parallelism only partitions **output rows** across threads — chunk
-//! boundaries never change the per-element accumulation order. Parallel
-//! output is therefore bitwise identical to serial output (pinned by
-//! `serial_and_parallel_agree_bitwise` below), which is what lets
-//! `tests/backend_parity.rs` keep its tolerances while the thread count
-//! varies between machines.
+//! Every kernel fixes its work partitioning by **unit** (an output
+//! row, a `(batch, head)` attention unit, a constant-size reduction
+//! tile) — never by scheduler decision. Parallelism only distributes
+//! those units across threads; the per-element accumulation order is
+//! identical at every thread count, so parallel output is bitwise
+//! identical to serial output (pinned by the `*_agree_bitwise` tests
+//! below and `tests/kernel_parity.rs`). Cross-unit reductions
+//! (`rmsnorm_bwd`'s `dw`, the cross-entropy loss scalar) accumulate
+//! into per-tile partials of constant [`REDUCE_ROWS`] height and are
+//! folded serially in ascending tile order — again independent of the
+//! thread count.
 //!
-//! One deliberate divergence from the old loops: they skipped
-//! `a == 0.0` terms, these kernels always multiply. For finite
-//! operands that can only flip the sign of an exactly-zero result
-//! (`±0`, invisible to `==` and to tolerance checks); a zero weight
-//! against a non-finite activation now propagates NaN where the skip
-//! hid it — which is the honest IEEE answer.
+//! One deliberate divergence from the historical interpreter loops:
+//! they skipped `a == 0.0` terms in the GEMMs, these kernels always
+//! multiply. For finite operands that can only flip the sign of an
+//! exactly-zero result (`±0`, invisible to `==` and to tolerance
+//! checks); a zero weight against a non-finite activation now
+//! propagates NaN where the skip hid it — which is the honest IEEE
+//! answer.
 //!
 //! ## Threading
 //!
-//! The worker count defaults to `std::thread::available_parallelism`
-//! and can be overridden with `LOSIA_KERNEL_THREADS` (`1` forces
-//! serial). Small products (< [`PAR_MIN_MACS`] multiply-accumulates)
-//! always run serial so the tiny-config test suite is not taxed with
-//! spawn overhead. Workers are scoped `std::thread` spawns by default;
-//! with the optional `rayon` cargo feature the same row chunks are
-//! dispatched onto the rayon global pool instead (identical results —
-//! chunking, not scheduling, determines the numerics).
+//! All kernels share a single thread budget: [`kernel_threads`]
+//! (override with `LOSIA_KERNEL_THREADS`, or at runtime through
+//! [`set_kernel_threads`] — the bench/test hook). Small problems
+//! (< [`PAR_MIN_MACS`] multiply-accumulates for compute kernels,
+//! < [`PAR_MIN_ELEMS`] elements for memory-bound maps) always run
+//! serial so the tiny-config test suite is not taxed with spawn
+//! overhead. Workers are scoped `std::thread` spawns by default; with
+//! the optional `rayon` cargo feature the same chunks are dispatched
+//! onto the rayon global pool instead (identical results — chunking,
+//! not scheduling, determines the numerics).
 //!
-//! ## Scratch reuse
+//! **Nested-oversubscription guard:** every worker thread is marked
+//! (thread-local flag) for its job's duration, and
+//! [`effective_threads`]/[`effective_map_threads`] return 1 on a
+//! marked thread. A kernel invoked from inside another kernel's
+//! worker therefore runs serial instead of multiplying the thread
+//! count — the budget is spent once, at the outermost fan-out.
+//!
+//! ## Scratch ownership
 //!
 //! [`Pool`] recycles the interpreter's large `f32` temporaries across
-//! `execute()` calls: each `RefBackend` buffer set owns one pool, so a
-//! training step re-uses the previous step's activation/gradient
-//! buffers instead of re-allocating them (see
-//! `runtime/README.md` § kernels).
+//! `execute()` calls. The pool is intentionally `!Sync` and is only
+//! ever touched by the orchestrating thread: kernels that need
+//! per-worker scratch (the attention family's score/dprob rows) draw
+//! **one** buffer of `threads × row` length before fanning out and
+//! hand each worker a disjoint `&mut` slice of it. Worker bodies see
+//! plain slices, never the pool.
 
 // index-heavy kernels: explicit loops ARE the clearest form here
 #![allow(clippy::needless_range_loop)]
+// boxed-job vectors for the fan-out plumbing read clearer inline
+#![allow(clippy::type_complexity)]
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-/// Minimum multiply-accumulate count before a kernel fans out to
-/// threads; below this, spawn overhead dominates the work.
+/// Minimum multiply-accumulate count before a compute kernel fans out
+/// to threads; below this, spawn overhead dominates the work.
 pub const PAR_MIN_MACS: usize = 1 << 18;
+
+/// Minimum element count before a memory-bound map/copy kernel fans
+/// out to threads.
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Fixed reduction-tile height (rows per partial) for cross-row
+/// reductions. Constant — NOT derived from the thread count — so the
+/// partial-sum association (and therefore every bit of the result) is
+/// identical no matter how many workers run.
+const REDUCE_ROWS: usize = 32;
 
 /// Row-tile height: output rows computed together so one loaded `b`
 /// row feeds several accumulator rows.
@@ -56,10 +86,47 @@ const RT: usize = 4;
 /// across the whole `k` loop instead of re-reading the output row.
 const JT: usize = 16;
 
-/// Worker-thread count for the row-parallel kernels: the
+// ------------------------------------------------------- thread budget
+
+/// Runtime override installed by [`set_kernel_threads`]; 0 = unset.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True while this thread is executing a kernel worker job — the
+    /// nested-oversubscription guard reads it.
+    static IN_KERNEL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_worker() -> bool {
+    IN_KERNEL_WORKER.with(|f| f.get())
+}
+
+/// RAII marker: the current thread is a kernel worker until drop.
+struct WorkerGuard;
+
+impl WorkerGuard {
+    fn enter() -> Self {
+        IN_KERNEL_WORKER.with(|f| f.set(true));
+        WorkerGuard
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        IN_KERNEL_WORKER.with(|f| f.set(false));
+    }
+}
+
+/// Worker-thread count for the parallel kernels: the
+/// [`set_kernel_threads`] override when installed, else the
 /// `LOSIA_KERNEL_THREADS` env var when set (minimum 1), else
-/// `available_parallelism`. Cached for the process lifetime.
+/// `available_parallelism`. The env-derived value is cached for the
+/// process lifetime; the override can change at any time.
 pub fn kernel_threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
         std::env::var("LOSIA_KERNEL_THREADS")
@@ -74,11 +141,84 @@ pub fn kernel_threads() -> usize {
     })
 }
 
-fn effective_threads(requested: usize, rows: usize, macs: usize) -> usize {
-    if requested <= 1 || macs < PAR_MIN_MACS {
+/// Install (or with `0`, clear) a process-wide thread-count override —
+/// the hook the kernel microbench and the serial-vs-parallel parity
+/// tests use to drive one interpreter at several thread counts.
+/// Results are bitwise identical at every setting, so flipping it
+/// mid-run can change performance but never numerics.
+pub fn set_kernel_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Thread count a compute kernel should actually use: 1 inside
+/// another kernel's worker (the nested guard), 1 under the
+/// [`PAR_MIN_MACS`] floor, else `requested` capped by `units`.
+fn effective_threads(requested: usize, units: usize, macs: usize) -> usize {
+    if in_worker() || requested <= 1 || macs < PAR_MIN_MACS {
         return 1;
     }
-    requested.min(rows).max(1)
+    requested.min(units).max(1)
+}
+
+/// [`effective_threads`] with the memory-bound [`PAR_MIN_ELEMS`]
+/// floor, for maps/copies.
+fn effective_map_threads(
+    requested: usize,
+    units: usize,
+    elems: usize,
+) -> usize {
+    if in_worker() || requested <= 1 || elems < PAR_MIN_ELEMS {
+        return 1;
+    }
+    requested.min(units).max(1)
+}
+
+// ------------------------------------------------------------- fan-out
+
+/// Run `jobs` across at most `threads` workers: job `i` goes to
+/// worker `i % threads` (a static assignment — but since every job
+/// computes its outputs from its unit index alone, the assignment is
+/// invisible in the results). With one worker (or one job) everything
+/// runs inline on the calling thread. Worker threads are marked so
+/// nested kernel calls inside a job run serial.
+fn fanout_strided<'a>(
+    threads: usize,
+    jobs: Vec<Box<dyn FnOnce() + Send + 'a>>,
+) {
+    if threads <= 1 || jobs.len() <= 1 {
+        for j in jobs {
+            j();
+        }
+        return;
+    }
+    let t = threads.min(jobs.len());
+    let mut buckets: Vec<Vec<Box<dyn FnOnce() + Send + 'a>>> =
+        (0..t).map(|_| Vec::new()).collect();
+    for (i, j) in jobs.into_iter().enumerate() {
+        buckets[i % t].push(j);
+    }
+    #[cfg(feature = "rayon")]
+    rayon::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move |_| {
+                let _g = WorkerGuard::enter();
+                for j in bucket {
+                    j();
+                }
+            });
+        }
+    });
+    #[cfg(not(feature = "rayon"))]
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                let _g = WorkerGuard::enter();
+                for j in bucket {
+                    j();
+                }
+            });
+        }
+    });
 }
 
 /// Split `out` into contiguous row chunks and run `body(row0, chunk)`
@@ -100,18 +240,49 @@ fn for_row_chunks<F>(
         return;
     }
     let per = rows.div_ceil(threads);
-    #[cfg(feature = "rayon")]
-    rayon::scope(|s| {
-        for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
-            s.spawn(move |_| body(ci * per, chunk));
-        }
-    });
-    #[cfg(not(feature = "rayon"))]
-    std::thread::scope(|s| {
-        for (ci, chunk) in out.chunks_mut(per * row_len).enumerate() {
-            s.spawn(move || body(ci * per, chunk));
-        }
-    });
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(per * row_len)
+        .enumerate()
+        .map(|(ci, chunk)| {
+            Box::new(move || body(ci * per, chunk))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    fanout_strided(threads, jobs);
+}
+
+/// [`for_row_chunks`] for kernels with two output buffers sharing the
+/// same row structure (`len_a`/`len_b` elements per row): both are
+/// chunked at the same row boundaries and handed to `body(row0,
+/// chunk_a, chunk_b)` together.
+fn for_row_chunks2<F>(
+    threads: usize,
+    out_a: &mut [f32],
+    len_a: usize,
+    out_b: &mut [f32],
+    len_b: usize,
+    rows: usize,
+    body: &F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out_a.len(), rows * len_a);
+    debug_assert_eq!(out_b.len(), rows * len_b);
+    if threads <= 1 || rows <= 1 {
+        body(0, out_a, out_b);
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out_a
+        .chunks_mut(per * len_a)
+        .zip(out_b.chunks_mut(per * len_b))
+        .enumerate()
+        .map(|(ci, (ca, cb))| {
+            Box::new(move || body(ci * per, ca, cb))
+                as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    fanout_strided(threads, jobs);
 }
 
 // ------------------------------------------------------------- kernels
@@ -349,26 +520,941 @@ fn mm_tn_chunk(
     }
 }
 
+// ------------------------------------------------- elementwise kernels
+
+/// `dst[i] += src[i]`, partitioned across threads (the residual adds
+/// and gradient accumulations of the interpreter).
+pub fn add_into(dst: &mut [f32], src: &[f32]) {
+    add_into_threads(kernel_threads(), dst, src);
+}
+
+/// [`add_into`] with an explicit worker count.
+pub fn add_into_threads(threads: usize, dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let t = effective_map_threads(threads, n, n);
+    for_row_chunks(t, dst, n, 1, &|row0, chunk| {
+        for (d, &s) in chunk.iter_mut().zip(&src[row0..row0 + chunk.len()]) {
+            *d += s;
+        }
+    });
+}
+
+/// `out[i] = f(a[i], b[i])`, output rows partitioned across threads.
+/// `f` must be pure — it may run on any worker for any index.
+pub fn map2_rows<F>(out: &mut [f32], a: &[f32], b: &[f32], f: &F)
+where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    map2_rows_threads(kernel_threads(), out, a, b, f);
+}
+
+/// [`map2_rows`] with an explicit worker count.
+pub fn map2_rows_threads<F>(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    f: &F,
+) where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    let n = out.len();
+    let t = effective_map_threads(threads, n, n);
+    for_row_chunks(t, out, n, 1, &|row0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let g = row0 + i;
+            *o = f(a[g], b[g]);
+        }
+    });
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn dsilu(x: f32) -> f32 {
+    let sg = 1.0 / (1.0 + (-x).exp());
+    sg * (1.0 + x * (1.0 - sg))
+}
+
+/// SwiGLU forward fusion: `out[i] = silu(gate[i]) * up[i]`.
+pub fn silu_mul(out: &mut [f32], gate: &[f32], up: &[f32]) {
+    silu_mul_threads(kernel_threads(), out, gate, up);
+}
+
+/// [`silu_mul`] with an explicit worker count.
+pub fn silu_mul_threads(
+    threads: usize,
+    out: &mut [f32],
+    gate: &[f32],
+    up: &[f32],
+) {
+    map2_rows_threads(threads, out, gate, up, &|g, u| silu(g) * u);
+}
+
+/// SwiGLU backward fusion: `dgate[i] = dmlp·up·silu'(gate)`,
+/// `dup[i] = dmlp·silu(gate)` in one pass.
+pub fn dsilu_mul(
+    dgate: &mut [f32],
+    dup: &mut [f32],
+    dmlp: &[f32],
+    gate: &[f32],
+    up: &[f32],
+) {
+    dsilu_mul_threads(kernel_threads(), dgate, dup, dmlp, gate, up);
+}
+
+/// [`dsilu_mul`] with an explicit worker count.
+pub fn dsilu_mul_threads(
+    threads: usize,
+    dgate: &mut [f32],
+    dup: &mut [f32],
+    dmlp: &[f32],
+    gate: &[f32],
+    up: &[f32],
+) {
+    debug_assert_eq!(dgate.len(), dmlp.len());
+    debug_assert_eq!(dup.len(), dmlp.len());
+    debug_assert_eq!(gate.len(), dmlp.len());
+    debug_assert_eq!(up.len(), dmlp.len());
+    let n = dmlp.len();
+    let t = effective_map_threads(threads, n, n);
+    for_row_chunks2(t, dgate, 1, dup, 1, n, &|row0, cg, cu| {
+        for i in 0..cg.len() {
+            let g = row0 + i;
+            cg[i] = dmlp[g] * up[g] * dsilu(gate[g]);
+            cu[i] = dmlp[g] * silu(gate[g]);
+        }
+    });
+}
+
+/// Row gather: `out[r] = table[clamp(ids[r])]` for `d`-wide rows —
+/// the embedding lookup, parallel over output rows.
+pub fn gather_rows(
+    out: &mut [f32],
+    table: &[f32],
+    ids: &[i32],
+    d: usize,
+    limit: usize,
+) {
+    gather_rows_threads(kernel_threads(), out, table, ids, d, limit);
+}
+
+/// [`gather_rows`] with an explicit worker count.
+pub fn gather_rows_threads(
+    threads: usize,
+    out: &mut [f32],
+    table: &[f32],
+    ids: &[i32],
+    d: usize,
+    limit: usize,
+) {
+    let rows = ids.len();
+    debug_assert_eq!(out.len(), rows * d);
+    debug_assert!(limit * d <= table.len());
+    let t = effective_map_threads(threads, rows, rows * d);
+    for_row_chunks(t, out, rows, d, &|row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(d).enumerate() {
+            let id = (ids[row0 + r].max(0) as usize).min(limit - 1);
+            orow.copy_from_slice(&table[id * d..(id + 1) * d]);
+        }
+    });
+}
+
+// --------------------------------------------------- norm / rope / loss
+
+/// RMSNorm forward over `rows` rows of width `d`:
+/// `y = x · inv(x) · w`, `inv[r] = 1/√(mean(x²) + eps)` cached for the
+/// backward pass. Rows are partitioned across threads.
+pub fn rmsnorm_fwd(
+    y: &mut [f32],
+    inv: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+) {
+    rmsnorm_fwd_threads(kernel_threads(), y, inv, x, w, rows, d, eps);
+}
+
+/// [`rmsnorm_fwd`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_fwd_threads(
+    threads: usize,
+    y: &mut [f32],
+    inv: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    d: usize,
+    eps: f32,
+) {
+    debug_assert_eq!(y.len(), rows * d);
+    debug_assert_eq!(inv.len(), rows);
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d);
+    let t = effective_map_threads(threads, rows, rows * d * 2);
+    for_row_chunks2(t, y, d, inv, 1, rows, &|row0, yc, ic| {
+        for (r, yr) in yc.chunks_mut(d).enumerate() {
+            let row = row0 + r;
+            let xr = &x[row * d..(row + 1) * d];
+            let mean: f32 =
+                xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let iv = 1.0 / (mean + eps).sqrt();
+            ic[r] = iv;
+            for i in 0..d {
+                yr[i] = xr[i] * iv * w[i];
+            }
+        }
+    });
+}
+
+/// RMSNorm backward:
+/// `dx_i = inv·w_i·dy_i − inv³/d · x_i · Σ_j dy_j·w_j·x_j`,
+/// `dw_i += Σ_r dy·x·inv`. `dx` rows are computed tile-parallel; the
+/// cross-row `dw` reduction goes through fixed [`REDUCE_ROWS`]-high
+/// per-tile partials folded serially in tile order, so the result is
+/// bitwise independent of the thread count. `dw` is accumulated into
+/// (callers pass a zeroed buffer for plain assignment).
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_bwd(
+    dx: &mut [f32],
+    dw: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    pool: &Pool,
+) {
+    rmsnorm_bwd_threads(
+        kernel_threads(),
+        dx,
+        dw,
+        x,
+        w,
+        inv,
+        dy,
+        rows,
+        d,
+        pool,
+    );
+}
+
+/// [`rmsnorm_bwd`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_bwd_threads(
+    threads: usize,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    inv: &[f32],
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    pool: &Pool,
+) {
+    debug_assert_eq!(dx.len(), rows * d);
+    debug_assert_eq!(dw.len(), d);
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(inv.len(), rows);
+    debug_assert_eq!(dy.len(), rows * d);
+    if rows == 0 {
+        return;
+    }
+    let tiles = rows.div_ceil(REDUCE_ROWS);
+    let mut partials = pool.zeroed(tiles * d);
+    let t = effective_threads(threads, tiles, rows * d * 3);
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = dx
+            .chunks_mut(REDUCE_ROWS * d)
+            .zip(partials.chunks_mut(d))
+            .enumerate()
+            .map(|(ti, (dxt, pt))| {
+                Box::new(move || {
+                    let row0 = ti * REDUCE_ROWS;
+                    for (r, dxr) in dxt.chunks_mut(d).enumerate() {
+                        let row = row0 + r;
+                        let xr = &x[row * d..(row + 1) * d];
+                        let dyr = &dy[row * d..(row + 1) * d];
+                        let iv = inv[row];
+                        let mut s = 0.0f32;
+                        for i in 0..d {
+                            s += dyr[i] * w[i] * xr[i];
+                        }
+                        let c = iv * iv * iv / d as f32 * s;
+                        for i in 0..d {
+                            dxr[i] = iv * w[i] * dyr[i] - c * xr[i];
+                            pt[i] += dyr[i] * xr[i] * iv;
+                        }
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        fanout_strided(t, jobs);
+    }
+    // fold tile partials serially, ascending — thread-count invariant
+    for ti in 0..tiles {
+        let pt = &partials[ti * d..(ti + 1) * d];
+        for i in 0..d {
+            dw[i] += pt[i];
+        }
+    }
+    pool.recycle(partials);
+}
+
+/// Apply RoPE in place over `[B, S, H, Dh]` (flat `[BS·D]`), rows
+/// partitioned across threads. `inverse` applies the transposed
+/// rotation (the backward pass). `cos`/`sin` are `[S, Dh/2]` tables.
+pub fn rope_apply(
+    x: &mut [f32],
+    sh: AttnShape,
+    cos: &[f32],
+    sin: &[f32],
+    inverse: bool,
+) {
+    rope_apply_threads(kernel_threads(), x, sh, cos, sin, inverse);
+}
+
+/// [`rope_apply`] with an explicit worker count.
+pub fn rope_apply_threads(
+    threads: usize,
+    x: &mut [f32],
+    sh: AttnShape,
+    cos: &[f32],
+    sin: &[f32],
+    inverse: bool,
+) {
+    let d = sh.h * sh.dh;
+    let rows = sh.b * sh.s;
+    let half = sh.dh / 2;
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(cos.len(), sh.s * half);
+    debug_assert_eq!(sin.len(), sh.s * half);
+    let t = effective_map_threads(threads, rows, rows * d * 2);
+    for_row_chunks(t, x, rows, d, &|row0, chunk| {
+        for (r, xrow) in chunk.chunks_mut(d).enumerate() {
+            let pos = (row0 + r) % sh.s;
+            for hh in 0..sh.h {
+                let base = hh * sh.dh;
+                for e in 0..half {
+                    let c = cos[pos * half + e];
+                    let s = sin[pos * half + e];
+                    let x1 = xrow[base + e];
+                    let x2 = xrow[base + half + e];
+                    let (n1, n2) = if inverse {
+                        (x1 * c + x2 * s, -x1 * s + x2 * c)
+                    } else {
+                        (x1 * c - x2 * s, x1 * s + x2 * c)
+                    };
+                    xrow[base + e] = n1;
+                    xrow[base + half + e] = n2;
+                }
+            }
+        }
+    });
+}
+
+fn log_softmax_at(row: &[f32], t: usize) -> f32 {
+    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for &v in row {
+        z += (v - mx).exp();
+    }
+    row[t] - mx - z.ln()
+}
+
+/// Per-sequence summed NLL and mask count (the `fwd_loss` ABI):
+/// `nll[b] = Σ_s −log_softmax(logits[b,s])[target]·mask`,
+/// `cnt[b] = Σ_s mask`. Sequences are partitioned across threads;
+/// within a sequence the per-position accumulation order is fixed.
+#[allow(clippy::too_many_arguments)]
+pub fn seq_nll(
+    nll: &mut [f32],
+    cnt: &mut [f32],
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    v: usize,
+) {
+    seq_nll_threads(
+        kernel_threads(),
+        nll,
+        cnt,
+        logits,
+        targets,
+        mask,
+        b,
+        s,
+        v,
+    );
+}
+
+/// [`seq_nll`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn seq_nll_threads(
+    threads: usize,
+    nll: &mut [f32],
+    cnt: &mut [f32],
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    b: usize,
+    s: usize,
+    v: usize,
+) {
+    debug_assert_eq!(nll.len(), b);
+    debug_assert_eq!(cnt.len(), b);
+    debug_assert_eq!(logits.len(), b * s * v);
+    debug_assert_eq!(targets.len(), b * s);
+    debug_assert_eq!(mask.len(), b * s);
+    let t = effective_threads(threads, b, b * s * v);
+    for_row_chunks2(t, nll, 1, cnt, 1, b, &|b0, nc, cc| {
+        for bi in 0..nc.len() {
+            let bb = b0 + bi;
+            for ss in 0..s {
+                let r = bb * s + ss;
+                let m = mask[r];
+                cc[bi] += m;
+                if m == 0.0 {
+                    continue;
+                }
+                let row = &logits[r * v..(r + 1) * v];
+                let tgt = (targets[r].max(0) as usize).min(v - 1);
+                nc[bi] -= log_softmax_at(row, tgt) * m;
+            }
+        }
+    });
+}
+
+/// Masked-mean cross-entropy loss and its logits cotangent:
+/// fills `dl[rows,v]` (must be zeroed — masked rows stay zero) and
+/// returns the scalar loss. Rows are processed in fixed
+/// [`REDUCE_ROWS`]-high tiles whose partial losses fold serially in
+/// tile order, so the scalar is bitwise thread-count invariant.
+/// `c` is the mask-sum denominator (`total.max(1.0)`).
+#[allow(clippy::too_many_arguments)]
+pub fn ce_loss(
+    dl: &mut [f32],
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    v: usize,
+    c: f32,
+    pool: &Pool,
+) -> f32 {
+    ce_loss_threads(
+        kernel_threads(),
+        dl,
+        logits,
+        targets,
+        mask,
+        rows,
+        v,
+        c,
+        pool,
+    )
+}
+
+/// [`ce_loss`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn ce_loss_threads(
+    threads: usize,
+    dl: &mut [f32],
+    logits: &[f32],
+    targets: &[i32],
+    mask: &[f32],
+    rows: usize,
+    v: usize,
+    c: f32,
+    pool: &Pool,
+) -> f32 {
+    debug_assert_eq!(dl.len(), rows * v);
+    debug_assert_eq!(logits.len(), rows * v);
+    debug_assert_eq!(targets.len(), rows);
+    debug_assert_eq!(mask.len(), rows);
+    if rows == 0 {
+        return 0.0;
+    }
+    let tiles = rows.div_ceil(REDUCE_ROWS);
+    let mut partials = pool.zeroed(tiles);
+    let t = effective_threads(threads, tiles, rows * v * 3);
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = dl
+            .chunks_mut(REDUCE_ROWS * v)
+            .zip(partials.chunks_mut(1))
+            .enumerate()
+            .map(|(ti, (dlt, pt))| {
+                Box::new(move || {
+                    let row0 = ti * REDUCE_ROWS;
+                    for (r, drow) in dlt.chunks_mut(v).enumerate() {
+                        let row = row0 + r;
+                        let m = mask[row];
+                        if m == 0.0 {
+                            continue;
+                        }
+                        let lrow =
+                            &logits[row * v..(row + 1) * v];
+                        let tgt = (targets[row].max(0) as usize)
+                            .min(v - 1);
+                        let mx = lrow
+                            .iter()
+                            .cloned()
+                            .fold(f32::NEG_INFINITY, f32::max);
+                        let mut z = 0.0f32;
+                        for &x in lrow {
+                            z += (x - mx).exp();
+                        }
+                        pt[0] -= (lrow[tgt] - mx - z.ln()) * m / c;
+                        for (j, &x) in lrow.iter().enumerate() {
+                            drow[j] = (x - mx).exp() / z * m / c;
+                        }
+                        drow[tgt] -= m / c;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        fanout_strided(t, jobs);
+    }
+    let mut loss = 0.0f32;
+    for ti in 0..tiles {
+        loss += partials[ti];
+    }
+    pool.recycle(partials);
+    loss
+}
+
+// ---------------------------------------------------- fused attention
+
+/// Shape of one attention invocation. `d_model = h · dh`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnShape {
+    /// batch
+    pub b: usize,
+    /// sequence length
+    pub s: usize,
+    /// heads
+    pub h: usize,
+    /// head dim
+    pub dh: usize,
+}
+
+impl AttnShape {
+    fn d(&self) -> usize {
+        self.h * self.dh
+    }
+
+    fn units(&self) -> usize {
+        self.b * self.h
+    }
+}
+
+/// Repack `[B, S, H, Dh]` (head-interleaved, how the QKV projections
+/// produce it) into `[B, H, S, Dh]` (unit-major, how the attention
+/// units consume it). Every destination row is one contiguous read of
+/// the source, so this is a parallel row copy.
+pub fn pack_heads(dst: &mut [f32], src: &[f32], sh: AttnShape) {
+    pack_heads_threads(kernel_threads(), dst, src, sh);
+}
+
+/// [`pack_heads`] with an explicit worker count.
+pub fn pack_heads_threads(
+    threads: usize,
+    dst: &mut [f32],
+    src: &[f32],
+    sh: AttnShape,
+) {
+    let rows = sh.b * sh.h * sh.s;
+    debug_assert_eq!(dst.len(), rows * sh.dh);
+    debug_assert_eq!(src.len(), rows * sh.dh);
+    let t = effective_map_threads(threads, rows, rows * sh.dh);
+    for_row_chunks(t, dst, rows, sh.dh, &|row0, chunk| {
+        for (r, drow) in chunk.chunks_mut(sh.dh).enumerate() {
+            let idx = row0 + r; // (b, h, pos) row of dst
+            let pos = idx % sh.s;
+            let bh = idx / sh.s;
+            let hh = bh % sh.h;
+            let bb = bh / sh.h;
+            let off = ((bb * sh.s + pos) * sh.h + hh) * sh.dh;
+            drow.copy_from_slice(&src[off..off + sh.dh]);
+        }
+    });
+}
+
+/// Inverse of [`pack_heads`]: `[B, H, S, Dh]` → `[B, S, H, Dh]`.
+pub fn unpack_heads(dst: &mut [f32], src: &[f32], sh: AttnShape) {
+    unpack_heads_threads(kernel_threads(), dst, src, sh);
+}
+
+/// [`unpack_heads`] with an explicit worker count.
+pub fn unpack_heads_threads(
+    threads: usize,
+    dst: &mut [f32],
+    src: &[f32],
+    sh: AttnShape,
+) {
+    let rows = sh.b * sh.s * sh.h;
+    debug_assert_eq!(dst.len(), rows * sh.dh);
+    debug_assert_eq!(src.len(), rows * sh.dh);
+    let t = effective_map_threads(threads, rows, rows * sh.dh);
+    for_row_chunks(t, dst, rows, sh.dh, &|row0, chunk| {
+        for (r, drow) in chunk.chunks_mut(sh.dh).enumerate() {
+            let idx = row0 + r; // (b, pos, h) row of dst
+            let hh = idx % sh.h;
+            let bp = idx / sh.h;
+            let pos = bp % sh.s;
+            let bb = bp / sh.s;
+            let off = ((bb * sh.h + hh) * sh.s + pos) * sh.dh;
+            drow.copy_from_slice(&src[off..off + sh.dh]);
+        }
+    });
+}
+
+/// One `(batch, head)` unit of causal attention, fused per query row:
+/// scores over the causal prefix `0..=i` only (the masked tail of a
+/// probability row is exactly `+0.0` — identical bits to the
+/// historical full-row mask/exp, which underflowed the tail to zero),
+/// max-subtracted softmax, then the probs·V contraction. All slices
+/// are `[s, ·]` unit-major; `att` and `probs` must be zeroed;
+/// `scores` is an `s`-length scratch row.
+#[allow(clippy::too_many_arguments)]
+fn attn_fwd_unit(
+    att: &mut [f32],
+    probs: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    scores: &mut [f32],
+    s: usize,
+    dh: usize,
+    scale: f32,
+) {
+    for i in 0..s {
+        let qrow = &q[i * dh..(i + 1) * dh];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let krow = &k[j * dh..(j + 1) * dh];
+            let mut acc = 0.0f32;
+            for e in 0..dh {
+                acc += qrow[e] * krow[e];
+            }
+            let sc = acc * scale;
+            scores[j] = sc;
+            mx = mx.max(sc);
+        }
+        let mut z = 0.0f32;
+        for j in 0..=i {
+            let e = (scores[j] - mx).exp();
+            scores[j] = e;
+            z += e;
+        }
+        let prow = &mut probs[i * s..(i + 1) * s];
+        let arow = &mut att[i * dh..(i + 1) * dh];
+        for j in 0..=i {
+            let p = scores[j] / z;
+            prow[j] = p;
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = &v[j * dh..(j + 1) * dh];
+            for e in 0..dh {
+                arow[e] += p * vrow[e];
+            }
+        }
+    }
+}
+
+/// One `(batch, head)` unit of the attention backward pass:
+/// `dprobs = datt·Vᵀ`, the softmax Jacobian contraction, then `dq`/
+/// `dk` rank-1 updates — all over the causal prefix. Slices unit-major
+/// `[s, ·]`; `dq`/`dk`/`dv` must be zeroed; `dprobs` is scratch.
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_unit(
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    datt: &[f32],
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dprobs: &mut [f32],
+    s: usize,
+    dh: usize,
+    scale: f32,
+) {
+    for i in 0..s {
+        let prow = &probs[i * s..(i + 1) * s];
+        let darow = &datt[i * dh..(i + 1) * dh];
+        // dprobs_j = Σ_e datt·v ; dv_j += p·datt
+        for j in 0..=i {
+            let vrow = &v[j * dh..(j + 1) * dh];
+            let mut acc = 0.0f32;
+            for e in 0..dh {
+                acc += darow[e] * vrow[e];
+            }
+            dprobs[j] = acc;
+            let p = prow[j];
+            if p != 0.0 {
+                let dvrow = &mut dv[j * dh..(j + 1) * dh];
+                for e in 0..dh {
+                    dvrow[e] += p * darow[e];
+                }
+            }
+        }
+        // softmax backward (masked entries have p = 0)
+        let mut inner = 0.0f32;
+        for j in 0..=i {
+            inner += prow[j] * dprobs[j];
+        }
+        let qrow = &q[i * dh..(i + 1) * dh];
+        let dqrow = &mut dq[i * dh..(i + 1) * dh];
+        for j in 0..=i {
+            let ds = prow[j] * (dprobs[j] - inner) * scale;
+            if ds == 0.0 {
+                continue;
+            }
+            let krow = &k[j * dh..(j + 1) * dh];
+            let dkrow = &mut dk[j * dh..(j + 1) * dh];
+            for e in 0..dh {
+                dqrow[e] += ds * krow[e];
+                dkrow[e] += ds * qrow[e];
+            }
+        }
+    }
+}
+
+/// Fused causal attention forward, parallel over `(batch, head)`
+/// units. Inputs `q`/`k`/`v` are **unit-major** `[B, H, S, Dh]` (see
+/// [`pack_heads`]); outputs are the head-interleaved context
+/// `att[B, S, H·Dh]` (fully overwritten) and the probability tensor
+/// `probs[B, H, S, S]` (must be zeroed — the causal tail stays `+0`).
+/// Each unit is computed by exactly one worker with its own score
+/// scratch row, so the result is bitwise thread-count invariant.
+pub fn attention_fwd(
+    att: &mut [f32],
+    probs: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: AttnShape,
+    pool: &Pool,
+) {
+    attention_fwd_threads(kernel_threads(), att, probs, q, k, v, sh, pool);
+}
+
+/// [`attention_fwd`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_fwd_threads(
+    threads: usize,
+    att: &mut [f32],
+    probs: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: AttnShape,
+    pool: &Pool,
+) {
+    let (s, dh, d) = (sh.s, sh.dh, sh.d());
+    let units = sh.units();
+    let (ua, up) = (s * dh, s * s);
+    debug_assert_eq!(att.len(), sh.b * s * d);
+    debug_assert_eq!(probs.len(), units * up);
+    debug_assert_eq!(q.len(), sh.b * s * d);
+    debug_assert_eq!(k.len(), sh.b * s * d);
+    debug_assert_eq!(v.len(), sh.b * s * d);
+    if units == 0 || s == 0 {
+        return;
+    }
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut attu = pool.zeroed(units * ua);
+    let t = effective_threads(threads, units, units * up * dh);
+    let per = units.div_ceil(t);
+    let mut scratch = pool.zeroed(t * s);
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = probs
+            .chunks_mut(per * up)
+            .zip(attu.chunks_mut(per * ua))
+            .zip(scratch.chunks_mut(s))
+            .enumerate()
+            .map(|(ci, ((pch, ach), scr))| {
+                Box::new(move || {
+                    let n = pch.len() / up;
+                    for i in 0..n {
+                        let u = ci * per + i;
+                        attn_fwd_unit(
+                            &mut ach[i * ua..(i + 1) * ua],
+                            &mut pch[i * up..(i + 1) * up],
+                            &q[u * ua..(u + 1) * ua],
+                            &k[u * ua..(u + 1) * ua],
+                            &v[u * ua..(u + 1) * ua],
+                            scr,
+                            s,
+                            dh,
+                            scale,
+                        );
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        fanout_strided(t, jobs);
+    }
+    pool.recycle(scratch);
+    unpack_heads_threads(threads, att, &attu, sh);
+    pool.recycle(attu);
+}
+
+/// Fused causal attention backward, parallel over `(batch, head)`
+/// units. `datt` is the head-interleaved upstream cotangent
+/// `[B, S, H·Dh]` (packed unit-major internally); `probs`/`q`/`k`/`v`
+/// are the unit-major forward residuals; outputs `dq`/`dk`/`dv` come
+/// back head-interleaved `[B, S, H·Dh]` (fully overwritten), **before**
+/// any RoPE inverse — the caller applies that. Bitwise thread-count
+/// invariant for the same reason as the forward.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bwd(
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    datt: &[f32],
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: AttnShape,
+    pool: &Pool,
+) {
+    attention_bwd_threads(
+        kernel_threads(),
+        dq,
+        dk,
+        dv,
+        datt,
+        probs,
+        q,
+        k,
+        v,
+        sh,
+        pool,
+    );
+}
+
+/// [`attention_bwd`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_bwd_threads(
+    threads: usize,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    datt: &[f32],
+    probs: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: AttnShape,
+    pool: &Pool,
+) {
+    let (s, dh, d) = (sh.s, sh.dh, sh.d());
+    let units = sh.units();
+    let (ua, up) = (s * dh, s * s);
+    let n = sh.b * s * d;
+    debug_assert_eq!(dq.len(), n);
+    debug_assert_eq!(dk.len(), n);
+    debug_assert_eq!(dv.len(), n);
+    debug_assert_eq!(datt.len(), n);
+    debug_assert_eq!(probs.len(), units * up);
+    debug_assert_eq!(q.len(), n);
+    debug_assert_eq!(k.len(), n);
+    debug_assert_eq!(v.len(), n);
+    if units == 0 || s == 0 {
+        return;
+    }
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dah = pool.zeroed(n);
+    pack_heads_threads(threads, &mut dah, datt, sh);
+    let mut dqu = pool.zeroed(n);
+    let mut dku = pool.zeroed(n);
+    let mut dvu = pool.zeroed(n);
+    let t = effective_threads(threads, units, units * up * dh);
+    let per = units.div_ceil(t);
+    let mut scratch = pool.zeroed(t * s);
+    {
+        let dah = &dah;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = dqu
+            .chunks_mut(per * ua)
+            .zip(dku.chunks_mut(per * ua))
+            .zip(dvu.chunks_mut(per * ua))
+            .zip(scratch.chunks_mut(s))
+            .enumerate()
+            .map(|(ci, (((qch, kch), vch), scr))| {
+                Box::new(move || {
+                    let nu = qch.len() / ua;
+                    for i in 0..nu {
+                        let u = ci * per + i;
+                        attn_bwd_unit(
+                            &mut qch[i * ua..(i + 1) * ua],
+                            &mut kch[i * ua..(i + 1) * ua],
+                            &mut vch[i * ua..(i + 1) * ua],
+                            &dah[u * ua..(u + 1) * ua],
+                            &probs[u * up..(u + 1) * up],
+                            &q[u * ua..(u + 1) * ua],
+                            &k[u * ua..(u + 1) * ua],
+                            &v[u * ua..(u + 1) * ua],
+                            scr,
+                            s,
+                            dh,
+                            scale,
+                        );
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        fanout_strided(t, jobs);
+    }
+    pool.recycle(scratch);
+    unpack_heads_threads(threads, dq, &dqu, sh);
+    unpack_heads_threads(threads, dk, &dku, sh);
+    unpack_heads_threads(threads, dv, &dvu, sh);
+    pool.recycle(dah);
+    pool.recycle(dqu);
+    pool.recycle(dku);
+    pool.recycle(dvu);
+}
+
 // ---------------------------------------------------------------- pool
 
 /// Retain at most this many free buffers; beyond it, returned buffers
 /// are simply dropped (bounds memory held by an idle plan). One
-/// `grads_*` execute recycles ~100 backward temporaries *before* the
-/// forward cache (~60 buffers, including the only attention-probs-
-/// sized allocations) comes back at the end of the dispatch — the cap
-/// must exceed their sum or the largest buffers are the ones dropped
-/// every step.
-const POOL_MAX_BUFS: usize = 256;
+/// `grads_*` execute recycles the backward temporaries (~100, plus
+/// the attention family's per-layer pack/unpack intermediates and the
+/// norm `dw` partials since PR 5) *before* the forward cache (~60
+/// buffers, including the only attention-probs-sized allocations)
+/// comes back at the end of the dispatch — the cap must exceed their
+/// sum even on the 12-layer `gpt90m` config, or the largest buffers
+/// are the ones dropped every step.
+const POOL_MAX_BUFS: usize = 512;
 
 /// Scratch-buffer pool: recycles large `f32` temporaries across
 /// interpreter `execute()` calls. `RefBackend` device buffers own one
-/// pool per plan, so step N+1's forward pass reuses step N's
-/// activation and gradient allocations.
+/// pool per plan, so a training step re-uses the previous step's
+/// activation and gradient buffers instead of re-allocating them.
 ///
 /// Interior mutability (`RefCell`) lets the interpreter draw scratch
 /// while its inputs are immutably borrowed from the same buffer set;
-/// the pool is intentionally `!Sync` — worker threads only ever see
-/// `&[f32]` / `&mut [f32]` slices of buffers the caller drew.
+/// the pool is intentionally `!Sync` — only the orchestrating thread
+/// touches it. Kernels that need per-worker scratch draw one
+/// `threads × row` buffer up front and hand each worker a disjoint
+/// `&mut` slice (see the module docs § scratch ownership).
 #[derive(Default)]
 pub struct Pool {
     free: RefCell<Vec<Vec<f32>>>,
@@ -609,6 +1695,368 @@ mod tests {
                 (base[i] + plain[i]).to_bits()
             );
         }
+    }
+
+    // ------------------------------------------- elementwise parity
+
+    #[test]
+    fn elementwise_kernels_serial_parallel_agree_bitwise() {
+        // big enough to clear PAR_MIN_ELEMS; ragged so chunk tails
+        // are exercised
+        let n = (1 << 16) + 37;
+        let a = randv(n, 30);
+        let b = randv(n, 31);
+        for threads in [2, 5] {
+            let mut s = a.clone();
+            add_into_threads(1, &mut s, &b);
+            let mut p = a.clone();
+            add_into_threads(threads, &mut p, &b);
+            assert_bitwise_eq(&s, &p, "add_into");
+
+            let mut s = vec![0.0f32; n];
+            silu_mul_threads(1, &mut s, &a, &b);
+            let mut p = vec![0.0f32; n];
+            silu_mul_threads(threads, &mut p, &a, &b);
+            assert_bitwise_eq(&s, &p, "silu_mul");
+
+            let mut sg = vec![0.0f32; n];
+            let mut su = vec![0.0f32; n];
+            dsilu_mul_threads(1, &mut sg, &mut su, &a, &a, &b);
+            let mut pg = vec![0.0f32; n];
+            let mut pu = vec![0.0f32; n];
+            dsilu_mul_threads(threads, &mut pg, &mut pu, &a, &a, &b);
+            assert_bitwise_eq(&sg, &pg, "dsilu_mul dgate");
+            assert_bitwise_eq(&su, &pu, "dsilu_mul dup");
+        }
+    }
+
+    #[test]
+    fn rmsnorm_serial_parallel_agree_bitwise() {
+        // ragged row count and width; rows*d*3 clears PAR_MIN_MACS so
+        // the tiled backward genuinely fans out
+        let (rows, d) = (403, 257);
+        assert!(rows * d * 3 >= PAR_MIN_MACS);
+        let x = randv(rows * d, 40);
+        let w = randv(d, 41);
+        let dy = randv(rows * d, 42);
+        let pool = Pool::new();
+
+        let mut ys = vec![0.0f32; rows * d];
+        let mut invs = vec![0.0f32; rows];
+        rmsnorm_fwd_threads(1, &mut ys, &mut invs, &x, &w, rows, d, 1e-6);
+        for threads in [2, 4] {
+            let mut yp = vec![0.0f32; rows * d];
+            let mut invp = vec![0.0f32; rows];
+            rmsnorm_fwd_threads(
+                threads, &mut yp, &mut invp, &x, &w, rows, d, 1e-6,
+            );
+            assert_bitwise_eq(&ys, &yp, "rmsnorm_fwd y");
+            assert_bitwise_eq(&invs, &invp, "rmsnorm_fwd inv");
+        }
+
+        let mut dxs = vec![0.0f32; rows * d];
+        let mut dws = vec![0.0f32; d];
+        rmsnorm_bwd_threads(
+            1, &mut dxs, &mut dws, &x, &w, &invs, &dy, rows, d, &pool,
+        );
+        for threads in [2, 4] {
+            let mut dxp = vec![0.0f32; rows * d];
+            let mut dwp = vec![0.0f32; d];
+            rmsnorm_bwd_threads(
+                threads, &mut dxp, &mut dwp, &x, &w, &invs, &dy, rows,
+                d, &pool,
+            );
+            assert_bitwise_eq(&dxs, &dxp, "rmsnorm_bwd dx");
+            assert_bitwise_eq(&dws, &dwp, "rmsnorm_bwd dw");
+        }
+    }
+
+    #[test]
+    fn rope_serial_parallel_agree_bitwise_and_inverts() {
+        let sh = AttnShape { b: 4, s: 97, h: 6, dh: 18 };
+        let d = sh.h * sh.dh;
+        let n = sh.b * sh.s * d;
+        assert!(n * 2 >= PAR_MIN_ELEMS, "too small to engage threads");
+        let half = sh.dh / 2;
+        let mut cos = Vec::new();
+        let mut sin = Vec::new();
+        for pos in 0..sh.s {
+            for e in 0..half {
+                let ang = pos as f32
+                    * 10000f32.powf(-(e as f32) / half as f32);
+                cos.push(ang.cos());
+                sin.push(ang.sin());
+            }
+        }
+        let x0 = randv(n, 50);
+        let mut s = x0.clone();
+        rope_apply_threads(1, &mut s, sh, &cos, &sin, false);
+        for threads in [2, 3] {
+            let mut p = x0.clone();
+            rope_apply_threads(threads, &mut p, sh, &cos, &sin, false);
+            assert_bitwise_eq(&s, &p, "rope");
+        }
+        // inverse rotation undoes the forward within float tolerance
+        let mut back = s.clone();
+        rope_apply_threads(2, &mut back, sh, &cos, &sin, true);
+        for (a, b) in back.iter().zip(&x0) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn loss_kernels_serial_parallel_agree_bitwise() {
+        // b*s*v clears PAR_MIN_MACS so seq_nll (and a fortiori
+        // ce_loss) genuinely fans out; ragged everywhere
+        let (b, s, v) = (6, 111, 401);
+        let rows = b * s;
+        assert!(b * s * v >= PAR_MIN_MACS);
+        let logits = randv(rows * v, 60);
+        let mut rng = Rng::new(61);
+        let targets: Vec<i32> =
+            (0..rows).map(|_| rng.below(v) as i32).collect();
+        // mix of masked and unmasked positions
+        let mask: Vec<f32> = (0..rows)
+            .map(|i| if i % 7 == 0 { 0.0 } else { 1.0 })
+            .collect();
+        let c = mask.iter().sum::<f32>().max(1.0);
+        let pool = Pool::new();
+
+        let mut dls = vec![0.0f32; rows * v];
+        let ls = ce_loss_threads(
+            1, &mut dls, &logits, &targets, &mask, rows, v, c, &pool,
+        );
+        for threads in [2, 4] {
+            let mut dlp = vec![0.0f32; rows * v];
+            let lp = ce_loss_threads(
+                threads, &mut dlp, &logits, &targets, &mask, rows, v,
+                c, &pool,
+            );
+            assert_eq!(ls.to_bits(), lp.to_bits(), "ce_loss scalar");
+            assert_bitwise_eq(&dls, &dlp, "ce_loss dl");
+        }
+
+        let mut nlls = vec![0.0f32; b];
+        let mut cnts = vec![0.0f32; b];
+        seq_nll_threads(
+            1, &mut nlls, &mut cnts, &logits, &targets, &mask, b, s, v,
+        );
+        for threads in [2, 3] {
+            let mut nllp = vec![0.0f32; b];
+            let mut cntp = vec![0.0f32; b];
+            seq_nll_threads(
+                threads, &mut nllp, &mut cntp, &logits, &targets,
+                &mask, b, s, v,
+            );
+            assert_bitwise_eq(&nlls, &nllp, "seq_nll nll");
+            assert_bitwise_eq(&cnts, &cntp, "seq_nll cnt");
+        }
+    }
+
+    // --------------------------------------------- attention parity
+
+    /// The historical serial attention forward (full-row mask fill,
+    /// full-row exp) over head-interleaved `[B, S, H, Dh]` operands —
+    /// the reference the fused causal-prefix kernel must match
+    /// bitwise on the probability tensor. A frozen fossil with a
+    /// verbatim twin in `benches/kernels_micro.rs` (the perf
+    /// baseline); keep both byte-identical and never "improve"
+    /// either.
+    fn naive_attention_fwd(
+        qr: &[f32],
+        kr: &[f32],
+        v4: &[f32],
+        sh: AttnShape,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (b, s, h, dh) = (sh.b, sh.s, sh.h, sh.dh);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut probs = vec![0.0f32; b * h * s * s];
+        let mut att = vec![0.0f32; b * s * h * dh];
+        let mut scores = vec![0.0f32; s];
+        let at =
+            |bb: usize, pos: usize, hh: usize| ((bb * s + pos) * h + hh) * dh;
+        for bb in 0..b {
+            for hh in 0..h {
+                for i in 0..s {
+                    let prow_off = ((bb * h + hh) * s + i) * s;
+                    scores.fill(-1e30);
+                    let qrow = &qr[at(bb, i, hh)..at(bb, i, hh) + dh];
+                    for (j, sc) in
+                        scores.iter_mut().enumerate().take(i + 1)
+                    {
+                        let krow =
+                            &kr[at(bb, j, hh)..at(bb, j, hh) + dh];
+                        let mut acc = 0.0f32;
+                        for e in 0..dh {
+                            acc += qrow[e] * krow[e];
+                        }
+                        *sc = acc * scale;
+                    }
+                    let mx = scores
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        *sc = (*sc - mx).exp();
+                        z += *sc;
+                    }
+                    let prow = &mut probs[prow_off..prow_off + s];
+                    for (j, &e) in scores.iter().enumerate() {
+                        prow[j] = e / z;
+                    }
+                    let arow = at(bb, i, hh);
+                    for (j, &p) in prow.iter().enumerate().take(i + 1)
+                    {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        let vrow =
+                            &v4[at(bb, j, hh)..at(bb, j, hh) + dh];
+                        for e in 0..dh {
+                            att[arow + e] += p * vrow[e];
+                        }
+                    }
+                }
+            }
+        }
+        (att, probs)
+    }
+
+    #[test]
+    fn fused_attention_matches_historical_full_row_softmax() {
+        // The causal-prefix fix must be invisible: identical probs
+        // (bitwise) and identical context to the historical kernel
+        // that filled and exponentiated the masked tail.
+        for sh in [
+            AttnShape { b: 1, s: 1, h: 1, dh: 4 },
+            AttnShape { b: 2, s: 7, h: 3, dh: 6 },
+            AttnShape { b: 2, s: 33, h: 2, dh: 20 },
+        ] {
+            let n = sh.b * sh.s * sh.h * sh.dh;
+            let qr = randv(n, 70);
+            let kr = randv(n, 71);
+            let v4 = randv(n, 72);
+            let (want_att, want_probs) =
+                naive_attention_fwd(&qr, &kr, &v4, sh);
+
+            let pool = Pool::new();
+            let mut qh = vec![0.0f32; n];
+            let mut kh = vec![0.0f32; n];
+            let mut vh = vec![0.0f32; n];
+            pack_heads_threads(1, &mut qh, &qr, sh);
+            pack_heads_threads(1, &mut kh, &kr, sh);
+            pack_heads_threads(1, &mut vh, &v4, sh);
+            let mut att = vec![0.0f32; n];
+            let mut probs =
+                vec![0.0f32; sh.b * sh.h * sh.s * sh.s];
+            attention_fwd_threads(
+                1, &mut att, &mut probs, &qh, &kh, &vh, sh, &pool,
+            );
+            assert_bitwise_eq(&probs, &want_probs, "causal probs");
+            assert_bitwise_eq(&att, &want_att, "causal att");
+        }
+    }
+
+    #[test]
+    fn attention_serial_parallel_agree_bitwise() {
+        // units * s * s * dh clears PAR_MIN_MACS; ragged s and dh
+        let sh = AttnShape { b: 2, s: 57, h: 4, dh: 36 };
+        assert!(
+            sh.b * sh.h * sh.s * sh.s * sh.dh >= PAR_MIN_MACS,
+            "shape too small to engage threads"
+        );
+        let n = sh.b * sh.s * sh.h * sh.dh;
+        let q = randv(n, 80);
+        let k = randv(n, 81);
+        let v = randv(n, 82);
+        let datt = randv(n, 83);
+        let pool = Pool::new();
+
+        let mut att_s = vec![0.0f32; n];
+        let mut probs_s = vec![0.0f32; sh.b * sh.h * sh.s * sh.s];
+        attention_fwd_threads(
+            1, &mut att_s, &mut probs_s, &q, &k, &v, sh, &pool,
+        );
+        let mut dq_s = vec![0.0f32; n];
+        let mut dk_s = vec![0.0f32; n];
+        let mut dv_s = vec![0.0f32; n];
+        attention_bwd_threads(
+            1, &mut dq_s, &mut dk_s, &mut dv_s, &datt, &probs_s, &q,
+            &k, &v, sh, &pool,
+        );
+
+        for threads in [2, 3, 8] {
+            let mut att_p = vec![0.0f32; n];
+            let mut probs_p =
+                vec![0.0f32; sh.b * sh.h * sh.s * sh.s];
+            attention_fwd_threads(
+                threads, &mut att_p, &mut probs_p, &q, &k, &v, sh,
+                &pool,
+            );
+            assert_bitwise_eq(&att_s, &att_p, "attention_fwd att");
+            assert_bitwise_eq(
+                &probs_s,
+                &probs_p,
+                "attention_fwd probs",
+            );
+
+            let mut dq_p = vec![0.0f32; n];
+            let mut dk_p = vec![0.0f32; n];
+            let mut dv_p = vec![0.0f32; n];
+            attention_bwd_threads(
+                threads, &mut dq_p, &mut dk_p, &mut dv_p, &datt,
+                &probs_s, &q, &k, &v, sh, &pool,
+            );
+            assert_bitwise_eq(&dq_s, &dq_p, "attention_bwd dq");
+            assert_bitwise_eq(&dk_s, &dk_p, "attention_bwd dk");
+            assert_bitwise_eq(&dv_s, &dv_p, "attention_bwd dv");
+        }
+    }
+
+    #[test]
+    fn pack_unpack_heads_roundtrip() {
+        let sh = AttnShape { b: 2, s: 5, h: 3, dh: 7 };
+        let n = sh.b * sh.s * sh.h * sh.dh;
+        let x = randv(n, 90);
+        let mut packed = vec![0.0f32; n];
+        pack_heads_threads(2, &mut packed, &x, sh);
+        let mut back = vec![0.0f32; n];
+        unpack_heads_threads(2, &mut back, &packed, sh);
+        assert_bitwise_eq(&x, &back, "pack/unpack roundtrip");
+        // spot-check the layout: dst[b=1,h=2,pos=3] == src[b=1,pos=3,h=2]
+        let src_off = ((sh.s + 3) * sh.h + 2) * sh.dh;
+        let dst_off = ((sh.h + 2) * sh.s + 3) * sh.dh;
+        assert_eq!(
+            packed[dst_off].to_bits(),
+            x[src_off].to_bits()
+        );
+    }
+
+    // ------------------------------------------------- thread budget
+
+    #[test]
+    fn workers_are_marked_for_nested_serialization() {
+        // any kernel called from inside a worker must see an
+        // effective thread count of 1 — the oversubscription guard
+        let jobs: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+            .map(|_| {
+                Box::new(|| {
+                    assert!(in_worker(), "worker flag not set");
+                    assert_eq!(
+                        effective_threads(8, 100, usize::MAX),
+                        1,
+                        "nested kernel would fan out"
+                    );
+                    assert_eq!(
+                        effective_map_threads(8, 100, usize::MAX),
+                        1
+                    );
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        fanout_strided(2, jobs);
+        assert!(!in_worker(), "orchestrator inherited the flag");
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //! This is the CI/test backend: it needs no lowered HLO files and no
 //! PJRT client, so the full suite (and the `auto` runtime fallback)
 //! runs from a bare checkout. Numerics mirror
-//! `python/compile/model.py` — RMSNorm/RoPE/SwiGLU constants, masking
-//! with `-1e30`, softmax max-subtraction, and the `max(cnt, 1)` loss
-//! denominator — and the backward formulas were validated against
-//! `jax.grad` of that model (see `tests/backend_parity.rs` for the
-//! in-tree tolerance check against the PJRT path).
+//! `python/compile/model.py` — RMSNorm/RoPE/SwiGLU constants, causal
+//! masking (the fused kernel softmaxes the `0..=i` prefix only, which
+//! is bit-identical to the historical `-1e30` fill whose masked tail
+//! underflowed to zero — pinned by
+//! `kernels::tests::fused_attention_matches_historical_full_row_softmax`),
+//! softmax max-subtraction, and the `max(cnt, 1)` loss denominator —
+//! and the backward formulas were validated against `jax.grad` of
+//! that model (see `tests/backend_parity.rs` for the in-tree
+//! tolerance check against the PJRT path).
 //!
 //! The interpreter dispatches on the artifact base name; `_remat`
 //! variants are numerically identical (checkpointing only changes the
@@ -28,11 +32,10 @@ use crate::runtime::backend::{
     Backend, DeviceBuffers, DeviceValue, Executor, HostRef,
 };
 use crate::runtime::host::HostValue;
-use crate::runtime::kernels::{self, Pool};
+use crate::runtime::kernels::{self, add_into, Pool};
 use crate::tensor::Tensor;
 
 const NORM_EPS: f32 = 1e-6;
-const MASK_NEG: f32 = -1e30;
 const ROPE_BASE: f32 = 10000.0;
 
 /// The pure-Rust interpreter backend.
@@ -325,16 +328,11 @@ fn scalar(v: f32) -> Tensor {
 
 // ------------------------------------------------------ linear algebra
 //
-// The matmuls live in `runtime::kernels` (cache-blocked, row-parallel,
-// bitwise-deterministic across thread counts); only the small
-// index/norm/rotation helpers stay local.
-
-fn add_into(dst: &mut [f32], src: &[f32]) {
-    debug_assert_eq!(dst.len(), src.len());
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d += s;
-    }
-}
+// All hot compute lives in `runtime::kernels` (cache-blocked GEMMs,
+// the fused head-parallel attention family, parallel norm/activation/
+// loss helpers — every one bitwise-deterministic across thread
+// counts); only the small subnet gather/scatter helpers and the RoPE
+// tables stay local.
 
 /// Gather columns: out[r, j] = x[r, cols[j]]
 fn gather_cols(
@@ -370,59 +368,6 @@ fn scatter_cols(
     }
 }
 
-fn rmsnorm_fwd(
-    x: &[f32],
-    w: &[f32],
-    rows: usize,
-    d: usize,
-    pool: &Pool,
-) -> (Vec<f32>, Vec<f32>) {
-    let mut y = pool.zeroed(rows * d);
-    let mut inv = pool.zeroed(rows);
-    for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let mean: f32 =
-            xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
-        let iv = 1.0 / (mean + NORM_EPS).sqrt();
-        inv[r] = iv;
-        let yr = &mut y[r * d..(r + 1) * d];
-        for i in 0..d {
-            yr[i] = xr[i] * iv * w[i];
-        }
-    }
-    (y, inv)
-}
-
-/// dx_i = inv·w_i·dy_i − inv³/d · x_i · Σ_j dy_j·w_j·x_j ; dw_i = Σ_r dy·x·inv
-fn rmsnorm_bwd(
-    x: &[f32],
-    w: &[f32],
-    inv: &[f32],
-    dy: &[f32],
-    rows: usize,
-    d: usize,
-    pool: &Pool,
-) -> (Vec<f32>, Vec<f32>) {
-    let mut dx = pool.zeroed(rows * d);
-    let mut dw = vec![0.0f32; d];
-    for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let dyr = &dy[r * d..(r + 1) * d];
-        let iv = inv[r];
-        let mut s = 0.0f32;
-        for i in 0..d {
-            s += dyr[i] * w[i] * xr[i];
-        }
-        let c = iv * iv * iv / d as f32 * s;
-        let dxr = &mut dx[r * d..(r + 1) * d];
-        for i in 0..d {
-            dxr[i] = iv * w[i] * dyr[i] - c * xr[i];
-            dw[i] += dyr[i] * xr[i] * iv;
-        }
-    }
-    (dx, dw)
-}
-
 fn rope_tables(s: usize, dh: usize, pool: &Pool) -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
     let mut cos = pool.cleared(s * half);
@@ -437,47 +382,6 @@ fn rope_tables(s: usize, dh: usize, pool: &Pool) -> (Vec<f32>, Vec<f32>) {
         }
     }
     (cos, sin)
-}
-
-/// Apply RoPE in place over [B, S, H, Dh] (flat [BS·D]). `inverse`
-/// applies the transposed rotation (the backward pass).
-fn rope_apply(
-    x: &mut [f32],
-    dm: &Dims,
-    cos: &[f32],
-    sin: &[f32],
-    inverse: bool,
-) {
-    let half = dm.dh / 2;
-    for b in 0..dm.b {
-        for pos in 0..dm.s {
-            for h in 0..dm.h {
-                let base = ((b * dm.s + pos) * dm.h + h) * dm.dh;
-                for e in 0..half {
-                    let c = cos[pos * half + e];
-                    let s = sin[pos * half + e];
-                    let x1 = x[base + e];
-                    let x2 = x[base + half + e];
-                    let (n1, n2) = if inverse {
-                        (x1 * c + x2 * s, -x1 * s + x2 * c)
-                    } else {
-                        (x1 * c - x2 * s, x1 * s + x2 * c)
-                    };
-                    x[base + e] = n1;
-                    x[base + half + e] = n2;
-                }
-            }
-        }
-    }
-}
-
-fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-fn dsilu(x: f32) -> f32 {
-    let sg = 1.0 / (1.0 + (-x).exp());
-    sg * (1.0 + x * (1.0 - sg))
 }
 
 // ----------------------------------------------------------- the model
@@ -504,9 +408,12 @@ struct LayerCache {
     x_in: Vec<f32>,
     h: Vec<f32>,
     inv1: Vec<f32>,
-    qr: Vec<f32>,
-    kr: Vec<f32>,
-    v4: Vec<f32>,
+    /// post-RoPE q/k and v in **unit-major** `[B, H, S, Dh]` layout —
+    /// packed once in the forward pass so the head-parallel attention
+    /// units stream them contiguously in both directions
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
     probs: Vec<f32>,
     att: Vec<f32>,
     x_mid: Vec<f32>,
@@ -531,7 +438,7 @@ struct FwdCache {
 impl LayerCache {
     fn recycle(self, pool: &Pool) {
         for v in [
-            self.x_in, self.h, self.inv1, self.qr, self.kr, self.v4,
+            self.x_in, self.h, self.inv1, self.qh, self.kh, self.vh,
             self.probs, self.att, self.x_mid, self.h2, self.inv2,
             self.gate, self.up, self.mlp,
         ] {
@@ -625,6 +532,49 @@ impl<'a> Model<'a> {
         out
     }
 
+    /// Attention dims for the kernel layer.
+    fn attn_shape(&self) -> kernels::AttnShape {
+        kernels::AttnShape {
+            b: self.dm.b,
+            s: self.dm.s,
+            h: self.dm.h,
+            dh: self.dm.dh,
+        }
+    }
+
+    /// Row-parallel RMSNorm forward into pooled buffers: `(y, inv)`.
+    fn rmsnorm_p(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        rows: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut y = self.pool.zeroed(rows * d);
+        let mut inv = self.pool.zeroed(rows);
+        kernels::rmsnorm_fwd(&mut y, &mut inv, x, w, rows, d, NORM_EPS);
+        (y, inv)
+    }
+
+    /// Tile-parallel RMSNorm backward into pooled buffers: `(dx, dw)`.
+    #[allow(clippy::too_many_arguments)]
+    fn rmsnorm_bwd_p(
+        &self,
+        x: &[f32],
+        w: &[f32],
+        inv: &[f32],
+        dy: &[f32],
+        rows: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut dx = self.pool.zeroed(rows * d);
+        let mut dw = self.pool.zeroed(d);
+        kernels::rmsnorm_bwd(
+            &mut dx, &mut dw, x, w, inv, dy, rows, d, self.pool,
+        );
+        (dx, dw)
+    }
+
     fn f32_in(&self, name: &str) -> Result<&Tensor> {
         self.inp
             .get(name)
@@ -682,11 +632,7 @@ impl<'a> Model<'a> {
         let embed = self.f32_in("embed")?;
 
         let mut x = self.pool.zeroed(rows * dm.d);
-        for r in 0..rows {
-            let t = (tokens[r].max(0) as usize).min(dm.v - 1);
-            x[r * dm.d..(r + 1) * dm.d]
-                .copy_from_slice(&embed.data[t * dm.d..(t + 1) * dm.d]);
-        }
+        kernels::gather_rows(&mut x, &embed.data, tokens, dm.d, dm.v);
 
         let norm1 = self.f32_in("norm1")?;
         let norm2 = self.f32_in("norm2")?;
@@ -706,7 +652,7 @@ impl<'a> Model<'a> {
 
         let norm_f = self.f32_in("norm_f")?;
         let (xnorm, invf) =
-            rmsnorm_fwd(&x, &norm_f.data, rows, dm.d, self.pool);
+            self.rmsnorm_p(&x, &norm_f.data, rows, dm.d);
         let lm_head = self.f32_in("lm_head")?;
         let mut logits =
             self.mm_p(&xnorm, &lm_head.data, rows, dm.d, dm.v);
@@ -740,32 +686,48 @@ impl<'a> Model<'a> {
     ) -> Result<(LayerCache, Vec<f32>)> {
         let dm = self.dm;
         let rows = dm.b * dm.s;
-        let (h, inv1) = rmsnorm_fwd(&x, norm1, rows, dm.d, self.pool);
-        let q = self.lin_fwd(l, "wq", &h, rows)?;
-        let k = self.lin_fwd(l, "wk", &h, rows)?;
-        let v4 = self.lin_fwd(l, "wv", &h, rows)?;
+        let sh = self.attn_shape();
+        let (h, inv1) = self.rmsnorm_p(&x, norm1, rows, dm.d);
+        let mut q = self.lin_fwd(l, "wq", &h, rows)?;
+        let mut k = self.lin_fwd(l, "wk", &h, rows)?;
+        let v = self.lin_fwd(l, "wv", &h, rows)?;
 
         let (cos, sin) = rope;
-        let mut qr = q;
-        let mut kr = k;
-        rope_apply(&mut qr, &dm, cos, sin, false);
-        rope_apply(&mut kr, &dm, cos, sin, false);
+        kernels::rope_apply(&mut q, sh, cos, sin, false);
+        kernels::rope_apply(&mut k, sh, cos, sin, false);
 
-        let (att, probs) = self.attention_fwd(&qr, &kr, &v4);
+        // pack q/k/v unit-major once; the head-parallel attention
+        // units (forward now, backward later via the cache) stream
+        // them contiguously. zeroed() despite being fully overwritten:
+        // the parallel row-copy needs initialized storage to split
+        // into &mut chunks (safe Rust), and the memset is O(rows·d)
+        // against the O(rows·s·dh) attention it feeds.
+        let mut qh = self.pool.zeroed(rows * dm.d);
+        let mut kh = self.pool.zeroed(rows * dm.d);
+        let mut vh = self.pool.zeroed(rows * dm.d);
+        kernels::pack_heads(&mut qh, &q, sh);
+        kernels::pack_heads(&mut kh, &k, sh);
+        kernels::pack_heads(&mut vh, &v, sh);
+        self.pool.recycle(q);
+        self.pool.recycle(k);
+        self.pool.recycle(v);
+
+        let mut att = self.pool.zeroed(rows * dm.d);
+        let mut probs = self.pool.zeroed(dm.b * dm.h * dm.s * dm.s);
+        kernels::attention_fwd(
+            &mut att, &mut probs, &qh, &kh, &vh, sh, self.pool,
+        );
         let wo_out = self.lin_fwd(l, "wo", &att, rows)?;
         let mut x_mid = self.pool.cleared(rows * dm.d);
         x_mid.extend_from_slice(&x);
         add_into(&mut x_mid, &wo_out);
         self.pool.recycle(wo_out);
 
-        let (h2, inv2) =
-            rmsnorm_fwd(&x_mid, norm2, rows, dm.d, self.pool);
+        let (h2, inv2) = self.rmsnorm_p(&x_mid, norm2, rows, dm.d);
         let gate = self.lin_fwd(l, "wgate", &h2, rows)?;
         let up = self.lin_fwd(l, "wup", &h2, rows)?;
         let mut mlp = self.pool.zeroed(rows * self.cfg.d_ff);
-        for i in 0..mlp.len() {
-            mlp[i] = silu(gate[i]) * up[i];
-        }
+        kernels::silu_mul(&mut mlp, &gate, &up);
         let down = self.lin_fwd(l, "wdown", &mlp, rows)?;
         let mut x_new = self.pool.cleared(rows * dm.d);
         x_new.extend_from_slice(&x_mid);
@@ -777,9 +739,9 @@ impl<'a> Model<'a> {
                 x_in: x,
                 h,
                 inv1,
-                qr,
-                kr,
-                v4,
+                qh,
+                kh,
+                vh,
                 probs,
                 att,
                 x_mid,
@@ -791,141 +753,6 @@ impl<'a> Model<'a> {
             },
             x_new,
         ))
-    }
-
-    fn attention_fwd(
-        &self,
-        qr: &[f32],
-        kr: &[f32],
-        v4: &[f32],
-    ) -> (Vec<f32>, Vec<f32>) {
-        let dm = self.dm;
-        let scale = 1.0 / (dm.dh as f32).sqrt();
-        let mut probs = self.pool.zeroed(dm.b * dm.h * dm.s * dm.s);
-        let mut att = self.pool.zeroed(dm.b * dm.s * dm.d);
-        let mut scores = self.pool.zeroed(dm.s);
-        let at = |b: usize, pos: usize, h: usize| {
-            ((b * dm.s + pos) * dm.h + h) * dm.dh
-        };
-        for b in 0..dm.b {
-            for h in 0..dm.h {
-                for i in 0..dm.s {
-                    let prow_off = ((b * dm.h + h) * dm.s + i) * dm.s;
-                    scores.fill(MASK_NEG);
-                    let qrow = &qr[at(b, i, h)..at(b, i, h) + dm.dh];
-                    for (j, sc) in
-                        scores.iter_mut().enumerate().take(i + 1)
-                    {
-                        let krow =
-                            &kr[at(b, j, h)..at(b, j, h) + dm.dh];
-                        let mut acc = 0.0f32;
-                        for e in 0..dm.dh {
-                            acc += qrow[e] * krow[e];
-                        }
-                        *sc = acc * scale;
-                    }
-                    let mx = scores
-                        .iter()
-                        .cloned()
-                        .fold(f32::NEG_INFINITY, f32::max);
-                    let mut z = 0.0f32;
-                    for sc in scores.iter_mut() {
-                        *sc = (*sc - mx).exp();
-                        z += *sc;
-                    }
-                    let prow =
-                        &mut probs[prow_off..prow_off + dm.s];
-                    for (j, &e) in scores.iter().enumerate() {
-                        prow[j] = e / z;
-                    }
-                    let arow = at(b, i, h);
-                    for (j, &p) in
-                        prow.iter().enumerate().take(i + 1)
-                    {
-                        if p == 0.0 {
-                            continue;
-                        }
-                        let vrow =
-                            &v4[at(b, j, h)..at(b, j, h) + dm.dh];
-                        for e in 0..dm.dh {
-                            att[arow + e] += p * vrow[e];
-                        }
-                    }
-                }
-            }
-        }
-        self.pool.recycle(scores);
-        (att, probs)
-    }
-
-    fn attention_bwd(
-        &self,
-        datt: &[f32],
-        c: &LayerCache,
-        rope: (&[f32], &[f32]),
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let dm = self.dm;
-        let scale = 1.0 / (dm.dh as f32).sqrt();
-        let mut dq = self.pool.zeroed(dm.b * dm.s * dm.d);
-        let mut dk = self.pool.zeroed(dm.b * dm.s * dm.d);
-        let mut dv = self.pool.zeroed(dm.b * dm.s * dm.d);
-        let mut dprobs = self.pool.zeroed(dm.s);
-        let at = |b: usize, pos: usize, h: usize| {
-            ((b * dm.s + pos) * dm.h + h) * dm.dh
-        };
-        for b in 0..dm.b {
-            for h in 0..dm.h {
-                for i in 0..dm.s {
-                    let prow_off = ((b * dm.h + h) * dm.s + i) * dm.s;
-                    let prow = &c.probs[prow_off..prow_off + dm.s];
-                    let darow = &datt[at(b, i, h)..at(b, i, h) + dm.dh];
-                    // dprobs_j = Σ_e datt·v ; dv_j += p·datt
-                    dprobs.fill(0.0);
-                    for j in 0..=i {
-                        let voff = at(b, j, h);
-                        let vrow = &c.v4[voff..voff + dm.dh];
-                        let mut acc = 0.0f32;
-                        for e in 0..dm.dh {
-                            acc += darow[e] * vrow[e];
-                        }
-                        dprobs[j] = acc;
-                        let p = prow[j];
-                        if p != 0.0 {
-                            let dvrow = &mut dv[voff..voff + dm.dh];
-                            for e in 0..dm.dh {
-                                dvrow[e] += p * darow[e];
-                            }
-                        }
-                    }
-                    // softmax backward (masked entries have p = 0)
-                    let mut inner = 0.0f32;
-                    for j in 0..=i {
-                        inner += prow[j] * dprobs[j];
-                    }
-                    let dqrow = &mut dq[at(b, i, h)..at(b, i, h) + dm.dh];
-                    for j in 0..=i {
-                        let ds = prow[j] * (dprobs[j] - inner) * scale;
-                        if ds == 0.0 {
-                            continue;
-                        }
-                        let koff = at(b, j, h);
-                        let krow = &c.kr[koff..koff + dm.dh];
-                        let qoff = at(b, i, h);
-                        let qrow = &c.qr[qoff..qoff + dm.dh];
-                        let dkrow = &mut dk[koff..koff + dm.dh];
-                        for e in 0..dm.dh {
-                            dqrow[e] += ds * krow[e];
-                            dkrow[e] += ds * qrow[e];
-                        }
-                    }
-                }
-            }
-        }
-        self.pool.recycle(dprobs);
-        let (cos, sin) = rope;
-        rope_apply(&mut dq, &dm, cos, sin, true);
-        rope_apply(&mut dk, &dm, cos, sin, true);
-        (dq, dk, dv)
     }
 
     // ------------------------------------------------------- linears
@@ -1216,7 +1043,8 @@ impl<'a> Model<'a> {
 
     // -------------------------------------------------------- losses
 
-    /// Per-sequence (summed NLL, token count) — the `fwd_loss` ABI.
+    /// Per-sequence (summed NLL, token count) — the `fwd_loss` ABI,
+    /// sequence-parallel in the kernel layer.
     fn seq_nll(
         &self,
         logits: &[f32],
@@ -1226,24 +1054,15 @@ impl<'a> Model<'a> {
         let mask = self.f32_in("mask")?;
         let mut nll = vec![0.0f32; dm.b];
         let mut cnt = vec![0.0f32; dm.b];
-        for b in 0..dm.b {
-            for s in 0..dm.s {
-                let r = b * dm.s + s;
-                let row = &logits[r * dm.v..(r + 1) * dm.v];
-                let m = mask.data[r];
-                cnt[b] += m;
-                if m == 0.0 {
-                    continue;
-                }
-                let t =
-                    (targets[r].max(0) as usize).min(dm.v - 1);
-                nll[b] -= log_softmax_at(row, t) * m;
-            }
-        }
+        kernels::seq_nll(
+            &mut nll, &mut cnt, logits, targets, &mask.data, dm.b,
+            dm.s, dm.v,
+        );
         Ok((nll, cnt))
     }
 
-    /// Mean masked loss and its logits cotangent.
+    /// Mean masked loss and its logits cotangent, tile-parallel in
+    /// the kernel layer.
     fn loss_and_dlogits(
         &self,
         logits: &[f32],
@@ -1254,28 +1073,11 @@ impl<'a> Model<'a> {
         let mask = self.f32_in("mask")?;
         let total: f32 = mask.data.iter().sum();
         let c = total.max(1.0);
-        let mut loss = 0.0f32;
         let mut dl = self.pool.zeroed(rows * dm.v);
-        for r in 0..rows {
-            let m = mask.data[r];
-            let row = &logits[r * dm.v..(r + 1) * dm.v];
-            let t = (targets[r].max(0) as usize).min(dm.v - 1);
-            if m == 0.0 {
-                continue;
-            }
-            let mx =
-                row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut z = 0.0f32;
-            for &v in row {
-                z += (v - mx).exp();
-            }
-            loss -= (row[t] - mx - z.ln()) * m / c;
-            let drow = &mut dl[r * dm.v..(r + 1) * dm.v];
-            for (j, &v) in row.iter().enumerate() {
-                drow[j] = (v - mx).exp() / z * m / c;
-            }
-            drow[t] -= m / c;
-        }
+        let loss = kernels::ce_loss(
+            &mut dl, logits, targets, &mask.data, rows, dm.v, c,
+            self.pool,
+        );
         Ok((loss, dl))
     }
 
@@ -1364,19 +1166,19 @@ impl<'a> Model<'a> {
         self.pool.recycle(dlogits);
 
         let norm_f = self.f32_in("norm_f")?;
-        let (mut dx, dnf) = rmsnorm_bwd(
+        let (mut dx, dnf) = self.rmsnorm_bwd_p(
             &fwd.xf,
             &norm_f.data,
             &fwd.invf,
             &dxnorm,
             rows,
             dm.d,
-            self.pool,
         );
         self.pool.recycle(dxnorm);
         if let Some(params) = &mut sinks.params {
             add_into(&mut params.get_mut("norm_f").unwrap().data, &dnf);
         }
+        self.pool.recycle(dnf);
 
         let norm1 = self.f32_in("norm1")?;
         let norm2 = self.f32_in("norm2")?;
@@ -1389,10 +1191,9 @@ impl<'a> Model<'a> {
             let ff = self.cfg.d_ff;
             let mut dgate = self.pool.zeroed(rows * ff);
             let mut dup = self.pool.zeroed(rows * ff);
-            for i in 0..rows * ff {
-                dgate[i] = dmlp[i] * c.up[i] * dsilu(c.gate[i]);
-                dup[i] = dmlp[i] * silu(c.gate[i]);
-            }
+            kernels::dsilu_mul(
+                &mut dgate, &mut dup, &dmlp, &c.gate, &c.up,
+            );
             self.pool.recycle(dmlp);
             let mut dh2 =
                 self.lin_bwd(l, "wup", &c.h2, rows, &dup, &mut sinks)?;
@@ -1402,14 +1203,13 @@ impl<'a> Model<'a> {
             self.pool.recycle(dh2b);
             self.pool.recycle(dgate);
             self.pool.recycle(dup);
-            let (dxm, dn2) = rmsnorm_bwd(
+            let (dxm, dn2) = self.rmsnorm_bwd_p(
                 &c.x_mid,
                 &norm2.data[l * dm.d..(l + 1) * dm.d],
                 &c.inv2,
                 &dh2,
                 rows,
                 dm.d,
-                self.pool,
             );
             self.pool.recycle(dh2);
             add_into(&mut dx_mid, &dxm);
@@ -1421,13 +1221,22 @@ impl<'a> Model<'a> {
                     &dn2,
                 );
             }
+            self.pool.recycle(dn2);
             // x_mid = x_in + wo(att)
             let datt = self
                 .lin_bwd(l, "wo", &c.att, rows, &dx_mid, &mut sinks)?;
             let mut dx_in = dx_mid;
-            let (dq, dk, dv) =
-                self.attention_bwd(&datt, c, (&fwd.cos, &fwd.sin));
+            let sh = self.attn_shape();
+            let mut dq = self.pool.zeroed(rows * dm.d);
+            let mut dk = self.pool.zeroed(rows * dm.d);
+            let mut dv = self.pool.zeroed(rows * dm.d);
+            kernels::attention_bwd(
+                &mut dq, &mut dk, &mut dv, &datt, &c.probs, &c.qh,
+                &c.kh, &c.vh, sh, self.pool,
+            );
             self.pool.recycle(datt);
+            kernels::rope_apply(&mut dq, sh, &fwd.cos, &fwd.sin, true);
+            kernels::rope_apply(&mut dk, sh, &fwd.cos, &fwd.sin, true);
             let mut dhp =
                 self.lin_bwd(l, "wq", &c.h, rows, &dq, &mut sinks)?;
             let dhk =
@@ -1439,14 +1248,13 @@ impl<'a> Model<'a> {
             for v in [dq, dk, dv, dhk, dhv] {
                 self.pool.recycle(v);
             }
-            let (dxi, dn1) = rmsnorm_bwd(
+            let (dxi, dn1) = self.rmsnorm_bwd_p(
                 &c.x_in,
                 &norm1.data[l * dm.d..(l + 1) * dm.d],
                 &c.inv1,
                 &dhp,
                 rows,
                 dm.d,
-                self.pool,
             );
             self.pool.recycle(dhp);
             add_into(&mut dx_in, &dxi);
@@ -1458,6 +1266,7 @@ impl<'a> Model<'a> {
                     &dn1,
                 );
             }
+            self.pool.recycle(dn1);
             dx = dx_in;
         }
 
@@ -1475,15 +1284,6 @@ impl<'a> Model<'a> {
         self.pool.recycle(dx);
         Ok(sinks)
     }
-}
-
-fn log_softmax_at(row: &[f32], t: usize) -> f32 {
-    let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut z = 0.0f32;
-    for &v in row {
-        z += (v - mx).exp();
-    }
-    row[t] - mx - z.ln()
 }
 
 #[cfg(test)]

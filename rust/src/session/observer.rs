@@ -62,8 +62,12 @@ pub struct ExecEvent {
     pub artifact: String,
     /// executions during this step
     pub calls: u64,
-    /// wall-clock seconds spent inside the executor
+    /// wall-clock seconds spent inside the executor's execute phase
     pub secs: f64,
+    /// wall-clock seconds spent binding inputs (host→device)
+    pub upload_secs: f64,
+    /// wall-clock seconds spent materialising outputs (device→host)
+    pub download_secs: f64,
     /// re-uploads of static bindings (0 on a healthy hot path)
     pub static_uploads: u64,
     /// per-step uploads (batch tensors, subnet deltas, …)
@@ -298,6 +302,8 @@ impl Observer for ExecProfileObserver {
             });
         p.calls += ev.calls;
         p.total_secs += ev.secs;
+        p.upload_secs += ev.upload_secs;
+        p.download_secs += ev.download_secs;
         p.static_uploads += ev.static_uploads;
         p.step_uploads += ev.step_uploads;
         p.downloads += ev.downloads;

@@ -23,8 +23,13 @@ use crate::util::json::{self, Json};
 pub struct ExecProfile {
     pub artifact: String,
     pub calls: u64,
+    /// execute-phase wall time (transfers are the two fields below)
     pub total_secs: f64,
     pub mean_secs: f64,
+    /// host→device bind-phase wall time
+    pub upload_secs: f64,
+    /// device→host download-phase wall time
+    pub download_secs: f64,
     /// re-uploads of static bindings (frozen params/indices); 0
     /// between LoSiA relocalizations by design
     pub static_uploads: u64,
@@ -43,6 +48,11 @@ impl ExecProfile {
         m.insert("calls".into(), Json::Num(self.calls as f64));
         m.insert("total_secs".into(), Json::Num(self.total_secs));
         m.insert("mean_secs".into(), Json::Num(self.mean_secs));
+        m.insert("upload_secs".into(), Json::Num(self.upload_secs));
+        m.insert(
+            "download_secs".into(),
+            Json::Num(self.download_secs),
+        );
         m.insert(
             "static_uploads".into(),
             Json::Num(self.static_uploads as f64),
@@ -65,6 +75,11 @@ impl ExecProfile {
             calls: get_u64(j, "calls")?,
             total_secs: get_num(j, "total_secs")?,
             mean_secs: get_num(j, "mean_secs")?,
+            // reports written before the phase-timing split (PR 5)
+            // lack the wall-time keys — they read as zero, like the
+            // PR 4 download-split precedent below
+            upload_secs: get_num_or_zero(j, "upload_secs")?,
+            download_secs: get_num_or_zero(j, "download_secs")?,
             static_uploads: get_u64(j, "static_uploads")?,
             step_uploads: get_u64(j, "step_uploads")?,
             // reports written before the download split lack the keys
@@ -76,12 +91,15 @@ impl ExecProfile {
     /// One-line human summary (`losia info --report` / table16).
     pub fn summary_line(&self) -> String {
         format!(
-            "{}: {} calls, {:.3} ms/call ({:.3}s total), uploads \
-             static {} / per-step {}, downloads {} ({:.1} KB)",
+            "{}: {} calls, {:.3} ms/call ({:.3}s exec, {:.3}s upl, \
+             {:.3}s dl), uploads static {} / per-step {}, downloads \
+             {} ({:.1} KB)",
             self.artifact,
             self.calls,
             self.mean_secs * 1e3,
             self.total_secs,
+            self.upload_secs,
+            self.download_secs,
             self.static_uploads,
             self.step_uploads,
             self.downloads,
@@ -195,6 +213,15 @@ fn get_u64_or_zero(j: &Json, key: &str) -> Result<u64> {
     match j.get(key) {
         None | Some(Json::Null) => Ok(0),
         Some(_) => get_u64(j, key),
+    }
+}
+
+/// [`get_u64_or_zero`]'s float twin, for wall-time fields newer than
+/// the report being parsed (the phase-timing split).
+fn get_num_or_zero(j: &Json, key: &str) -> Result<f64> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(0.0),
+        Some(_) => get_num(j, key),
     }
 }
 
@@ -499,12 +526,45 @@ mod tests {
                 calls: 3,
                 total_secs: 0.75,
                 mean_secs: 0.25,
+                upload_secs: 0.125,
+                download_secs: 0.0625,
                 static_uploads: 27,
                 step_uploads: 36,
                 downloads: 21,
                 download_bytes: 5376,
             }],
         }
+    }
+
+    #[test]
+    fn pre_phase_timing_reports_read_zero_wall_times() {
+        // Reports serialized before the upload/execute/download phase
+        // split (and before the PR 4 download split) must still
+        // deserialize, with the missing fields defaulting to 0 — the
+        // bench-trajectory tooling diffs reports across PRs.
+        let mut r = sample();
+        let s = r.to_json_string();
+        // keys serialize alphabetically: upload_secs is last in the
+        // exec object (leading comma), the others carry trailing ones
+        let stripped = s
+            .replace(",\"upload_secs\":0.125", "")
+            .replace("\"download_secs\":0.0625,", "")
+            .replace("\"downloads\":21,", "")
+            .replace("\"download_bytes\":5376,", "");
+        assert!(
+            !stripped.contains("upload_secs"),
+            "old-report fixture still has the new key: {stripped}"
+        );
+        let back = RunReport::from_json_str(&stripped).unwrap();
+        r.exec[0].upload_secs = 0.0;
+        r.exec[0].download_secs = 0.0;
+        r.exec[0].downloads = 0;
+        r.exec[0].download_bytes = 0;
+        assert_eq!(r, back);
+        // and the zero-filled form round-trips stably from here on
+        let again =
+            RunReport::from_json_str(&back.to_json_string()).unwrap();
+        assert_eq!(back, again);
     }
 
     #[test]

@@ -106,6 +106,27 @@ pub fn f(x: f64, decimals: usize) -> String {
     format!("{x:.decimals$}")
 }
 
+/// Write a machine-readable bench record to
+/// `<repo-root>/BENCH_<name>.json` — the perf-trajectory artifact CI
+/// uploads per run so bench numbers can be diffed PR-over-PR without
+/// scraping stdout tables. The repo root is resolved from the crate
+/// manifest dir, so benches land the file in the same place from any
+/// working directory.
+pub fn write_bench_json(name: &str, j: &crate::util::json::Json) {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| Path::new(".").to_path_buf());
+    let path = root.join(format!("BENCH_{name}.json"));
+    match fs::write(&path, j.to_string()) {
+        Ok(()) => println!("[bench-json] {}", path.display()),
+        Err(e) => eprintln!(
+            "[bench-json] failed to write {}: {e}",
+            path.display()
+        ),
+    }
+}
+
 /// Write a generic CSV series (e.g. loss curves) to results/.
 pub fn write_series_csv(name: &str, header: &[&str], rows: &[Vec<f64>]) {
     let dir = Path::new("results");

@@ -1,0 +1,133 @@
+//! End-to-end serial-vs-parallel determinism: a full training-shaped
+//! interpreter step must produce **bitwise identical** outputs at
+//! every kernel thread count. The kernel-level parity (including
+//! ragged non-power-of-two `s`/`dh` attention shapes and the
+//! fixed-tile reductions) lives in `runtime::kernels::tests`; this
+//! file pins the same contract through the whole `RefBackend`
+//! dispatch — forward, fused attention, RMSNorm, SwiGLU, RoPE, the
+//! loss path, and every backward formula — driven through the
+//! `kernels::set_kernel_threads` budget override.
+//!
+//! The CI `ref-bench-small` lane additionally runs this binary under
+//! `LOSIA_KERNEL_THREADS=1` and `=4`, so the env-var override path is
+//! exercised at both extremes on every push.
+
+use std::sync::Mutex;
+
+use losia::config::{builtin_config, Dtype};
+use losia::runtime::{kernels, HostValue, RefBackend, Runtime};
+use losia::tensor::Tensor;
+use losia::util::rng::Rng;
+
+/// `set_kernel_threads` is process-global: tests that touch it
+/// serialize through this lock (recovering from poisoning so one
+/// failure doesn't cascade).
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+fn rt() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    // `small` is big enough that the attention/GEMM kernels genuinely
+    // fan out (the parallel floors are cleared), tiny enough for the
+    // plain test profile
+    let cfg = builtin_config("small", &dir).expect("builtin small");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+fn inputs_for(rt: &Runtime, name: &str, seed: u64) -> Vec<HostValue> {
+    let spec = rt.cfg.artifact(name).clone();
+    let mut rng = Rng::new(seed);
+    spec.inputs
+        .iter()
+        .map(|i| match i.dtype {
+            Dtype::F32 => {
+                if i.name == "mask" || i.name.starts_with("norm") {
+                    HostValue::F32(Tensor::ones(&i.shape))
+                } else {
+                    HostValue::F32(Tensor::randn(
+                        &i.shape, 0.05, &mut rng,
+                    ))
+                }
+            }
+            Dtype::I32 => {
+                let n: usize = i.shape.iter().product();
+                let data: Vec<usize> =
+                    (0..n).map(|_| rng.below(4)).collect();
+                HostValue::from_indices(&i.shape, &data)
+            }
+        })
+        .collect()
+}
+
+fn assert_outputs_bitwise_eq(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: output count");
+    for (oi, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.shape, y.shape, "{what}: output {oi} shape");
+        for (ei, (p, q)) in x.data.iter().zip(&y.data).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{what}: output {oi} element {ei} differs \
+                 ({p} vs {q}) — thread count changed the numerics"
+            );
+        }
+    }
+}
+
+#[test]
+fn full_training_step_is_bitwise_identical_across_thread_counts() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = rt();
+    let exe = rt.load("grads_full").unwrap();
+    let inputs = inputs_for(&rt, "grads_full", 5);
+    kernels::set_kernel_threads(1);
+    let serial = exe.run(&inputs).unwrap();
+    for threads in [2, 3, 8] {
+        kernels::set_kernel_threads(threads);
+        let par = exe.run(&inputs).unwrap();
+        assert_outputs_bitwise_eq(
+            &serial,
+            &par,
+            &format!("grads_full @ {threads} threads"),
+        );
+    }
+    kernels::set_kernel_threads(0);
+}
+
+#[test]
+fn eval_loss_path_is_bitwise_identical_across_thread_counts() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = rt();
+    for artifact in ["fwd_loss", "fwd_logits"] {
+        let exe = rt.load(artifact).unwrap();
+        let inputs = inputs_for(&rt, artifact, 11);
+        kernels::set_kernel_threads(1);
+        let serial = exe.run(&inputs).unwrap();
+        kernels::set_kernel_threads(6);
+        let par = exe.run(&inputs).unwrap();
+        assert_outputs_bitwise_eq(&serial, &par, artifact);
+    }
+    kernels::set_kernel_threads(0);
+}
+
+#[test]
+fn kernel_threads_respects_env_and_runtime_override() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    // runtime override wins over everything…
+    kernels::set_kernel_threads(3);
+    assert_eq!(kernels::kernel_threads(), 3);
+    kernels::set_kernel_threads(0);
+    // …and with it cleared, the env var (when set — the CI parity
+    // lanes set 1 and 4) decides; otherwise available_parallelism
+    match std::env::var("LOSIA_KERNEL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        Some(n) => {
+            assert_eq!(kernels::kernel_threads(), n.max(1))
+        }
+        None => assert!(kernels::kernel_threads() >= 1),
+    }
+}
