@@ -85,10 +85,10 @@ path = "../examples/perfprobe.rs"
 EOF
 
 for b in fig2_gradstruct fig5_overheads fig6_losscurves fig7_selection \
-         fig8_intruder kernels_micro table11_rankfactor table14_memory \
-         table16_latency table1_domain table2_commonsense \
-         table3_ablations table4_timeslot table5_continual \
-         table6_gradmass; do
+         fig8_intruder kernels_micro serve_load table11_rankfactor \
+         table14_memory table16_latency table1_domain \
+         table2_commonsense table3_ablations table4_timeslot \
+         table5_continual table6_gradmass; do
   printf '\n[[bench]]\nname = "%s"\npath = "benches/%s.rs"\nharness = false\n' \
     "$b" "$b" >> Cargo.toml
 done

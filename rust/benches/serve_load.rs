@@ -1,0 +1,132 @@
+//! Serving bench: deterministic synthetic multi-tenant load through
+//! the KV-cached decode path (`serve::run_load`).
+//!
+//! What the numbers pin:
+//!
+//! * **flat per-token decode latency** — `mean_latency_by_index_ns`
+//!   must not grow with the token index (the KV cache makes a step
+//!   O(prefix) attention + O(1) linears, vs the full re-run's
+//!   O(prefix²) growth);
+//! * **throughput + latency percentiles** for ≥ 4 concurrent tenants
+//!   sharing one backbone;
+//! * **0 backbone re-uploads** across all adapter hot-swaps — tenant
+//!   deltas ride per-step traffic only.
+//!
+//! Results land as a stdout table and `BENCH_serve.json` at the repo
+//! root (the artifact the CI `serve-bench` lane uploads).
+//! `LOSIA_BENCH_CONFIG` picks the builtin config (default `small`);
+//! `LOSIA_SERVE_TENANTS` / `LOSIA_SERVE_REQUESTS` /
+//! `LOSIA_SERVE_MAX_NEW` resize the load.
+
+use std::collections::BTreeMap;
+
+use losia::serve::{run_load, serve_runtime, LoadSpec};
+use losia::util::json::Json;
+use losia::util::table::{f, write_bench_json, Table};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let cfg_name = std::env::var("LOSIA_BENCH_CONFIG")
+        .unwrap_or_else(|_| "small".into());
+    let rt = serve_runtime(&cfg_name).expect("builtin bench config");
+    let spec = LoadSpec {
+        tenants: env_usize("LOSIA_SERVE_TENANTS", 4),
+        requests: env_usize("LOSIA_SERVE_REQUESTS", 16),
+        prompt_len: env_usize("LOSIA_SERVE_PROMPT_LEN", 8),
+        max_new: env_usize("LOSIA_SERVE_MAX_NEW", 16),
+        seed: 7,
+    };
+    let rep = run_load(&rt, &spec).expect("serve load run");
+    for w in &rep.warnings {
+        eprintln!("[warn] {w}");
+    }
+    let m = &rep.metrics;
+
+    let mut t = Table::new(
+        &format!(
+            "serve_load — {} config, {} tenants, {} requests",
+            rt.cfg.name, spec.tenants, spec.requests
+        ),
+        &["metric", "value"],
+    );
+    t.rowv(vec!["tokens generated".into(), m.tokens.to_string()]);
+    t.rowv(vec!["decode steps".into(), m.ticks.to_string()]);
+    t.rowv(vec!["adapter swaps".into(), m.swaps.to_string()]);
+    t.rowv(vec![
+        "backbone uploads".into(),
+        m.backbone_uploads.to_string(),
+    ]);
+    t.rowv(vec![
+        "throughput tok/s".into(),
+        f(m.throughput_tok_per_s, 1),
+    ]);
+    t.rowv(vec![
+        "token latency p50 µs".into(),
+        (m.p50_ns / 1_000).to_string(),
+    ]);
+    t.rowv(vec![
+        "token latency p90 µs".into(),
+        (m.p90_ns / 1_000).to_string(),
+    ]);
+    t.rowv(vec![
+        "token latency p99 µs".into(),
+        (m.p99_ns / 1_000).to_string(),
+    ]);
+    // the flatness evidence: early-index vs late-index mean latency
+    let lat = &m.mean_latency_by_index_ns;
+    if lat.len() >= 4 {
+        let half = lat.len() / 2;
+        let mean = |xs: &[u64]| {
+            xs.iter().sum::<u64>() as f64 / xs.len().max(1) as f64
+        };
+        let (early, late) = (mean(&lat[..half]), mean(&lat[half..]));
+        t.rowv(vec![
+            "late/early token latency".into(),
+            format!("{:.2}×", late / early.max(1.0)),
+        ]);
+    }
+    t.print();
+    t.write_csv("serve_load");
+
+    // the 0-backbone-uploads claim must hold in the artifact itself
+    assert_eq!(
+        m.backbone_uploads, 0,
+        "delta-adapter serving re-uploaded the backbone"
+    );
+
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(rt.cfg.name.clone()));
+    j.insert("tenants".into(), Json::Num(spec.tenants as f64));
+    j.insert("requests".into(), Json::Num(m.requests as f64));
+    j.insert("tokens".into(), Json::Num(m.tokens as f64));
+    j.insert("decode_steps".into(), Json::Num(m.ticks as f64));
+    j.insert("swaps".into(), Json::Num(m.swaps as f64));
+    j.insert(
+        "backbone_uploads".into(),
+        Json::Num(m.backbone_uploads as f64),
+    );
+    j.insert("wall_ns".into(), Json::Num(m.wall_ns as f64));
+    j.insert(
+        "throughput_tok_per_s".into(),
+        Json::Num(m.throughput_tok_per_s),
+    );
+    j.insert("p50_ns".into(), Json::Num(m.p50_ns as f64));
+    j.insert("p90_ns".into(), Json::Num(m.p90_ns as f64));
+    j.insert("p99_ns".into(), Json::Num(m.p99_ns as f64));
+    j.insert(
+        "mean_latency_by_index_ns".into(),
+        Json::Arr(
+            m.mean_latency_by_index_ns
+                .iter()
+                .map(|&x| Json::Num(x as f64))
+                .collect(),
+        ),
+    );
+    write_bench_json("serve", &Json::Obj(j));
+}

@@ -381,6 +381,7 @@ pub fn builtin_config(name: &str, artifacts_dir: &Path) -> Result<ModelCfg> {
     let full_set = [
         "fwd_logits",
         "fwd_loss",
+        "fwd_decode",
         "grads_full",
         "grads_losia",
         "grads_probe",
@@ -394,6 +395,7 @@ pub fn builtin_config(name: &str, artifacts_dir: &Path) -> Result<ModelCfg> {
     let big_set = [
         "fwd_logits",
         "fwd_loss",
+        "fwd_decode",
         "grads_losia_remat",
         "grads_probe",
         "grads_lora_remat",
@@ -414,6 +416,28 @@ pub fn builtin_config(name: &str, artifacts_dir: &Path) -> Result<ModelCfg> {
                 "fwd_loss" => (
                     pio.iter().cloned().chain(bio.clone()).collect(),
                     vec![f32s("nll", &[batch]), f32s("cnt", &[batch])],
+                ),
+                // KV-cached incremental decode step (serving path).
+                // Backbone params are the only static-eligible inputs;
+                // every adapter tensor is a per-step binding so tenant
+                // hot-swaps never re-upload the frozen backbone.
+                // `tokens` packs each row's new tokens at the row head,
+                // `lens` counts them (0 = row inactive this step) and
+                // `reset` clears a row's cache before appending.
+                "fwd_decode" => (
+                    pio.iter()
+                        .cloned()
+                        .chain(dio.clone())
+                        .chain(iio.clone())
+                        .chain(lora_io(false))
+                        .chain([
+                            i32s("adapter_mode", &[]),
+                            i32s("tokens", &[batch, seq_len]),
+                            i32s("lens", &[batch]),
+                            i32s("reset", &[batch]),
+                        ])
+                        .collect(),
+                    vec![f32s("logits", &[batch, v])],
                 ),
                 "grads_full" => (
                     pio.iter().cloned().chain(bio.clone()).collect(),
@@ -721,11 +745,16 @@ mod tests {
                     "{name}/{art}: outputs"
                 );
             }
-            assert_eq!(
-                m.artifacts.len(),
-                b.artifacts.len(),
-                "{name}: artifact set"
-            );
+            // The builtin zoo may carry reference-only artifacts the
+            // XLA lowering doesn't emit (the interpreted decode path);
+            // anything else builtin-only is a drift bug.
+            for art in b.artifacts.keys() {
+                assert!(
+                    m.artifacts.contains_key(art)
+                        || art == "fwd_decode",
+                    "{name}: builtin-only artifact {art}"
+                );
+            }
         }
     }
 

@@ -1,8 +1,12 @@
 //! Generation-based evaluation: greedy decoding for exact-match
 //! accuracy (GSM8K-style) and temperature sampling for Pass@k
-//! (MBPP-style). Decoding re-runs the full forward per emitted token —
-//! fine at these sequence lengths and keeps one artifact for
-//! everything.
+//! (MBPP-style). When the config carries the `fwd_decode` artifact
+//! (every builtin does), decoding runs KV-cached: the prompt prefills
+//! once and each emitted token costs one incremental step instead of a
+//! full-grid forward. Lowered manifests without `fwd_decode` fall back
+//! to the historical full re-run per token — both paths produce
+//! bitwise-identical logits (pinned by `tests/serve_parity.rs`), so
+//! scores don't depend on which engine served them.
 
 use anyhow::Result;
 
@@ -10,32 +14,55 @@ use crate::coordinator::state::ModelState;
 use crate::data::vocab::{BOS, EOS, PAD};
 use crate::data::EvalItem;
 use crate::runtime::{ExecPlan, Runtime};
-use crate::tensor::select::{argmax, softmax};
+use crate::serve::{AdapterBinding, Decoder};
+use crate::tensor::select::{argmax, sample_multinomial, softmax};
 use crate::util::rng::Rng;
+use crate::util::warn::warn;
+
+/// Which forward serves the decode loop.
+enum Engine<'rt> {
+    /// KV-cached incremental decode (`fwd_decode`), backbone static,
+    /// plain (no-adapter) binding per step.
+    Decode {
+        dec: Decoder<'rt>,
+        plain: AdapterBinding,
+    },
+    /// Full-grid `fwd_logits` re-run per emitted token — the fallback
+    /// when a lowered manifest predates the decode artifact.
+    Grid { plan: ExecPlan },
+}
 
 /// Decode up to `max_new` tokens after the prompt for a batch of
 /// prompts. temperature = 0 → greedy. A `Generator` is one decoding
 /// pass over one model state: parameters are bound (and uploaded)
 /// once at construction, so across every `generate` call of the pass
-/// only the token grid re-uploads per emitted token.
+/// only the per-step token controls re-upload.
 pub struct Generator<'rt> {
     rt: &'rt Runtime,
-    plan: ExecPlan,
+    engine: Engine<'rt>,
 }
 
 impl<'rt> Generator<'rt> {
     pub fn new(rt: &'rt Runtime, state: &ModelState) -> Result<Self> {
-        let exe = rt.load("fwd_logits")?;
-        // fwd_logits wants only params + tokens; params upload once
-        let param_names: Vec<&str> = rt
-            .cfg
-            .params
-            .iter()
-            .map(|(n, _)| n.as_str())
-            .collect();
-        let mut plan = ExecPlan::new(exe, &param_names)?;
-        plan.bind_params(state)?;
-        Ok(Generator { rt, plan })
+        let engine = if rt.cfg.has_artifact("fwd_decode") {
+            Engine::Decode {
+                dec: Decoder::new(rt, state)?,
+                plain: AdapterBinding::plain(&rt.cfg),
+            }
+        } else {
+            let exe = rt.load("fwd_logits")?;
+            // fwd_logits wants only params + tokens; params upload once
+            let param_names: Vec<&str> = rt
+                .cfg
+                .params
+                .iter()
+                .map(|(n, _)| n.as_str())
+                .collect();
+            let mut plan = ExecPlan::new(exe, &param_names)?;
+            plan.bind_params(state)?;
+            Engine::Grid { plan }
+        };
+        Ok(Generator { rt, engine })
     }
 
     /// Generate continuations for up to `batch` prompts at once.
@@ -77,35 +104,81 @@ impl<'rt> Generator<'rt> {
             .collect();
         let mut outs: Vec<Vec<u32>> =
             vec![Vec::new(); prompts.len()];
+        if let Engine::Decode { dec, .. } = &mut self.engine {
+            // each generate() call is a fresh pass over fresh prompts
+            dec.clear_cache();
+        }
+        let mut primed = vec![false; prompts.len()];
 
         for _ in 0..max_new {
             if done.iter().all(|&d| d) {
                 break;
             }
-            // pack current sequences
-            let mut tokens = vec![PAD as i32; b * s];
-            for (i, seq) in seqs.iter().enumerate() {
-                for (t, &tok) in seq.iter().enumerate() {
-                    tokens[i * s + t] = tok as i32;
+            // pack the still-active rows; finished rows stay idle
+            // (lens 0 / PAD) so they cost nothing and can't perturb
+            // their neighbours (rows are independent in the batch dim)
+            let logits = match &mut self.engine {
+                Engine::Decode { dec, plain } => {
+                    let mut tokens = vec![PAD as i32; b * s];
+                    let mut lens = vec![0i32; b];
+                    let mut reset = vec![0i32; b];
+                    for (i, seq) in seqs.iter().enumerate() {
+                        if done[i] {
+                            continue;
+                        }
+                        if primed[i] {
+                            tokens[i * s] =
+                                *seq.last().unwrap() as i32;
+                            lens[i] = 1;
+                        } else {
+                            for (t, &tok) in seq.iter().enumerate()
+                            {
+                                tokens[i * s + t] = tok as i32;
+                            }
+                            lens[i] = seq.len() as i32;
+                            reset[i] = 1;
+                        }
+                    }
+                    dec.step(plain, &tokens, &lens, &reset)? // [B, V]
                 }
-            }
-            self.plan.bind_i32("tokens", &[b, s], &tokens)?;
-            let logits = self
-                .plan
-                .run()?
-                .into_iter()
-                .next()
-                .ok_or_else(|| {
-                    anyhow::anyhow!("fwd_logits emitted no outputs")
-                })?
-                .into_host()?; // [B, S, V]
+                Engine::Grid { plan } => {
+                    let mut tokens = vec![PAD as i32; b * s];
+                    for (i, seq) in seqs.iter().enumerate() {
+                        if done[i] {
+                            continue;
+                        }
+                        for (t, &tok) in seq.iter().enumerate() {
+                            tokens[i * s + t] = tok as i32;
+                        }
+                    }
+                    plan.bind_i32("tokens", &[b, s], &tokens)?;
+                    plan.run()?
+                        .into_iter()
+                        .next()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "fwd_logits emitted no outputs"
+                            )
+                        })?
+                        .into_host()? // [B, S, V]
+                }
+            };
             for i in 0..prompts.len() {
                 if done[i] {
                     continue;
                 }
-                let pos = seqs[i].len() - 1;
-                let row =
-                    &logits.data[(i * s + pos) * v..(i * s + pos + 1) * v];
+                primed[i] = true;
+                let row = match &self.engine {
+                    // decode output is already last-position-only
+                    Engine::Decode { .. } => {
+                        &logits.data[i * v..(i + 1) * v]
+                    }
+                    Engine::Grid { .. } => {
+                        let pos = seqs[i].len() - 1;
+                        &logits.data
+                            [(i * s + pos) * v..(i * s + pos + 1) * v]
+                    }
+                };
                 let next = if temperature <= 0.0 {
                     argmax(row) as u32
                 } else {
@@ -130,15 +203,7 @@ impl<'rt> Generator<'rt> {
 }
 
 fn sample(probs: &[f32], rng: &mut Rng) -> usize {
-    let u = rng.uniform();
-    let mut acc = 0.0f32;
-    for (i, &p) in probs.iter().enumerate() {
-        acc += p;
-        if u < acc {
-            return i;
-        }
-    }
-    probs.len() - 1
+    sample_multinomial(probs, rng.uniform())
 }
 
 /// The reference answer of an eval item, as a typed error instead of
@@ -173,15 +238,15 @@ pub fn generate_accuracy(
     for item in items {
         match reference_option(item) {
             // BOS + prompt + at least one generated token must fit
-            Ok(_) if 1 + item.prompt.len() >= s => eprintln!(
+            Ok(_) if 1 + item.prompt.len() >= s => warn(format!(
                 "[eval] prompt of {} tokens cannot fit seq_len {s}; \
                  scored incorrect",
                 item.prompt.len()
-            ),
+            )),
             Ok(want) => scorable.push((item, want)),
-            Err(e) => {
-                eprintln!("[eval] skipping item (scored incorrect): {e}")
-            }
+            Err(e) => warn(format!(
+                "[eval] skipping item (scored incorrect): {e}"
+            )),
         }
     }
     let mut correct = 0usize;
@@ -205,6 +270,22 @@ pub fn generate_accuracy(
     Ok(100.0 * correct as f64 / items.len().max(1) as f64)
 }
 
+/// Per-round batch sizes for drawing exactly `k` samples with batch
+/// capacity `b`: every round draws what's left, capped at `b`. The
+/// historical loop drew `b.min(k)` every round, over-sampling whenever
+/// `b < k` and `b ∤ k` (k=6, b=4 → 8 samples instead of 6) — inflating
+/// Pass@k beyond its budget.
+fn round_sizes(k: usize, b: usize) -> Vec<usize> {
+    let mut sizes = Vec::new();
+    let mut drawn = 0;
+    while drawn < k {
+        let n = b.min(k - drawn);
+        sizes.push(n);
+        drawn += n;
+    }
+    sizes
+}
+
 /// Pass@k via k temperature samples per item (MBPP protocol analogue).
 /// Malformed items score as failed instead of panicking the pass.
 pub fn pass_at_k(
@@ -224,21 +305,22 @@ pub fn pass_at_k(
         let want = match reference_option(item) {
             Ok(w) if 1 + item.prompt.len() < s => w,
             Ok(_) => {
-                eprintln!(
+                warn(format!(
                     "[eval] prompt of {} tokens cannot fit seq_len \
                      {s}; scored failed",
                     item.prompt.len()
-                );
+                ));
                 continue;
             }
             Err(e) => {
-                eprintln!("[eval] skipping item (scored failed): {e}");
+                warn(format!(
+                    "[eval] skipping item (scored failed): {e}"
+                ));
                 continue;
             }
         };
         let mut hit = false;
-        for _round in 0..k.div_ceil(b) {
-            let n = b.min(k);
+        for n in round_sizes(k, b) {
             let prompts = vec![item.prompt.clone(); n];
             let outs = gen.generate(
                 &prompts,
@@ -278,6 +360,23 @@ mod tests {
         assert!(msg.contains("2 options"), "{msg}");
         let ok = EvalItem { correct: 1, ..bad };
         assert_eq!(reference_option(&ok).unwrap(), &vec![4]);
+    }
+
+    #[test]
+    fn round_sizes_draw_exactly_k() {
+        // the regression: k=6, b=4 used to draw 4+4=8 samples
+        assert_eq!(round_sizes(6, 4), vec![4, 2]);
+        assert_eq!(round_sizes(4, 4), vec![4]);
+        assert_eq!(round_sizes(3, 8), vec![3]);
+        assert_eq!(round_sizes(9, 4), vec![4, 4, 1]);
+        assert_eq!(round_sizes(0, 4), Vec::<usize>::new());
+        for (k, b) in [(1, 1), (5, 2), (16, 4), (7, 3)] {
+            assert_eq!(
+                round_sizes(k, b).iter().sum::<usize>(),
+                k,
+                "k={k} b={b}"
+            );
+        }
     }
 
     #[test]

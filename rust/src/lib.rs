@@ -60,6 +60,7 @@ pub mod eval;
 pub mod methods;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod tensor;
 pub mod util;

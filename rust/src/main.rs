@@ -6,6 +6,8 @@
 //!             --steps 200 --lr 1e-3 --time-slot 20 \
 //!             [--save-state model.bin] [--report out.json] [--json]
 //! losia eval  --config tiny --task modmath [--state model.bin] [--no-gen]
+//! losia serve --config tiny --tenants 4 --requests 16 \
+//!             [--prompt-len N] [--max-new N] [--seed N] [--json]
 //! losia info  --config small
 //! ```
 //!
@@ -111,6 +113,73 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    use losia::serve::{run_load, serve_runtime, LoadSpec};
+    use losia::util::table::{f, Table};
+
+    let cfg_name = args.get_or("config", "tiny");
+    let rt = serve_runtime(&cfg_name)?;
+    let spec = LoadSpec {
+        tenants: args.get_usize("tenants", 4),
+        requests: args.get_usize("requests", 16),
+        prompt_len: args.get_usize("prompt-len", 8),
+        max_new: args.get_usize("max-new", 16),
+        seed: args.get_usize("seed", 7) as u64,
+    };
+    let rep = run_load(&rt, &spec)?;
+    for w in &rep.warnings {
+        eprintln!("[warn] {w}");
+    }
+    let m = &rep.metrics;
+    let mut t = Table::new(
+        &format!("serve {} — synthetic multi-tenant load", cfg_name),
+        &["metric", "value"],
+    );
+    t.rowv(vec!["requests".into(), m.requests.to_string()]);
+    t.rowv(vec!["tokens".into(), m.tokens.to_string()]);
+    t.rowv(vec!["decode steps".into(), m.ticks.to_string()]);
+    t.rowv(vec!["adapter swaps".into(), m.swaps.to_string()]);
+    t.rowv(vec![
+        "backbone uploads".into(),
+        m.backbone_uploads.to_string(),
+    ]);
+    t.rowv(vec![
+        "throughput tok/s".into(),
+        f(m.throughput_tok_per_s, 1),
+    ]);
+    t.rowv(vec![
+        "token latency p50/p90/p99 µs".into(),
+        format!(
+            "{} / {} / {}",
+            m.p50_ns / 1_000,
+            m.p90_ns / 1_000,
+            m.p99_ns / 1_000
+        ),
+    ]);
+    t.print();
+    if args.has_flag("json") {
+        use losia::util::json::Json;
+        let mut j = std::collections::BTreeMap::new();
+        j.insert("config".into(), Json::Str(cfg_name));
+        j.insert("requests".into(), Json::Num(m.requests as f64));
+        j.insert("tokens".into(), Json::Num(m.tokens as f64));
+        j.insert(
+            "throughput_tok_per_s".into(),
+            Json::Num(m.throughput_tok_per_s),
+        );
+        j.insert("p50_ns".into(), Json::Num(m.p50_ns as f64));
+        j.insert("p90_ns".into(), Json::Num(m.p90_ns as f64));
+        j.insert("p99_ns".into(), Json::Num(m.p99_ns as f64));
+        j.insert("swaps".into(), Json::Num(m.swaps as f64));
+        j.insert(
+            "backbone_uploads".into(),
+            Json::Num(m.backbone_uploads as f64),
+        );
+        println!("{}", Json::Obj(j).to_string());
+    }
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     // `losia info --report run.json` summarises a saved RunReport,
     // including the per-artifact executor stats
@@ -157,14 +226,16 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: losia <train|eval|info> [--config C] \
+                "usage: losia <train|eval|serve|info> [--config C] \
                  [--method M] [--task T] [--steps N] [--lr F] \
                  [--time-slot N] [--remat] [--state PATH] \
                  [--save-state PATH] [--report PATH] [--json] \
-                 [--backend ref|pjrt|auto]"
+                 [--backend ref|pjrt|auto] [--tenants N] \
+                 [--requests N] [--prompt-len N] [--max-new N]"
             );
             Ok(())
         }

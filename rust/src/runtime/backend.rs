@@ -318,6 +318,12 @@ pub trait DeviceBuffers {
     /// Execute over the uploaded inputs; device-resident outputs in
     /// manifest order.
     fn execute(&mut self) -> Result<Vec<Box<dyn DeviceValue>>>;
+
+    /// Drop any backend state the plan carries **between** `execute()`
+    /// calls beyond the input slots themselves (e.g. the reference
+    /// backend's decode KV cache). Default no-op: most artifacts are
+    /// pure functions of their bindings.
+    fn clear_state(&mut self) {}
 }
 
 /// One compiled (PJRT) or interpreted (reference) artifact.
@@ -643,6 +649,13 @@ impl ExecPlan {
         );
         self.donated[i] = true;
         self.bufs.donate(i)
+    }
+
+    /// Drop any cross-step backend state this plan carries (a decode
+    /// plan's KV cache). Bindings are untouched: statics stay bound,
+    /// per-step slots still follow the consume-on-run contract.
+    pub fn clear_state(&mut self) {
+        self.bufs.clear_state();
     }
 
     /// Upload one named input. Static slots persist until re-bound;

@@ -1314,6 +1314,105 @@ pub fn attention_fwd_threads(
     pool.recycle(attu);
 }
 
+/// One query row of incremental-decode attention for a single
+/// `(batch, head)` unit: the new token at absolute position `i`,
+/// scored against the cached prefix rows `0..=i` of `k`/`v`. This is
+/// the row body of [`attn_fwd_unit`] verbatim (same dot-product
+/// accumulation order, same max-subtracted softmax over the causal
+/// prefix, same skip of underflowed probabilities) minus the `probs`
+/// residual no decode consumer needs — so a token decoded against the
+/// KV cache is bitwise identical to the same row of a full-grid
+/// [`attention_fwd`] (`tests/serve_parity.rs` pins this). `att` is
+/// the `dh`-wide output row (must be zeroed), `q` the new query row,
+/// `k`/`v` the unit's `[s, dh]` cache slices, `scores` a scratch row
+/// of at least `i + 1` entries.
+pub fn attn_decode_row(
+    att: &mut [f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    scores: &mut [f32],
+    i: usize,
+    dh: usize,
+    scale: f32,
+) {
+    debug_assert_eq!(att.len(), dh);
+    debug_assert_eq!(q.len(), dh);
+    debug_assert!((i + 1) * dh <= k.len());
+    debug_assert!((i + 1) * dh <= v.len());
+    debug_assert!(i < scores.len());
+    let mut mx = f32::NEG_INFINITY;
+    for j in 0..=i {
+        let krow = &k[j * dh..(j + 1) * dh];
+        let mut acc = 0.0f32;
+        for e in 0..dh {
+            acc += q[e] * krow[e];
+        }
+        let sc = acc * scale;
+        scores[j] = sc;
+        mx = mx.max(sc);
+    }
+    let mut z = 0.0f32;
+    for j in 0..=i {
+        let e = (scores[j] - mx).exp();
+        scores[j] = e;
+        z += e;
+    }
+    for j in 0..=i {
+        let p = scores[j] / z;
+        if p == 0.0 {
+            continue;
+        }
+        let vrow = &v[j * dh..(j + 1) * dh];
+        for e in 0..dh {
+            att[e] += p * vrow[e];
+        }
+    }
+}
+
+/// Apply RoPE to head-interleaved rows (`[rows, H·Dh]`) at explicit
+/// absolute positions `pos[r]` — the incremental-decode variant of
+/// [`rope_apply`], whose grid form derives each row's position from
+/// its index inside the `[B, S]` grid. The per-element rotation is
+/// the same expression, so a decode row at position `p` matches row
+/// `p` of the full-grid application bitwise. `cos`/`sin` are
+/// `[S, Dh/2]` tables covering every referenced position.
+pub fn rope_apply_at(
+    x: &mut [f32],
+    h: usize,
+    dh: usize,
+    pos: &[usize],
+    cos: &[f32],
+    sin: &[f32],
+) {
+    let d = h * dh;
+    let rows = pos.len();
+    let half = dh / 2;
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(cos.len(), sin.len());
+    let t =
+        effective_map_threads(kernel_threads(), rows, rows * d * 2);
+    for_row_chunks(t, x, rows, d, &|row0, chunk| {
+        for (r, xrow) in chunk.chunks_mut(d).enumerate() {
+            let p = pos[row0 + r];
+            debug_assert!((p + 1) * half <= cos.len());
+            for hh in 0..h {
+                let base = hh * dh;
+                for e in 0..half {
+                    let c = cos[p * half + e];
+                    let s = sin[p * half + e];
+                    let x1 = xrow[base + e];
+                    let x2 = xrow[base + half + e];
+                    let (n1, n2) =
+                        (x1 * c - x2 * s, x1 * s + x2 * c);
+                    xrow[base + e] = n1;
+                    xrow[base + half + e] = n2;
+                }
+            }
+        }
+    });
+}
+
 /// Fused causal attention backward, parallel over `(batch, head)`
 /// units. `datt` is the head-interleaved upstream cotangent
 /// `[B, S, H·Dh]` (packed unit-major internally); `probs`/`q`/`k`/`v`

@@ -64,12 +64,14 @@ impl Backend for RefBackend {
 fn base_name(name: &str) -> Result<&str> {
     let base = name.strip_suffix("_remat").unwrap_or(name);
     match base {
-        "fwd_logits" | "fwd_loss" | "grads_full" | "grads_probe"
-        | "grads_losia" | "grads_lora" | "grads_dora" => Ok(base),
+        "fwd_logits" | "fwd_loss" | "fwd_decode" | "grads_full"
+        | "grads_probe" | "grads_losia" | "grads_lora"
+        | "grads_dora" => Ok(base),
         other => bail!(
             "reference backend: unknown artifact {other:?} \
-             (knows fwd_logits, fwd_loss, grads_full, grads_probe, \
-             grads_losia, grads_lora, grads_dora and _remat variants)"
+             (knows fwd_logits, fwd_loss, fwd_decode, grads_full, \
+             grads_probe, grads_losia, grads_lora, grads_dora and \
+             _remat variants)"
         ),
     }
 }
@@ -88,6 +90,7 @@ impl Executor for RefExecutor {
             slots,
             donated: vec![false; self.spec.inputs.len()],
             pool: Pool::new(),
+            decode: None,
         })
     }
 }
@@ -127,6 +130,10 @@ struct RefBuffers {
     slots: Vec<Option<Arc<HostValue>>>,
     donated: Vec<bool>,
     pool: Pool,
+    /// KV cache for the `fwd_decode` artifact, carried across
+    /// `execute()` calls for the lifetime of the owning plan. `None`
+    /// for every other artifact and after `clear_state()`.
+    decode: Option<DecodeState>,
 }
 
 /// Overwrite `slot` in place when the incoming value matches its
@@ -186,7 +193,26 @@ impl DeviceBuffers for RefBuffers {
                 })?;
                 inputs.insert(spec.name.as_str(), v.as_ref());
             }
-            run_artifact(&self.cfg, &self.spec, &inputs, &self.pool)?
+            if base_name(&self.spec.name)? == "fwd_decode" {
+                // the decode path threads its plan-resident KV cache
+                // through; a failed step drops the cache rather than
+                // leave it half-appended
+                let r = run_decode(
+                    &self.cfg,
+                    &self.spec,
+                    &inputs,
+                    &self.pool,
+                    &mut self.decode,
+                );
+                if r.is_err() {
+                    self.decode = None;
+                }
+                r?
+            } else {
+                run_artifact(
+                    &self.cfg, &self.spec, &inputs, &self.pool,
+                )?
+            }
         };
         // reclaim donated buffers now that the compute borrow ended
         for (i, donated) in self.donated.iter().enumerate() {
@@ -203,6 +229,10 @@ impl DeviceBuffers for RefBuffers {
             .into_iter()
             .map(|t| Box::new(RefValue(t)) as Box<dyn DeviceValue>)
             .collect())
+    }
+
+    fn clear_state(&mut self) {
+        self.decode = None;
     }
 }
 
@@ -298,6 +328,16 @@ fn run_artifact(
         _ => unreachable!("base_name validated"),
     }
 
+    finish_outputs(spec, out)
+}
+
+/// Order the produced tensors per the manifest's output list,
+/// validating presence and shape — shared by the grid interpreter and
+/// the decode path.
+fn finish_outputs(
+    spec: &ArtifactSpec,
+    mut out: BTreeMap<String, Tensor>,
+) -> Result<Vec<Tensor>> {
     spec.outputs
         .iter()
         .map(|o| {
@@ -324,6 +364,259 @@ fn run_artifact(
 
 fn scalar(v: f32) -> Tensor {
     Tensor::from_vec(&[], vec![v])
+}
+
+// -------------------------------------------- incremental decode state
+
+/// Plan-resident KV cache for `fwd_decode`: per-layer K/V in the
+/// unit-major `[B, H, S, Dh]` layout the fused attention units stream
+/// (same layout `pack_heads` produces in the grid forward), a per-row
+/// fill length, and the RoPE tables (which depend only on `S`/`Dh`, so
+/// they are built once per plan instead of once per step). Lives
+/// inside [`RefBuffers`] and therefore persists exactly as long as the
+/// owning `ExecPlan` — `ExecPlan::clear_state()` (or dropping the
+/// plan) releases it.
+struct DecodeState {
+    /// cached token count per batch row
+    lens: Vec<usize>,
+    /// per-layer cached keys, unit-major `[B·H·S·Dh]`
+    kc: Vec<Vec<f32>>,
+    /// per-layer cached values, same layout
+    vc: Vec<Vec<f32>>,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+/// One incremental decode step. Each batch row appends `lens[row]` new
+/// tokens (packed at the head of its `tokens` row; `reset[row] != 0`
+/// clears the row's cache first) and the artifact returns the logits
+/// at each row's last appended position — the only row a decoder
+/// samples from. Per-token cost is O(prefix) attention plus O(1)
+/// linears, against the grid forward's O(prefix) *everything*.
+///
+/// Bitwise parity with `fwd_logits` over the same prefix
+/// (`tests/serve_parity.rs`) holds by construction: the GEMM kernels
+/// accumulate each output element k-ascending independent of the row
+/// count, RMSNorm/RoPE/SwiGLU are per-row/per-element, and
+/// `attn_decode_row` replicates the fused attention's row body against
+/// cached K/V rows that are themselves bit-identical by induction.
+fn run_decode(
+    cfg: &ModelCfg,
+    spec: &ArtifactSpec,
+    inputs: &BTreeMap<&str, &HostValue>,
+    pool: &Pool,
+    state: &mut Option<DecodeState>,
+) -> Result<Vec<Tensor>> {
+    let mut model = Model::new(cfg, inputs, "fwd_decode", pool)?;
+    let mode =
+        model.i32_in("adapter_mode")?.first().copied().unwrap_or(0);
+    model.variant = match mode {
+        0 => Variant::Plain,
+        1 => Variant::Losia,
+        2 => Variant::Lora { dora: false },
+        other => bail!(
+            "fwd_decode: adapter_mode {other} out of range \
+             (0 = plain, 1 = losia, 2 = lora)"
+        ),
+    };
+    let model = model;
+    let dm = model.dm;
+    let tokens = model.i32_in("tokens")?;
+    let lens_in = model.i32_in("lens")?;
+    let reset_in = model.i32_in("reset")?;
+
+    let st = state.get_or_insert_with(|| {
+        let (cos, sin) = rope_tables(dm.s, dm.dh, pool);
+        let unit = dm.b * dm.h * dm.s * dm.dh;
+        DecodeState {
+            lens: vec![0; dm.b],
+            kc: (0..dm.l).map(|_| vec![0.0; unit]).collect(),
+            vc: (0..dm.l).map(|_| vec![0.0; unit]).collect(),
+            cos,
+            sin,
+        }
+    });
+
+    // per-row control: resets first, then bounds-check the append
+    let mut new_lens = vec![0usize; dm.b];
+    for bi in 0..dm.b {
+        if reset_in[bi] != 0 {
+            st.lens[bi] = 0;
+        }
+        let n = lens_in[bi].max(0) as usize;
+        anyhow::ensure!(
+            st.lens[bi] + n <= dm.s,
+            "fwd_decode: row {bi} would hold {} cached tokens but \
+             seq_len is {} (reset the row or shorten the prompt)",
+            st.lens[bi] + n,
+            dm.s
+        );
+        new_lens[bi] = n;
+    }
+
+    let total: usize = new_lens.iter().sum();
+    let mut out: BTreeMap<String, Tensor> = BTreeMap::new();
+    if total == 0 {
+        // nothing appended anywhere this step: resets (if any) took
+        // effect above, logits are defined-zero for inactive rows
+        out.insert("logits".into(), Tensor::zeros(&[dm.b, dm.v]));
+        return finish_outputs(spec, out);
+    }
+
+    // ragged row bookkeeping: the compute grid holds only the new
+    // tokens, ordered by batch row then append position
+    let mut row_b = Vec::with_capacity(total);
+    let mut row_pos = Vec::with_capacity(total);
+    let mut row_tok = Vec::with_capacity(total);
+    for bi in 0..dm.b {
+        for t in 0..new_lens[bi] {
+            row_b.push(bi);
+            row_pos.push(st.lens[bi] + t);
+            row_tok.push(tokens[bi * dm.s + t]);
+        }
+    }
+
+    let embed = model.f32_in("embed")?;
+    let mut x = pool.zeroed(total * dm.d);
+    kernels::gather_rows(&mut x, &embed.data, &row_tok, dm.d, dm.v);
+
+    let norm1 = model.f32_in("norm1")?;
+    let norm2 = model.f32_in("norm2")?;
+    let mut scores = pool.zeroed(dm.s);
+    let scale = 1.0 / (dm.dh as f32).sqrt();
+    let ua = dm.s * dm.dh;
+    for l in 0..dm.l {
+        let n1 = &norm1.data[l * dm.d..(l + 1) * dm.d];
+        let n2 = &norm2.data[l * dm.d..(l + 1) * dm.d];
+        let (h, inv1) = model.rmsnorm_p(&x, n1, total, dm.d);
+        pool.recycle(inv1);
+        let mut q = model.lin_fwd(l, "wq", &h, total)?;
+        let mut k = model.lin_fwd(l, "wk", &h, total)?;
+        let v = model.lin_fwd(l, "wv", &h, total)?;
+        pool.recycle(h);
+        kernels::rope_apply_at(
+            &mut q, dm.h, dm.dh, &row_pos, &st.cos, &st.sin,
+        );
+        kernels::rope_apply_at(
+            &mut k, dm.h, dm.dh, &row_pos, &st.cos, &st.sin,
+        );
+
+        // append the new K/V rows into the unit-major cache
+        for r in 0..total {
+            let (bi, pos) = (row_b[r], row_pos[r]);
+            for hh in 0..dm.h {
+                let u = bi * dm.h + hh;
+                let src = r * dm.d + hh * dm.dh;
+                let dst = (u * dm.s + pos) * dm.dh;
+                st.kc[l][dst..dst + dm.dh]
+                    .copy_from_slice(&k[src..src + dm.dh]);
+                st.vc[l][dst..dst + dm.dh]
+                    .copy_from_slice(&v[src..src + dm.dh]);
+            }
+        }
+        pool.recycle(k);
+        pool.recycle(v);
+
+        // O(prefix) attention per new row against the cached prefix,
+        // written straight into head-interleaved layout (no unpack)
+        let mut att = pool.zeroed(total * dm.d);
+        for r in 0..total {
+            let (bi, pos) = (row_b[r], row_pos[r]);
+            for hh in 0..dm.h {
+                let u = bi * dm.h + hh;
+                let (a0, q0) =
+                    (r * dm.d + hh * dm.dh, r * dm.d + hh * dm.dh);
+                kernels::attn_decode_row(
+                    &mut att[a0..a0 + dm.dh],
+                    &q[q0..q0 + dm.dh],
+                    &st.kc[l][u * ua..(u + 1) * ua],
+                    &st.vc[l][u * ua..(u + 1) * ua],
+                    &mut scores,
+                    pos,
+                    dm.dh,
+                    scale,
+                );
+            }
+        }
+        pool.recycle(q);
+
+        let wo_out = model.lin_fwd(l, "wo", &att, total)?;
+        pool.recycle(att);
+        let mut x_mid = pool.cleared(total * dm.d);
+        x_mid.extend_from_slice(&x);
+        add_into(&mut x_mid, &wo_out);
+        pool.recycle(wo_out);
+        pool.recycle(x);
+
+        let (h2, inv2) = model.rmsnorm_p(&x_mid, n2, total, dm.d);
+        pool.recycle(inv2);
+        let gate = model.lin_fwd(l, "wgate", &h2, total)?;
+        let up = model.lin_fwd(l, "wup", &h2, total)?;
+        pool.recycle(h2);
+        let mut mlp = pool.zeroed(total * cfg.d_ff);
+        kernels::silu_mul(&mut mlp, &gate, &up);
+        pool.recycle(gate);
+        pool.recycle(up);
+        let down = model.lin_fwd(l, "wdown", &mlp, total)?;
+        pool.recycle(mlp);
+        let mut x_new = pool.cleared(total * dm.d);
+        x_new.extend_from_slice(&x_mid);
+        add_into(&mut x_new, &down);
+        pool.recycle(down);
+        pool.recycle(x_mid);
+        x = x_new;
+    }
+    pool.recycle(scores);
+
+    // commit the cache lengths only after the whole forward succeeded
+    for bi in 0..dm.b {
+        st.lens[bi] += new_lens[bi];
+    }
+
+    // lm_head only on each active row's LAST appended position — the
+    // only logits a decoder consumes
+    let active: Vec<usize> =
+        (0..dm.b).filter(|&bi| new_lens[bi] > 0).collect();
+    let na = active.len();
+    let mut offs = vec![0usize; dm.b];
+    let mut acc = 0usize;
+    for bi in 0..dm.b {
+        offs[bi] = acc;
+        acc += new_lens[bi];
+    }
+    let mut xlast = pool.zeroed(na * dm.d);
+    for (j, &bi) in active.iter().enumerate() {
+        let r = offs[bi] + new_lens[bi] - 1;
+        xlast[j * dm.d..(j + 1) * dm.d]
+            .copy_from_slice(&x[r * dm.d..(r + 1) * dm.d]);
+    }
+    pool.recycle(x);
+    let norm_f = model.f32_in("norm_f")?;
+    let (xn, invf) = model.rmsnorm_p(&xlast, &norm_f.data, na, dm.d);
+    pool.recycle(invf);
+    pool.recycle(xlast);
+    let lm_head = model.f32_in("lm_head")?;
+    let mut lrows = model.mm_p(&xn, &lm_head.data, na, dm.d, dm.v);
+    if model.variant == Variant::Losia {
+        let vs = cfg.vocab_sub;
+        let gamma = model.indices("gamma_out", 0, vs, dm.v)?;
+        let dws = model.f32_in("dws_out")?;
+        let y = model.mm_p(&xn, &dws.data, na, dm.d, vs);
+        scatter_cols(&mut lrows, na, dm.v, &gamma, &y);
+        pool.recycle(y);
+    }
+    pool.recycle(xn);
+    let mut logits = vec![0.0f32; dm.b * dm.v];
+    for (j, &bi) in active.iter().enumerate() {
+        logits[bi * dm.v..(bi + 1) * dm.v]
+            .copy_from_slice(&lrows[j * dm.v..(j + 1) * dm.v]);
+    }
+    pool.recycle(lrows);
+    out.insert(
+        "logits".into(),
+        Tensor::from_vec(&[dm.b, dm.v], logits),
+    );
+    finish_outputs(spec, out)
 }
 
 // ------------------------------------------------------ linear algebra

@@ -1,0 +1,445 @@
+//! Adapter records and their decode-ABI bindings.
+//!
+//! A tenant's fine-tuned delta arrives in one of three shapes:
+//!
+//! * **Full** — a complete `ModelState` checkpoint (`LOSIAST1`
+//!   format). Activating it replaces the frozen backbone, which is the
+//!   one swap that costs static uploads.
+//! * **LoSiA** — the subnet selection (ρ/γ per linear kind plus the
+//!   output γ) and the trained `dws` frames: exactly the compact
+//!   artifact the paper's method produces.
+//! * **LoRA** — per-kind A/B factor pairs.
+//!
+//! Compact records serialize to a `LOSIAAD1` file (same little-endian
+//! framing as the `LOSIAST1` state checkpoint, plus i32 tensors for
+//! the index vectors); [`AdapterRecord::load`] sniffs the magic so a
+//! full checkpoint and a compact adapter load through one entry point.
+//!
+//! [`AdapterBinding`] is the materialized per-step bind set for the
+//! `fwd_decode` artifact: *every* adapter input is always bound —
+//! zeros for the families the record does not use, plus the
+//! `adapter_mode` selector — so adapters ride entirely on per-step
+//! traffic and tenant hot-swaps never touch the static backbone
+//! bindings (`tests/serve_parity.rs` pins the zero-static-upload
+//! invariant).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelCfg;
+use crate::coordinator::state::ModelState;
+use crate::runtime::ExecPlan;
+use crate::tensor::Tensor;
+
+const ADAPTER_MAGIC: &[u8; 8] = b"LOSIAAD1";
+const STATE_MAGIC: &[u8; 8] = b"LOSIAST1";
+
+/// `adapter_mode` values of the `fwd_decode` ABI.
+pub const MODE_PLAIN: i32 = 0;
+pub const MODE_LOSIA: i32 = 1;
+pub const MODE_LORA: i32 = 2;
+
+/// A compact (non-full-state) adapter delta: named f32 tensors plus
+/// named i32 index tensors, keyed by their `fwd_decode` input names.
+#[derive(Debug, Clone)]
+pub struct AdapterDelta {
+    /// [`MODE_LOSIA`] or [`MODE_LORA`]
+    pub mode: i32,
+    pub f32s: Vec<(String, Tensor)>,
+    pub i32s: Vec<(String, Vec<usize>, Vec<i32>)>,
+}
+
+/// One tenant's loadable fine-tuning artifact.
+#[derive(Debug, Clone)]
+pub enum AdapterRecord {
+    /// Complete parameter checkpoint — swaps the backbone itself.
+    Full(Box<ModelState>),
+    /// LoSiA subnet / LoRA factors riding on the frozen backbone.
+    Delta(AdapterDelta),
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn read_name_shape<R: Read>(r: &mut R) -> Result<(String, Vec<usize>)> {
+    let nlen = read_u32(r)? as usize;
+    let mut nbuf = vec![0u8; nlen];
+    r.read_exact(&mut nbuf)?;
+    let name = String::from_utf8(nbuf)
+        .context("adapter record: non-utf8 tensor name")?;
+    let ndims = read_u32(r)? as usize;
+    let mut shape = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        shape.push(read_u64(r)? as usize);
+    }
+    Ok((name, shape))
+}
+
+fn write_name_shape<W: Write>(
+    w: &mut W,
+    name: &str,
+    shape: &[usize],
+) -> Result<()> {
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+impl AdapterRecord {
+    /// Serialize to `path`. Full records delegate to the `LOSIAST1`
+    /// state format; compact deltas write a `LOSIAAD1` file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        match self {
+            AdapterRecord::Full(state) => state.save(path),
+            AdapterRecord::Delta(d) => {
+                if let Some(dir) = path.parent() {
+                    let _ = std::fs::create_dir_all(dir);
+                }
+                let f = std::fs::File::create(path).with_context(
+                    || format!("creating {}", path.display()),
+                )?;
+                let mut w = BufWriter::new(f);
+                w.write_all(ADAPTER_MAGIC)?;
+                w.write_all(&d.mode.to_le_bytes())?;
+                w.write_all(&(d.f32s.len() as u32).to_le_bytes())?;
+                for (name, t) in &d.f32s {
+                    write_name_shape(&mut w, name, &t.shape)?;
+                    let bytes: Vec<u8> = t
+                        .data
+                        .iter()
+                        .flat_map(|x| x.to_le_bytes())
+                        .collect();
+                    w.write_all(&bytes)?;
+                }
+                w.write_all(&(d.i32s.len() as u32).to_le_bytes())?;
+                for (name, shape, data) in &d.i32s {
+                    write_name_shape(&mut w, name, shape)?;
+                    let bytes: Vec<u8> = data
+                        .iter()
+                        .flat_map(|x| x.to_le_bytes())
+                        .collect();
+                    w.write_all(&bytes)?;
+                }
+                w.flush()?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Load either record format, sniffing the 8-byte magic. Shape
+    /// validation against the decode ABI happens at bind time, where
+    /// the plan checks every named input against the manifest.
+    pub fn load(path: &Path, cfg: &ModelCfg) -> Result<AdapterRecord> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic == STATE_MAGIC {
+            drop(r);
+            return Ok(AdapterRecord::Full(Box::new(
+                ModelState::load(path, cfg)?,
+            )));
+        }
+        if &magic != ADAPTER_MAGIC {
+            bail!(
+                "{} is neither a LoSiA state checkpoint nor an \
+                 adapter record (bad magic)",
+                path.display()
+            );
+        }
+        let mut mbuf = [0u8; 4];
+        r.read_exact(&mut mbuf)?;
+        let mode = i32::from_le_bytes(mbuf);
+        if mode != MODE_LOSIA && mode != MODE_LORA {
+            bail!(
+                "{}: adapter_mode {mode} out of range (1 = losia, \
+                 2 = lora)",
+                path.display()
+            );
+        }
+        let nf = read_u32(&mut r)? as usize;
+        let mut f32s = Vec::with_capacity(nf);
+        for _ in 0..nf {
+            let (name, shape) = read_name_shape(&mut r)?;
+            let len: usize = shape.iter().product();
+            let mut bytes = vec![0u8; len * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| {
+                    f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                })
+                .collect();
+            f32s.push((name, Tensor::from_vec(&shape, data)));
+        }
+        let ni = read_u32(&mut r)? as usize;
+        let mut i32s = Vec::with_capacity(ni);
+        for _ in 0..ni {
+            let (name, shape) = read_name_shape(&mut r)?;
+            let len: usize = shape.iter().product();
+            let mut bytes = vec![0u8; len * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<i32> = bytes
+                .chunks_exact(4)
+                .map(|c| {
+                    i32::from_le_bytes([c[0], c[1], c[2], c[3]])
+                })
+                .collect();
+            i32s.push((name, shape, data));
+        }
+        Ok(AdapterRecord::Delta(AdapterDelta { mode, f32s, i32s }))
+    }
+}
+
+/// Fully-materialized per-step bindings for every adapter input of the
+/// `fwd_decode` artifact. Families the record does not use are bound
+/// as zeros: a zero `dws`/`la`/`lb` contributes exactly nothing to the
+/// forward, and index vectors of zeros are valid (clamped) selections.
+#[derive(Debug, Clone)]
+pub struct AdapterBinding {
+    mode: i32,
+    f32s: Vec<(String, Tensor)>,
+    i32s: Vec<(String, Vec<usize>, Vec<i32>)>,
+}
+
+impl AdapterBinding {
+    /// The no-adapter binding: plain-backbone decode.
+    pub fn plain(cfg: &ModelCfg) -> AdapterBinding {
+        let mut b = AdapterBinding {
+            mode: MODE_PLAIN,
+            f32s: Vec::new(),
+            i32s: Vec::new(),
+        };
+        let l = cfg.n_layers;
+        for kind in &cfg.linear_kinds {
+            let kd = cfg.kind(kind);
+            b.push_f32(&format!("dws_{kind}"), &[l, kd.np, kd.mp]);
+            b.push_i32(&format!("rho_{kind}"), &[l, kd.np]);
+            b.push_i32(&format!("gamma_{kind}"), &[l, kd.mp]);
+            b.push_f32(
+                &format!("la_{kind}"),
+                &[l, kd.n, cfg.lora_rank],
+            );
+            b.push_f32(
+                &format!("lb_{kind}"),
+                &[l, cfg.lora_rank, kd.m],
+            );
+        }
+        b.push_f32("dws_out", &[cfg.d_model, cfg.vocab_sub]);
+        b.push_i32("gamma_out", &[cfg.vocab_sub]);
+        b
+    }
+
+    /// Materialize a record into the dense bind set. Full records
+    /// yield the plain binding — their weights travel through the
+    /// backbone rebind instead (see `serve::registry`).
+    pub fn from_record(
+        cfg: &ModelCfg,
+        record: &AdapterRecord,
+    ) -> Result<AdapterBinding> {
+        let mut b = AdapterBinding::plain(cfg);
+        let AdapterRecord::Delta(d) = record else {
+            return Ok(b);
+        };
+        b.mode = d.mode;
+        for (name, t) in &d.f32s {
+            let slot = b
+                .f32s
+                .iter_mut()
+                .find(|(n, _)| n == name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "adapter record: {name:?} is not a decode \
+                         adapter input"
+                    )
+                })?;
+            anyhow::ensure!(
+                slot.1.shape == t.shape,
+                "adapter record: {name:?} has shape {:?}, decode ABI \
+                 wants {:?}",
+                t.shape,
+                slot.1.shape
+            );
+            slot.1 = t.clone();
+        }
+        for (name, shape, data) in &d.i32s {
+            let slot = b
+                .i32s
+                .iter_mut()
+                .find(|(n, _, _)| n == name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "adapter record: {name:?} is not a decode \
+                         adapter index input"
+                    )
+                })?;
+            anyhow::ensure!(
+                &slot.1 == shape,
+                "adapter record: {name:?} has shape {:?}, decode ABI \
+                 wants {:?}",
+                shape,
+                slot.1
+            );
+            slot.2 = data.clone();
+        }
+        Ok(b)
+    }
+
+    pub fn mode(&self) -> i32 {
+        self.mode
+    }
+
+    /// Bind the whole adapter set (always per-step slots) onto a
+    /// decode plan.
+    pub fn bind(&self, plan: &mut ExecPlan) -> Result<()> {
+        plan.bind_scalar_i32("adapter_mode", self.mode)?;
+        for (name, t) in &self.f32s {
+            plan.bind_f32(name, t)?;
+        }
+        for (name, shape, data) in &self.i32s {
+            plan.bind_i32(name, shape, data)?;
+        }
+        Ok(())
+    }
+
+    fn push_f32(&mut self, name: &str, shape: &[usize]) {
+        self.f32s.push((name.to_string(), Tensor::zeros(shape)));
+    }
+
+    fn push_i32(&mut self, name: &str, shape: &[usize]) {
+        let len: usize = shape.iter().product();
+        self.i32s.push((
+            name.to_string(),
+            shape.to_vec(),
+            vec![0; len],
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> ModelCfg {
+        crate::config::builtin_config(
+            "tiny",
+            std::path::Path::new("/nonexistent"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plain_binding_covers_every_adapter_input() {
+        let cfg = tiny();
+        let spec = cfg.artifact("fwd_decode");
+        let b = AdapterBinding::plain(&cfg);
+        let bound: Vec<&str> = b
+            .f32s
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .chain(b.i32s.iter().map(|(n, _, _)| n.as_str()))
+            .chain(["adapter_mode"])
+            .collect();
+        for inp in &spec.inputs {
+            let is_param =
+                cfg.params.iter().any(|(n, _)| *n == inp.name);
+            let is_step = matches!(
+                inp.name.as_str(),
+                "tokens" | "lens" | "reset"
+            );
+            if !is_param && !is_step {
+                assert!(
+                    bound.contains(&inp.name.as_str()),
+                    "decode input {:?} not covered by the binding",
+                    inp.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delta_record_roundtrips_through_disk() {
+        let cfg = tiny();
+        let mut rng = Rng::new(11);
+        let kd = cfg.kind("wq");
+        let l = cfg.n_layers;
+        let delta = AdapterDelta {
+            mode: MODE_LOSIA,
+            f32s: vec![(
+                "dws_wq".into(),
+                Tensor::randn(&[l, kd.np, kd.mp], 0.1, &mut rng),
+            )],
+            i32s: vec![(
+                "rho_wq".into(),
+                vec![l, kd.np],
+                (0..l * kd.np).map(|i| (i % kd.n) as i32).collect(),
+            )],
+        };
+        let dir = std::env::temp_dir().join("losia_adapter_rt");
+        let path = dir.join("t.adapter");
+        AdapterRecord::Delta(delta.clone()).save(&path).unwrap();
+        let back = AdapterRecord::load(&path, &cfg).unwrap();
+        let AdapterRecord::Delta(d2) = back else {
+            panic!("loaded as full state");
+        };
+        assert_eq!(d2.mode, MODE_LOSIA);
+        assert_eq!(d2.f32s.len(), 1);
+        assert_eq!(d2.f32s[0].0, "dws_wq");
+        assert_eq!(d2.f32s[0].1.shape, delta.f32s[0].1.shape);
+        assert_eq!(d2.f32s[0].1.data, delta.f32s[0].1.data);
+        assert_eq!(d2.i32s, delta.i32s);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_checkpoint_loads_through_the_same_entry_point() {
+        let cfg = tiny();
+        let mut rng = Rng::new(5);
+        let state = ModelState::init(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("losia_adapter_full");
+        let path = dir.join("full.bin");
+        state.save(&path).unwrap();
+        let rec = AdapterRecord::load(&path, &cfg).unwrap();
+        assert!(matches!(rec, AdapterRecord::Full(_)));
+        // a full record materializes as the plain binding
+        let b = AdapterBinding::from_record(&cfg, &rec).unwrap();
+        assert_eq!(b.mode(), MODE_PLAIN);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_delta_shape_is_a_typed_error() {
+        let cfg = tiny();
+        let delta = AdapterDelta {
+            mode: MODE_LORA,
+            f32s: vec![(
+                "la_wq".into(),
+                Tensor::zeros(&[1, 2, 3]),
+            )],
+            i32s: vec![],
+        };
+        let err = AdapterBinding::from_record(
+            &cfg,
+            &AdapterRecord::Delta(delta),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("la_wq"), "{err}");
+    }
+}

@@ -1,0 +1,112 @@
+//! The serving decoder: a thin, stateful wrapper around a
+//! `fwd_decode` [`ExecPlan`].
+//!
+//! Binding contract (who uploads/downloads what, per step):
+//!
+//! * **static** — the 12 backbone parameters, uploaded once at
+//!   construction (or on an explicit [`Decoder::rebind_backbone`]).
+//! * **per-step** — the full [`AdapterBinding`] (every adapter tensor
+//!   plus `adapter_mode`) and the `tokens`/`lens`/`reset` control
+//!   grid. Adapters riding per-step is what makes tenant hot-swaps
+//!   free of static traffic.
+//! * **download** — exactly one `[B, V]` logits tensor per step: the
+//!   distribution at each row's last appended position. The KV cache
+//!   itself never crosses the device boundary; it lives inside the
+//!   plan's buffers (`ExecPlan::clear_state` drops it).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ModelCfg;
+use crate::coordinator::state::ModelState;
+use crate::runtime::{ExecPlan, ExecSnapshot, Executable, Runtime};
+use crate::serve::adapter::AdapterBinding;
+use crate::tensor::Tensor;
+
+/// One decode plan over one backbone. Holds the plan (and with it the
+/// device-resident KV cache) for its lifetime.
+pub struct Decoder<'rt> {
+    rt: &'rt Runtime,
+    exe: Arc<Executable>,
+    plan: ExecPlan,
+}
+
+impl<'rt> Decoder<'rt> {
+    /// Load `fwd_decode`, declare the backbone static, and upload it.
+    pub fn new(rt: &'rt Runtime, state: &ModelState) -> Result<Self> {
+        let exe = rt.load("fwd_decode")?;
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan = ExecPlan::new(Arc::clone(&exe), &param_names)?;
+        plan.bind_params(state)?;
+        Ok(Decoder { rt, exe, plan })
+    }
+
+    pub fn cfg(&self) -> &ModelCfg {
+        &self.rt.cfg
+    }
+
+    /// Replace the frozen backbone (a full-state tenant, or a new
+    /// checkpoint). This is the only path that generates static
+    /// uploads after construction.
+    pub fn rebind_backbone(&mut self, state: &ModelState) -> Result<()> {
+        self.plan.bind_params(state)
+    }
+
+    /// Drop the KV cache (every row): the next step must `reset` the
+    /// rows it uses anyway, but clearing releases the backend state
+    /// eagerly between decoding passes.
+    pub fn clear_cache(&mut self) {
+        self.plan.clear_state();
+    }
+
+    /// Cumulative executor counters for the decode artifact — the
+    /// serve tests read `static_uploads` deltas off this to pin the
+    /// zero-backbone-upload invariant.
+    pub fn stats(&self) -> ExecSnapshot {
+        self.exe.stats()
+    }
+
+    /// One incremental step: bind the adapter + control grid, run,
+    /// download the `[B, V]` logits. `tokens` is the `[B, S]` grid
+    /// with each row's new tokens packed at the row head; `lens[i]`
+    /// counts them (0 = row idle); `reset[i] != 0` clears row `i`'s
+    /// cache before appending.
+    pub fn step(
+        &mut self,
+        adapter: &AdapterBinding,
+        tokens: &[i32],
+        lens: &[i32],
+        reset: &[i32],
+    ) -> Result<Tensor> {
+        let (b, s) = (self.rt.cfg.batch, self.rt.cfg.seq_len);
+        anyhow::ensure!(
+            tokens.len() == b * s
+                && lens.len() == b
+                && reset.len() == b,
+            "decode step: tokens/lens/reset are {}/{}/{}, artifact \
+             wants {}/{b}/{b}",
+            tokens.len(),
+            lens.len(),
+            reset.len(),
+            b * s
+        );
+        adapter.bind(&mut self.plan)?;
+        self.plan.bind_i32("tokens", &[b, s], tokens)?;
+        self.plan.bind_i32("lens", &[b], lens)?;
+        self.plan.bind_i32("reset", &[b], reset)?;
+        self.plan
+            .run()?
+            .into_iter()
+            .next()
+            .ok_or_else(|| {
+                anyhow::anyhow!("fwd_decode emitted no outputs")
+            })?
+            .into_host()
+    }
+}

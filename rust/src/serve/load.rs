@@ -1,0 +1,243 @@
+//! Deterministic synthetic multi-tenant load: the shared harness
+//! behind `losia serve` and `benches/serve_load.rs`.
+//!
+//! Tenants alternate between synthetic LoSiA subnet adapters and LoRA
+//! factor pairs (both seeded), requests round-robin across tenants
+//! with slightly varying prompt lengths, and decoding is greedy — so
+//! a `(config, spec)` pair replays bit-identically and bench numbers
+//! are comparable PR-over-PR.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{builtin_config, ModelCfg};
+use crate::coordinator::state::ModelState;
+use crate::runtime::{artifacts_dir, RefBackend, Runtime};
+use crate::serve::adapter::{
+    AdapterDelta, AdapterRecord, MODE_LORA, MODE_LOSIA,
+};
+use crate::serve::scheduler::{
+    serve_metrics, GenResult, Scheduler, ServeMetrics,
+};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Shape of one synthetic load run.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub tenants: usize,
+    pub requests: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            tenants: 4,
+            requests: 16,
+            prompt_len: 8,
+            max_new: 16,
+            seed: 7,
+        }
+    }
+}
+
+/// Everything a load run produces.
+pub struct LoadReport {
+    pub metrics: ServeMetrics,
+    pub results: Vec<GenResult>,
+    pub warnings: Vec<String>,
+}
+
+/// Runtime for serving: the decode artifact is interpreted, so this
+/// is always the builtin config over the reference backend (a lowered
+/// manifest does not carry `fwd_decode`).
+pub fn serve_runtime(config: &str) -> Result<Runtime> {
+    let cfg = builtin_config(config, &artifacts_dir())?;
+    Ok(Runtime::with_backend(cfg, Box::new(RefBackend)))
+}
+
+/// A seeded LoSiA adapter: random `dws` frames over a random (but
+/// distinct-index) subnet selection — structurally exactly what a
+/// trained LoSiA checkpoint ships.
+pub fn synthetic_losia_record(
+    cfg: &ModelCfg,
+    rng: &mut Rng,
+) -> AdapterRecord {
+    let l = cfg.n_layers;
+    let mut f32s = Vec::new();
+    let mut i32s = Vec::new();
+    for kind in &cfg.linear_kinds {
+        let kd = cfg.kind(kind);
+        f32s.push((
+            format!("dws_{kind}"),
+            Tensor::randn(&[l, kd.np, kd.mp], 0.05, rng),
+        ));
+        let mut rho = Vec::with_capacity(l * kd.np);
+        let mut gamma = Vec::with_capacity(l * kd.mp);
+        for _ in 0..l {
+            rho.extend(
+                rng.choose_distinct(kd.n, kd.np)
+                    .into_iter()
+                    .map(|i| i as i32),
+            );
+            gamma.extend(
+                rng.choose_distinct(kd.m, kd.mp)
+                    .into_iter()
+                    .map(|i| i as i32),
+            );
+        }
+        i32s.push((format!("rho_{kind}"), vec![l, kd.np], rho));
+        i32s.push((format!("gamma_{kind}"), vec![l, kd.mp], gamma));
+    }
+    f32s.push((
+        "dws_out".into(),
+        Tensor::randn(&[cfg.d_model, cfg.vocab_sub], 0.05, rng),
+    ));
+    i32s.push((
+        "gamma_out".into(),
+        vec![cfg.vocab_sub],
+        rng.choose_distinct(cfg.vocab, cfg.vocab_sub)
+            .into_iter()
+            .map(|i| i as i32)
+            .collect(),
+    ));
+    AdapterRecord::Delta(AdapterDelta {
+        mode: MODE_LOSIA,
+        f32s,
+        i32s,
+    })
+}
+
+/// A seeded LoRA adapter: random A/B factor pairs per linear kind.
+pub fn synthetic_lora_record(
+    cfg: &ModelCfg,
+    rng: &mut Rng,
+) -> AdapterRecord {
+    let (l, r) = (cfg.n_layers, cfg.lora_rank);
+    let mut f32s = Vec::new();
+    for kind in &cfg.linear_kinds {
+        let kd = cfg.kind(kind);
+        f32s.push((
+            format!("la_{kind}"),
+            Tensor::randn(&[l, kd.n, r], 0.05, rng),
+        ));
+        f32s.push((
+            format!("lb_{kind}"),
+            Tensor::randn(&[l, r, kd.m], 0.05, rng),
+        ));
+    }
+    AdapterRecord::Delta(AdapterDelta {
+        mode: MODE_LORA,
+        f32s,
+        i32s: Vec::new(),
+    })
+}
+
+/// Run the synthetic load to completion and fold the metrics.
+pub fn run_load(rt: &Runtime, spec: &LoadSpec) -> Result<LoadReport> {
+    anyhow::ensure!(
+        spec.tenants > 0 && spec.requests > 0,
+        "load spec needs at least one tenant and one request"
+    );
+    let mut rng = Rng::new(spec.seed);
+    let base = ModelState::init(&rt.cfg, &mut rng);
+    let mut sched =
+        Scheduler::new(rt, &base, 0.0, spec.seed ^ 0x5eed)?;
+    for t in 0..spec.tenants {
+        let record = if t % 2 == 0 {
+            synthetic_losia_record(&rt.cfg, &mut rng)
+        } else {
+            synthetic_lora_record(&rt.cfg, &mut rng)
+        };
+        sched.register(&format!("tenant{t}"), record)?;
+    }
+    // content-token range of the synthetic vocab (past the control
+    // tokens), clamped to the config's vocabulary
+    let lo = 5usize.min(rt.cfg.vocab.saturating_sub(1));
+    let hi = rt.cfg.vocab.min(53).max(lo + 1);
+    for req in 0..spec.requests {
+        let tenant = format!("tenant{}", req % spec.tenants);
+        // vary prompt lengths so prefills are ragged, like real load
+        let len = (spec.prompt_len.max(1) + req % 3)
+            .min(rt.cfg.seq_len.saturating_sub(2));
+        let prompt: Vec<u32> = (0..len)
+            .map(|_| rng.range(lo, hi) as u32)
+            .collect();
+        sched.submit(&tenant, &prompt, spec.max_new)?;
+    }
+    let t0 = Instant::now();
+    let results = sched.run()?;
+    let wall = t0.elapsed().as_nanos() as u64;
+    let metrics = serve_metrics(
+        &results,
+        wall,
+        sched.swaps(),
+        sched.backbone_uploads(),
+        sched.ticks(),
+    );
+    Ok(LoadReport {
+        metrics,
+        results,
+        warnings: sched.warnings().to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_load_completes_every_request() {
+        let rt = serve_runtime("tiny").unwrap();
+        let spec = LoadSpec {
+            tenants: 3,
+            requests: 7,
+            prompt_len: 4,
+            max_new: 5,
+            seed: 11,
+        };
+        let rep = run_load(&rt, &spec).unwrap();
+        assert_eq!(rep.metrics.requests, 7);
+        assert_eq!(rep.results.len(), 7);
+        // greedy + seeded → replay is identical
+        let rep2 = run_load(&rt, &spec).unwrap();
+        for (a, b) in rep.results.iter().zip(&rep2.results) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.output, b.output);
+        }
+        // delta-only tenants: the backbone never re-uploads
+        assert_eq!(rep.metrics.backbone_uploads, 0);
+        assert!(rep.metrics.swaps >= 2, "multi-tenant load swaps");
+    }
+
+    #[test]
+    fn oversized_prompt_warns_and_returns_empty() {
+        let rt = serve_runtime("tiny").unwrap();
+        let mut rng = Rng::new(3);
+        let base = ModelState::init(&rt.cfg, &mut rng);
+        let mut sched = Scheduler::new(&rt, &base, 0.0, 1).unwrap();
+        sched
+            .register(
+                "t0",
+                synthetic_lora_record(&rt.cfg, &mut rng),
+            )
+            .unwrap();
+        let long = vec![6u32; rt.cfg.seq_len + 3];
+        let id = sched.submit("t0", &long, 4).unwrap();
+        let ok = sched.submit("t0", &[6, 7, 8], 4).unwrap();
+        let results = sched.run().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].id, id);
+        assert!(results[0].output.is_empty());
+        assert!(!results[1].output.is_empty() || ok == results[1].id);
+        let warns = sched.warnings();
+        assert!(
+            warns.iter().any(|w| w.contains("no room to generate")),
+            "warning captured, not lost to stderr: {warns:?}"
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Multi-tenant adapter serving over the KV-cached decode path.
+//!
+//! The production shape LoSiA's tiny deltas enable: one frozen
+//! backbone resident on the device, many per-tenant adapters swapped
+//! between requests, and incremental decoding so a token costs
+//! O(prefix) attention + O(1) linears instead of a full-grid forward.
+//! Four pieces:
+//!
+//! * [`decode::Decoder`] — a `fwd_decode` [`crate::runtime::ExecPlan`]
+//!   with the backbone static and the KV cache plan-resident.
+//! * [`adapter`] — adapter records (full checkpoint / LoSiA subnet /
+//!   LoRA factors), their compact on-disk format, and the dense
+//!   per-step [`adapter::AdapterBinding`] that makes hot-swaps free of
+//!   static uploads.
+//! * [`registry::AdapterRegistry`] — named tenants, activation, and
+//!   the backbone-upload ledger.
+//! * [`scheduler::Scheduler`] — request-level batching into the
+//!   artifact batch dimension, with per-request EOS/`max_new`
+//!   tracking and captured warnings.
+//!
+//! [`load`] drives it all under deterministic synthetic load for the
+//! `losia serve` CLI and the `serve_load` bench; decode-vs-full-rerun
+//! bitwise parity and the zero-static-upload swap invariant are pinned
+//! by `tests/serve_parity.rs`.
+
+pub mod adapter;
+pub mod decode;
+pub mod load;
+pub mod registry;
+pub mod scheduler;
+
+pub use adapter::{
+    AdapterBinding, AdapterDelta, AdapterRecord, MODE_LORA,
+    MODE_LOSIA, MODE_PLAIN,
+};
+pub use decode::Decoder;
+pub use load::{
+    run_load, serve_runtime, synthetic_lora_record,
+    synthetic_losia_record, LoadReport, LoadSpec,
+};
+pub use registry::AdapterRegistry;
+pub use scheduler::{
+    serve_metrics, GenResult, Scheduler, ServeMetrics,
+};

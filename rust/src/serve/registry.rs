@@ -1,0 +1,134 @@
+//! Multi-tenant adapter registry: named records, activation, and the
+//! static-traffic ledger.
+//!
+//! Activation is where the serving economics live. A delta tenant
+//! (LoSiA subnet, LoRA factors) activates by handing its
+//! [`AdapterBinding`] to the next decode step — pure per-step traffic,
+//! zero static uploads. A full-state tenant replaces the backbone
+//! (one static upload), and switching away from it restores the base
+//! backbone (one more). `backbone_uploads()` counts exactly those
+//! events, so a delta-only serving loop must report 0.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::ModelCfg;
+use crate::coordinator::state::ModelState;
+use crate::serve::adapter::{AdapterBinding, AdapterRecord};
+use crate::serve::decode::Decoder;
+
+struct TenantEntry {
+    /// `Some` only for full-state tenants
+    full: Option<Box<ModelState>>,
+    binding: AdapterBinding,
+}
+
+/// Named adapters over one base backbone.
+pub struct AdapterRegistry {
+    base: ModelState,
+    tenants: BTreeMap<String, TenantEntry>,
+    active: Option<String>,
+    swaps: u64,
+    backbone_uploads: u64,
+}
+
+impl AdapterRegistry {
+    /// `base` is the frozen backbone the decoder was built on; it is
+    /// kept so the registry can restore it after a full-state tenant.
+    pub fn new(base: ModelState) -> AdapterRegistry {
+        AdapterRegistry {
+            base,
+            tenants: BTreeMap::new(),
+            active: None,
+            swaps: 0,
+            backbone_uploads: 0,
+        }
+    }
+
+    /// Register (or replace) a tenant's adapter.
+    pub fn register(
+        &mut self,
+        tenant: &str,
+        record: AdapterRecord,
+        cfg: &ModelCfg,
+    ) -> Result<()> {
+        let binding = AdapterBinding::from_record(cfg, &record)?;
+        let full = match record {
+            AdapterRecord::Full(state) => Some(state),
+            AdapterRecord::Delta(_) => None,
+        };
+        self.tenants
+            .insert(tenant.to_string(), TenantEntry { full, binding });
+        Ok(())
+    }
+
+    /// Register a tenant from a record file (full checkpoint or
+    /// compact adapter — the magic decides).
+    pub fn load_file(
+        &mut self,
+        tenant: &str,
+        path: &Path,
+        cfg: &ModelCfg,
+    ) -> Result<()> {
+        let record = AdapterRecord::load(path, cfg)?;
+        self.register(tenant, record, cfg)
+    }
+
+    pub fn has(&self, tenant: &str) -> bool {
+        self.tenants.contains_key(tenant)
+    }
+
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.tenants.keys().map(|k| k.as_str()).collect()
+    }
+
+    /// Make `tenant` current and return the binding the next decode
+    /// step must carry. Only full-state tenants (in either direction)
+    /// touch the decoder's static bindings.
+    pub fn activate(
+        &mut self,
+        tenant: &str,
+        dec: &mut Decoder<'_>,
+    ) -> Result<&AdapterBinding> {
+        anyhow::ensure!(
+            self.tenants.contains_key(tenant),
+            "unknown tenant {tenant:?} (registered: {:?})",
+            self.tenant_names()
+        );
+        if self.active.as_deref() != Some(tenant) {
+            let was_full = self
+                .active
+                .as_deref()
+                .and_then(|t| self.tenants.get(t))
+                .is_some_and(|e| e.full.is_some());
+            let entry = &self.tenants[tenant];
+            if let Some(state) = &entry.full {
+                dec.rebind_backbone(state)?;
+                self.backbone_uploads += 1;
+            } else if was_full {
+                dec.rebind_backbone(&self.base)?;
+                self.backbone_uploads += 1;
+            }
+            self.active = Some(tenant.to_string());
+            self.swaps += 1;
+        }
+        Ok(&self.tenants[tenant].binding)
+    }
+
+    pub fn active(&self) -> Option<&str> {
+        self.active.as_deref()
+    }
+
+    /// Tenant switches performed so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Backbone (static) re-uploads caused by activations. Stays 0
+    /// for any sequence of delta-tenant swaps.
+    pub fn backbone_uploads(&self) -> u64 {
+        self.backbone_uploads
+    }
+}

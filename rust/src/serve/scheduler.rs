@@ -1,0 +1,392 @@
+//! Request-level batching: pack concurrent tenant generation requests
+//! into the artifact batch dimension and drive the shared decoder.
+//!
+//! Each **tick** serves one tenant (adapters bind per step, so a step
+//! carries exactly one tenant's binding): every occupied batch row
+//! belonging to that tenant advances one token — a fresh row prefills
+//! its whole prompt in the same call (`lens = prompt_len`, `reset =
+//! 1`), everyone else decodes one token (`lens = 1`), idle rows cost
+//! nothing (`lens = 0`). Tenant choice is deterministic — the tenant
+//! of the lowest-id active request — so a seeded run is replayable.
+//! Rows complete independently on EOS / `max_new` / sequence capacity
+//! and free their slot for the next queued request.
+//!
+//! Eval-style warnings raised while the scheduler runs (oversized
+//! prompts, malformed requests) are captured through
+//! [`crate::util::warn`] instead of leaking to stderr, and surface via
+//! [`Scheduler::warnings`].
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::state::ModelState;
+use crate::data::vocab::{BOS, EOS, PAD};
+use crate::runtime::{ExecSnapshot, Runtime};
+use crate::serve::adapter::AdapterRecord;
+use crate::serve::decode::Decoder;
+use crate::serve::registry::AdapterRegistry;
+use crate::tensor::select::{argmax, sample_multinomial, softmax};
+use crate::util::rng::Rng;
+use crate::util::warn;
+
+struct GenRequest {
+    id: usize,
+    tenant: String,
+    prompt: Vec<u32>,
+    max_new: usize,
+}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: usize,
+    pub tenant: String,
+    pub output: Vec<u32>,
+    /// wall time of the prefill step that admitted this request
+    pub prefill_ns: u64,
+    /// wall time of the decode step that produced each output token
+    pub token_latencies_ns: Vec<u64>,
+}
+
+struct RowState {
+    id: usize,
+    tenant: String,
+    seq: Vec<u32>,
+    out: Vec<u32>,
+    max_new: usize,
+    fresh: bool,
+    prefill_ns: u64,
+    latencies: Vec<u64>,
+}
+
+/// The serving loop: queue + batch rows + decoder + registry.
+pub struct Scheduler<'rt> {
+    dec: Decoder<'rt>,
+    registry: AdapterRegistry,
+    queue: VecDeque<GenRequest>,
+    rows: Vec<Option<RowState>>,
+    results: Vec<GenResult>,
+    warnings: Vec<String>,
+    temperature: f32,
+    rng: Rng,
+    next_id: usize,
+    ticks: u64,
+}
+
+impl<'rt> Scheduler<'rt> {
+    /// Build the decoder over `base` (the frozen backbone) and an
+    /// empty registry. `temperature <= 0` decodes greedily.
+    pub fn new(
+        rt: &'rt Runtime,
+        base: &ModelState,
+        temperature: f32,
+        seed: u64,
+    ) -> Result<Self> {
+        let dec = Decoder::new(rt, base)?;
+        let rows = (0..rt.cfg.batch).map(|_| None).collect();
+        Ok(Scheduler {
+            dec,
+            registry: AdapterRegistry::new(base.clone()),
+            queue: VecDeque::new(),
+            rows,
+            results: Vec::new(),
+            warnings: Vec::new(),
+            temperature,
+            rng: Rng::new(seed),
+            next_id: 0,
+            ticks: 0,
+        })
+    }
+
+    /// Register a tenant adapter under `name`.
+    pub fn register(
+        &mut self,
+        name: &str,
+        record: AdapterRecord,
+    ) -> Result<()> {
+        self.registry.register(name, record, self.dec.cfg())
+    }
+
+    /// Enqueue a generation request; returns its id. The tenant must
+    /// already be registered.
+    pub fn submit(
+        &mut self,
+        tenant: &str,
+        prompt: &[u32],
+        max_new: usize,
+    ) -> Result<usize> {
+        anyhow::ensure!(
+            self.registry.has(tenant),
+            "submit for unregistered tenant {tenant:?} (registered: \
+             {:?})",
+            self.registry.tenant_names()
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(GenRequest {
+            id,
+            tenant: tenant.to_string(),
+            prompt: prompt.to_vec(),
+            max_new,
+        });
+        Ok(id)
+    }
+
+    /// Drain the queue to completion, returning results ordered by
+    /// request id. Warnings raised along the way are captured (see
+    /// [`Scheduler::warnings`]).
+    pub fn run(&mut self) -> Result<Vec<GenResult>> {
+        let cap = warn::capture();
+        let r: Result<()> = (|| {
+            while self.tick()? {}
+            Ok(())
+        })();
+        self.warnings.extend(cap.drain());
+        drop(cap);
+        r?;
+        let mut results = std::mem::take(&mut self.results);
+        results.sort_by_key(|g| g.id);
+        Ok(results)
+    }
+
+    /// One scheduling step. Returns `false` once queue and rows are
+    /// both empty.
+    fn tick(&mut self) -> Result<bool> {
+        let b = self.dec.cfg().batch;
+        let s = self.dec.cfg().seq_len;
+        let v = self.dec.cfg().vocab;
+
+        // admit queued requests into free rows
+        for i in 0..b {
+            if self.rows[i].is_some() {
+                continue;
+            }
+            while let Some(req) = self.queue.pop_front() {
+                let mut seq = vec![BOS];
+                seq.extend_from_slice(&req.prompt);
+                if seq.len() >= s || req.max_new == 0 {
+                    if seq.len() >= s {
+                        warn::warn(format!(
+                            "[serve] request {}: prompt of {} tokens \
+                             leaves no room to generate within \
+                             seq_len {s}; returning empty output",
+                            req.id,
+                            req.prompt.len()
+                        ));
+                    }
+                    self.results.push(GenResult {
+                        id: req.id,
+                        tenant: req.tenant,
+                        output: Vec::new(),
+                        prefill_ns: 0,
+                        token_latencies_ns: Vec::new(),
+                    });
+                    continue;
+                }
+                self.rows[i] = Some(RowState {
+                    id: req.id,
+                    tenant: req.tenant,
+                    seq,
+                    out: Vec::new(),
+                    max_new: req.max_new,
+                    fresh: true,
+                    prefill_ns: 0,
+                    latencies: Vec::new(),
+                });
+                break;
+            }
+        }
+
+        // deterministic tenant pick: the lowest-id active request
+        let Some(tenant) = self
+            .rows
+            .iter()
+            .flatten()
+            .min_by_key(|r| r.id)
+            .map(|r| r.tenant.clone())
+        else {
+            return Ok(false);
+        };
+
+        // pack this tenant's rows into the control grid
+        let mut tokens = vec![PAD as i32; b * s];
+        let mut lens = vec![0i32; b];
+        let mut reset = vec![0i32; b];
+        let mut served = Vec::new();
+        for i in 0..b {
+            let Some(row) = &self.rows[i] else { continue };
+            if row.tenant != tenant {
+                continue;
+            }
+            if row.fresh {
+                for (t, &tok) in row.seq.iter().enumerate() {
+                    tokens[i * s + t] = tok as i32;
+                }
+                lens[i] = row.seq.len() as i32;
+                reset[i] = 1;
+            } else {
+                tokens[i * s] = *row.seq.last().unwrap() as i32;
+                lens[i] = 1;
+            }
+            served.push(i);
+        }
+
+        let binding =
+            self.registry.activate(&tenant, &mut self.dec)?;
+        let t0 = Instant::now();
+        let logits = self.dec.step(binding, &tokens, &lens, &reset)?;
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        self.ticks += 1;
+
+        for i in served {
+            let row = self.rows[i].as_mut().unwrap();
+            let lrow = &logits.data[i * v..(i + 1) * v];
+            let next = if self.temperature <= 0.0 {
+                argmax(lrow) as u32
+            } else {
+                let scaled: Vec<f32> = lrow
+                    .iter()
+                    .map(|x| x / self.temperature)
+                    .collect();
+                sample_multinomial(
+                    &softmax(&scaled),
+                    self.rng.uniform(),
+                ) as u32
+            };
+            if row.fresh {
+                row.prefill_ns = elapsed;
+                row.fresh = false;
+            }
+            let mut finished = next == EOS;
+            if next != EOS {
+                row.out.push(next);
+                row.seq.push(next);
+                row.latencies.push(elapsed);
+                if row.out.len() >= row.max_new
+                    || row.seq.len() >= s
+                {
+                    finished = true;
+                }
+            }
+            if finished {
+                let row = self.rows[i].take().unwrap();
+                self.results.push(GenResult {
+                    id: row.id,
+                    tenant: row.tenant,
+                    output: row.out,
+                    prefill_ns: row.prefill_ns,
+                    token_latencies_ns: row.latencies,
+                });
+            }
+        }
+        Ok(true)
+    }
+
+    /// Warnings captured across `run()` calls so far.
+    pub fn warnings(&self) -> &[String] {
+        &self.warnings
+    }
+
+    /// Decode steps executed.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Tenant switches performed by the registry.
+    pub fn swaps(&self) -> u64 {
+        self.registry.swaps()
+    }
+
+    /// Backbone re-uploads caused by tenant activations (0 for
+    /// delta-only serving).
+    pub fn backbone_uploads(&self) -> u64 {
+        self.registry.backbone_uploads()
+    }
+
+    /// Executor counters of the decode artifact.
+    pub fn decoder_stats(&self) -> ExecSnapshot {
+        self.dec.stats()
+    }
+}
+
+/// Aggregate serving metrics over a finished run.
+#[derive(Debug, Clone)]
+pub struct ServeMetrics {
+    pub requests: usize,
+    pub tokens: usize,
+    pub ticks: u64,
+    pub swaps: u64,
+    pub backbone_uploads: u64,
+    pub wall_ns: u64,
+    pub throughput_tok_per_s: f64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    /// mean decode latency per output-token index — flat (not growing
+    /// with the index) is the KV-cache win the bench pins
+    pub mean_latency_by_index_ns: Vec<u64>,
+}
+
+/// Nearest-rank percentile over a sorted sample.
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round()
+        as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Fold per-request results into [`ServeMetrics`]. `wall_ns` is the
+/// caller-measured wall time of the whole run.
+pub fn serve_metrics(
+    results: &[GenResult],
+    wall_ns: u64,
+    swaps: u64,
+    backbone_uploads: u64,
+    ticks: u64,
+) -> ServeMetrics {
+    let tokens: usize =
+        results.iter().map(|r| r.output.len()).sum();
+    let mut lat: Vec<u64> = results
+        .iter()
+        .flat_map(|r| r.token_latencies_ns.iter().copied())
+        .collect();
+    lat.sort_unstable();
+    let max_len = results
+        .iter()
+        .map(|r| r.token_latencies_ns.len())
+        .max()
+        .unwrap_or(0);
+    let mut mean_by_index = Vec::with_capacity(max_len);
+    for j in 0..max_len {
+        let (mut sum, mut n) = (0u64, 0u64);
+        for r in results {
+            if let Some(&x) = r.token_latencies_ns.get(j) {
+                sum += x;
+                n += 1;
+            }
+        }
+        mean_by_index.push(if n == 0 { 0 } else { sum / n });
+    }
+    let secs = wall_ns as f64 / 1e9;
+    ServeMetrics {
+        requests: results.len(),
+        tokens,
+        ticks,
+        swaps,
+        backbone_uploads,
+        wall_ns,
+        throughput_tok_per_s: if secs > 0.0 {
+            tokens as f64 / secs
+        } else {
+            0.0
+        },
+        p50_ns: percentile(&lat, 50.0),
+        p90_ns: percentile(&lat, 90.0),
+        p99_ns: percentile(&lat, 99.0),
+        mean_latency_by_index_ns: mean_by_index,
+    }
+}

@@ -49,6 +49,21 @@ pub fn argmax(values: &[f32]) -> usize {
     best
 }
 
+/// Multinomial draw from a probability vector given a uniform sample
+/// `u ∈ [0, 1)`; the last index absorbs any rounding shortfall. Shared
+/// by greedy/temperature decoding (`eval::generate`) and the serve
+/// scheduler so both sample identically from the same uniform stream.
+pub fn sample_multinomial(probs: &[f32], u: f32) -> usize {
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len().saturating_sub(1)
+}
+
 /// Numerically-stable softmax.
 pub fn softmax(values: &[f32]) -> Vec<f32> {
     let max = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);

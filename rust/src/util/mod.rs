@@ -1,7 +1,9 @@
-//! Support substrates: JSON, RNG, CLI parsing, tables, property testing.
+//! Support substrates: JSON, RNG, CLI parsing, tables, property
+//! testing, and the shared warning sink.
 
 pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod table;
+pub mod warn;

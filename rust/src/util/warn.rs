@@ -1,0 +1,94 @@
+//! Shared warning sink: library code reports non-fatal conditions
+//! through [`warn`] instead of raw `eprintln!`, so embedding layers
+//! (the serve scheduler, future observers) can capture them instead of
+//! losing them to stderr.
+//!
+//! Default behaviour is unchanged — with no capture scope active a
+//! message goes straight to stderr. [`capture`] installs a process-
+//! global collector for the guard's lifetime; scopes nest like a stack
+//! (the innermost active scope receives the messages) and restore the
+//! previous sink on drop.
+
+use std::sync::{Arc, Mutex};
+
+type Collector = Arc<Mutex<Vec<String>>>;
+
+static SINKS: Mutex<Vec<Collector>> = Mutex::new(Vec::new());
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Report a non-fatal warning. Lands in the innermost active
+/// [`capture`] scope's buffer, else on stderr.
+pub fn warn(msg: impl Into<String>) {
+    let msg = msg.into();
+    match lock(&SINKS).last() {
+        Some(c) => lock(c).push(msg),
+        None => eprintln!("{msg}"),
+    }
+}
+
+/// RAII capture scope returned by [`capture`]: warnings raised while
+/// the guard lives are buffered instead of printed.
+pub struct WarnCapture {
+    collector: Collector,
+}
+
+/// Start capturing warnings until the returned guard is dropped.
+pub fn capture() -> WarnCapture {
+    let collector: Collector = Arc::new(Mutex::new(Vec::new()));
+    lock(&SINKS).push(Arc::clone(&collector));
+    WarnCapture { collector }
+}
+
+impl WarnCapture {
+    /// Drain the messages captured so far (resets the buffer).
+    pub fn drain(&self) -> Vec<String> {
+        std::mem::take(&mut *lock(&self.collector))
+    }
+}
+
+impl Drop for WarnCapture {
+    fn drop(&mut self) {
+        let mut sinks = lock(&SINKS);
+        if let Some(i) = sinks
+            .iter()
+            .position(|c| Arc::ptr_eq(c, &self.collector))
+        {
+            sinks.remove(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the sink is process-global, so the capture tests serialize on it
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn capture_buffers_and_drains() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        let cap = capture();
+        warn("first");
+        warn(format!("second {}", 2));
+        assert_eq!(cap.drain(), vec!["first", "second 2"]);
+        assert!(cap.drain().is_empty(), "drain resets the buffer");
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        let outer = capture();
+        warn("to-outer");
+        {
+            let inner = capture();
+            warn("to-inner");
+            assert_eq!(inner.drain(), vec!["to-inner"]);
+        }
+        warn("back-to-outer");
+        assert_eq!(outer.drain(), vec!["to-outer", "back-to-outer"]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Serving-path contracts, end to end:
+//!
+//! 1. **Bitwise decode parity** — the KV-cached `fwd_decode` path must
+//!    produce logits bit-identical to a full-prefix `fwd_logits`
+//!    re-run at every emitted position, for ragged batches, at 1 and
+//!    at 4 kernel threads (the kernels' determinism contract makes
+//!    the thread count irrelevant; this pins that it stays so through
+//!    the cache).
+//! 2. **Free adapter hot-swap** — alternating tenant adapters between
+//!    decode steps must cost zero static uploads and zero backbone
+//!    re-uploads: deltas ride the per-step bindings, the frozen
+//!    backbone stays resident.
+
+use std::sync::Mutex;
+
+use losia::config::builtin_config;
+use losia::coordinator::state::ModelState;
+use losia::data::vocab::{BOS, PAD};
+use losia::runtime::kernels::set_kernel_threads;
+use losia::runtime::{
+    artifacts_dir, ExecPlan, RefBackend, Runtime,
+};
+use losia::serve::{
+    synthetic_lora_record, synthetic_losia_record, AdapterBinding,
+    AdapterRegistry, Decoder,
+};
+use losia::tensor::select::argmax;
+use losia::util::rng::Rng;
+
+/// The thread-budget knob is process-global; serialize tests that
+/// touch it (a poisoned lock is fine — the knob resets either way).
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+/// Builtin config over the reference backend: decode is interpreted,
+/// so this never needs lowered artifacts.
+fn tiny_runtime() -> Runtime {
+    let cfg = builtin_config("tiny", &artifacts_dir()).unwrap();
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+fn decode_matches_full_rerun_at(threads: usize) {
+    let _g =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    set_kernel_threads(threads);
+    let rt = tiny_runtime();
+    let mut rng = Rng::new(42 + threads as u64);
+    let state = ModelState::init(&rt.cfg, &mut rng);
+    let (b, s, v) = (rt.cfg.batch, rt.cfg.seq_len, rt.cfg.vocab);
+
+    let mut dec = Decoder::new(&rt, &state).unwrap();
+    let plain = AdapterBinding::plain(&rt.cfg);
+
+    // the reference: the full-grid logits artifact over the same state
+    let exe = rt.load("fwd_logits").unwrap();
+    let param_names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut full = ExecPlan::new(exe, &param_names).unwrap();
+    full.bind_params(&state).unwrap();
+
+    // ragged prompts: every row a different length
+    let mut seqs: Vec<Vec<i32>> = (0..b)
+        .map(|i| {
+            let mut row = vec![BOS as i32];
+            for _ in 0..(2 + i) {
+                row.push(rng.range(5, rt.cfg.vocab.min(53)) as i32);
+            }
+            row
+        })
+        .collect();
+
+    let steps = 6;
+    assert!(seqs.iter().all(|r| r.len() + steps <= s));
+    for step in 0..steps {
+        // KV-cached step: prefill on step 0, one token after
+        let mut tokens = vec![PAD as i32; b * s];
+        let mut lens = vec![0i32; b];
+        let mut reset = vec![0i32; b];
+        for (i, seq) in seqs.iter().enumerate() {
+            if step == 0 {
+                for (t, &tok) in seq.iter().enumerate() {
+                    tokens[i * s + t] = tok;
+                }
+                lens[i] = seq.len() as i32;
+                reset[i] = 1;
+            } else {
+                tokens[i * s] = *seq.last().unwrap();
+                lens[i] = 1;
+            }
+        }
+        let logits =
+            dec.step(&plain, &tokens, &lens, &reset).unwrap();
+        assert_eq!(logits.shape, vec![b, v]);
+
+        // full re-run over each row's whole prefix
+        let mut ftok = vec![PAD as i32; b * s];
+        for (i, seq) in seqs.iter().enumerate() {
+            for (t, &tok) in seq.iter().enumerate() {
+                ftok[i * s + t] = tok;
+            }
+        }
+        full.bind_i32("tokens", &[b, s], &ftok).unwrap();
+        let flog = full
+            .run()
+            .unwrap()
+            .into_iter()
+            .next()
+            .unwrap()
+            .into_host()
+            .unwrap(); // [b, s, v]
+
+        for (i, seq) in seqs.iter().enumerate() {
+            let pos = seq.len() - 1;
+            let cached = &logits.data[i * v..(i + 1) * v];
+            let rerun = &flog.data
+                [(i * s + pos) * v..(i * s + pos + 1) * v];
+            for (j, (&c, &r)) in
+                cached.iter().zip(rerun).enumerate()
+            {
+                assert_eq!(
+                    c.to_bits(),
+                    r.to_bits(),
+                    "step {step} row {i} vocab {j} at {threads} \
+                     threads: cached {c} != rerun {r}"
+                );
+            }
+        }
+
+        // extend every row greedily off the cached logits
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            let next =
+                argmax(&logits.data[i * v..(i + 1) * v]) as i32;
+            seq.push(next);
+        }
+    }
+    set_kernel_threads(0);
+}
+
+#[test]
+fn decode_is_bitwise_identical_to_full_rerun_serial() {
+    decode_matches_full_rerun_at(1);
+}
+
+#[test]
+fn decode_is_bitwise_identical_to_full_rerun_parallel() {
+    decode_matches_full_rerun_at(4);
+}
+
+#[test]
+fn adapter_hot_swaps_cost_zero_static_and_backbone_uploads() {
+    let rt = tiny_runtime();
+    let mut rng = Rng::new(9);
+    let base = ModelState::init(&rt.cfg, &mut rng);
+    let mut dec = Decoder::new(&rt, &base).unwrap();
+    let mut reg = AdapterRegistry::new(base.clone());
+    reg.register(
+        "losia",
+        synthetic_losia_record(&rt.cfg, &mut rng),
+        &rt.cfg,
+    )
+    .unwrap();
+    reg.register(
+        "lora",
+        synthetic_lora_record(&rt.cfg, &mut rng),
+        &rt.cfg,
+    )
+    .unwrap();
+
+    let (b, s) = (rt.cfg.batch, rt.cfg.seq_len);
+    let step = |dec: &mut Decoder<'_>,
+                binding: &AdapterBinding| {
+        // a one-token prefill on row 0, resetting the cache each time
+        let mut tokens = vec![PAD as i32; b * s];
+        tokens[0] = BOS as i32;
+        let mut lens = vec![0i32; b];
+        lens[0] = 1;
+        let mut reset = vec![0i32; b];
+        reset[0] = 1;
+        dec.step(binding, &tokens, &lens, &reset).unwrap();
+    };
+
+    // warm-up: the first call uploads the backbone statics once
+    let binding = reg.activate("losia", &mut dec).unwrap().clone();
+    step(&mut dec, &binding);
+    let warm = dec.stats();
+    assert!(warm.static_uploads > 0, "backbone uploaded at warm-up");
+
+    // steady state: swap tenants every step
+    let swaps = 6;
+    for i in 0..swaps {
+        let name = if i % 2 == 0 { "lora" } else { "losia" };
+        let binding = reg.activate(name, &mut dec).unwrap().clone();
+        step(&mut dec, &binding);
+    }
+    let delta = dec.stats().delta_since(&warm);
+    assert_eq!(delta.calls, swaps as u64);
+    assert_eq!(
+        delta.static_uploads, 0,
+        "adapter hot-swap re-uploaded statics"
+    );
+    assert_eq!(
+        reg.backbone_uploads(),
+        0,
+        "delta adapters must never re-upload the backbone"
+    );
+    assert_eq!(reg.swaps(), swaps as u64 + 1);
+}
