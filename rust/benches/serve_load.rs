@@ -63,6 +63,10 @@ fn main() {
         m.backbone_uploads.to_string(),
     ]);
     t.rowv(vec![
+        "backbone resident bytes".into(),
+        rep.backbone_resident_bytes.to_string(),
+    ]);
+    t.rowv(vec![
         "throughput tok/s".into(),
         f(m.throughput_tok_per_s, 1),
     ]);
@@ -127,6 +131,56 @@ fn main() {
                 .map(|&x| Json::Num(x as f64))
                 .collect(),
         ),
+    );
+    j.insert(
+        "backbone_resident_bytes".into(),
+        Json::Num(rep.backbone_resident_bytes as f64),
+    );
+
+    // quantized-backbone scenario: same load with the frozen backbone
+    // stored as block-quantized int8 — the swap invariant must hold
+    // identically and the resident footprint shrinks several-fold
+    losia::runtime::quant::set_mode(Some(
+        losia::runtime::QuantMode::Int8,
+    ));
+    let qrep = run_load(&rt, &spec).expect("quantized serve load");
+    losia::runtime::quant::set_mode(None);
+    let qm = &qrep.metrics;
+    assert_eq!(
+        qm.backbone_uploads, 0,
+        "quantized delta-adapter serving re-uploaded the backbone"
+    );
+    let mut qj = BTreeMap::new();
+    qj.insert(
+        "backbone_resident_bytes".into(),
+        Json::Num(qrep.backbone_resident_bytes as f64),
+    );
+    qj.insert(
+        "resident_reduction_x".into(),
+        Json::Num(
+            rep.backbone_resident_bytes as f64
+                / qrep.backbone_resident_bytes.max(1) as f64,
+        ),
+    );
+    qj.insert(
+        "backbone_uploads".into(),
+        Json::Num(qm.backbone_uploads as f64),
+    );
+    qj.insert("swaps".into(), Json::Num(qm.swaps as f64));
+    qj.insert(
+        "throughput_tok_per_s".into(),
+        Json::Num(qm.throughput_tok_per_s),
+    );
+    qj.insert("p50_ns".into(), Json::Num(qm.p50_ns as f64));
+    j.insert("quantized_int8".into(), Json::Obj(qj));
+    eprintln!(
+        "[serve] quantized backbone: {} → {} resident bytes \
+         ({:.2}×), uploads {}",
+        rep.backbone_resident_bytes,
+        qrep.backbone_resident_bytes,
+        rep.backbone_resident_bytes as f64
+            / qrep.backbone_resident_bytes.max(1) as f64,
+        qm.backbone_uploads
     );
     write_bench_json("serve", &Json::Obj(j));
 }

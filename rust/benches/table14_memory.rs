@@ -11,11 +11,17 @@
 mod common;
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use common::*;
 use losia::config::{KindDims, ModelCfg};
+use losia::coordinator::state::ModelState;
+use losia::data::Batch;
 use losia::metrics::memory as mm;
-use losia::util::table::Table;
+use losia::runtime::{quant, ExecPlan, QuantMode, Runtime};
+use losia::util::json::Json;
+use losia::util::rng::Rng;
+use losia::util::table::{write_bench_json, Table};
 
 /// Construct a manifest-free ModelCfg with LLaMA-2 7B dimensions.
 fn llama7b() -> ModelCfg {
@@ -72,6 +78,108 @@ fn llama7b() -> ModelCfg {
 
 fn gb(x: f64) -> String {
     format!("{:.2}", x / 1e9)
+}
+
+/// Backbone parameter shapes of a manifest-free config (the llama7b
+/// analytic row), mirroring the builtin layout.
+fn backbone_shapes(cfg: &ModelCfg) -> Vec<(String, Vec<usize>)> {
+    let (v, d, l) = (cfg.vocab, cfg.d_model, cfg.n_layers);
+    let mut out = vec![
+        ("embed".to_string(), vec![v, d]),
+        ("norm1".to_string(), vec![l, d]),
+        ("norm2".to_string(), vec![l, d]),
+    ];
+    for kind in &cfg.linear_kinds {
+        let kd = cfg.kind(kind);
+        out.push((kind.clone(), vec![l, kd.n, kd.m]));
+    }
+    out.push(("norm_f".to_string(), vec![d]));
+    out.push(("lm_head".to_string(), vec![d, v]));
+    out
+}
+
+/// Analytic (f32 bytes, int8 bytes) of a backbone under the
+/// quantization policy (norms stay dense).
+fn analytic_bytes(
+    shapes: &[(String, Vec<usize>)],
+) -> (usize, usize) {
+    let mut f32b = 0usize;
+    let mut q8b = 0usize;
+    for (name, shape) in shapes {
+        let dense = shape.iter().product::<usize>() * 4;
+        f32b += dense;
+        q8b += if quant::quantizable(name) {
+            quant::quantized_byte_len(shape)
+        } else {
+            dense
+        };
+    }
+    (f32b, q8b)
+}
+
+/// Live measurement on the bench config: bind every parameter
+/// statically into an `fwd_loss` plan under `mode`, report the
+/// device-resident bytes, the mean NLL over seeded batches, and the
+/// mean forward wall time.
+fn measure_static(
+    rt: &Runtime,
+    state: &ModelState,
+    mode: QuantMode,
+) -> (usize, f64, f64) {
+    quant::set_mode(Some(mode));
+    let exe = rt.load("fwd_loss").expect("fwd_loss");
+    let names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut plan = ExecPlan::new(exe, &names).expect("plan");
+    plan.bind_params(state).expect("bind params");
+    let resident = plan.static_resident_bytes();
+    let (b, s, v) = (rt.cfg.batch, rt.cfg.seq_len, rt.cfg.vocab);
+    let mut rng = Rng::new(97);
+    let (mut nll_sum, mut cnt_sum) = (0.0f64, 0.0f64);
+    let mut secs = 0.0f64;
+    let iters = 3usize;
+    for _ in 0..iters {
+        let batch = Batch {
+            tokens: (0..b * s)
+                .map(|_| rng.below(v) as i32)
+                .collect(),
+            targets: (0..b * s)
+                .map(|_| rng.below(v) as i32)
+                .collect(),
+            mask: vec![1.0; b * s],
+            batch: b,
+            seq: s,
+        };
+        plan.bind_batch(&batch).expect("bind batch");
+        let t0 = Instant::now();
+        let out = plan.run().expect("run");
+        secs += t0.elapsed().as_secs_f64();
+        for h in out {
+            match h.name() {
+                "nll" => {
+                    nll_sum += h
+                        .into_host()
+                        .expect("nll")
+                        .data
+                        .iter()
+                        .map(|&x| x as f64)
+                        .sum::<f64>()
+                }
+                "cnt" => {
+                    cnt_sum += h
+                        .into_host()
+                        .expect("cnt")
+                        .data
+                        .iter()
+                        .map(|&x| x as f64)
+                        .sum::<f64>()
+                }
+                _ => {}
+            }
+        }
+    }
+    quant::set_mode(None);
+    (resident, nll_sum / cnt_sum.max(1.0), secs / iters as f64)
 }
 
 fn main() {
@@ -133,4 +241,95 @@ fn main() {
     }
     local.print();
     local.write_csv("table14_local");
+
+    // ---- measured static residency: analytic column next to live
+    // DeviceBuffers bytes, f32 vs block-quantized int8 ----
+    let state = ModelState::init(&rt.cfg, &mut Rng::new(7));
+    let (res_f32, nll_f32, secs_f32) =
+        measure_static(&rt, &state, QuantMode::Off);
+    let (res_q8, nll_q8, secs_q8) =
+        measure_static(&rt, &state, QuantMode::Int8);
+    let shapes: Vec<(String, Vec<usize>)> = rt.cfg.params.clone();
+    let (ana_f32, ana_q8) = analytic_bytes(&shapes);
+    let (l7_f32, l7_q8) = analytic_bytes(&backbone_shapes(&cfg));
+    let ppl_f32 = nll_f32.exp();
+    let ppl_q8 = nll_q8.exp();
+    let drift = (ppl_q8 - ppl_f32).abs() / ppl_f32;
+
+    let mut mt = Table::new(
+        &format!(
+            "Backbone static resident bytes — measured ({}) and \
+             analytic",
+            rt.cfg.name
+        ),
+        &["storage", "measured B", "analytic B", "llama7b analytic B"],
+    );
+    mt.rowv(vec![
+        "f32".into(),
+        res_f32.to_string(),
+        ana_f32.to_string(),
+        l7_f32.to_string(),
+    ]);
+    mt.rowv(vec![
+        "int8 (block-quantized)".into(),
+        res_q8.to_string(),
+        ana_q8.to_string(),
+        l7_q8.to_string(),
+    ]);
+    mt.rowv(vec![
+        "reduction".into(),
+        format!("{:.2}×", res_f32 as f64 / res_q8.max(1) as f64),
+        format!("{:.2}×", ana_f32 as f64 / ana_q8.max(1) as f64),
+        format!("{:.2}×", l7_f32 as f64 / l7_q8.max(1) as f64),
+    ]);
+    mt.print();
+    mt.write_csv("table14_measured");
+    eprintln!(
+        "[quant] ppl {ppl_f32:.4} → {ppl_q8:.4} ({:.3}% drift), \
+         fwd {:.1} → {:.1} ms",
+        100.0 * drift,
+        1e3 * secs_f32,
+        1e3 * secs_q8
+    );
+
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(rt.cfg.name.clone()));
+    j.insert(
+        "resident_bytes_f32".into(),
+        Json::Num(res_f32 as f64),
+    );
+    j.insert(
+        "resident_bytes_int8".into(),
+        Json::Num(res_q8 as f64),
+    );
+    j.insert(
+        "resident_reduction_x".into(),
+        Json::Num(res_f32 as f64 / res_q8.max(1) as f64),
+    );
+    j.insert(
+        "analytic_bytes_f32".into(),
+        Json::Num(ana_f32 as f64),
+    );
+    j.insert(
+        "analytic_bytes_int8".into(),
+        Json::Num(ana_q8 as f64),
+    );
+    j.insert(
+        "llama7b_analytic_bytes_f32".into(),
+        Json::Num(l7_f32 as f64),
+    );
+    j.insert(
+        "llama7b_analytic_bytes_int8".into(),
+        Json::Num(l7_q8 as f64),
+    );
+    j.insert("ppl_f32".into(), Json::Num(ppl_f32));
+    j.insert("ppl_int8".into(), Json::Num(ppl_q8));
+    j.insert("ppl_rel_drift".into(), Json::Num(drift));
+    j.insert("fwd_secs_f32".into(), Json::Num(secs_f32));
+    j.insert("fwd_secs_int8".into(), Json::Num(secs_q8));
+    j.insert(
+        "fwd_step_slowdown_x".into(),
+        Json::Num(secs_q8 / secs_f32.max(1e-12)),
+    );
+    write_bench_json("quant", &Json::Obj(j));
 }

@@ -213,6 +213,41 @@ fn cmd_info(args: &Args) -> Result<()> {
         cfg.batch,
         cfg.param_count
     );
+    // per-parameter storage: dense f32 next to the block-quantized
+    // int8 footprint, with the active LOSIA_QUANT policy's pick
+    // starred — the total line is what a static (frozen-backbone)
+    // plan keeps device-resident
+    let mode = losia::runtime::quant::mode();
+    println!(
+        "  parameters (LOSIA_QUANT={}):",
+        match mode {
+            losia::runtime::QuantMode::Int8 => "int8",
+            losia::runtime::QuantMode::Off => "off",
+        }
+    );
+    let (mut total_f32, mut total_resident) = (0usize, 0usize);
+    for (name, shape) in &cfg.params {
+        let f32_bytes = shape.iter().product::<usize>() * 4;
+        let q8_bytes =
+            losia::runtime::quant::quantized_byte_len(shape);
+        let quantized = mode == losia::runtime::QuantMode::Int8
+            && losia::runtime::quant::quantizable(name);
+        let resident =
+            if quantized { q8_bytes } else { f32_bytes };
+        total_f32 += f32_bytes;
+        total_resident += resident;
+        println!(
+            "    {name:<10} {shape:?} f32 {f32_bytes} B{} int8 \
+             {q8_bytes} B{}",
+            if quantized { "" } else { " *" },
+            if quantized { " *" } else { "" },
+        );
+    }
+    println!(
+        "    static resident bytes: {total_resident} \
+         (dense f32: {total_f32}, {:.2}× reduction)",
+        total_f32 as f64 / total_resident.max(1) as f64
+    );
     for (name, a) in &cfg.artifacts {
         println!("  artifact {name} ({})", a.file.display());
         println!("    inputs : {}", fmt_specs(&a.inputs));

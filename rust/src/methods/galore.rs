@@ -91,8 +91,9 @@ impl Driver for GaloreDriver {
 
     fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
         // frozen parameters upload once and stay device-resident
+        // (quantized under LOSIA_QUANT=int8 where the policy allows)
         for name in FROZEN {
-            self.plan.bind_f32(name, state.get(name))?;
+            self.plan.bind_param_auto(name, state.get(name))?;
         }
         Ok(())
     }

@@ -29,7 +29,7 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
 use crate::data::Batch;
 use crate::methods::{grads_artifact, Driver, SelectionEvent};
-use crate::runtime::{ExecPlan, OutputHandle, Runtime};
+use crate::runtime::{ExecPlan, OutputHandle, QTensor, Runtime};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -61,6 +61,12 @@ pub struct LosiaDriver {
     /// selection events queued for the trainer's observer stream
     /// (drained via `Driver::drain_events`)
     events: Vec<SelectionEvent>,
+    /// Pro + `LOSIA_QUANT=int8`: the quantized device image of each
+    /// backbone parameter. Folds at relocalization requantize only
+    /// the touched blocks of this cache (exact — a block's codes
+    /// depend on nothing outside the block) instead of re-encoding
+    /// the full tensor. Empty when quantization is off.
+    qcache: BTreeMap<String, QTensor>,
 }
 
 impl LosiaDriver {
@@ -210,6 +216,7 @@ impl LosiaDriver {
             rewarmer,
             warmup_steps: 0, // set by the trainer via set_warmup
             events,
+            qcache: BTreeMap::new(),
         })
     }
 
@@ -256,6 +263,56 @@ impl LosiaDriver {
             &self.lm_sel,
         )?;
         Ok(())
+    }
+
+    /// Upload the full backbone under the quantization policy,
+    /// (re)building the quantized cache so later folds can requantize
+    /// incrementally instead of re-encoding whole tensors.
+    fn bind_backbone(&mut self, state: &ModelState) -> Result<()> {
+        for (name, t) in &state.params {
+            if !self.plan.has_input(name) {
+                continue;
+            }
+            if self.plan.wants_q8(name) {
+                let q = QTensor::quantize(&t.shape, &t.data);
+                self.plan.bind_q8(name, &q)?;
+                self.qcache.insert(name.clone(), q);
+            } else {
+                self.plan.bind_f32(name, t)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-upload one backbone parameter after a host-side fold.
+    /// Quantized mode requantizes only the blocks covering the folded
+    /// `(rows, cols)` region of the cached image — bitwise identical
+    /// to a full requantize (pinned in `tests/quant_parity.rs`) at a
+    /// fraction of the encode cost — then re-binds it.
+    fn rebind_folded(
+        &mut self,
+        name: &str,
+        state: &ModelState,
+        rows: &[usize],
+        cols: &[usize],
+    ) -> Result<()> {
+        if self.plan.wants_q8(name) {
+            let t = state.get(name);
+            match self.qcache.get_mut(name) {
+                Some(q) => {
+                    q.requantize_rows_cols(&t.data, rows, cols);
+                }
+                None => {
+                    self.qcache.insert(
+                        name.to_string(),
+                        QTensor::quantize(&t.shape, &t.data),
+                    );
+                }
+            }
+            self.plan.bind_q8(name, &self.qcache[name])
+        } else {
+            self.plan.bind_f32(name, state.get(name))
+        }
     }
 
     /// Current effective weight of one linear: host W plus the pending
@@ -413,6 +470,22 @@ impl LosiaDriver {
             return Ok(());
         }
         if g < self.cfg.n_layers {
+            // capture the outgoing frames first: the fold lands on
+            // exactly these (ρ, γ) rows/cols, which is all the
+            // quantized re-bind needs to requantize
+            let old_sel: Vec<(String, Vec<usize>, Vec<usize>)> = self
+                .cfg
+                .linear_kinds
+                .iter()
+                .map(|kind| {
+                    let st = &self.subnets[g][kind];
+                    (
+                        kind.clone(),
+                        st.sel.rho.clone(),
+                        st.sel.gamma.clone(),
+                    )
+                })
+                .collect();
             if self.pro {
                 self.fold_group(state, g);
             }
@@ -431,14 +504,24 @@ impl LosiaDriver {
                 self.subnets[g].get_mut(&kind).unwrap().relocalize(sel);
             }
             if self.pro {
-                for kind in self.cfg.linear_kinds.clone() {
-                    self.plan.bind_f32(&kind, state.get(&kind))?;
+                for (kind, rho, gamma) in &old_sel {
+                    // a stacked [L, n, m] weight flattens to rows of
+                    // width m: layer g's folded rows sit at g·n + ρ
+                    let kd = self.cfg.kind(kind);
+                    let rows: Vec<usize> = rho
+                        .iter()
+                        .map(|&r| g * kd.n + r)
+                        .collect();
+                    self.rebind_folded(kind, state, &rows, gamma)?;
                 }
                 self.bind_indices()?;
             }
         } else {
             let score = accums["lm_head"].score();
             let col_imp = score.col_sums();
+            // fold_out lands on the outgoing γ_out columns (every
+            // row): capture them before the selection moves
+            let old_lm = self.lm_sel.clone();
             if self.pro {
                 self.fold_out(state);
             }
@@ -454,8 +537,9 @@ impl LosiaDriver {
                 initial: false,
             });
             if self.pro {
-                self.plan
-                    .bind_f32("lm_head", state.get("lm_head"))?;
+                let rows: Vec<usize> =
+                    (0..self.cfg.d_model).collect();
+                self.rebind_folded("lm_head", state, &rows, &old_lm)?;
                 self.plan.bind_indices(
                     "gamma_out",
                     &[self.cfg.vocab_sub],
@@ -585,7 +669,7 @@ impl Driver for LosiaDriver {
     fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
         if self.pro {
             // one-time upload of the frozen backbone + indices
-            self.plan.bind_params(state)?;
+            self.bind_backbone(state)?;
             self.bind_indices()?;
         }
         Ok(())
@@ -601,7 +685,7 @@ impl Driver for LosiaDriver {
                 self.fold_group(state, g);
             }
             self.fold_out(state);
-            self.plan.bind_params(state)?;
+            self.bind_backbone(state)?;
         }
         Ok(())
     }

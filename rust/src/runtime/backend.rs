@@ -66,6 +66,7 @@ use crate::config::{ArtifactSpec, Dtype, ModelCfg, TensorSpec};
 use crate::coordinator::state::ModelState;
 use crate::data::Batch;
 use crate::runtime::host::HostValue;
+use crate::runtime::quant::{self, QTensor};
 use crate::tensor::Tensor;
 
 // ------------------------------------------------------------- bindings
@@ -79,11 +80,18 @@ pub enum BindingKind {
 }
 
 /// A borrowed host tensor crossing into a backend — the upload-side
-/// twin of [`HostValue`], without the allocation.
+/// twin of [`HostValue`], without the allocation. `Q8` is the
+/// `static_quantized` storage class: block-quantized int8 codes plus
+/// per-block f32 scales standing in for an f32 manifest input.
 #[derive(Debug, Clone, Copy)]
 pub enum HostRef<'a> {
     F32 { shape: &'a [usize], data: &'a [f32] },
     I32 { shape: &'a [usize], data: &'a [i32] },
+    Q8 {
+        shape: &'a [usize],
+        codes: &'a [i8],
+        scales: &'a [f32],
+    },
 }
 
 impl<'a> HostRef<'a> {
@@ -94,17 +102,29 @@ impl<'a> HostRef<'a> {
         }
     }
 
+    pub fn quantized(q: &'a QTensor) -> Self {
+        HostRef::Q8 {
+            shape: &q.shape,
+            codes: &q.codes,
+            scales: &q.scales,
+        }
+    }
+
     pub fn shape(&self) -> &[usize] {
         match self {
             HostRef::F32 { shape, .. } => shape,
             HostRef::I32 { shape, .. } => shape,
+            HostRef::Q8 { shape, .. } => shape,
         }
     }
 
+    /// The *logical* dtype — a quantized ref reports `F32` because it
+    /// stands in for an f32 manifest input; int8 is a storage detail.
     pub fn dtype(&self) -> Dtype {
         match self {
             HostRef::F32 { .. } => Dtype::F32,
             HostRef::I32 { .. } => Dtype::I32,
+            HostRef::Q8 { .. } => Dtype::F32,
         }
     }
 
@@ -137,6 +157,15 @@ impl<'a> HostRef<'a> {
                 shape: shape.to_vec(),
                 data: data.to_vec(),
             },
+            HostRef::Q8 {
+                shape,
+                codes,
+                scales,
+            } => HostValue::Q8(QTensor {
+                shape: shape.to_vec(),
+                codes: codes.to_vec(),
+                scales: scales.to_vec(),
+            }),
         }
     }
 }
@@ -149,6 +178,7 @@ impl<'a> From<&'a HostValue> for HostRef<'a> {
                 shape,
                 data,
             },
+            HostValue::Q8(q) => HostRef::quantized(q),
         }
     }
 }
@@ -318,6 +348,14 @@ pub trait DeviceBuffers {
     /// Execute over the uploaded inputs; device-resident outputs in
     /// manifest order.
     fn execute(&mut self) -> Result<Vec<Box<dyn DeviceValue>>>;
+
+    /// Resident payload bytes currently held in input slot `slot` (0
+    /// if unbound). Backends that cannot introspect their storage may
+    /// keep the default; the reference backend reports exact sizes,
+    /// which is what the quantization benches and `losia info` read.
+    fn resident_bytes(&self, _slot: usize) -> usize {
+        0
+    }
 
     /// Drop any backend state the plan carries **between** `execute()`
     /// calls beyond the input slots themselves (e.g. the reference
@@ -691,6 +729,66 @@ impl ExecPlan {
         self.bind(name, HostRef::tensor(t))
     }
 
+    /// Bind a block-quantized int8 value into a **static** slot (the
+    /// `static_quantized` binding class). Per-step inputs change every
+    /// call, so quantizing them would pay the encode cost for no
+    /// resident-byte win — that's rejected here, loudly.
+    pub fn bind_q8(&mut self, name: &str, q: &QTensor) -> Result<()> {
+        anyhow::ensure!(
+            self.is_static(name),
+            "artifact {:?}: input {:?} is per-step — quantized \
+             bindings are static-only ({})",
+            self.exe.spec().name,
+            name,
+            self.exe.spec().signature()
+        );
+        self.bind(name, HostRef::quantized(q))
+    }
+
+    /// Bind one parameter under the session quantization policy: a
+    /// static, quantizable binding is encoded to int8 when
+    /// `LOSIA_QUANT=int8` (or [`quant::set_mode`]) is active;
+    /// everything else stays dense f32.
+    pub fn bind_param_auto(
+        &mut self,
+        name: &str,
+        t: &Tensor,
+    ) -> Result<()> {
+        if self.wants_q8(name) {
+            self.bind_q8(name, &QTensor::quantize(&t.shape, &t.data))
+        } else {
+            self.bind_f32(name, t)
+        }
+    }
+
+    /// Does the current quantization policy store `name` as int8 in
+    /// this plan? (Static + quantizable + mode is `Int8`.)
+    pub fn wants_q8(&self, name: &str) -> bool {
+        quant::mode() == quant::QuantMode::Int8
+            && self.is_static(name)
+            && quant::quantizable(name)
+    }
+
+    /// Resident payload bytes currently bound in `name`'s slot (0 if
+    /// unknown or unbound).
+    pub fn binding_bytes(&self, name: &str) -> usize {
+        self.index
+            .get(name)
+            .map(|&i| self.bufs.resident_bytes(i))
+            .unwrap_or(0)
+    }
+
+    /// Total resident payload bytes across the plan's **static**
+    /// slots — the backbone memory footprint a quantized run shrinks.
+    pub fn static_resident_bytes(&self) -> usize {
+        self.kinds
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| **k == BindingKind::Static)
+            .map(|(i, _)| self.bufs.resident_bytes(i))
+            .sum()
+    }
+
     pub fn bind_i32(
         &mut self,
         name: &str,
@@ -723,10 +821,13 @@ impl ExecPlan {
     }
 
     /// Bind every model parameter the manifest declares, by name.
+    /// Each goes through the quantization policy
+    /// ([`ExecPlan::bind_param_auto`]): with `LOSIA_QUANT=int8`,
+    /// static quantizable parameters land device-side as int8.
     pub fn bind_params(&mut self, state: &ModelState) -> Result<()> {
         for (name, t) in &state.params {
             if self.has_input(name) {
-                self.bind_f32(name, t)?;
+                self.bind_param_auto(name, t)?;
             }
         }
         Ok(())
@@ -1246,5 +1347,77 @@ mod tests {
         plan.bind_batch(&batch).unwrap();
         plan.run().unwrap();
         assert!(!plan.is_bound("embed"));
+    }
+
+    #[test]
+    fn bind_q8_rejects_per_step_slots() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut plan = ExecPlan::new(exe, &[]).unwrap();
+        let mut rng = Rng::new(8);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let embed = state.get("embed");
+        let q = QTensor::quantize(&embed.shape, &embed.data);
+        let err = plan.bind_q8("embed", &q).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("static-only"), "{msg}");
+    }
+
+    #[test]
+    fn quantized_static_matches_dequantized_dense_bitwise() {
+        // The kernel contract: running with a q8-bound static is
+        // bitwise identical to running dense on its dequantization
+        // (the fused kernels dequantize with the same expression).
+        // Also pins the resident-byte accounting both ways.
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let mut rng = Rng::new(9);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        let embed = state.get("embed");
+        let q = QTensor::quantize(&embed.shape, &embed.data);
+
+        let mut qplan =
+            ExecPlan::new(Arc::clone(&exe), &["embed"]).unwrap();
+        qplan.bind_q8("embed", &q).unwrap();
+        assert_eq!(qplan.binding_bytes("embed"), q.byte_len());
+        assert_eq!(qplan.static_resident_bytes(), q.byte_len());
+        for (n, t) in &state.params {
+            if n != "embed" {
+                qplan.bind_f32(n, t).unwrap();
+            }
+        }
+        qplan.bind_batch(&batch).unwrap();
+        let q_out = qplan.run_host().unwrap();
+
+        let mut dplan =
+            ExecPlan::new(Arc::clone(&exe), &["embed"]).unwrap();
+        let dq =
+            Tensor::from_vec(&embed.shape, q.dequantize());
+        dplan.bind_f32("embed", &dq).unwrap();
+        assert_eq!(
+            dplan.binding_bytes("embed"),
+            dq.data.len() * 4,
+            "dense resident bytes"
+        );
+        for (n, t) in &state.params {
+            if n != "embed" {
+                dplan.bind_f32(n, t).unwrap();
+            }
+        }
+        dplan.bind_batch(&batch).unwrap();
+        let d_out = dplan.run_host().unwrap();
+
+        for (a, b) in q_out.iter().zip(&d_out) {
+            let ab: Vec<u32> =
+                a.data.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> =
+                b.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb, "q8 static diverged from dequant");
+        }
+        assert!(
+            q.byte_len() * 3 < embed.data.len() * 4,
+            "quantized embed should be well under 1/3 of f32"
+        );
     }
 }

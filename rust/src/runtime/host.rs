@@ -7,14 +7,19 @@
 use anyhow::{bail, Result};
 
 use crate::config::{Dtype, TensorSpec};
+use crate::runtime::quant::QTensor;
 use crate::tensor::Tensor;
 
-/// A host tensor: either f32 (weights/activations) or i32 (token ids,
-/// subnet indices, probe selectors).
+/// A host tensor: f32 (weights/activations), i32 (token ids, subnet
+/// indices, probe selectors), or a block-quantized int8 weight
+/// ([`QTensor`] — the `static_quantized` storage class for frozen
+/// backbones; logically still an f32 tensor, checked against f32
+/// manifest specs).
 #[derive(Debug, Clone)]
 pub enum HostValue {
     F32(Tensor),
     I32 { shape: Vec<usize>, data: Vec<i32> },
+    Q8(QTensor),
 }
 
 impl HostValue {
@@ -37,13 +42,28 @@ impl HostValue {
         match self {
             HostValue::F32(t) => &t.shape,
             HostValue::I32 { shape, .. } => shape,
+            HostValue::Q8(q) => &q.shape,
         }
     }
 
+    /// The *logical* dtype: a quantized value reports `F32` (it
+    /// stands in for an f32 manifest input; the int8 codes are a
+    /// storage detail). Use [`Self::byte_len`] for the storage story.
     pub fn dtype(&self) -> Dtype {
         match self {
             HostValue::F32(_) => Dtype::F32,
             HostValue::I32 { .. } => Dtype::I32,
+            HostValue::Q8(_) => Dtype::F32,
+        }
+    }
+
+    /// Resident payload bytes of this value as stored: 4 B/element
+    /// for f32/i32, codes + per-block scales for quantized.
+    pub fn byte_len(&self) -> usize {
+        match self {
+            HostValue::F32(t) => t.data.len() * 4,
+            HostValue::I32 { data, .. } => data.len() * 4,
+            HostValue::Q8(q) => q.byte_len(),
         }
     }
 
@@ -55,6 +75,12 @@ impl HostValue {
             HostValue::I32 { shape, .. } => bail!(
                 "expected an f32 value, got i32 with shape {shape:?}"
             ),
+            HostValue::Q8(q) => bail!(
+                "expected a dense f32 value, got a block-quantized \
+                 int8 tensor with shape {:?} (this consumer has no \
+                 dequant-fused path)",
+                q.shape
+            ),
         }
     }
 
@@ -64,6 +90,26 @@ impl HostValue {
             HostValue::F32(t) => Ok(t),
             HostValue::I32 { shape, .. } => bail!(
                 "expected an f32 value, got i32 with shape {shape:?}"
+            ),
+            HostValue::Q8(q) => bail!(
+                "expected a dense f32 value, got a block-quantized \
+                 int8 tensor with shape {:?} (this consumer has no \
+                 dequant-fused path)",
+                q.shape
+            ),
+        }
+    }
+
+    /// Borrow the quantized payload; storage-class mismatch is a
+    /// typed error.
+    pub fn as_q8(&self) -> Result<&QTensor> {
+        match self {
+            HostValue::Q8(q) => Ok(q),
+            other => bail!(
+                "expected a block-quantized int8 value, got {:?} with \
+                 shape {:?}",
+                other.dtype(),
+                other.shape()
             ),
         }
     }
@@ -75,6 +121,11 @@ impl HostValue {
             HostValue::F32(t) => bail!(
                 "expected an i32 value, got f32 with shape {:?}",
                 t.shape
+            ),
+            HostValue::Q8(q) => bail!(
+                "expected an i32 value, got a block-quantized int8 \
+                 tensor with shape {:?}",
+                q.shape
             ),
         }
     }

@@ -64,6 +64,8 @@ use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
+use crate::runtime::quant::QBLOCK;
+
 /// Minimum multiply-accumulate count before a compute kernel fans out
 /// to threads; below this, spawn overhead dominates the work.
 pub const PAR_MIN_MACS: usize = 1 << 18;
@@ -518,6 +520,392 @@ fn mm_tn_chunk(
         }
         i0 += il;
     }
+}
+
+// ------------------------------------------- dequant-fused q8 GEMMs
+//
+// The same blocked loops with the weight operand stored as int8 codes
+// + per-block f32 scales (`runtime::quant` layout: blocks tile the
+// last axis, scale of element `(kk, j)` at `scales[kk*bpr +
+// j/QBLOCK]`). Each register tile dequantizes its ≤ JT-wide B row
+// into a stack buffer and then accumulates in f32 exactly like the
+// f32 kernels — same chunking, same k-ascending per-element order —
+// so two properties hold for free:
+//
+// 1. serial and parallel results are bitwise identical (the
+//    determinism contract above, extended to q8 by
+//    `tests/kernel_parity.rs` at LOSIA_KERNEL_THREADS=1/4), and
+// 2. `mm_q8(a, q)` is bitwise identical to `mm(a, q.dequantize())`
+//    (pinned by `q8_gemms_match_dequantized_f32_bitwise` below) —
+//    quantization error lives entirely in the stored codes, never in
+//    the contraction.
+
+/// `out[n,m] += A[n,k] @ dequant(Bq)[k,m]` where `Bq` is `[k, m]`
+/// int8 codes + per-block scales.
+pub fn mm_q8_into(
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    mm_q8_into_threads(kernel_threads(), out, a, bcodes, bscales, n, k, m);
+}
+
+/// Allocating convenience wrapper over [`mm_q8_into`].
+pub fn mm_q8(
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    mm_q8_into(&mut out, a, bcodes, bscales, n, k, m);
+    out
+}
+
+/// [`mm_q8_into`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_q8_into_threads(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(bcodes.len(), k * m);
+    debug_assert_eq!(bscales.len(), k * m.div_ceil(QBLOCK));
+    if n == 0 || m == 0 {
+        return; // empty output; avoid the rows = len/m division
+    }
+    let t = effective_threads(threads, n, n * k * m);
+    for_row_chunks(t, out, n, m, &|row0, chunk| {
+        let rows = chunk.len() / m;
+        mm_chunk_q8(
+            chunk,
+            &a[row0 * k..(row0 + rows) * k],
+            bcodes,
+            bscales,
+            k,
+            m,
+        );
+    });
+}
+
+/// `out[n,m] += A[k,n]ᵀ @ dequant(Bq)[k,m]`.
+pub fn mm_tn_q8_into(
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    k: usize,
+    n: usize,
+    m: usize,
+) {
+    mm_tn_q8_into_threads(kernel_threads(), out, a, bcodes, bscales, k, n, m);
+}
+
+/// Allocating convenience wrapper over [`mm_tn_q8_into`].
+pub fn mm_tn_q8(
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    k: usize,
+    n: usize,
+    m: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    mm_tn_q8_into(&mut out, a, bcodes, bscales, k, n, m);
+    out
+}
+
+/// [`mm_tn_q8_into`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_tn_q8_into_threads(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    k: usize,
+    n: usize,
+    m: usize,
+) {
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(bcodes.len(), k * m);
+    debug_assert_eq!(bscales.len(), k * m.div_ceil(QBLOCK));
+    if n == 0 || m == 0 {
+        return; // empty output; avoid the rows = len/m division
+    }
+    let t = effective_threads(threads, n, n * k * m);
+    for_row_chunks(t, out, n, m, &|row0, chunk| {
+        mm_tn_chunk_q8(chunk, row0, a, bcodes, bscales, n, k, m);
+    });
+}
+
+/// `out[n,m] += A[n,k] @ dequant(Bq)[m,k]ᵀ` where `Bq` is `[m, k]`
+/// (blocks along `k`). Like [`mm_nt_into_threads`], `B` is
+/// dequant-transposed once up front (O(km), amortized against O(nkm)
+/// compute); the contraction then reuses the f32 [`mm_chunk`], so the
+/// determinism and dequant-equivalence properties carry over.
+pub fn mm_nt_q8_into(
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    mm_nt_q8_impl(kernel_threads(), out, a, bcodes, bscales, n, k, m, None);
+}
+
+/// Allocating convenience wrapper over [`mm_nt_q8_into`].
+pub fn mm_nt_q8(
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * m];
+    mm_nt_q8_into(&mut out, a, bcodes, bscales, n, k, m);
+    out
+}
+
+/// [`mm_nt_q8_into`] with an explicit worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_nt_q8_into_threads(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    mm_nt_q8_impl(threads, out, a, bcodes, bscales, n, k, m, None);
+}
+
+/// [`mm_nt_q8_into`] drawing the dequant-transpose scratch from
+/// `pool` — the interpreter's backward path (`dx = dy · Wᵀ` against a
+/// quantized frozen W) calls this once per linear per step.
+#[allow(clippy::too_many_arguments)]
+pub fn mm_nt_q8_into_pooled(
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    pool: &Pool,
+) {
+    mm_nt_q8_impl(
+        kernel_threads(),
+        out,
+        a,
+        bcodes,
+        bscales,
+        n,
+        k,
+        m,
+        Some(pool),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn mm_nt_q8_impl(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    pool: Option<&Pool>,
+) {
+    let bpr = k.div_ceil(QBLOCK);
+    debug_assert_eq!(out.len(), n * m);
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(bcodes.len(), m * k);
+    debug_assert_eq!(bscales.len(), m * bpr);
+    if n == 0 || m == 0 {
+        return; // empty output; avoid the rows = len/m division
+    }
+    let mut bt = match pool {
+        Some(p) => p.zeroed(bcodes.len()),
+        None => vec![0.0f32; bcodes.len()],
+    };
+    // fused dequant-transpose: bt[j, i] = codes[i, j] · scale(i, j)
+    for i in 0..m {
+        let crow = &bcodes[i * k..(i + 1) * k];
+        let srow = &bscales[i * bpr..];
+        for (j, &c) in crow.iter().enumerate() {
+            bt[j * m + i] =
+                c as f32 * srow[j / QBLOCK];
+        }
+    }
+    let t = effective_threads(threads, n, n * k * m);
+    for_row_chunks(t, out, n, m, &|row0, chunk| {
+        let rows = chunk.len() / m;
+        mm_chunk(chunk, &a[row0 * k..(row0 + rows) * k], &bt, k, m);
+    });
+    if let Some(p) = pool {
+        p.recycle(bt);
+    }
+}
+
+/// [`mm_chunk`] with a quantized `B`: each `kk` iteration dequantizes
+/// its ≤ JT-wide `B` row tile into a stack buffer, then accumulates
+/// exactly as the f32 kernel does. One scale lookup per element; a
+/// tile spans at most two QBLOCK blocks (JT ≤ QBLOCK).
+fn mm_chunk_q8(
+    out: &mut [f32],
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    k: usize,
+    m: usize,
+) {
+    let bpr = m.div_ceil(QBLOCK);
+    let rows = out.len() / m;
+    debug_assert_eq!(a.len(), rows * k);
+    let mut i0 = 0usize;
+    while i0 < rows {
+        let il = RT.min(rows - i0);
+        let mut j0 = 0usize;
+        while j0 < m {
+            let jl = JT.min(m - j0);
+            let mut acc = [[0.0f32; JT]; RT];
+            for kk in 0..k {
+                let brow = &bcodes[kk * m + j0..kk * m + j0 + jl];
+                let srow = &bscales[kk * bpr..];
+                let mut bdq = [0.0f32; JT];
+                for (j, (x, &c)) in
+                    bdq.iter_mut().zip(brow).enumerate()
+                {
+                    *x = c as f32
+                        * srow[(j0 + j) / QBLOCK];
+                }
+                for r in 0..il {
+                    let av = a[(i0 + r) * k + kk];
+                    for (x, &bv) in
+                        acc[r].iter_mut().zip(&bdq[..jl])
+                    {
+                        *x += av * bv;
+                    }
+                }
+            }
+            for r in 0..il {
+                let off = (i0 + r) * m + j0;
+                let orow = &mut out[off..off + jl];
+                for (o, &x) in orow.iter_mut().zip(&acc[r][..jl]) {
+                    *o += x;
+                }
+            }
+            j0 += jl;
+        }
+        i0 += il;
+    }
+}
+
+/// [`mm_tn_chunk`] with a quantized `B` (same per-tile dequant as
+/// [`mm_chunk_q8`], transposed-A access).
+#[allow(clippy::too_many_arguments)]
+fn mm_tn_chunk_q8(
+    out: &mut [f32],
+    row0: usize,
+    a: &[f32],
+    bcodes: &[i8],
+    bscales: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    let bpr = m.div_ceil(QBLOCK);
+    let rows = out.len() / m;
+    let mut i0 = 0usize;
+    while i0 < rows {
+        let il = RT.min(rows - i0);
+        let mut j0 = 0usize;
+        while j0 < m {
+            let jl = JT.min(m - j0);
+            let mut acc = [[0.0f32; JT]; RT];
+            for kk in 0..k {
+                let brow = &bcodes[kk * m + j0..kk * m + j0 + jl];
+                let srow = &bscales[kk * bpr..];
+                let arow = &a[kk * n..(kk + 1) * n];
+                let mut bdq = [0.0f32; JT];
+                for (j, (x, &c)) in
+                    bdq.iter_mut().zip(brow).enumerate()
+                {
+                    *x = c as f32
+                        * srow[(j0 + j) / QBLOCK];
+                }
+                for r in 0..il {
+                    let av = arow[row0 + i0 + r];
+                    for (x, &bv) in
+                        acc[r].iter_mut().zip(&bdq[..jl])
+                    {
+                        *x += av * bv;
+                    }
+                }
+            }
+            for r in 0..il {
+                let off = (i0 + r) * m + j0;
+                let orow = &mut out[off..off + jl];
+                for (o, &x) in orow.iter_mut().zip(&acc[r][..jl]) {
+                    *o += x;
+                }
+            }
+            j0 += jl;
+        }
+        i0 += il;
+    }
+}
+
+/// [`gather_rows`] against a quantized table (`[limit, d]` codes +
+/// scales): each selected row dequantizes straight into its output
+/// slot. Pure per-row copies — deterministic under any partition.
+pub fn gather_rows_q8(
+    out: &mut [f32],
+    codes: &[i8],
+    scales: &[f32],
+    ids: &[i32],
+    d: usize,
+    limit: usize,
+) {
+    let bpr = d.div_ceil(QBLOCK);
+    let rows = ids.len();
+    debug_assert_eq!(out.len(), rows * d);
+    debug_assert!(limit * d <= codes.len());
+    let t = effective_map_threads(kernel_threads(), rows, rows * d);
+    for_row_chunks(t, out, rows, d, &|row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(d).enumerate() {
+            let id = (ids[row0 + r].max(0) as usize).min(limit - 1);
+            let crow = &codes[id * d..(id + 1) * d];
+            let srow = &scales[id * bpr..];
+            for (j, (o, &c)) in
+                orow.iter_mut().zip(crow).enumerate()
+            {
+                *o = c as f32 * srow[j / QBLOCK];
+            }
+        }
+    });
 }
 
 // ------------------------------------------------- elementwise kernels
@@ -1794,6 +2182,111 @@ mod tests {
                 (base[i] + plain[i]).to_bits()
             );
         }
+    }
+
+    // ------------------------------------------------ q8 GEMM parity
+
+    /// The dequant-fused contract: `mm_*_q8` over (codes, scales) is
+    /// bitwise the plain f32 kernel over the dequantized matrix — the
+    /// per-tile dequant expression is the same `code · scale` product
+    /// in the same k-ascending order.
+    #[test]
+    fn q8_gemms_match_dequantized_dense_bitwise() {
+        use crate::runtime::quant::QTensor;
+        // ragged shapes: partial RT/JT tiles AND a ragged last quant
+        // block (k, m not multiples of QBLOCK)
+        for &(n, k, m) in
+            &[(1, 1, 1), (5, 7, 9), (33, 17, 40), (13, 70, 67)]
+        {
+            let a = randv(n * k, 50);
+            let at = randv(k * n, 51);
+
+            let qb = QTensor::quantize(&[k, m], &randv(k * m, 52));
+            let dqb = qb.dequantize();
+            let mut got = vec![0.0f32; n * m];
+            mm_q8_into_threads(
+                1, &mut got, &a, &qb.codes, &qb.scales, n, k, m,
+            );
+            let mut want = vec![0.0f32; n * m];
+            mm_into_threads(1, &mut want, &a, &dqb, n, k, m);
+            assert_bitwise_eq(&got, &want, "mm_q8");
+
+            let mut got = vec![0.0f32; n * m];
+            mm_tn_q8_into_threads(
+                1, &mut got, &at, &qb.codes, &qb.scales, k, n, m,
+            );
+            let mut want = vec![0.0f32; n * m];
+            mm_tn_into_threads(1, &mut want, &at, &dqb, k, n, m);
+            assert_bitwise_eq(&got, &want, "mm_tn_q8");
+
+            let qbt = QTensor::quantize(&[m, k], &randv(m * k, 53));
+            let dqbt = qbt.dequantize();
+            let mut got = vec![0.0f32; n * m];
+            mm_nt_q8_into_threads(
+                1, &mut got, &a, &qbt.codes, &qbt.scales, n, k, m,
+            );
+            let mut want = vec![0.0f32; n * m];
+            mm_nt_into_threads(1, &mut want, &a, &dqbt, n, k, m);
+            assert_bitwise_eq(&got, &want, "mm_nt_q8");
+        }
+    }
+
+    #[test]
+    fn q8_gemms_serial_parallel_agree_bitwise() {
+        use crate::runtime::quant::QTensor;
+        let (n, k, m) = (97, 70, 49);
+        assert!(n * k * m >= PAR_MIN_MACS);
+        let a = randv(n * k, 60);
+        let at = randv(k * n, 61);
+        let qb = QTensor::quantize(&[k, m], &randv(k * m, 62));
+        let qbt = QTensor::quantize(&[m, k], &randv(m * k, 63));
+        for threads in [2, 3, 8] {
+            let mut serial = vec![0.0f32; n * m];
+            mm_q8_into_threads(
+                1, &mut serial, &a, &qb.codes, &qb.scales, n, k, m,
+            );
+            let mut par = vec![0.0f32; n * m];
+            mm_q8_into_threads(
+                threads, &mut par, &a, &qb.codes, &qb.scales, n, k, m,
+            );
+            assert_bitwise_eq(&serial, &par, "mm_q8 par");
+
+            let mut serial = vec![0.0f32; n * m];
+            mm_tn_q8_into_threads(
+                1, &mut serial, &at, &qb.codes, &qb.scales, k, n, m,
+            );
+            let mut par = vec![0.0f32; n * m];
+            mm_tn_q8_into_threads(
+                threads, &mut par, &at, &qb.codes, &qb.scales, k, n, m,
+            );
+            assert_bitwise_eq(&serial, &par, "mm_tn_q8 par");
+
+            let mut serial = vec![0.0f32; n * m];
+            mm_nt_q8_into_threads(
+                1, &mut serial, &a, &qbt.codes, &qbt.scales, n, k, m,
+            );
+            let mut par = vec![0.0f32; n * m];
+            mm_nt_q8_into_threads(
+                threads, &mut par, &a, &qbt.codes, &qbt.scales, n, k,
+                m,
+            );
+            assert_bitwise_eq(&serial, &par, "mm_nt_q8 par");
+        }
+    }
+
+    #[test]
+    fn gather_rows_q8_matches_dense_gather_bitwise() {
+        use crate::runtime::quant::QTensor;
+        // ragged row width (blocks of 64 → 70 leaves a 6-wide tail)
+        let (v, d) = (19, 70);
+        let q = QTensor::quantize(&[v, d], &randv(v * d, 70));
+        let dq = q.dequantize();
+        let ids = [0i32, 7, 18, 3, 3, -1, 25];
+        let mut got = vec![0.0f32; ids.len() * d];
+        gather_rows_q8(&mut got, &q.codes, &q.scales, &ids, d, v);
+        let mut want = vec![0.0f32; ids.len() * d];
+        gather_rows(&mut want, &dq, &ids, d, v);
+        assert_bitwise_eq(&got, &want, "gather_rows_q8");
     }
 
     // ------------------------------------------- elementwise parity

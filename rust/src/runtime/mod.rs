@@ -22,6 +22,7 @@ pub mod backend;
 pub mod host;
 pub mod kernels;
 pub mod pjrt;
+pub mod quant;
 pub mod reference;
 
 pub use backend::{
@@ -31,6 +32,7 @@ pub use backend::{
 };
 pub use host::HostValue;
 pub use pjrt::PjrtBackend;
+pub use quant::{QTensor, QuantMode};
 pub use reference::RefBackend;
 
 use std::path::PathBuf;

@@ -127,6 +127,12 @@ fn to_literal(value: HostRef<'_>) -> Result<xla::Literal> {
         HostRef::I32 { data, .. } => {
             xla::Literal::vec1(data).reshape(&dims)?
         }
+        HostRef::Q8 { shape, .. } => anyhow::bail!(
+            "quantized (int8) bindings are not supported by the pjrt \
+             backend yet — shape {shape:?} would need an int8 literal \
+             and dequant-fused HLO; run with LOSIA_BACKEND=ref or \
+             unset LOSIA_QUANT"
+        ),
     };
     Ok(lit)
 }

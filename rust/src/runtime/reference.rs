@@ -33,6 +33,7 @@ use crate::runtime::backend::{
 };
 use crate::runtime::host::HostValue;
 use crate::runtime::kernels::{self, add_into, Pool};
+use crate::runtime::quant::QBLOCK;
 use crate::tensor::Tensor;
 
 const NORM_EPS: f32 = 1e-6;
@@ -157,6 +158,21 @@ fn try_reuse_slot(slot: &mut Arc<HostValue>, value: HostRef<'_>) -> bool {
             d0.copy_from_slice(data);
             true
         }
+        (
+            HostValue::Q8(q),
+            HostRef::Q8 {
+                shape,
+                codes,
+                scales,
+            },
+        ) if q.shape.as_slice() == shape
+            && q.codes.len() == codes.len()
+            && q.scales.len() == scales.len() =>
+        {
+            q.codes.copy_from_slice(codes);
+            q.scales.copy_from_slice(scales);
+            true
+        }
         _ => false,
     }
 }
@@ -233,6 +249,13 @@ impl DeviceBuffers for RefBuffers {
 
     fn clear_state(&mut self) {
         self.decode = None;
+    }
+
+    fn resident_bytes(&self, slot: usize) -> usize {
+        self.slots[slot]
+            .as_ref()
+            .map(|v| v.byte_len())
+            .unwrap_or(0)
     }
 }
 
@@ -476,9 +499,8 @@ fn run_decode(
         }
     }
 
-    let embed = model.f32_in("embed")?;
     let mut x = pool.zeroed(total * dm.d);
-    kernels::gather_rows(&mut x, &embed.data, &row_tok, dm.d, dm.v);
+    model.gather_w(&mut x, "embed", &row_tok, dm.d, dm.v)?;
 
     let norm1 = model.f32_in("norm1")?;
     let norm2 = model.f32_in("norm2")?;
@@ -595,8 +617,8 @@ fn run_decode(
     let (xn, invf) = model.rmsnorm_p(&xlast, &norm_f.data, na, dm.d);
     pool.recycle(invf);
     pool.recycle(xlast);
-    let lm_head = model.f32_in("lm_head")?;
-    let mut lrows = model.mm_p(&xn, &lm_head.data, na, dm.d, dm.v);
+    let lm_head = model.weight("lm_head")?;
+    let mut lrows = model.mm_w(&xn, lm_head, na, dm.d, dm.v);
     if model.variant == Variant::Losia {
         let vs = cfg.vocab_sub;
         let gamma = model.indices("gamma_out", 0, vs, dm.v)?;
@@ -657,6 +679,28 @@ fn scatter_cols(
         let vrow = &v[r * cols.len()..(r + 1) * cols.len()];
         for (j, &c) in cols.iter().enumerate() {
             row[c] += vrow[j];
+        }
+    }
+}
+
+/// Dequantize `rows` rows of width `m` (blocks tiling the last axis)
+/// into `out` — the dense-view fallback for consumers without a fused
+/// path (DoRA's elementwise frames). Uses the same expression as the
+/// fused kernels, so fallback and fused paths agree bitwise.
+fn dequant_rows(
+    out: &mut [f32],
+    codes: &[i8],
+    scales: &[f32],
+    rows: usize,
+    m: usize,
+) {
+    let bpr = m.div_ceil(QBLOCK);
+    for r in 0..rows {
+        let crow = &codes[r * m..(r + 1) * m];
+        let srow = &scales[r * bpr..(r + 1) * bpr];
+        let orow = &mut out[r * m..(r + 1) * m];
+        for (j, (o, &c)) in orow.iter_mut().zip(crow).enumerate() {
+            *o = c as f32 * srow[j / QBLOCK];
         }
     }
 }
@@ -759,6 +803,17 @@ impl FwdCache {
 struct Sinks {
     params: Option<BTreeMap<String, Tensor>>,
     extras: BTreeMap<String, Tensor>,
+}
+
+/// A borrowed weight in whichever storage class it was bound: dense
+/// f32, or block-quantized int8 codes + per-block scales (the
+/// `static_quantized` class). Consumers dispatch to the matching
+/// kernel — the fused q8 GEMMs are bitwise identical to running the
+/// f32 GEMM on the dequantization.
+#[derive(Clone, Copy)]
+enum WRef<'a> {
+    Dense(&'a [f32]),
+    Q8 { codes: &'a [i8], scales: &'a [f32] },
 }
 
 struct Model<'a> {
@@ -890,11 +945,125 @@ impl<'a> Model<'a> {
         }
     }
 
-    /// Layer slice of a stacked [L, n, m] parameter.
-    fn layer_w(&self, kind: &str, l: usize) -> Result<&[f32]> {
+    /// A weight input in whichever storage class it was bound.
+    fn weight(&self, name: &str) -> Result<WRef<'_>> {
+        match self.inp.get(name) {
+            Some(HostValue::F32(t)) => Ok(WRef::Dense(&t.data)),
+            Some(HostValue::Q8(q)) => Ok(WRef::Q8 {
+                codes: &q.codes,
+                scales: &q.scales,
+            }),
+            Some(_) => bail!(
+                "reference backend: input {name:?} should be an f32 \
+                 or quantized weight"
+            ),
+            None => bail!(
+                "reference backend: missing input {name:?}"
+            ),
+        }
+    }
+
+    /// Layer slice of a stacked [L, n, m] parameter. Quantization
+    /// blocks tile the last axis only, so the slice stays
+    /// block-aligned in both storage classes.
+    fn layer_weight(&self, kind: &str, l: usize) -> Result<WRef<'_>> {
         let kd = self.cfg.kind(kind);
-        let t = self.f32_in(kind)?;
-        Ok(&t.data[l * kd.n * kd.m..(l + 1) * kd.n * kd.m])
+        let (n, m) = (kd.n, kd.m);
+        Ok(match self.weight(kind)? {
+            WRef::Dense(d) => {
+                WRef::Dense(&d[l * n * m..(l + 1) * n * m])
+            }
+            WRef::Q8 { codes, scales } => {
+                let bpr = m.div_ceil(QBLOCK);
+                WRef::Q8 {
+                    codes: &codes[l * n * m..(l + 1) * n * m],
+                    scales: &scales[l * n * bpr..(l + 1) * n * bpr],
+                }
+            }
+        })
+    }
+
+    /// `A[n,k] @ W[k,m]` into a pooled buffer, fused-dequant when the
+    /// weight is int8.
+    fn mm_w(
+        &self,
+        a: &[f32],
+        w: WRef<'_>,
+        n: usize,
+        k: usize,
+        m: usize,
+    ) -> Vec<f32> {
+        match w {
+            WRef::Dense(b) => self.mm_p(a, b, n, k, m),
+            WRef::Q8 { codes, scales } => {
+                let mut out = self.pool.zeroed(n * m);
+                kernels::mm_q8_into(&mut out, a, codes, scales, n, k, m);
+                out
+            }
+        }
+    }
+
+    /// `A[n,k] @ W[m,k]ᵀ` into a pooled buffer, fused-dequant when the
+    /// weight is int8.
+    fn mm_nt_w(
+        &self,
+        a: &[f32],
+        w: WRef<'_>,
+        n: usize,
+        k: usize,
+        m: usize,
+    ) -> Vec<f32> {
+        match w {
+            WRef::Dense(b) => self.mm_nt_p(a, b, n, k, m),
+            WRef::Q8 { codes, scales } => {
+                let mut out = self.pool.zeroed(n * m);
+                kernels::mm_nt_q8_into_pooled(
+                    &mut out, a, codes, scales, n, k, m, self.pool,
+                );
+                out
+            }
+        }
+    }
+
+    /// Row-gather from a weight table (the embedding lookup), either
+    /// storage class.
+    fn gather_w(
+        &self,
+        out: &mut [f32],
+        name: &str,
+        ids: &[i32],
+        d: usize,
+        limit: usize,
+    ) -> Result<()> {
+        match self.weight(name)? {
+            WRef::Dense(w) => {
+                kernels::gather_rows(out, w, ids, d, limit)
+            }
+            WRef::Q8 { codes, scales } => {
+                kernels::gather_rows_q8(out, codes, scales, ids, d, limit)
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense view of a `[rows, m]` weight: borrows it directly when
+    /// already f32, dequantizes into pooled scratch (stashed in `buf`
+    /// for the caller to recycle) when int8.
+    fn as_dense<'b>(
+        &self,
+        w: WRef<'b>,
+        buf: &'b mut Option<Vec<f32>>,
+        rows: usize,
+        m: usize,
+    ) -> &'b [f32] {
+        match w {
+            WRef::Dense(d) => d,
+            WRef::Q8 { codes, scales } => {
+                let mut out = self.pool.zeroed(rows * m);
+                dequant_rows(&mut out, codes, scales, rows, m);
+                buf.insert(out).as_slice()
+            }
+        }
     }
 
     fn probe(&self) -> Result<usize> {
@@ -922,10 +1091,9 @@ impl<'a> Model<'a> {
         let dm = self.dm;
         let rows = dm.b * dm.s;
         let tokens = self.i32_in("tokens")?;
-        let embed = self.f32_in("embed")?;
 
         let mut x = self.pool.zeroed(rows * dm.d);
-        kernels::gather_rows(&mut x, &embed.data, tokens, dm.d, dm.v);
+        self.gather_w(&mut x, "embed", tokens, dm.d, dm.v)?;
 
         let norm1 = self.f32_in("norm1")?;
         let norm2 = self.f32_in("norm2")?;
@@ -946,9 +1114,9 @@ impl<'a> Model<'a> {
         let norm_f = self.f32_in("norm_f")?;
         let (xnorm, invf) =
             self.rmsnorm_p(&x, &norm_f.data, rows, dm.d);
-        let lm_head = self.f32_in("lm_head")?;
+        let lm_head = self.weight("lm_head")?;
         let mut logits =
-            self.mm_p(&xnorm, &lm_head.data, rows, dm.d, dm.v);
+            self.mm_w(&xnorm, lm_head, rows, dm.d, dm.v);
         if self.variant == Variant::Losia {
             let vs = self.cfg.vocab_sub;
             let gamma =
@@ -1058,11 +1226,11 @@ impl<'a> Model<'a> {
         rows: usize,
     ) -> Result<Vec<f32>> {
         let kd = self.cfg.kind(kind);
-        let w = self.layer_w(kind, l)?;
+        let w = self.layer_weight(kind, l)?;
         match self.variant {
-            Variant::Plain => Ok(self.mm_p(x, w, rows, kd.n, kd.m)),
+            Variant::Plain => Ok(self.mm_w(x, w, rows, kd.n, kd.m)),
             Variant::Losia => {
-                let mut y = self.mm_p(x, w, rows, kd.n, kd.m);
+                let mut y = self.mm_w(x, w, rows, kd.n, kd.m);
                 let rho = self.indices(
                     &format!("rho_{kind}"),
                     l,
@@ -1096,7 +1264,7 @@ impl<'a> Model<'a> {
                 let lb =
                     &lb_t.data[l * r * kd.m..(l + 1) * r * kd.m];
                 if !dora {
-                    let mut y = self.mm_p(x, w, rows, kd.n, kd.m);
+                    let mut y = self.mm_w(x, w, rows, kd.n, kd.m);
                     let xa = self.mm_p(x, la, rows, kd.n, r);
                     let mut yl = self.mm_p(&xa, lb, rows, r, kd.m);
                     for v in yl.iter_mut() {
@@ -1107,12 +1275,17 @@ impl<'a> Model<'a> {
                     self.pool.recycle(yl);
                     Ok(y)
                 } else {
+                    let mut wdq = None;
+                    let wd = self.as_dense(w, &mut wdq, kd.n, kd.m);
                     let (wp, cn, weff) =
-                        self.dora_frames(l, kind, w, la, lb, scale)?;
+                        self.dora_frames(l, kind, wd, la, lb, scale)?;
                     let y = self.mm_p(x, &weff, rows, kd.n, kd.m);
                     self.pool.recycle(wp);
                     self.pool.recycle(cn);
                     self.pool.recycle(weff);
+                    if let Some(v) = wdq {
+                        self.pool.recycle(v);
+                    }
                     Ok(y)
                 }
             }
@@ -1172,7 +1345,7 @@ impl<'a> Model<'a> {
         sinks: &mut Sinks,
     ) -> Result<Vec<f32>> {
         let kd = self.cfg.kind(kind);
-        let w = self.layer_w(kind, l)?;
+        let w = self.layer_weight(kind, l)?;
         if let Some(params) = &mut sinks.params {
             let g = self.mm_tn_p(x, dy, rows, kd.n, kd.m);
             let dst = params.get_mut(kind).unwrap();
@@ -1185,7 +1358,7 @@ impl<'a> Model<'a> {
         }
         match self.variant {
             Variant::Plain => {
-                Ok(self.mm_nt_p(dy, w, rows, kd.m, kd.n))
+                Ok(self.mm_nt_w(dy, w, rows, kd.m, kd.n))
             }
             Variant::Losia => {
                 let rho = self.indices(
@@ -1218,7 +1391,7 @@ impl<'a> Model<'a> {
                     &gsub,
                 );
                 self.pool.recycle(gsub);
-                let mut dx = self.mm_nt_p(dy, w, rows, kd.m, kd.n);
+                let mut dx = self.mm_nt_w(dy, w, rows, kd.m, kd.n);
                 let dxs =
                     self.mm_nt_p(&dys, dws, rows, kd.mp, kd.np);
                 scatter_cols(&mut dx, rows, kd.n, &rho, &dxs);
@@ -1252,7 +1425,7 @@ impl<'a> Model<'a> {
                     self.sink_adapter(sinks, "la", kind, l, &gla);
                     self.sink_adapter(sinks, "lb", kind, l, &glb);
                     let mut dx =
-                        self.mm_nt_p(dy, w, rows, kd.m, kd.n);
+                        self.mm_nt_w(dy, w, rows, kd.m, kd.n);
                     let mut dxl =
                         self.mm_nt_p(&dyb, la, rows, r, kd.n);
                     for v in dxl.iter_mut() {
@@ -1267,8 +1440,10 @@ impl<'a> Model<'a> {
                     let mag_t =
                         self.f32_in(&format!("mag_{kind}"))?;
                     let mag = &mag_t.data[l * kd.m..(l + 1) * kd.m];
+                    let mut wdq = None;
+                    let wd = self.as_dense(w, &mut wdq, kd.n, kd.m);
                     let (wp, cn, weff) =
-                        self.dora_frames(l, kind, w, la, lb, scale)?;
+                        self.dora_frames(l, kind, wd, la, lb, scale)?;
                     let dweff =
                         self.mm_tn_p(x, dy, rows, kd.n, kd.m);
                     // col_j = Σ_i dweff·wp ; dmag_j = col_j / cn_j
@@ -1310,6 +1485,9 @@ impl<'a> Model<'a> {
                     let dx =
                         self.mm_nt_p(dy, &weff, rows, kd.m, kd.n);
                     for v in [wp, cn, weff, dweff, dwp, gla, glb] {
+                        self.pool.recycle(v);
+                    }
+                    if let Some(v) = wdq {
                         self.pool.recycle(v);
                     }
                     Ok(dx)
@@ -1432,7 +1610,7 @@ impl<'a> Model<'a> {
         }
 
         // lm_head (+ output-layer subnet delta)
-        let lm_head = self.f32_in("lm_head")?;
+        let lm_head = self.weight("lm_head")?;
         if let Some(params) = &mut sinks.params {
             let g =
                 self.mm_tn_p(&fwd.xnorm, &dlogits, rows, dm.d, dm.v);
@@ -1440,7 +1618,7 @@ impl<'a> Model<'a> {
             self.pool.recycle(g);
         }
         let mut dxnorm =
-            self.mm_nt_p(&dlogits, &lm_head.data, rows, dm.v, dm.d);
+            self.mm_nt_w(&dlogits, lm_head, rows, dm.v, dm.d);
         if self.variant == Variant::Losia {
             let vs = self.cfg.vocab_sub;
             let gamma = self.indices("gamma_out", 0, vs, dm.v)?;

@@ -72,6 +72,13 @@ impl<'rt> Decoder<'rt> {
         self.exe.stats()
     }
 
+    /// Bytes the static backbone occupies device-side right now:
+    /// 4 B/element dense, codes + per-block scales when the
+    /// quantization policy (`LOSIA_QUANT=int8`) stored it as int8.
+    pub fn backbone_resident_bytes(&self) -> usize {
+        self.plan.static_resident_bytes()
+    }
+
     /// One incremental step: bind the adapter + control grid, run,
     /// download the `[B, V]` logits. `tokens` is the `[B, S]` grid
     /// with each row's new tokens packed at the row head; `lens[i]`

@@ -50,6 +50,9 @@ pub struct LoadReport {
     pub metrics: ServeMetrics,
     pub results: Vec<GenResult>,
     pub warnings: Vec<String>,
+    /// Static backbone footprint on the device while serving: dense
+    /// f32 bytes, or codes + scales under `LOSIA_QUANT=int8`.
+    pub backbone_resident_bytes: usize,
 }
 
 /// Runtime for serving: the decode artifact is interpreted, so this
@@ -183,6 +186,7 @@ pub fn run_load(rt: &Runtime, spec: &LoadSpec) -> Result<LoadReport> {
         metrics,
         results,
         warnings: sched.warnings().to_vec(),
+        backbone_resident_bytes: sched.backbone_resident_bytes(),
     })
 }
 

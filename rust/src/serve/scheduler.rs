@@ -309,6 +309,12 @@ impl<'rt> Scheduler<'rt> {
     pub fn decoder_stats(&self) -> ExecSnapshot {
         self.dec.stats()
     }
+
+    /// Device-resident bytes of the static backbone (see
+    /// [`Decoder::backbone_resident_bytes`]).
+    pub fn backbone_resident_bytes(&self) -> usize {
+        self.dec.backbone_resident_bytes()
+    }
 }
 
 /// Aggregate serving metrics over a finished run.

@@ -15,7 +15,9 @@
 use std::sync::Mutex;
 
 use losia::config::{builtin_config, Dtype};
-use losia::runtime::{kernels, HostValue, RefBackend, Runtime};
+use losia::runtime::{
+    kernels, HostValue, QTensor, RefBackend, Runtime,
+};
 use losia::tensor::Tensor;
 use losia::util::rng::Rng;
 
@@ -107,6 +109,68 @@ fn eval_loss_path_is_bitwise_identical_across_thread_counts() {
         kernels::set_kernel_threads(6);
         let par = exe.run(&inputs).unwrap();
         assert_outputs_bitwise_eq(&serial, &par, artifact);
+    }
+    kernels::set_kernel_threads(0);
+}
+
+/// The dequant-fused GEMMs ride the same thread knob as the dense
+/// ones: every `mm_*_q8` entry point must be bitwise stable across
+/// thread counts AND bitwise equal to the dense kernel over the
+/// dequantized matrix. The CI `quant` lane re-runs this binary under
+/// `LOSIA_KERNEL_THREADS=1` and `=4`.
+#[test]
+fn q8_gemms_are_bitwise_identical_across_thread_counts() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    // ragged in every direction: partial GEMM tiles and a partial
+    // trailing quantization block
+    let (n, k, m) = (97, 70, 49);
+    let mut rng = Rng::new(23);
+    let a = rng.normal_vec(n * k, 1.0);
+    let at = rng.normal_vec(k * n, 1.0);
+    let qb = QTensor::quantize(&[k, m], &rng.normal_vec(k * m, 1.0));
+    let qbt = QTensor::quantize(&[m, k], &rng.normal_vec(m * k, 1.0));
+    let dqb = qb.dequantize();
+    let dqbt = qbt.dequantize();
+
+    kernels::set_kernel_threads(1);
+    let base = [
+        kernels::mm_q8(&a, &qb.codes, &qb.scales, n, k, m),
+        kernels::mm_tn_q8(&at, &qb.codes, &qb.scales, k, n, m),
+        kernels::mm_nt_q8(&a, &qbt.codes, &qbt.scales, n, k, m),
+    ];
+    let dense = [
+        kernels::mm(&a, &dqb, n, k, m),
+        kernels::mm_tn(&at, &dqb, k, n, m),
+        kernels::mm_nt(&a, &dqbt, n, k, m),
+    ];
+    for (q, d) in base.iter().zip(&dense) {
+        for (x, y) in q.iter().zip(d) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "dequant-fused result differs from dense-over-\
+                 dequantized ({x} vs {y})"
+            );
+        }
+    }
+    for threads in [2, 4, 8] {
+        kernels::set_kernel_threads(threads);
+        let par = [
+            kernels::mm_q8(&a, &qb.codes, &qb.scales, n, k, m),
+            kernels::mm_tn_q8(&at, &qb.codes, &qb.scales, k, n, m),
+            kernels::mm_nt_q8(&a, &qbt.codes, &qbt.scales, n, k, m),
+        ];
+        for (gi, (s, p)) in base.iter().zip(&par).enumerate() {
+            for (ei, (x, y)) in s.iter().zip(p).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "q8 gemm {gi} @ {threads} threads: element {ei} \
+                     differs ({x} vs {y})"
+                );
+            }
+        }
     }
     kernels::set_kernel_threads(0);
 }

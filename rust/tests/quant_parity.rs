@@ -1,0 +1,305 @@
+//! End-to-end contracts of the block-quantized frozen backbone
+//! (`LOSIA_QUANT=int8`): resident-byte reduction, bounded PPL drift
+//! against the dense f32 backbone, zero static uploads between
+//! LoSiA-Pro relocalizations, and replayable multi-tenant serving
+//! with a quantized backbone.
+//!
+//! The quantization mode is process-global, so every test here takes
+//! the `QUANT_KNOB` lock and restores the mode via a drop guard —
+//! this file is the ONLY test binary that flips the mode to `Int8`
+//! (in-crate unit tests exercise `bind_q8` directly instead).
+
+use std::sync::Mutex;
+
+use losia::config::{builtin_config, Ablation, Method, TrainConfig};
+use losia::coordinator::state::ModelState;
+use losia::data::Batch;
+use losia::runtime::{
+    quant, ExecPlan, QuantMode, RefBackend, Runtime,
+};
+use losia::serve::{run_load, serve_runtime, LoadSpec};
+use losia::session::Session;
+use losia::util::rng::Rng;
+
+/// `quant::set_mode` is process-global: serialize through this lock
+/// (recovering from poisoning so one failure doesn't cascade).
+static QUANT_KNOB: Mutex<()> = Mutex::new(());
+
+/// Sets the quantization mode for the guard's lifetime and clears the
+/// override on drop, even when the test body panics.
+struct ModeGuard;
+
+impl ModeGuard {
+    fn set(mode: QuantMode) -> Self {
+        quant::set_mode(Some(mode));
+        ModeGuard
+    }
+}
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        quant::set_mode(None);
+    }
+}
+
+fn runtime(config: &str) -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = builtin_config(config, &dir).expect("builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+/// A seeded full-coverage language-modeling batch (mask = 1
+/// everywhere) so the mean NLL is well-defined and replayable.
+fn random_batch(rt: &Runtime, seed: u64) -> Batch {
+    let (b, s, v) = (rt.cfg.batch, rt.cfg.seq_len, rt.cfg.vocab);
+    let mut rng = Rng::new(seed);
+    Batch {
+        tokens: (0..b * s).map(|_| rng.below(v) as i32).collect(),
+        targets: (0..b * s).map(|_| rng.below(v) as i32).collect(),
+        mask: vec![1.0; b * s],
+        batch: b,
+        seq: s,
+    }
+}
+
+/// Mean per-token NLL of `fwd_loss` over a few seeded batches with
+/// every parameter bound statically under the CURRENT quantization
+/// mode, plus the static resident bytes the plan reports.
+fn mean_nll_and_resident(
+    rt: &Runtime,
+    state: &ModelState,
+) -> (f64, usize) {
+    let exe = rt.load("fwd_loss").unwrap();
+    let param_names: Vec<&str> =
+        rt.cfg.params.iter().map(|(n, _)| n.as_str()).collect();
+    let mut plan = ExecPlan::new(exe, &param_names).unwrap();
+    plan.bind_params(state).unwrap();
+    let resident = plan.static_resident_bytes();
+    let (mut nll_sum, mut cnt_sum) = (0.0f64, 0.0f64);
+    for seed in [31u64, 32] {
+        plan.bind_batch(&random_batch(rt, seed)).unwrap();
+        let mut nll = None;
+        let mut cnt = None;
+        for h in plan.run().unwrap() {
+            match h.name() {
+                "nll" => nll = Some(h.into_host().unwrap()),
+                "cnt" => cnt = Some(h.into_host().unwrap()),
+                _ => {}
+            }
+        }
+        let (nll, cnt) = (nll.unwrap(), cnt.unwrap());
+        nll_sum +=
+            nll.data.iter().map(|&x| x as f64).sum::<f64>();
+        cnt_sum +=
+            cnt.data.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    assert!(cnt_sum > 0.0, "no loss-bearing tokens");
+    (nll_sum / cnt_sum, resident)
+}
+
+/// Acceptance: on the builtin small AND medium configs the quantized
+/// backbone is ≥ 3.5× smaller device-side than f32, and the PPL it
+/// produces drifts < 5% relative from the dense forward.
+#[test]
+fn int8_backbone_shrinks_memory_3_5x_with_bounded_ppl_drift() {
+    let _lock =
+        QUANT_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    for config in ["small", "medium"] {
+        let rt = runtime(config);
+        let mut rng = Rng::new(7);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+
+        let guard = ModeGuard::set(QuantMode::Off);
+        let (nll_f32, bytes_f32) = mean_nll_and_resident(&rt, &state);
+        drop(guard);
+
+        let _guard = ModeGuard::set(QuantMode::Int8);
+        let (nll_q8, bytes_q8) = mean_nll_and_resident(&rt, &state);
+
+        assert!(bytes_f32 > 0 && bytes_q8 > 0, "{config}: no statics");
+        let ratio = bytes_f32 as f64 / bytes_q8 as f64;
+        assert!(
+            ratio >= 3.5,
+            "{config}: resident bytes only shrank {ratio:.2}× \
+             ({bytes_f32} → {bytes_q8})"
+        );
+        let ppl_f32 = nll_f32.exp();
+        let ppl_q8 = nll_q8.exp();
+        let drift = (ppl_q8 - ppl_f32).abs() / ppl_f32;
+        assert!(
+            drift < 0.05,
+            "{config}: PPL drift {:.3}% exceeds 5% \
+             ({ppl_f32:.4} → {ppl_q8:.4})",
+            100.0 * drift
+        );
+        eprintln!(
+            "[quant] {config}: resident {bytes_f32} → {bytes_q8} B \
+             ({ratio:.2}×), ppl {ppl_f32:.4} → {ppl_q8:.4} \
+             ({:.3}% drift)",
+            100.0 * drift
+        );
+    }
+}
+
+fn pro_tc(steps: usize, no_relocalize: bool) -> TrainConfig {
+    TrainConfig {
+        method: Method::LosiaPro,
+        steps,
+        lr: 1e-3,
+        time_slot: 2,
+        ablation: Ablation {
+            no_relocalize,
+            ..Ablation::default()
+        },
+        ..TrainConfig::default()
+    }
+}
+
+fn train_report(
+    rt: &Runtime,
+    tc: TrainConfig,
+) -> losia::session::RunReport {
+    let mut session = Session::builder()
+        .runtime(rt)
+        .train_config(tc)
+        .task("modmath")
+        .train_n(64)
+        .eval_n(0)
+        .data_seed(1)
+        .batcher_seed(1)
+        .model_seed(7)
+        .build()
+        .unwrap();
+    session.train().unwrap()
+}
+
+/// The quantized backbone must keep LoSiA-Pro's traffic contract:
+/// statics upload at prepare() and at relocalizations, NEVER on the
+/// steady-state step path — doubling the step count between
+/// relocalizations adds zero static uploads.
+#[test]
+fn losia_pro_quantized_has_zero_static_uploads_between_relocs() {
+    let _lock =
+        QUANT_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = ModeGuard::set(QuantMode::Int8);
+    let rt = runtime("tiny");
+    // relocalization disabled: static uploads happen at prepare()
+    // (and finalize's fold-back) only, regardless of step count
+    let short = train_report(&rt, pro_tc(3, true));
+    let long = train_report(&rt, pro_tc(9, true));
+    let su_short = short
+        .exec_profile("grads_losia")
+        .expect("grads_losia profile")
+        .static_uploads;
+    let su_long = long
+        .exec_profile("grads_losia")
+        .expect("grads_losia profile")
+        .static_uploads;
+    assert!(su_short > 0, "backbone never uploaded");
+    assert_eq!(
+        su_short, su_long,
+        "static uploads grew with the step count — the quantized \
+         backbone is being re-uploaded on the hot path"
+    );
+    for report in [&short, &long] {
+        let fl = report.first_loss.expect("first loss");
+        assert!(fl.is_finite(), "quantized Pro diverged: {fl}");
+    }
+}
+
+/// Relocalizations fold the deltas into host f32 weights and
+/// requantize ONLY the touched blocks: the run must complete with
+/// finite losses, perform reselections, and its static re-uploads
+/// must exceed the no-relocalization baseline (the fold re-binds).
+/// The bitwise incremental-vs-full requantize equivalence itself is
+/// pinned by `runtime::quant` unit tests.
+#[test]
+fn losia_pro_quantized_relocalization_requantizes_and_trains() {
+    let _lock =
+        QUANT_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = runtime("tiny");
+
+    let guard = ModeGuard::set(QuantMode::Off);
+    let dense = train_report(&rt, pro_tc(8, false));
+    drop(guard);
+
+    let _guard = ModeGuard::set(QuantMode::Int8);
+    let quantized = train_report(&rt, pro_tc(8, false));
+    let baseline = train_report(&rt, pro_tc(8, true));
+
+    assert!(quantized.reselections > 0, "no relocalization fired");
+    for (step, loss) in &quantized.loss_curve {
+        assert!(
+            loss.is_finite(),
+            "step {step}: quantized loss {loss} not finite"
+        );
+    }
+    let su_reloc = quantized
+        .exec_profile("grads_losia")
+        .unwrap()
+        .static_uploads;
+    let su_base = baseline
+        .exec_profile("grads_losia")
+        .unwrap()
+        .static_uploads;
+    assert!(
+        su_reloc > su_base,
+        "relocalization produced no static re-binds \
+         ({su_reloc} vs {su_base})"
+    );
+    // the int8 backbone is a perturbation, not a different model:
+    // the very first loss (pure forward) stays within 5% relative
+    let (a, b) = (
+        dense.first_loss.expect("dense first loss"),
+        quantized.first_loss.expect("quantized first loss"),
+    );
+    assert!(
+        (a - b).abs() / a.abs().max(1e-9) < 0.05,
+        "first-loss drift too large: {a} vs {b}"
+    );
+}
+
+/// Serving on a quantized backbone: delta-tenant hot-swaps still
+/// generate zero backbone uploads, the device-side backbone is
+/// several times smaller than dense f32, and a seeded load replays
+/// bit-identically.
+#[test]
+fn serve_quantized_backbone_swaps_without_uploads_and_replays() {
+    let _lock =
+        QUANT_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = serve_runtime("tiny").unwrap();
+    let spec = LoadSpec {
+        tenants: 3,
+        requests: 6,
+        prompt_len: 4,
+        max_new: 5,
+        seed: 11,
+    };
+
+    let guard = ModeGuard::set(QuantMode::Off);
+    let dense = run_load(&rt, &spec).unwrap();
+    drop(guard);
+
+    let _guard = ModeGuard::set(QuantMode::Int8);
+    let q1 = run_load(&rt, &spec).unwrap();
+    let q2 = run_load(&rt, &spec).unwrap();
+
+    assert_eq!(q1.metrics.requests, spec.requests);
+    // delta-only tenants: zero backbone uploads, quantized or not
+    assert_eq!(q1.metrics.backbone_uploads, 0);
+    assert!(q1.metrics.swaps >= 2, "multi-tenant load swaps");
+    // tiny's norm share is small: the backbone still shrinks > 3×
+    let ratio = dense.backbone_resident_bytes as f64
+        / q1.backbone_resident_bytes as f64;
+    assert!(
+        ratio > 3.0,
+        "serving backbone only shrank {ratio:.2}× ({} → {})",
+        dense.backbone_resident_bytes,
+        q1.backbone_resident_bytes
+    );
+    // greedy + seeded + deterministic dequant → bitwise replay
+    for (a, b) in q1.results.iter().zip(&q2.results) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.output, b.output, "quantized replay diverged");
+    }
+}
