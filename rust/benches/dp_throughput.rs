@@ -1,0 +1,165 @@
+//! Data-parallel throughput: the same 4-shard training run executed
+//! on 1, 2, and 4 workers. Shards fix the numerics, so every row of
+//! this bench computes the identical final state — the only thing
+//! allowed to move is wall-clock.
+//!
+//! What the numbers pin:
+//!
+//! * **steps/sec scaling** from 1 → 4 workers at a fixed shard count
+//!   (each worker runs its shard block on its own plan replica under
+//!   a split kernel-thread budget);
+//! * **reduce cost** — mean per-step fold time of the fixed-order
+//!   tree reduction, and the per-shard frame bytes it moves (for
+//!   LoSiA-Pro: exactly the subnet-delta set);
+//! * **bitwise invariance** — the final loss across worker counts is
+//!   asserted identical in the artifact itself.
+//!
+//! Results land as a stdout table and `BENCH_dp.json` at the repo
+//! root (the artifact the CI `dp-parity` lane uploads).
+//! `LOSIA_BENCH_CONFIG` picks the builtin config (default `small`);
+//! `LOSIA_BENCH_STEPS` resizes the run.
+
+use std::collections::BTreeMap;
+
+use losia::config::{builtin_config, Method};
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::Session;
+use losia::util::json::Json;
+use losia::util::table::{f, write_bench_json, Table};
+
+const SHARDS: usize = 4;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+struct Row {
+    workers: usize,
+    steps_per_sec: f64,
+    reduce_ms: f64,
+    frame_bytes: u64,
+    worker_busy_secs: f64,
+    final_loss: f64,
+}
+
+fn run(rt: &Runtime, method: Method, workers: usize, steps: usize) -> Row {
+    let mut session = Session::builder()
+        .runtime(rt)
+        .method(method)
+        .task("modmath")
+        .steps(steps)
+        .time_slot((steps / 2).max(3))
+        .lr(1e-3)
+        .train_n(256)
+        .eval_n(0)
+        .workers(workers)
+        .dp_shards(SHARDS)
+        .build()
+        .expect("session");
+    let report = session.train().expect("train");
+    let dp = report.dp.as_ref().expect("dp block");
+    Row {
+        workers,
+        steps_per_sec: steps as f64 / report.wall_secs.max(1e-9),
+        reduce_ms: dp.reduce_secs * 1e3 / steps.max(1) as f64,
+        frame_bytes: dp.frame_bytes,
+        worker_busy_secs: dp.worker_busy_secs,
+        final_loss: report.final_loss.unwrap_or(f64::NAN),
+    }
+}
+
+fn main() {
+    let cfg_name = std::env::var("LOSIA_BENCH_CONFIG")
+        .unwrap_or_else(|_| "small".into());
+    let steps = env_usize("LOSIA_BENCH_STEPS", 8);
+    let dir = losia::runtime::artifacts_dir();
+    let cfg =
+        builtin_config(&cfg_name, &dir).expect("builtin bench config");
+    let rt = Runtime::with_backend(cfg, Box::new(RefBackend));
+
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(cfg_name.clone()));
+    j.insert("steps".into(), Json::Num(steps as f64));
+    j.insert("shards".into(), Json::Num(SHARDS as f64));
+
+    for method in [Method::LosiaPro, Method::Lora] {
+        let name = method.name().to_lowercase().replace('-', "");
+        let mut t = Table::new(
+            &format!(
+                "dp_throughput — {} on {}, {} shards, {} steps",
+                method.name(),
+                cfg_name,
+                SHARDS,
+                steps
+            ),
+            &[
+                "workers",
+                "steps/s",
+                "reduce ms/step",
+                "frame KiB",
+                "busy s",
+            ],
+        );
+        let rows: Vec<Row> = [1usize, 2, 4]
+            .iter()
+            .map(|&w| run(&rt, method, w, steps))
+            .collect();
+        // the determinism claim rides in the artifact: every worker
+        // count must land on the same loss bits
+        for r in &rows[1..] {
+            assert_eq!(
+                r.final_loss.to_bits(),
+                rows[0].final_loss.to_bits(),
+                "{} @ {} workers diverged from 1 worker",
+                method.name(),
+                r.workers
+            );
+        }
+        let mut mj = BTreeMap::new();
+        for r in &rows {
+            t.rowv(vec![
+                r.workers.to_string(),
+                f(r.steps_per_sec, 2),
+                f(r.reduce_ms, 3),
+                f(r.frame_bytes as f64 / 1024.0, 1),
+                f(r.worker_busy_secs, 3),
+            ]);
+            let mut rj = BTreeMap::new();
+            rj.insert(
+                "steps_per_sec".into(),
+                Json::Num(r.steps_per_sec),
+            );
+            rj.insert("reduce_ms".into(), Json::Num(r.reduce_ms));
+            rj.insert(
+                "frame_bytes".into(),
+                Json::Num(r.frame_bytes as f64),
+            );
+            rj.insert(
+                "worker_busy_secs".into(),
+                Json::Num(r.worker_busy_secs),
+            );
+            mj.insert(
+                format!("workers_{}", r.workers),
+                Json::Obj(rj),
+            );
+        }
+        let speedup = rows[2].steps_per_sec
+            / rows[0].steps_per_sec.max(1e-9);
+        mj.insert("speedup_4w".into(), Json::Num(speedup));
+        mj.insert(
+            "final_loss".into(),
+            Json::Num(rows[0].final_loss),
+        );
+        j.insert(name, Json::Obj(mj));
+        t.print();
+        eprintln!(
+            "[dp] {}: 1→4 worker speedup {:.2}×",
+            method.name(),
+            speedup
+        );
+    }
+    write_bench_json("dp", &Json::Obj(j));
+}

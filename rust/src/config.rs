@@ -636,6 +636,15 @@ pub struct TrainConfig {
     /// host-gather LoSiA path supports this — the Pro artifact's
     /// subnet shapes are baked at AOT time.
     pub rank_factor_override: Option<f64>,
+    /// Data-parallel worker threads (plan replicas). 1 = the legacy
+    /// single-plan loop; also settable via `LOSIA_DP_WORKERS` (see
+    /// `runtime::dp::DpConfig::resolve`). Never affects numerics.
+    pub dp_workers: usize,
+    /// Logical batch shards per step — the dp *numerics* knob: the
+    /// run's bits are a function of the shard count, not the worker
+    /// count. Defaults to `dp_workers` when left at 1; also settable
+    /// via `LOSIA_DP_SHARDS`.
+    pub dp_shards: usize,
 }
 
 impl Default for TrainConfig {
@@ -657,6 +666,8 @@ impl Default for TrainConfig {
             log_every: 0,
             use_remat: false,
             rank_factor_override: None,
+            dp_workers: 1,
+            dp_shards: 1,
         }
     }
 }

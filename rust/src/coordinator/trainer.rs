@@ -22,10 +22,11 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::coordinator::rewarm::LrSchedule;
 use crate::coordinator::state::ModelState;
-use crate::data::Batcher;
+use crate::data::{Batch, Batcher};
 use crate::methods::{build_driver, Driver};
+use crate::runtime::dp::{self, DpConfig};
 use crate::runtime::{ExecSnapshot, Runtime};
-use crate::session::observer::{ExecEvent, ObserverSet};
+use crate::session::observer::{DpEvent, ExecEvent, ObserverSet};
 
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
@@ -92,14 +93,28 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Run `tc.steps` optimization steps over the batcher, reporting
-    /// step / relocalize / exec / finalize events into `obs`.
+    /// step / relocalize / exec / dp / finalize events into `obs`.
+    ///
+    /// With `DpConfig::enabled()` the batcher is split once into
+    /// `shards` seed-stable sub-streams; each step draws one batch per
+    /// shard, runs the driver's gradient phase across the plan
+    /// replicas, folds the frames with the fixed-order tree reduce,
+    /// and applies the update once. Otherwise the legacy single-batch
+    /// loop runs — which is the same code path with one shard.
     pub fn train(
         &mut self,
         state: &mut ModelState,
         batcher: &mut Batcher,
         obs: &mut ObserverSet,
     ) -> Result<()> {
-        let tokens = self.rt.cfg.tokens_per_step();
+        let dp_cfg = DpConfig::resolve(&self.tc);
+        let tokens = self.rt.cfg.tokens_per_step()
+            * if dp_cfg.enabled() { dp_cfg.shards } else { 1 };
+        let mut shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
+            batcher.shard(dp_cfg.shards)?
+        } else {
+            Vec::new()
+        };
         let mut exec = ExecTracker::new(self.rt);
         self.driver.prepare(state)?;
         // initial subnet selections installed at construction time
@@ -110,10 +125,36 @@ impl<'rt> Trainer<'rt> {
         // parameter set here) are attributed to step 0
         exec.emit(self.rt, 0, obs);
         for t in 0..self.tc.steps {
-            let batch = batcher.next_batch();
             let lr = self.schedule.lr(t);
             let t0 = Instant::now();
-            let loss = self.driver.step(state, &batch, t, lr)?;
+            let loss = if dp_cfg.enabled() {
+                let batches: Vec<Batch> = shard_batchers
+                    .iter_mut()
+                    .map(|b| b.next_batch())
+                    .collect();
+                let sharded = self
+                    .driver
+                    .grad_frames_sharded(state, &batches, t)?;
+                let workers =
+                    sharded.worker_nanos.len().max(1);
+                let worker_nanos = sharded.worker_nanos.clone();
+                let r0 = Instant::now();
+                let (reduced, frame_bytes) =
+                    dp::reduce(sharded.shards)?;
+                let reduce_nanos = r0.elapsed().as_nanos() as u64;
+                obs.emit_dp(&DpEvent {
+                    step: t,
+                    workers,
+                    shards: dp_cfg.shards,
+                    reduce_nanos,
+                    frame_bytes,
+                    worker_nanos,
+                });
+                self.driver.apply_frames(state, reduced, t, lr)?
+            } else {
+                let batch = batcher.next_batch();
+                self.driver.step(state, &batch, t, lr)?
+            };
             let secs = t0.elapsed().as_secs_f64();
             for ev in self.driver.drain_events() {
                 obs.emit_relocalize(&ev);

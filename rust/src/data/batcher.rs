@@ -85,6 +85,7 @@ pub struct Batcher {
     order: Vec<usize>,
     cursor: usize,
     rng: Rng,
+    seed: u64,
     pub batch: usize,
     pub seq: usize,
 }
@@ -124,6 +125,7 @@ impl Batcher {
             order,
             cursor: 0,
             rng,
+            seed,
             batch,
             seq,
         })
@@ -135,6 +137,47 @@ impl Batcher {
 
     pub fn is_empty(&self) -> bool {
         self.examples.is_empty()
+    }
+
+    /// Split the dataset into `n` disjoint shard batchers for
+    /// data-parallel training.
+    ///
+    /// Partitioning is round-robin over the **raw example order**
+    /// (example `j` goes to shard `j % n`), so it depends only on the
+    /// dataset and `n` — never on this batcher's shuffle state — and
+    /// the remainder policy is defined: when `len % n != 0` the first
+    /// `len % n` shards hold one extra example; every example lands in
+    /// exactly one shard, none dropped, none duplicated. Each shard
+    /// seeds its own RNG via [`rng::derive_stream`] from this
+    /// batcher's seed, so shard shuffle streams are seed-stable and
+    /// independent (no shared mutable RNG across workers).
+    pub fn shard(&self, n: usize) -> Result<Vec<Batcher>> {
+        ensure!(n >= 1, "batcher: shard count must be ≥ 1");
+        ensure!(
+            n <= self.examples.len(),
+            "batcher: cannot split {} examples into {n} shards \
+             (a shard would be empty)",
+            self.examples.len()
+        );
+        (0..n)
+            .map(|i| {
+                let subset: Vec<Example> = self
+                    .examples
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| j % n == i)
+                    .map(|(_, ex)| ex.clone())
+                    .collect();
+                Batcher::new(
+                    subset,
+                    self.batch,
+                    self.seq,
+                    crate::util::rng::derive_stream(
+                        self.seed, i as u64, n as u64,
+                    ),
+                )
+            })
+            .collect()
     }
 
     /// Next batch (wraps around with a reshuffle at epoch boundaries).
@@ -274,6 +317,89 @@ mod tests {
         }
         // all five examples appear across 20 draws
         assert_eq!(seen.len(), 5);
+    }
+
+    fn tagged(n: usize) -> Vec<Example> {
+        // each example's prompt[0] identifies it, so shard membership
+        // can be read back out of packed batches
+        (0..n)
+            .map(|i| Example {
+                prompt: vec![digit(i as u32 % 10), SEP],
+                answer: vec![digit(i as u32 % 10)],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_remainder_is_assigned_not_dropped() {
+        // 7 examples over 2 shards with batch 2: 7 % (2 × 2) != 0 —
+        // the remainder must land in a defined shard, never vanish
+        let b = Batcher::new(tagged(7), 2, 8, 9).unwrap();
+        let shards = b.shard(2).unwrap();
+        assert_eq!(shards[0].len(), 4); // examples 0 2 4 6
+        assert_eq!(shards[1].len(), 3); // examples 1 3 5
+        assert_eq!(shards[0].len() + shards[1].len(), 7);
+        // round-robin membership: tags are disjoint and cover all 7
+        let tags = |s: &Batcher| -> std::collections::BTreeSet<u32> {
+            s.examples.iter().map(|e| e.prompt[0]).collect()
+        };
+        let t0 = tags(&shards[0]);
+        let t1 = tags(&shards[1]);
+        assert!(t0.is_disjoint(&t1));
+        assert_eq!(t0.union(&t1).count(), 7);
+        // and an epoch of draws from each shard reaches every member
+        let mut seen = std::collections::BTreeSet::new();
+        for mut s in shards {
+            for _ in 0..2 {
+                let batch = s.next_batch();
+                for row in 0..batch.batch {
+                    seen.insert(batch.tokens[row * batch.seq + 1]);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 7, "an example was dropped: {seen:?}");
+    }
+
+    #[test]
+    fn shard_streams_are_seed_stable() {
+        let draws = |seed: u64| -> Vec<Vec<i32>> {
+            let b = Batcher::new(tagged(8), 2, 8, seed).unwrap();
+            b.shard(2)
+                .unwrap()
+                .into_iter()
+                .map(|mut s| {
+                    (0..4).flat_map(|_| s.next_batch().tokens).collect()
+                })
+                .collect()
+        };
+        // same seed → identical shard streams; the two shards differ
+        let a = draws(5);
+        let b = draws(5);
+        assert_eq!(a, b);
+        assert_ne!(a[0], a[1]);
+        // shard iteration never consults the parent's shuffle state:
+        // draining the parent first must not change the shard streams
+        let mut parent = Batcher::new(tagged(8), 2, 8, 5).unwrap();
+        for _ in 0..3 {
+            parent.next_batch();
+        }
+        let after: Vec<Vec<i32>> = parent
+            .shard(2)
+            .unwrap()
+            .into_iter()
+            .map(|mut s| {
+                (0..4).flat_map(|_| s.next_batch().tokens).collect()
+            })
+            .collect();
+        assert_eq!(a, after);
+    }
+
+    #[test]
+    fn shard_bounds_are_checked() {
+        let b = Batcher::new(tagged(3), 1, 8, 0).unwrap();
+        assert!(b.shard(0).is_err());
+        assert!(b.shard(4).is_err(), "empty shard must be rejected");
+        assert_eq!(b.shard(3).unwrap().len(), 3);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! ```text
 //! losia train --config tiny --method losia-pro --task modmath \
 //!             --steps 200 --lr 1e-3 --time-slot 20 \
+//!             [--workers N] [--dp-shards N] \
 //!             [--save-state model.bin] [--report out.json] [--json]
 //! losia eval  --config tiny --task modmath [--state model.bin] [--no-gen]
 //! losia serve --config tiny --tenants 4 --requests 16 \
@@ -42,6 +43,16 @@ fn session_from_args(args: &Args) -> Result<losia::SessionBuilder<'static>> {
     if let Some(r) = args.get("galore-rank") {
         b = b.galore_rank(
             r.parse().context("--galore-rank expects an integer")?,
+        );
+    }
+    if let Some(w) = args.get("workers") {
+        b = b.workers(
+            w.parse().context("--workers expects an integer")?,
+        );
+    }
+    if let Some(s) = args.get("dp-shards") {
+        b = b.dp_shards(
+            s.parse().context("--dp-shards expects an integer")?,
         );
     }
     if let Some(path) = args.get("state") {
@@ -248,6 +259,58 @@ fn cmd_info(args: &Args) -> Result<()> {
          (dense f32: {total_f32}, {:.2}× reduction)",
         total_f32 as f64 / total_resident.max(1) as f64
     );
+    // active data-parallel configuration (TrainConfig defaults +
+    // LOSIA_DP_WORKERS / LOSIA_DP_SHARDS): the shard count fixes the
+    // numerics, the worker count only splits the kernel-thread
+    // budget, and the reduce set is what each method ships across
+    // shards per step
+    let dp = losia::runtime::DpConfig::resolve(
+        &losia::config::TrainConfig::default(),
+    );
+    println!(
+        "  data-parallel: workers {} shards {} \
+         ({} kernel threads per worker)",
+        dp.workers,
+        dp.shards,
+        dp.worker_thread_budget()
+    );
+    println!("    per-step reduce set (bytes crossing shards):");
+    let full: u64 = cfg
+        .params
+        .iter()
+        .map(|(_, s)| 4 * s.iter().product::<usize>() as u64)
+        .sum();
+    let sub: u64 = cfg
+        .linear_kinds
+        .iter()
+        .map(|k| {
+            let kd = cfg.kind(k);
+            4 * (cfg.n_layers * kd.np * kd.mp) as u64
+        })
+        .sum::<u64>()
+        + 4 * (cfg.d_model * cfg.vocab_sub) as u64;
+    let lora: u64 = cfg
+        .linear_kinds
+        .iter()
+        .map(|k| {
+            let kd = cfg.kind(k);
+            4 * (cfg.n_layers * cfg.lora_rank * (kd.n + kd.m)) as u64
+        })
+        .sum();
+    let galore: u64 = cfg
+        .linear_kinds
+        .iter()
+        .map(|k| {
+            let kd = cfg.kind(k);
+            4 * (cfg.n_layers * kd.n * kd.m) as u64
+        })
+        .sum::<u64>()
+        + 4 * (cfg.d_model * cfg.vocab) as u64;
+    println!("      losia-pro  {sub} B (subnet deltas)");
+    println!("      losia      {full} B (full gradients)");
+    println!("      lora/dora  {lora} B (adapter gradients)");
+    println!("      galore     {galore} B (linear + lm_head grads)");
+    println!("      fft        {full} B (full gradients)");
     for (name, a) in &cfg.artifacts {
         println!("  artifact {name} ({})", a.file.display());
         println!("    inputs : {}", fmt_specs(&a.inputs));
@@ -269,8 +332,9 @@ fn main() -> Result<()> {
                  [--method M] [--task T] [--steps N] [--lr F] \
                  [--time-slot N] [--remat] [--state PATH] \
                  [--save-state PATH] [--report PATH] [--json] \
-                 [--backend ref|pjrt|auto] [--tenants N] \
-                 [--requests N] [--prompt-len N] [--max-new N]"
+                 [--backend ref|pjrt|auto] [--workers N] \
+                 [--dp-shards N] [--tenants N] [--requests N] \
+                 [--prompt-len N] [--max-new N]"
             );
             Ok(())
         }

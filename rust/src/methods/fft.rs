@@ -1,6 +1,6 @@
 //! Full-parameter fine-tuning (the FFT upper-bound baseline).
 //!
-//! Every parameter is mutated every step, so the execution plan holds
+//! Every parameter is mutated every step, so the execution plans hold
 //! no static bindings — the whole state re-uploads per step (that IS
 //! the method's traffic cost; Table 16's "Other" column shows it).
 
@@ -13,10 +13,13 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
 use crate::methods::{grads_artifact, Driver};
+use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
 use crate::runtime::{ExecPlan, Runtime};
 
 pub struct FftDriver {
-    plan: ExecPlan,
+    /// One replicated plan per data-parallel worker (one when dp is
+    /// off); workers execute disjoint shard blocks on their replica.
+    plans: Vec<ExecPlan>,
     adam: BTreeMap<String, AdamState>,
     total: usize,
 }
@@ -25,7 +28,11 @@ impl FftDriver {
     pub fn new(rt: &Runtime, tc: &TrainConfig) -> Result<Self> {
         let exe =
             rt.load(&grads_artifact("grads_full", tc.use_remat, rt))?;
-        let plan = ExecPlan::new(exe, &[])?;
+        let n_plans = dp::plan_count(rt, tc)?;
+        let mut plans = Vec::with_capacity(n_plans);
+        for _ in 0..n_plans {
+            plans.push(ExecPlan::new(exe.clone(), &[])?);
+        }
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
             beta2: tc.adam_beta2 as f32,
@@ -37,7 +44,7 @@ impl FftDriver {
             adam.insert(name.clone(), AdamState::new(shape, hp));
             total += shape.iter().product::<usize>();
         }
-        Ok(FftDriver { plan, adam, total })
+        Ok(FftDriver { plans, adam, total })
     }
 }
 
@@ -50,35 +57,60 @@ impl Driver for FftDriver {
         self.total
     }
 
-    fn step(
+    fn grad_frames_sharded(
+        &mut self,
+        state: &ModelState,
+        batches: &[Batch],
+        _t: usize,
+    ) -> Result<ShardedGrads> {
+        let (shards, worker_nanos) =
+            dp::run_sharded(&mut self.plans, batches, |_, plan, batch| {
+                plan.bind_params(state)?;
+                plan.bind_batch(batch)?;
+                // full fine-tuning consumes every gradient, so every
+                // handle downloads — Table 16's "Other" column shows
+                // this traffic
+                let mut out = plan.run()?.into_iter();
+                let loss = out
+                    .next()
+                    .expect("loss output")
+                    .into_host()?
+                    .data[0] as f64;
+                let mut frames = Vec::new();
+                for h in out {
+                    let name = h
+                        .name()
+                        .strip_prefix("g_")
+                        .expect("grad output name")
+                        .to_string();
+                    frames.push(Frame { name, grad: h.into_host()? });
+                }
+                Ok(GradFrames { loss, frames, probe: None })
+            })?;
+        Ok(ShardedGrads { shards, worker_nanos })
+    }
+
+    fn apply_frames(
         &mut self,
         state: &mut ModelState,
-        batch: &Batch,
+        reduced: GradFrames,
         _t: usize,
         lr: f64,
     ) -> Result<f64> {
-        self.plan.bind_params(state)?;
-        self.plan.bind_batch(batch)?;
-        // full fine-tuning consumes every gradient, so every handle
-        // downloads — Table 16's "Other" column shows this traffic
-        let mut out = self.plan.run()?.into_iter();
-        let loss = out
-            .next()
-            .expect("loss output")
-            .into_host()?
-            .data[0] as f64;
-        for h in out {
-            let name = h
-                .name()
-                .strip_prefix("g_")
-                .expect("grad output name")
-                .to_string();
-            let g = h.into_host()?;
+        for Frame { name, grad } in reduced.frames {
             let adam = self.adam.get_mut(&name).unwrap();
-            let mut upd = adam.update(&g, lr as f32);
+            let mut upd = adam.update(&grad, lr as f32);
             upd.scale_assign(-1.0);
             state.get_mut(&name).add_assign(&upd);
         }
-        Ok(loss)
+        Ok(reduced.loss)
+    }
+
+    fn reduce_set(&self) -> Vec<(String, u64)> {
+        // every parameter gradient crosses the reduction
+        self.adam
+            .iter()
+            .map(|(name, st)| (name.clone(), 4 * st.m.len() as u64))
+            .collect()
     }
 }

@@ -17,6 +17,7 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
 use crate::methods::{grads_artifact, Driver};
+use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
 use crate::runtime::{ExecPlan, Runtime};
 use crate::tensor::svd::left_singular_topk;
 use crate::tensor::Tensor;
@@ -28,7 +29,8 @@ const FROZEN: [&str; 4] = ["embed", "norm1", "norm2", "norm_f"];
 
 pub struct GaloreDriver {
     cfg: ModelCfg,
-    plan: ExecPlan,
+    /// one replicated plan per data-parallel worker
+    plans: Vec<ExecPlan>,
     rank: usize,
     period: usize,
     /// projector per (kind, layer)
@@ -45,7 +47,11 @@ impl GaloreDriver {
         let cfg = rt.cfg.clone();
         let exe =
             rt.load(&grads_artifact("grads_full", tc.use_remat, rt))?;
-        let plan = ExecPlan::new(exe, &FROZEN)?;
+        let n_plans = dp::plan_count(rt, tc)?;
+        let mut plans = Vec::with_capacity(n_plans);
+        for _ in 0..n_plans {
+            plans.push(ExecPlan::new(exe.clone(), &FROZEN)?);
+        }
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
             beta2: tc.adam_beta2 as f32,
@@ -55,7 +61,7 @@ impl GaloreDriver {
             AdamState::new(&[cfg.d_model, cfg.vocab], hp);
         Ok(GaloreDriver {
             cfg,
-            plan,
+            plans,
             rank: tc.galore_rank,
             period: tc.galore_period.max(1),
             projectors: BTreeMap::new(),
@@ -90,42 +96,71 @@ impl Driver for GaloreDriver {
     }
 
     fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
-        // frozen parameters upload once and stay device-resident
-        // (quantized under LOSIA_QUANT=int8 where the policy allows)
-        for name in FROZEN {
-            self.plan.bind_param_auto(name, state.get(name))?;
+        // frozen parameters upload once per replica and stay
+        // device-resident (quantized under LOSIA_QUANT=int8 where the
+        // policy allows)
+        for plan in &mut self.plans {
+            for name in FROZEN {
+                plan.bind_param_auto(name, state.get(name))?;
+            }
         }
         Ok(())
     }
 
-    fn step(
+    fn grad_frames_sharded(
+        &mut self,
+        state: &ModelState,
+        batches: &[Batch],
+        _t: usize,
+    ) -> Result<ShardedGrads> {
+        let (plans, cfg) = (&mut self.plans, &self.cfg);
+        let (shards, worker_nanos) =
+            dp::run_sharded(plans, batches, |_, plan, batch| {
+                for kind in &cfg.linear_kinds {
+                    plan.bind_f32(kind, state.get(kind))?;
+                }
+                plan.bind_f32("lm_head", state.get("lm_head"))?;
+                plan.bind_batch(batch)?;
+                // GaLore projects every trainable gradient host-side,
+                // so the linears + lm_head download — that IS the
+                // method's traffic (and reduce) cost. Gradients of the
+                // frozen set drop undownloaded.
+                let mut out = plan.run()?.into_iter();
+                let loss = out
+                    .next()
+                    .expect("loss output")
+                    .into_host()?
+                    .data[0] as f64;
+                let mut frames = Vec::new();
+                for h in out {
+                    let name = h
+                        .name()
+                        .strip_prefix("g_")
+                        .expect("grad output name");
+                    let trained = name == "lm_head"
+                        || cfg.linear_kinds.iter().any(|k| k == name);
+                    if !trained {
+                        continue;
+                    }
+                    let name = name.to_string();
+                    frames.push(Frame { name, grad: h.into_host()? });
+                }
+                Ok(GradFrames { loss, frames, probe: None })
+            })?;
+        Ok(ShardedGrads { shards, worker_nanos })
+    }
+
+    fn apply_frames(
         &mut self,
         state: &mut ModelState,
-        batch: &Batch,
+        reduced: GradFrames,
         t: usize,
         lr: f64,
     ) -> Result<f64> {
-        for kind in self.cfg.linear_kinds.clone() {
-            self.plan.bind_f32(&kind, state.get(&kind))?;
-        }
-        self.plan.bind_f32("lm_head", state.get("lm_head"))?;
-        self.plan.bind_batch(batch)?;
-        // GaLore projects every gradient host-side, so the full
-        // output set downloads — that IS the method's traffic cost
-        let mut out = self.plan.run()?.into_iter();
-        let loss = out
-            .next()
-            .expect("loss output")
-            .into_host()?
-            .data[0] as f64;
+        let loss = reduced.loss;
         let mut grads = BTreeMap::new();
-        for h in out {
-            let name = h
-                .name()
-                .strip_prefix("g_")
-                .expect("grad output name")
-                .to_string();
-            grads.insert(name, h.into_host()?);
+        for Frame { name, grad } in reduced.frames {
+            grads.insert(name, grad);
         }
 
         for kind in self.cfg.linear_kinds.clone() {
@@ -164,5 +199,23 @@ impl Driver for GaloreDriver {
         upd.scale_assign(-1.0);
         state.get_mut("lm_head").add_assign(&upd);
         Ok(loss)
+    }
+
+    fn reduce_set(&self) -> Vec<(String, u64)> {
+        // full gradients of the projected linears (projection happens
+        // host-side *after* the reduction) plus the dense output layer
+        let mut set: Vec<(String, u64)> = self
+            .cfg
+            .linear_kinds
+            .iter()
+            .map(|kind| {
+                let kd = self.cfg.kind(kind);
+                let n = self.cfg.n_layers * kd.n * kd.m;
+                (kind.clone(), 4 * n as u64)
+            })
+            .collect();
+        let lm = self.cfg.d_model * self.cfg.vocab;
+        set.push(("lm_head".to_string(), 4 * lm as u64));
+        set
     }
 }

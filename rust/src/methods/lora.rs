@@ -17,6 +17,7 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
 use crate::methods::{grads_artifact, Driver};
+use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
 use crate::runtime::{ExecPlan, Runtime};
 use crate::tensor::svd::svd;
 use crate::tensor::Tensor;
@@ -29,8 +30,9 @@ pub struct LoraDriver {
     /// The whole backbone is frozen during a stage, so every model
     /// parameter is a static binding — per-step traffic is adapters +
     /// batch only. (The end-of-stage merge mutates host state after
-    /// the last artifact call, so no re-upload is ever needed.)
-    plan: ExecPlan,
+    /// the last artifact call, so no re-upload is ever needed.) One
+    /// replicated plan per data-parallel worker.
+    plans: Vec<ExecPlan>,
     /// adapter tensors by artifact input name (la_*, lb_*, mag_*)
     adapters: BTreeMap<String, Tensor>,
     adam: BTreeMap<String, AdamState>,
@@ -43,7 +45,11 @@ impl LoraDriver {
         let exe = rt.load(&grads_artifact(base, tc.use_remat, rt))?;
         let param_names: Vec<&str> =
             cfg.params.iter().map(|(n, _)| n.as_str()).collect();
-        let plan = ExecPlan::new(exe, &param_names)?;
+        let n_plans = dp::plan_count(rt, tc)?;
+        let mut plans = Vec::with_capacity(n_plans);
+        for _ in 0..n_plans {
+            plans.push(ExecPlan::new(exe.clone(), &param_names)?);
+        }
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
             beta2: tc.adam_beta2 as f32,
@@ -84,7 +90,7 @@ impl LoraDriver {
             dora,
             pissa: tc.method == Method::Pissa,
             cfg,
-            plan,
+            plans,
             adapters,
             adam,
         })
@@ -173,9 +179,11 @@ impl Driver for LoraDriver {
                 }
             }
         }
-        // upload the (now final) frozen backbone once; steps bind
-        // only adapters + batch from here on
-        self.plan.bind_params(state)?;
+        // upload the (now final) frozen backbone once per replica;
+        // steps bind only adapters + batch from here on
+        for plan in &mut self.plans {
+            plan.bind_params(state)?;
+        }
         Ok(())
     }
 
@@ -240,37 +248,63 @@ impl Driver for LoraDriver {
         Ok(())
     }
 
-    fn step(
+    fn grad_frames_sharded(
+        &mut self,
+        _state: &ModelState,
+        batches: &[Batch],
+        _t: usize,
+    ) -> Result<ShardedGrads> {
+        let (plans, adapters) = (&mut self.plans, &self.adapters);
+        let (shards, worker_nanos) =
+            dp::run_sharded(plans, batches, |_, plan, batch| {
+                for (name, t) in adapters {
+                    plan.bind_f32(name, t)?;
+                }
+                plan.bind_batch(batch)?;
+                // every output is consumed (scalar loss +
+                // adapter-sized grads), so each handle downloads
+                // exactly once
+                let mut out = plan.run()?.into_iter();
+                let loss = out
+                    .next()
+                    .expect("loss output")
+                    .into_host()?
+                    .data[0] as f64;
+                let mut frames = Vec::new();
+                for h in out {
+                    let name = h
+                        .name()
+                        .strip_prefix("g_")
+                        .expect("grad output name")
+                        .to_string();
+                    frames.push(Frame { name, grad: h.into_host()? });
+                }
+                Ok(GradFrames { loss, frames, probe: None })
+            })?;
+        Ok(ShardedGrads { shards, worker_nanos })
+    }
+
+    fn apply_frames(
         &mut self,
         _state: &mut ModelState,
-        batch: &Batch,
+        reduced: GradFrames,
         _t: usize,
         lr: f64,
     ) -> Result<f64> {
-        for (name, t) in &self.adapters {
-            self.plan.bind_f32(name, t)?;
-        }
-        self.plan.bind_batch(batch)?;
-        // every output is consumed (scalar loss + adapter-sized
-        // grads), so each handle downloads exactly once
-        let mut out = self.plan.run()?.into_iter();
-        let loss = out
-            .next()
-            .expect("loss output")
-            .into_host()?
-            .data[0] as f64;
-        for h in out {
-            let name = h
-                .name()
-                .strip_prefix("g_")
-                .expect("grad output name")
-                .to_string();
-            let g = h.into_host()?;
+        for Frame { name, grad } in reduced.frames {
             let adam = self.adam.get_mut(&name).unwrap();
-            let mut upd = adam.update(&g, lr as f32);
+            let mut upd = adam.update(&grad, lr as f32);
             upd.scale_assign(-1.0);
             self.adapters.get_mut(&name).unwrap().add_assign(&upd);
         }
-        Ok(loss)
+        Ok(reduced.loss)
+    }
+
+    fn reduce_set(&self) -> Vec<(String, u64)> {
+        // adapter gradients only — the frozen backbone never crosses
+        self.adapters
+            .iter()
+            .map(|(name, t)| (name.clone(), 4 * t.len() as u64))
+            .collect()
     }
 }

@@ -29,6 +29,9 @@ use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
 use crate::data::Batch;
 use crate::methods::{grads_artifact, Driver, SelectionEvent};
+use crate::runtime::dp::{
+    self, Frame, GradFrames, ProbePayload, ShardedGrads,
+};
 use crate::runtime::{ExecPlan, OutputHandle, QTensor, Runtime};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -37,7 +40,11 @@ pub struct LosiaDriver {
     pro: bool,
     cfg: ModelCfg,
     tc: TrainConfig,
-    plan: ExecPlan,
+    /// One replicated plan per data-parallel worker (a single plan
+    /// when dp is off). Statics — Pro's frozen backbone and (ρ, γ)
+    /// indices — are mirrored across every replica by the bind
+    /// helpers below so all workers compute against the same image.
+    plans: Vec<ExecPlan>,
     /// per-layer, per-kind subnet state
     subnets: Vec<BTreeMap<String, SubnetState>>,
     /// Pro: pending subnet updates in the stacked [L, np, mp] dws
@@ -101,25 +108,29 @@ impl LosiaDriver {
             grads_artifact("grads_full", tc.use_remat, rt)
         };
         let exe = rt.load(&step_name)?;
-        let plan = if pro {
-            // frozen backbone + selection indices live device-side;
-            // dws deltas, probe, and the batch re-bind per step
-            let mut statics: Vec<String> = cfg
-                .params
-                .iter()
-                .map(|(n, _)| n.clone())
-                .collect();
-            for kind in &cfg.linear_kinds {
-                statics.push(format!("rho_{kind}"));
-                statics.push(format!("gamma_{kind}"));
-            }
-            statics.push("gamma_out".into());
-            let refs: Vec<&str> =
-                statics.iter().map(|s| s.as_str()).collect();
-            ExecPlan::new(exe, &refs)?
-        } else {
-            ExecPlan::new(exe, &[])?
-        };
+        let n_plans = dp::plan_count(rt, tc)?;
+        let mut plans = Vec::with_capacity(n_plans);
+        for _ in 0..n_plans {
+            plans.push(if pro {
+                // frozen backbone + selection indices live device-side;
+                // dws deltas, probe, and the batch re-bind per step
+                let mut statics: Vec<String> = cfg
+                    .params
+                    .iter()
+                    .map(|(n, _)| n.clone())
+                    .collect();
+                for kind in &cfg.linear_kinds {
+                    statics.push(format!("rho_{kind}"));
+                    statics.push(format!("gamma_{kind}"));
+                }
+                statics.push("gamma_out".into());
+                let refs: Vec<&str> =
+                    statics.iter().map(|s| s.as_str()).collect();
+                ExecPlan::new(exe.clone(), &refs)?
+            } else {
+                ExecPlan::new(exe.clone(), &[])?
+            });
+        }
 
         let hp = AdamParams {
             beta1: tc.adam_beta1 as f32,
@@ -203,7 +214,7 @@ impl LosiaDriver {
             pro,
             cfg,
             tc: tc.clone(),
-            plan,
+            plans,
             subnets,
             deltas,
             delta_out,
@@ -233,7 +244,8 @@ impl LosiaDriver {
         }
     }
 
-    /// Upload the full stacked (ρ, γ) index set + γ_out (static).
+    /// Upload the full stacked (ρ, γ) index set + γ_out (static) to
+    /// every plan replica.
     fn bind_indices(&mut self) -> Result<()> {
         for kind in self.cfg.linear_kinds.clone() {
             let kd = self.cfg.kind(&kind);
@@ -246,49 +258,59 @@ impl LosiaDriver {
                 rho.extend_from_slice(&sel.rho);
                 gamma.extend_from_slice(&sel.gamma);
             }
-            self.plan.bind_indices(
-                &format!("rho_{kind}"),
-                &[self.cfg.n_layers, kd.np],
-                &rho,
-            )?;
-            self.plan.bind_indices(
-                &format!("gamma_{kind}"),
-                &[self.cfg.n_layers, kd.mp],
-                &gamma,
+            for plan in &mut self.plans {
+                plan.bind_indices(
+                    &format!("rho_{kind}"),
+                    &[self.cfg.n_layers, kd.np],
+                    &rho,
+                )?;
+                plan.bind_indices(
+                    &format!("gamma_{kind}"),
+                    &[self.cfg.n_layers, kd.mp],
+                    &gamma,
+                )?;
+            }
+        }
+        for plan in &mut self.plans {
+            plan.bind_indices(
+                "gamma_out",
+                &[self.cfg.vocab_sub],
+                &self.lm_sel,
             )?;
         }
-        self.plan.bind_indices(
-            "gamma_out",
-            &[self.cfg.vocab_sub],
-            &self.lm_sel,
-        )?;
         Ok(())
     }
 
-    /// Upload the full backbone under the quantization policy,
-    /// (re)building the quantized cache so later folds can requantize
-    /// incrementally instead of re-encoding whole tensors.
+    /// Upload the full backbone under the quantization policy to every
+    /// plan replica, (re)building the quantized cache so later folds
+    /// can requantize incrementally instead of re-encoding whole
+    /// tensors. Quantization encodes once; replicas share the image.
     fn bind_backbone(&mut self, state: &ModelState) -> Result<()> {
         for (name, t) in &state.params {
-            if !self.plan.has_input(name) {
+            if !self.plans[0].has_input(name) {
                 continue;
             }
-            if self.plan.wants_q8(name) {
+            if self.plans[0].wants_q8(name) {
                 let q = QTensor::quantize(&t.shape, &t.data);
-                self.plan.bind_q8(name, &q)?;
+                for plan in &mut self.plans {
+                    plan.bind_q8(name, &q)?;
+                }
                 self.qcache.insert(name.clone(), q);
             } else {
-                self.plan.bind_f32(name, t)?;
+                for plan in &mut self.plans {
+                    plan.bind_f32(name, t)?;
+                }
             }
         }
         Ok(())
     }
 
-    /// Re-upload one backbone parameter after a host-side fold.
-    /// Quantized mode requantizes only the blocks covering the folded
-    /// `(rows, cols)` region of the cached image — bitwise identical
-    /// to a full requantize (pinned in `tests/quant_parity.rs`) at a
-    /// fraction of the encode cost — then re-binds it.
+    /// Re-upload one backbone parameter after a host-side fold, on
+    /// every plan replica. Quantized mode requantizes only the blocks
+    /// covering the folded `(rows, cols)` region of the cached image —
+    /// bitwise identical to a full requantize (pinned in
+    /// `tests/quant_parity.rs`) at a fraction of the encode cost —
+    /// then re-binds it.
     fn rebind_folded(
         &mut self,
         name: &str,
@@ -296,7 +318,7 @@ impl LosiaDriver {
         rows: &[usize],
         cols: &[usize],
     ) -> Result<()> {
-        if self.plan.wants_q8(name) {
+        if self.plans[0].wants_q8(name) {
             let t = state.get(name);
             match self.qcache.get_mut(name) {
                 Some(q) => {
@@ -309,9 +331,17 @@ impl LosiaDriver {
                     );
                 }
             }
-            self.plan.bind_q8(name, &self.qcache[name])
+            let q = &self.qcache[name];
+            for plan in &mut self.plans {
+                plan.bind_q8(name, q)?;
+            }
+            Ok(())
         } else {
-            self.plan.bind_f32(name, state.get(name))
+            let t = state.get(name);
+            for plan in &mut self.plans {
+                plan.bind_f32(name, t)?;
+            }
+            Ok(())
         }
     }
 
@@ -540,11 +570,13 @@ impl LosiaDriver {
                 let rows: Vec<usize> =
                     (0..self.cfg.d_model).collect();
                 self.rebind_folded("lm_head", state, &rows, &old_lm)?;
-                self.plan.bind_indices(
-                    "gamma_out",
-                    &[self.cfg.vocab_sub],
-                    &self.lm_sel,
-                )?;
+                for plan in &mut self.plans {
+                    plan.bind_indices(
+                        "gamma_out",
+                        &[self.cfg.vocab_sub],
+                        &self.lm_sel,
+                    )?;
+                }
             }
         }
         Ok(())
@@ -560,54 +592,56 @@ impl LosiaDriver {
         (base * factor) as f32
     }
 
-    /// Run the fused Pro artifact: returns (loss, subnet grads in
-    /// delta-ABI order, probe-layer grad handles by kind order, lm
-    /// grad handle). Per-step bindings are the tiny dws frames, the
-    /// probe index, and the batch — the backbone stays
+    /// Run the fused Pro artifact on one plan replica: returns (loss,
+    /// subnet grads in delta-ABI order, probe-layer grad handles by
+    /// kind order, lm grad handle). Per-step bindings are the tiny dws
+    /// frames, the probe index, and the batch — the backbone stays
     /// device-resident. Only the scalar loss and the subnet-delta
     /// frames are downloaded here; the probe-layer full grads stay
     /// device-side as [`OutputHandle`]s until (unless) the importance
     /// profiler reads them, so the per-step device→host traffic is
     /// subnet-delta-sized — the `downloads_bytes ≪ full-grad bytes`
-    /// invariant `tests/output_handles.rs` pins.
-    fn run_pro(
-        &mut self,
-        batch: &Batch,
+    /// invariant `tests/output_handles.rs` pins. An associated fn
+    /// (not `&mut self`) so the dp shard closure can split-borrow the
+    /// plans away from the shared driver fields.
+    fn run_pro_on(
+        plan: &mut ExecPlan,
+        cfg: &ModelCfg,
+        deltas: &BTreeMap<String, Tensor>,
+        delta_out: &Tensor,
         probe: usize,
+        batch: &Batch,
     ) -> Result<(f64, Vec<Tensor>, Vec<OutputHandle>, OutputHandle)>
     {
-        for kind in self.cfg.linear_kinds.clone() {
-            self.plan.bind_f32(
-                &format!("dws_{kind}"),
-                &self.deltas[&kind],
-            )?;
+        for kind in &cfg.linear_kinds {
+            plan.bind_f32(&format!("dws_{kind}"), &deltas[kind])?;
         }
-        self.plan.bind_f32("dws_out", &self.delta_out)?;
-        self.plan.bind_scalar_i32("probe", probe as i32)?;
-        self.plan.bind_batch(batch)?;
-        let mut out = self.plan.run()?;
+        plan.bind_f32("dws_out", delta_out)?;
+        plan.bind_scalar_i32("probe", probe as i32)?;
+        plan.bind_batch(batch)?;
+        let mut out = plan.run()?;
         let lm_grad = out.pop().expect("probe_lm_head output");
-        let kinds = self.cfg.linear_kinds.len();
+        let kinds = cfg.linear_kinds.len();
         let probe_grads = out.split_off(out.len() - kinds);
         let loss = out.remove(0).into_host()?.data[0] as f64;
-        let mut deltas = Vec::with_capacity(out.len());
+        let mut subnet = Vec::with_capacity(out.len());
         for h in out {
-            deltas.push(h.into_host()?);
+            subnet.push(h.into_host()?);
         }
-        Ok((loss, deltas, probe_grads, lm_grad))
+        Ok((loss, subnet, probe_grads, lm_grad))
     }
 
-    /// Run the full-grad artifact and return (loss, grads by name).
-    /// The host-gather path consumes every gradient, so everything
-    /// downloads.
-    fn run_full(
-        &mut self,
+    /// Run the full-grad artifact on one plan replica and return
+    /// (loss, grads by name). The host-gather path consumes every
+    /// gradient, so everything downloads.
+    fn run_full_on(
+        plan: &mut ExecPlan,
         state: &ModelState,
         batch: &Batch,
     ) -> Result<(f64, BTreeMap<String, Tensor>)> {
-        self.plan.bind_params(state)?;
-        self.plan.bind_batch(batch)?;
-        let mut out = self.plan.run()?.into_iter();
+        plan.bind_params(state)?;
+        plan.bind_batch(batch)?;
+        let mut out = plan.run()?.into_iter();
         let loss = out
             .next()
             .expect("loss output")
@@ -705,39 +739,98 @@ impl Driver for LosiaDriver {
         subnet + lm
     }
 
-    fn step(
+    fn grad_frames_sharded(
+        &mut self,
+        state: &ModelState,
+        batches: &[Batch],
+        t: usize,
+    ) -> Result<ShardedGrads> {
+        if self.pro {
+            // probe the currently-profiled decoder layer (the lm_head
+            // group reuses slot 0's layer grads but only consumes the
+            // lm output). The probe grads come back as device handles
+            // and download in `apply_frames` only if the profiler
+            // reads them — and only shard 0's payload survives the
+            // reduction, so the other shards' probe handles drop
+            // undownloaded: cross-shard traffic stays exactly
+            // subnet-delta-sized.
+            let g = self.sched.profiling_group(t);
+            let probe_layer = g.min(self.cfg.n_layers - 1);
+            let (plans, cfg, deltas, delta_out) = (
+                &mut self.plans,
+                &self.cfg,
+                &self.deltas,
+                &self.delta_out,
+            );
+            let (shards, worker_nanos) =
+                dp::run_sharded(plans, batches, |_, plan, batch| {
+                    let (loss, outs, pg, lmg) = Self::run_pro_on(
+                        plan, cfg, deltas, delta_out, probe_layer,
+                        batch,
+                    )?;
+                    let mut frames = Vec::with_capacity(outs.len());
+                    for (i, grad) in outs.into_iter().enumerate() {
+                        let name = if i < cfg.linear_kinds.len() {
+                            format!("dws_{}", cfg.linear_kinds[i])
+                        } else {
+                            "dws_out".to_string()
+                        };
+                        frames.push(Frame { name, grad });
+                    }
+                    Ok(GradFrames {
+                        loss,
+                        frames,
+                        probe: Some(ProbePayload {
+                            layer_grads: pg,
+                            lm_grad: lmg,
+                        }),
+                    })
+                })?;
+            Ok(ShardedGrads { shards, worker_nanos })
+        } else {
+            let plans = &mut self.plans;
+            let (shards, worker_nanos) =
+                dp::run_sharded(plans, batches, |_, plan, batch| {
+                    let (loss, grads) =
+                        Self::run_full_on(plan, state, batch)?;
+                    let frames = grads
+                        .into_iter()
+                        .map(|(name, grad)| Frame { name, grad })
+                        .collect();
+                    Ok(GradFrames { loss, frames, probe: None })
+                })?;
+            Ok(ShardedGrads { shards, worker_nanos })
+        }
+    }
+
+    fn apply_frames(
         &mut self,
         state: &mut ModelState,
-        batch: &Batch,
+        reduced: GradFrames,
         t: usize,
         lr: f64,
     ) -> Result<f64> {
         let groups = self.sched.groups;
         let profiling = !self.tc.ablation.no_relocalize;
 
-        // ---- gradients -------------------------------------------------
-        let (loss, subnet_grads, full_grads);
+        // ---- reduced gradients -----------------------------------------
+        let loss = reduced.loss;
         let mut probe_handles: Option<(Vec<OutputHandle>, OutputHandle)> =
-            None;
-        if self.pro {
-            // probe the currently-profiled decoder layer (the lm_head
-            // group reuses slot 0's layer grads but only consumes the
-            // lm output). The probe grads come back as device handles
-            // and download below only if the profiler reads them.
-            let g = self.sched.profiling_group(t);
-            let probe_layer = g.min(self.cfg.n_layers - 1);
-            let (l, outs, pg, lmg) =
-                self.run_pro(batch, probe_layer)?;
-            loss = l;
-            subnet_grads = Some(outs);
-            probe_handles = Some((pg, lmg));
-            full_grads = None;
+            reduced.probe.map(|p| (p.layer_grads, p.lm_grad));
+        let (subnet_grads, full_grads) = if self.pro {
+            // Pro frames arrive in delta-ABI order: dws_<kind> stacked
+            // [L, np, mp] per kind, then dws_out
+            let outs: Vec<Tensor> =
+                reduced.frames.into_iter().map(|f| f.grad).collect();
+            (Some(outs), None)
         } else {
-            let (l, grads) = self.run_full(state, batch)?;
-            loss = l;
-            subnet_grads = None;
-            full_grads = Some(grads);
-        }
+            let grads: BTreeMap<String, Tensor> = reduced
+                .frames
+                .into_iter()
+                .map(|f| (f.name, f.grad))
+                .collect();
+            (None, Some(grads))
+        };
 
         // ---- importance profiling --------------------------------------
         if profiling {
@@ -892,6 +985,36 @@ impl Driver for LosiaDriver {
             }
         }
         Ok(loss)
+    }
+
+    fn reduce_set(&self) -> Vec<(String, u64)> {
+        if self.pro {
+            // exactly the subnet-delta frames — cross-shard
+            // communication ∝ subnet size, never the full gradients
+            let mut set: Vec<(String, u64)> = self
+                .cfg
+                .linear_kinds
+                .iter()
+                .map(|kind| {
+                    let kd = self.cfg.kind(kind);
+                    let n = self.cfg.n_layers * kd.np * kd.mp;
+                    (format!("dws_{kind}"), 4 * n as u64)
+                })
+                .collect();
+            let lm = self.cfg.d_model * self.cfg.vocab_sub;
+            set.push(("dws_out".to_string(), 4 * lm as u64));
+            set
+        } else {
+            // the host-gather path reduces the full gradient set
+            self.cfg
+                .params
+                .iter()
+                .map(|(name, shape)| {
+                    let n: usize = shape.iter().product();
+                    (name.clone(), 4 * n as u64)
+                })
+                .collect()
+        }
     }
 }
 

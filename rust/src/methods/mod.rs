@@ -15,6 +15,7 @@ use anyhow::Result;
 use crate::config::{Method, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::data::Batch;
+use crate::runtime::dp::{self, GradFrames, ShardedGrads};
 use crate::runtime::Runtime;
 
 /// A subnet selection installed by a driver — the event behind the
@@ -37,16 +38,69 @@ pub struct SelectionEvent {
 }
 
 /// A fine-tuning method: one optimization step over a batch.
+///
+/// The step is split into a gradient phase and an update phase so the
+/// data-parallel engine ([`crate::runtime::dp`]) can interpose a
+/// fixed-order reduction between them. The provided [`Driver::step`]
+/// routes a single batch through the same two phases with a one-shard
+/// reduce — which `dp::reduce` defines as an exact bitwise
+/// pass-through — so the legacy single-plan loop *is* the one-shard
+/// data-parallel path, not a separate code path that could drift.
 pub trait Driver {
     /// Perform step `t` (0-based) at base learning rate `lr`; mutate
     /// `state` in place and return the training loss.
+    ///
+    /// Default: gradient phase on one shard, degenerate reduce, update
+    /// phase. Drivers implement the two phases, not this.
     fn step(
         &mut self,
         state: &mut ModelState,
         batch: &Batch,
         t: usize,
         lr: f64,
+    ) -> Result<f64> {
+        let sharded = self.grad_frames_sharded(
+            state,
+            std::slice::from_ref(batch),
+            t,
+        )?;
+        let (reduced, _bytes) = dp::reduce(sharded.shards)?;
+        self.apply_frames(state, reduced, t, lr)
+    }
+
+    /// Gradient phase: compute per-shard gradient frames, one
+    /// [`GradFrames`] per batch in `batches`, executing shards on the
+    /// driver's replicated plans via [`dp::run_sharded`]. Frames carry
+    /// the method's *reduce set* — the tensors that must be summed
+    /// across shards (subnet deltas for LoSiA-Pro, adapter gradients
+    /// for LoRA, full gradients for FFT/GaLore/LoSiA) — and must come
+    /// back in the same order and shapes for every shard. Read-only on
+    /// `state`; no optimizer state may be touched here.
+    fn grad_frames_sharded(
+        &mut self,
+        state: &ModelState,
+        batches: &[Batch],
+        t: usize,
+    ) -> Result<ShardedGrads>;
+
+    /// Update phase: consume the reduced (shard-averaged) frames and
+    /// apply the method's optimizer update to `state`, returning the
+    /// (shard-averaged) training loss. All optimizer-state mutation
+    /// and any relocalization live here, so they run exactly once per
+    /// step regardless of shard count.
+    fn apply_frames(
+        &mut self,
+        state: &mut ModelState,
+        reduced: GradFrames,
+        t: usize,
+        lr: f64,
     ) -> Result<f64>;
+
+    /// The cross-shard reduce set as `(frame name, bytes per step)` —
+    /// what one shard contributes to the fixed-order reduction. For
+    /// LoSiA-Pro this is exactly the subnet-delta frames (communication
+    /// ∝ subnet size), not the full gradient set.
+    fn reduce_set(&self) -> Vec<(String, u64)>;
 
     fn method(&self) -> Method;
 

@@ -326,13 +326,20 @@ impl ExecSnapshot {
 /// One device-resident output value. Downloading consumes it — the
 /// single device→host copy happens here (or never, if the caller
 /// drops the handle without asking).
-pub trait DeviceValue {
+///
+/// `Send` so [`OutputHandle`]s (and the plans that produce them) can
+/// move between the dp engine's worker threads.
+pub trait DeviceValue: Send {
     fn download(self: Box<Self>) -> Result<Tensor>;
 }
 
 /// Backend-owned input storage for one executable — the "device
 /// buffers". Slot indices follow the artifact manifest input order.
-pub trait DeviceBuffers {
+///
+/// `Send` so an [`ExecPlan`] (which owns its buffers exclusively) can
+/// be driven from a dp worker thread; buffers are never *shared*
+/// across threads, so `Sync` is not required.
+pub trait DeviceBuffers: Send {
     /// Copy one host value into input slot `slot`.
     fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()>;
 
@@ -365,7 +372,11 @@ pub trait DeviceBuffers {
 }
 
 /// One compiled (PJRT) or interpreted (reference) artifact.
-pub trait Executor {
+///
+/// `Send + Sync` because [`Executable`]s are shared via `Arc` across
+/// every plan replica — including replicas owned by different dp
+/// worker threads — and only ever used through `&self`.
+pub trait Executor: Send + Sync {
     fn alloc_buffers(&self) -> Box<dyn DeviceBuffers>;
 }
 
@@ -1031,6 +1042,12 @@ impl Runtime {
         });
         cache.insert(name.to_string(), Arc::clone(&exe));
         Ok(exe)
+    }
+
+    /// Active backend's name (`"ref"` / `"pjrt"`) — the dp engine
+    /// gates parallel plan replication on this.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Cumulative exec stats for every artifact touched so far.

@@ -1,0 +1,406 @@
+//! Deterministic data-parallel engine: shard-replicated [`ExecPlan`]s
+//! with a fixed-order tree reduction over per-shard gradient frames.
+//!
+//! ## The determinism contract, one level up
+//!
+//! `runtime::kernels` keeps every kernel bitwise identical across
+//! thread counts by fixing the work decomposition by *unit* and
+//! folding reduction partials in a constant order. This module
+//! promotes that property to a whole training run:
+//!
+//! * **Shards define the numerics, workers don't.** A run is split
+//!   into `shards` (S) logical sub-batches per step — S is the
+//!   analogue of the kernels' constant reduction-tile height. The
+//!   `workers` (W) knob only says how many OS threads execute those
+//!   shards concurrently (each worker owns one replicated plan and a
+//!   contiguous shard block); it never appears in any arithmetic.
+//! * **Fixed-order tree reduction.** Per-shard gradient frames are
+//!   combined in pairwise rounds over ascending shard index —
+//!   `(0+1), (2+3), …`, then the same over the survivors — so the
+//!   fold shape depends only on S. Gradients are then averaged with
+//!   one `× 1/S` pass (skipped entirely at S = 1 so the single-shard
+//!   path is bit-for-bit the legacy step).
+//! * **Thread-budget split.** Each worker runs its shards under
+//!   [`kernels::with_thread_budget`]`(kernel_threads() / W)`, so W
+//!   workers share the one process-wide budget instead of
+//!   oversubscribing W × B threads (the same budget-is-spent-once
+//!   rule as the kernels' nested-worker guard).
+//!
+//! Consequently `workers = 1` and `workers = N` produce identical
+//! bits for the same `shards` — the `tests/kernel_parity.rs` property
+//! promoted to whole-run, pinned end-to-end by `tests/dp_parity.rs`.
+//!
+//! ## Who reduces what
+//!
+//! Drivers expose their reducible set as named [`Frame`]s (see
+//! `methods::Driver::grad_frames_sharded`). LoSiA-Pro contributes
+//! only the subnet-delta-sized `dws_*` frames — cross-worker traffic
+//! ∝ subnet size, the PR 4 download invariant made a communication
+//! invariant — while LoRA ships adapter grads and GaLore/FFT/LoSiA
+//! ship their full trainable gradient sets. Importance-probe outputs
+//! ride along as undownloaded [`OutputHandle`]s and are **not**
+//! reduced: the profiler consumes shard 0's probe only (worker-count
+//! invariant, since shard 0's sub-batch is fixed by S).
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::TrainConfig;
+use crate::data::Batch;
+use crate::runtime::backend::{ExecPlan, OutputHandle, Runtime};
+use crate::runtime::kernels;
+use crate::tensor::Tensor;
+
+/// Resolved data-parallel configuration for one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DpConfig {
+    /// Physical executor threads (each owns one replicated plan).
+    /// Never affects numerics; clamped to `shards`.
+    pub workers: usize,
+    /// Logical sub-batches per step — the numerics knob. The final
+    /// state is a pure function of `(seed, shards)`, not `workers`.
+    pub shards: usize,
+}
+
+impl DpConfig {
+    /// Resolve from the train config with env fallbacks: an explicit
+    /// `TrainConfig` setting (the `SessionBuilder` knobs) wins, else
+    /// `LOSIA_DP_WORKERS` / `LOSIA_DP_SHARDS`, else 1. Setting
+    /// workers without shards defaults `shards = workers` (the
+    /// common "just use N cores" case); workers are clamped to the
+    /// shard count so no worker ever sits empty.
+    pub fn resolve(tc: &TrainConfig) -> DpConfig {
+        let env = |key: &str| {
+            std::env::var(key)
+                .ok()
+                .and_then(|s| s.parse::<usize>().ok())
+                .filter(|&n| n >= 1)
+        };
+        let workers = if tc.dp_workers != 1 {
+            tc.dp_workers.max(1)
+        } else {
+            env("LOSIA_DP_WORKERS").unwrap_or(1)
+        };
+        let shards = if tc.dp_shards != 1 {
+            tc.dp_shards.max(1)
+        } else {
+            env("LOSIA_DP_SHARDS").unwrap_or(workers)
+        };
+        DpConfig {
+            workers: workers.min(shards).max(1),
+            shards: shards.max(1),
+        }
+    }
+
+    /// Whether the trainer should run the sharded loop at all.
+    pub fn enabled(&self) -> bool {
+        self.shards > 1
+    }
+
+    /// Kernel threads each worker may use: the process budget split
+    /// evenly, floored at 1.
+    pub fn worker_thread_budget(&self) -> usize {
+        (kernels::kernel_threads() / self.workers.max(1)).max(1)
+    }
+}
+
+/// Validated plan-replica count for a driver: the resolved worker
+/// count, with parallel replication gated to the reference backend
+/// (PJRT buffer thread-safety is untested — same policy as Q8
+/// binds being ref-only).
+pub fn plan_count(rt: &Runtime, tc: &TrainConfig) -> Result<usize> {
+    let dp = DpConfig::resolve(tc);
+    ensure!(
+        dp.workers <= 1 || rt.backend_name() == "ref",
+        "dp: workers={} requires the reference backend \
+         (LOSIA_BACKEND=ref); backend `{}` plans are not replicated \
+         across threads. Run with workers=1 (shards still apply).",
+        dp.workers,
+        rt.backend_name()
+    );
+    Ok(dp.workers.max(1))
+}
+
+/// One named gradient/delta tensor contributed to the reduction.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub name: String,
+    pub grad: Tensor,
+}
+
+/// Device-resident importance-probe outputs (LoSiA-Pro): full-layer
+/// gradient handles that stay on device unless the profiler reads
+/// them. Never reduced — shard 0's payload is the one consumed.
+pub struct ProbePayload {
+    /// probed layer's grads, linear-kind ABI order
+    pub layer_grads: Vec<OutputHandle>,
+    /// full lm_head grad
+    pub lm_grad: OutputHandle,
+}
+
+/// One shard's reducible step output.
+pub struct GradFrames {
+    pub loss: f64,
+    pub frames: Vec<Frame>,
+    pub probe: Option<ProbePayload>,
+}
+
+/// All shards' outputs for one step, plus per-worker busy time.
+pub struct ShardedGrads {
+    pub shards: Vec<GradFrames>,
+    /// wall nanos each worker spent on its shard block (length = the
+    /// worker count actually used this step)
+    pub worker_nanos: Vec<u64>,
+}
+
+/// Fold `shards` into one averaged [`GradFrames`] with the fixed
+/// pairwise-rounds tree; returns the reduced frames and the byte size
+/// of one shard's frame set (== the cross-worker traffic each worker
+/// contributes per step).
+///
+/// Round 1 combines `(0+1), (2+3), …` in ascending shard order; each
+/// later round does the same over the survivors (an odd tail carries
+/// over unchanged). The fold shape is a function of `shards.len()`
+/// alone, so the result is bitwise independent of how many workers
+/// produced the inputs. After folding, losses and gradients are
+/// scaled by `1/S` (f64 resp. f32) — skipped at S = 1 so a
+/// single-shard reduce is an exact pass-through of the legacy step.
+/// The probe payload is taken from shard 0; other shards' handles
+/// drop undownloaded (zero bytes moved).
+pub fn reduce(shards: Vec<GradFrames>) -> Result<(GradFrames, u64)> {
+    ensure!(!shards.is_empty(), "dp: reduce of zero shards");
+    let n = shards.len();
+    let frame_bytes: u64 = shards[0]
+        .frames
+        .iter()
+        .map(|f| f.grad.len() as u64 * 4)
+        .sum();
+    for (i, s) in shards.iter().enumerate().skip(1) {
+        ensure!(
+            s.frames.len() == shards[0].frames.len(),
+            "dp: shard {i} produced {} frames, shard 0 produced {}",
+            s.frames.len(),
+            shards[0].frames.len()
+        );
+        for (a, b) in shards[0].frames.iter().zip(&s.frames) {
+            ensure!(
+                a.name == b.name && a.grad.shape == b.grad.shape,
+                "dp: shard {i} frame `{}` {:?} does not match \
+                 shard 0 frame `{}` {:?}",
+                b.name,
+                b.grad.shape,
+                a.name,
+                a.grad.shape
+            );
+        }
+    }
+    let mut items = shards;
+    let probe = items[0].probe.take();
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                a.loss += b.loss;
+                for (fa, fb) in a.frames.iter_mut().zip(b.frames) {
+                    fa.grad.add_assign(&fb.grad);
+                }
+            }
+            next.push(a);
+        }
+        items = next;
+    }
+    let mut red = items.pop().expect("non-empty reduce");
+    if n > 1 {
+        red.loss /= n as f64;
+        let inv = 1.0f32 / n as f32;
+        for f in &mut red.frames {
+            f.grad.scale_assign(inv);
+        }
+    }
+    red.probe = probe;
+    Ok((red, frame_bytes))
+}
+
+/// Run `f(shard_index, plan, batch)` for every shard, fanning
+/// contiguous shard blocks out across the replicated `plans`.
+///
+/// Worker `w` of `W` owns `plans[w]` and shards
+/// `[S·w/W, S·(w+1)/W)` — an even contiguous split — and executes
+/// them **sequentially** on its plan under a
+/// [`kernels::with_thread_budget`] cap of `kernel_threads() / W`.
+/// With one plan (or one shard) everything runs inline on the
+/// calling thread with no cap. Results come back in shard order
+/// either way; since `f`'s output is a pure function of
+/// `(shard index, bindings)`, the worker count is invisible in them.
+pub fn run_sharded<T, F>(
+    plans: &mut [ExecPlan],
+    batches: &[Batch],
+    f: F,
+) -> Result<(Vec<T>, Vec<u64>)>
+where
+    T: Send,
+    F: Fn(usize, &mut ExecPlan, &Batch) -> Result<T> + Sync,
+{
+    ensure!(!plans.is_empty(), "dp: no plans to run");
+    let s = batches.len();
+    let w = plans.len().min(s).max(1);
+    if w <= 1 {
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(s);
+        for (i, b) in batches.iter().enumerate() {
+            out.push(f(i, &mut plans[0], b)?);
+        }
+        return Ok((out, vec![t0.elapsed().as_nanos() as u64]));
+    }
+    let budget = (kernels::kernel_threads() / w).max(1);
+    let mut results: Vec<Option<Result<T>>> =
+        (0..s).map(|_| None).collect();
+    let mut nanos = vec![0u64; w];
+    std::thread::scope(|scope| {
+        let mut plans_rest: &mut [ExecPlan] = plans;
+        let mut res_rest: &mut [Option<Result<T>>] = &mut results;
+        let mut nanos_rest: &mut [u64] = &mut nanos;
+        for wi in 0..w {
+            let lo = s * wi / w;
+            let hi = s * (wi + 1) / w;
+            let (plan, pr) =
+                plans_rest.split_first_mut().expect("plan per worker");
+            plans_rest = pr;
+            let (chunk, rr) = res_rest.split_at_mut(hi - lo);
+            res_rest = rr;
+            let (busy, nr) =
+                nanos_rest.split_first_mut().expect("slot per worker");
+            nanos_rest = nr;
+            let fref = &f;
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                kernels::with_thread_budget(budget, || {
+                    for (k, slot) in chunk.iter_mut().enumerate() {
+                        let i = lo + k;
+                        *slot = Some(fref(i, plan, &batches[i]));
+                    }
+                });
+                *busy = t0.elapsed().as_nanos() as u64;
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(s);
+    for r in results {
+        out.push(r.expect("worker filled every slot")?);
+    }
+    Ok((out, nanos))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames(loss: f64, vals: &[f32]) -> GradFrames {
+        GradFrames {
+            loss,
+            frames: vec![Frame {
+                name: "g".into(),
+                grad: Tensor::from_vec(&[vals.len()], vals.to_vec()),
+            }],
+            probe: None,
+        }
+    }
+
+    #[test]
+    fn single_shard_reduce_is_exact_passthrough() {
+        // no 1/S scale at S = 1 — bits in == bits out, including a
+        // loss whose ×1.0 round trip we refuse to rely on
+        let vals = [1.000001f32, -0.25, 3.5e-8];
+        let (red, bytes) = reduce(vec![frames(0.625, &vals)]).unwrap();
+        assert_eq!(red.loss.to_bits(), 0.625f64.to_bits());
+        for (a, b) in red.frames[0].grad.data.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(bytes, 12);
+    }
+
+    #[test]
+    fn reduce_is_pairwise_rounds_not_sequential() {
+        // values chosen so ((a+b)+(c+d)) != (((a+b)+c)+d) in f32:
+        // the tree must fold (0+1) and (2+3) first
+        let a = 1.0e8f32;
+        let b = -1.0e8f32;
+        let c = 1.0f32;
+        let d = 3.0e-8f32;
+        let (red, _) = reduce(vec![
+            frames(0.0, &[a]),
+            frames(0.0, &[b]),
+            frames(0.0, &[c]),
+            frames(0.0, &[d]),
+        ])
+        .unwrap();
+        let tree = ((a + b) + (c + d)) * (1.0 / 4.0);
+        let seq = ((a + b) + c + d) * (1.0 / 4.0);
+        assert_ne!(tree.to_bits(), seq.to_bits(), "bad test values");
+        assert_eq!(red.frames[0].grad.data[0].to_bits(), tree.to_bits());
+    }
+
+    #[test]
+    fn reduce_averages_loss_and_handles_odd_tails() {
+        let (red, _) = reduce(vec![
+            frames(1.0, &[3.0]),
+            frames(2.0, &[6.0]),
+            frames(6.0, &[9.0]),
+        ])
+        .unwrap();
+        // pairwise: (1+2), carry 6 → (3+6) → /3
+        assert_eq!(red.loss, 3.0);
+        assert_eq!(red.frames[0].grad.data[0], 6.0);
+    }
+
+    #[test]
+    fn reduce_rejects_mismatched_frames() {
+        let a = frames(0.0, &[1.0, 2.0]);
+        let b = frames(0.0, &[1.0]);
+        assert!(reduce(vec![a, b]).is_err());
+        let a = frames(0.0, &[1.0]);
+        let mut b = frames(0.0, &[1.0]);
+        b.frames[0].name = "other".into();
+        assert!(reduce(vec![a, b]).is_err());
+    }
+
+    #[test]
+    fn resolve_defaults_clamps_and_reads_builder() {
+        use crate::config::TrainConfig;
+        let tc = TrainConfig::default();
+        let dp = DpConfig::resolve(&tc);
+        // default: no dp (env vars are not set in the test harness)
+        if std::env::var("LOSIA_DP_WORKERS").is_err()
+            && std::env::var("LOSIA_DP_SHARDS").is_err()
+        {
+            assert_eq!(dp, DpConfig { workers: 1, shards: 1 });
+        }
+        // workers alone defaults shards = workers
+        let tc = TrainConfig {
+            dp_workers: 4,
+            ..TrainConfig::default()
+        };
+        let dp = DpConfig::resolve(&tc);
+        assert_eq!(dp.workers, 4);
+        assert_eq!(dp.shards, 4);
+        assert!(dp.enabled());
+        // workers clamp to shards
+        let tc = TrainConfig {
+            dp_workers: 4,
+            dp_shards: 2,
+            ..TrainConfig::default()
+        };
+        let dp = DpConfig::resolve(&tc);
+        assert_eq!(dp, DpConfig { workers: 2, shards: 2 });
+        // shards without workers: serial but sharded numerics
+        let tc = TrainConfig {
+            dp_shards: 3,
+            ..TrainConfig::default()
+        };
+        let dp = DpConfig::resolve(&tc);
+        assert_eq!(dp, DpConfig { workers: 1, shards: 3 });
+        assert!(dp.enabled());
+    }
+}

@@ -97,6 +97,11 @@ thread_local! {
     /// True while this thread is executing a kernel worker job — the
     /// nested-oversubscription guard reads it.
     static IN_KERNEL_WORKER: Cell<bool> = const { Cell::new(false) };
+
+    /// Per-thread cap on the kernel-thread budget (0 = uncapped).
+    /// Installed by [`with_thread_budget`] so the dp engine can split
+    /// one process-wide budget across its worker threads.
+    static THREAD_BUDGET: Cell<usize> = const { Cell::new(0) };
 }
 
 fn in_worker() -> bool {
@@ -125,22 +130,49 @@ impl Drop for WorkerGuard {
 /// `available_parallelism`. The env-derived value is cached for the
 /// process lifetime; the override can change at any time.
 pub fn kernel_threads() -> usize {
-    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
-    if o > 0 {
-        return o;
-    }
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        std::env::var("LOSIA_KERNEL_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .map(|n| n.max(1))
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1)
+    let base = {
+        let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+        if o > 0 {
+            o
+        } else {
+            static N: OnceLock<usize> = OnceLock::new();
+            *N.get_or_init(|| {
+                std::env::var("LOSIA_KERNEL_THREADS")
+                    .ok()
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .map(|n| n.max(1))
+                    .unwrap_or_else(|| {
+                        std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1)
+                    })
             })
-    })
+        }
+    };
+    let cap = THREAD_BUDGET.with(|b| b.get());
+    if cap > 0 {
+        base.min(cap)
+    } else {
+        base
+    }
+}
+
+/// Run `f` with this thread's kernel budget capped at `n` (minimum 1),
+/// restoring the previous cap afterwards. The dp engine wraps each
+/// worker in this so `W` workers share one process-wide budget
+/// (`kernel_threads() / W` each) instead of oversubscribing `W × B`
+/// threads. Thread count never affects kernel numerics (the
+/// determinism contract above), so capping is invisible in results.
+pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = THREAD_BUDGET.with(|b| b.replace(n.max(1)));
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_BUDGET.with(|b| b.set(self.0));
+        }
+    }
+    let _restore = Restore(prev);
+    f()
 }
 
 /// Install (or with `0`, clear) a process-wide thread-count override —
@@ -2011,6 +2043,29 @@ impl Pool {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn thread_budget_caps_and_restores() {
+        // the cap is thread-local, scoped, and floored at 1; it never
+        // raises the budget above the process-wide setting
+        set_kernel_threads(4);
+        assert_eq!(kernel_threads(), 4);
+        with_thread_budget(2, || {
+            assert_eq!(kernel_threads(), 2);
+            with_thread_budget(8, || assert_eq!(kernel_threads(), 4));
+            with_thread_budget(0, || assert_eq!(kernel_threads(), 1));
+            assert_eq!(kernel_threads(), 2);
+        });
+        assert_eq!(kernel_threads(), 4);
+        // other threads are unaffected while a cap is active
+        with_thread_budget(1, || {
+            let other = std::thread::spawn(kernel_threads)
+                .join()
+                .unwrap();
+            assert_eq!(other, 4);
+        });
+        set_kernel_threads(0);
+    }
 
     /// The historical interpreter loops, kept verbatim (including the
     /// `av == 0.0` skip) as the numeric reference. The blocked kernels

@@ -19,6 +19,7 @@
 //! deterministic regardless of thread count.
 
 pub mod backend;
+pub mod dp;
 pub mod host;
 pub mod kernels;
 pub mod pjrt;
@@ -30,6 +31,7 @@ pub use backend::{
     DeviceValue, ExecPlan, ExecSnapshot, ExecStats, Executable,
     Executor, HostRef, OutputHandle, Runtime,
 };
+pub use dp::{DpConfig, Frame, GradFrames, ProbePayload, ShardedGrads};
 pub use host::HostValue;
 pub use pjrt::PjrtBackend;
 pub use quant::{QTensor, QuantMode};

@@ -85,6 +85,18 @@ struct PjrtExecutor {
     spec: Arc<ArtifactSpec>,
 }
 
+// SAFETY: the `Executor` supertraits require Send + Sync.
+// `PjRtLoadedExecutable` wraps a heap-owned C++ object whose
+// `Execute` entry point PJRT documents as thread-safe, and this
+// executor only ever reads it through `&self`; `ArtifactSpec` is
+// plain data. Note the dp engine never actually drives PJRT plans
+// from multiple threads — `dp::plan_count` gates parallel replication
+// to the reference backend — so cross-thread use here is limited to
+// moving an executor between threads, which the C++ object (no
+// thread-affine state) supports.
+unsafe impl Send for PjrtExecutor {}
+unsafe impl Sync for PjrtExecutor {}
+
 impl Executor for PjrtExecutor {
     fn alloc_buffers(&self) -> Box<dyn DeviceBuffers> {
         let slots =
@@ -105,11 +117,21 @@ struct PjrtBuffers {
     donated: Vec<bool>,
 }
 
+// SAFETY: the `DeviceBuffers` supertrait requires Send. `Literal` is
+// heap-owned host memory with no thread affinity, and a buffer set is
+// owned exclusively by one plan (never shared), so moving it between
+// threads is sound.
+unsafe impl Send for PjrtBuffers {}
+
 /// One output literal, converted to a host `Tensor` only on download.
 struct PjrtValue {
     lit: xla::Literal,
     shape: Vec<usize>,
 }
+
+// SAFETY: as for PjrtBuffers — an owned heap literal, moved not
+// shared.
+unsafe impl Send for PjrtValue {}
 
 impl DeviceValue for PjrtValue {
     fn download(self: Box<Self>) -> Result<Tensor> {

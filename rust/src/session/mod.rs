@@ -34,9 +34,11 @@ pub mod observer;
 pub mod registry;
 pub mod report;
 
-pub use observer::{ExecEvent, Observer, ObserverSet, SelectionEvent};
+pub use observer::{
+    DpEvent, ExecEvent, Observer, ObserverSet, SelectionEvent,
+};
 pub use registry::TaskRegistry;
-pub use report::{ExecProfile, RunReport, SequenceReport};
+pub use report::{DpReport, ExecProfile, RunReport, SequenceReport};
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -159,6 +161,8 @@ pub struct SessionBuilder<'a> {
     galore_rank: Option<usize>,
     ablation: Option<Ablation>,
     rank_factor_override: Option<f64>,
+    workers: Option<usize>,
+    dp_shards: Option<usize>,
     task: TaskChoice<'a>,
     registry: TaskRegistry,
     model_seed: Option<u64>,
@@ -188,6 +192,8 @@ impl<'a> SessionBuilder<'a> {
             galore_rank: None,
             ablation: None,
             rank_factor_override: None,
+            workers: None,
+            dp_shards: None,
             task: TaskChoice::None,
             registry: TaskRegistry::with_builtins(),
             model_seed: None,
@@ -318,6 +324,25 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Data-parallel worker count: N plan replicas executing disjoint
+    /// shard blocks concurrently. Defaults the shard count to the same
+    /// N unless [`Self::dp_shards`] is set. Workers never affect
+    /// numerics — the result is a function of `(seed, shards)` only.
+    /// Overrides `LOSIA_DP_WORKERS`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = Some(n);
+        self
+    }
+
+    /// Logical shards per step — the data-parallel *numerics* knob:
+    /// the batcher splits into this many seed-stable sub-streams and
+    /// each step reduces that many gradient frames in fixed order.
+    /// Overrides `LOSIA_DP_SHARDS`.
+    pub fn dp_shards(mut self, n: usize) -> Self {
+        self.dp_shards = Some(n);
+        self
+    }
+
     /// Training examples to generate per stage (default 2000).
     pub fn train_n(mut self, n: usize) -> Self {
         self.train_n = n;
@@ -386,6 +411,20 @@ impl<'a> SessionBuilder<'a> {
         }
         if let Some(p) = self.rank_factor_override {
             tc.rank_factor_override = Some(p);
+        }
+        if let Some(w) = self.workers {
+            ensure!(
+                w >= 1,
+                "session misuse: workers must be ≥ 1 (got {w})"
+            );
+            tc.dp_workers = w;
+        }
+        if let Some(s) = self.dp_shards {
+            ensure!(
+                s >= 1,
+                "session misuse: dp_shards must be ≥ 1 (got {s})"
+            );
+            tc.dp_shards = s;
         }
         ensure!(
             tc.steps >= 1,
@@ -772,6 +811,13 @@ impl<'a> Session<'a> {
             reselections: self.obs.selection.reselections(),
             selection_drift: self.obs.selection.mean_turnover(),
             exec: self.obs.exec.profiles(),
+            dp: (self.obs.dp.steps > 0).then(|| DpReport {
+                workers: self.obs.dp.workers,
+                shards: self.obs.dp.shards,
+                frame_bytes: self.obs.dp.frame_bytes,
+                reduce_secs: self.obs.dp.reduce_secs,
+                worker_busy_secs: self.obs.dp.worker_busy_secs,
+            }),
         })
     }
 }

@@ -79,6 +79,26 @@ pub struct ExecEvent {
     pub download_bytes: u64,
 }
 
+/// One data-parallel step: reduction cost and per-worker busy time.
+/// Emitted by the trainer only when the sharded loop is active
+/// (`DpConfig::enabled()`), so single-plan runs carry no dp stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DpEvent {
+    /// step the reduction belongs to
+    pub step: usize,
+    /// worker (plan replica) count actually used this step
+    pub workers: usize,
+    /// logical shard count (the numerics knob)
+    pub shards: usize,
+    /// wall nanos spent inside the fixed-order tree reduction
+    pub reduce_nanos: u64,
+    /// bytes one shard contributed to the reduction this step —
+    /// subnet-delta-sized for LoSiA-Pro, trainable-set-sized otherwise
+    pub frame_bytes: u64,
+    /// wall nanos each worker spent on its shard block
+    pub worker_nanos: Vec<u64>,
+}
+
 /// Fired between two stages of `Session::train_sequence`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TaskBoundaryEvent {
@@ -103,6 +123,7 @@ pub trait Observer {
     fn on_step(&mut self, _ev: &StepEvent) {}
     fn on_relocalize(&mut self, _ev: &SelectionEvent) {}
     fn on_exec(&mut self, _ev: &ExecEvent) {}
+    fn on_dp(&mut self, _ev: &DpEvent) {}
     fn on_task_boundary(&mut self, _ev: &TaskBoundaryEvent) {}
     fn on_finalize(&mut self, _ev: &FinalizeEvent) {}
 }
@@ -312,6 +333,42 @@ impl Observer for ExecProfileObserver {
     }
 }
 
+/// Accumulates data-parallel stats for the current stage and feeds
+/// `RunReport::dp`: the worker/shard layout, total reduction time, and
+/// the per-step cross-shard traffic (which `tests/dp_parity.rs` pins
+/// against the analytic reduce-set size for LoSiA-Pro).
+#[derive(Debug, Default, Clone)]
+pub struct DpProfileObserver {
+    /// dp steps observed (0 ⇒ the sharded loop never ran)
+    pub steps: usize,
+    pub workers: usize,
+    pub shards: usize,
+    /// bytes one shard contributes per step (constant over a stage)
+    pub frame_bytes: u64,
+    pub reduce_secs: f64,
+    /// total busy seconds across all workers
+    pub worker_busy_secs: f64,
+}
+
+impl Observer for DpProfileObserver {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {
+        *self = Self::default();
+    }
+
+    fn on_dp(&mut self, ev: &DpEvent) {
+        self.steps += 1;
+        self.workers = ev.workers;
+        self.shards = ev.shards;
+        self.frame_bytes = ev.frame_bytes;
+        self.reduce_secs += ev.reduce_nanos as f64 * 1e-9;
+        self.worker_busy_secs += ev
+            .worker_nanos
+            .iter()
+            .map(|&n| n as f64 * 1e-9)
+            .sum::<f64>();
+    }
+}
+
 // ------------------------------------------------------------ dispatch
 
 /// The observer bundle a trainer reports into: the four stock
@@ -325,6 +382,7 @@ pub struct ObserverSet {
     pub memory: MemoryObserver,
     pub selection: SelectionObserver,
     pub exec: ExecProfileObserver,
+    pub dp: DpProfileObserver,
     pub extra: Vec<Box<dyn Observer>>,
 }
 
@@ -349,6 +407,7 @@ impl ObserverSet {
         self.memory.on_run_start(ev);
         self.selection.on_run_start(ev);
         self.exec.on_run_start(ev);
+        self.dp.on_run_start(ev);
         for o in &mut self.extra {
             o.on_run_start(ev);
         }
@@ -360,8 +419,21 @@ impl ObserverSet {
         self.memory.on_exec(ev);
         self.selection.on_exec(ev);
         self.exec.on_exec(ev);
+        self.dp.on_exec(ev);
         for o in &mut self.extra {
             o.on_exec(ev);
+        }
+    }
+
+    pub fn emit_dp(&mut self, ev: &DpEvent) {
+        self.loss.on_dp(ev);
+        self.latency.on_dp(ev);
+        self.memory.on_dp(ev);
+        self.selection.on_dp(ev);
+        self.exec.on_dp(ev);
+        self.dp.on_dp(ev);
+        for o in &mut self.extra {
+            o.on_dp(ev);
         }
     }
 
@@ -386,6 +458,7 @@ impl ObserverSet {
         self.memory.on_step(&ev);
         self.selection.on_step(&ev);
         self.exec.on_step(&ev);
+        self.dp.on_step(&ev);
         for o in &mut self.extra {
             o.on_step(&ev);
         }
@@ -397,6 +470,7 @@ impl ObserverSet {
         self.memory.on_relocalize(ev);
         self.selection.on_relocalize(ev);
         self.exec.on_relocalize(ev);
+        self.dp.on_relocalize(ev);
         for o in &mut self.extra {
             o.on_relocalize(ev);
         }
@@ -408,6 +482,7 @@ impl ObserverSet {
         self.memory.on_task_boundary(ev);
         self.selection.on_task_boundary(ev);
         self.exec.on_task_boundary(ev);
+        self.dp.on_task_boundary(ev);
         for o in &mut self.extra {
             o.on_task_boundary(ev);
         }
@@ -423,6 +498,7 @@ impl ObserverSet {
         self.memory.on_finalize(&ev);
         self.selection.on_finalize(&ev);
         self.exec.on_finalize(&ev);
+        self.dp.on_finalize(&ev);
         for o in &mut self.extra {
             o.on_finalize(&ev);
         }

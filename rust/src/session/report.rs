@@ -108,6 +108,53 @@ impl ExecProfile {
     }
 }
 
+/// Data-parallel stats for one stage. Present only when the sharded
+/// loop ran (`DpConfig::enabled()`); fed by the stock
+/// [`crate::session::observer::DpProfileObserver`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DpReport {
+    /// plan-replica (worker) count
+    pub workers: usize,
+    /// logical shard count (the numerics knob)
+    pub shards: usize,
+    /// bytes one shard contributed to the reduction per step —
+    /// subnet-delta-sized for LoSiA-Pro (pinned by
+    /// `tests/dp_parity.rs`), trainable-set-sized otherwise
+    pub frame_bytes: u64,
+    /// total wall seconds inside the fixed-order tree reduction
+    pub reduce_secs: f64,
+    /// total busy seconds summed across all workers
+    pub worker_busy_secs: f64,
+}
+
+impl DpReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("shards".into(), Json::Num(self.shards as f64));
+        m.insert(
+            "frame_bytes".into(),
+            Json::Num(self.frame_bytes as f64),
+        );
+        m.insert("reduce_secs".into(), Json::Num(self.reduce_secs));
+        m.insert(
+            "worker_busy_secs".into(),
+            Json::Num(self.worker_busy_secs),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(DpReport {
+            workers: get_usize(j, "workers")?,
+            shards: get_usize(j, "shards")?,
+            frame_bytes: get_u64(j, "frame_bytes")?,
+            reduce_secs: get_num(j, "reduce_secs")?,
+            worker_busy_secs: get_num(j, "worker_busy_secs")?,
+        })
+    }
+}
+
 /// Summary of one training (or evaluation-only) stage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
@@ -137,6 +184,9 @@ pub struct RunReport {
     pub selection_drift: Option<f64>,
     /// per-artifact executor stats (empty for evaluation-only runs)
     pub exec: Vec<ExecProfile>,
+    /// data-parallel stats (`None` when the sharded loop never ran —
+    /// including every report written before dp existed)
+    pub dp: Option<DpReport>,
 }
 
 impl Default for RunReport {
@@ -161,6 +211,7 @@ impl Default for RunReport {
             reselections: 0,
             selection_drift: None,
             exec: Vec::new(),
+            dp: None,
         }
     }
 }
@@ -298,6 +349,13 @@ impl RunReport {
             "exec".into(),
             Json::Arr(self.exec.iter().map(|p| p.to_json()).collect()),
         );
+        m.insert(
+            "dp".into(),
+            match &self.dp {
+                Some(d) => d.to_json(),
+                None => Json::Null,
+            },
+        );
         Json::Obj(m)
     }
 
@@ -344,6 +402,11 @@ impl RunReport {
                     .collect::<Result<_>>()?,
                 // older reports predate executor profiling
                 _ => Vec::new(),
+            },
+            dp: match j.get("dp") {
+                // older reports predate data-parallel training
+                None | Some(Json::Null) => None,
+                Some(d) => Some(DpReport::from_json(d)?),
             },
         })
     }
@@ -533,7 +596,37 @@ mod tests {
                 downloads: 21,
                 download_bytes: 5376,
             }],
+            dp: None,
         }
+    }
+
+    #[test]
+    fn dp_block_round_trips_and_tolerates_old_reports() {
+        // None serializes as null and survives the round trip
+        let r = sample();
+        let s = r.to_json_string();
+        assert!(s.contains("\"dp\":null"), "{s}");
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(back.dp, None);
+        // a populated block round-trips field-for-field
+        let mut r = sample();
+        r.dp = Some(DpReport {
+            workers: 4,
+            shards: 4,
+            frame_bytes: 5376,
+            reduce_secs: 0.125,
+            worker_busy_secs: 1.5,
+        });
+        let back =
+            RunReport::from_json_str(&r.to_json_string()).unwrap();
+        assert_eq!(back, r);
+        // reports written before dp existed lack the key entirely
+        let mut j = sample().to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("dp");
+        }
+        let old = RunReport::from_json_str(&j.to_string()).unwrap();
+        assert_eq!(old.dp, None);
     }
 
     #[test]

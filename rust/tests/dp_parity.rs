@@ -1,0 +1,200 @@
+//! Data-parallel determinism: the **shard** count fixes the numerics
+//! and the **worker** count only changes wall-clock. Training with
+//! `dp_shards = 4` must produce bitwise-identical final parameters
+//! and loss trajectories whether the four shards run on 1, 2, or 4
+//! worker threads — the fixed-order tree reduce in [`losia::runtime::
+//! dp`] folds shard frames in shard order regardless of which worker
+//! produced them, and the reference-backend kernels are thread-count
+//! invariant (pinned by `kernel_parity.rs`).
+//!
+//! The CI `dp-parity` lane runs this binary under
+//! `LOSIA_KERNEL_THREADS=1` and `=4`, so worker-count invariance is
+//! exercised both with and without nested kernel parallelism.
+
+use std::sync::Mutex;
+
+use losia::config::Method;
+use losia::coordinator::state::ModelState;
+use losia::runtime::{kernels, RefBackend, Runtime};
+use losia::session::{RunReport, Session};
+
+/// Worker threads temporarily cap the kernel budget via a
+/// thread-local, but `set_kernel_threads` (used in cleanup) is
+/// process-global — serialize like `kernel_parity.rs` does.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+fn small_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::builtin_config("small", &dir)
+        .expect("small builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+/// One short training run; returns the report and the final state.
+fn train(
+    method: Method,
+    workers: usize,
+    shards: usize,
+) -> (RunReport, ModelState) {
+    let rt = small_ref_runtime();
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(method)
+        .task("modmath")
+        .steps(6)
+        .time_slot(3)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(0)
+        .workers(workers)
+        .dp_shards(shards)
+        .build()
+        .unwrap();
+    let report = session.train().unwrap();
+    (report, session.into_state())
+}
+
+fn assert_states_bitwise_eq(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.params.len(), b.params.len(), "{what}: param count");
+    for ((na, ta), (nb, tb)) in a.params.iter().zip(&b.params) {
+        assert_eq!(na, nb, "{what}: param order");
+        assert_eq!(ta.shape, tb.shape, "{what}: {na} shape");
+        for (ei, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: {na}[{ei}] differs ({x} vs {y}) — worker \
+                 count changed the numerics"
+            );
+        }
+    }
+}
+
+fn assert_curves_bitwise_eq(
+    a: &[(usize, f64)],
+    b: &[(usize, f64)],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: loss curve length");
+    for ((sa, la), (sb, lb)) in a.iter().zip(b) {
+        assert_eq!(sa, sb, "{what}: curve step");
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "{what}: step {sa} loss differs ({la} vs {lb})"
+        );
+    }
+}
+
+/// Shards fixed at 4; workers swept over {1, 2, 4}. LoSiA-Pro is the
+/// hard case: device-resident deltas, importance probes (shard 0's
+/// payload only), and mid-run relocalization all have to stay on the
+/// worker-count-invariant path.
+#[test]
+fn losia_pro_is_bitwise_identical_across_worker_counts() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (base_report, base_state) = train(Method::LosiaPro, 1, 4);
+    for workers in [2, 4] {
+        let (report, state) =
+            train(Method::LosiaPro, workers, 4);
+        let what = format!("losia-pro @ {workers} workers");
+        assert_states_bitwise_eq(&base_state, &state, &what);
+        assert_curves_bitwise_eq(
+            &base_report.loss_curve,
+            &report.loss_curve,
+            &what,
+        );
+        let dp = report.dp.as_ref().expect("dp block recorded");
+        assert_eq!(dp.workers, workers, "{what}: reported workers");
+        assert_eq!(dp.shards, 4, "{what}: reported shards");
+    }
+    kernels::set_kernel_threads(0);
+}
+
+/// Same sweep for an adapter method: LoRA reduces its `la_*`/`lb_*`
+/// gradient frames instead of subnet deltas, and the finalize-time
+/// merge has to land on identical adapters.
+#[test]
+fn lora_is_bitwise_identical_across_worker_counts() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (base_report, base_state) = train(Method::Lora, 1, 4);
+    for workers in [2, 4] {
+        let (report, state) = train(Method::Lora, workers, 4);
+        let what = format!("lora @ {workers} workers");
+        assert_states_bitwise_eq(&base_state, &state, &what);
+        assert_curves_bitwise_eq(
+            &base_report.loss_curve,
+            &report.loss_curve,
+            &what,
+        );
+    }
+    kernels::set_kernel_threads(0);
+}
+
+/// `shards = 1` takes the legacy single-batch loop (no dp block in
+/// the report) and two identical runs are bitwise reproducible — the
+/// baseline the worker sweeps above are measured against.
+#[test]
+fn single_shard_runs_use_legacy_loop_and_are_reproducible() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (report_a, state_a) = train(Method::LosiaPro, 1, 1);
+    let (report_b, state_b) = train(Method::LosiaPro, 1, 1);
+    assert!(
+        report_a.dp.is_none() && report_b.dp.is_none(),
+        "single-shard runs must not record a dp block"
+    );
+    assert_states_bitwise_eq(&state_a, &state_b, "losia-pro repeat");
+    assert_curves_bitwise_eq(
+        &report_a.loss_curve,
+        &report_b.loss_curve,
+        "losia-pro repeat",
+    );
+    kernels::set_kernel_threads(0);
+}
+
+/// LoSiA-Pro's cross-shard traffic is exactly the subnet-delta bytes:
+/// `Σ_kinds L·np·mp·4 + d_model·vocab_sub·4` computed from the model
+/// config — never the full gradient set, and the importance-probe
+/// outputs never cross (they ride as undownloaded handles).
+#[test]
+fn losia_pro_reduce_bytes_are_exactly_the_subnet_deltas() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let rt = small_ref_runtime();
+    let expected: u64 = rt
+        .cfg
+        .linear_kinds
+        .iter()
+        .map(|kind| {
+            let kd = rt.cfg.kind(kind);
+            4 * (rt.cfg.n_layers * kd.np * kd.mp) as u64
+        })
+        .sum::<u64>()
+        + 4 * (rt.cfg.d_model * rt.cfg.vocab_sub) as u64;
+    drop(rt);
+    let (report, _) = train(Method::LosiaPro, 2, 2);
+    let dp = report.dp.as_ref().expect("dp block recorded");
+    assert_eq!(
+        dp.frame_bytes, expected,
+        "per-shard reduce traffic must equal the subnet-delta bytes"
+    );
+    let full: u64 = {
+        let rt = small_ref_runtime();
+        rt.cfg
+            .params
+            .iter()
+            .map(|(_, s)| 4 * s.iter().product::<usize>() as u64)
+            .sum()
+    };
+    assert!(
+        dp.frame_bytes < full,
+        "subnet reduce ({} B) must undercut the full gradient set \
+         ({} B)",
+        dp.frame_bytes,
+        full
+    );
+    kernels::set_kernel_threads(0);
+}
