@@ -1,0 +1,197 @@
+//! Step-pipeline throughput: the same training run with the pipeline
+//! off and on. Pipelining moves copies, never arithmetic, so every
+//! pair of rows computes the identical final state — the artifact
+//! asserts the loss bits match and only wall-clock is allowed to move.
+//!
+//! What the numbers pin:
+//!
+//! * **steps/sec** synchronous vs pipelined — the end-to-end win from
+//!   overlapping batch packing and per-step uploads with execution;
+//! * **exposed transfer ms** — training-thread time spent in binds +
+//!   downloads per run; the pipeline's job is to push this toward 0
+//!   by moving bind wall-time into the overlapped column;
+//! * **overlap ratio** — overlapped transfer time as a share of all
+//!   transfer time (`overlap / (overlap + exposed upload)`);
+//! * **stall ms** — time the training thread blocked on the stage
+//!   queue (the pipeline's own exposed cost; small queue depths or
+//!   slow packing show up here).
+//!
+//! Results land as a stdout table and `BENCH_pipeline.json` at the
+//! repo root (the artifact the CI `pipeline-parity` lane uploads).
+//! `LOSIA_BENCH_CONFIG` picks the builtin config (default `small`);
+//! `LOSIA_BENCH_STEPS` resizes the run.
+
+use std::collections::BTreeMap;
+
+use losia::config::{builtin_config, Method};
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::Session;
+use losia::util::json::Json;
+use losia::util::table::{f, write_bench_json, Table};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+struct Row {
+    pipelined: bool,
+    steps_per_sec: f64,
+    exposed_up_ms: f64,
+    exposed_dl_ms: f64,
+    overlap_ms: f64,
+    stall_ms: f64,
+    final_loss: f64,
+}
+
+fn run(
+    rt: &Runtime,
+    method: Method,
+    workers: usize,
+    steps: usize,
+    pipelined: bool,
+) -> Row {
+    let mut session = Session::builder()
+        .runtime(rt)
+        .method(method)
+        .task("modmath")
+        .steps(steps)
+        .time_slot((steps / 2).max(3))
+        .lr(1e-3)
+        .train_n(256)
+        .eval_n(0)
+        .workers(workers)
+        .dp_shards(workers)
+        .pipeline(pipelined)
+        .build()
+        .expect("session");
+    let report = session.train().expect("train");
+    // exposed = wall time the training thread itself spent in
+    // transfers; overlapped binds ran on the stage worker instead
+    let (mut up, mut dl, mut ov) = (0.0f64, 0.0f64, 0.0f64);
+    for p in &report.exec {
+        up += p.upload_secs;
+        dl += p.download_secs;
+        ov += p.overlap_secs;
+    }
+    Row {
+        pipelined,
+        steps_per_sec: steps as f64 / report.wall_secs.max(1e-9),
+        exposed_up_ms: up * 1e3,
+        exposed_dl_ms: dl * 1e3,
+        overlap_ms: ov * 1e3,
+        stall_ms: report
+            .pipeline
+            .as_ref()
+            .map(|p| p.stall_secs * 1e3)
+            .unwrap_or(0.0),
+        final_loss: report.final_loss.unwrap_or(f64::NAN),
+    }
+}
+
+fn main() {
+    let cfg_name = std::env::var("LOSIA_BENCH_CONFIG")
+        .unwrap_or_else(|_| "small".into());
+    let steps = env_usize("LOSIA_BENCH_STEPS", 8);
+    let workers = env_usize("LOSIA_BENCH_WORKERS", 1);
+    let dir = losia::runtime::artifacts_dir();
+    let cfg =
+        builtin_config(&cfg_name, &dir).expect("builtin bench config");
+    let rt = Runtime::with_backend(cfg, Box::new(RefBackend));
+
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(cfg_name.clone()));
+    j.insert("steps".into(), Json::Num(steps as f64));
+    j.insert("workers".into(), Json::Num(workers as f64));
+
+    for method in [Method::LosiaPro, Method::Lora] {
+        let name = method.name().to_lowercase().replace('-', "");
+        let mut t = Table::new(
+            &format!(
+                "pipeline_throughput — {} on {}, {} worker(s), \
+                 {} steps",
+                method.name(),
+                cfg_name,
+                workers,
+                steps
+            ),
+            &[
+                "mode", "steps/s", "up ms", "dl ms", "overlap ms",
+                "stall ms",
+            ],
+        );
+        let sync = run(&rt, method, workers, steps, false);
+        let pipe = run(&rt, method, workers, steps, true);
+        // the determinism claim rides in the artifact: the pipeline
+        // must land on the same loss bits as the synchronous loop
+        assert_eq!(
+            pipe.final_loss.to_bits(),
+            sync.final_loss.to_bits(),
+            "{} pipelined run diverged from synchronous",
+            method.name()
+        );
+        let mut mj = BTreeMap::new();
+        for r in [&sync, &pipe] {
+            t.rowv(vec![
+                if r.pipelined { "pipelined" } else { "sync" }
+                    .to_string(),
+                f(r.steps_per_sec, 2),
+                f(r.exposed_up_ms, 2),
+                f(r.exposed_dl_ms, 2),
+                f(r.overlap_ms, 2),
+                f(r.stall_ms, 2),
+            ]);
+            let mut rj = BTreeMap::new();
+            rj.insert(
+                "steps_per_sec".into(),
+                Json::Num(r.steps_per_sec),
+            );
+            rj.insert(
+                "exposed_upload_ms".into(),
+                Json::Num(r.exposed_up_ms),
+            );
+            rj.insert(
+                "exposed_download_ms".into(),
+                Json::Num(r.exposed_dl_ms),
+            );
+            rj.insert("overlap_ms".into(), Json::Num(r.overlap_ms));
+            rj.insert("stall_ms".into(), Json::Num(r.stall_ms));
+            mj.insert(
+                if r.pipelined { "pipelined" } else { "sync" }
+                    .to_string(),
+                Json::Obj(rj),
+            );
+        }
+        let speedup =
+            pipe.steps_per_sec / sync.steps_per_sec.max(1e-9);
+        let overlap_ratio = pipe.overlap_ms
+            / (pipe.overlap_ms + pipe.exposed_up_ms).max(1e-9);
+        let exposed_sync = sync.exposed_up_ms + sync.exposed_dl_ms;
+        let exposed_pipe = pipe.exposed_up_ms + pipe.exposed_dl_ms;
+        let exposed_reduction =
+            1.0 - exposed_pipe / exposed_sync.max(1e-9);
+        mj.insert("speedup".into(), Json::Num(speedup));
+        mj.insert(
+            "overlap_ratio".into(),
+            Json::Num(overlap_ratio),
+        );
+        mj.insert(
+            "exposed_reduction".into(),
+            Json::Num(exposed_reduction),
+        );
+        mj.insert("final_loss".into(), Json::Num(sync.final_loss));
+        j.insert(name, Json::Obj(mj));
+        t.print();
+        eprintln!(
+            "[pipeline] {}: {:.2}× steps/s, {:.0}% of upload time \
+             overlapped, exposed transfer −{:.0}%",
+            method.name(),
+            speedup,
+            overlap_ratio * 100.0,
+            exposed_reduction * 100.0
+        );
+    }
+    write_bench_json("pipeline", &Json::Obj(j));
+}

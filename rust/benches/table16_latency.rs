@@ -81,6 +81,7 @@ fn main() {
             &[
                 "Method", "Forward", "Backward", "Other", "Total",
                 "S-upl", "P-upl", "Dl", "Dl-KB", "Up-ms", "Dl-ms",
+                "Ov-ms", "Stall-ms",
             ],
         );
         for method in table1_methods() {
@@ -127,6 +128,16 @@ fn main() {
             let grads_us = profile.mean_secs * 1e6 / tokens;
             let bwd_us = (grads_us - fwd_us).max(0.0);
             let other_us = (total_us - grads_us).max(0.0);
+            // pipeline telemetry: `Ov-ms` is transfer time hidden
+            // behind execution (staged binds on the stage worker),
+            // `Stall-ms` is training-thread time spent waiting on the
+            // stage queue — both 0 under the default synchronous loop
+            // (run with LOSIA_PIPELINE=on to populate them)
+            let stall_ms = report
+                .pipeline
+                .as_ref()
+                .map(|p| p.stall_secs * 1e3)
+                .unwrap_or(0.0);
             table.row(&[
                 method.name().to_string(),
                 format!("{fwd_us:.2}"),
@@ -142,6 +153,8 @@ fn main() {
                 ),
                 format!("{:.2}", profile.upload_secs * 1e3),
                 format!("{:.2}", profile.download_secs * 1e3),
+                format!("{:.2}", profile.overlap_secs * 1e3),
+                format!("{stall_ms:.2}"),
             ]);
             eprintln!("[exec] {}", profile.summary_line());
             let mut row = BTreeMap::new();
@@ -175,6 +188,15 @@ fn main() {
             row.insert(
                 "download_ms".into(),
                 Json::Num(profile.download_secs * 1e3),
+            );
+            row.insert(
+                "overlap_ms".into(),
+                Json::Num(profile.overlap_secs * 1e3),
+            );
+            row.insert("stall_ms".into(), Json::Num(stall_ms));
+            row.insert(
+                "pipelined".into(),
+                Json::Bool(report.pipeline.is_some()),
             );
             row.insert(
                 "exec_ms".into(),

@@ -645,6 +645,12 @@ pub struct TrainConfig {
     /// count. Defaults to `dp_workers` when left at 1; also settable
     /// via `LOSIA_DP_SHARDS`.
     pub dp_shards: usize,
+    /// Step pipeline (double-buffered uploads + bounded batch
+    /// prefetch). `None` defers to the `LOSIA_PIPELINE` env var (off
+    /// when unset); `Some(_)` wins over the env. Never affects
+    /// numerics — the pipelined loop is bitwise identical to the
+    /// synchronous one (see `runtime::pipeline`).
+    pub pipeline: Option<bool>,
 }
 
 impl Default for TrainConfig {
@@ -668,6 +674,7 @@ impl Default for TrainConfig {
             rank_factor_override: None,
             dp_workers: 1,
             dp_shards: 1,
+            pipeline: None,
         }
     }
 }

@@ -10,9 +10,19 @@
 //! each step and emitting the deltas as
 //! [`crate::session::observer::ExecEvent`]s — including the upload
 //! split that distinguishes static (weights) from per-step (batch)
-//! host→device traffic. Most callers should reach this through
-//! [`crate::session::Session`], which also owns runtime loading, task
-//! construction, and report assembly.
+//! host→device traffic, and the overlapped-vs-exposed transfer split
+//! the step pipeline introduces. Most callers should reach this
+//! through [`crate::session::Session`], which also owns runtime
+//! loading, task construction, and report assembly.
+//!
+//! Two step loops share every phase but batch acquisition:
+//!
+//! * **synchronous** — pack the batch, bind it, run, apply;
+//! * **pipelined** ([`crate::runtime::pipeline`]) — batches are packed
+//!   and staged into idle device buffers by worker threads while the
+//!   previous step executes; the loop commits the staged set (O(1)
+//!   pointer swaps) and runs. Gradient math is untouched, so the two
+//!   loops are bitwise identical (`tests/pipeline_parity.rs`).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -22,11 +32,15 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::coordinator::rewarm::LrSchedule;
 use crate::coordinator::state::ModelState;
-use crate::data::{Batch, Batcher};
+use crate::data::{Batch, BatchPrefetcher, Batcher};
 use crate::methods::{build_driver, Driver};
 use crate::runtime::dp::{self, DpConfig};
+use crate::runtime::kernels;
+use crate::runtime::pipeline::{PipelineConfig, StepPipeline};
 use crate::runtime::{ExecSnapshot, Runtime};
-use crate::session::observer::{DpEvent, ExecEvent, ObserverSet};
+use crate::session::observer::{
+    DpEvent, ExecEvent, ObserverSet, PipelineEvent,
+};
 
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
@@ -65,6 +79,7 @@ impl ExecTracker {
                     secs: d.total_secs(),
                     upload_secs: d.upload_secs(),
                     download_secs: d.download_secs(),
+                    overlap_secs: d.overlap_secs(),
                     static_uploads: d.static_uploads,
                     step_uploads: d.step_uploads,
                     downloads: d.downloads,
@@ -93,28 +108,29 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Run `tc.steps` optimization steps over the batcher, reporting
-    /// step / relocalize / exec / dp / finalize events into `obs`.
+    /// step / relocalize / exec / dp / pipeline / finalize events into
+    /// `obs`. Takes the batcher by value: the pipelined loop moves it
+    /// into the prefetch worker.
     ///
     /// With `DpConfig::enabled()` the batcher is split once into
     /// `shards` seed-stable sub-streams; each step draws one batch per
     /// shard, runs the driver's gradient phase across the plan
     /// replicas, folds the frames with the fixed-order tree reduce,
     /// and applies the update once. Otherwise the legacy single-batch
-    /// loop runs — which is the same code path with one shard.
+    /// loop runs — which is the same code path with one shard. With
+    /// `PipelineConfig::enabled` either loop additionally overlaps
+    /// batch packing and per-step uploads with the previous step.
     pub fn train(
         &mut self,
         state: &mut ModelState,
-        batcher: &mut Batcher,
+        batcher: Batcher,
         obs: &mut ObserverSet,
     ) -> Result<()> {
         let dp_cfg = DpConfig::resolve(&self.tc);
+        let pipe_cfg = PipelineConfig::resolve(&self.tc);
+        pipe_cfg.validate(self.rt, &dp_cfg)?;
         let tokens = self.rt.cfg.tokens_per_step()
             * if dp_cfg.enabled() { dp_cfg.shards } else { 1 };
-        let mut shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
-            batcher.shard(dp_cfg.shards)?
-        } else {
-            Vec::new()
-        };
         let mut exec = ExecTracker::new(self.rt);
         self.driver.prepare(state)?;
         // initial subnet selections installed at construction time
@@ -124,6 +140,67 @@ impl<'rt> Trainer<'rt> {
         // prepare-time uploads (LoRA/LoSiA-Pro bind their static
         // parameter set here) are attributed to step 0
         exec.emit(self.rt, 0, obs);
+        if pipe_cfg.enabled {
+            self.pipelined_loop(
+                state, batcher, obs, &dp_cfg, &pipe_cfg, tokens,
+                &mut exec,
+            )?;
+        } else {
+            self.synchronous_loop(
+                state, batcher, obs, &dp_cfg, tokens, &mut exec,
+            )?;
+        }
+        // merge external adapters into the backbone (paper protocol:
+        // LoRA modules are merged before evaluation / the next task)
+        self.driver.finalize(state)?;
+        exec.emit(self.rt, self.tc.steps, obs);
+        obs.emit_finalize(self.tc.steps);
+        Ok(())
+    }
+
+    /// One step's gradient + reduce + apply, shared verbatim by both
+    /// loops — the reason the pipeline cannot drift numerically.
+    fn sharded_step(
+        &mut self,
+        state: &mut ModelState,
+        batches: &[Batch],
+        t: usize,
+        lr: f64,
+        shards: usize,
+        obs: &mut ObserverSet,
+    ) -> Result<f64> {
+        let sharded =
+            self.driver.grad_frames_sharded(state, batches, t)?;
+        let workers = sharded.worker_nanos.len().max(1);
+        let worker_nanos = sharded.worker_nanos.clone();
+        let r0 = Instant::now();
+        let (reduced, frame_bytes) = dp::reduce(sharded.shards)?;
+        let reduce_nanos = r0.elapsed().as_nanos() as u64;
+        obs.emit_dp(&DpEvent {
+            step: t,
+            workers,
+            shards,
+            reduce_nanos,
+            frame_bytes,
+            worker_nanos,
+        });
+        self.driver.apply_frames(state, reduced, t, lr)
+    }
+
+    fn synchronous_loop(
+        &mut self,
+        state: &mut ModelState,
+        mut batcher: Batcher,
+        obs: &mut ObserverSet,
+        dp_cfg: &DpConfig,
+        tokens: usize,
+        exec: &mut ExecTracker,
+    ) -> Result<()> {
+        let mut shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
+            batcher.shard(dp_cfg.shards)?
+        } else {
+            Vec::new()
+        };
         for t in 0..self.tc.steps {
             let lr = self.schedule.lr(t);
             let t0 = Instant::now();
@@ -132,47 +209,127 @@ impl<'rt> Trainer<'rt> {
                     .iter_mut()
                     .map(|b| b.next_batch())
                     .collect();
-                let sharded = self
-                    .driver
-                    .grad_frames_sharded(state, &batches, t)?;
-                let workers =
-                    sharded.worker_nanos.len().max(1);
-                let worker_nanos = sharded.worker_nanos.clone();
-                let r0 = Instant::now();
-                let (reduced, frame_bytes) =
-                    dp::reduce(sharded.shards)?;
-                let reduce_nanos = r0.elapsed().as_nanos() as u64;
-                obs.emit_dp(&DpEvent {
-                    step: t,
-                    workers,
-                    shards: dp_cfg.shards,
-                    reduce_nanos,
-                    frame_bytes,
-                    worker_nanos,
-                });
-                self.driver.apply_frames(state, reduced, t, lr)?
+                self.sharded_step(
+                    state,
+                    &batches,
+                    t,
+                    lr,
+                    dp_cfg.shards,
+                    obs,
+                )?
             } else {
                 let batch = batcher.next_batch();
                 self.driver.step(state, &batch, t, lr)?
             };
             let secs = t0.elapsed().as_secs_f64();
-            for ev in self.driver.drain_events() {
-                obs.emit_relocalize(&ev);
-            }
-            exec.emit(self.rt, t, obs);
-            obs.emit_step(t, loss, lr, secs, tokens);
-            if self.tc.log_every > 0 && t % self.tc.log_every == 0 {
-                eprintln!(
-                    "[train:{}] step {t:>5} loss {loss:.4} lr {lr:.2e}",
-                    self.driver.method().name(),
+            self.end_step(state, obs, exec, t, loss, lr, secs, tokens);
+        }
+        Ok(())
+    }
+
+    /// The pipelined loop: per-step batches arrive pre-packed and
+    /// pre-staged from the pipeline workers; the training thread
+    /// commits them (pointer swaps), recycles the displaced buffers,
+    /// and runs the identical [`Self::sharded_step`] / `Driver::step`
+    /// body. The loop itself runs under a reduced kernel budget so the
+    /// pipeline's worker threads come out of the same process-wide
+    /// budget the dp engine divides.
+    #[allow(clippy::too_many_arguments)]
+    fn pipelined_loop(
+        &mut self,
+        state: &mut ModelState,
+        batcher: Batcher,
+        obs: &mut ObserverSet,
+        dp_cfg: &DpConfig,
+        pipe_cfg: &PipelineConfig,
+        tokens: usize,
+        exec: &mut ExecTracker,
+    ) -> Result<()> {
+        // identical shard split to the synchronous loop; one "shard"
+        // (the parent batcher itself) when dp is off, so the batch
+        // byte stream matches the legacy path exactly
+        let shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
+            batcher.shard(dp_cfg.shards)?
+        } else {
+            vec![batcher]
+        };
+        let prefetch = BatchPrefetcher::new(
+            shard_batchers,
+            self.tc.steps,
+            pipe_cfg.queue_depth,
+        )?;
+        let mut sets = Vec::with_capacity(pipe_cfg.queue_depth);
+        for _ in 0..pipe_cfg.queue_depth {
+            sets.push(self.driver.make_stagers()?);
+        }
+        let mut pipe = StepPipeline::new(prefetch, sets)?;
+        let budget = pipe_cfg.main_thread_budget();
+        let prefetch_threads = pipe_cfg.prefetch_threads();
+        kernels::with_thread_budget(budget, || -> Result<()> {
+            for t in 0..self.tc.steps {
+                let lr = self.schedule.lr(t);
+                let (batches, stagers, staged_bytes) = pipe.next()?;
+                let stall_nanos = pipe.last_stall_nanos();
+                let t0 = Instant::now();
+                let mut displaced =
+                    Vec::with_capacity(stagers.len());
+                for (i, s) in stagers.into_iter().enumerate() {
+                    displaced.push(self.driver.commit_stager(i, s)?);
+                }
+                // hand the displaced buffers straight back so the
+                // stage worker fills them while this step executes
+                pipe.recycle(displaced);
+                let loss = if dp_cfg.enabled() {
+                    self.sharded_step(
+                        state,
+                        &batches,
+                        t,
+                        lr,
+                        dp_cfg.shards,
+                        obs,
+                    )?
+                } else {
+                    self.driver.step(state, &batches[0], t, lr)?
+                };
+                let secs = t0.elapsed().as_secs_f64();
+                obs.emit_pipeline(&PipelineEvent {
+                    step: t,
+                    queue_depth: pipe.queue_depth(),
+                    prefetch_threads,
+                    stall_nanos,
+                    staged_bytes,
+                });
+                self.end_step(
+                    state, obs, exec, t, loss, lr, secs, tokens,
                 );
             }
+            Ok(())
+        })
+    }
+
+    /// Post-step reporting shared by both loops.
+    #[allow(clippy::too_many_arguments)]
+    fn end_step(
+        &mut self,
+        _state: &mut ModelState,
+        obs: &mut ObserverSet,
+        exec: &mut ExecTracker,
+        t: usize,
+        loss: f64,
+        lr: f64,
+        secs: f64,
+        tokens: usize,
+    ) {
+        for ev in self.driver.drain_events() {
+            obs.emit_relocalize(&ev);
         }
-        // merge external adapters into the backbone (paper protocol:
-        // LoRA modules are merged before evaluation / the next task)
-        self.driver.finalize(state)?;
-        exec.emit(self.rt, self.tc.steps, obs);
-        obs.emit_finalize(self.tc.steps);
-        Ok(())
+        exec.emit(self.rt, t, obs);
+        obs.emit_step(t, loss, lr, secs, tokens);
+        if self.tc.log_every > 0 && t % self.tc.log_every == 0 {
+            eprintln!(
+                "[train:{}] step {t:>5} loss {loss:.4} lr {lr:.2e}",
+                self.driver.method().name(),
+            );
+        }
     }
 }

@@ -180,6 +180,11 @@ impl Batcher {
             .collect()
     }
 
+    /// Seed this batcher was built with (shard derivation input).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
     /// Next batch (wraps around with a reshuffle at epoch boundaries).
     pub fn next_batch(&mut self) -> Batch {
         let mut tokens = Vec::with_capacity(self.batch * self.seq);
@@ -203,6 +208,116 @@ impl Batcher {
             mask,
             batch: self.batch,
             seq: self.seq,
+        }
+    }
+}
+
+// ------------------------------------------------------------- prefetch
+
+/// Bounded batch prefetch: moves [`Batcher::next_batch`] packing off
+/// the training thread into one worker that pre-packs "groups" (one
+/// [`Batch`] per shard, in shard order) into a depth-bounded queue.
+///
+/// Determinism argument: the worker owns the intact `Batcher` state
+/// machines and draws from them **in the exact order the synchronous
+/// loop would** (group by group, shard 0..S within each group), so the
+/// delivered byte sequence is identical to calling `next_batch` inline
+/// — the queue changes *when* packing happens, never *what* is packed.
+/// Pinned by `prefetched_groups_match_inline_draws_bytewise` below and
+/// `tests/pipeline_parity.rs`.
+pub struct BatchPrefetcher {
+    rx: Option<std::sync::mpsc::Receiver<Vec<Batch>>>,
+    worker: Option<std::thread::JoinHandle<Vec<Batcher>>>,
+    remaining: usize,
+    last_stall_nanos: u64,
+}
+
+impl BatchPrefetcher {
+    /// Spawn the pack worker. `groups` is the total number of step
+    /// groups the run will draw (the worker packs no more than that);
+    /// `depth` bounds how far ahead it may run.
+    pub fn new(
+        batchers: Vec<Batcher>,
+        groups: usize,
+        depth: usize,
+    ) -> Result<Self> {
+        ensure!(
+            !batchers.is_empty(),
+            "prefetch: need at least one shard batcher"
+        );
+        ensure!(depth >= 1, "prefetch: queue depth must be ≥ 1");
+        let (tx, rx) = std::sync::mpsc::sync_channel(depth);
+        let worker = std::thread::Builder::new()
+            .name("losia-prefetch".into())
+            .spawn(move || {
+                let mut batchers = batchers;
+                for _ in 0..groups {
+                    let group: Vec<Batch> = batchers
+                        .iter_mut()
+                        .map(Batcher::next_batch)
+                        .collect();
+                    if tx.send(group).is_err() {
+                        // consumer dropped the queue (early stop)
+                        break;
+                    }
+                }
+                batchers
+            })?;
+        Ok(BatchPrefetcher {
+            rx: Some(rx),
+            worker: Some(worker),
+            remaining: groups,
+            last_stall_nanos: 0,
+        })
+    }
+
+    /// Batches this prefetcher has not yet handed out.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// The next group: one batch per shard, in shard order — exactly
+    /// what the synchronous loop's per-step `next_batch` calls would
+    /// have produced. Blocks (and records the exposed stall) when the
+    /// worker has not packed that far ahead yet.
+    pub fn next_group(&mut self) -> Result<Vec<Batch>> {
+        ensure!(
+            self.remaining > 0,
+            "prefetch: all scheduled groups were already drawn"
+        );
+        let rx = self.rx.as_ref().expect("receiver lives until drop");
+        let t0 = std::time::Instant::now();
+        let group = rx.recv().map_err(|_| {
+            anyhow::anyhow!("prefetch: pack worker exited early")
+        })?;
+        self.last_stall_nanos = t0.elapsed().as_nanos() as u64;
+        self.remaining -= 1;
+        Ok(group)
+    }
+
+    /// Wall time the last [`Self::next_group`] spent blocked on the
+    /// queue — the *exposed* share of batch packing.
+    pub fn last_stall_nanos(&self) -> u64 {
+        self.last_stall_nanos
+    }
+
+    /// Shut the worker down and recover the shard batchers.
+    pub fn into_batchers(mut self) -> Vec<Batcher> {
+        self.rx.take(); // unblocks a worker mid-send
+        match self.worker.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Drop for BatchPrefetcher {
+    fn drop(&mut self) {
+        // receiver first: a worker blocked on a full queue sees the
+        // send fail and exits, so the join below cannot deadlock
+        self.rx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
         }
     }
 }
@@ -400,6 +515,57 @@ mod tests {
         assert!(b.shard(0).is_err());
         assert!(b.shard(4).is_err(), "empty shard must be rejected");
         assert_eq!(b.shard(3).unwrap().len(), 3);
+    }
+
+    fn batch_bytes(b: &Batch) -> (Vec<i32>, Vec<i32>, Vec<u32>) {
+        (
+            b.tokens.clone(),
+            b.targets.clone(),
+            b.mask.iter().map(|m| m.to_bits()).collect(),
+        )
+    }
+
+    #[test]
+    fn prefetched_groups_match_inline_draws_bytewise() {
+        let mk = || {
+            Batcher::new(tagged(8), 2, 8, 5)
+                .unwrap()
+                .shard(2)
+                .unwrap()
+        };
+        // inline reference: per step, shard 0 then shard 1
+        let mut inline = mk();
+        let mut want = Vec::new();
+        for _ in 0..6 {
+            for s in inline.iter_mut() {
+                want.push(batch_bytes(&s.next_batch()));
+            }
+        }
+        let mut pf = BatchPrefetcher::new(mk(), 6, 2).unwrap();
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            for b in pf.next_group().unwrap() {
+                got.push(batch_bytes(&b));
+            }
+        }
+        assert_eq!(want, got, "prefetch reordered or altered batches");
+        assert!(pf.next_group().is_err(), "over-draw must fail loudly");
+    }
+
+    #[test]
+    fn dropping_a_prefetcher_mid_run_does_not_hang() {
+        let b = Batcher::new(tagged(8), 2, 8, 1).unwrap();
+        let mut pf = BatchPrefetcher::new(vec![b], 100, 1).unwrap();
+        pf.next_group().unwrap();
+        drop(pf); // worker is blocked on the full queue; must exit
+    }
+
+    #[test]
+    fn into_batchers_recovers_the_shards() {
+        let b = Batcher::new(tagged(6), 2, 8, 1).unwrap();
+        let pf = BatchPrefetcher::new(vec![b], 3, 2).unwrap();
+        let shards = pf.into_batchers();
+        assert_eq!(shards.len(), 1);
     }
 
     #[test]

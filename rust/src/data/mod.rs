@@ -20,7 +20,7 @@ pub mod commonsense;
 pub mod domain;
 pub mod vocab;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, BatchPrefetcher, Batcher};
 
 use crate::util::rng::Rng;
 

@@ -4,7 +4,7 @@
 //! ```text
 //! losia train --config tiny --method losia-pro --task modmath \
 //!             --steps 200 --lr 1e-3 --time-slot 20 \
-//!             [--workers N] [--dp-shards N] \
+//!             [--workers N] [--dp-shards N] [--pipeline on|off] \
 //!             [--save-state model.bin] [--report out.json] [--json]
 //! losia eval  --config tiny --task modmath [--state model.bin] [--no-gen]
 //! losia serve --config tiny --tenants 4 --requests 16 \
@@ -54,6 +54,15 @@ fn session_from_args(args: &Args) -> Result<losia::SessionBuilder<'static>> {
         b = b.dp_shards(
             s.parse().context("--dp-shards expects an integer")?,
         );
+    }
+    if let Some(p) = args.get("pipeline") {
+        b = b.pipeline(match p.to_ascii_lowercase().as_str() {
+            "on" | "1" | "true" | "yes" => true,
+            "off" | "0" | "false" | "no" => false,
+            other => anyhow::bail!(
+                "--pipeline expects on|off, got {other:?}"
+            ),
+        });
     }
     if let Some(path) = args.get("state") {
         b = b.initial_state(path);
@@ -274,6 +283,29 @@ fn cmd_info(args: &Args) -> Result<()> {
         dp.shards,
         dp.worker_thread_budget()
     );
+    // resolved step-pipeline configuration (TrainConfig defaults +
+    // LOSIA_PIPELINE / LOSIA_PIPELINE_DEPTH): pipelining overlaps
+    // batch packing and per-step uploads with the previous step and
+    // never changes numerics, so this block is purely a performance
+    // readout
+    let pipe = losia::runtime::PipelineConfig::resolve(
+        &losia::config::TrainConfig::default(),
+    );
+    if pipe.enabled {
+        println!(
+            "  pipeline: on (queue depth {}, {} prefetch threads, \
+             {} kernel threads left for the step loop)",
+            pipe.queue_depth,
+            pipe.prefetch_threads(),
+            pipe.main_thread_budget()
+        );
+    } else {
+        println!(
+            "  pipeline: off (enable with --pipeline on or \
+             LOSIA_PIPELINE=on; queue depth {})",
+            pipe.queue_depth
+        );
+    }
     println!("    per-step reduce set (bytes crossing shards):");
     let full: u64 = cfg
         .params
@@ -333,7 +365,8 @@ fn main() -> Result<()> {
                  [--time-slot N] [--remat] [--state PATH] \
                  [--save-state PATH] [--report PATH] [--json] \
                  [--backend ref|pjrt|auto] [--workers N] \
-                 [--dp-shards N] [--tenants N] [--requests N] \
+                 [--dp-shards N] [--pipeline on|off] \
+                 [--tenants N] [--requests N] \
                  [--prompt-len N] [--max-new N]"
             );
             Ok(())

@@ -12,9 +12,9 @@ use crate::config::{Method, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
-use crate::methods::{grads_artifact, Driver};
+use crate::methods::{batch_stagers, grads_artifact, Driver};
 use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
-use crate::runtime::{ExecPlan, Runtime};
+use crate::runtime::{ExecPlan, Runtime, Stager};
 
 pub struct FftDriver {
     /// One replicated plan per data-parallel worker (one when dp is
@@ -22,6 +22,9 @@ pub struct FftDriver {
     plans: Vec<ExecPlan>,
     adam: BTreeMap<String, AdamState>,
     total: usize,
+    /// pipelined mode: the trainer commits staged batch uploads, so
+    /// the shard closure skips the inline `bind_batch`
+    pipelined: bool,
 }
 
 impl FftDriver {
@@ -44,7 +47,12 @@ impl FftDriver {
             adam.insert(name.clone(), AdamState::new(shape, hp));
             total += shape.iter().product::<usize>();
         }
-        Ok(FftDriver { plans, adam, total })
+        Ok(FftDriver {
+            plans,
+            adam,
+            total,
+            pipelined: false,
+        })
     }
 }
 
@@ -63,10 +71,13 @@ impl Driver for FftDriver {
         batches: &[Batch],
         _t: usize,
     ) -> Result<ShardedGrads> {
+        let pipelined = self.pipelined;
         let (shards, worker_nanos) =
             dp::run_sharded(&mut self.plans, batches, |_, plan, batch| {
                 plan.bind_params(state)?;
-                plan.bind_batch(batch)?;
+                if !pipelined {
+                    plan.bind_batch(batch)?;
+                }
                 // full fine-tuning consumes every gradient, so every
                 // handle downloads — Table 16's "Other" column shows
                 // this traffic
@@ -104,6 +115,21 @@ impl Driver for FftDriver {
             state.get_mut(&name).add_assign(&upd);
         }
         Ok(reduced.loss)
+    }
+
+    fn make_stagers(&mut self) -> Result<Vec<Stager>> {
+        let stagers =
+            batch_stagers(&self.plans, &self.prefetchable())?;
+        self.pipelined = true;
+        Ok(stagers)
+    }
+
+    fn commit_stager(
+        &mut self,
+        shard: usize,
+        stager: Stager,
+    ) -> Result<Stager> {
+        self.plans[shard].commit_stager(stager)
     }
 
     fn reduce_set(&self) -> Vec<(String, u64)> {

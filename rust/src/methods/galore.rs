@@ -16,9 +16,9 @@ use crate::config::{Method, ModelCfg, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
-use crate::methods::{grads_artifact, Driver};
+use crate::methods::{batch_stagers, grads_artifact, Driver};
 use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
-use crate::runtime::{ExecPlan, Runtime};
+use crate::runtime::{ExecPlan, Runtime, Stager};
 use crate::tensor::svd::left_singular_topk;
 use crate::tensor::Tensor;
 
@@ -40,6 +40,9 @@ pub struct GaloreDriver {
     /// dense Adam over the output layer
     lm_adam: AdamState,
     hp: AdamParams,
+    /// pipelined mode: the trainer commits staged batch uploads, so
+    /// the shard closure skips the inline `bind_batch`
+    pipelined: bool,
 }
 
 impl GaloreDriver {
@@ -68,6 +71,7 @@ impl GaloreDriver {
             adam: BTreeMap::new(),
             lm_adam,
             hp,
+            pipelined: false,
         })
     }
 
@@ -113,6 +117,7 @@ impl Driver for GaloreDriver {
         batches: &[Batch],
         _t: usize,
     ) -> Result<ShardedGrads> {
+        let pipelined = self.pipelined;
         let (plans, cfg) = (&mut self.plans, &self.cfg);
         let (shards, worker_nanos) =
             dp::run_sharded(plans, batches, |_, plan, batch| {
@@ -120,7 +125,9 @@ impl Driver for GaloreDriver {
                     plan.bind_f32(kind, state.get(kind))?;
                 }
                 plan.bind_f32("lm_head", state.get("lm_head"))?;
-                plan.bind_batch(batch)?;
+                if !pipelined {
+                    plan.bind_batch(batch)?;
+                }
                 // GaLore projects every trainable gradient host-side,
                 // so the linears + lm_head download — that IS the
                 // method's traffic (and reduce) cost. Gradients of the
@@ -148,6 +155,21 @@ impl Driver for GaloreDriver {
                 Ok(GradFrames { loss, frames, probe: None })
             })?;
         Ok(ShardedGrads { shards, worker_nanos })
+    }
+
+    fn make_stagers(&mut self) -> Result<Vec<Stager>> {
+        let stagers =
+            batch_stagers(&self.plans, &self.prefetchable())?;
+        self.pipelined = true;
+        Ok(stagers)
+    }
+
+    fn commit_stager(
+        &mut self,
+        shard: usize,
+        stager: Stager,
+    ) -> Result<Stager> {
+        self.plans[shard].commit_stager(stager)
     }
 
     fn apply_frames(

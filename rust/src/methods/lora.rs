@@ -16,9 +16,9 @@ use crate::config::{Method, ModelCfg, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
 use crate::data::Batch;
-use crate::methods::{grads_artifact, Driver};
+use crate::methods::{batch_stagers, grads_artifact, Driver};
 use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
-use crate::runtime::{ExecPlan, Runtime};
+use crate::runtime::{ExecPlan, Runtime, Stager};
 use crate::tensor::svd::svd;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -36,6 +36,9 @@ pub struct LoraDriver {
     /// adapter tensors by artifact input name (la_*, lb_*, mag_*)
     adapters: BTreeMap<String, Tensor>,
     adam: BTreeMap<String, AdamState>,
+    /// pipelined mode: the trainer commits staged batch uploads, so
+    /// the shard closure skips the inline `bind_batch`
+    pipelined: bool,
 }
 
 impl LoraDriver {
@@ -93,6 +96,7 @@ impl LoraDriver {
             plans,
             adapters,
             adam,
+            pipelined: false,
         })
     }
 }
@@ -254,13 +258,16 @@ impl Driver for LoraDriver {
         batches: &[Batch],
         _t: usize,
     ) -> Result<ShardedGrads> {
+        let pipelined = self.pipelined;
         let (plans, adapters) = (&mut self.plans, &self.adapters);
         let (shards, worker_nanos) =
             dp::run_sharded(plans, batches, |_, plan, batch| {
                 for (name, t) in adapters {
                     plan.bind_f32(name, t)?;
                 }
-                plan.bind_batch(batch)?;
+                if !pipelined {
+                    plan.bind_batch(batch)?;
+                }
                 // every output is consumed (scalar loss +
                 // adapter-sized grads), so each handle downloads
                 // exactly once
@@ -298,6 +305,21 @@ impl Driver for LoraDriver {
             self.adapters.get_mut(&name).unwrap().add_assign(&upd);
         }
         Ok(reduced.loss)
+    }
+
+    fn make_stagers(&mut self) -> Result<Vec<Stager>> {
+        let stagers =
+            batch_stagers(&self.plans, &self.prefetchable())?;
+        self.pipelined = true;
+        Ok(stagers)
+    }
+
+    fn commit_stager(
+        &mut self,
+        shard: usize,
+        stager: Stager,
+    ) -> Result<Stager> {
+        self.plans[shard].commit_stager(stager)
     }
 
     fn reduce_set(&self) -> Vec<(String, u64)> {

@@ -28,11 +28,15 @@ use crate::coordinator::schedule::AsyncSchedule;
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState, SubnetState};
 use crate::data::Batch;
-use crate::methods::{grads_artifact, Driver, SelectionEvent};
+use crate::methods::{
+    batch_stagers, grads_artifact, Driver, SelectionEvent,
+};
 use crate::runtime::dp::{
     self, Frame, GradFrames, ProbePayload, ShardedGrads,
 };
-use crate::runtime::{ExecPlan, OutputHandle, QTensor, Runtime};
+use crate::runtime::{
+    ExecPlan, OutputHandle, QTensor, Runtime, Stager,
+};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -74,6 +78,10 @@ pub struct LosiaDriver {
     /// depend on nothing outside the block) instead of re-encoding
     /// the full tensor. Empty when quantization is off.
     qcache: BTreeMap<String, QTensor>,
+    /// Pipelined mode (set by `make_stagers`): the trainer commits
+    /// staged batch uploads before the gradient phase, so the shard
+    /// closures skip the inline `bind_batch`.
+    pipelined: bool,
 }
 
 impl LosiaDriver {
@@ -228,6 +236,7 @@ impl LosiaDriver {
             warmup_steps: 0, // set by the trainer via set_warmup
             events,
             qcache: BTreeMap::new(),
+            pipelined: false,
         })
     }
 
@@ -611,6 +620,7 @@ impl LosiaDriver {
         delta_out: &Tensor,
         probe: usize,
         batch: &Batch,
+        pipelined: bool,
     ) -> Result<(f64, Vec<Tensor>, Vec<OutputHandle>, OutputHandle)>
     {
         for kind in &cfg.linear_kinds {
@@ -618,7 +628,9 @@ impl LosiaDriver {
         }
         plan.bind_f32("dws_out", delta_out)?;
         plan.bind_scalar_i32("probe", probe as i32)?;
-        plan.bind_batch(batch)?;
+        if !pipelined {
+            plan.bind_batch(batch)?;
+        }
         let mut out = plan.run()?;
         let lm_grad = out.pop().expect("probe_lm_head output");
         let kinds = cfg.linear_kinds.len();
@@ -638,9 +650,12 @@ impl LosiaDriver {
         plan: &mut ExecPlan,
         state: &ModelState,
         batch: &Batch,
+        pipelined: bool,
     ) -> Result<(f64, BTreeMap<String, Tensor>)> {
         plan.bind_params(state)?;
-        plan.bind_batch(batch)?;
+        if !pipelined {
+            plan.bind_batch(batch)?;
+        }
         let mut out = plan.run()?.into_iter();
         let loss = out
             .next()
@@ -700,6 +715,21 @@ impl Driver for LosiaDriver {
         std::mem::take(&mut self.events)
     }
 
+    fn make_stagers(&mut self) -> Result<Vec<Stager>> {
+        let stagers =
+            batch_stagers(&self.plans, &self.prefetchable())?;
+        self.pipelined = true;
+        Ok(stagers)
+    }
+
+    fn commit_stager(
+        &mut self,
+        shard: usize,
+        stager: Stager,
+    ) -> Result<Stager> {
+        self.plans[shard].commit_stager(stager)
+    }
+
     fn prepare(&mut self, state: &mut ModelState) -> Result<()> {
         if self.pro {
             // one-time upload of the frozen backbone + indices
@@ -756,6 +786,7 @@ impl Driver for LosiaDriver {
             // subnet-delta-sized.
             let g = self.sched.profiling_group(t);
             let probe_layer = g.min(self.cfg.n_layers - 1);
+            let pipelined = self.pipelined;
             let (plans, cfg, deltas, delta_out) = (
                 &mut self.plans,
                 &self.cfg,
@@ -766,7 +797,7 @@ impl Driver for LosiaDriver {
                 dp::run_sharded(plans, batches, |_, plan, batch| {
                     let (loss, outs, pg, lmg) = Self::run_pro_on(
                         plan, cfg, deltas, delta_out, probe_layer,
-                        batch,
+                        batch, pipelined,
                     )?;
                     let mut frames = Vec::with_capacity(outs.len());
                     for (i, grad) in outs.into_iter().enumerate() {
@@ -788,11 +819,12 @@ impl Driver for LosiaDriver {
                 })?;
             Ok(ShardedGrads { shards, worker_nanos })
         } else {
+            let pipelined = self.pipelined;
             let plans = &mut self.plans;
             let (shards, worker_nanos) =
                 dp::run_sharded(plans, batches, |_, plan, batch| {
                     let (loss, grads) =
-                        Self::run_full_on(plan, state, batch)?;
+                        Self::run_full_on(plan, state, batch, pipelined)?;
                     let frames = grads
                         .into_iter()
                         .map(|(name, grad)| Frame { name, grad })

@@ -16,7 +16,7 @@ use crate::config::{Method, TrainConfig};
 use crate::coordinator::state::ModelState;
 use crate::data::Batch;
 use crate::runtime::dp::{self, GradFrames, ShardedGrads};
-use crate::runtime::Runtime;
+use crate::runtime::{ExecPlan, Runtime, Stager};
 
 /// A subnet selection installed by a driver — the event behind the
 /// Figure 3/7 selection analyses. Drivers queue these and the trainer
@@ -132,6 +132,62 @@ pub trait Driver {
     fn drain_events(&mut self) -> Vec<SelectionEvent> {
         Vec::new()
     }
+
+    /// Per-step inputs that are **prefetchable**: computable for step
+    /// N+1 before step N's update phase ran. For every current method
+    /// that is exactly the batch grid — the LoSiA-Pro `dws_*` frames,
+    /// adapter tensors, and the probe index are all produced by
+    /// `apply_frames(N)`, so they are step-dependent by construction
+    /// and must stay on the critical path.
+    fn prefetchable(&self) -> Vec<String> {
+        vec!["tokens".into(), "targets".into(), "mask".into()]
+    }
+
+    /// Build one [`Stager`] per plan replica over the prefetchable
+    /// inputs and switch the driver into pipelined mode: its gradient
+    /// phase stops binding the batch inline (the trainer commits
+    /// staged batches before calling it). Default: the method does
+    /// not support staged uploads.
+    fn make_stagers(&mut self) -> Result<Vec<Stager>> {
+        anyhow::bail!(
+            "method {:?} does not support staged (pipelined) uploads",
+            self.method()
+        )
+    }
+
+    /// Commit a filled stager into plan replica `shard`, returning
+    /// the displaced staging set for the next step.
+    fn commit_stager(
+        &mut self,
+        _shard: usize,
+        _stager: Stager,
+    ) -> Result<Stager> {
+        anyhow::bail!(
+            "method {:?} does not support staged (pipelined) uploads",
+            self.method()
+        )
+    }
+}
+
+/// Build one stager per plan replica over whichever of `prefetchable`
+/// the artifact actually takes (`fwd_logits`-style artifacts lack
+/// `targets`/`mask`) — the shared body behind every driver's
+/// [`Driver::make_stagers`].
+pub(crate) fn batch_stagers(
+    plans: &[ExecPlan],
+    prefetchable: &[String],
+) -> Result<Vec<Stager>> {
+    plans
+        .iter()
+        .map(|p| {
+            let names: Vec<&str> = prefetchable
+                .iter()
+                .map(String::as_str)
+                .filter(|n| p.has_input(n))
+                .collect();
+            p.make_stager(&names)
+        })
+        .collect()
 }
 
 /// Build the driver for `tc.method` against a runtime.

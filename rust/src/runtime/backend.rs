@@ -197,6 +197,7 @@ pub struct ExecStats {
     nanos: AtomicU64,
     upload_nanos: AtomicU64,
     download_nanos: AtomicU64,
+    overlap_nanos: AtomicU64,
     static_uploads: AtomicU64,
     step_uploads: AtomicU64,
     downloads: AtomicU64,
@@ -212,6 +213,7 @@ impl ExecStats {
             download_nanos: self
                 .download_nanos
                 .load(Ordering::Relaxed),
+            overlap_nanos: self.overlap_nanos.load(Ordering::Relaxed),
             static_uploads: self.static_uploads.load(Ordering::Relaxed),
             step_uploads: self.step_uploads.load(Ordering::Relaxed),
             downloads: self.downloads.load(Ordering::Relaxed),
@@ -226,6 +228,7 @@ impl ExecStats {
         self.nanos.store(0, Ordering::Relaxed);
         self.upload_nanos.store(0, Ordering::Relaxed);
         self.download_nanos.store(0, Ordering::Relaxed);
+        self.overlap_nanos.store(0, Ordering::Relaxed);
         self.static_uploads.store(0, Ordering::Relaxed);
         self.step_uploads.store(0, Ordering::Relaxed);
         self.downloads.store(0, Ordering::Relaxed);
@@ -254,6 +257,16 @@ impl ExecStats {
             }
         };
     }
+
+    /// A per-step upload performed off the critical path (staged into
+    /// an idle buffer set while execute runs). Counts as a step upload
+    /// — the sync and pipelined paths move identical copies — but its
+    /// wall time lands in `overlap_nanos`, not `upload_nanos`, so
+    /// `upload_secs()` stays "exposed transfer time".
+    fn record_staged_upload(&self, nanos: u64) {
+        self.overlap_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.step_uploads.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 /// A point-in-time copy of [`ExecStats`], also used for deltas.
@@ -263,9 +276,14 @@ pub struct ExecSnapshot {
     /// wall time inside `execute()` (the compute phase)
     pub nanos: u64,
     /// wall time inside `upload()` (host→device binds, both kinds)
+    /// that was *exposed* — paid on the training thread's critical
+    /// path. Staged (overlapped) binds land in `overlap_nanos`.
     pub upload_nanos: u64,
     /// wall time materialising outputs host-side
     pub download_nanos: u64,
+    /// wall time of per-step uploads hidden behind execute by the
+    /// step pipeline's double-buffered staging (0 on the sync path)
+    pub overlap_nanos: u64,
     pub static_uploads: u64,
     pub step_uploads: u64,
     /// outputs materialised host-side (lazy `OutputHandle` downloads)
@@ -287,6 +305,9 @@ impl ExecSnapshot {
             download_nanos: self
                 .download_nanos
                 .saturating_sub(prev.download_nanos),
+            overlap_nanos: self
+                .overlap_nanos
+                .saturating_sub(prev.overlap_nanos),
             static_uploads: self
                 .static_uploads
                 .saturating_sub(prev.static_uploads),
@@ -318,6 +339,11 @@ impl ExecSnapshot {
     /// Device→host download-phase wall time.
     pub fn download_secs(&self) -> f64 {
         self.download_nanos as f64 / 1e9
+    }
+
+    /// Wall time of per-step binds the pipeline hid behind execute.
+    pub fn overlap_secs(&self) -> f64 {
+        self.overlap_nanos as f64 / 1e9
     }
 }
 
@@ -369,6 +395,42 @@ pub trait DeviceBuffers: Send {
     /// backend's decode KV cache). Default no-op: most artifacts are
     /// pure functions of their bindings.
     fn clear_state(&mut self) {}
+
+    /// Allocate a detached staging set sized like these buffers, or
+    /// `None` when the backend has no staged-upload support — the
+    /// step pipeline is gated off for such backends, exactly like
+    /// `dp::plan_count` gates worker replication.
+    fn alloc_staging(&self) -> Option<Box<dyn StagedBuffers>> {
+        None
+    }
+
+    /// Swap the listed `slots` from a filled staging set into the live
+    /// buffers (O(1) per slot — pointer swaps, no copies) and hand the
+    /// displaced storage back as the next staging set. Only called on
+    /// staging sets this backend allocated via [`Self::alloc_staging`].
+    fn commit_staged(
+        &mut self,
+        _staged: Box<dyn StagedBuffers>,
+        _slots: &[usize],
+    ) -> Result<Box<dyn StagedBuffers>> {
+        anyhow::bail!(
+            "backend does not support staged (double-buffered) uploads"
+        )
+    }
+}
+
+/// The idle half of a double-buffered plan: a detached, `Send` set of
+/// per-step input slots that a pipeline worker fills while the live
+/// buffers execute. [`ExecPlan::commit_stager`] swaps the filled slots
+/// in and returns the displaced storage, so two sets ping-pong with
+/// zero steady-state allocation.
+pub trait StagedBuffers: Send {
+    /// Copy one host value into staging slot `slot` (manifest index).
+    fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()>;
+
+    /// Concrete-type escape hatch so the owning backend can downcast
+    /// its own staging set back at commit time.
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any>;
 }
 
 /// One compiled (PJRT) or interpreted (reference) artifact.
@@ -917,6 +979,189 @@ impl ExecPlan {
             .map(OutputHandle::into_host)
             .collect()
     }
+
+    /// Build a [`Stager`] over the named **per-step** inputs: the idle
+    /// half of a double buffer that a pipeline worker fills for step
+    /// N+1 while this plan executes step N. Errors if any name is
+    /// unknown or static (statics persist — staging them would be a
+    /// correctness bug, not an optimisation), and if the backend has
+    /// no staging support (the pipeline is ref-only, like dp workers).
+    pub fn make_stager(&self, names: &[&str]) -> Result<Stager> {
+        let spec = self.exe.spec();
+        let mut slots = Vec::with_capacity(names.len());
+        for name in names {
+            let i = *self.index.get(*name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {:?}: no input named {:?} to stage ({})",
+                    spec.name,
+                    name,
+                    spec.signature()
+                )
+            })?;
+            anyhow::ensure!(
+                self.kinds[i] == BindingKind::PerStep,
+                "artifact {:?}: input {:?} is static — only per-step \
+                 bindings are prefetchable ({})",
+                spec.name,
+                name,
+                spec.signature()
+            );
+            slots.push(i);
+        }
+        let inner = self.bufs.alloc_staging().ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {:?}: backend {:?} does not support staged \
+                 uploads — run with the pipeline off",
+                spec.name,
+                self.exe.backend()
+            )
+        })?;
+        Ok(Stager {
+            exe: Arc::clone(&self.exe),
+            inner,
+            slots,
+            staged: vec![false; names.len()],
+            bytes: 0,
+        })
+    }
+
+    /// Swap a filled [`Stager`]'s slots into this plan (O(1) pointer
+    /// swaps — the copies already happened off-thread) and return the
+    /// displaced storage as the next staging set. Only slots the
+    /// stager actually staged are swapped and marked bound; the rest
+    /// keep whatever the plan held.
+    pub fn commit_stager(&mut self, mut s: Stager) -> Result<Stager> {
+        anyhow::ensure!(
+            Arc::ptr_eq(&s.exe, &self.exe),
+            "stager for artifact {:?} committed into a plan for {:?}",
+            s.exe.spec().name,
+            self.exe.spec().name
+        );
+        let filled: Vec<usize> = s
+            .slots
+            .iter()
+            .zip(&s.staged)
+            .filter(|(_, staged)| **staged)
+            .map(|(&i, _)| i)
+            .collect();
+        s.inner = self.bufs.commit_staged(s.inner, &filled)?;
+        for &i in &filled {
+            self.bound[i] = true;
+        }
+        for f in &mut s.staged {
+            *f = false;
+        }
+        s.bytes = 0;
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------- stager
+
+/// The detached half of a double-buffered [`ExecPlan`]: per-step input
+/// slots a pipeline worker fills off the training thread while the
+/// live buffers execute. Binds are validated against the manifest
+/// exactly like [`ExecPlan::bind`], but their wall time is recorded as
+/// *overlapped* ([`ExecSnapshot::overlap_secs`]) rather than exposed.
+/// `Send` (no `Sync` needed — one worker owns it at a time).
+pub struct Stager {
+    exe: Arc<Executable>,
+    inner: Box<dyn StagedBuffers>,
+    /// manifest slot indices this stager may bind (all per-step)
+    slots: Vec<usize>,
+    /// parallel to `slots`: staged since the last commit?
+    staged: Vec<bool>,
+    /// payload bytes staged since the last commit
+    bytes: u64,
+}
+
+impl Stager {
+    /// Manifest names this stager covers, in slot order.
+    pub fn names(&self) -> Vec<&str> {
+        self.slots
+            .iter()
+            .map(|&i| self.exe.spec().inputs[i].name.as_str())
+            .collect()
+    }
+
+    pub fn covers(&self, name: &str) -> bool {
+        self.slots
+            .iter()
+            .any(|&i| self.exe.spec().inputs[i].name == name)
+    }
+
+    /// Payload bytes staged since the last commit.
+    pub fn staged_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Stage one named input into the idle buffer set.
+    pub fn bind(&mut self, name: &str, value: HostRef<'_>) -> Result<()> {
+        let spec = self.exe.spec();
+        let pos = self
+            .slots
+            .iter()
+            .position(|&i| spec.inputs[i].name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {:?}: input {:?} is not covered by this \
+                     stager (prefetchable: {:?})",
+                    spec.name,
+                    name,
+                    self.names()
+                )
+            })?;
+        let i = self.slots[pos];
+        value.check(&spec.inputs[i]).with_context(|| {
+            format!(
+                "artifact {:?} ({})",
+                spec.name,
+                spec.signature()
+            )
+        })?;
+        let t0 = Instant::now();
+        self.inner.upload(i, value)?;
+        self.exe
+            .stats
+            .record_staged_upload(t0.elapsed().as_nanos() as u64);
+        self.staged[pos] = true;
+        self.bytes += spec.inputs[i].numel() as u64 * 4;
+        Ok(())
+    }
+
+    pub fn bind_f32(&mut self, name: &str, t: &Tensor) -> Result<()> {
+        self.bind(name, HostRef::tensor(t))
+    }
+
+    pub fn bind_i32(
+        &mut self,
+        name: &str,
+        shape: &[usize],
+        data: &[i32],
+    ) -> Result<()> {
+        self.bind(name, HostRef::I32 { shape, data })
+    }
+
+    /// Stage the batch inputs this stager covers (`tokens`, plus
+    /// `targets`/`mask` when the artifact takes them) — the staging
+    /// mirror of [`ExecPlan::bind_batch`].
+    pub fn bind_batch(&mut self, batch: &Batch) -> Result<()> {
+        let shape = [batch.batch, batch.seq];
+        self.bind_i32("tokens", &shape, &batch.tokens)?;
+        if self.covers("targets") {
+            self.bind_i32("targets", &shape, &batch.targets)?;
+        }
+        if self.covers("mask") {
+            self.bind(
+                "mask",
+                HostRef::F32 {
+                    shape: &shape,
+                    data: &batch.mask,
+                },
+            )?;
+        }
+        Ok(())
+    }
 }
 
 // -------------------------------------------------------------- runtime
@@ -1022,10 +1267,6 @@ impl Runtime {
         }
     }
 
-    pub fn backend_name(&self) -> &'static str {
-        self.backend.name()
-    }
-
     /// Prepare (or fetch from cache) an artifact by manifest name.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         let mut cache = self.cache.lock().unwrap();
@@ -1045,7 +1286,8 @@ impl Runtime {
     }
 
     /// Active backend's name (`"ref"` / `"pjrt"`) — the dp engine
-    /// gates parallel plan replication on this.
+    /// gates parallel plan replication on this, and the step pipeline
+    /// gates staged uploads the same way.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
@@ -1217,6 +1459,126 @@ mod tests {
         let d = exe.stats().delta_since(&s1);
         assert_eq!(d.static_uploads, 0);
         assert_eq!(d.step_uploads, 14);
+    }
+
+    #[test]
+    fn staged_batch_commit_matches_direct_bind_bitwise() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut direct =
+            ExecPlan::new(Arc::clone(&exe), &param_names).unwrap();
+        let mut staged =
+            ExecPlan::new(Arc::clone(&exe), &param_names).unwrap();
+        let mut rng = Rng::new(7);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        let batch = tiny_batch(&rt);
+        direct.bind_params(&state).unwrap();
+        staged.bind_params(&state).unwrap();
+
+        direct.bind_batch(&batch).unwrap();
+        let want = direct.run_host().unwrap();
+
+        let mut stager = staged
+            .make_stager(&["tokens", "targets", "mask"])
+            .unwrap();
+        let s0 = exe.stats();
+        stager.bind_batch(&batch).unwrap();
+        let d = exe.stats().delta_since(&s0);
+        assert_eq!(d.step_uploads, 3, "staged binds are step uploads");
+        assert_eq!(
+            d.upload_nanos, 0,
+            "staged binds must not count as exposed upload time"
+        );
+        assert!(stager.staged_bytes() > 0);
+
+        let mut stager = staged.commit_stager(stager).unwrap();
+        let got = staged.run_host().unwrap();
+        for (w, g) in want.iter().zip(&got) {
+            let wb: Vec<u32> =
+                w.data.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> =
+                g.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "staged run diverged bitwise");
+        }
+
+        // ping-pong: the displaced set comes back empty and is
+        // immediately reusable for the next step's staging
+        assert_eq!(stager.staged_bytes(), 0);
+        stager.bind_batch(&batch).unwrap();
+        staged.commit_stager(stager).unwrap();
+        direct.bind_batch(&batch).unwrap();
+        let want2 = direct.run_host().unwrap();
+        let got2 = staged.run_host().unwrap();
+        let wb: Vec<u32> =
+            want2[0].data.iter().map(|v| v.to_bits()).collect();
+        let gb: Vec<u32> =
+            got2[0].data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, gb, "second staged step diverged bitwise");
+    }
+
+    #[test]
+    fn stager_rejects_static_unknown_and_uncovered_inputs() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let plan =
+            ExecPlan::new(Arc::clone(&exe), &["embed"]).unwrap();
+        let err = plan.make_stager(&["embed"]).unwrap_err();
+        assert!(format!("{err:#}").contains("static"));
+        let err = plan.make_stager(&["nope"]).unwrap_err();
+        assert!(format!("{err:#}").contains("nope"));
+
+        let mut stager = plan.make_stager(&["tokens"]).unwrap();
+        let batch = tiny_batch(&rt);
+        let shape = [batch.batch, batch.seq];
+        let err = stager
+            .bind_i32("targets", &shape, &batch.targets)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not covered"));
+    }
+
+    #[test]
+    fn commit_swaps_only_staged_slots_and_checks_the_executable() {
+        let rt = ref_runtime();
+        let exe = rt.load("fwd_loss").unwrap();
+        let param_names: Vec<&str> = rt
+            .cfg
+            .params
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect();
+        let mut plan =
+            ExecPlan::new(Arc::clone(&exe), &param_names).unwrap();
+        let mut rng = Rng::new(8);
+        let state = ModelState::init(&rt.cfg, &mut rng);
+        plan.bind_params(&state).unwrap();
+        let batch = tiny_batch(&rt);
+        let mut stager = plan
+            .make_stager(&["tokens", "targets", "mask"])
+            .unwrap();
+        let shape = [batch.batch, batch.seq];
+        stager.bind_i32("tokens", &shape, &batch.tokens).unwrap();
+        plan.commit_stager(stager).unwrap();
+        assert!(plan.is_bound("tokens"));
+        assert!(!plan.is_bound("targets"), "unstaged slot got bound");
+        let err = plan.run().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("targets"), "{msg}");
+        assert!(msg.contains("mask"), "{msg}");
+
+        // a stager belongs to its executable — cross-plan commits of
+        // a different artifact's stager are rejected loudly
+        let other = rt.load("grads_full").unwrap();
+        let other_plan = ExecPlan::new(other, &[]).unwrap();
+        let foreign =
+            other_plan.make_stager(&["tokens"]).unwrap();
+        let err = plan.commit_stager(foreign).unwrap_err();
+        assert!(format!("{err:#}").contains("grads_full"));
     }
 
     #[test]

@@ -41,6 +41,22 @@
 //! ride along as undownloaded [`OutputHandle`]s and are **not**
 //! reduced: the profiler consumes shard 0's probe only (worker-count
 //! invariant, since shard 0's sub-batch is fixed by S).
+//!
+//! ## Composition with the step pipeline
+//!
+//! [`crate::runtime::pipeline`] stages step N+1's batch uploads while
+//! step N executes. With dp on, the pipeline requires `shards ==
+//! workers` (checked by `PipelineConfig::validate`): each plan then
+//! runs exactly one shard per step, so one staged buffer set per plan
+//! covers the whole step. With W < S a plan runs several shards
+//! sequentially, re-binding its per-step slots between runs, and only
+//! the first could be pre-staged (block-prefix staging is a possible
+//! follow-up). The pipeline's stage threads draw from the same
+//! process-wide kernel budget this module divides: the trainer wraps
+//! the pipelined loop in `with_thread_budget(kernel_threads() −
+//! prefetch_threads)`, and because each worker's
+//! `kernel_threads() / W` split is computed on the training thread,
+//! the dp workers see the reduced budget automatically.
 
 use std::time::Instant;
 

@@ -2067,6 +2067,29 @@ mod tests {
         set_kernel_threads(0);
     }
 
+    #[test]
+    fn thread_budget_restores_after_panic() {
+        // the cap is restored by an RAII guard, so a panicking worker
+        // (a kernel assert, a poisoned driver) cannot leak a clamped
+        // budget into subsequent steps on this thread — the pipeline
+        // and dp engines both rely on this
+        let before = THREAD_BUDGET.with(|b| b.get());
+        let unwound = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                with_thread_budget(1, || {
+                    assert_eq!(kernel_threads(), 1);
+                    panic!("worker died mid-kernel");
+                })
+            }),
+        );
+        assert!(unwound.is_err(), "the closure must have panicked");
+        assert_eq!(
+            THREAD_BUDGET.with(|b| b.get()),
+            before,
+            "a panic inside the scope must not leak the clamped budget"
+        );
+    }
+
     /// The historical interpreter loops, kept verbatim (including the
     /// `av == 0.0` skip) as the numeric reference. The blocked kernels
     /// drop that skip — for finite operands the only possible

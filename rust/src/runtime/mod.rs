@@ -22,6 +22,7 @@ pub mod backend;
 pub mod dp;
 pub mod host;
 pub mod kernels;
+pub mod pipeline;
 pub mod pjrt;
 pub mod quant;
 pub mod reference;
@@ -29,9 +30,10 @@ pub mod reference;
 pub use backend::{
     backend_choice, Backend, BackendChoice, BindingKind, DeviceBuffers,
     DeviceValue, ExecPlan, ExecSnapshot, ExecStats, Executable,
-    Executor, HostRef, OutputHandle, Runtime,
+    Executor, HostRef, OutputHandle, Runtime, StagedBuffers, Stager,
 };
 pub use dp::{DpConfig, Frame, GradFrames, ProbePayload, ShardedGrads};
+pub use pipeline::{PipelineConfig, StepPipeline};
 pub use host::HostValue;
 pub use pjrt::PjrtBackend;
 pub use quant::{QTensor, QuantMode};

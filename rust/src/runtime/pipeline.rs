@@ -1,0 +1,319 @@
+//! The software-pipelined step loop: double-buffered per-step uploads
+//! plus bounded batch prefetch, bitwise identical to the synchronous
+//! loop.
+//!
+//! ## What overlaps, and why only that
+//!
+//! A step is `upload → execute → download → apply`. Which uploads can
+//! legally run early is a data-dependency fact, not a tuning choice:
+//!
+//! * The **batch grid** (`tokens`/`targets`/`mask`) for step N+1
+//!   depends on nothing produced by step N — prefetchable.
+//! * The LoSiA-Pro `dws_*` frames, adapter tensors, the probe index,
+//!   and every download are produced or consumed by `apply_frames(N)`
+//!   — step-dependent, so they stay on the critical path and their
+//!   wall time stays *exposed* in `ExecStats`.
+//!
+//! Drivers declare the split via `Driver::prefetchable`; today that is
+//! exactly the batch grid for every method.
+//!
+//! ## Buffer ownership and handoff
+//!
+//! Two worker threads feed the training thread:
+//!
+//! 1. the **pack worker** ([`BatchPrefetcher`]) owns the intact
+//!    `Batcher` state machines and packs step groups into a
+//!    depth-bounded queue;
+//! 2. the **stage worker** ([`StepPipeline`]) receives an idle staging
+//!    set (one [`Stager`] per plan replica) from the free queue,
+//!    copies the next group's batches into it off-thread, and sends
+//!    the filled set to the training thread.
+//!
+//! The training thread commits each filled stager
+//! ([`crate::runtime::ExecPlan::commit_stager`] — O(1) pointer swaps),
+//! recycles the displaced storage back to the free queue, and runs the
+//! step. A set is owned by exactly one thread at every instant; the
+//! channels are the handoff points, so there is no shared mutable
+//! buffer anywhere.
+//!
+//! ## Determinism argument
+//!
+//! The pipeline moves *copies*, never *arithmetic*: batch packing
+//! draws from the same `Batcher` state machines in the same order
+//! (pinned by `data::batcher` tests), staged uploads place the same
+//! bytes in the same slots the inline `bind_batch` would, and every
+//! kernel still runs on the training thread (or its dp workers) in
+//! the same sequence. Thread budgets change wall-clock only — the
+//! kernel layer is bitwise thread-count-invariant. Hence pipelined
+//! and synchronous runs are bitwise identical, pinned end-to-end by
+//! `tests/pipeline_parity.rs`.
+//!
+//! ## Interaction with dp and donation
+//!
+//! The pipeline composes with `dp::run_sharded` under one constraint:
+//! `shards == workers`. A plan that executes several shards per step
+//! re-binds its per-step slots *between* runs inside the gradient
+//! phase, so only one shard per plan can be staged ahead; staging
+//! block prefixes for W < S is a possible follow-up. Donation is
+//! unaffected: donated slots are static, stagers cover per-step slots
+//! only, and the swap preserves the live set's donated storage.
+//! Like dp worker replication (and Q8 binds), staged uploads are
+//! gated to the reference backend.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{Batch, BatchPrefetcher};
+use crate::runtime::backend::{Runtime, Stager};
+use crate::runtime::dp::DpConfig;
+use crate::runtime::kernels;
+
+/// Resolved pipeline configuration for one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PipelineConfig {
+    pub enabled: bool,
+    /// Step groups the pack/stage workers may run ahead of the
+    /// training thread (≥ 1).
+    pub queue_depth: usize,
+}
+
+impl PipelineConfig {
+    /// Resolve from the train config with env fallbacks: an explicit
+    /// `TrainConfig::pipeline` (the `--pipeline` / builder knob) wins,
+    /// else `LOSIA_PIPELINE` (`on`/`1`/`true` to enable), else off.
+    /// Queue depth comes from `LOSIA_PIPELINE_DEPTH` (default 2 — one
+    /// set staging while one is live is already full overlap; deeper
+    /// queues only buy slack against jitter).
+    pub fn resolve(tc: &TrainConfig) -> PipelineConfig {
+        let enabled = match tc.pipeline {
+            Some(on) => on,
+            None => match std::env::var("LOSIA_PIPELINE")
+                .unwrap_or_default()
+                .to_ascii_lowercase()
+                .as_str()
+            {
+                "1" | "on" | "true" | "yes" => true,
+                "" | "0" | "off" | "false" | "no" => false,
+                other => {
+                    crate::util::warn::warn(format!(
+                        "unknown LOSIA_PIPELINE={other:?} (expected \
+                         on|off); pipeline stays off"
+                    ));
+                    false
+                }
+            },
+        };
+        let queue_depth = std::env::var("LOSIA_PIPELINE_DEPTH")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(2);
+        PipelineConfig {
+            enabled,
+            queue_depth,
+        }
+    }
+
+    /// Check this config against the runtime and dp layout — the
+    /// pipeline's analogue of [`crate::runtime::dp::plan_count`]'s
+    /// backend gate. No-op when disabled.
+    pub fn validate(&self, rt: &Runtime, dp: &DpConfig) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        ensure!(
+            rt.backend_name() == "ref",
+            "pipeline: staged uploads require the reference backend \
+             (LOSIA_BACKEND=ref); backend `{}` has no double-buffer \
+             support. Run with --pipeline off.",
+            rt.backend_name()
+        );
+        ensure!(
+            dp.shards == dp.workers,
+            "pipeline: shards ({}) must equal workers ({}) — a plan \
+             executing several shards per step re-binds its per-step \
+             slots between runs, so only one shard per plan can be \
+             staged ahead. Use --workers {} or --pipeline off.",
+            dp.shards,
+            dp.workers,
+            dp.shards
+        );
+        Ok(())
+    }
+
+    /// Worker threads the pipeline adds: the pack worker and the
+    /// stage worker. 0 when disabled.
+    pub fn prefetch_threads(&self) -> usize {
+        if self.enabled {
+            2
+        } else {
+            0
+        }
+    }
+
+    /// Kernel threads left to the training loop once the pipeline
+    /// workers took their share of the process-wide budget (floored
+    /// at 1) — the same budget-is-spent-once rule dp workers follow.
+    pub fn main_thread_budget(&self) -> usize {
+        kernels::kernel_threads()
+            .saturating_sub(self.prefetch_threads())
+            .max(1)
+    }
+}
+
+/// One staged step group crossing from the stage worker: the packed
+/// batches (shard order), the filled stagers (plan order, 1:1 with
+/// batches), and the staged payload bytes.
+type FullMsg = Result<(Vec<Batch>, Vec<Stager>, u64)>;
+
+/// The training thread's handle on the two pipeline workers. See the
+/// module docs for the ownership/handoff contract.
+pub struct StepPipeline {
+    full_rx: Option<mpsc::Receiver<FullMsg>>,
+    free_tx: Option<mpsc::Sender<Vec<Stager>>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    last_stall_nanos: u64,
+    queue_depth: usize,
+}
+
+impl StepPipeline {
+    /// Start the stage worker over a running [`BatchPrefetcher`] and
+    /// `queue_depth` idle staging sets (each one [`Stager`] per plan
+    /// replica, from `Driver::make_stagers`).
+    pub fn new(
+        prefetch: BatchPrefetcher,
+        sets: Vec<Vec<Stager>>,
+    ) -> Result<StepPipeline> {
+        ensure!(!sets.is_empty(), "pipeline: need ≥ 1 staging set");
+        let shards = sets[0].len();
+        ensure!(shards >= 1, "pipeline: empty staging set");
+        for s in &sets {
+            ensure!(
+                s.len() == shards,
+                "pipeline: ragged staging sets ({} vs {shards})",
+                s.len()
+            );
+        }
+        let depth = sets.len();
+        let (free_tx, free_rx) = mpsc::channel::<Vec<Stager>>();
+        let (full_tx, full_rx) = mpsc::sync_channel::<FullMsg>(depth);
+        for set in sets {
+            free_tx.send(set).expect("free queue open at startup");
+        }
+        let worker = std::thread::Builder::new()
+            .name("losia-stage".into())
+            .spawn(move || {
+                let mut prefetch = prefetch;
+                // staging is memcpy, not compute, but the worker still
+                // pins a 1-thread kernel budget so nothing reached
+                // from here could ever oversubscribe the process
+                kernels::with_thread_budget(1, || {
+                    stage_loop(&mut prefetch, &free_rx, &full_tx)
+                });
+            })?;
+        Ok(StepPipeline {
+            full_rx: Some(full_rx),
+            free_tx: Some(free_tx),
+            worker: Some(worker),
+            last_stall_nanos: 0,
+            queue_depth: depth,
+        })
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth
+    }
+
+    /// The next step's staged group. Blocks when the workers fell
+    /// behind; that blocked time is the step's exposed stall
+    /// ([`Self::last_stall_nanos`]).
+    pub fn next(&mut self) -> Result<(Vec<Batch>, Vec<Stager>, u64)> {
+        let rx = self
+            .full_rx
+            .as_ref()
+            .expect("full queue lives until drop");
+        let t0 = Instant::now();
+        let msg = rx.recv().map_err(|_| {
+            anyhow::anyhow!(
+                "pipeline: stage worker exited without a result"
+            )
+        })?;
+        self.last_stall_nanos = t0.elapsed().as_nanos() as u64;
+        msg
+    }
+
+    /// Wall time [`Self::next`] last spent blocked on the queue.
+    pub fn last_stall_nanos(&self) -> u64 {
+        self.last_stall_nanos
+    }
+
+    /// Hand a displaced staging set back for re-staging (the
+    /// ping-pong return edge).
+    pub fn recycle(&mut self, set: Vec<Stager>) {
+        if let Some(tx) = &self.free_tx {
+            // a send error means the worker already exited; the next
+            // `next()` call surfaces its error
+            let _ = tx.send(set);
+        }
+    }
+}
+
+impl Drop for StepPipeline {
+    fn drop(&mut self) {
+        // close both queues first: a worker blocked on the free queue
+        // sees recv fail, one blocked on a full queue sees send fail —
+        // either way it exits and the join cannot deadlock
+        self.free_tx.take();
+        self.full_rx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn stage_loop(
+    prefetch: &mut BatchPrefetcher,
+    free_rx: &mpsc::Receiver<Vec<Stager>>,
+    full_tx: &mpsc::SyncSender<FullMsg>,
+) {
+    while prefetch.remaining() > 0 {
+        // take the group first: the pack worker keeps packing ahead
+        // even while every staging set is in flight
+        let group = match prefetch.next_group() {
+            Ok(g) => g,
+            Err(e) => {
+                let _ = full_tx.send(Err(e));
+                return;
+            }
+        };
+        let Ok(mut set) = free_rx.recv() else {
+            return; // training thread dropped the pipeline
+        };
+        if set.len() != group.len() {
+            let _ = full_tx.send(Err(anyhow::anyhow!(
+                "pipeline: {} stagers for {} shard batches",
+                set.len(),
+                group.len()
+            )));
+            return;
+        }
+        let mut bind_err = None;
+        for (stager, batch) in set.iter_mut().zip(&group) {
+            if let Err(e) = stager.bind_batch(batch) {
+                bind_err = Some(e);
+                break;
+            }
+        }
+        if let Some(e) = bind_err {
+            let _ = full_tx.send(Err(e));
+            return;
+        }
+        let bytes = set.iter().map(Stager::staged_bytes).sum();
+        if full_tx.send(Ok((group, set, bytes))).is_err() {
+            return;
+        }
+    }
+}

@@ -30,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ArtifactSpec, ModelCfg};
 use crate::runtime::backend::{
     Backend, DeviceBuffers, DeviceValue, Executor, HostRef,
+    StagedBuffers,
 };
 use crate::runtime::host::HostValue;
 use crate::runtime::kernels::{self, add_into, Pool};
@@ -256,6 +257,59 @@ impl DeviceBuffers for RefBuffers {
             .as_ref()
             .map(|v| v.byte_len())
             .unwrap_or(0)
+    }
+
+    fn alloc_staging(&self) -> Option<Box<dyn StagedBuffers>> {
+        Some(Box::new(RefStaged {
+            slots: (0..self.spec.inputs.len()).map(|_| None).collect(),
+        }))
+    }
+
+    fn commit_staged(
+        &mut self,
+        staged: Box<dyn StagedBuffers>,
+        slots: &[usize],
+    ) -> Result<Box<dyn StagedBuffers>> {
+        let mut st = staged
+            .into_any()
+            .downcast::<RefStaged>()
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "reference backend: commit of a foreign staging \
+                     set (not allocated by RefBuffers)"
+                )
+            })?;
+        for &i in slots {
+            std::mem::swap(&mut self.slots[i], &mut st.slots[i]);
+        }
+        Ok(st)
+    }
+}
+
+/// The idle half of a double-buffered [`RefBuffers`]: the same
+/// `Arc`'d-snapshot slot layout, filled off-thread by the pipeline's
+/// stage worker. `commit_staged` swaps filled slots with the live set
+/// (pointer swaps — the copies already happened on the worker), so the
+/// displaced storage ping-pongs back for the next step and
+/// [`try_reuse_slot`] keeps steady-state staging allocation-free.
+struct RefStaged {
+    slots: Vec<Option<Arc<HostValue>>>,
+}
+
+impl StagedBuffers for RefStaged {
+    fn upload(&mut self, slot: usize, value: HostRef<'_>) -> Result<()> {
+        let reused = match &mut self.slots[slot] {
+            Some(arc) => try_reuse_slot(arc, value),
+            None => false,
+        };
+        if !reused {
+            self.slots[slot] = Some(Arc::new(value.to_host_value()));
+        }
+        Ok(())
+    }
+
+    fn into_any(self: Box<Self>) -> Box<dyn std::any::Any> {
+        self
     }
 }
 

@@ -35,10 +35,13 @@ pub mod registry;
 pub mod report;
 
 pub use observer::{
-    DpEvent, ExecEvent, Observer, ObserverSet, SelectionEvent,
+    DpEvent, ExecEvent, Observer, ObserverSet, PipelineEvent,
+    SelectionEvent,
 };
 pub use registry::TaskRegistry;
-pub use report::{DpReport, ExecProfile, RunReport, SequenceReport};
+pub use report::{
+    DpReport, ExecProfile, PipelineReport, RunReport, SequenceReport,
+};
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -163,6 +166,7 @@ pub struct SessionBuilder<'a> {
     rank_factor_override: Option<f64>,
     workers: Option<usize>,
     dp_shards: Option<usize>,
+    pipeline: Option<bool>,
     task: TaskChoice<'a>,
     registry: TaskRegistry,
     model_seed: Option<u64>,
@@ -194,6 +198,7 @@ impl<'a> SessionBuilder<'a> {
             rank_factor_override: None,
             workers: None,
             dp_shards: None,
+            pipeline: None,
             task: TaskChoice::None,
             registry: TaskRegistry::with_builtins(),
             model_seed: None,
@@ -343,6 +348,15 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Pipelined step loop: double-buffered per-step uploads plus
+    /// bounded batch prefetch. Never affects numerics — the pipelined
+    /// run is bitwise identical to the synchronous one (pinned by
+    /// `tests/pipeline_parity.rs`). Overrides `LOSIA_PIPELINE`.
+    pub fn pipeline(mut self, on: bool) -> Self {
+        self.pipeline = Some(on);
+        self
+    }
+
     /// Training examples to generate per stage (default 2000).
     pub fn train_n(mut self, n: usize) -> Self {
         self.train_n = n;
@@ -425,6 +439,9 @@ impl<'a> SessionBuilder<'a> {
                 "session misuse: dp_shards must be ≥ 1 (got {s})"
             );
             tc.dp_shards = s;
+        }
+        if let Some(p) = self.pipeline {
+            tc.pipeline = Some(p);
         }
         ensure!(
             tc.steps >= 1,
@@ -746,7 +763,7 @@ impl<'a> Session<'a> {
         let rt = self.rt.get();
         let mut tc = self.tc.clone();
         tc.steps = steps;
-        let mut batcher = Batcher::new(
+        let batcher = Batcher::new(
             train_set,
             rt.cfg.batch,
             rt.cfg.seq_len,
@@ -778,7 +795,7 @@ impl<'a> Session<'a> {
             Some(ppl_accuracy(rt, &self.state, eval)?)
         };
         let t0 = Instant::now();
-        trainer.train(&mut self.state, &mut batcher, &mut self.obs)?;
+        trainer.train(&mut self.state, batcher, &mut self.obs)?;
         let wall = t0.elapsed().as_secs_f64();
         let post = if eval.is_empty() {
             None
@@ -817,6 +834,17 @@ impl<'a> Session<'a> {
                 frame_bytes: self.obs.dp.frame_bytes,
                 reduce_secs: self.obs.dp.reduce_secs,
                 worker_busy_secs: self.obs.dp.worker_busy_secs,
+            }),
+            pipeline: (self.obs.pipeline.steps > 0).then(|| {
+                PipelineReport {
+                    queue_depth: self.obs.pipeline.queue_depth,
+                    prefetch_threads: self
+                        .obs
+                        .pipeline
+                        .prefetch_threads,
+                    stall_secs: self.obs.pipeline.stall_secs,
+                    staged_bytes: self.obs.pipeline.staged_bytes,
+                }
             }),
         })
     }

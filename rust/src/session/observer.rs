@@ -64,10 +64,15 @@ pub struct ExecEvent {
     pub calls: u64,
     /// wall-clock seconds spent inside the executor's execute phase
     pub secs: f64,
-    /// wall-clock seconds spent binding inputs (host→device)
+    /// wall-clock seconds spent binding inputs (host→device) **on the
+    /// training thread** — the exposed share of upload time
     pub upload_secs: f64,
     /// wall-clock seconds spent materialising outputs (device→host)
     pub download_secs: f64,
+    /// wall-clock seconds of staged uploads performed off-thread by
+    /// the pipeline — overlapped with execution, so *not* part of the
+    /// step's critical path (0 whenever the pipeline is off)
+    pub overlap_secs: f64,
     /// re-uploads of static bindings (0 on a healthy hot path)
     pub static_uploads: u64,
     /// per-step uploads (batch tensors, subnet deltas, …)
@@ -99,6 +104,26 @@ pub struct DpEvent {
     pub worker_nanos: Vec<u64>,
 }
 
+/// One pipelined step: how far ahead the prefetch/staging workers ran
+/// and how much of their work the training thread still had to wait
+/// for. Emitted only when the step pipeline is active (mirroring how
+/// [`DpEvent`] is emitted only under `DpConfig::enabled()`), so
+/// synchronous runs carry no pipeline stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineEvent {
+    /// step the staged group fed
+    pub step: usize,
+    /// staging sets in rotation (the queue bound)
+    pub queue_depth: usize,
+    /// worker threads the pipeline runs (pack + stage)
+    pub prefetch_threads: usize,
+    /// wall nanos the training thread spent blocked waiting for the
+    /// staged group — the *exposed* share of prefetch + staging
+    pub stall_nanos: u64,
+    /// bytes the staged group uploaded off-thread
+    pub staged_bytes: u64,
+}
+
 /// Fired between two stages of `Session::train_sequence`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TaskBoundaryEvent {
@@ -124,6 +149,7 @@ pub trait Observer {
     fn on_relocalize(&mut self, _ev: &SelectionEvent) {}
     fn on_exec(&mut self, _ev: &ExecEvent) {}
     fn on_dp(&mut self, _ev: &DpEvent) {}
+    fn on_pipeline(&mut self, _ev: &PipelineEvent) {}
     fn on_task_boundary(&mut self, _ev: &TaskBoundaryEvent) {}
     fn on_finalize(&mut self, _ev: &FinalizeEvent) {}
 }
@@ -325,6 +351,7 @@ impl Observer for ExecProfileObserver {
         p.total_secs += ev.secs;
         p.upload_secs += ev.upload_secs;
         p.download_secs += ev.download_secs;
+        p.overlap_secs += ev.overlap_secs;
         p.static_uploads += ev.static_uploads;
         p.step_uploads += ev.step_uploads;
         p.downloads += ev.downloads;
@@ -369,6 +396,36 @@ impl Observer for DpProfileObserver {
     }
 }
 
+/// Accumulates step-pipeline stats for the current stage and feeds
+/// `RunReport::pipeline`: the queue layout, total exposed stall, and
+/// the off-thread upload volume (which `tests/pipeline_parity.rs` pins
+/// against the synchronous run's per-step upload counts).
+#[derive(Debug, Default, Clone)]
+pub struct PipelineProfileObserver {
+    /// pipelined steps observed (0 ⇒ the pipeline never ran)
+    pub steps: usize,
+    pub queue_depth: usize,
+    pub prefetch_threads: usize,
+    /// total seconds the training thread spent blocked on the queue
+    pub stall_secs: f64,
+    /// total bytes uploaded off-thread
+    pub staged_bytes: u64,
+}
+
+impl Observer for PipelineProfileObserver {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {
+        *self = Self::default();
+    }
+
+    fn on_pipeline(&mut self, ev: &PipelineEvent) {
+        self.steps += 1;
+        self.queue_depth = ev.queue_depth;
+        self.prefetch_threads = ev.prefetch_threads;
+        self.stall_secs += ev.stall_nanos as f64 * 1e-9;
+        self.staged_bytes += ev.staged_bytes;
+    }
+}
+
 // ------------------------------------------------------------ dispatch
 
 /// The observer bundle a trainer reports into: the four stock
@@ -383,6 +440,7 @@ pub struct ObserverSet {
     pub selection: SelectionObserver,
     pub exec: ExecProfileObserver,
     pub dp: DpProfileObserver,
+    pub pipeline: PipelineProfileObserver,
     pub extra: Vec<Box<dyn Observer>>,
 }
 
@@ -408,6 +466,7 @@ impl ObserverSet {
         self.selection.on_run_start(ev);
         self.exec.on_run_start(ev);
         self.dp.on_run_start(ev);
+        self.pipeline.on_run_start(ev);
         for o in &mut self.extra {
             o.on_run_start(ev);
         }
@@ -420,6 +479,7 @@ impl ObserverSet {
         self.selection.on_exec(ev);
         self.exec.on_exec(ev);
         self.dp.on_exec(ev);
+        self.pipeline.on_exec(ev);
         for o in &mut self.extra {
             o.on_exec(ev);
         }
@@ -432,8 +492,22 @@ impl ObserverSet {
         self.selection.on_dp(ev);
         self.exec.on_dp(ev);
         self.dp.on_dp(ev);
+        self.pipeline.on_dp(ev);
         for o in &mut self.extra {
             o.on_dp(ev);
+        }
+    }
+
+    pub fn emit_pipeline(&mut self, ev: &PipelineEvent) {
+        self.loss.on_pipeline(ev);
+        self.latency.on_pipeline(ev);
+        self.memory.on_pipeline(ev);
+        self.selection.on_pipeline(ev);
+        self.exec.on_pipeline(ev);
+        self.dp.on_pipeline(ev);
+        self.pipeline.on_pipeline(ev);
+        for o in &mut self.extra {
+            o.on_pipeline(ev);
         }
     }
 
@@ -459,6 +533,7 @@ impl ObserverSet {
         self.selection.on_step(&ev);
         self.exec.on_step(&ev);
         self.dp.on_step(&ev);
+        self.pipeline.on_step(&ev);
         for o in &mut self.extra {
             o.on_step(&ev);
         }
@@ -471,6 +546,7 @@ impl ObserverSet {
         self.selection.on_relocalize(ev);
         self.exec.on_relocalize(ev);
         self.dp.on_relocalize(ev);
+        self.pipeline.on_relocalize(ev);
         for o in &mut self.extra {
             o.on_relocalize(ev);
         }
@@ -483,6 +559,7 @@ impl ObserverSet {
         self.selection.on_task_boundary(ev);
         self.exec.on_task_boundary(ev);
         self.dp.on_task_boundary(ev);
+        self.pipeline.on_task_boundary(ev);
         for o in &mut self.extra {
             o.on_task_boundary(ev);
         }
@@ -499,6 +576,7 @@ impl ObserverSet {
         self.selection.on_finalize(&ev);
         self.exec.on_finalize(&ev);
         self.dp.on_finalize(&ev);
+        self.pipeline.on_finalize(&ev);
         for o in &mut self.extra {
             o.on_finalize(&ev);
         }

@@ -26,10 +26,14 @@ pub struct ExecProfile {
     /// execute-phase wall time (transfers are the two fields below)
     pub total_secs: f64,
     pub mean_secs: f64,
-    /// host→device bind-phase wall time
+    /// host→device bind-phase wall time on the training thread (the
+    /// *exposed* share of upload time)
     pub upload_secs: f64,
     /// device→host download-phase wall time
     pub download_secs: f64,
+    /// staged-upload wall time performed off-thread by the step
+    /// pipeline — overlapped with execution, 0 for synchronous runs
+    pub overlap_secs: f64,
     /// re-uploads of static bindings (frozen params/indices); 0
     /// between LoSiA relocalizations by design
     pub static_uploads: u64,
@@ -53,6 +57,7 @@ impl ExecProfile {
             "download_secs".into(),
             Json::Num(self.download_secs),
         );
+        m.insert("overlap_secs".into(), Json::Num(self.overlap_secs));
         m.insert(
             "static_uploads".into(),
             Json::Num(self.static_uploads as f64),
@@ -80,6 +85,9 @@ impl ExecProfile {
             // PR 4 download-split precedent below
             upload_secs: get_num_or_zero(j, "upload_secs")?,
             download_secs: get_num_or_zero(j, "download_secs")?,
+            // reports written before the step pipeline (PR 9) lack
+            // the overlap key — synchronous runs have zero overlap
+            overlap_secs: get_num_or_zero(j, "overlap_secs")?,
             static_uploads: get_u64(j, "static_uploads")?,
             step_uploads: get_u64(j, "step_uploads")?,
             // reports written before the download split lack the keys
@@ -92,14 +100,15 @@ impl ExecProfile {
     pub fn summary_line(&self) -> String {
         format!(
             "{}: {} calls, {:.3} ms/call ({:.3}s exec, {:.3}s upl, \
-             {:.3}s dl), uploads static {} / per-step {}, downloads \
-             {} ({:.1} KB)",
+             {:.3}s dl, {:.3}s ovl), uploads static {} / per-step {}, \
+             downloads {} ({:.1} KB)",
             self.artifact,
             self.calls,
             self.mean_secs * 1e3,
             self.total_secs,
             self.upload_secs,
             self.download_secs,
+            self.overlap_secs,
             self.static_uploads,
             self.step_uploads,
             self.downloads,
@@ -155,6 +164,52 @@ impl DpReport {
     }
 }
 
+/// Step-pipeline stats for one stage. Present only when the pipelined
+/// loop ran (`PipelineConfig::enabled`); fed by the stock
+/// [`crate::session::observer::PipelineProfileObserver`]. Mirrors the
+/// [`DpReport`] JSON contract: absent/null for synchronous runs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PipelineReport {
+    /// staging sets in rotation (the prefetch queue bound)
+    pub queue_depth: usize,
+    /// worker threads the pipeline ran (pack + stage)
+    pub prefetch_threads: usize,
+    /// total wall seconds the training thread spent blocked waiting
+    /// for a staged group — the *exposed* share of prefetch + staging
+    pub stall_secs: f64,
+    /// total bytes uploaded off-thread across the stage
+    pub staged_bytes: u64,
+}
+
+impl PipelineReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "queue_depth".into(),
+            Json::Num(self.queue_depth as f64),
+        );
+        m.insert(
+            "prefetch_threads".into(),
+            Json::Num(self.prefetch_threads as f64),
+        );
+        m.insert("stall_secs".into(), Json::Num(self.stall_secs));
+        m.insert(
+            "staged_bytes".into(),
+            Json::Num(self.staged_bytes as f64),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(PipelineReport {
+            queue_depth: get_usize(j, "queue_depth")?,
+            prefetch_threads: get_usize(j, "prefetch_threads")?,
+            stall_secs: get_num(j, "stall_secs")?,
+            staged_bytes: get_u64(j, "staged_bytes")?,
+        })
+    }
+}
+
 /// Summary of one training (or evaluation-only) stage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
@@ -187,6 +242,9 @@ pub struct RunReport {
     /// data-parallel stats (`None` when the sharded loop never ran —
     /// including every report written before dp existed)
     pub dp: Option<DpReport>,
+    /// step-pipeline stats (`None` when the pipelined loop never ran —
+    /// including every report written before the pipeline existed)
+    pub pipeline: Option<PipelineReport>,
 }
 
 impl Default for RunReport {
@@ -212,6 +270,7 @@ impl Default for RunReport {
             selection_drift: None,
             exec: Vec::new(),
             dp: None,
+            pipeline: None,
         }
     }
 }
@@ -356,6 +415,13 @@ impl RunReport {
                 None => Json::Null,
             },
         );
+        m.insert(
+            "pipeline".into(),
+            match &self.pipeline {
+                Some(p) => p.to_json(),
+                None => Json::Null,
+            },
+        );
         Json::Obj(m)
     }
 
@@ -407,6 +473,11 @@ impl RunReport {
                 // older reports predate data-parallel training
                 None | Some(Json::Null) => None,
                 Some(d) => Some(DpReport::from_json(d)?),
+            },
+            pipeline: match j.get("pipeline") {
+                // older reports predate the step pipeline
+                None | Some(Json::Null) => None,
+                Some(p) => Some(PipelineReport::from_json(p)?),
             },
         })
     }
@@ -591,12 +662,14 @@ mod tests {
                 mean_secs: 0.25,
                 upload_secs: 0.125,
                 download_secs: 0.0625,
+                overlap_secs: 0.03125,
                 static_uploads: 27,
                 step_uploads: 36,
                 downloads: 21,
                 download_bytes: 5376,
             }],
             dp: None,
+            pipeline: None,
         }
     }
 
@@ -658,6 +731,43 @@ mod tests {
         let again =
             RunReport::from_json_str(&back.to_json_string()).unwrap();
         assert_eq!(back, again);
+    }
+
+    #[test]
+    fn pipeline_block_round_trips_and_tolerates_old_reports() {
+        // None serializes as null and survives the round trip — so a
+        // mid-run `--pipeline off` report and an `on` report diff
+        // cleanly instead of one failing to parse
+        let r = sample();
+        let s = r.to_json_string();
+        assert!(s.contains("\"pipeline\":null"), "{s}");
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(back.pipeline, None);
+        // a populated block round-trips field-for-field
+        let mut r = sample();
+        r.pipeline = Some(PipelineReport {
+            queue_depth: 2,
+            prefetch_threads: 2,
+            stall_secs: 0.25,
+            staged_bytes: 98304,
+        });
+        let back =
+            RunReport::from_json_str(&r.to_json_string()).unwrap();
+        assert_eq!(back, r);
+        // reports written before the pipeline lack the key entirely,
+        // and their exec profiles lack overlap_secs — both must read
+        // as the synchronous defaults
+        let mut j = sample().to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("pipeline");
+        }
+        let s = j
+            .to_string()
+            .replace("\"overlap_secs\":0.03125,", "");
+        assert!(!s.contains("overlap_secs"), "{s}");
+        let old = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(old.pipeline, None);
+        assert_eq!(old.exec[0].overlap_secs, 0.0);
     }
 
     #[test]

@@ -1,60 +1,80 @@
 //! Shared warning sink: library code reports non-fatal conditions
 //! through [`warn`] instead of raw `eprintln!`, so embedding layers
-//! (the serve scheduler, future observers) can capture them instead of
-//! losing them to stderr.
+//! (the serve scheduler, the step pipeline's stage worker, future
+//! observers) can capture them instead of losing them to stderr.
 //!
 //! Default behaviour is unchanged — with no capture scope active a
 //! message goes straight to stderr. [`capture`] installs a process-
 //! global collector for the guard's lifetime; scopes nest like a stack
 //! (the innermost active scope receives the messages) and restore the
 //! previous sink on drop.
+//!
+//! Delivery is channel-based so the sink works across threads: each
+//! scope registers an `mpsc` sender in a process-global registry, and
+//! [`warn`] clones the innermost sender and sends outside the registry
+//! lock. A warning raised on a worker thread (dp gradient worker,
+//! pipeline stage thread) therefore lands in the scope that was active
+//! when it fired, not on that worker's stderr — the
+//! `capture_receives_warnings_from_worker_threads` test pins this. If
+//! the capturing scope dies between the clone and the send, the
+//! message falls back to stderr rather than being dropped.
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
 
-type Collector = Arc<Mutex<Vec<String>>>;
-
-static SINKS: Mutex<Vec<Collector>> = Mutex::new(Vec::new());
+static SINKS: Mutex<Vec<(u64, Sender<String>)>> = Mutex::new(Vec::new());
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
 
 fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Report a non-fatal warning. Lands in the innermost active
-/// [`capture`] scope's buffer, else on stderr.
+/// [`capture`] scope's buffer — regardless of which thread raises it —
+/// else on stderr.
 pub fn warn(msg: impl Into<String>) {
     let msg = msg.into();
-    match lock(&SINKS).last() {
-        Some(c) => lock(c).push(msg),
+    // clone the sender out so the send itself runs outside the
+    // registry lock (a blocked receiver can't stall other warners)
+    let tx = lock(&SINKS).last().map(|(_, tx)| tx.clone());
+    match tx {
+        Some(tx) => {
+            if let Err(e) = tx.send(msg) {
+                eprintln!("{}", e.0);
+            }
+        }
         None => eprintln!("{msg}"),
     }
 }
 
 /// RAII capture scope returned by [`capture`]: warnings raised while
-/// the guard lives are buffered instead of printed.
+/// the guard lives — from any thread — are buffered instead of
+/// printed.
 pub struct WarnCapture {
-    collector: Collector,
+    id: u64,
+    rx: Receiver<String>,
 }
 
 /// Start capturing warnings until the returned guard is dropped.
 pub fn capture() -> WarnCapture {
-    let collector: Collector = Arc::new(Mutex::new(Vec::new()));
-    lock(&SINKS).push(Arc::clone(&collector));
-    WarnCapture { collector }
+    let (tx, rx) = channel();
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    lock(&SINKS).push((id, tx));
+    WarnCapture { id, rx }
 }
 
 impl WarnCapture {
     /// Drain the messages captured so far (resets the buffer).
     pub fn drain(&self) -> Vec<String> {
-        std::mem::take(&mut *lock(&self.collector))
+        self.rx.try_iter().collect()
     }
 }
 
 impl Drop for WarnCapture {
     fn drop(&mut self) {
         let mut sinks = lock(&SINKS);
-        if let Some(i) = sinks
-            .iter()
-            .position(|c| Arc::ptr_eq(c, &self.collector))
+        if let Some(i) = sinks.iter().position(|(id, _)| *id == self.id)
         {
             sinks.remove(i);
         }
@@ -90,5 +110,35 @@ mod tests {
         }
         warn("back-to-outer");
         assert_eq!(outer.drain(), vec!["to-outer", "back-to-outer"]);
+    }
+
+    #[test]
+    fn capture_receives_warnings_from_worker_threads() {
+        let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        let cap = capture();
+        // mirror the pipeline / dp shape: warnings fire on spawned
+        // threads while the capturing scope lives on the test thread
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    warn(format!("from-worker-{i}"));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = cap.drain();
+        got.sort();
+        assert_eq!(
+            got,
+            vec![
+                "from-worker-0",
+                "from-worker-1",
+                "from-worker-2",
+                "from-worker-3"
+            ],
+            "cross-thread warnings must land in the active scope"
+        );
     }
 }

@@ -1,0 +1,299 @@
+//! Step-pipeline determinism: pipelining moves *copies*, never
+//! arithmetic. With `--pipeline on` the batch packing runs on a
+//! prefetch worker and per-step uploads are staged into idle device
+//! buffers by a stage thread, but every kernel still executes on the
+//! training thread (or the dp workers) in the same order over the same
+//! bytes — so the final `ModelState` and the per-step loss trajectory
+//! must be **bitwise identical** to the synchronous loop, at every
+//! kernel-thread count and every worker count.
+//!
+//! The CI `pipeline-parity` lane runs this binary under
+//! `LOSIA_KERNEL_THREADS=1` and `=4`; the in-test sweep below
+//! additionally pins both settings locally via `set_kernel_threads`.
+
+use std::sync::Mutex;
+
+use losia::config::Method;
+use losia::coordinator::state::ModelState;
+use losia::data::domain::ModMath;
+use losia::data::{gen_train_set, BatchPrefetcher, Batcher};
+use losia::runtime::{kernels, RefBackend, Runtime};
+use losia::session::{RunReport, Session};
+
+/// `set_kernel_threads` is process-global — serialize the tests that
+/// touch it, like `dp_parity.rs` does.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+fn small_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::builtin_config("small", &dir)
+        .expect("small builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+/// One short training run; returns the report and the final state.
+/// `workers == shards` throughout — the layout the pipeline supports
+/// (one staged buffer set per plan, one shard per plan per step).
+fn train(
+    method: Method,
+    workers: usize,
+    shards: usize,
+    pipelined: bool,
+) -> (RunReport, ModelState) {
+    let rt = small_ref_runtime();
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(method)
+        .task("modmath")
+        .steps(6)
+        .time_slot(3)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(0)
+        .workers(workers)
+        .dp_shards(shards)
+        .pipeline(pipelined)
+        .build()
+        .unwrap();
+    let report = session.train().unwrap();
+    (report, session.into_state())
+}
+
+fn assert_states_bitwise_eq(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.params.len(), b.params.len(), "{what}: param count");
+    for ((na, ta), (nb, tb)) in a.params.iter().zip(&b.params) {
+        assert_eq!(na, nb, "{what}: param order");
+        assert_eq!(ta.shape, tb.shape, "{what}: {na} shape");
+        for (ei, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: {na}[{ei}] differs ({x} vs {y}) — the \
+                 pipeline changed the numerics"
+            );
+        }
+    }
+}
+
+fn assert_curves_bitwise_eq(
+    a: &[(usize, f64)],
+    b: &[(usize, f64)],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: loss curve length");
+    for ((sa, la), (sb, lb)) in a.iter().zip(b) {
+        assert_eq!(sa, sb, "{what}: curve step");
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "{what}: step {sa} loss differs ({la} vs {lb})"
+        );
+    }
+}
+
+/// LoSiA-Pro is the hard case: staged batch grids next to
+/// step-dependent `dws_*` frames, importance probes, and mid-run
+/// relocalization. Swept over kernel threads {1, 4} × layouts
+/// {legacy (1×1), dp (2×2)}.
+#[test]
+fn losia_pro_pipelined_is_bitwise_identical_to_synchronous() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    for kt in [1usize, 4] {
+        kernels::set_kernel_threads(kt);
+        for (workers, shards) in [(1usize, 1usize), (2, 2)] {
+            let what = format!(
+                "losia-pro @ {kt} kernel threads, \
+                 {workers}w/{shards}s"
+            );
+            let (sync_report, sync_state) =
+                train(Method::LosiaPro, workers, shards, false);
+            let (pipe_report, pipe_state) =
+                train(Method::LosiaPro, workers, shards, true);
+            assert_states_bitwise_eq(
+                &sync_state,
+                &pipe_state,
+                &what,
+            );
+            assert_curves_bitwise_eq(
+                &sync_report.loss_curve,
+                &pipe_report.loss_curve,
+                &what,
+            );
+            assert!(
+                sync_report.pipeline.is_none(),
+                "{what}: synchronous run must not record a pipeline \
+                 block"
+            );
+            let p = pipe_report
+                .pipeline
+                .as_ref()
+                .expect("pipelined run records a pipeline block");
+            assert!(p.queue_depth >= 1, "{what}: queue depth");
+            assert!(
+                p.staged_bytes > 0,
+                "{what}: staged bytes must be recorded"
+            );
+        }
+    }
+    kernels::set_kernel_threads(0);
+}
+
+/// Same sweep for an adapter method: LoRA's per-step uploads are just
+/// the batch grid (adapters live device-side), so the staged set is
+/// the pure double-buffering path.
+#[test]
+fn lora_pipelined_is_bitwise_identical_to_synchronous() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    for kt in [1usize, 4] {
+        kernels::set_kernel_threads(kt);
+        for (workers, shards) in [(1usize, 1usize), (2, 2)] {
+            let what = format!(
+                "lora @ {kt} kernel threads, {workers}w/{shards}s"
+            );
+            let (sync_report, sync_state) =
+                train(Method::Lora, workers, shards, false);
+            let (pipe_report, pipe_state) =
+                train(Method::Lora, workers, shards, true);
+            assert_states_bitwise_eq(
+                &sync_state,
+                &pipe_state,
+                &what,
+            );
+            assert_curves_bitwise_eq(
+                &sync_report.loss_curve,
+                &pipe_report.loss_curve,
+                &what,
+            );
+        }
+    }
+    kernels::set_kernel_threads(0);
+}
+
+/// The prefetch worker's batch byte-sequence equals the inline draws:
+/// same shard batchers, same order, same bytes — the property the
+/// pipelined loop's parity rests on.
+#[test]
+fn prefetched_batches_match_inline_draws_bytewise() {
+    let steps = 8;
+    for shards in [1usize, 2] {
+        let parent = Batcher::new(
+            gen_train_set(&ModMath, 64, 1),
+            4,
+            16,
+            9,
+        )
+        .unwrap();
+        // inline reference: the synchronous loop's draw order
+        let mut inline = if shards == 1 {
+            vec![parent]
+        } else {
+            parent.shard(shards).unwrap()
+        };
+        let expect: Vec<Vec<losia::data::Batch>> = (0..steps)
+            .map(|_| {
+                inline.iter_mut().map(Batcher::next_batch).collect()
+            })
+            .collect();
+        // prefetched: identical batcher states through the worker
+        let parent = Batcher::new(
+            gen_train_set(&ModMath, 64, 1),
+            4,
+            16,
+            9,
+        )
+        .unwrap();
+        let batchers = if shards == 1 {
+            vec![parent]
+        } else {
+            parent.shard(shards).unwrap()
+        };
+        let mut pf =
+            BatchPrefetcher::new(batchers, steps, 2).unwrap();
+        for (t, want) in expect.iter().enumerate() {
+            let got = pf.next_group().unwrap();
+            assert_eq!(
+                got.len(),
+                want.len(),
+                "step {t}: group width"
+            );
+            for (si, (g, w)) in got.iter().zip(want).enumerate() {
+                assert_eq!(
+                    g.tokens, w.tokens,
+                    "step {t} shard {si}: tokens diverged"
+                );
+                assert_eq!(
+                    g.targets, w.targets,
+                    "step {t} shard {si}: targets diverged"
+                );
+                assert_eq!(
+                    g.mask, w.mask,
+                    "step {t} shard {si}: mask diverged"
+                );
+            }
+        }
+    }
+}
+
+/// The pipeline refuses layouts it cannot stage: with W < S a plan
+/// runs several shards per step, re-binding its per-step slots between
+/// runs, so one staged set per plan cannot cover the step.
+#[test]
+fn pipeline_rejects_fewer_workers_than_shards() {
+    let rt = small_ref_runtime();
+    let mut session = Session::builder()
+        .runtime(&rt)
+        .method(Method::Lora)
+        .task("modmath")
+        .steps(2)
+        .train_n(64)
+        .eval_n(0)
+        .workers(1)
+        .dp_shards(2)
+        .pipeline(true)
+        .build()
+        .unwrap();
+    let err = session.train().unwrap_err().to_string();
+    assert!(
+        err.contains("pipeline"),
+        "error should name the pipeline: {err}"
+    );
+}
+
+/// Report round-trip across the off → on switch: a synchronous run's
+/// JSON (no pipeline block) and a pipelined run's JSON both survive
+/// serialize → parse with the pipeline field intact — the same
+/// back-compat contract `RunReport::dp` follows.
+#[test]
+fn report_round_trips_across_pipeline_toggle() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (off_report, _) = train(Method::Lora, 1, 1, false);
+    let parsed_off =
+        RunReport::from_json_str(&off_report.to_json_string())
+            .unwrap();
+    assert!(
+        parsed_off.pipeline.is_none(),
+        "synchronous report keeps pipeline = None through JSON"
+    );
+    let (on_report, _) = train(Method::Lora, 1, 1, true);
+    let parsed_on =
+        RunReport::from_json_str(&on_report.to_json_string())
+            .unwrap();
+    let orig = on_report.pipeline.as_ref().unwrap();
+    let back = parsed_on
+        .pipeline
+        .as_ref()
+        .expect("pipelined report keeps its pipeline block");
+    assert_eq!(back.queue_depth, orig.queue_depth);
+    assert_eq!(back.prefetch_threads, orig.prefetch_threads);
+    assert_eq!(back.staged_bytes, orig.staged_bytes);
+    assert!((back.stall_secs - orig.stall_secs).abs() < 1e-12);
+    // the loss trajectory itself is toggle-invariant
+    assert_curves_bitwise_eq(
+        &off_report.loss_curve,
+        &on_report.loss_curve,
+        "lora off→on toggle",
+    );
+}
