@@ -1,0 +1,203 @@
+//! Checkpoint I/O cost: what a durable `LOSIACK1` record costs to
+//! cut, load, and rotate, and what periodic checkpointing adds to a
+//! training run's wall-clock.
+//!
+//! What the numbers pin:
+//!
+//! * **write / load throughput** of the atomic tmp-fsync-rename path
+//!   (sectioned CRC32 included) over a realistic model state plus a
+//!   synthetic optimizer blob;
+//! * **rotation cost** as the retention window slides;
+//! * **end-to-end overhead** — the same training run with and without
+//!   `checkpoint_every`, as a percentage;
+//! * **round-trip fidelity** — the loaded state must match the
+//!   written one bit for bit, asserted in the artifact itself.
+//!
+//! Results land as a stdout table and `BENCH_checkpoint.json` at the
+//! repo root (the artifact the CI `crash-resume` lane uploads).
+//! `LOSIA_BENCH_CONFIG` picks the builtin config (default `small`);
+//! `LOSIA_BENCH_ROUNDS` resizes the I/O loop, `LOSIA_BENCH_STEPS`
+//! the training runs.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use losia::config::{builtin_config, Method};
+use losia::coordinator::checkpoint::{
+    self, write_checkpoint, TrainCheckpoint,
+};
+use losia::coordinator::state::ModelState;
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::Session;
+use losia::util::json::Json;
+use losia::util::rng::Rng;
+use losia::util::table::{f, write_bench_json, Table};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn train_secs(
+    rt: &Runtime,
+    steps: usize,
+    ckpt: Option<&std::path::Path>,
+) -> (f64, usize, u64) {
+    let mut b = Session::builder()
+        .runtime(rt)
+        .method(Method::LosiaPro)
+        .task("modmath")
+        .steps(steps)
+        .time_slot((steps / 2).max(3))
+        .lr(1e-3)
+        .train_n(256)
+        .eval_n(0);
+    if let Some(dir) = ckpt {
+        b = b.checkpoint_every(2).checkpoint_dir(dir).checkpoint_keep(3);
+    }
+    let mut session = b.build().expect("session");
+    let report = session.train().expect("train");
+    let (writes, bytes) = report
+        .checkpoint
+        .as_ref()
+        .map_or((0, 0), |c| (c.writes, c.bytes));
+    (report.wall_secs, writes, bytes)
+}
+
+fn main() {
+    let cfg_name = std::env::var("LOSIA_BENCH_CONFIG")
+        .unwrap_or_else(|_| "small".into());
+    let rounds = env_usize("LOSIA_BENCH_ROUNDS", 12).max(1);
+    let steps = env_usize("LOSIA_BENCH_STEPS", 8);
+    let dir = losia::runtime::artifacts_dir();
+    let cfg =
+        builtin_config(&cfg_name, &dir).expect("builtin bench config");
+
+    // ---- micro: write / load / rotate over a realistic record ------
+    let mut rng = Rng::new(7);
+    let state = ModelState::init(&cfg, &mut rng);
+    let state_bytes: u64 = state
+        .params
+        .iter()
+        .map(|(_, t)| 4 * t.data.len() as u64)
+        .sum();
+    let blob = vec![0x5Au8; 1 << 16]; // stand-in optimizer payload
+    let ck_dir = std::env::temp_dir().join(format!(
+        "losia_bench_ckpt_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&ck_dir);
+
+    let (mut w_secs, mut l_secs, mut r_secs) = (0.0f64, 0.0f64, 0.0f64);
+    let mut file_bytes = 0u64;
+    for i in 0..rounds {
+        let path = checkpoint::checkpoint_path(&ck_dir, i + 1);
+        let t0 = Instant::now();
+        write_checkpoint(
+            &path, &cfg.name, "LoSiA-Pro", 42, 1, i + 1, &state, &blob,
+        )
+        .expect("write");
+        w_secs += t0.elapsed().as_secs_f64();
+        file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let t0 = Instant::now();
+        let back =
+            TrainCheckpoint::load(&path, &cfg).expect("load back");
+        l_secs += t0.elapsed().as_secs_f64();
+        // fidelity rides in the artifact: every byte must round-trip
+        assert_eq!(back.driver_blob, blob, "blob round trip");
+        for ((n0, t0), (_, t1)) in
+            state.params.iter().zip(&back.state.params)
+        {
+            for (ei, (x, y)) in
+                t0.data.iter().zip(&t1.data).enumerate()
+            {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{n0}[{ei}] changed across the round trip"
+                );
+            }
+        }
+        let t0 = Instant::now();
+        checkpoint::rotate(&ck_dir, 3);
+        r_secs += t0.elapsed().as_secs_f64();
+    }
+    assert_eq!(
+        checkpoint::list(&ck_dir).len(),
+        rounds.min(3),
+        "rotation holds the window at keep"
+    );
+    let _ = std::fs::remove_dir_all(&ck_dir);
+    let n = rounds as f64;
+    let mb = file_bytes as f64 / (1024.0 * 1024.0);
+    let write_ms = w_secs * 1e3 / n;
+    let load_ms = l_secs * 1e3 / n;
+    let rotate_ms = r_secs * 1e3 / n;
+    let write_mbps = mb / (w_secs / n).max(1e-9);
+    let load_mbps = mb / (l_secs / n).max(1e-9);
+
+    // ---- end-to-end: training overhead of periodic checkpoints -----
+    let (base_secs, _, _) = train_secs_rt(&cfg_name, steps, None);
+    let e2e_dir = std::env::temp_dir().join(format!(
+        "losia_bench_ckpt_e2e_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&e2e_dir);
+    let (ckpt_secs, writes, bytes) =
+        train_secs_rt(&cfg_name, steps, Some(&e2e_dir));
+    let _ = std::fs::remove_dir_all(&e2e_dir);
+    let overhead_pct =
+        (ckpt_secs - base_secs) / base_secs.max(1e-9) * 100.0;
+
+    let mut t = Table::new(
+        &format!(
+            "checkpoint_io — {} ({:.1} MiB record), {} rounds",
+            cfg_name, mb, rounds
+        ),
+        &["op", "ms/op", "MiB/s"],
+    );
+    t.rowv(vec!["write".into(), f(write_ms, 3), f(write_mbps, 1)]);
+    t.rowv(vec!["load".into(), f(load_ms, 3), f(load_mbps, 1)]);
+    t.rowv(vec!["rotate".into(), f(rotate_ms, 3), "-".into()]);
+    t.print();
+    eprintln!(
+        "[checkpoint] train {steps} steps: {base_secs:.3}s bare, \
+         {ckpt_secs:.3}s with every=2 ({writes} writes, {:.1} KiB) — \
+         {overhead_pct:+.1}% wall",
+        bytes as f64 / 1024.0
+    );
+
+    let mut j = BTreeMap::new();
+    j.insert("config".into(), Json::Str(cfg_name));
+    j.insert("rounds".into(), Json::Num(rounds as f64));
+    j.insert("steps".into(), Json::Num(steps as f64));
+    j.insert("state_bytes".into(), Json::Num(state_bytes as f64));
+    j.insert("file_bytes".into(), Json::Num(file_bytes as f64));
+    j.insert("write_ms".into(), Json::Num(write_ms));
+    j.insert("load_ms".into(), Json::Num(load_ms));
+    j.insert("rotate_ms".into(), Json::Num(rotate_ms));
+    j.insert("write_mbps".into(), Json::Num(write_mbps));
+    j.insert("load_mbps".into(), Json::Num(load_mbps));
+    j.insert("train_base_secs".into(), Json::Num(base_secs));
+    j.insert("train_ckpt_secs".into(), Json::Num(ckpt_secs));
+    j.insert("overhead_pct".into(), Json::Num(overhead_pct));
+    j.insert("ckpt_writes".into(), Json::Num(writes as f64));
+    j.insert("ckpt_bytes".into(), Json::Num(bytes as f64));
+    write_bench_json("checkpoint", &Json::Obj(j));
+}
+
+/// Fresh runtime per run — plan/arena reuse across the bare and
+/// checkpointed runs would skew the comparison.
+fn train_secs_rt(
+    cfg_name: &str,
+    steps: usize,
+    ckpt: Option<&std::path::Path>,
+) -> (f64, usize, u64) {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg =
+        builtin_config(cfg_name, &dir).expect("builtin bench config");
+    let rt = Runtime::with_backend(cfg, Box::new(RefBackend));
+    train_secs(&rt, steps, ckpt)
+}

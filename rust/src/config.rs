@@ -651,6 +651,21 @@ pub struct TrainConfig {
     /// numerics — the pipelined loop is bitwise identical to the
     /// synchronous one (see `runtime::pipeline`).
     pub pipeline: Option<bool>,
+    /// Write a durable training checkpoint every N steps. `None`
+    /// defers to `LOSIA_CKPT_EVERY` (0 = disabled when unset); see
+    /// `coordinator::checkpoint::CheckpointConfig::resolve`.
+    pub checkpoint_every: Option<usize>,
+    /// Checkpoint directory. `None` defers to `LOSIA_CKPT_DIR`
+    /// (default `checkpoints/`).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Newest checkpoints retained after each write (min 1). `None`
+    /// defers to `LOSIA_CKPT_KEEP` (default 3).
+    pub checkpoint_keep: Option<usize>,
+    /// Resume from the newest loadable checkpoint before training.
+    /// `None` defers to `LOSIA_CKPT_RESUME` (off when unset). Resumed
+    /// runs are bitwise identical to uninterrupted ones (pinned by
+    /// `tests/checkpoint_parity.rs`).
+    pub resume: Option<bool>,
 }
 
 impl Default for TrainConfig {
@@ -675,6 +690,10 @@ impl Default for TrainConfig {
             dp_workers: 1,
             dp_shards: 1,
             pipeline: None,
+            checkpoint_every: None,
+            checkpoint_dir: None,
+            checkpoint_keep: None,
+            resume: None,
         }
     }
 }

@@ -1,0 +1,856 @@
+//! Durable training checkpoints (`LOSIACK1`).
+//!
+//! A checkpoint captures everything a killed run needs to continue
+//! bitwise-identically: the model parameters, the step counter, and an
+//! opaque driver blob holding optimizer moments, subnet selections,
+//! and importance accumulators (written by
+//! `crate::methods::Driver::snapshot`). Batcher position is *not*
+//! stored — batch order is a pure function of `(seed, shards, step)`,
+//! so resume rebuilds the batchers and fast-forwards them with
+//! `Batcher::skip_batch`.
+//!
+//! Files go through [`crate::util::durable`]: atomic tmp + fsync +
+//! rename writes (fault site `"save"`), per-section CRC32s, and typed
+//! truncation/corruption errors. [`load_latest`] scans a directory
+//! newest-first and skips torn or corrupt files with a warning, so an
+//! injected crash mid-save can never leave the directory without a
+//! loadable checkpoint (pinned by `tests/crash_safety.rs`).
+
+use std::io::{BufReader, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{ModelCfg, TrainConfig};
+use crate::coordinator::importance::{ImportanceAccum, ImportanceMode};
+use crate::coordinator::state::ModelState;
+use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::tensor::Tensor;
+use crate::util::durable::{
+    self, Header, SectionReader, SectionWriter,
+};
+use crate::util::warn::warn;
+
+const CKPT_MAGIC: &[u8; 8] = b"LOSIACK1";
+const CKPT_VERSION: u32 = 1;
+
+/// Checkpoint files are `ckpt-<step, zero-padded>.losia`, so
+/// lexicographic order equals step order.
+const CKPT_PREFIX: &str = "ckpt-";
+const CKPT_EXT: &str = "losia";
+
+// ------------------------------------------------------ configuration
+
+/// Resolved checkpoint knobs. Precedence per knob: explicit
+/// [`TrainConfig`] setting > `LOSIA_CKPT_*` env var > default
+/// (disabled, `checkpoints/`, keep 3, no resume) — the same layering
+/// as `runtime::dp::DpConfig::resolve`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointConfig {
+    /// write a checkpoint every N steps; 0 disables checkpointing
+    pub every: usize,
+    /// directory holding the rotation window
+    pub dir: PathBuf,
+    /// newest checkpoints retained after each write (min 1)
+    pub keep: usize,
+    /// resume from the newest loadable checkpoint in `dir`
+    pub resume: bool,
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.trim().parse().ok()
+}
+
+fn env_flag(name: &str) -> Option<bool> {
+    match std::env::var(name).ok()?.trim().to_ascii_lowercase().as_str()
+    {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+impl CheckpointConfig {
+    pub fn resolve(tc: &TrainConfig) -> Self {
+        let every = tc
+            .checkpoint_every
+            .or_else(|| env_usize("LOSIA_CKPT_EVERY"))
+            .unwrap_or(0);
+        let dir = tc
+            .checkpoint_dir
+            .clone()
+            .or_else(|| {
+                std::env::var("LOSIA_CKPT_DIR").ok().map(PathBuf::from)
+            })
+            .unwrap_or_else(|| PathBuf::from("checkpoints"));
+        let keep = tc
+            .checkpoint_keep
+            .or_else(|| env_usize("LOSIA_CKPT_KEEP"))
+            .unwrap_or(3)
+            .max(1);
+        let resume = tc
+            .resume
+            .or_else(|| env_flag("LOSIA_CKPT_RESUME"))
+            .unwrap_or(false);
+        CheckpointConfig {
+            every,
+            dir,
+            keep,
+            resume,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.every > 0
+    }
+}
+
+// ------------------------------------------------- low-level helpers
+//
+// Shared shapes for the driver snapshot blobs: every `Driver` writes
+// its state through these so the on-disk vocabulary (tensor, index
+// list, Adam moments, importance accumulator) stays uniform across
+// methods.
+
+pub fn write_tensor<W: Write>(
+    w: &mut SectionWriter<W>,
+    t: &Tensor,
+) -> Result<()> {
+    w.u32(t.shape.len() as u32)?;
+    for &d in &t.shape {
+        w.u64(d as u64)?;
+    }
+    w.f32s(&t.data)?;
+    Ok(())
+}
+
+pub fn read_tensor<R: Read>(r: &mut SectionReader<R>) -> Result<Tensor> {
+    let ndim = r.u32()? as usize;
+    ensure!(
+        ndim <= 8,
+        "{}: section {:?}: implausible tensor rank {ndim} (file is \
+         corrupt)",
+        r.file(),
+        "tensor"
+    );
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u64()? as usize);
+    }
+    let numel: usize = shape.iter().product();
+    ensure!(
+        numel <= 1 << 31,
+        "{}: implausible tensor size {numel} (file is corrupt)",
+        r.file()
+    );
+    let mut data = vec![0f32; numel];
+    r.f32s(&mut data)?;
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+pub fn write_usizes<W: Write>(
+    w: &mut SectionWriter<W>,
+    xs: &[usize],
+) -> Result<()> {
+    w.u64(xs.len() as u64)?;
+    for &x in xs {
+        w.u64(x as u64)?;
+    }
+    Ok(())
+}
+
+pub fn read_usizes<R: Read>(
+    r: &mut SectionReader<R>,
+) -> Result<Vec<usize>> {
+    let n = r.u64()? as usize;
+    ensure!(
+        n <= 1 << 28,
+        "{}: implausible index-list length {n} (file is corrupt)",
+        r.file()
+    );
+    let mut xs = Vec::with_capacity(n);
+    for _ in 0..n {
+        xs.push(r.u64()? as usize);
+    }
+    Ok(xs)
+}
+
+pub fn write_adam<W: Write>(
+    w: &mut SectionWriter<W>,
+    a: &AdamState,
+) -> Result<()> {
+    write_tensor(w, &a.m)?;
+    write_tensor(w, &a.v)?;
+    w.u32(a.step)?;
+    Ok(())
+}
+
+/// Rebuild an [`AdamState`] with the caller's hyperparameters (hp are
+/// run configuration, not checkpoint payload).
+pub fn read_adam<R: Read>(
+    r: &mut SectionReader<R>,
+    hp: AdamParams,
+) -> Result<AdamState> {
+    let m = read_tensor(r)?;
+    let v = read_tensor(r)?;
+    let step = r.u32()?;
+    ensure!(
+        m.shape == v.shape,
+        "{}: Adam moment shapes disagree ({:?} vs {:?})",
+        r.file(),
+        m.shape,
+        v.shape
+    );
+    Ok(AdamState { m, v, step, hp })
+}
+
+/// Overwrite an existing [`AdamState`] in place, validating that the
+/// checkpointed moments match the shape the current run allocated.
+pub fn read_adam_into<R: Read>(
+    r: &mut SectionReader<R>,
+    a: &mut AdamState,
+) -> Result<()> {
+    let loaded = read_adam(r, a.hp)?;
+    ensure!(
+        loaded.m.shape == a.m.shape,
+        "{}: checkpointed Adam moments have shape {:?}, this run \
+         expects {:?} (config/method mismatch?)",
+        r.file(),
+        loaded.m.shape,
+        a.m.shape
+    );
+    a.m = loaded.m;
+    a.v = loaded.v;
+    a.step = loaded.step;
+    Ok(())
+}
+
+pub fn write_accum<W: Write>(
+    w: &mut SectionWriter<W>,
+    a: &ImportanceAccum,
+) -> Result<()> {
+    w.u32(match a.mode {
+        ImportanceMode::Sensitivity => 0,
+        ImportanceMode::GradientMagnitude => 1,
+    })?;
+    w.f32s(&[a.beta1, a.beta2])?;
+    write_tensor(w, &a.i_bar)?;
+    write_tensor(w, &a.u_bar)?;
+    w.u64(a.updates as u64)?;
+    Ok(())
+}
+
+pub fn read_accum<R: Read>(
+    r: &mut SectionReader<R>,
+) -> Result<ImportanceAccum> {
+    let mode = match r.u32()? {
+        0 => ImportanceMode::Sensitivity,
+        1 => ImportanceMode::GradientMagnitude,
+        other => bail!(
+            "{}: unknown importance mode {other} (file is corrupt)",
+            r.file()
+        ),
+    };
+    let mut betas = [0f32; 2];
+    r.f32s(&mut betas)?;
+    let i_bar = read_tensor(r)?;
+    let u_bar = read_tensor(r)?;
+    let updates = r.u64()? as usize;
+    ensure!(
+        i_bar.shape == u_bar.shape,
+        "{}: importance accumulator shapes disagree",
+        r.file()
+    );
+    Ok(ImportanceAccum {
+        mode,
+        beta1: betas[0],
+        beta2: betas[1],
+        i_bar,
+        u_bar,
+        updates,
+    })
+}
+
+// --------------------------------------------------------- the record
+
+/// One loaded training checkpoint.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// optimization steps completed when the checkpoint was written;
+    /// resume continues at step index `step`
+    pub step: usize,
+    /// model config name the run used
+    pub config: String,
+    /// method name (`Method::name`)
+    pub method: String,
+    /// run seed
+    pub seed: u64,
+    /// logical dp shard count (the numerics knob — a resumed run must
+    /// match it or the batch streams diverge)
+    pub dp_shards: usize,
+    pub state: ModelState,
+    /// opaque `Driver::snapshot` payload
+    pub driver_blob: Vec<u8>,
+}
+
+/// `<dir>/ckpt-<step>.losia`, zero-padded so name order is step order.
+pub fn checkpoint_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("{CKPT_PREFIX}{step:08}.{CKPT_EXT}"))
+}
+
+/// Write one checkpoint atomically (fault site `"save"` at `step`).
+/// Borrows the state — no full-model clone is made to checkpoint.
+#[allow(clippy::too_many_arguments)]
+pub fn write_checkpoint(
+    path: &Path,
+    config: &str,
+    method: &str,
+    seed: u64,
+    dp_shards: usize,
+    step: usize,
+    state: &ModelState,
+    driver_blob: &[u8],
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    durable::atomic_write(path, "save", step, |w| {
+        durable::write_header(w, CKPT_MAGIC, CKPT_VERSION)?;
+        w.u64(step as u64)?;
+        w.str(config)?;
+        w.str(method)?;
+        w.u64(seed)?;
+        w.u64(dp_shards as u64)?;
+        w.end_section()?;
+        state.write_into(w)?;
+        w.u64(driver_blob.len() as u64)?;
+        w.write_all(driver_blob)?;
+        w.end_section()?;
+        Ok(())
+    })
+    .with_context(|| {
+        format!("writing checkpoint {}", path.display())
+    })
+}
+
+impl TrainCheckpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_checkpoint(
+            path,
+            &self.config,
+            &self.method,
+            self.seed,
+            self.dp_shards,
+            self.step,
+            &self.state,
+            &self.driver_blob,
+        )
+    }
+
+    pub fn load(path: &Path, cfg: &ModelCfg) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = SectionReader::new(
+            BufReader::new(f),
+            path.display().to_string(),
+        );
+        match r.read_header(CKPT_MAGIC)? {
+            Header::Versioned(v) if v <= CKPT_VERSION => {}
+            Header::Versioned(v) => bail!(
+                "{}: checkpoint format version {v} is newer than this \
+                 build understands (max {CKPT_VERSION})",
+                path.display()
+            ),
+            // checkpoints never existed before the versioned layout,
+            // so a non-sentinel first word means torn/corrupt bytes
+            Header::Legacy(_) => bail!(
+                "{}: not a versioned checkpoint (file is corrupt)",
+                path.display()
+            ),
+        }
+        r.section("meta");
+        let step = r.u64()? as usize;
+        let config = r.str()?;
+        let method = r.str()?;
+        let seed = r.u64()?;
+        let dp_shards = r.u64()? as usize;
+        r.end_section()?;
+        if config != cfg.name {
+            bail!(
+                "{}: checkpoint was written for config {config:?}, \
+                 this run uses {:?}",
+                path.display(),
+                cfg.name
+            );
+        }
+        r.section("count");
+        let count = r.u32()? as usize;
+        r.end_section()?;
+        let state = ModelState::read_from(&mut r, cfg, count)?;
+        r.section("driver");
+        let blob_len = r.u64()? as usize;
+        ensure!(
+            blob_len <= 1 << 32,
+            "{}: implausible driver blob length {blob_len} (file is \
+             corrupt)",
+            path.display()
+        );
+        let mut driver_blob = vec![0u8; blob_len];
+        r.read_exact(&mut driver_blob)?;
+        r.end_section()?;
+        Ok(TrainCheckpoint {
+            step,
+            config,
+            method,
+            seed,
+            dp_shards,
+            state,
+            driver_blob,
+        })
+    }
+
+    /// Reject a checkpoint written by a differently-configured run —
+    /// resuming across a method/seed/shard change would silently break
+    /// the bitwise-parity contract.
+    pub fn validate(
+        &self,
+        method: &str,
+        seed: u64,
+        dp_shards: usize,
+    ) -> Result<()> {
+        ensure!(
+            self.method == method,
+            "checkpoint was written by method {:?}, this run uses \
+             {method:?}",
+            self.method
+        );
+        ensure!(
+            self.seed == seed,
+            "checkpoint was written with seed {}, this run uses {seed}",
+            self.seed
+        );
+        ensure!(
+            self.dp_shards == dp_shards,
+            "checkpoint was written with {} dp shard(s), this run \
+             uses {dp_shards} — the shard count is a numerics knob \
+             and must match to resume",
+            self.dp_shards
+        );
+        Ok(())
+    }
+}
+
+// ------------------------------------------------- directory scanning
+
+/// `(step, path)` for every checkpoint-named file in `dir`, ascending
+/// by step. Tmp files and foreign names are ignored. A missing
+/// directory is an empty list, not an error.
+pub fn list(dir: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if durable::is_tmp(&path) {
+            continue;
+        }
+        let Some(name) = path.file_name().and_then(|s| s.to_str())
+        else {
+            continue;
+        };
+        let Some(stem) = name
+            .strip_prefix(CKPT_PREFIX)
+            .and_then(|s| s.strip_suffix(&format!(".{CKPT_EXT}")))
+        else {
+            continue;
+        };
+        if let Ok(step) = stem.parse::<usize>() {
+            out.push((step, path));
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Load the newest checkpoint that parses cleanly, warning about and
+/// skipping torn/corrupt files. `Ok(None)` when nothing loadable
+/// exists.
+pub fn load_latest(
+    dir: &Path,
+    cfg: &ModelCfg,
+) -> Result<Option<(TrainCheckpoint, PathBuf)>> {
+    for (_, path) in list(dir).into_iter().rev() {
+        match TrainCheckpoint::load(&path, cfg) {
+            Ok(ck) => return Ok(Some((ck, path))),
+            Err(e) => warn(format!(
+                "skipping unloadable checkpoint {}: {e}",
+                path.display()
+            )),
+        }
+    }
+    Ok(None)
+}
+
+/// Keep the newest `keep` checkpoints, deleting older ones and any
+/// stale `.tmp` files left by interrupted writes. Called after every
+/// successful save, so the newest file is always a just-verified
+/// write and the rotation can never delete the only valid checkpoint.
+/// Deletion failures warn instead of failing the step.
+pub fn rotate(dir: &Path, keep: usize) {
+    let keep = keep.max(1);
+    let all = list(dir);
+    if all.len() > keep {
+        for (_, path) in &all[..all.len() - keep] {
+            if let Err(e) = std::fs::remove_file(path) {
+                warn(format!(
+                    "could not rotate out {}: {e}",
+                    path.display()
+                ));
+            }
+        }
+    }
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if durable::is_tmp(&path) {
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- step driver
+
+/// The trainer's checkpointing arm: owns the resolved config and run
+/// identity, decides when a step is due, writes + rotates, and keeps
+/// the counters the run report surfaces.
+#[derive(Debug)]
+pub struct CheckpointWriter {
+    pub cfg: CheckpointConfig,
+    config: String,
+    method: String,
+    seed: u64,
+    dp_shards: usize,
+    /// checkpoints written this stage
+    pub writes: usize,
+    /// total bytes those writes put on disk
+    pub bytes: u64,
+    pub last_path: Option<PathBuf>,
+}
+
+impl CheckpointWriter {
+    pub fn new(
+        cfg: CheckpointConfig,
+        config: &str,
+        method: &str,
+        seed: u64,
+        dp_shards: usize,
+    ) -> Self {
+        CheckpointWriter {
+            cfg,
+            config: config.to_string(),
+            method: method.to_string(),
+            seed,
+            dp_shards,
+            writes: 0,
+            bytes: 0,
+            last_path: None,
+        }
+    }
+
+    /// A checkpoint is due after step `t` when `t + 1` completed steps
+    /// is a multiple of the interval.
+    pub fn due(&self, t: usize) -> bool {
+        self.cfg.every > 0 && (t + 1) % self.cfg.every == 0
+    }
+
+    /// Write the checkpoint for completed-step count `t + 1` and
+    /// rotate the retention window. Returns the new file's path and
+    /// size.
+    pub fn write(
+        &mut self,
+        state: &ModelState,
+        t: usize,
+        driver_blob: &[u8],
+    ) -> Result<(PathBuf, u64)> {
+        let step = t + 1;
+        let path = checkpoint_path(&self.cfg.dir, step);
+        write_checkpoint(
+            &path,
+            &self.config,
+            &self.method,
+            self.seed,
+            self.dp_shards,
+            step,
+            state,
+            driver_blob,
+        )?;
+        rotate(&self.cfg.dir, self.cfg.keep);
+        let size = std::fs::metadata(&path)
+            .map(|m| m.len())
+            .unwrap_or(0);
+        self.writes += 1;
+        self.bytes += size;
+        self.last_path = Some(path.clone());
+        Ok((path, size))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::resolve_config;
+    use crate::runtime::artifacts_dir;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> ModelCfg {
+        resolve_config(&artifacts_dir(), "tiny").unwrap()
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "losia_ckpt_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn helper_payloads_round_trip() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.5; 6]);
+        let adam = AdamState {
+            m: Tensor::from_vec(&[4], vec![1.0, -1.0, 2.0, 0.0]),
+            v: Tensor::from_vec(&[4], vec![0.1, 0.2, 0.3, 0.4]),
+            step: 17,
+            hp: AdamParams::default(),
+        };
+        let accum = ImportanceAccum {
+            mode: ImportanceMode::GradientMagnitude,
+            beta1: 0.85,
+            beta2: 0.85,
+            i_bar: Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+            u_bar: Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]),
+            updates: 9,
+        };
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            write_tensor(&mut w, &t).unwrap();
+            write_usizes(&mut w, &[3, 1, 4, 1, 5]).unwrap();
+            write_adam(&mut w, &adam).unwrap();
+            write_accum(&mut w, &accum).unwrap();
+            w.end_section().unwrap();
+        }
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(&buf),
+            "blob",
+        );
+        r.section("body");
+        assert_eq!(read_tensor(&mut r).unwrap(), t);
+        assert_eq!(read_usizes(&mut r).unwrap(), vec![3, 1, 4, 1, 5]);
+        let mut into = AdamState::new(&[4], AdamParams::default());
+        read_adam_into(&mut r, &mut into).unwrap();
+        assert_eq!(into.m, adam.m);
+        assert_eq!(into.v, adam.v);
+        assert_eq!(into.step, 17);
+        let back = read_accum(&mut r).unwrap();
+        assert_eq!(back.mode, accum.mode);
+        assert_eq!(back.i_bar, accum.i_bar);
+        assert_eq!(back.u_bar, accum.u_bar);
+        assert_eq!(back.updates, 9);
+        r.end_section().unwrap();
+    }
+
+    #[test]
+    fn adam_shape_mismatch_is_rejected() {
+        let adam = AdamState::new(&[3], AdamParams::default());
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            write_adam(&mut w, &adam).unwrap();
+            w.end_section().unwrap();
+        }
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(&buf),
+            "blob",
+        );
+        r.section("body");
+        let mut into = AdamState::new(&[4], AdamParams::default());
+        let err = read_adam_into(&mut r, &mut into).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_record_round_trips() {
+        let cfg = tiny();
+        let mut rng = Rng::new(5);
+        let state = ModelState::init(&cfg, &mut rng);
+        let dir = tmp_dir("roundtrip");
+        let ck = TrainCheckpoint {
+            step: 12,
+            config: cfg.name.clone(),
+            method: "LoSiA-Pro".into(),
+            seed: 42,
+            dp_shards: 2,
+            state,
+            driver_blob: vec![7u8; 1000],
+        };
+        let path = checkpoint_path(&dir, ck.step);
+        ck.save(&path).unwrap();
+        let back = TrainCheckpoint::load(&path, &cfg).unwrap();
+        assert_eq!(back.step, 12);
+        assert_eq!(back.method, "LoSiA-Pro");
+        assert_eq!(back.seed, 42);
+        assert_eq!(back.dp_shards, 2);
+        assert_eq!(back.driver_blob, ck.driver_blob);
+        for ((n0, t0), (n1, t1)) in
+            ck.state.params.iter().zip(&back.state.params)
+        {
+            assert_eq!(n0, n1);
+            assert_eq!(t0.data, t1.data);
+        }
+        back.validate("LoSiA-Pro", 42, 2).unwrap();
+        assert!(back.validate("LoRA", 42, 2).is_err());
+        assert!(back.validate("LoSiA-Pro", 43, 2).is_err());
+        assert!(back.validate("LoSiA-Pro", 42, 4).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_keeps_newest_and_clears_tmps() {
+        let cfg = tiny();
+        let mut rng = Rng::new(6);
+        let state = ModelState::init(&cfg, &mut rng);
+        let dir = tmp_dir("rotate");
+        let mut cw = CheckpointWriter::new(
+            CheckpointConfig {
+                every: 1,
+                dir: dir.clone(),
+                keep: 2,
+                resume: false,
+            },
+            &cfg.name,
+            "LoSiA-Pro",
+            42,
+            1,
+        );
+        assert!(cw.due(0));
+        for t in 0..4 {
+            cw.write(&state, t, b"blob").unwrap();
+        }
+        // a stale tmp from a simulated crash gets swept
+        std::fs::write(dir.join("ckpt-00000009.losia.tmp"), b"torn")
+            .unwrap();
+        cw.write(&state, 4, b"blob").unwrap();
+        let steps: Vec<usize> =
+            list(&dir).into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![4, 5]);
+        assert!(!dir.join("ckpt-00000009.losia.tmp").exists());
+        assert_eq!(cw.writes, 5);
+        assert!(cw.bytes > 0);
+        assert_eq!(
+            cw.last_path.as_deref(),
+            Some(checkpoint_path(&dir, 5).as_path())
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_latest_skips_corrupt_newest() {
+        let cfg = tiny();
+        let mut rng = Rng::new(7);
+        let state = ModelState::init(&cfg, &mut rng);
+        let dir = tmp_dir("latest");
+        for step in [3usize, 6] {
+            write_checkpoint(
+                &checkpoint_path(&dir, step),
+                &cfg.name,
+                "LoRA",
+                1,
+                1,
+                step,
+                &state,
+                b"",
+            )
+            .unwrap();
+        }
+        // tear the newest one: resume must fall back to step 3
+        let newest = checkpoint_path(&dir, 6);
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 3]).unwrap();
+        let cap = crate::util::warn::capture();
+        let (ck, path) = load_latest(&dir, &cfg).unwrap().unwrap();
+        let warns = cap.drain();
+        assert_eq!(ck.step, 3);
+        assert_eq!(path, checkpoint_path(&dir, 3));
+        assert!(
+            warns.iter().any(|w| w.contains("unloadable")),
+            "expected a skip warning, got {warns:?}"
+        );
+        // empty / missing directories are a clean None
+        assert!(load_latest(&tmp_dir("empty"), &cfg)
+            .unwrap()
+            .is_none());
+        assert!(load_latest(Path::new("/nonexistent/ckpts"), &cfg)
+            .unwrap()
+            .is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn config_resolution_layers_builder_over_env() {
+        let _guard =
+            match crate::util::faultpoint::ENV_LOCK.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        for k in [
+            "LOSIA_CKPT_EVERY",
+            "LOSIA_CKPT_DIR",
+            "LOSIA_CKPT_KEEP",
+            "LOSIA_CKPT_RESUME",
+        ] {
+            std::env::remove_var(k);
+        }
+        let tc = TrainConfig::default();
+        let c = CheckpointConfig::resolve(&tc);
+        assert!(!c.enabled());
+        assert_eq!(c.dir, PathBuf::from("checkpoints"));
+        assert_eq!(c.keep, 3);
+        assert!(!c.resume);
+
+        std::env::set_var("LOSIA_CKPT_EVERY", "5");
+        std::env::set_var("LOSIA_CKPT_DIR", "/tmp/ck");
+        std::env::set_var("LOSIA_CKPT_KEEP", "0");
+        std::env::set_var("LOSIA_CKPT_RESUME", "true");
+        let c = CheckpointConfig::resolve(&tc);
+        assert_eq!(c.every, 5);
+        assert_eq!(c.dir, PathBuf::from("/tmp/ck"));
+        // keep is clamped to at least one retained checkpoint
+        assert_eq!(c.keep, 1);
+        assert!(c.resume);
+
+        let mut tc = TrainConfig::default();
+        tc.checkpoint_every = Some(2);
+        tc.checkpoint_dir = Some(PathBuf::from("/tmp/other"));
+        tc.checkpoint_keep = Some(7);
+        tc.resume = Some(false);
+        let c = CheckpointConfig::resolve(&tc);
+        assert_eq!(c.every, 2);
+        assert_eq!(c.dir, PathBuf::from("/tmp/other"));
+        assert_eq!(c.keep, 7);
+        assert!(!c.resume);
+
+        for k in [
+            "LOSIA_CKPT_EVERY",
+            "LOSIA_CKPT_DIR",
+            "LOSIA_CKPT_KEEP",
+            "LOSIA_CKPT_RESUME",
+        ] {
+            std::env::remove_var(k);
+        }
+    }
+}

@@ -6,8 +6,10 @@
 //! * [`rewarm`] — learning-rate rewarming (Eq. 8)
 //! * [`subnet`] — subnet state + compact Adam moments (Algorithm 2)
 //! * [`state`] — model parameter store (the ABI mirror of `aot.py`)
+//! * [`checkpoint`] — durable training checkpoints + resume (PR 10)
 //! * [`trainer`] — the training loop driving AOT artifacts
 
+pub mod checkpoint;
 pub mod importance;
 pub mod localize;
 pub mod rewarm;

@@ -5,28 +5,23 @@
 //! `ExecPlan::bind_params` uploads them by name.
 
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::ModelCfg;
 use crate::tensor::Tensor;
+use crate::util::durable::{
+    self, Header, SectionReader, SectionWriter,
+};
 use crate::util::rng::Rng;
 
 const STATE_MAGIC: &[u8; 8] = b"LOSIAST1";
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut buf = [0u8; 4];
-    r.read_exact(&mut buf)?;
-    Ok(u32::from_le_bytes(buf))
-}
-
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut buf = [0u8; 8];
-    r.read_exact(&mut buf)?;
-    Ok(u64::from_le_bytes(buf))
-}
+/// Format version written after the sentinel; bumped when the payload
+/// layout changes (v1 = sectioned CRC layout, PR 10).
+const STATE_VERSION: u32 = 1;
 
 /// Named parameter tensors in ABI order.
 #[derive(Debug, Clone)]
@@ -81,51 +76,39 @@ impl ModelState {
         self.params.iter().map(|(_, t)| t.len()).sum()
     }
 
-    /// Serialize all parameters to a checkpoint file (little-endian
-    /// f32, ABI order) loadable via [`ModelState::load`].
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            let _ = std::fs::create_dir_all(dir);
-        }
-        let f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        let mut w = BufWriter::new(f);
-        w.write_all(STATE_MAGIC)?;
-        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+    /// Serialize the parameter payload (count section, then one
+    /// CRC-closed section per tensor) into an open section writer.
+    /// Shared by [`ModelState::save`] and the training-checkpoint
+    /// record, which embeds a state inline. Floats stream through the
+    /// writer's fixed frames — no tensor-sized byte buffer is built.
+    pub fn write_into<W: Write>(
+        &self,
+        w: &mut SectionWriter<W>,
+    ) -> Result<()> {
+        w.u32(self.params.len() as u32)?;
+        w.end_section()?;
         for (name, t) in &self.params {
-            w.write_all(&(name.len() as u32).to_le_bytes())?;
-            w.write_all(name.as_bytes())?;
-            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            w.str(name)?;
+            w.u32(t.shape.len() as u32)?;
             for &d in &t.shape {
-                w.write_all(&(d as u64).to_le_bytes())?;
+                w.u64(d as u64)?;
             }
-            // one bulk write per tensor (multi-million-element params)
-            let bytes: Vec<u8> = t
-                .data
-                .iter()
-                .flat_map(|x| x.to_le_bytes())
-                .collect();
-            w.write_all(&bytes)?;
+            w.f32s(&t.data)?;
+            w.end_section()?;
         }
-        w.flush()?;
         Ok(())
     }
 
-    /// Load a checkpoint saved by [`ModelState::save`], validating
-    /// every parameter name and shape against `cfg`'s ABI.
-    pub fn load(path: &Path, cfg: &ModelCfg) -> Result<Self> {
-        let f = std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
-        let mut r = BufReader::new(f);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic != STATE_MAGIC {
-            bail!(
-                "{} is not a LoSiA state file (bad magic)",
-                path.display()
-            );
-        }
-        let count = read_u32(&mut r)? as usize;
+    /// Read a parameter payload written by [`ModelState::write_into`]
+    /// (or by the legacy pre-CRC writer — the byte layout inside
+    /// sections is identical), validating every name and shape
+    /// against `cfg`'s ABI. `count` is the already-read parameter
+    /// count (header word in legacy files, count section otherwise).
+    pub fn read_from<R: Read>(
+        r: &mut SectionReader<R>,
+        cfg: &ModelCfg,
+        count: usize,
+    ) -> Result<Self> {
         if count != cfg.params.len() {
             bail!(
                 "state file has {count} params, config {:?} expects {}",
@@ -136,21 +119,18 @@ impl ModelState {
         let mut params = Vec::with_capacity(count);
         let mut index = BTreeMap::new();
         for (ename, eshape) in &cfg.params {
-            let nlen = read_u32(&mut r)? as usize;
-            let mut nbuf = vec![0u8; nlen];
-            r.read_exact(&mut nbuf)?;
-            let name = String::from_utf8(nbuf)
-                .context("state file: non-UTF8 parameter name")?;
+            r.section(ename);
+            let name = r.str()?;
             if &name != ename {
                 bail!(
                     "state file param {name:?} does not match config \
                      ABI order (expected {ename:?})"
                 );
             }
-            let ndim = read_u32(&mut r)? as usize;
+            let ndim = r.u32()? as usize;
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(read_u64(&mut r)? as usize);
+                shape.push(r.u64()? as usize);
             }
             if &shape != eshape {
                 bail!(
@@ -159,16 +139,66 @@ impl ModelState {
                 );
             }
             let numel: usize = shape.iter().product();
-            let mut bytes = vec![0u8; numel * 4];
-            r.read_exact(&mut bytes)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
+            let mut data = vec![0f32; numel];
+            r.f32s(&mut data)?;
+            r.end_section()?;
             index.insert(name.clone(), params.len());
             params.push((name, Tensor::from_vec(&shape, data)));
         }
         Ok(ModelState { params, index })
+    }
+
+    /// Serialize all parameters to a state file (little-endian f32,
+    /// ABI order) loadable via [`ModelState::load`]. The write is
+    /// atomic (tmp + fsync + rename) and every section carries a
+    /// CRC32, so a crash mid-save leaves the previous file intact and
+    /// torn bytes are detected at load, never silently trained on.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        durable::atomic_write(path, "save", 0, |w| {
+            durable::write_header(w, STATE_MAGIC, STATE_VERSION)?;
+            self.write_into(w)
+        })
+    }
+
+    /// Load a state file saved by [`ModelState::save`], validating
+    /// every parameter name and shape against `cfg`'s ABI. Files
+    /// written before the durability rework (no version sentinel, no
+    /// CRCs) still load, with a one-line warning and no checksum
+    /// verification.
+    pub fn load(path: &Path, cfg: &ModelCfg) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = SectionReader::new(
+            BufReader::new(f),
+            path.display().to_string(),
+        );
+        let count = match r.read_header(STATE_MAGIC)? {
+            Header::Versioned(v) => {
+                if v > STATE_VERSION {
+                    bail!(
+                        "{}: state format version {v} is newer than \
+                         this build understands (max {STATE_VERSION})",
+                        path.display()
+                    );
+                }
+                r.section("count");
+                let count = r.u32()? as usize;
+                r.end_section()?;
+                count
+            }
+            Header::Legacy(count) => {
+                crate::util::warn::warn(format!(
+                    "{}: pre-durability state file (no CRC \
+                     sections); loading without verification",
+                    path.display()
+                ));
+                count as usize
+            }
+        };
+        Self::read_from(&mut r, cfg, count)
     }
 
     /// L2 distance to another state (continual-learning drift metric).
@@ -244,6 +274,150 @@ mod tests {
             assert_eq!(t0.shape, t1.shape);
             assert_eq!(t0.data, t1.data);
         }
+    }
+
+    /// Write `st` in the pre-PR-10 layout: magic, bare u32 count, then
+    /// per param (u32 name len, name, u32 ndim, u64 dims, raw f32s) —
+    /// no version sentinel, no CRCs.
+    fn write_legacy(st: &ModelState, path: &Path) {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(STATE_MAGIC);
+        buf.extend_from_slice(
+            &(st.params.len() as u32).to_le_bytes(),
+        );
+        for (name, t) in &st.params {
+            buf.extend_from_slice(
+                &(name.len() as u32).to_le_bytes(),
+            );
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(
+                &(t.shape.len() as u32).to_le_bytes(),
+            );
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            for x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, buf).unwrap();
+    }
+
+    #[test]
+    fn legacy_state_file_loads_with_a_warning() {
+        let cfg = tiny();
+        let mut rng = Rng::new(8);
+        let st = ModelState::init(&cfg, &mut rng);
+        let path = std::env::temp_dir()
+            .join(format!("losia_legacy_{}.bin", std::process::id()));
+        write_legacy(&st, &path);
+        let cap = crate::util::warn::capture();
+        let back = ModelState::load(&path, &cfg).unwrap();
+        let warns = cap.drain();
+        let _ = std::fs::remove_file(&path);
+        assert!(
+            warns.iter().any(|w| w.contains("pre-durability")),
+            "expected a legacy-format warning, got {warns:?}"
+        );
+        for ((n0, t0), (n1, t1)) in st.params.iter().zip(&back.params)
+        {
+            assert_eq!(n0, n1);
+            assert_eq!(t0.data, t1.data);
+        }
+    }
+
+    #[test]
+    fn truncated_state_file_is_a_typed_error() {
+        let cfg = tiny();
+        let mut rng = Rng::new(9);
+        let st = ModelState::init(&cfg, &mut rng);
+        let path = std::env::temp_dir().join(format!(
+            "losia_truncated_{}.bin",
+            std::process::id()
+        ));
+        st.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 10]).unwrap();
+        let err = ModelState::load(&path, &cfg).unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        use crate::util::error::TrainError;
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::Truncated {
+                file,
+                expected,
+                available,
+                ..
+            }) => {
+                assert!(file.contains("losia_truncated"));
+                assert!(expected > available);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_state_file_is_a_crc_mismatch() {
+        let cfg = tiny();
+        let mut rng = Rng::new(10);
+        let st = ModelState::init(&cfg, &mut rng);
+        let path = std::env::temp_dir().join(format!(
+            "losia_corrupt_{}.bin",
+            std::process::id()
+        ));
+        st.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let res = ModelState::load(&path, &cfg);
+        let _ = std::fs::remove_file(&path);
+        let err = match res {
+            // the flipped bit usually only breaks a CRC …
+            Err(e) => e,
+            Ok(_) => panic!("corruption must not load cleanly"),
+        };
+        // … but may also corrupt a length/shape word first; either
+        // way the load fails — when it reaches the CRC, the error is
+        // the typed mismatch
+        use crate::util::error::TrainError;
+        if let Some(TrainError::CrcMismatch { file, .. }) =
+            err.downcast_ref::<TrainError>()
+        {
+            assert!(file.contains("losia_corrupt"));
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_under_an_injected_partial_write() {
+        let _guard =
+            match crate::util::faultpoint::ENV_LOCK.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        let cfg = tiny();
+        let mut rng = Rng::new(11);
+        let st = ModelState::init(&cfg, &mut rng);
+        let path = std::env::temp_dir().join(format!(
+            "losia_atomic_{}.bin",
+            std::process::id()
+        ));
+        st.save(&path).unwrap();
+        let v1 = std::fs::read(&path).unwrap();
+        // second save dies mid-write: previous file must still load
+        std::env::set_var(
+            crate::util::faultpoint::ENV,
+            "save@0:partial",
+        );
+        let mut st2 = st.clone();
+        st2.params[0].1.data[0] += 1.0;
+        assert!(st2.save(&path).is_err());
+        std::env::remove_var(crate::util::faultpoint::ENV);
+        assert_eq!(std::fs::read(&path).unwrap(), v1);
+        let back = ModelState::load(&path, &cfg).unwrap();
+        assert_eq!(back.params[0].1.data[0], st.params[0].1.data[0]);
+        let _ = std::fs::remove_file(&path);
+        let _ =
+            std::fs::remove_file(crate::util::durable::tmp_path(&path));
     }
 
     #[test]

@@ -30,6 +30,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::TrainConfig;
+use crate::coordinator::checkpoint::{
+    self, CheckpointConfig, CheckpointWriter,
+};
 use crate::coordinator::rewarm::LrSchedule;
 use crate::coordinator::state::ModelState;
 use crate::data::{Batch, BatchPrefetcher, Batcher};
@@ -39,8 +42,9 @@ use crate::runtime::kernels;
 use crate::runtime::pipeline::{PipelineConfig, StepPipeline};
 use crate::runtime::{ExecSnapshot, Runtime};
 use crate::session::observer::{
-    DpEvent, ExecEvent, ObserverSet, PipelineEvent,
+    CheckpointEvent, DpEvent, ExecEvent, ObserverSet, PipelineEvent,
 };
+use crate::util::warn;
 
 pub struct Trainer<'rt> {
     pub rt: &'rt Runtime,
@@ -129,25 +133,82 @@ impl<'rt> Trainer<'rt> {
         let dp_cfg = DpConfig::resolve(&self.tc);
         let pipe_cfg = PipelineConfig::resolve(&self.tc);
         pipe_cfg.validate(self.rt, &dp_cfg)?;
-        let tokens = self.rt.cfg.tokens_per_step()
-            * if dp_cfg.enabled() { dp_cfg.shards } else { 1 };
+        let shards = if dp_cfg.enabled() { dp_cfg.shards } else { 1 };
+        let tokens = self.rt.cfg.tokens_per_step() * shards;
         let mut exec = ExecTracker::new(self.rt);
-        self.driver.prepare(state)?;
+        let ck_cfg = CheckpointConfig::resolve(&self.tc);
+        let method = self.driver.method().name();
+        let mut ckpt = ck_cfg.enabled().then(|| {
+            CheckpointWriter::new(
+                ck_cfg.clone(),
+                &self.rt.cfg.name,
+                method,
+                self.tc.seed,
+                shards,
+            )
+        });
+        // ---- resume: restore instead of prepare ----------------------
+        // A resumed run swaps in the checkpointed model state and the
+        // driver's serialized optimizer/selection state, then fast-
+        // forwards the batch streams below — bitwise identical to the
+        // uninterrupted run (`tests/checkpoint_parity.rs`).
+        let mut start = 0usize;
+        let mut resumed = false;
+        if ck_cfg.resume {
+            match checkpoint::load_latest(&ck_cfg.dir, &self.rt.cfg)? {
+                Some((ck, path)) => {
+                    ck.validate(method, self.tc.seed, shards)?;
+                    anyhow::ensure!(
+                        ck.step <= self.tc.steps,
+                        "checkpoint {} is at step {}, past this run's \
+                         {} steps",
+                        path.display(),
+                        ck.step,
+                        self.tc.steps
+                    );
+                    start = ck.step;
+                    *state = ck.state;
+                    // restore, NOT prepare: prepare mutates the
+                    // backbone for some methods (PiSSA's SVD
+                    // subtraction, DoRA's magnitude init) and the
+                    // checkpointed state already carries that
+                    self.driver.restore(&ck.driver_blob, state)?;
+                    resumed = true;
+                    obs.emit_checkpoint(&CheckpointEvent {
+                        step: start,
+                        bytes: 0,
+                        path: path.display().to_string(),
+                        resume: true,
+                    });
+                }
+                None => warn::warn(format!(
+                    "resume requested but {} holds no loadable \
+                     checkpoint; starting fresh",
+                    ck_cfg.dir.display()
+                )),
+            }
+        }
+        if !resumed {
+            self.driver.prepare(state)?;
+        }
         // initial subnet selections installed at construction time
+        // (already consumed pre-checkpoint on the resume path, where
+        // restore clears them)
         for ev in self.driver.drain_events() {
             obs.emit_relocalize(&ev);
         }
-        // prepare-time uploads (LoRA/LoSiA-Pro bind their static
-        // parameter set here) are attributed to step 0
-        exec.emit(self.rt, 0, obs);
+        // prepare/restore-time uploads (LoRA/LoSiA-Pro bind their
+        // static parameter set here) are attributed to the first step
+        exec.emit(self.rt, start, obs);
         if pipe_cfg.enabled {
             self.pipelined_loop(
                 state, batcher, obs, &dp_cfg, &pipe_cfg, tokens,
-                &mut exec,
+                &mut exec, start, &mut ckpt,
             )?;
         } else {
             self.synchronous_loop(
                 state, batcher, obs, &dp_cfg, tokens, &mut exec,
+                start, &mut ckpt,
             )?;
         }
         // merge external adapters into the backbone (paper protocol:
@@ -174,6 +235,7 @@ impl<'rt> Trainer<'rt> {
         let workers = sharded.worker_nanos.len().max(1);
         let worker_nanos = sharded.worker_nanos.clone();
         let r0 = Instant::now();
+        crate::util::faultpoint::hit("reduce", t)?;
         let (reduced, frame_bytes) = dp::reduce(sharded.shards)?;
         let reduce_nanos = r0.elapsed().as_nanos() as u64;
         obs.emit_dp(&DpEvent {
@@ -187,6 +249,7 @@ impl<'rt> Trainer<'rt> {
         self.driver.apply_frames(state, reduced, t, lr)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn synchronous_loop(
         &mut self,
         state: &mut ModelState,
@@ -195,13 +258,29 @@ impl<'rt> Trainer<'rt> {
         dp_cfg: &DpConfig,
         tokens: usize,
         exec: &mut ExecTracker,
+        start: usize,
+        ckpt: &mut Option<CheckpointWriter>,
     ) -> Result<()> {
         let mut shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
             batcher.shard(dp_cfg.shards)?
         } else {
             Vec::new()
         };
-        for t in 0..self.tc.steps {
+        // fast-forward a resumed run: the batch sequence is a pure
+        // function of (seed, shards, draw count), so discarding the
+        // first `start` draws replays the uninterrupted stream exactly
+        if dp_cfg.enabled() {
+            for b in &mut shard_batchers {
+                for _ in 0..start {
+                    b.skip_batch();
+                }
+            }
+        } else {
+            for _ in 0..start {
+                batcher.skip_batch();
+            }
+        }
+        for t in start..self.tc.steps {
             let lr = self.schedule.lr(t);
             let t0 = Instant::now();
             let loss = if dp_cfg.enabled() {
@@ -222,7 +301,9 @@ impl<'rt> Trainer<'rt> {
                 self.driver.step(state, &batch, t, lr)?
             };
             let secs = t0.elapsed().as_secs_f64();
-            self.end_step(state, obs, exec, t, loss, lr, secs, tokens);
+            self.end_step(
+                state, obs, exec, ckpt, t, loss, lr, secs, tokens,
+            )?;
         }
         Ok(())
     }
@@ -244,18 +325,27 @@ impl<'rt> Trainer<'rt> {
         pipe_cfg: &PipelineConfig,
         tokens: usize,
         exec: &mut ExecTracker,
+        start: usize,
+        ckpt: &mut Option<CheckpointWriter>,
     ) -> Result<()> {
         // identical shard split to the synchronous loop; one "shard"
         // (the parent batcher itself) when dp is off, so the batch
         // byte stream matches the legacy path exactly
-        let shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
+        let mut shard_batchers: Vec<Batcher> = if dp_cfg.enabled() {
             batcher.shard(dp_cfg.shards)?
         } else {
             vec![batcher]
         };
+        // fast-forward a resumed run before the prefetch worker takes
+        // the batchers (same discipline as the synchronous loop)
+        for b in &mut shard_batchers {
+            for _ in 0..start {
+                b.skip_batch();
+            }
+        }
         let prefetch = BatchPrefetcher::new(
             shard_batchers,
-            self.tc.steps,
+            self.tc.steps - start,
             pipe_cfg.queue_depth,
         )?;
         let mut sets = Vec::with_capacity(pipe_cfg.queue_depth);
@@ -266,7 +356,7 @@ impl<'rt> Trainer<'rt> {
         let budget = pipe_cfg.main_thread_budget();
         let prefetch_threads = pipe_cfg.prefetch_threads();
         kernels::with_thread_budget(budget, || -> Result<()> {
-            for t in 0..self.tc.steps {
+            for t in start..self.tc.steps {
                 let lr = self.schedule.lr(t);
                 let (batches, stagers, staged_bytes) = pipe.next()?;
                 let stall_nanos = pipe.last_stall_nanos();
@@ -300,36 +390,51 @@ impl<'rt> Trainer<'rt> {
                     staged_bytes,
                 });
                 self.end_step(
-                    state, obs, exec, t, loss, lr, secs, tokens,
-                );
+                    state, obs, exec, ckpt, t, loss, lr, secs, tokens,
+                )?;
             }
             Ok(())
         })
     }
 
-    /// Post-step reporting shared by both loops.
+    /// Post-step reporting shared by both loops, plus the periodic
+    /// durable checkpoint (the one place a `LOSIACK1` record is cut).
     #[allow(clippy::too_many_arguments)]
     fn end_step(
         &mut self,
-        _state: &mut ModelState,
+        state: &mut ModelState,
         obs: &mut ObserverSet,
         exec: &mut ExecTracker,
+        ckpt: &mut Option<CheckpointWriter>,
         t: usize,
         loss: f64,
         lr: f64,
         secs: f64,
         tokens: usize,
-    ) {
+    ) -> Result<()> {
         for ev in self.driver.drain_events() {
             obs.emit_relocalize(&ev);
         }
         exec.emit(self.rt, t, obs);
         obs.emit_step(t, loss, lr, secs, tokens);
+        if let Some(cw) = ckpt {
+            if cw.due(t) {
+                let blob = self.driver.snapshot()?;
+                let (path, bytes) = cw.write(state, t, &blob)?;
+                obs.emit_checkpoint(&CheckpointEvent {
+                    step: t + 1,
+                    bytes,
+                    path: path.display().to_string(),
+                    resume: false,
+                });
+            }
+        }
         if self.tc.log_every > 0 && t % self.tc.log_every == 0 {
             eprintln!(
                 "[train:{}] step {t:>5} loss {loss:.4} lr {lr:.2e}",
                 self.driver.method().name(),
             );
         }
+        Ok(())
     }
 }

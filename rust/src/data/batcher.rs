@@ -210,6 +210,23 @@ impl Batcher {
             seq: self.seq,
         }
     }
+
+    /// Advance the draw state exactly as one [`Self::next_batch`]
+    /// call would — same cursor walk, same epoch-boundary reshuffles —
+    /// without packing any tensors. Checkpoint resume fast-forwards
+    /// rebuilt shard batchers through the already-trained steps with
+    /// this (the batcher state after step t is a pure function of the
+    /// constructor inputs and the draw count), pinned bitwise by
+    /// `skip_batch_matches_draw_and_discard` below.
+    pub fn skip_batch(&mut self) {
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                self.rng.shuffle(&mut self.order);
+            }
+            self.cursor += 1;
+        }
+    }
 }
 
 // ------------------------------------------------------------- prefetch
@@ -226,7 +243,7 @@ impl Batcher {
 /// Pinned by `prefetched_groups_match_inline_draws_bytewise` below and
 /// `tests/pipeline_parity.rs`.
 pub struct BatchPrefetcher {
-    rx: Option<std::sync::mpsc::Receiver<Vec<Batch>>>,
+    rx: Option<std::sync::mpsc::Receiver<Result<Vec<Batch>>>>,
     worker: Option<std::thread::JoinHandle<Vec<Batcher>>>,
     remaining: usize,
     last_stall_nanos: u64,
@@ -251,12 +268,22 @@ impl BatchPrefetcher {
             .name("losia-prefetch".into())
             .spawn(move || {
                 let mut batchers = batchers;
-                for _ in 0..groups {
+                for g in 0..groups {
+                    // crash-safety fault site: an `error` fault flows
+                    // through the queue as a typed error; a `panic`
+                    // fault exercises the join-based containment in
+                    // `next_group`
+                    if let Err(e) =
+                        crate::util::faultpoint::hit("prefetch-worker", g)
+                    {
+                        let _ = tx.send(Err(e));
+                        break;
+                    }
                     let group: Vec<Batch> = batchers
                         .iter_mut()
                         .map(Batcher::next_batch)
                         .collect();
-                    if tx.send(group).is_err() {
+                    if tx.send(Ok(group)).is_err() {
                         // consumer dropped the queue (early stop)
                         break;
                     }
@@ -287,12 +314,30 @@ impl BatchPrefetcher {
         );
         let rx = self.rx.as_ref().expect("receiver lives until drop");
         let t0 = std::time::Instant::now();
-        let group = rx.recv().map_err(|_| {
-            anyhow::anyhow!("prefetch: pack worker exited early")
-        })?;
+        let group = match rx.recv() {
+            Ok(Ok(g)) => g,
+            Ok(Err(e)) => return Err(e),
+            // channel closed without a result: join the worker so a
+            // panic surfaces as the typed containment error instead
+            // of a poisoned-channel mystery (and no thread leaks)
+            Err(_) => return Err(self.worker_exit_error()),
+        };
         self.last_stall_nanos = t0.elapsed().as_nanos() as u64;
         self.remaining -= 1;
         Ok(group)
+    }
+
+    /// The worker died before delivering: distinguish a panic (typed
+    /// [`crate::util::error::TrainError::WorkerPanic`]) from a clean
+    /// early exit. Always joins — the thread is gone either way.
+    fn worker_exit_error(&mut self) -> anyhow::Error {
+        match self.worker.take().map(|h| h.join()) {
+            Some(Err(_)) => crate::util::error::TrainError::WorkerPanic {
+                site: "prefetch-worker".to_string(),
+            }
+            .into(),
+            _ => anyhow::anyhow!("prefetch: pack worker exited early"),
+        }
     }
 
     /// Wall time the last [`Self::next_group`] spent blocked on the
@@ -301,11 +346,20 @@ impl BatchPrefetcher {
         self.last_stall_nanos
     }
 
-    /// Shut the worker down and recover the shard batchers.
+    /// Shut the worker down and recover the shard batchers. A worker
+    /// that panicked has no batchers to return; that is warned, not
+    /// swallowed (the panic itself already surfaced as a typed error
+    /// from [`Self::next_group`]).
     pub fn into_batchers(mut self) -> Vec<Batcher> {
         self.rx.take(); // unblocks a worker mid-send
         match self.worker.take() {
-            Some(h) => h.join().unwrap_or_default(),
+            Some(h) => h.join().unwrap_or_else(|_| {
+                crate::util::warn::warn(
+                    "prefetch: pack worker panicked; shard batchers \
+                     were lost",
+                );
+                Vec::new()
+            }),
             None => Vec::new(),
         }
     }
@@ -566,6 +620,85 @@ mod tests {
         let pf = BatchPrefetcher::new(vec![b], 3, 2).unwrap();
         let shards = pf.into_batchers();
         assert_eq!(shards.len(), 1);
+    }
+
+    #[test]
+    fn skip_batch_matches_draw_and_discard() {
+        // skipping N batches must leave the state machine bitwise
+        // identical to drawing-and-discarding N batches — including
+        // across epoch-boundary reshuffles (7 examples, batch 2: the
+        // boundary falls mid-batch)
+        for skips in [0usize, 1, 3, 7, 11] {
+            let mut drawn = Batcher::new(tagged(7), 2, 8, 3).unwrap();
+            let mut skipped = Batcher::new(tagged(7), 2, 8, 3).unwrap();
+            for _ in 0..skips {
+                let _ = drawn.next_batch();
+                skipped.skip_batch();
+            }
+            for _ in 0..4 {
+                assert_eq!(
+                    batch_bytes(&drawn.next_batch()),
+                    batch_bytes(&skipped.next_batch()),
+                    "divergence after {skips} skips"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefetch_error_fault_flows_through_the_queue() {
+        let _guard = crate::util::faultpoint::ENV_LOCK.lock().unwrap();
+        std::env::set_var(
+            crate::util::faultpoint::ENV,
+            "prefetch-worker@1:error",
+        );
+        let b = Batcher::new(tagged(8), 2, 8, 1).unwrap();
+        let mut pf = BatchPrefetcher::new(vec![b], 4, 1).unwrap();
+        pf.next_group().unwrap(); // group 0 is clean
+        let err = pf.next_group().unwrap_err();
+        std::env::remove_var(crate::util::faultpoint::ENV);
+        match err.downcast_ref::<crate::util::error::TrainError>() {
+            Some(crate::util::error::TrainError::FaultInjected {
+                site,
+                step,
+            }) => {
+                assert_eq!(site, "prefetch-worker");
+                assert_eq!(*step, 1);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prefetch_worker_panic_is_contained_and_typed() {
+        let _guard = crate::util::faultpoint::ENV_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        std::env::set_var(
+            crate::util::faultpoint::ENV,
+            "prefetch-worker@0:panic",
+        );
+        let b = Batcher::new(tagged(8), 2, 8, 1).unwrap();
+        let mut pf = BatchPrefetcher::new(vec![b], 4, 1).unwrap();
+        let err = pf.next_group().unwrap_err();
+        match err.downcast_ref::<crate::util::error::TrainError>() {
+            Some(crate::util::error::TrainError::WorkerPanic {
+                site,
+            }) => assert_eq!(site, "prefetch-worker"),
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // tearing down a prefetcher whose worker panicked before it was
+        // ever polled: the batchers are gone — warned, not fatal
+        let b = Batcher::new(tagged(8), 2, 8, 1).unwrap();
+        let pf = BatchPrefetcher::new(vec![b], 4, 1).unwrap();
+        let cap = crate::util::warn::capture();
+        assert!(pf.into_batchers().is_empty());
+        std::env::remove_var(crate::util::faultpoint::ENV);
+        let warns = cap.drain();
+        assert!(
+            warns.iter().any(|w| w.contains("panicked")),
+            "expected a lost-batchers warning, got {warns:?}"
+        );
     }
 
     #[test]

@@ -5,6 +5,8 @@
 //! losia train --config tiny --method losia-pro --task modmath \
 //!             --steps 200 --lr 1e-3 --time-slot 20 \
 //!             [--workers N] [--dp-shards N] [--pipeline on|off] \
+//!             [--checkpoint-every N] [--checkpoint-dir DIR] \
+//!             [--checkpoint-keep K] [--resume] \
 //!             [--save-state model.bin] [--report out.json] [--json]
 //! losia eval  --config tiny --task modmath [--state model.bin] [--no-gen]
 //! losia serve --config tiny --tenants 4 --requests 16 \
@@ -63,6 +65,24 @@ fn session_from_args(args: &Args) -> Result<losia::SessionBuilder<'static>> {
                 "--pipeline expects on|off, got {other:?}"
             ),
         });
+    }
+    if let Some(n) = args.get("checkpoint-every") {
+        b = b.checkpoint_every(
+            n.parse()
+                .context("--checkpoint-every expects an integer")?,
+        );
+    }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        b = b.checkpoint_dir(dir);
+    }
+    if let Some(k) = args.get("checkpoint-keep") {
+        b = b.checkpoint_keep(
+            k.parse()
+                .context("--checkpoint-keep expects an integer")?,
+        );
+    }
+    if args.has_flag("resume") {
+        b = b.resume(true);
     }
     if let Some(path) = args.get("state") {
         b = b.initial_state(path);
@@ -215,6 +235,26 @@ fn cmd_info(args: &Args) -> Result<()> {
         for p in &report.exec {
             println!("  exec {}", p.summary_line());
         }
+        match &report.checkpoint {
+            None => println!(
+                "  checkpoints: none (run without --checkpoint-every \
+                 / --resume, or an older report)"
+            ),
+            Some(ck) => {
+                if let Some(step) = ck.resume_step {
+                    println!("  checkpoints: resumed at step {step}");
+                }
+                println!(
+                    "  checkpoints: {} written ({:.1} KB){}",
+                    ck.writes,
+                    ck.bytes as f64 / 1024.0,
+                    match &ck.last_path {
+                        Some(p) => format!(", newest {p}"),
+                        None => String::new(),
+                    }
+                );
+            }
+        }
         return Ok(());
     }
     let cfg_name = args.get_or("config", "tiny");
@@ -352,7 +392,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::parse(&["remat", "json", "no-gen"]);
+    let args = Args::parse(&["remat", "json", "no-gen", "resume"]);
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
@@ -366,6 +406,8 @@ fn main() -> Result<()> {
                  [--save-state PATH] [--report PATH] [--json] \
                  [--backend ref|pjrt|auto] [--workers N] \
                  [--dp-shards N] [--pipeline on|off] \
+                 [--checkpoint-every N] [--checkpoint-dir DIR] \
+                 [--checkpoint-keep K] [--resume] \
                  [--tenants N] [--requests N] \
                  [--prompt-len N] [--max-new N]"
             );

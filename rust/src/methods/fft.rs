@@ -9,8 +9,10 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::config::{Method, TrainConfig};
+use crate::coordinator::checkpoint;
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::util::durable::{SectionReader, SectionWriter};
 use crate::data::Batch;
 use crate::methods::{batch_stagers, grads_artifact, Driver};
 use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
@@ -69,11 +71,11 @@ impl Driver for FftDriver {
         &mut self,
         state: &ModelState,
         batches: &[Batch],
-        _t: usize,
+        t: usize,
     ) -> Result<ShardedGrads> {
         let pipelined = self.pipelined;
         let (shards, worker_nanos) =
-            dp::run_sharded(&mut self.plans, batches, |_, plan, batch| {
+            dp::run_sharded(&mut self.plans, batches, t, |_, plan, batch| {
                 plan.bind_params(state)?;
                 if !pipelined {
                     plan.bind_batch(batch)?;
@@ -138,5 +140,48 @@ impl Driver for FftDriver {
             .iter()
             .map(|(name, st)| (name.clone(), 4 * st.m.len() as u64))
             .collect()
+    }
+
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        let mut w = SectionWriter::new(&mut buf);
+        w.u32(self.adam.len() as u32)?;
+        for (name, a) in &self.adam {
+            w.str(name)?;
+            checkpoint::write_adam(&mut w, a)?;
+        }
+        w.end_section()?;
+        drop(w);
+        Ok(buf)
+    }
+
+    fn restore(
+        &mut self,
+        blob: &[u8],
+        _state: &ModelState,
+    ) -> Result<()> {
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(blob),
+            "driver snapshot (FFT)",
+        );
+        r.section("adam");
+        let count = r.u32()? as usize;
+        anyhow::ensure!(
+            count == self.adam.len(),
+            "checkpoint has {count} Adam entries, this run expects {}",
+            self.adam.len()
+        );
+        for _ in 0..count {
+            let name = r.str()?;
+            let a = self.adam.get_mut(&name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint names unknown parameter {name:?}"
+                )
+            })?;
+            checkpoint::read_adam_into(&mut r, a)?;
+        }
+        r.end_section()?;
+        // no static bindings: FFT re-uploads the whole state per step
+        Ok(())
     }
 }

@@ -13,8 +13,10 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::coordinator::checkpoint;
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::util::durable::{SectionReader, SectionWriter};
 use crate::data::Batch;
 use crate::methods::{batch_stagers, grads_artifact, Driver};
 use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
@@ -115,12 +117,12 @@ impl Driver for GaloreDriver {
         &mut self,
         state: &ModelState,
         batches: &[Batch],
-        _t: usize,
+        t: usize,
     ) -> Result<ShardedGrads> {
         let pipelined = self.pipelined;
         let (plans, cfg) = (&mut self.plans, &self.cfg);
         let (shards, worker_nanos) =
-            dp::run_sharded(plans, batches, |_, plan, batch| {
+            dp::run_sharded(plans, batches, t, |_, plan, batch| {
                 for kind in &cfg.linear_kinds {
                     plan.bind_f32(kind, state.get(kind))?;
                 }
@@ -239,5 +241,70 @@ impl Driver for GaloreDriver {
         let lm = self.cfg.d_model * self.cfg.vocab;
         set.push(("lm_head".to_string(), 4 * lm as u64));
         set
+    }
+
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        let mut w = SectionWriter::new(&mut buf);
+        w.u32(self.projectors.len() as u32)?;
+        for ((kind, layer), p) in &self.projectors {
+            w.str(kind)?;
+            w.u64(*layer as u64)?;
+            checkpoint::write_tensor(&mut w, p)?;
+        }
+        w.end_section()?;
+        w.u32(self.adam.len() as u32)?;
+        for ((kind, layer), a) in &self.adam {
+            w.str(kind)?;
+            w.u64(*layer as u64)?;
+            checkpoint::write_adam(&mut w, a)?;
+        }
+        w.end_section()?;
+        checkpoint::write_adam(&mut w, &self.lm_adam)?;
+        w.end_section()?;
+        drop(w);
+        Ok(buf)
+    }
+
+    fn restore(
+        &mut self,
+        blob: &[u8],
+        state: &ModelState,
+    ) -> Result<()> {
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(blob),
+            "driver snapshot (GaLore)",
+        );
+        r.section("projectors");
+        self.projectors.clear();
+        let np = r.u32()? as usize;
+        for _ in 0..np {
+            let kind = r.str()?;
+            let layer = r.u64()? as usize;
+            let p = checkpoint::read_tensor(&mut r)?;
+            self.projectors.insert((kind, layer), p);
+        }
+        r.end_section()?;
+        r.section("adam");
+        self.adam.clear();
+        let na = r.u32()? as usize;
+        for _ in 0..na {
+            let kind = r.str()?;
+            let layer = r.u64()? as usize;
+            let a = checkpoint::read_adam(&mut r, self.hp)?;
+            self.adam.insert((kind, layer), a);
+        }
+        r.end_section()?;
+        r.section("lm_adam");
+        checkpoint::read_adam_into(&mut r, &mut self.lm_adam)?;
+        r.end_section()?;
+        // same static rebinding as prepare — the frozen set is pure
+        // backbone, untouched by training
+        for plan in &mut self.plans {
+            for name in FROZEN {
+                plan.bind_param_auto(name, state.get(name))?;
+            }
+        }
+        Ok(())
     }
 }

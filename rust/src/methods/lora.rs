@@ -13,8 +13,10 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::coordinator::checkpoint;
 use crate::coordinator::state::ModelState;
 use crate::coordinator::subnet::{AdamParams, AdamState};
+use crate::util::durable::{SectionReader, SectionWriter};
 use crate::data::Batch;
 use crate::methods::{batch_stagers, grads_artifact, Driver};
 use crate::runtime::dp::{self, Frame, GradFrames, ShardedGrads};
@@ -256,12 +258,12 @@ impl Driver for LoraDriver {
         &mut self,
         _state: &ModelState,
         batches: &[Batch],
-        _t: usize,
+        t: usize,
     ) -> Result<ShardedGrads> {
         let pipelined = self.pipelined;
         let (plans, adapters) = (&mut self.plans, &self.adapters);
         let (shards, worker_nanos) =
-            dp::run_sharded(plans, batches, |_, plan, batch| {
+            dp::run_sharded(plans, batches, t, |_, plan, batch| {
                 for (name, t) in adapters {
                     plan.bind_f32(name, t)?;
                 }
@@ -328,5 +330,86 @@ impl Driver for LoraDriver {
             .iter()
             .map(|(name, t)| (name.clone(), 4 * t.len() as u64))
             .collect()
+    }
+
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        let mut w = SectionWriter::new(&mut buf);
+        w.u32(self.adapters.len() as u32)?;
+        for (name, t) in &self.adapters {
+            w.str(name)?;
+            checkpoint::write_tensor(&mut w, t)?;
+        }
+        w.end_section()?;
+        w.u32(self.adam.len() as u32)?;
+        for (name, a) in &self.adam {
+            w.str(name)?;
+            checkpoint::write_adam(&mut w, a)?;
+        }
+        w.end_section()?;
+        drop(w);
+        Ok(buf)
+    }
+
+    fn restore(
+        &mut self,
+        blob: &[u8],
+        state: &ModelState,
+    ) -> Result<()> {
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(blob),
+            "driver snapshot (LoRA)",
+        );
+        r.section("adapters");
+        let count = r.u32()? as usize;
+        anyhow::ensure!(
+            count == self.adapters.len(),
+            "checkpoint has {count} adapter tensors, this run expects \
+             {} (DoRA/method mismatch?)",
+            self.adapters.len()
+        );
+        for _ in 0..count {
+            let name = r.str()?;
+            let t = checkpoint::read_tensor(&mut r)?;
+            let slot = self.adapters.get_mut(&name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint names unknown adapter {name:?}"
+                )
+            })?;
+            anyhow::ensure!(
+                t.shape == slot.shape,
+                "checkpointed adapter {name:?} has shape {:?}, this \
+                 run expects {:?}",
+                t.shape,
+                slot.shape
+            );
+            *slot = t;
+        }
+        r.end_section()?;
+        r.section("adam");
+        let count = r.u32()? as usize;
+        anyhow::ensure!(
+            count == self.adam.len(),
+            "checkpoint has {count} Adam entries, this run expects {}",
+            self.adam.len()
+        );
+        for _ in 0..count {
+            let name = r.str()?;
+            let a = self.adam.get_mut(&name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint names unknown Adam entry {name:?}"
+                )
+            })?;
+            checkpoint::read_adam_into(&mut r, a)?;
+        }
+        r.end_section()?;
+        // re-upload the frozen backbone, but do NOT run prepare: the
+        // checkpointed state already carries PiSSA's principal-
+        // component subtraction, and the adapters map already carries
+        // PiSSA/DoRA initialisation — prepare would apply both twice
+        for plan in &mut self.plans {
+            plan.bind_params(state)?;
+        }
+        Ok(())
     }
 }

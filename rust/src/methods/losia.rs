@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 use anyhow::Result;
 
 use crate::config::{Method, ModelCfg, TrainConfig};
+use crate::coordinator::checkpoint;
 use crate::coordinator::importance::{ImportanceAccum, ImportanceMode};
 use crate::coordinator::localize::{localize, localize_columns, Selection};
 use crate::coordinator::rewarm::Rewarmer;
@@ -38,6 +39,7 @@ use crate::runtime::{
     ExecPlan, OutputHandle, QTensor, Runtime, Stager,
 };
 use crate::tensor::Tensor;
+use crate::util::durable::{SectionReader, SectionWriter};
 use crate::util::rng::Rng;
 
 pub struct LosiaDriver {
@@ -794,7 +796,7 @@ impl Driver for LosiaDriver {
                 &self.delta_out,
             );
             let (shards, worker_nanos) =
-                dp::run_sharded(plans, batches, |_, plan, batch| {
+                dp::run_sharded(plans, batches, t, |_, plan, batch| {
                     let (loss, outs, pg, lmg) = Self::run_pro_on(
                         plan, cfg, deltas, delta_out, probe_layer,
                         batch, pipelined,
@@ -822,7 +824,7 @@ impl Driver for LosiaDriver {
             let pipelined = self.pipelined;
             let plans = &mut self.plans;
             let (shards, worker_nanos) =
-                dp::run_sharded(plans, batches, |_, plan, batch| {
+                dp::run_sharded(plans, batches, t, |_, plan, batch| {
                     let (loss, grads) =
                         Self::run_full_on(plan, state, batch, pipelined)?;
                     let frames = grads
@@ -1047,6 +1049,209 @@ impl Driver for LosiaDriver {
                 })
                 .collect()
         }
+    }
+
+    fn snapshot(&self) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        let mut w = SectionWriter::new(&mut buf);
+        // subnets, layer-major in linear-kind ABI order (the same
+        // iteration order restore uses — never BTreeMap order, so the
+        // layout is pinned by the config, not the map)
+        for layer in &self.subnets {
+            for kind in &self.cfg.linear_kinds {
+                let st = &layer[kind];
+                checkpoint::write_usizes(&mut w, &st.sel.rho)?;
+                checkpoint::write_usizes(&mut w, &st.sel.gamma)?;
+                checkpoint::write_adam(&mut w, &st.adam)?;
+            }
+        }
+        w.end_section()?;
+        // Pro's pending device-frame deltas (empty for host-gather)
+        w.u32(self.deltas.len() as u32)?;
+        for kind in &self.cfg.linear_kinds {
+            if let Some(d) = self.deltas.get(kind) {
+                w.str(kind)?;
+                checkpoint::write_tensor(&mut w, d)?;
+            }
+        }
+        checkpoint::write_tensor(&mut w, &self.delta_out)?;
+        w.end_section()?;
+        // output-layer subnet
+        checkpoint::write_usizes(&mut w, &self.lm_sel)?;
+        checkpoint::write_adam(&mut w, &self.lm_adam)?;
+        w.u32(self.lm_full_adam.is_some() as u32)?;
+        if let Some(a) = &self.lm_full_adam {
+            checkpoint::write_adam(&mut w, a)?;
+        }
+        w.end_section()?;
+        // importance accumulators for the in-flight profiling window
+        match &self.accums {
+            Some((g, map)) => {
+                w.u32(1)?;
+                w.u64(*g as u64)?;
+                w.u32(map.len() as u32)?;
+                for (kind, a) in map {
+                    w.str(kind)?;
+                    checkpoint::write_accum(&mut w, a)?;
+                }
+            }
+            None => w.u32(0)?,
+        }
+        w.end_section()?;
+        // SL-ablation accumulators (all layers profile simultaneously)
+        w.u32(self.sl_accums.len() as u32)?;
+        for layer in &self.sl_accums {
+            w.u32(layer.len() as u32)?;
+            for (kind, a) in layer {
+                w.str(kind)?;
+                checkpoint::write_accum(&mut w, a)?;
+            }
+        }
+        w.end_section()?;
+        drop(w);
+        Ok(buf)
+    }
+
+    fn restore(
+        &mut self,
+        blob: &[u8],
+        state: &ModelState,
+    ) -> Result<()> {
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(blob),
+            "driver snapshot (LoSiA)",
+        );
+        r.section("subnets");
+        for layer in &mut self.subnets {
+            for kind in &self.cfg.linear_kinds {
+                let st = layer.get_mut(kind).unwrap();
+                let rho = checkpoint::read_usizes(&mut r)?;
+                let gamma = checkpoint::read_usizes(&mut r)?;
+                anyhow::ensure!(
+                    rho.len() == st.sel.rho.len()
+                        && gamma.len() == st.sel.gamma.len(),
+                    "checkpointed subnet for {kind:?} selects \
+                     ({}, {}) neurons, this run expects ({}, {}) \
+                     (rank-factor mismatch?)",
+                    rho.len(),
+                    gamma.len(),
+                    st.sel.rho.len(),
+                    st.sel.gamma.len()
+                );
+                // install the selection directly — relocalize() would
+                // reset the Adam moments we are about to load
+                st.sel.rho = rho;
+                st.sel.gamma = gamma;
+                checkpoint::read_adam_into(&mut r, &mut st.adam)?;
+            }
+        }
+        r.end_section()?;
+        r.section("deltas");
+        let nd = r.u32()? as usize;
+        anyhow::ensure!(
+            nd == self.deltas.len(),
+            "checkpoint has {nd} delta frames, this run expects {} \
+             (losia/losia-pro mismatch?)",
+            self.deltas.len()
+        );
+        for _ in 0..nd {
+            let kind = r.str()?;
+            let d = checkpoint::read_tensor(&mut r)?;
+            let slot = self.deltas.get_mut(&kind).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint names unknown delta frame {kind:?}"
+                )
+            })?;
+            anyhow::ensure!(
+                d.shape == slot.shape,
+                "checkpointed delta frame {kind:?} has shape {:?}, \
+                 this run expects {:?}",
+                d.shape,
+                slot.shape
+            );
+            *slot = d;
+        }
+        let d_out = checkpoint::read_tensor(&mut r)?;
+        anyhow::ensure!(
+            d_out.shape == self.delta_out.shape,
+            "checkpointed output delta has shape {:?}, this run \
+             expects {:?}",
+            d_out.shape,
+            self.delta_out.shape
+        );
+        self.delta_out = d_out;
+        r.end_section()?;
+        r.section("lm");
+        let lm_sel = checkpoint::read_usizes(&mut r)?;
+        anyhow::ensure!(
+            lm_sel.len() == self.lm_sel.len(),
+            "checkpointed γ_out selects {} columns, this run expects \
+             {}",
+            lm_sel.len(),
+            self.lm_sel.len()
+        );
+        self.lm_sel = lm_sel;
+        checkpoint::read_adam_into(&mut r, &mut self.lm_adam)?;
+        let has_full = r.u32()? != 0;
+        anyhow::ensure!(
+            has_full == self.lm_full_adam.is_some(),
+            "checkpoint and this run disagree on the FFTO ablation \
+             (checkpoint: {has_full}, run: {})",
+            self.lm_full_adam.is_some()
+        );
+        if let Some(a) = &mut self.lm_full_adam {
+            checkpoint::read_adam_into(&mut r, a)?;
+        }
+        r.end_section()?;
+        r.section("accums");
+        self.accums = if r.u32()? != 0 {
+            let g = r.u64()? as usize;
+            let count = r.u32()? as usize;
+            anyhow::ensure!(
+                count <= self.cfg.linear_kinds.len() + 1,
+                "driver snapshot (LoSiA): implausible accumulator \
+                 count {count} (file is corrupt)"
+            );
+            let mut map = BTreeMap::new();
+            for _ in 0..count {
+                let kind = r.str()?;
+                map.insert(kind, checkpoint::read_accum(&mut r)?);
+            }
+            Some((g, map))
+        } else {
+            None
+        };
+        r.end_section()?;
+        r.section("sl_accums");
+        let layers = r.u32()? as usize;
+        anyhow::ensure!(
+            layers == 0 || layers == self.cfg.n_layers,
+            "checkpoint has SL accumulators for {layers} layers, this \
+             run has {}",
+            self.cfg.n_layers
+        );
+        self.sl_accums = (0..layers)
+            .map(|_| {
+                let count = r.u32()? as usize;
+                let mut map = BTreeMap::new();
+                for _ in 0..count {
+                    let kind = r.str()?;
+                    map.insert(kind, checkpoint::read_accum(&mut r)?);
+                }
+                Ok(map)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        r.end_section()?;
+        // the events queued so far described pre-checkpoint history
+        // that the resumed observer stream must not replay
+        self.events.clear();
+        if self.pro {
+            // same static uploads as prepare — against the restored
+            // backbone and the just-restored (ρ, γ) selections
+            self.bind_backbone(state)?;
+            self.bind_indices()?;
+        }
+        Ok(())
     }
 }
 

@@ -133,6 +133,24 @@ pub trait Driver {
         Vec::new()
     }
 
+    /// Serialize the driver's resumable state — optimizer moments,
+    /// adapter/subnet tensors, importance accumulators — into a
+    /// self-contained CRC-sectioned blob (the payload embedded in a
+    /// `LOSIACK1` checkpoint). Pure read; must not touch device state.
+    fn snapshot(&self) -> Result<Vec<u8>>;
+
+    /// Rebuild from a blob written by [`Driver::snapshot`] under the
+    /// same config/method/seed, then re-bind static device state
+    /// against `state`. Called **instead of** [`Driver::prepare`] on
+    /// resume: prepare mutates the backbone for some methods (PiSSA's
+    /// SVD subtraction, DoRA's magnitude init), and the checkpointed
+    /// state already carries those mutations.
+    fn restore(
+        &mut self,
+        blob: &[u8],
+        state: &ModelState,
+    ) -> Result<()>;
+
     /// Per-step inputs that are **prefetchable**: computable for step
     /// N+1 before step N's update phase ran. For every current method
     /// that is exactly the batch grid — the LoSiA-Pro `dws_*` frames,

@@ -58,6 +58,7 @@
 //! `kernel_threads() / W` split is computed on the training thread,
 //! the dp workers see the reduced budget automatically.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
@@ -67,6 +68,8 @@ use crate::data::Batch;
 use crate::runtime::backend::{ExecPlan, OutputHandle, Runtime};
 use crate::runtime::kernels;
 use crate::tensor::Tensor;
+use crate::util::error::TrainError;
+use crate::util::faultpoint;
 
 /// Resolved data-parallel configuration for one run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -250,9 +253,16 @@ pub fn reduce(shards: Vec<GradFrames>) -> Result<(GradFrames, u64)> {
 /// calling thread with no cap. Results come back in shard order
 /// either way; since `f`'s output is a pure function of
 /// `(shard index, bindings)`, the worker count is invisible in them.
+///
+/// `t` is the 0-based training step — it arms the `dp-worker` fault
+/// site and labels contained panics. A panic inside `f` (on any
+/// worker) is caught after every worker finished its block and joined,
+/// then surfaced as [`TrainError::WorkerPanic`] — no thread leaks, no
+/// poisoned state, and the other workers' shards complete normally.
 pub fn run_sharded<T, F>(
     plans: &mut [ExecPlan],
     batches: &[Batch],
+    t: usize,
     f: F,
 ) -> Result<(Vec<T>, Vec<u64>)>
 where
@@ -266,7 +276,14 @@ where
         let t0 = Instant::now();
         let mut out = Vec::with_capacity(s);
         for (i, b) in batches.iter().enumerate() {
-            out.push(f(i, &mut plans[0], b)?);
+            faultpoint::hit("dp-worker", t)?;
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                f(i, &mut plans[0], b)
+            }))
+            .map_err(|_| TrainError::WorkerPanic {
+                site: "dp-worker".into(),
+            })?;
+            out.push(r?);
         }
         return Ok((out, vec![t0.elapsed().as_nanos() as u64]));
     }
@@ -274,10 +291,12 @@ where
     let mut results: Vec<Option<Result<T>>> =
         (0..s).map(|_| None).collect();
     let mut nanos = vec![0u64; w];
+    let mut panicked = vec![false; w];
     std::thread::scope(|scope| {
         let mut plans_rest: &mut [ExecPlan] = plans;
         let mut res_rest: &mut [Option<Result<T>>] = &mut results;
         let mut nanos_rest: &mut [u64] = &mut nanos;
+        let mut panic_rest: &mut [bool] = &mut panicked;
         for wi in 0..w {
             let lo = s * wi / w;
             let hi = s * (wi + 1) / w;
@@ -289,19 +308,37 @@ where
             let (busy, nr) =
                 nanos_rest.split_first_mut().expect("slot per worker");
             nanos_rest = nr;
+            let (poisoned, xr) =
+                panic_rest.split_first_mut().expect("flag per worker");
+            panic_rest = xr;
             let fref = &f;
             scope.spawn(move || {
                 let t0 = Instant::now();
-                kernels::with_thread_budget(budget, || {
-                    for (k, slot) in chunk.iter_mut().enumerate() {
-                        let i = lo + k;
-                        *slot = Some(fref(i, plan, &batches[i]));
-                    }
-                });
+                // contain panics inside the worker so the scope joins
+                // every thread normally and the training thread can
+                // surface one typed error instead of re-panicking
+                let caught = catch_unwind(AssertUnwindSafe(|| {
+                    kernels::with_thread_budget(budget, || {
+                        for (k, slot) in chunk.iter_mut().enumerate() {
+                            let i = lo + k;
+                            *slot =
+                                Some(faultpoint::hit("dp-worker", t).and_then(
+                                    |()| fref(i, plan, &batches[i]),
+                                ));
+                        }
+                    });
+                }));
+                *poisoned = caught.is_err();
                 *busy = t0.elapsed().as_nanos() as u64;
             });
         }
     });
+    if panicked.iter().any(|&p| p) {
+        return Err(TrainError::WorkerPanic {
+            site: "dp-worker".into(),
+        }
+        .into());
+    }
     let mut out = Vec::with_capacity(s);
     for r in results {
         out.push(r.expect("worker filled every slot")?);

@@ -70,6 +70,8 @@ use crate::data::{Batch, BatchPrefetcher};
 use crate::runtime::backend::{Runtime, Stager};
 use crate::runtime::dp::DpConfig;
 use crate::runtime::kernels;
+use crate::util::error::TrainError;
+use crate::util::faultpoint;
 
 /// Resolved pipeline configuration for one run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -230,17 +232,37 @@ impl StepPipeline {
     /// The next step's staged group. Blocks when the workers fell
     /// behind; that blocked time is the step's exposed stall
     /// ([`Self::last_stall_nanos`]).
+    ///
+    /// When the stage worker died, the thread is joined here and a
+    /// panic is surfaced as [`TrainError::WorkerPanic`] — typed, with
+    /// no leaked thread, rather than a hang or an opaque recv error.
     pub fn next(&mut self) -> Result<(Vec<Batch>, Vec<Stager>, u64)> {
         let rx = self
             .full_rx
             .as_ref()
             .expect("full queue lives until drop");
         let t0 = Instant::now();
-        let msg = rx.recv().map_err(|_| {
-            anyhow::anyhow!(
-                "pipeline: stage worker exited without a result"
-            )
-        })?;
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => {
+                // the worker is gone; join it to learn whether it
+                // panicked or exited after sending its own error
+                let panicked = self
+                    .worker
+                    .take()
+                    .map(|h| h.join().is_err())
+                    .unwrap_or(false);
+                if panicked {
+                    return Err(TrainError::WorkerPanic {
+                        site: "stage-worker".into(),
+                    }
+                    .into());
+                }
+                return Err(anyhow::anyhow!(
+                    "pipeline: stage worker exited without a result"
+                ));
+            }
+        };
         self.last_stall_nanos = t0.elapsed().as_nanos() as u64;
         msg
     }
@@ -279,7 +301,16 @@ fn stage_loop(
     free_rx: &mpsc::Receiver<Vec<Stager>>,
     full_tx: &mpsc::SyncSender<FullMsg>,
 ) {
+    // 0-based index of the group being staged, counted from this
+    // run's first step — the step the `stage-worker` fault site arms
+    // against (a resumed run counts from its resume point)
+    let mut group_idx = 0usize;
     while prefetch.remaining() > 0 {
+        if let Err(e) = faultpoint::hit("stage-worker", group_idx) {
+            let _ = full_tx.send(Err(e));
+            return;
+        }
+        group_idx += 1;
         // take the group first: the pack worker keeps packing ahead
         // even while every staging set is in flight
         let group = match prefetch.next_group() {

@@ -23,7 +23,7 @@
 //! bindings (`tests/serve_parity.rs` pins the zero-static-upload
 //! invariant).
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, Read};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -32,9 +32,15 @@ use crate::config::ModelCfg;
 use crate::coordinator::state::ModelState;
 use crate::runtime::ExecPlan;
 use crate::tensor::Tensor;
+use crate::util::durable::{self, Header, SectionReader};
 
 const ADAPTER_MAGIC: &[u8; 8] = b"LOSIAAD1";
 const STATE_MAGIC: &[u8; 8] = b"LOSIAST1";
+
+/// Format version after the sentinel (v1 = sectioned CRC layout).
+/// Legacy files put the `adapter_mode` (1 or 2) where the sentinel
+/// would be, so the two layouts can never be confused.
+const ADAPTER_VERSION: u32 = 1;
 
 /// `adapter_mode` values of the `fwd_decode` ABI.
 pub const MODE_PLAIN: i32 = 0;
@@ -60,49 +66,23 @@ pub enum AdapterRecord {
     Delta(AdapterDelta),
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
-    let mut buf = [0u8; 4];
-    r.read_exact(&mut buf)?;
-    Ok(u32::from_le_bytes(buf))
-}
-
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut buf = [0u8; 8];
-    r.read_exact(&mut buf)?;
-    Ok(u64::from_le_bytes(buf))
-}
-
-fn read_name_shape<R: Read>(r: &mut R) -> Result<(String, Vec<usize>)> {
-    let nlen = read_u32(r)? as usize;
-    let mut nbuf = vec![0u8; nlen];
-    r.read_exact(&mut nbuf)?;
-    let name = String::from_utf8(nbuf)
-        .context("adapter record: non-utf8 tensor name")?;
-    let ndims = read_u32(r)? as usize;
+fn read_name_shape<R: Read>(
+    r: &mut SectionReader<R>,
+) -> Result<(String, Vec<usize>)> {
+    let name = r.str()?;
+    let ndims = r.u32()? as usize;
     let mut shape = Vec::with_capacity(ndims);
     for _ in 0..ndims {
-        shape.push(read_u64(r)? as usize);
+        shape.push(r.u64()? as usize);
     }
     Ok((name, shape))
 }
 
-fn write_name_shape<W: Write>(
-    w: &mut W,
-    name: &str,
-    shape: &[usize],
-) -> Result<()> {
-    w.write_all(&(name.len() as u32).to_le_bytes())?;
-    w.write_all(name.as_bytes())?;
-    w.write_all(&(shape.len() as u32).to_le_bytes())?;
-    for &d in shape {
-        w.write_all(&(d as u64).to_le_bytes())?;
-    }
-    Ok(())
-}
-
 impl AdapterRecord {
     /// Serialize to `path`. Full records delegate to the `LOSIAST1`
-    /// state format; compact deltas write a `LOSIAAD1` file.
+    /// state format; compact deltas write a `LOSIAAD1` file. Both
+    /// paths are atomic (tmp + fsync + rename) with per-section
+    /// CRC32s — a crash mid-save never tears an existing record.
     pub fn save(&self, path: &Path) -> Result<()> {
         match self {
             AdapterRecord::Full(state) => state.save(path),
@@ -110,33 +90,39 @@ impl AdapterRecord {
                 if let Some(dir) = path.parent() {
                     let _ = std::fs::create_dir_all(dir);
                 }
-                let f = std::fs::File::create(path).with_context(
-                    || format!("creating {}", path.display()),
-                )?;
-                let mut w = BufWriter::new(f);
-                w.write_all(ADAPTER_MAGIC)?;
-                w.write_all(&d.mode.to_le_bytes())?;
-                w.write_all(&(d.f32s.len() as u32).to_le_bytes())?;
-                for (name, t) in &d.f32s {
-                    write_name_shape(&mut w, name, &t.shape)?;
-                    let bytes: Vec<u8> = t
-                        .data
-                        .iter()
-                        .flat_map(|x| x.to_le_bytes())
-                        .collect();
-                    w.write_all(&bytes)?;
-                }
-                w.write_all(&(d.i32s.len() as u32).to_le_bytes())?;
-                for (name, shape, data) in &d.i32s {
-                    write_name_shape(&mut w, name, shape)?;
-                    let bytes: Vec<u8> = data
-                        .iter()
-                        .flat_map(|x| x.to_le_bytes())
-                        .collect();
-                    w.write_all(&bytes)?;
-                }
-                w.flush()?;
-                Ok(())
+                durable::atomic_write(path, "save", 0, |w| {
+                    durable::write_header(
+                        w,
+                        ADAPTER_MAGIC,
+                        ADAPTER_VERSION,
+                    )?;
+                    w.u32(d.mode as u32)?;
+                    w.u32(d.f32s.len() as u32)?;
+                    w.end_section()?;
+                    for (name, t) in &d.f32s {
+                        w.str(name)?;
+                        w.u32(t.shape.len() as u32)?;
+                        for &dim in &t.shape {
+                            w.u64(dim as u64)?;
+                        }
+                        w.f32s(&t.data)?;
+                        w.end_section()?;
+                    }
+                    w.u32(d.i32s.len() as u32)?;
+                    w.end_section()?;
+                    for (name, shape, data) in &d.i32s {
+                        w.str(name)?;
+                        w.u32(shape.len() as u32)?;
+                        for &dim in shape {
+                            w.u64(dim as u64)?;
+                        }
+                        for x in data {
+                            w.write_all(&x.to_le_bytes())?;
+                        }
+                        w.end_section()?;
+                    }
+                    Ok(())
+                })
             }
         }
     }
@@ -144,28 +130,58 @@ impl AdapterRecord {
     /// Load either record format, sniffing the 8-byte magic. Shape
     /// validation against the decode ABI happens at bind time, where
     /// the plan checks every named input against the manifest.
+    /// Records written before the durability rework (the mode word
+    /// directly after the magic, no CRCs) still load, with a one-line
+    /// warning.
     pub fn load(path: &Path, cfg: &ModelCfg) -> Result<AdapterRecord> {
+        {
+            let mut f = std::fs::File::open(path).with_context(
+                || format!("opening {}", path.display()),
+            )?;
+            let mut magic = [0u8; 8];
+            f.read_exact(&mut magic)?;
+            if &magic == STATE_MAGIC {
+                return Ok(AdapterRecord::Full(Box::new(
+                    ModelState::load(path, cfg)?,
+                )));
+            }
+            if &magic != ADAPTER_MAGIC {
+                bail!(
+                    "{} is neither a LoSiA state checkpoint nor an \
+                     adapter record (bad magic)",
+                    path.display()
+                );
+            }
+        }
         let f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
-        let mut r = BufReader::new(f);
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic == STATE_MAGIC {
-            drop(r);
-            return Ok(AdapterRecord::Full(Box::new(
-                ModelState::load(path, cfg)?,
-            )));
-        }
-        if &magic != ADAPTER_MAGIC {
-            bail!(
-                "{} is neither a LoSiA state checkpoint nor an \
-                 adapter record (bad magic)",
-                path.display()
-            );
-        }
-        let mut mbuf = [0u8; 4];
-        r.read_exact(&mut mbuf)?;
-        let mode = i32::from_le_bytes(mbuf);
+        let mut r = SectionReader::new(
+            BufReader::new(f),
+            path.display().to_string(),
+        );
+        let mode = match r.read_header(ADAPTER_MAGIC)? {
+            Header::Versioned(v) => {
+                if v > ADAPTER_VERSION {
+                    bail!(
+                        "{}: adapter format version {v} is newer \
+                         than this build understands (max \
+                         {ADAPTER_VERSION})",
+                        path.display()
+                    );
+                }
+                r.section("meta");
+                r.u32()? as i32
+            }
+            Header::Legacy(first) => {
+                crate::util::warn::warn(format!(
+                    "{}: pre-durability adapter record (no CRC \
+                     sections); loading without verification",
+                    path.display()
+                ));
+                r.section("meta");
+                first as i32
+            }
+        };
         if mode != MODE_LOSIA && mode != MODE_LORA {
             bail!(
                 "{}: adapter_mode {mode} out of range (1 = losia, \
@@ -173,24 +189,24 @@ impl AdapterRecord {
                 path.display()
             );
         }
-        let nf = read_u32(&mut r)? as usize;
+        let nf = r.u32()? as usize;
+        r.end_section()?;
         let mut f32s = Vec::with_capacity(nf);
-        for _ in 0..nf {
+        for i in 0..nf {
+            r.section(&format!("f32-tensor {i}"));
             let (name, shape) = read_name_shape(&mut r)?;
             let len: usize = shape.iter().product();
-            let mut bytes = vec![0u8; len * 4];
-            r.read_exact(&mut bytes)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|c| {
-                    f32::from_le_bytes([c[0], c[1], c[2], c[3]])
-                })
-                .collect();
+            let mut data = vec![0f32; len];
+            r.f32s(&mut data)?;
+            r.end_section()?;
             f32s.push((name, Tensor::from_vec(&shape, data)));
         }
-        let ni = read_u32(&mut r)? as usize;
+        r.section("index-count");
+        let ni = r.u32()? as usize;
+        r.end_section()?;
         let mut i32s = Vec::with_capacity(ni);
-        for _ in 0..ni {
+        for i in 0..ni {
+            r.section(&format!("i32-tensor {i}"));
             let (name, shape) = read_name_shape(&mut r)?;
             let len: usize = shape.iter().product();
             let mut bytes = vec![0u8; len * 4];
@@ -201,6 +217,7 @@ impl AdapterRecord {
                     i32::from_le_bytes([c[0], c[1], c[2], c[3]])
                 })
                 .collect();
+            r.end_section()?;
             i32s.push((name, shape, data));
         }
         Ok(AdapterRecord::Delta(AdapterDelta { mode, f32s, i32s }))
@@ -406,6 +423,45 @@ mod tests {
         assert_eq!(d2.f32s[0].1.data, delta.f32s[0].1.data);
         assert_eq!(d2.i32s, delta.i32s);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_adapter_record_loads_with_a_warning() {
+        // pre-PR-10 layout: magic, i32 mode, u32 nf, tensors (name,
+        // shape, raw f32s), u32 ni, i32 tensors — no sentinel, no CRC
+        let cfg = tiny();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(ADAPTER_MAGIC);
+        buf.extend_from_slice(&MODE_LORA.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one f32 tensor
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        buf.extend_from_slice(b"la_wq");
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&2u64.to_le_bytes());
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        for i in 0..6 {
+            buf.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        buf.extend_from_slice(&0u32.to_le_bytes()); // no i32 tensors
+        let dir = std::env::temp_dir().join("losia_adapter_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.adapter");
+        std::fs::write(&path, buf).unwrap();
+        let cap = crate::util::warn::capture();
+        let rec = AdapterRecord::load(&path, &cfg).unwrap();
+        let warns = cap.drain();
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(
+            warns.iter().any(|w| w.contains("pre-durability")),
+            "expected a legacy-format warning, got {warns:?}"
+        );
+        let AdapterRecord::Delta(d) = rec else {
+            panic!("loaded as full state");
+        };
+        assert_eq!(d.mode, MODE_LORA);
+        assert_eq!(d.f32s[0].0, "la_wq");
+        assert_eq!(d.f32s[0].1.shape, vec![2, 3]);
+        assert_eq!(d.f32s[0].1.data, vec![0., 1., 2., 3., 4., 5.]);
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! prompts, malformed requests) are captured through
 //! [`crate::util::warn`] instead of leaking to stderr, and surface via
 //! [`Scheduler::warnings`].
+//!
+//! Failures degrade per tenant, never per batch: an adapter that
+//! fails to activate (or an armed `adapter-activate` fault — see
+//! [`crate::util::faultpoint`]) rejects that tenant's in-flight and
+//! queued requests with a typed [`GenResult::error`], and every other
+//! tenant keeps decoding.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -48,6 +54,10 @@ pub struct GenResult {
     pub prefill_ns: u64,
     /// wall time of the decode step that produced each output token
     pub token_latencies_ns: Vec<u64>,
+    /// `Some` when the request was rejected (its tenant's adapter
+    /// failed to activate) — `output` holds whatever tokens were
+    /// produced before the failure
+    pub error: Option<String>,
 }
 
 struct RowState {
@@ -73,6 +83,11 @@ pub struct Scheduler<'rt> {
     rng: Rng,
     next_id: usize,
     ticks: u64,
+    /// activation attempts, successful or not — the step key of the
+    /// `adapter-activate` fault site (`ticks` would repeat after a
+    /// rejected activation, re-firing a step-pinned fault on the
+    /// next tenant)
+    activations: usize,
 }
 
 impl<'rt> Scheduler<'rt> {
@@ -97,6 +112,7 @@ impl<'rt> Scheduler<'rt> {
             rng: Rng::new(seed),
             next_id: 0,
             ticks: 0,
+            activations: 0,
         })
     }
 
@@ -182,6 +198,7 @@ impl<'rt> Scheduler<'rt> {
                         output: Vec::new(),
                         prefill_ns: 0,
                         token_latencies_ns: Vec::new(),
+                        error: None,
                     });
                     continue;
                 }
@@ -233,6 +250,27 @@ impl<'rt> Scheduler<'rt> {
             served.push(i);
         }
 
+        // Per-tenant containment: an adapter that fails to activate
+        // (including an armed `adapter-activate` fault — keyed by the
+        // activation-attempt counter) rejects only that tenant's
+        // requests with a typed per-request error; every other tenant
+        // keeps decoding. Probing first with a unit result keeps the
+        // binding borrow out of the rejection path.
+        let attempt = self.activations;
+        self.activations += 1;
+        let probe = crate::util::faultpoint::hit(
+            "adapter-activate",
+            attempt,
+        )
+        .and_then(|()| {
+            self.registry.activate(&tenant, &mut self.dec)?;
+            Ok(())
+        });
+        if let Err(e) = probe {
+            self.reject_tenant(&tenant, &e);
+            return Ok(true);
+        }
+        // re-activation of the already-active tenant is a no-op swap
         let binding =
             self.registry.activate(&tenant, &mut self.dec)?;
         let t0 = Instant::now();
@@ -278,10 +316,51 @@ impl<'rt> Scheduler<'rt> {
                     output: row.out,
                     prefill_ns: row.prefill_ns,
                     token_latencies_ns: row.latencies,
+                    error: None,
                 });
             }
         }
         Ok(true)
+    }
+
+    /// Degrade one tenant after its adapter failed to activate: every
+    /// in-flight row and queued request of that tenant completes with
+    /// a typed error (partial output preserved), its batch slots
+    /// free, and the scheduler moves on to the remaining tenants.
+    fn reject_tenant(&mut self, tenant: &str, err: &anyhow::Error) {
+        let msg = format!("adapter activation failed: {err:#}");
+        warn::warn(format!(
+            "[serve] tenant {tenant:?}: {msg}; rejecting its \
+             in-flight and queued requests"
+        ));
+        for slot in &mut self.rows {
+            if slot.as_ref().is_some_and(|r| r.tenant == tenant) {
+                let row = slot.take().unwrap();
+                self.results.push(GenResult {
+                    id: row.id,
+                    tenant: row.tenant,
+                    output: row.out,
+                    prefill_ns: row.prefill_ns,
+                    token_latencies_ns: row.latencies,
+                    error: Some(msg.clone()),
+                });
+            }
+        }
+        let queued = std::mem::take(&mut self.queue);
+        for req in queued {
+            if req.tenant == tenant {
+                self.results.push(GenResult {
+                    id: req.id,
+                    tenant: req.tenant,
+                    output: Vec::new(),
+                    prefill_ns: 0,
+                    token_latencies_ns: Vec::new(),
+                    error: Some(msg.clone()),
+                });
+            } else {
+                self.queue.push_back(req);
+            }
+        }
     }
 
     /// Warnings captured across `run()` calls so far.
@@ -321,6 +400,9 @@ impl<'rt> Scheduler<'rt> {
 #[derive(Debug, Clone)]
 pub struct ServeMetrics {
     pub requests: usize,
+    /// requests that ended with a per-request error (tenant adapter
+    /// failed to activate) instead of completing
+    pub rejected: usize,
     pub tokens: usize,
     pub ticks: u64,
     pub swaps: u64,
@@ -380,6 +462,10 @@ pub fn serve_metrics(
     let secs = wall_ns as f64 / 1e9;
     ServeMetrics {
         requests: results.len(),
+        rejected: results
+            .iter()
+            .filter(|r| r.error.is_some())
+            .count(),
         tokens,
         ticks,
         swaps,
@@ -394,5 +480,62 @@ pub fn serve_metrics(
         p90_ns: percentile(&lat, 90.0),
         p99_ns: percentile(&lat, 99.0),
         mean_latency_by_index_ns: mean_by_index,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::load::{
+        serve_runtime, synthetic_lora_record, synthetic_losia_record,
+    };
+    use crate::util::faultpoint;
+
+    /// An armed `adapter-activate` fault rejects exactly the tenant
+    /// whose activation failed — typed per-request errors, freed batch
+    /// slots — while the other tenant's requests complete normally.
+    #[test]
+    fn failed_activation_degrades_only_that_tenant() {
+        let _guard = match faultpoint::ENV_LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let rt = serve_runtime("tiny").unwrap();
+        let mut rng = Rng::new(5);
+        let base = ModelState::init(&rt.cfg, &mut rng);
+        let mut sched = Scheduler::new(&rt, &base, 0.0, 9).unwrap();
+        sched
+            .register("alpha", synthetic_losia_record(&rt.cfg, &mut rng))
+            .unwrap();
+        sched
+            .register("beta", synthetic_lora_record(&rt.cfg, &mut rng))
+            .unwrap();
+        let a = sched.submit("alpha", &[6, 7, 8], 4).unwrap();
+        let b = sched.submit("beta", &[9, 10, 11], 4).unwrap();
+        // alpha holds the lowest request id, so activation attempt 0
+        // is alpha's — arm the fault exactly there
+        std::env::set_var(faultpoint::ENV, "adapter-activate@0:error");
+        let run = sched.run();
+        std::env::remove_var(faultpoint::ENV);
+        let results = run.unwrap();
+        assert_eq!(results.len(), 2);
+        let ra = results.iter().find(|r| r.id == a).unwrap();
+        let rb = results.iter().find(|r| r.id == b).unwrap();
+        let msg = ra.error.as_deref().expect("alpha rejected");
+        assert!(
+            msg.contains("adapter activation failed"),
+            "typed rejection message: {msg}"
+        );
+        assert!(ra.output.is_empty());
+        assert!(rb.error.is_none(), "beta unaffected: {:?}", rb.error);
+        assert!(!rb.output.is_empty(), "beta decoded to completion");
+        let m = serve_metrics(&results, 1, sched.swaps(), 0, sched.ticks());
+        assert_eq!(m.rejected, 1);
+        assert_eq!(m.requests, 2);
+        assert!(
+            sched.warnings().iter().any(|w| w.contains("rejecting")),
+            "degradation is surfaced as a warning: {:?}",
+            sched.warnings()
+        );
     }
 }

@@ -35,12 +35,13 @@ pub mod registry;
 pub mod report;
 
 pub use observer::{
-    DpEvent, ExecEvent, Observer, ObserverSet, PipelineEvent,
-    SelectionEvent,
+    CheckpointEvent, DpEvent, ExecEvent, Observer, ObserverSet,
+    PipelineEvent, SelectionEvent,
 };
 pub use registry::TaskRegistry;
 pub use report::{
-    DpReport, ExecProfile, PipelineReport, RunReport, SequenceReport,
+    CheckpointReport, DpReport, ExecProfile, PipelineReport, RunReport,
+    SequenceReport,
 };
 
 use std::path::PathBuf;
@@ -167,6 +168,10 @@ pub struct SessionBuilder<'a> {
     workers: Option<usize>,
     dp_shards: Option<usize>,
     pipeline: Option<bool>,
+    checkpoint_every: Option<usize>,
+    checkpoint_dir: Option<PathBuf>,
+    checkpoint_keep: Option<usize>,
+    resume: Option<bool>,
     task: TaskChoice<'a>,
     registry: TaskRegistry,
     model_seed: Option<u64>,
@@ -199,6 +204,10 @@ impl<'a> SessionBuilder<'a> {
             workers: None,
             dp_shards: None,
             pipeline: None,
+            checkpoint_every: None,
+            checkpoint_dir: None,
+            checkpoint_keep: None,
+            resume: None,
             task: TaskChoice::None,
             registry: TaskRegistry::with_builtins(),
             model_seed: None,
@@ -357,6 +366,35 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Write a durable training checkpoint every `n` steps (0
+    /// disables). Overrides `LOSIA_CKPT_EVERY`.
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.checkpoint_every = Some(n);
+        self
+    }
+
+    /// Directory for durable checkpoints (default `checkpoints/`).
+    /// Overrides `LOSIA_CKPT_DIR`.
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Newest checkpoints retained after each write (min 1).
+    /// Overrides `LOSIA_CKPT_KEEP`.
+    pub fn checkpoint_keep(mut self, keep: usize) -> Self {
+        self.checkpoint_keep = Some(keep);
+        self
+    }
+
+    /// Resume from the newest loadable checkpoint before training —
+    /// bitwise identical to the uninterrupted run (pinned by
+    /// `tests/checkpoint_parity.rs`). Overrides `LOSIA_CKPT_RESUME`.
+    pub fn resume(mut self, on: bool) -> Self {
+        self.resume = Some(on);
+        self
+    }
+
     /// Training examples to generate per stage (default 2000).
     pub fn train_n(mut self, n: usize) -> Self {
         self.train_n = n;
@@ -440,8 +478,21 @@ impl<'a> SessionBuilder<'a> {
             );
             tc.dp_shards = s;
         }
-        if let Some(p) = self.pipeline {
-            tc.pipeline = Some(p);
+        if let Some(n) = self.checkpoint_every {
+            tc.checkpoint_every = Some(n);
+        }
+        if let Some(dir) = self.checkpoint_dir {
+            tc.checkpoint_dir = Some(dir);
+        }
+        if let Some(k) = self.checkpoint_keep {
+            ensure!(
+                k >= 1,
+                "session misuse: checkpoint_keep must be ≥ 1 (got {k})"
+            );
+            tc.checkpoint_keep = Some(k);
+        }
+        if let Some(r) = self.resume {
+            tc.resume = Some(r);
         }
         ensure!(
             tc.steps >= 1,
@@ -845,6 +896,14 @@ impl<'a> Session<'a> {
                     stall_secs: self.obs.pipeline.stall_secs,
                     staged_bytes: self.obs.pipeline.staged_bytes,
                 }
+            }),
+            checkpoint: (self.obs.checkpoint.writes > 0
+                || self.obs.checkpoint.resume_step.is_some())
+            .then(|| CheckpointReport {
+                writes: self.obs.checkpoint.writes,
+                bytes: self.obs.checkpoint.bytes,
+                last_path: self.obs.checkpoint.last_path.clone(),
+                resume_step: self.obs.checkpoint.resume_step,
             }),
         })
     }

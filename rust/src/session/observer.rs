@@ -124,6 +124,23 @@ pub struct PipelineEvent {
     pub staged_bytes: u64,
 }
 
+/// One durable-checkpoint interaction: a `LOSIACK1` record written
+/// after a step (`resume == false`), or a resume from one before the
+/// first step (`resume == true`). Emitted only when checkpointing is
+/// configured, so ordinary runs carry no checkpoint stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointEvent {
+    /// steps completed when the record was written / resumed from
+    /// (a checkpoint after 0-based step t carries `step == t + 1`)
+    pub step: usize,
+    /// bytes of the durable record (0 on resume events)
+    pub bytes: u64,
+    /// path of the checkpoint file
+    pub path: String,
+    /// true when this event reports a resume, not a write
+    pub resume: bool,
+}
+
 /// Fired between two stages of `Session::train_sequence`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TaskBoundaryEvent {
@@ -150,6 +167,7 @@ pub trait Observer {
     fn on_exec(&mut self, _ev: &ExecEvent) {}
     fn on_dp(&mut self, _ev: &DpEvent) {}
     fn on_pipeline(&mut self, _ev: &PipelineEvent) {}
+    fn on_checkpoint(&mut self, _ev: &CheckpointEvent) {}
     fn on_task_boundary(&mut self, _ev: &TaskBoundaryEvent) {}
     fn on_finalize(&mut self, _ev: &FinalizeEvent) {}
 }
@@ -426,6 +444,39 @@ impl Observer for PipelineProfileObserver {
     }
 }
 
+/// Accumulates durable-checkpoint stats for the current stage and
+/// feeds `RunReport::checkpoint`: how many `LOSIACK1` records were
+/// written, the bytes they moved, the newest on-disk path, and the
+/// step a resumed stage restarted from.
+#[derive(Debug, Default, Clone)]
+pub struct CheckpointProfileObserver {
+    /// checkpoint records written (0 ⇒ checkpointing never ran)
+    pub writes: usize,
+    /// total bytes across the written records
+    pub bytes: u64,
+    /// newest checkpoint written this stage
+    pub last_path: Option<String>,
+    /// steps already completed when the stage resumed (None for a
+    /// fresh start)
+    pub resume_step: Option<usize>,
+}
+
+impl Observer for CheckpointProfileObserver {
+    fn on_run_start(&mut self, _ev: &RunStartEvent<'_>) {
+        *self = Self::default();
+    }
+
+    fn on_checkpoint(&mut self, ev: &CheckpointEvent) {
+        if ev.resume {
+            self.resume_step = Some(ev.step);
+        } else {
+            self.writes += 1;
+            self.bytes += ev.bytes;
+            self.last_path = Some(ev.path.clone());
+        }
+    }
+}
+
 // ------------------------------------------------------------ dispatch
 
 /// The observer bundle a trainer reports into: the four stock
@@ -441,6 +492,7 @@ pub struct ObserverSet {
     pub exec: ExecProfileObserver,
     pub dp: DpProfileObserver,
     pub pipeline: PipelineProfileObserver,
+    pub checkpoint: CheckpointProfileObserver,
     pub extra: Vec<Box<dyn Observer>>,
 }
 
@@ -467,6 +519,7 @@ impl ObserverSet {
         self.exec.on_run_start(ev);
         self.dp.on_run_start(ev);
         self.pipeline.on_run_start(ev);
+        self.checkpoint.on_run_start(ev);
         for o in &mut self.extra {
             o.on_run_start(ev);
         }
@@ -480,6 +533,7 @@ impl ObserverSet {
         self.exec.on_exec(ev);
         self.dp.on_exec(ev);
         self.pipeline.on_exec(ev);
+        self.checkpoint.on_exec(ev);
         for o in &mut self.extra {
             o.on_exec(ev);
         }
@@ -493,6 +547,7 @@ impl ObserverSet {
         self.exec.on_dp(ev);
         self.dp.on_dp(ev);
         self.pipeline.on_dp(ev);
+        self.checkpoint.on_dp(ev);
         for o in &mut self.extra {
             o.on_dp(ev);
         }
@@ -506,8 +561,23 @@ impl ObserverSet {
         self.exec.on_pipeline(ev);
         self.dp.on_pipeline(ev);
         self.pipeline.on_pipeline(ev);
+        self.checkpoint.on_pipeline(ev);
         for o in &mut self.extra {
             o.on_pipeline(ev);
+        }
+    }
+
+    pub fn emit_checkpoint(&mut self, ev: &CheckpointEvent) {
+        self.loss.on_checkpoint(ev);
+        self.latency.on_checkpoint(ev);
+        self.memory.on_checkpoint(ev);
+        self.selection.on_checkpoint(ev);
+        self.exec.on_checkpoint(ev);
+        self.dp.on_checkpoint(ev);
+        self.pipeline.on_checkpoint(ev);
+        self.checkpoint.on_checkpoint(ev);
+        for o in &mut self.extra {
+            o.on_checkpoint(ev);
         }
     }
 
@@ -534,6 +604,7 @@ impl ObserverSet {
         self.exec.on_step(&ev);
         self.dp.on_step(&ev);
         self.pipeline.on_step(&ev);
+        self.checkpoint.on_step(&ev);
         for o in &mut self.extra {
             o.on_step(&ev);
         }
@@ -547,6 +618,7 @@ impl ObserverSet {
         self.exec.on_relocalize(ev);
         self.dp.on_relocalize(ev);
         self.pipeline.on_relocalize(ev);
+        self.checkpoint.on_relocalize(ev);
         for o in &mut self.extra {
             o.on_relocalize(ev);
         }
@@ -560,6 +632,7 @@ impl ObserverSet {
         self.exec.on_task_boundary(ev);
         self.dp.on_task_boundary(ev);
         self.pipeline.on_task_boundary(ev);
+        self.checkpoint.on_task_boundary(ev);
         for o in &mut self.extra {
             o.on_task_boundary(ev);
         }
@@ -577,6 +650,7 @@ impl ObserverSet {
         self.exec.on_finalize(&ev);
         self.dp.on_finalize(&ev);
         self.pipeline.on_finalize(&ev);
+        self.checkpoint.on_finalize(&ev);
         for o in &mut self.extra {
             o.on_finalize(&ev);
         }
@@ -665,6 +739,33 @@ mod tests {
         // one of two indices kept → 50% turnover
         o.on_relocalize(&sev(8, 0, "wq", vec![2, 3], false));
         assert!((o.mean_turnover().unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checkpoint_observer_splits_writes_from_resume() {
+        let mut o = CheckpointProfileObserver::default();
+        o.on_checkpoint(&CheckpointEvent {
+            step: 2,
+            bytes: 0,
+            path: "ckpt-00000002.losia".into(),
+            resume: true,
+        });
+        o.on_checkpoint(&CheckpointEvent {
+            step: 4,
+            bytes: 100,
+            path: "a".into(),
+            resume: false,
+        });
+        o.on_checkpoint(&CheckpointEvent {
+            step: 6,
+            bytes: 150,
+            path: "b".into(),
+            resume: false,
+        });
+        assert_eq!(o.resume_step, Some(2));
+        assert_eq!(o.writes, 2);
+        assert_eq!(o.bytes, 250);
+        assert_eq!(o.last_path.as_deref(), Some("b"));
     }
 
     #[test]

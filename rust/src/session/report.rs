@@ -210,6 +210,60 @@ impl PipelineReport {
     }
 }
 
+/// Durable-checkpoint stats for one stage. Present only when the
+/// stage wrote checkpoints or resumed from one; fed by the stock
+/// [`crate::session::observer::CheckpointProfileObserver`]. Mirrors
+/// the [`DpReport`] JSON contract: absent/null otherwise.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CheckpointReport {
+    /// durable checkpoints written during the stage
+    pub writes: usize,
+    /// total bytes those writes moved
+    pub bytes: u64,
+    /// path of the newest checkpoint written (`None` when the stage
+    /// only resumed and never reached another write)
+    pub last_path: Option<String>,
+    /// completed-step count the stage resumed from (`None` for fresh
+    /// starts)
+    pub resume_step: Option<usize>,
+}
+
+impl CheckpointReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("writes".into(), Json::Num(self.writes as f64));
+        m.insert("bytes".into(), Json::Num(self.bytes as f64));
+        m.insert(
+            "last_path".into(),
+            match &self.last_path {
+                Some(p) => Json::Str(p.clone()),
+                None => Json::Null,
+            },
+        );
+        m.insert(
+            "resume_step".into(),
+            opt_num(self.resume_step.map(|x| x as f64)),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(CheckpointReport {
+            writes: get_usize(j, "writes")?,
+            bytes: get_u64(j, "bytes")?,
+            last_path: match j.get("last_path") {
+                None | Some(Json::Null) => None,
+                Some(Json::Str(s)) => Some(s.clone()),
+                Some(other) => bail!(
+                    "report field \"last_path\": expected string or \
+                     null, got {other:?}"
+                ),
+            },
+            resume_step: get_opt_usize(j, "resume_step")?,
+        })
+    }
+}
+
 /// Summary of one training (or evaluation-only) stage.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
@@ -245,6 +299,10 @@ pub struct RunReport {
     /// step-pipeline stats (`None` when the pipelined loop never ran —
     /// including every report written before the pipeline existed)
     pub pipeline: Option<PipelineReport>,
+    /// durable-checkpoint stats (`None` when the stage neither wrote
+    /// nor resumed from a checkpoint — including every report written
+    /// before checkpointing existed)
+    pub checkpoint: Option<CheckpointReport>,
 }
 
 impl Default for RunReport {
@@ -271,6 +329,7 @@ impl Default for RunReport {
             exec: Vec::new(),
             dp: None,
             pipeline: None,
+            checkpoint: None,
         }
     }
 }
@@ -422,6 +481,13 @@ impl RunReport {
                 None => Json::Null,
             },
         );
+        m.insert(
+            "checkpoint".into(),
+            match &self.checkpoint {
+                Some(c) => c.to_json(),
+                None => Json::Null,
+            },
+        );
         Json::Obj(m)
     }
 
@@ -478,6 +544,11 @@ impl RunReport {
                 // older reports predate the step pipeline
                 None | Some(Json::Null) => None,
                 Some(p) => Some(PipelineReport::from_json(p)?),
+            },
+            checkpoint: match j.get("checkpoint") {
+                // older reports predate durable checkpoints
+                None | Some(Json::Null) => None,
+                Some(c) => Some(CheckpointReport::from_json(c)?),
             },
         })
     }
@@ -670,7 +741,47 @@ mod tests {
             }],
             dp: None,
             pipeline: None,
+            checkpoint: None,
         }
+    }
+
+    #[test]
+    fn checkpoint_block_round_trips_and_tolerates_old_reports() {
+        // None serializes as null and survives the round trip
+        let r = sample();
+        let s = r.to_json_string();
+        assert!(s.contains("\"checkpoint\":null"), "{s}");
+        let back = RunReport::from_json_str(&s).unwrap();
+        assert_eq!(back.checkpoint, None);
+        // a populated block round-trips field-for-field, including
+        // the resume-only shape (no writes, no last path)
+        for ck in [
+            CheckpointReport {
+                writes: 3,
+                bytes: 98304,
+                last_path: Some("ckpt/step-000012.losia-ckpt".into()),
+                resume_step: None,
+            },
+            CheckpointReport {
+                writes: 0,
+                bytes: 0,
+                last_path: None,
+                resume_step: Some(8),
+            },
+        ] {
+            let mut r = sample();
+            r.checkpoint = Some(ck);
+            let back =
+                RunReport::from_json_str(&r.to_json_string()).unwrap();
+            assert_eq!(back, r);
+        }
+        // reports written before checkpointing lack the key entirely
+        let mut j = sample().to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.remove("checkpoint");
+        }
+        let old = RunReport::from_json_str(&j.to_string()).unwrap();
+        assert_eq!(old.checkpoint, None);
     }
 
     #[test]

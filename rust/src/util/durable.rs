@@ -1,0 +1,672 @@
+//! Durable file I/O: atomic writes and CRC-checked sections.
+//!
+//! Every on-disk record the trainer can be killed around — model
+//! states (`LOSIAST1`), adapter records (`LOSIAAD1`), and training
+//! checkpoints (`LOSIACK1`) — goes through the same discipline:
+//!
+//! * **Atomic replace.** [`atomic_write`] writes `<name>.tmp` in the
+//!   destination directory, fsyncs, then renames over the target. A
+//!   crash mid-write leaves a torn `.tmp` and an intact previous
+//!   file; the destination path never holds partial bytes.
+//! * **Sectioned CRC32.** Payloads are written through a
+//!   [`SectionWriter`] that hashes bytes as they flow and appends a
+//!   4-byte IEEE CRC32 at each [`SectionWriter::end_section`]. The
+//!   [`SectionReader`] verifies each section and turns short reads
+//!   into typed [`TrainError::Truncated`] errors naming the file,
+//!   section, and byte counts (CRC failures get their own
+//!   [`TrainError::CrcMismatch`]).
+//! * **Versioned headers.** New-format files write the 8-byte magic,
+//!   then a `0xFFFF_FFFF` sentinel `u32`, then a format version.
+//!   Legacy (pre-CRC) files start their payload right after the
+//!   magic with a `u32` that can never be the sentinel (a parameter
+//!   count or adapter mode), so [`read_header`] distinguishes the two
+//!   and legacy records keep loading — without CRC verification and
+//!   with a one-line [`crate::util::warn`].
+//!
+//! Floats stream through fixed 16 KiB frames in both directions, so
+//! saving a large state never materializes a second full copy.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::error::TrainError;
+use crate::util::faultpoint::{self, FaultKind};
+
+/// First `u32` after the magic in versioned files. Legacy formats
+/// stored a parameter count or a 1/2 mode discriminant there, so the
+/// all-ones pattern is unreachable for them.
+pub const VERSION_SENTINEL: u32 = 0xFFFF_FFFF;
+
+/// f32 elements per streaming frame (16 KiB of bytes).
+const FRAME: usize = 4096;
+
+// ------------------------------------------------------------- crc32
+
+const fn make_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = make_crc_table();
+
+/// Streaming IEEE CRC32 (the zlib/PNG polynomial), hand-rolled — the
+/// crate has no checksum dependency and must not grow one.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+
+    fn reset(&mut self) {
+        self.state = 0xFFFF_FFFF;
+    }
+}
+
+/// One-shot convenience.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ----------------------------------------------------------- writing
+
+/// A writer that hashes every payload byte and can close out a
+/// section by appending its CRC32. The header helpers
+/// ([`write_header`]) write *outside* any section; everything else
+/// should land between section boundaries.
+pub struct SectionWriter<W: Write> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: Write> SectionWriter<W> {
+    pub fn new(inner: W) -> Self {
+        SectionWriter { inner, crc: Crc32::new() }
+    }
+
+    pub fn write_all(&mut self, buf: &[u8]) -> io::Result<()> {
+        self.crc.update(buf);
+        self.inner.write_all(buf)
+    }
+
+    pub fn u32(&mut self, v: u32) -> io::Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> io::Result<()> {
+        self.write_all(&v.to_le_bytes())
+    }
+
+    /// Length-prefixed UTF-8 string (u32 length).
+    pub fn str(&mut self, s: &str) -> io::Result<()> {
+        self.u32(s.len() as u32)?;
+        self.write_all(s.as_bytes())
+    }
+
+    /// Stream a float slice through a fixed 16 KiB frame — no
+    /// tensor-sized intermediate allocation.
+    pub fn f32s(&mut self, xs: &[f32]) -> io::Result<()> {
+        let mut buf = [0u8; 4 * FRAME];
+        for chunk in xs.chunks(FRAME) {
+            for (i, x) in chunk.iter().enumerate() {
+                buf[i * 4..i * 4 + 4]
+                    .copy_from_slice(&x.to_le_bytes());
+            }
+            self.write_all(&buf[..chunk.len() * 4])?;
+        }
+        Ok(())
+    }
+
+    /// Append the CRC32 of everything written since the last section
+    /// boundary (the CRC bytes themselves are not hashed) and start a
+    /// fresh section.
+    pub fn end_section(&mut self) -> io::Result<()> {
+        let crc = self.crc.finish();
+        self.inner.write_all(&crc.to_le_bytes())?;
+        self.crc.reset();
+        Ok(())
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+/// Write the versioned header: 8-byte magic, sentinel, version.
+pub fn write_header<W: Write>(
+    w: &mut SectionWriter<W>,
+    magic: &[u8; 8],
+    version: u32,
+) -> io::Result<()> {
+    w.write_all(magic)?;
+    w.u32(VERSION_SENTINEL)?;
+    w.u32(version)?;
+    // the header is self-framing; CRC coverage starts at section 0
+    w.crc.reset();
+    Ok(())
+}
+
+/// The tmp-file twin of `path` (same directory, so the final rename
+/// never crosses a filesystem boundary).
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|s| s.to_os_string())
+        .unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+pub fn is_tmp(path: &Path) -> bool {
+    path.extension().map_or(false, |e| e == "tmp")
+}
+
+/// Atomic file replace: write `<path>.tmp` through the supplied
+/// closure, flush + fsync, then rename over `path`. On any failure
+/// the destination is untouched (a torn `.tmp` may remain; readers
+/// skip them).
+///
+/// `site`/`step` name the fault point: `error`/`panic` faults fire
+/// before any byte is written, and a `partial` fault truncates the
+/// finished tmp file to half its length and fails *instead of
+/// renaming* — simulating a crash mid-write under the discipline.
+pub fn atomic_write<F>(
+    path: &Path,
+    site: &str,
+    step: usize,
+    body: F,
+) -> Result<()>
+where
+    F: FnOnce(&mut SectionWriter<BufWriter<&File>>) -> Result<()>,
+{
+    let partial = match faultpoint::armed(site, step) {
+        Some(FaultKind::Panic) => {
+            panic!("injected fault: panic at {site} (step {step})")
+        }
+        Some(FaultKind::Error) => {
+            return Err(TrainError::FaultInjected {
+                site: site.to_string(),
+                step,
+            }
+            .into());
+        }
+        Some(FaultKind::Partial) => true,
+        None => false,
+    };
+
+    let tmp = tmp_path(path);
+    let file = File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    {
+        let mut w = SectionWriter::new(BufWriter::new(&file));
+        body(&mut w)?;
+        w.into_inner().flush().with_context(|| {
+            format!("flushing {}", tmp.display())
+        })?;
+    }
+    if partial {
+        // crash simulation: half the bytes made it to disk, the
+        // rename never happened — the destination must stay intact
+        let len = file.metadata()?.len();
+        file.set_len(len / 2)?;
+        let _ = file.sync_all();
+        return Err(TrainError::FaultInjected {
+            site: site.to_string(),
+            step,
+        }
+        .into());
+    }
+    file.sync_all()
+        .with_context(|| format!("syncing {}", tmp.display()))?;
+    drop(file);
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} -> {}", tmp.display(), path.display())
+    })?;
+    // best-effort directory fsync so the rename itself is durable
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------- reading
+
+/// Header sniff result: a versioned (CRC-checked) file, or a legacy
+/// record whose first post-magic `u32` is returned for the caller to
+/// interpret (parameter count, adapter mode, …).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Header {
+    Versioned(u32),
+    Legacy(u32),
+}
+
+/// A reader that verifies per-section CRCs and converts short reads
+/// into typed errors naming the file and section.
+pub struct SectionReader<R: Read> {
+    inner: R,
+    crc: Crc32,
+    file: String,
+    section: String,
+    /// legacy files carry no section CRCs; [`Self::end_section`]
+    /// becomes a no-op
+    has_crc: bool,
+}
+
+impl<R: Read> SectionReader<R> {
+    pub fn new(inner: R, file: impl Into<String>) -> Self {
+        SectionReader {
+            inner,
+            crc: Crc32::new(),
+            file: file.into(),
+            section: "header".to_string(),
+            has_crc: true,
+        }
+    }
+
+    pub fn file(&self) -> &str {
+        &self.file
+    }
+
+    /// Enter a named section (labels truncation/CRC errors).
+    pub fn section(&mut self, name: &str) {
+        self.section = name.to_string();
+        self.crc.reset();
+    }
+
+    /// Read the magic + sniff the version sentinel. On a legacy file
+    /// CRC verification is disabled for the rest of the read.
+    pub fn read_header(&mut self, magic: &[u8; 8]) -> Result<Header> {
+        let mut got = [0u8; 8];
+        self.read_exact(&mut got)?;
+        if &got != magic {
+            anyhow::bail!(
+                "{}: bad magic (expected {:?})",
+                self.file,
+                String::from_utf8_lossy(magic)
+            );
+        }
+        let first = self.u32()?;
+        if first == VERSION_SENTINEL {
+            let version = self.u32()?;
+            self.crc.reset();
+            Ok(Header::Versioned(version))
+        } else {
+            self.has_crc = false;
+            Ok(Header::Legacy(first))
+        }
+    }
+
+    pub fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        let mut got = 0usize;
+        while got < buf.len() {
+            match self.inner.read(&mut buf[got..]) {
+                Ok(0) => {
+                    return Err(TrainError::Truncated {
+                        file: self.file.clone(),
+                        section: self.section.clone(),
+                        expected: buf.len() as u64,
+                        available: got as u64,
+                    }
+                    .into());
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "{}: reading section {:?}",
+                            self.file, self.section
+                        )
+                    });
+                }
+            }
+        }
+        self.crc.update(buf);
+        Ok(())
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Length-prefixed UTF-8 string. The length is capped so a
+    /// corrupt prefix cannot trigger a huge allocation.
+    pub fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        anyhow::ensure!(
+            len <= 1 << 20,
+            "{}: section {:?}: implausible string length {len} \
+             (file is corrupt)",
+            self.file,
+            self.section
+        );
+        let mut bytes = vec![0u8; len];
+        self.read_exact(&mut bytes)?;
+        String::from_utf8(bytes).with_context(|| {
+            format!(
+                "{}: section {:?}: non-UTF-8 string",
+                self.file, self.section
+            )
+        })
+    }
+
+    /// Fill a float slice through the same fixed frames the writer
+    /// used.
+    pub fn f32s(&mut self, out: &mut [f32]) -> Result<()> {
+        let mut buf = [0u8; 4 * FRAME];
+        for chunk in out.chunks_mut(FRAME) {
+            let n = chunk.len() * 4;
+            self.read_exact(&mut buf[..n])?;
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = f32::from_le_bytes([
+                    buf[i * 4],
+                    buf[i * 4 + 1],
+                    buf[i * 4 + 2],
+                    buf[i * 4 + 3],
+                ]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Verify the section CRC (no-op on legacy files).
+    pub fn end_section(&mut self) -> Result<()> {
+        if !self.has_crc {
+            return Ok(());
+        }
+        let computed = self.crc.finish();
+        let mut b = [0u8; 4];
+        // the stored CRC is framing, not payload — read it without
+        // feeding the hasher
+        let section = self.section.clone();
+        self.read_exact(&mut b)?;
+        let stored = u32::from_le_bytes(b);
+        if stored != computed {
+            return Err(TrainError::CrcMismatch {
+                file: self.file.clone(),
+                section,
+            }
+            .into());
+        }
+        self.crc.reset();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // the classic IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // streaming == one-shot
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn sections_round_trip() {
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            write_header(&mut w, b"LOSIATST", 1).unwrap();
+            w.u64(42).unwrap();
+            w.str("hello").unwrap();
+            w.end_section().unwrap();
+            w.f32s(&[1.0, -2.5, 3.25]).unwrap();
+            w.end_section().unwrap();
+        }
+        let mut r =
+            SectionReader::new(std::io::Cursor::new(&buf), "test");
+        assert_eq!(
+            r.read_header(b"LOSIATST").unwrap(),
+            Header::Versioned(1)
+        );
+        r.section("meta");
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.str().unwrap(), "hello");
+        r.end_section().unwrap();
+        r.section("data");
+        let mut xs = [0f32; 3];
+        r.f32s(&mut xs).unwrap();
+        assert_eq!(xs, [1.0, -2.5, 3.25]);
+        r.end_section().unwrap();
+    }
+
+    #[test]
+    fn large_float_blocks_cross_frames() {
+        let xs: Vec<f32> =
+            (0..3 * FRAME + 17).map(|i| i as f32 * 0.5).collect();
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            w.f32s(&xs).unwrap();
+            w.end_section().unwrap();
+        }
+        let mut r =
+            SectionReader::new(std::io::Cursor::new(&buf), "test");
+        r.section("data");
+        let mut back = vec![0f32; xs.len()];
+        r.f32s(&mut back).unwrap();
+        r.end_section().unwrap();
+        assert_eq!(xs, back);
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error() {
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            w.u64(7).unwrap();
+            w.end_section().unwrap();
+        }
+        buf.truncate(5);
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(&buf),
+            "short.bin",
+        );
+        r.section("meta");
+        let err = r.u64().unwrap_err();
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::Truncated {
+                file,
+                section,
+                expected,
+                available,
+            }) => {
+                assert_eq!(file, "short.bin");
+                assert_eq!(section, "meta");
+                assert_eq!(*expected, 8);
+                assert_eq!(*available, 5);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corruption_is_a_crc_mismatch() {
+        let mut buf = Vec::new();
+        {
+            let mut w = SectionWriter::new(&mut buf);
+            w.u64(7).unwrap();
+            w.end_section().unwrap();
+        }
+        buf[2] ^= 0x40; // flip a payload bit
+        let mut r = SectionReader::new(
+            std::io::Cursor::new(&buf),
+            "corrupt.bin",
+        );
+        r.section("meta");
+        assert_eq!(r.u64().unwrap(), 7 | (0x40 << 16));
+        let err = r.end_section().unwrap_err();
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::CrcMismatch { file, section }) => {
+                assert_eq!(file, "corrupt.bin");
+                assert_eq!(section, "meta");
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn legacy_header_disables_crc() {
+        // legacy layout: magic, then payload starting with a plain
+        // count — no sentinel, no CRCs
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"LOSIATST");
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&9u64.to_le_bytes());
+        let mut r =
+            SectionReader::new(std::io::Cursor::new(&buf), "old.bin");
+        assert_eq!(
+            r.read_header(b"LOSIATST").unwrap(),
+            Header::Legacy(3)
+        );
+        r.section("body");
+        assert_eq!(r.u64().unwrap(), 9);
+        // no CRC bytes to consume
+        r.end_section().unwrap();
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let buf = b"GARBAGE!rest".to_vec();
+        let mut r =
+            SectionReader::new(std::io::Cursor::new(&buf), "x.bin");
+        let err = r.read_header(b"LOSIATST").unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_failures_leave_target_intact() {
+        let dir = std::env::temp_dir()
+            .join(format!("losia_durable_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("record.bin");
+
+        atomic_write(&path, "save", 0, |w| {
+            w.u64(1)?;
+            w.end_section()?;
+            Ok(())
+        })
+        .unwrap();
+        let v1 = std::fs::read(&path).unwrap();
+
+        // a failing body must not disturb the existing file
+        let err = atomic_write(&path, "save", 1, |w| {
+            w.u64(2)?;
+            anyhow::bail!("boom")
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("boom"));
+        assert_eq!(std::fs::read(&path).unwrap(), v1);
+
+        // a successful rewrite replaces it
+        atomic_write(&path, "save", 2, |w| {
+            w.u64(2)?;
+            w.end_section()?;
+            Ok(())
+        })
+        .unwrap();
+        assert_ne!(std::fs::read(&path).unwrap(), v1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partial_fault_tears_the_tmp_not_the_target() {
+        let _guard = match crate::util::faultpoint::ENV_LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("losia_partial_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("record.bin");
+        atomic_write(&path, "save", 0, |w| {
+            w.u64(1)?;
+            w.end_section()?;
+            Ok(())
+        })
+        .unwrap();
+        let v1 = std::fs::read(&path).unwrap();
+
+        std::env::set_var(faultpoint::ENV, "save@1:partial");
+        let err = atomic_write(&path, "save", 1, |w| {
+            w.u64(2)?;
+            w.end_section()?;
+            Ok(())
+        })
+        .unwrap_err();
+        std::env::remove_var(faultpoint::ENV);
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::FaultInjected { site, step }) => {
+                assert_eq!(site, "save");
+                assert_eq!(*step, 1);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+        // destination intact, torn tmp half-length
+        assert_eq!(std::fs::read(&path).unwrap(), v1);
+        let tmp = tmp_path(&path);
+        assert!(is_tmp(&tmp));
+        let torn = std::fs::metadata(&tmp).unwrap().len();
+        assert_eq!(torn, v1.len() as u64 / 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

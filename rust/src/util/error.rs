@@ -1,0 +1,113 @@
+//! Typed training/runtime errors.
+//!
+//! Lives in `util` (the lowest layer) so `runtime`, `data`, and
+//! `coordinator` can all construct the same variants without a
+//! dependency cycle. Errors flow through `anyhow` everywhere; tests
+//! and callers that need to branch on the kind downcast:
+//!
+//! ```ignore
+//! match err.downcast_ref::<TrainError>() {
+//!     Some(TrainError::WorkerPanic { site }) => ...,
+//!     _ => ...,
+//! }
+//! ```
+
+use std::fmt;
+
+/// Failures with a contract attached: worker panics are contained
+/// (drained, joined, no leaked threads) and surfaced as
+/// [`TrainError::WorkerPanic`]; corrupted or truncated durable files
+/// name the file, section, and byte counts instead of bubbling a raw
+/// `UnexpectedEof`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrainError {
+    /// A worker thread (dp shard worker, pipeline stage worker, batch
+    /// prefetcher) panicked. The launcher converted the panic into
+    /// this error after joining the thread — no channel is left
+    /// poisoned and no thread leaked.
+    WorkerPanic { site: String },
+    /// An injected fault (see `util::faultpoint`) fired at a named
+    /// site. Only ever produced when `LOSIA_FAULT` is set.
+    FaultInjected { site: String, step: usize },
+    /// A durable file ended before a section's payload did.
+    Truncated {
+        file: String,
+        section: String,
+        expected: u64,
+        available: u64,
+    },
+    /// A section's stored CRC32 does not match its payload.
+    CrcMismatch { file: String, section: String },
+}
+
+impl fmt::Display for TrainError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrainError::WorkerPanic { site } => {
+                write!(f, "worker panic contained at {site}")
+            }
+            TrainError::FaultInjected { site, step } => {
+                write!(f, "injected fault at {site} (step {step})")
+            }
+            TrainError::Truncated {
+                file,
+                section,
+                expected,
+                available,
+            } => write!(
+                f,
+                "{file}: truncated in section {section:?} \
+                 (wanted {expected} bytes, {available} available)"
+            ),
+            TrainError::CrcMismatch { file, section } => write!(
+                f,
+                "{file}: CRC32 mismatch in section {section:?} \
+                 (file is corrupt)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_name_the_site_and_file() {
+        let e = TrainError::WorkerPanic { site: "dp-worker".into() };
+        assert!(e.to_string().contains("dp-worker"));
+        let e = TrainError::Truncated {
+            file: "ck.losia".into(),
+            section: "state".into(),
+            expected: 64,
+            available: 12,
+        };
+        let s = e.to_string();
+        assert!(s.contains("ck.losia"), "{s}");
+        assert!(s.contains("64"), "{s}");
+        assert!(s.contains("12"), "{s}");
+        let e = TrainError::CrcMismatch {
+            file: "ck.losia".into(),
+            section: "meta".into(),
+        };
+        assert!(e.to_string().contains("CRC32"), "{}", e);
+    }
+
+    #[test]
+    fn downcasts_through_anyhow() {
+        let err: anyhow::Error = TrainError::FaultInjected {
+            site: "save".into(),
+            step: 3,
+        }
+        .into();
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::FaultInjected { site, step }) => {
+                assert_eq!(site, "save");
+                assert_eq!(*step, 3);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+}

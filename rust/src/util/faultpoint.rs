@@ -1,0 +1,168 @@
+//! Env-driven fault injection for crash-safety tests.
+//!
+//! `LOSIA_FAULT=site@step:kind` arms exactly one fault: the named
+//! site fires when it is reached at the given step. Kinds:
+//!
+//! * `error`   — the site returns a typed
+//!   [`TrainError::FaultInjected`] error.
+//! * `panic`   — the site panics (exercises worker-panic containment).
+//! * `partial` — only meaningful at write sites: the write is
+//!   truncated mid-file and then fails (exercises the atomic-write
+//!   discipline — the destination must never see the torn bytes).
+//!
+//! `step` may be `*` to fire on every visit. The env var is parsed on
+//! every [`armed`] call rather than cached: tests arm and disarm
+//! faults between runs inside one process, and worker threads observe
+//! the same process-global environment.
+//!
+//! Named sites (see `runtime/README.md` for the full contract):
+//! `save`, `stage-worker`, `prefetch-worker`, `dp-worker`, `reduce`,
+//! `adapter-activate`.
+
+use anyhow::Result;
+
+use crate::util::error::TrainError;
+
+pub const ENV: &str = "LOSIA_FAULT";
+
+/// Serializes unit tests that arm faults — `LOSIA_FAULT` is
+/// process-global, so concurrent test threads must take turns.
+/// Integration-test binaries are separate processes and keep their
+/// own locks.
+#[cfg(test)]
+pub static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Error,
+    Panic,
+    Partial,
+}
+
+/// Parse a `site@step:kind` spec. Returns `None` for malformed specs
+/// (fault injection must never break a production run).
+fn parse(spec: &str) -> Option<(String, Option<usize>, FaultKind)> {
+    let (site_step, kind) = spec.rsplit_once(':')?;
+    let (site, step) = site_step.split_once('@')?;
+    if site.is_empty() {
+        return None;
+    }
+    let step = if step == "*" {
+        None
+    } else {
+        Some(step.parse().ok()?)
+    };
+    let kind = match kind {
+        "error" => FaultKind::Error,
+        "panic" => FaultKind::Panic,
+        "partial" => FaultKind::Partial,
+        _ => return None,
+    };
+    Some((site.to_string(), step, kind))
+}
+
+/// Is a fault armed for `site` at `step`?
+pub fn armed(site: &str, step: usize) -> Option<FaultKind> {
+    let spec = std::env::var(ENV).ok()?;
+    let (s, at, kind) = parse(&spec)?;
+    (s == site && at.map_or(true, |t| t == step)).then_some(kind)
+}
+
+/// Fire the fault armed for `site` at `step`, if any: `panic` panics,
+/// `error` and `partial` return the typed error (sites that cannot
+/// express a partial write treat it as a plain error). No-op when
+/// nothing is armed — this is the one line a fault site costs.
+pub fn hit(site: &str, step: usize) -> Result<()> {
+    match armed(site, step) {
+        None => Ok(()),
+        Some(FaultKind::Panic) => {
+            panic!("injected fault: panic at {site} (step {step})")
+        }
+        Some(FaultKind::Error) | Some(FaultKind::Partial) => {
+            Err(TrainError::FaultInjected {
+                site: site.to_string(),
+                step,
+            }
+            .into())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::ENV_LOCK;
+
+    struct Arm;
+    impl Arm {
+        fn set(spec: &str) -> Arm {
+            std::env::set_var(ENV, spec);
+            Arm
+        }
+    }
+    impl Drop for Arm {
+        fn drop(&mut self) {
+            std::env::remove_var(ENV);
+        }
+    }
+
+    #[test]
+    fn parses_specs() {
+        assert_eq!(
+            parse("save@3:error"),
+            Some(("save".into(), Some(3), FaultKind::Error))
+        );
+        assert_eq!(
+            parse("dp-worker@*:panic"),
+            Some(("dp-worker".into(), None, FaultKind::Panic))
+        );
+        assert_eq!(parse("save@3"), None);
+        assert_eq!(parse("@3:error"), None);
+        assert_eq!(parse("save@x:error"), None);
+        assert_eq!(parse("save@3:nuke"), None);
+    }
+
+    #[test]
+    fn fires_only_at_the_armed_site_and_step() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let _arm = Arm::set("save@2:error");
+        assert!(hit("save", 1).is_ok());
+        assert!(hit("reduce", 2).is_ok());
+        let err = hit("save", 2).unwrap_err();
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::FaultInjected { site, step }) => {
+                assert_eq!(site, "save");
+                assert_eq!(*step, 2);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wildcard_step_fires_everywhere() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let _arm = Arm::set("reduce@*:error");
+        assert!(hit("reduce", 0).is_err());
+        assert!(hit("reduce", 17).is_err());
+    }
+
+    #[test]
+    fn unarmed_is_free() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        std::env::remove_var(ENV);
+        assert!(hit("save", 0).is_ok());
+        assert_eq!(armed("save", 0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault")]
+    fn panic_kind_panics() {
+        let _guard = match ENV_LOCK.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        let _arm = Arm::set("site@0:panic");
+        let _ = hit("site", 0);
+    }
+}

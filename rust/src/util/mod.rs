@@ -2,6 +2,9 @@
 //! testing, and the shared warning sink.
 
 pub mod cli;
+pub mod durable;
+pub mod error;
+pub mod faultpoint;
 pub mod json;
 pub mod proptest;
 pub mod rng;

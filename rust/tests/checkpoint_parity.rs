@@ -1,0 +1,310 @@
+//! Crash-resume determinism: a run killed by an injected fault after
+//! step k and resumed from its durable `LOSIACK1` checkpoint must
+//! finish **bitwise identical** to the uninterrupted run — same final
+//! parameters, same loss bits — at every kernel-thread and dp-worker
+//! count.
+//!
+//! The contract rests on three pieces pinned here end-to-end:
+//! the checkpoint captures the *complete* training state (model +
+//! `Driver::snapshot` optimizer blob), resume restores via
+//! `Driver::restore` instead of re-running `prepare`, and the batch
+//! stream is a pure function of `(seed, shards, draw count)` so
+//! fast-forwarding the rebuilt batchers replays the exact byte
+//! sequence the uninterrupted run consumed.
+//!
+//! The CI `crash-resume` lane runs this binary in release mode.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use losia::config::Method;
+use losia::coordinator::checkpoint;
+use losia::coordinator::state::ModelState;
+use losia::runtime::{kernels, RefBackend, Runtime};
+use losia::session::{RunReport, Session};
+use losia::util::error::TrainError;
+use losia::util::faultpoint;
+
+/// `set_kernel_threads` and `LOSIA_FAULT` are both process-global —
+/// serialize every test here on one lock.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+/// Arms a fault spec for a scope; disarms on drop so a failed
+/// assertion cannot leak the spec into the next test.
+struct Arm;
+impl Arm {
+    fn set(spec: &str) -> Arm {
+        std::env::set_var(faultpoint::ENV, spec);
+        Arm
+    }
+}
+impl Drop for Arm {
+    fn drop(&mut self) {
+        std::env::remove_var(faultpoint::ENV);
+    }
+}
+
+fn small_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::builtin_config("small", &dir)
+        .expect("small builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "losia_ckpt_parity_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One training run; `ckpt = (dir, every, resume)` arms durable
+/// checkpoints. Returns the report and the final state.
+fn train(
+    method: Method,
+    workers: usize,
+    steps: usize,
+    ckpt: Option<(&std::path::Path, usize, bool)>,
+) -> anyhow::Result<(RunReport, ModelState)> {
+    let rt = small_ref_runtime();
+    let mut b = Session::builder()
+        .runtime(&rt)
+        .method(method)
+        .task("modmath")
+        .steps(steps)
+        .time_slot(3)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(0)
+        .workers(workers)
+        .dp_shards(2);
+    if let Some((dir, every, resume)) = ckpt {
+        b = b
+            .checkpoint_every(every)
+            .checkpoint_dir(dir)
+            .checkpoint_keep(8)
+            .resume(resume);
+    }
+    let mut session = b.build()?;
+    let report = session.train()?;
+    Ok((report, session.into_state()))
+}
+
+fn assert_states_bitwise_eq(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.params.len(), b.params.len(), "{what}: param count");
+    for ((na, ta), (nb, tb)) in a.params.iter().zip(&b.params) {
+        assert_eq!(na, nb, "{what}: param order");
+        assert_eq!(ta.shape, tb.shape, "{what}: {na} shape");
+        for (ei, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: {na}[{ei}] differs ({x} vs {y}) — resume \
+                 changed the numerics"
+            );
+        }
+    }
+}
+
+/// The resumed run's loss curve only covers steps after the resume
+/// point; every entry it does have must match the uninterrupted run's
+/// bits at the same step.
+fn assert_curve_suffix_bitwise_eq(
+    full: &[(usize, f64)],
+    resumed: &[(usize, f64)],
+    what: &str,
+) {
+    assert!(
+        !resumed.is_empty(),
+        "{what}: resumed run recorded no losses"
+    );
+    for (t, l) in resumed {
+        let (_, lf) = full
+            .iter()
+            .find(|(tf, _)| tf == t)
+            .unwrap_or_else(|| {
+                panic!("{what}: full run has no loss at step {t}")
+            });
+        assert_eq!(
+            l.to_bits(),
+            lf.to_bits(),
+            "{what}: step {t} loss differs ({l} vs {lf})"
+        );
+    }
+}
+
+/// Kill a 6-step run with an injected fault at step 4 (after the
+/// step-4 checkpoint is cut), then rerun the same configuration with
+/// `--resume`: it restores at step 4 and must land on the
+/// uninterrupted run's exact bits — swept over kernel threads {1, 4}
+/// × dp workers {1, 2}.
+fn resume_matrix(method: Method, tag: &str) {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    // one uninterrupted baseline (1 thread, 1 worker) — kernel and
+    // worker invariance of the *uninterrupted* path is pinned by
+    // kernel_parity.rs / dp_parity.rs, so comparing every resumed
+    // combination against this single baseline also re-checks it
+    kernels::set_kernel_threads(1);
+    let (base_report, base_state) =
+        train(method, 1, 6, None).unwrap();
+    assert!(
+        base_report.checkpoint.is_none(),
+        "{tag}: run without checkpointing must not record a block"
+    );
+    for threads in [1usize, 4] {
+        for workers in [1usize, 2] {
+            kernels::set_kernel_threads(threads);
+            let what = format!("{tag} @ {threads}t/{workers}w");
+            let dir = tmp_dir(&format!(
+                "{tag}_{threads}t_{workers}w"
+            ));
+            // the kill: step 4's reduce errors out right after
+            // end_step(t=3) cut the step-4 checkpoint
+            let err = {
+                let _arm = Arm::set("reduce@4:error");
+                train(method, workers, 6, Some((&dir, 2, false)))
+                    .unwrap_err()
+            };
+            match err.downcast_ref::<TrainError>() {
+                Some(TrainError::FaultInjected { site, step }) => {
+                    assert_eq!(site, "reduce", "{what}");
+                    assert_eq!(*step, 4, "{what}");
+                }
+                other => {
+                    panic!("{what}: wrong kill: {other:?} ({err:#})")
+                }
+            }
+            let steps: Vec<usize> = checkpoint::list(&dir)
+                .into_iter()
+                .map(|(s, _)| s)
+                .collect();
+            assert_eq!(
+                steps,
+                [2, 4],
+                "{what}: the kill left both records intact"
+            );
+            let (part2, state) =
+                train(method, workers, 6, Some((&dir, 2, true)))
+                    .unwrap();
+            let ck2 = part2
+                .checkpoint
+                .as_ref()
+                .expect("resume block recorded");
+            assert_eq!(
+                ck2.resume_step,
+                Some(4),
+                "{what}: resumed from the step-4 checkpoint"
+            );
+            assert_eq!(ck2.writes, 1, "{what}: step 6 writes");
+            assert_states_bitwise_eq(&base_state, &state, &what);
+            assert_curve_suffix_bitwise_eq(
+                &base_report.loss_curve,
+                &part2.loss_curve,
+                &what,
+            );
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+    kernels::set_kernel_threads(0);
+}
+
+/// LoSiA-Pro is the hard case: the step-4 checkpoint sits between
+/// relocalizations (time_slot 3), so subnet selections, Adam moments
+/// over device-resident deltas, and half-accumulated importance
+/// statistics all have to survive the snapshot/restore round trip for
+/// the step-6 relocalization to pick identical subnets.
+#[test]
+fn losia_pro_resume_is_bitwise_identical() {
+    resume_matrix(Method::LosiaPro, "losia-pro");
+}
+
+/// Adapter-method case: LoRA's factor pairs and their Adam moments
+/// restore without re-running `prepare` (re-initialization would
+/// clobber the trained adapters), and the finalize-time merge lands
+/// on identical weights.
+#[test]
+fn lora_resume_is_bitwise_identical() {
+    resume_matrix(Method::Lora, "lora");
+}
+
+/// Repeatedly crash *inside* the checkpoint write itself (torn
+/// `partial` faults at different steps) and resume each time: the
+/// directory must hold a loadable record at every point of the chain,
+/// and the final resumed state still matches the uninterrupted bits.
+#[test]
+fn mid_write_crashes_never_strand_the_run() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_kernel_threads(1);
+    let (_, base) = train(Method::LosiaPro, 1, 6, None).unwrap();
+    let dir = tmp_dir("midwrite");
+    let rt = small_ref_runtime();
+    // crash writing the step-3 record, then (after resuming from 2)
+    // crash again writing the step-5 record, then finish clean
+    for kill in [3usize, 5] {
+        let resume = kill > 3;
+        let err = {
+            let _arm = Arm::set(&format!("save@{kill}:partial"));
+            train(
+                Method::LosiaPro,
+                1,
+                6,
+                Some((&dir, 1, resume)),
+            )
+            .unwrap_err()
+        };
+        match err.downcast_ref::<TrainError>() {
+            Some(TrainError::FaultInjected { site, .. }) => {
+                assert_eq!(site, "save")
+            }
+            other => panic!("wrong kill: {other:?} ({err:#})"),
+        }
+        let (ck, path) = checkpoint::load_latest(&dir, &rt.cfg)
+            .unwrap()
+            .expect("a loadable record always survives");
+        assert_eq!(
+            ck.step,
+            kill - 1,
+            "newest loadable record after the step-{kill} tear: {}",
+            path.display()
+        );
+    }
+    let (report, state) =
+        train(Method::LosiaPro, 1, 6, Some((&dir, 1, true)))
+            .unwrap();
+    assert_eq!(
+        report.checkpoint.as_ref().unwrap().resume_step,
+        Some(4),
+        "final leg resumes from the step-4 record"
+    );
+    assert_states_bitwise_eq(
+        &base,
+        &state,
+        "twice-crashed, twice-resumed run",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    kernels::set_kernel_threads(0);
+}
+
+/// Resuming under a different identity is a hard error, not silent
+/// divergence: the checkpoint pins method, seed, and the dp shard
+/// count (the numerics knob).
+#[test]
+fn resume_rejects_identity_mismatch() {
+    let _guard =
+        THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    kernels::set_kernel_threads(1);
+    let dir = tmp_dir("identity");
+    train(Method::Lora, 1, 2, Some((&dir, 2, false))).unwrap();
+    let err = train(Method::Dora, 1, 4, Some((&dir, 2, true)))
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("method"),
+        "mismatch names the offending knob: {err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    kernels::set_kernel_threads(0);
+}

@@ -1,0 +1,457 @@
+//! The fault matrix: every named `LOSIA_FAULT` site is armed in turn
+//! and the run must fail the way the contract in `runtime/README.md`
+//! promises — typed errors, contained worker panics, and a checkpoint
+//! directory that always holds a loadable record.
+//!
+//! The recovery half is covered too: after each simulated crash the
+//! same configuration is re-run with `--resume` and must finish
+//! **bitwise identical** to a run that never crashed (torn bytes,
+//! leftover `.tmp` files, and skipped checkpoints included).
+//!
+//! `LOSIA_FAULT` is process-global, so every test here serializes on
+//! one lock — including the ones that never arm a fault, which would
+//! otherwise train under a neighbour's armed site.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use losia::config::Method;
+use losia::coordinator::checkpoint;
+use losia::coordinator::state::ModelState;
+use losia::runtime::{RefBackend, Runtime};
+use losia::session::{RunReport, Session};
+use losia::util::error::TrainError;
+use losia::util::{durable, faultpoint};
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Arms a fault spec for the duration of a scope; disarms on drop so
+/// a failed assertion cannot leak the spec into the next test.
+struct Arm;
+impl Arm {
+    fn set(spec: &str) -> Arm {
+        std::env::set_var(faultpoint::ENV, spec);
+        Arm
+    }
+}
+impl Drop for Arm {
+    fn drop(&mut self) {
+        std::env::remove_var(faultpoint::ENV);
+    }
+}
+
+fn small_ref_runtime() -> Runtime {
+    let dir = losia::runtime::artifacts_dir();
+    let cfg = losia::config::builtin_config("small", &dir)
+        .expect("small builtin config");
+    Runtime::with_backend(cfg, Box::new(RefBackend))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "losia_crash_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+struct RunSpec<'a> {
+    method: Method,
+    workers: usize,
+    shards: usize,
+    pipeline: bool,
+    steps: usize,
+    ckpt: Option<(&'a Path, usize, usize, bool)>,
+}
+
+impl Default for RunSpec<'_> {
+    fn default() -> Self {
+        RunSpec {
+            method: Method::LosiaPro,
+            workers: 1,
+            shards: 2,
+            pipeline: false,
+            steps: 6,
+            ckpt: None,
+        }
+    }
+}
+
+fn run(spec: RunSpec<'_>) -> anyhow::Result<(RunReport, ModelState)> {
+    let rt = small_ref_runtime();
+    let mut b = Session::builder()
+        .runtime(&rt)
+        .method(spec.method)
+        .task("modmath")
+        .steps(spec.steps)
+        .time_slot(3)
+        .lr(1e-3)
+        .train_n(64)
+        .eval_n(0)
+        .workers(spec.workers)
+        .dp_shards(spec.shards)
+        .pipeline(spec.pipeline);
+    if let Some((dir, every, keep, resume)) = spec.ckpt {
+        b = b
+            .checkpoint_every(every)
+            .checkpoint_dir(dir)
+            .checkpoint_keep(keep)
+            .resume(resume);
+    }
+    let mut session = b.build()?;
+    let report = session.train()?;
+    Ok((report, session.into_state()))
+}
+
+fn assert_states_bitwise_eq(a: &ModelState, b: &ModelState, what: &str) {
+    assert_eq!(a.params.len(), b.params.len(), "{what}: param count");
+    for ((na, ta), (nb, tb)) in a.params.iter().zip(&b.params) {
+        assert_eq!(na, nb, "{what}: param order");
+        for (ei, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: {na}[{ei}] differs ({x} vs {y}) — recovery \
+                 changed the numerics"
+            );
+        }
+    }
+}
+
+fn fault_injected(err: &anyhow::Error, want_site: &str) {
+    match err.downcast_ref::<TrainError>() {
+        Some(TrainError::FaultInjected { site, .. }) => {
+            assert_eq!(site, want_site)
+        }
+        other => panic!(
+            "expected FaultInjected at {want_site}, got {other:?} \
+             ({err:#})"
+        ),
+    }
+}
+
+fn worker_panic(err: &anyhow::Error, want_site: &str) {
+    match err.downcast_ref::<TrainError>() {
+        Some(TrainError::WorkerPanic { site }) => assert!(
+            site.contains(want_site),
+            "panic contained at {site:?}, expected {want_site:?}"
+        ),
+        other => panic!(
+            "expected WorkerPanic at {want_site}, got {other:?} \
+             ({err:#})"
+        ),
+    }
+}
+
+fn tmp_files(dir: &Path) -> Vec<PathBuf> {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| durable::is_tmp(p))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// A crash during the step-4 save (the write errors before any byte
+/// lands) aborts the run with the typed fault; the step-2 record
+/// survives and a `--resume` run finishes on the uninterrupted bits.
+#[test]
+fn failed_save_aborts_and_prior_checkpoint_resumes_bitwise() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_, base) = run(RunSpec::default()).unwrap();
+    let dir = tmp_dir("save_error");
+    let err = {
+        let _arm = Arm::set("save@4:error");
+        run(RunSpec {
+            ckpt: Some((&dir, 2, 4, false)),
+            ..RunSpec::default()
+        })
+        .unwrap_err()
+    };
+    fault_injected(&err, "save");
+    let steps: Vec<usize> =
+        checkpoint::list(&dir).into_iter().map(|(s, _)| s).collect();
+    assert_eq!(steps, [2], "only the step-2 record survives the crash");
+    let (report, state) = run(RunSpec {
+        ckpt: Some((&dir, 2, 4, true)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    let ck = report.checkpoint.as_ref().expect("checkpoint block");
+    assert_eq!(ck.resume_step, Some(2), "resumed from the survivor");
+    assert_states_bitwise_eq(&base, &state, "save-error recovery");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A `partial` save tears the `.tmp` mid-write and never renames: the
+/// destination path must not exist, the torn `.tmp` is left behind,
+/// readers skip it, and the resumed run's rotation sweeps it away.
+#[test]
+fn partial_save_never_tears_the_destination() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_, base) = run(RunSpec::default()).unwrap();
+    let dir = tmp_dir("save_partial");
+    let err = {
+        let _arm = Arm::set("save@4:partial");
+        run(RunSpec {
+            ckpt: Some((&dir, 2, 4, false)),
+            ..RunSpec::default()
+        })
+        .unwrap_err()
+    };
+    fault_injected(&err, "save");
+    assert!(
+        !checkpoint::checkpoint_path(&dir, 4).exists(),
+        "the torn write must never reach the destination path"
+    );
+    assert!(
+        !tmp_files(&dir).is_empty(),
+        "the crash leaves its torn .tmp behind"
+    );
+    let rt = small_ref_runtime();
+    let (ck, path) = checkpoint::load_latest(&dir, &rt.cfg)
+        .unwrap()
+        .expect("step-2 record still loads");
+    assert_eq!(ck.step, 2, "newest loadable record: {}", path.display());
+    drop(rt);
+    let (_, state) = run(RunSpec {
+        ckpt: Some((&dir, 2, 4, true)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    assert_states_bitwise_eq(&base, &state, "partial-save recovery");
+    assert!(
+        tmp_files(&dir).is_empty(),
+        "rotation sweeps the torn .tmp once writes succeed again"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Flipping bytes in the newest record (a torn disk, not a torn
+/// write) must not strand the run: `load_latest` skips the corrupt
+/// file with a warning and resumes from the previous one.
+#[test]
+fn corrupt_newest_checkpoint_falls_back_to_previous() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_, base) = run(RunSpec::default()).unwrap();
+    let dir = tmp_dir("corrupt");
+    run(RunSpec {
+        steps: 4,
+        ckpt: Some((&dir, 2, 4, false)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    // truncate the step-4 record mid-payload
+    let victim = checkpoint::checkpoint_path(&dir, 4);
+    let len = std::fs::metadata(&victim).unwrap().len();
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(&victim)
+        .unwrap();
+    f.set_len(len / 2).unwrap();
+    drop(f);
+    let (report, state) = run(RunSpec {
+        ckpt: Some((&dir, 2, 4, true)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    let ck = report.checkpoint.as_ref().expect("checkpoint block");
+    assert_eq!(
+        ck.resume_step,
+        Some(2),
+        "resume skipped the corrupt step-4 record"
+    );
+    assert_states_bitwise_eq(&base, &state, "corrupt-record recovery");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// CRC corruption (same length, flipped byte) is caught too — the
+/// loader reports a typed mismatch and `load_latest` falls through.
+#[test]
+fn bitflipped_checkpoint_is_rejected_by_crc() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmp_dir("bitflip");
+    run(RunSpec {
+        steps: 2,
+        ckpt: Some((&dir, 2, 4, false)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    let victim = checkpoint::checkpoint_path(&dir, 2);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xA5;
+    std::fs::write(&victim, &bytes).unwrap();
+    let rt = small_ref_runtime();
+    let err = checkpoint::TrainCheckpoint::load(&victim, &rt.cfg)
+        .expect_err("flipped byte must not load");
+    let msg = format!("{err:#}");
+    assert!(
+        matches!(
+            err.downcast_ref::<TrainError>(),
+            Some(
+                TrainError::CrcMismatch { .. }
+                    | TrainError::Truncated { .. }
+            )
+        ),
+        "typed corruption error, got: {msg}"
+    );
+    assert!(
+        checkpoint::load_latest(&dir, &rt.cfg).unwrap().is_none(),
+        "no loadable record remains"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--resume` against an empty directory is a warning, not an error:
+/// the run starts fresh and still matches the uninterrupted bits.
+#[test]
+fn resume_with_no_checkpoints_starts_fresh() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_, base) = run(RunSpec::default()).unwrap();
+    let dir = tmp_dir("fresh");
+    let cap = losia::util::warn::capture();
+    let (report, state) = run(RunSpec {
+        ckpt: Some((&dir, 2, 4, true)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    let warnings = cap.drain();
+    assert!(
+        warnings.iter().any(|w| w.contains("starting fresh")),
+        "fresh start is surfaced as a warning: {warnings:?}"
+    );
+    let ck = report.checkpoint.as_ref().expect("checkpoint block");
+    assert_eq!(ck.resume_step, None, "nothing to resume from");
+    assert_eq!(ck.writes, 3, "steps 2, 4, 6 write");
+    assert_states_bitwise_eq(&base, &state, "fresh-start fallback");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Rotation: `keep = 2` with a checkpoint every step leaves exactly
+/// the two newest records on disk.
+#[test]
+fn rotation_keeps_only_the_newest_records() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tmp_dir("rotate");
+    run(RunSpec {
+        ckpt: Some((&dir, 1, 2, false)),
+        ..RunSpec::default()
+    })
+    .unwrap();
+    let steps: Vec<usize> =
+        checkpoint::list(&dir).into_iter().map(|(s, _)| s).collect();
+    assert_eq!(steps, [5, 6], "keep=2 retains the two newest");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A dp worker that panics mid-step is joined and surfaced as a typed
+/// [`TrainError::WorkerPanic`] — the test completing at all proves
+/// nothing hangs on a dead sibling's channel.
+#[test]
+fn dp_worker_panic_is_contained() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _arm = Arm::set("dp-worker@3:panic");
+    let err = run(RunSpec {
+        workers: 2,
+        ..RunSpec::default()
+    })
+    .unwrap_err();
+    worker_panic(&err, "dp-worker");
+}
+
+/// An injected reduce failure surfaces as the typed fault with the
+/// step it fired at.
+#[test]
+fn reduce_fault_surfaces_typed() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _arm = Arm::set("reduce@3:error");
+    let err = run(RunSpec {
+        workers: 2,
+        ..RunSpec::default()
+    })
+    .unwrap_err();
+    match err.downcast_ref::<TrainError>() {
+        Some(TrainError::FaultInjected { site, step }) => {
+            assert_eq!(site, "reduce");
+            assert_eq!(*step, 3);
+        }
+        other => panic!("wrong variant: {other:?} ({err:#})"),
+    }
+}
+
+/// A pipeline stage worker that panics while staging is contained —
+/// the training thread gets the typed error instead of deadlocking on
+/// a staging handoff that will never arrive.
+#[test]
+fn stage_worker_panic_is_contained() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _arm = Arm::set("stage-worker@*:panic");
+    let err = run(RunSpec {
+        workers: 2,
+        pipeline: true,
+        ..RunSpec::default()
+    })
+    .unwrap_err();
+    worker_panic(&err, "stage-worker");
+}
+
+/// Same containment for the async batch prefetcher.
+#[test]
+fn prefetch_worker_panic_is_contained() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _arm = Arm::set("prefetch-worker@*:panic");
+    let err = run(RunSpec {
+        workers: 2,
+        pipeline: true,
+        ..RunSpec::default()
+    })
+    .unwrap_err();
+    worker_panic(&err, "prefetch-worker");
+}
+
+/// End-to-end kill/recover drill across *both* loop shapes: crash the
+/// pipelined run at the step-4 save, resume synchronously (and the
+/// other way round) — the checkpoint format owes nothing to the loop
+/// that wrote it.
+#[test]
+fn resume_crosses_loop_shapes() {
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (_, base) = run(RunSpec::default()).unwrap();
+    for (crash_pipe, resume_pipe) in [(true, false), (false, true)] {
+        let dir = tmp_dir(&format!("cross_{crash_pipe}"));
+        let err = {
+            let _arm = Arm::set("save@4:error");
+            run(RunSpec {
+                workers: 2,
+                pipeline: crash_pipe,
+                ckpt: Some((&dir, 2, 4, false)),
+                ..RunSpec::default()
+            })
+            .unwrap_err()
+        };
+        fault_injected(&err, "save");
+        let (report, state) = run(RunSpec {
+            workers: 2,
+            pipeline: resume_pipe,
+            ckpt: Some((&dir, 2, 4, true)),
+            ..RunSpec::default()
+        })
+        .unwrap();
+        let what = format!(
+            "crash in {} loop, resume in {} loop",
+            if crash_pipe { "pipelined" } else { "sync" },
+            if resume_pipe { "pipelined" } else { "sync" },
+        );
+        assert_eq!(
+            report.checkpoint.as_ref().unwrap().resume_step,
+            Some(2),
+            "{what}"
+        );
+        assert_states_bitwise_eq(&base, &state, &what);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
